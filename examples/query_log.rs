@@ -1,0 +1,89 @@
+//! String-keyed sampling with counter-based sketches: ℓ_{1/2} sampling of
+//! a query log (low powers mitigate frequent queries — the language-model
+//! example-weighting use case, paper §1).
+//!
+//! Demonstrates the positive-stream / counter path of Table 2:
+//! SpaceSaving (native string keys) as the rHH structure for p = 1/2,
+//! q = 1, plus the 2-pass flow that recovers exact counts.
+//!
+//! Run: `cargo run --release --example query_log`
+
+use std::collections::HashMap;
+use worp::data::trace::QueryLog;
+use worp::sketch::spacesaving::SpaceSaving;
+use worp::transform::BottomKTransform;
+use worp::util::fmt::Table;
+
+fn main() {
+    let vocab = 5_000;
+    let events = 500_000u64;
+    let k = 50;
+    let p = 0.5;
+    println!("== ℓ_1/2 WOR sampling of {events} query-log events ({vocab} queries) ==\n");
+
+    // the trace keeps string queries; elements carry hashed keys
+    let log = QueryLog::new(vocab, 1.0, events, 21);
+    let queries = log.queries.clone();
+    let events_vec: Vec<(usize, worp::data::Element)> = log.events().collect();
+
+    // ---- pass I: SpaceSaving over the p-ppswor-transformed *positive* stream
+    let transform = BottomKTransform::ppswor(777, p);
+    let mut ss: SpaceSaving<String> = SpaceSaving::new(8 * k);
+    for (idx, e) in &events_vec {
+        let scaled = e.val * transform.scale(e.key);
+        ss.process(queries[*idx].clone(), scaled);
+    }
+
+    // ---- pass II: exact counts for the stored candidates
+    let tracked: HashMap<String, u64> = ss
+        .top()
+        .into_iter()
+        .map(|c| (c.key, 0u64))
+        .collect();
+    let mut exact: HashMap<String, f64> = tracked.keys().map(|q| (q.clone(), 0.0)).collect();
+    let mut key_of: HashMap<String, u64> = HashMap::new();
+    for (idx, e) in &events_vec {
+        if let Some(c) = exact.get_mut(&queries[*idx]) {
+            *c += e.val;
+            key_of.insert(queries[*idx].clone(), e.key);
+        }
+    }
+
+    // ---- rank candidates by exact transformed frequency, cut at k
+    let mut ranked: Vec<(String, f64, f64)> = exact
+        .into_iter()
+        .filter(|(_, v)| *v > 0.0)
+        .map(|(q, v)| {
+            let key = key_of[&q];
+            (q, v, v * transform.scale(key))
+        })
+        .collect();
+    ranked.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    let tau = if ranked.len() > k { ranked[k].2 } else { 0.0 };
+    ranked.truncate(k);
+
+    let mut t = Table::new(
+        &format!("ℓ_{p} sample (top 10 of {k}, exact counts)"),
+        &["query", "count", "ν* (rank score)"],
+    );
+    for (q, v, s) in ranked.iter().take(10) {
+        t.row(&[q.clone(), format!("{v:.0}"), format!("{s:.1}")]);
+    }
+    t.print();
+    println!("threshold τ = {tau:.2}; sketch = {} counters ({} words), no key domain needed",
+        8 * k, ss.size_words());
+
+    // low powers broaden representation: count how many sampled queries
+    // fall outside the top-k by raw frequency
+    let truth = worp::data::aggregate(events_vec.iter().map(|(_, e)| *e));
+    let mut by_freq: Vec<(u64, f64)> = truth.into_iter().collect();
+    by_freq.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let top_keys: std::collections::HashSet<u64> =
+        by_freq.iter().take(k).map(|(k, _)| *k).collect();
+    let outside = ranked
+        .iter()
+        .filter(|(q, _, _)| !top_keys.contains(&key_of[q]))
+        .count();
+    println!("tail representation: {outside}/{k} sampled queries are outside the raw top-{k}");
+    assert!(outside > 0, "ℓ_1/2 sampling should reach into the tail");
+}

@@ -1,0 +1,133 @@
+"""Layer-1 Pallas kernels: the CountSketch hot path.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): a CountSketch batch
+update is a scatter-add on CPU/GPU, which maps poorly onto a TPU's MXU
+systolic array. We instead express the per-row update as a dense
+one-hot x values matmul:
+
+    delta[r, :] = signval[r, :] @ onehot(bucket[r, :], width)   # [B]x[B,W]
+
+so each grid step is an MXU-shaped contraction, the ``BlockSpec`` tiles one
+sketch row (and its batch coordinates) into VMEM per step, and the batch
+dimension streams HBM->VMEM. The estimate kernel is the transposed gather
+(onehot @ sketch_row) with the median taken in Layer 2.
+
+All kernels run with ``interpret=True``: the image's CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md), and
+interpret-mode lowers to plain HLO that both pytest and the rust runtime
+execute. Real-TPU perf is estimated analytically in DESIGN.md / EXPERIMENTS.md.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Batch-tile size: the one-hot tile is CHUNK x width floats; 2048 x 1024
+# f32 = 8 MiB, half the 16 MiB VMEM budget, leaving room for
+# double-buffering the HBM->VMEM streams (§Perf L1-1).
+_CHUNK = 2048
+
+
+def _update_kernel(sketch_ref, buckets_ref, signvals_ref, out_ref):
+    """Grid step = (sketch row, batch chunk); the out block is revisited
+    across chunks and accumulates (init on chunk 0)."""
+    width = sketch_ref.shape[-1]
+    j = pl.program_id(1)
+    buckets = buckets_ref[...]  # [1, C] int32
+    signvals = signvals_ref[...]  # [1, C] f32
+    # one-hot over the bucket axis: [C, W]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (buckets.shape[-1], width), 1)
+    onehot = (buckets[0][:, None] == cols).astype(signvals.dtype)
+    # MXU contraction: [1, C] @ [C, W] -> [1, W]
+    delta = signvals @ onehot
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = sketch_ref[...] + delta
+
+    @pl.when(j > 0)
+    def _accum():
+        out_ref[...] = out_ref[...] + delta
+
+
+def countsketch_update(sketch, buckets, signvals):
+    """Batched CountSketch update.
+
+    Args:
+      sketch:   [rows, width] f32 — current table.
+      buckets:  [rows, batch] i32 — per-row bucket index of each element.
+      signvals: [rows, batch] f32 — per-row sign(element) * value.
+
+    Returns:
+      [rows, width] f32 — updated table.
+    """
+    rows, width = sketch.shape
+    _, batch = buckets.shape
+    assert buckets.shape == signvals.shape == (rows, batch)
+    chunk = min(_CHUNK, batch)
+    assert batch % chunk == 0, "batch must be a multiple of the VMEM chunk"
+    nchunks = batch // chunk
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(rows, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, width), lambda r, j: (r, 0)),
+            pl.BlockSpec((1, chunk), lambda r, j: (r, j)),
+            pl.BlockSpec((1, chunk), lambda r, j: (r, j)),
+        ],
+        out_specs=pl.BlockSpec((1, width), lambda r, j: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, width), sketch.dtype),
+        interpret=True,
+    )(sketch, buckets, signvals)
+
+
+def _gather_kernel(sketch_ref, buckets_ref, signs_ref, out_ref):
+    """One grid step = one row: out[b] = sign[b] * sketch[bucket[b]]."""
+    width = sketch_ref.shape[-1]
+    buckets = buckets_ref[...]  # [1, B]
+    signs = signs_ref[...]  # [1, B]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (buckets.shape[-1], width), 1)
+    onehot = (buckets[0][:, None] == cols).astype(signs.dtype)  # [B, W]
+    # transposed contraction: [B, W] @ [W] -> [B]
+    vals = onehot @ sketch_ref[0, :]
+    out_ref[...] = (signs[0] * vals)[None, :]
+
+
+def countsketch_gather(sketch, buckets, signs):
+    """Per-row signed bucket reads (the estimate pre-median).
+
+    Args:
+      sketch:  [rows, width] f32.
+      buckets: [rows, batch] i32.
+      signs:   [rows, batch] f32 in {-1, +1}.
+
+    Returns:
+      [rows, batch] f32 — ``signs[r,b] * sketch[r, buckets[r,b]]``.
+    """
+    rows, width = sketch.shape
+    _, batch = buckets.shape
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, width), lambda r: (r, 0)),
+            pl.BlockSpec((1, batch), lambda r: (r, 0)),
+            pl.BlockSpec((1, batch), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, batch), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, batch), sketch.dtype),
+        interpret=True,
+    )(sketch, buckets, signs)
+
+
+def update_vmem_footprint(width: int, batch: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM bytes per grid step of the update kernel:
+    one sketch row + one bucket chunk + one signval chunk + the onehot
+    tile, with the batch tiled into `_CHUNK`-element chunks (§Perf L1-1).
+
+    Used by the DESIGN.md §Perf TPU estimate (interpret-mode wallclock is
+    not a TPU proxy).
+    """
+    chunk = min(_CHUNK, batch)
+    return (width + 2 * chunk + chunk * width) * dtype_bytes

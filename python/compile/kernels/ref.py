@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest asserts kernel == ref on swept shapes/dtypes)."""
+
+import jax.numpy as jnp
+
+
+def ref_update(sketch, buckets, signvals):
+    """Scatter-add reference for ``countsketch_update``."""
+    out = jnp.asarray(sketch)
+    rows, _ = out.shape
+    for r in range(rows):
+        out = out.at[r].add(
+            jnp.zeros_like(out[r]).at[buckets[r]].add(signvals[r])
+        )
+    return out
+
+
+def ref_gather(sketch, buckets, signs):
+    """Signed-read reference for ``countsketch_gather``."""
+    sketch = jnp.asarray(sketch)
+    rows, _ = buckets.shape
+    return jnp.stack([signs[r] * sketch[r, buckets[r]] for r in range(rows)])
+
+
+def ref_estimate(sketch, buckets, signs):
+    """Full estimate reference: median over rows of the signed reads."""
+    return jnp.median(ref_gather(sketch, buckets, signs), axis=0)
+
+
+def ref_transform_scale(vals, r_vals, p):
+    """Bottom-k transform reference: ``vals * r_vals**(-1/p)`` (Eq. 5)."""
+    return vals * r_vals ** (-1.0 / p)

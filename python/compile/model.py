@@ -1,0 +1,57 @@
+"""Layer-2 JAX graphs: the WORp pipeline steps that wrap the Layer-1
+Pallas kernels.
+
+Three entry points are AOT-lowered by ``aot.py`` (shapes baked at build):
+
+- ``countsketch_update``    — raw batched table update (kernel passthrough).
+- ``countsketch_estimate``  — batched key estimates: L1 gather kernel +
+                              L2 median-over-rows reduction.
+- ``ppswor_transform_update`` — the fused pipeline step: the bottom-k
+                              transform scaling (Eq. 5) fused with the
+                              table update so one XLA module covers
+                              transform ∘ update with no host round-trip.
+
+Hashing (bucket/sign/r_x) stays in rust — the single source of randomness —
+so every graph takes precomputed integer/sign tensors.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import countsketch as k
+
+
+def countsketch_update(sketch, buckets, signvals):
+    """Batched update: see ``kernels.countsketch.countsketch_update``."""
+    return k.countsketch_update(sketch, buckets, signvals)
+
+
+def countsketch_estimate(sketch, buckets, signs):
+    """Median-of-rows estimates for a batch of keys.
+
+    Args:
+      sketch:  [rows, width] f32.
+      buckets: [rows, batch] i32 — bucket of each key per row.
+      signs:   [rows, batch] f32 — sign of each key per row.
+
+    Returns:
+      [batch] f32 — estimated frequencies.
+    """
+    vals = k.countsketch_gather(sketch, buckets, signs)  # [rows, batch]
+    return jnp.median(vals, axis=0)
+
+
+def ppswor_transform_update(sketch, buckets, signs, vals, scales):
+    """Fused p-ppswor transform + CountSketch update.
+
+    Args:
+      sketch: [rows, width] f32.
+      buckets: [rows, batch] i32.
+      signs:  [rows, batch] f32 — sketch signs per row.
+      vals:   [batch] f32 — raw element values.
+      scales: [batch] f32 — per-key ``r_x**(-1/p)`` transform multipliers.
+
+    Returns:
+      [rows, width] f32.
+    """
+    signvals = signs * (vals * scales)[None, :]
+    return k.countsketch_update(sketch, buckets, signvals)

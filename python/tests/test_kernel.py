@@ -1,0 +1,103 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (rows/width/batch), magnitudes and signs; every
+case asserts allclose against ref.py. This is the CORE correctness signal
+for the compiled artifacts the rust runtime executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import countsketch as k
+from compile.kernels import ref
+
+
+def make_case(rng, rows, width, batch, scale=10.0):
+    sketch = rng.normal(size=(rows, width)).astype(np.float32) * scale
+    buckets = rng.integers(0, width, size=(rows, batch)).astype(np.int32)
+    signs = rng.choice([-1.0, 1.0], size=(rows, batch)).astype(np.float32)
+    vals = (rng.normal(size=(batch,)) * scale).astype(np.float32)
+    signvals = (signs * vals[None, :]).astype(np.float32)
+    return sketch, buckets, signs, vals, signvals
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 3, 5, 7]),
+    width=st.sampled_from([8, 32, 128, 256]),
+    batch=st.sampled_from([1, 4, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_update_matches_ref(rows, width, batch, seed):
+    rng = np.random.default_rng(seed)
+    sketch, buckets, _, _, signvals = make_case(rng, rows, width, batch)
+    got = np.asarray(k.countsketch_update(sketch, buckets, signvals))
+    want = np.asarray(ref.ref_update(sketch, buckets, signvals))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 3, 5]),
+    width=st.sampled_from([8, 64, 256]),
+    batch=st.sampled_from([1, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_matches_ref(rows, width, batch, seed):
+    rng = np.random.default_rng(seed)
+    sketch, buckets, signs, _, _ = make_case(rng, rows, width, batch)
+    got = np.asarray(k.countsketch_gather(sketch, buckets, signs))
+    want = np.asarray(ref.ref_gather(sketch, buckets, signs))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_update_accumulates_collisions():
+    # two batch entries hitting the same bucket must both land
+    sketch = np.zeros((1, 4), np.float32)
+    buckets = np.array([[2, 2, 1]], np.int32)
+    signvals = np.array([[1.5, 2.5, -1.0]], np.float32)
+    got = np.asarray(k.countsketch_update(sketch, buckets, signvals))
+    np.testing.assert_allclose(got, [[0.0, -1.0, 4.0, 0.0]])
+
+
+def test_update_zero_padding_is_noop():
+    # rust pads partial micro-batches with signval=0: must not change rows
+    rng = np.random.default_rng(7)
+    sketch, buckets, _, _, signvals = make_case(rng, 3, 32, 16)
+    signvals[:, 8:] = 0.0
+    got = np.asarray(k.countsketch_update(sketch, buckets, signvals))
+    want = np.asarray(
+        ref.ref_update(sketch, buckets[:, :8], signvals[:, :8])
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_update_is_linear():
+    # sketch(a) + delta(b) == update(update(sketch, a), b) composability
+    rng = np.random.default_rng(9)
+    sketch, buckets, _, _, signvals = make_case(rng, 3, 64, 32)
+    one = np.asarray(k.countsketch_update(sketch, buckets, signvals))
+    two = np.asarray(k.countsketch_update(one, buckets, signvals))
+    want = np.asarray(ref.ref_update(one, buckets, signvals))
+    np.testing.assert_allclose(two, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("width,batch", [(16, 8), (256, 1024)])
+def test_vmem_footprint_model(width, batch):
+    chunk = min(2048, batch)
+    bytes_ = k.update_vmem_footprint(width, batch)
+    assert bytes_ == (width + 2 * chunk + chunk * width) * 4
+    # after batch tiling (§Perf L1-1) the default AOT shape uses ~half of
+    # the 16 MiB VMEM budget, leaving room for double-buffering
+    assert k.update_vmem_footprint(1024, 4096) <= 9 * 2**20
+
+
+def test_update_batch_tiling_matches_untiled():
+    # batch > _CHUNK exercises the accumulating multi-visit out block
+    rng = np.random.default_rng(11)
+    rows, width, batch = 3, 64, 4096
+    sketch, buckets, _, _, signvals = make_case(rng, rows, width, batch)
+    got = np.asarray(k.countsketch_update(sketch, buckets, signvals))
+    want = np.asarray(ref.ref_update(sketch, buckets, signvals))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)

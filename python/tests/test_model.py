@@ -1,0 +1,79 @@
+"""Layer-2 correctness: fused graphs vs references, estimate semantics."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_case(rng, rows, width, batch):
+    sketch = rng.normal(size=(rows, width)).astype(np.float32) * 5
+    buckets = rng.integers(0, width, size=(rows, batch)).astype(np.int32)
+    signs = rng.choice([-1.0, 1.0], size=(rows, batch)).astype(np.float32)
+    vals = rng.normal(size=(batch,)).astype(np.float32) * 5
+    r_vals = rng.exponential(size=(batch,)).astype(np.float32) + 1e-3
+    return sketch, buckets, signs, vals, r_vals
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([1, 3, 5]),
+    width=st.sampled_from([16, 64]),
+    batch=st.sampled_from([4, 32, 128]),
+    p=st.sampled_from([0.5, 1.0, 2.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_transform_update_matches_composition(rows, width, batch, p, seed):
+    rng = np.random.default_rng(seed)
+    sketch, buckets, signs, vals, r_vals = make_case(rng, rows, width, batch)
+    scales = ref.ref_transform_scale(np.ones_like(vals), r_vals, p).astype(np.float32)
+    got = np.asarray(
+        model.ppswor_transform_update(sketch, buckets, signs, vals, scales)
+    )
+    signvals = signs * (vals * scales)[None, :]
+    want = np.asarray(ref.ref_update(sketch, buckets, signvals))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([1, 3, 5, 7]),
+    width=st.sampled_from([16, 128]),
+    batch=st.sampled_from([1, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_estimate_is_median_of_signed_reads(rows, width, batch, seed):
+    rng = np.random.default_rng(seed)
+    sketch, buckets, signs, _, _ = make_case(rng, rows, width, batch)
+    got = np.asarray(model.countsketch_estimate(sketch, buckets, signs))
+    want = np.asarray(ref.ref_estimate(sketch, buckets, signs))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_roundtrip_exact():
+    # insert a few keys into an empty sketch, estimates recover them
+    rows, width, batch = 5, 128, 8
+    rng = np.random.default_rng(3)
+    sketch = np.zeros((rows, width), np.float32)
+    # distinct buckets per key (no collisions): exact recovery expected
+    buckets = np.stack(
+        [rng.permutation(width)[:batch].astype(np.int32) for _ in range(rows)]
+    )
+    signs = rng.choice([-1.0, 1.0], size=(rows, batch)).astype(np.float32)
+    vals = np.arange(1, batch + 1, dtype=np.float32)
+    signvals = signs * vals[None, :]
+    table = np.asarray(model.countsketch_update(sketch, buckets, signvals))
+    est = np.asarray(model.countsketch_estimate(table, buckets, signs))
+    np.testing.assert_allclose(est, vals, rtol=1e-5)
+
+
+def test_signed_cancellation():
+    rows, width = 3, 32
+    sketch = np.zeros((rows, width), np.float32)
+    buckets = np.tile(np.array([[4, 4]], np.int32), (rows, 1))
+    signs = np.ones((rows, 2), np.float32)
+    vals = np.array([7.0, -7.0], np.float32)
+    signvals = signs * vals[None, :]
+    table = np.asarray(model.countsketch_update(sketch, buckets, signvals))
+    np.testing.assert_allclose(table, 0.0, atol=1e-6)

@@ -1,0 +1,57 @@
+//! Appendix B.1 reproduction: Ψ calibration by simulation.
+//!
+//! The paper reports that for δ = 0.01 and ρ ∈ {1, 2}: C = 2 suffices for
+//! k ≥ 10, C = 1.4 for k ≥ 100, C = 1.1 for k ≥ 1000, where C is the
+//! constant in the Theorem 3.1 lower bound Ψ ≥ (1/C)·max{ρ−1, 1/ln(n/k)}
+//! (ρ>1) or 1/(C ln(n/k)) (ρ=1).
+
+use worp::psi::{psi_estimate, psi_lower_bound};
+use worp::util::fmt::Table;
+
+fn implied_c(n: usize, k: usize, rho: f64, psi: f64) -> f64 {
+    let ln_nk = ((n as f64) / (k as f64)).ln().max(1.0);
+    if rho <= 1.0 {
+        1.0 / (psi * ln_nk)
+    } else {
+        (rho - 1.0f64).max(1.0 / ln_nk) / psi
+    }
+}
+
+fn main() {
+    let delta = 0.01;
+    println!("Appendix B.1 — Ψ_{{n,k,ρ}}(δ={delta}) by Monte-Carlo on R_{{n,k,ρ}}\n");
+
+    let mut t = Table::new(
+        "implied constant C (paper: 2 @ k≥10, 1.4 @ k≥100, 1.1 @ k≥1000)",
+        &["k", "n", "ρ", "Ψ (simulated)", "thm 3.1 @ C=2", "implied C"],
+    );
+    let mut worst: [f64; 3] = [0.0; 3];
+    for (i, &k) in [10usize, 100, 1000].iter().enumerate() {
+        let n = 100 * k;
+        for &rho in &[1.0, 2.0] {
+            let trials = if k >= 1000 { 1_500 } else { 4_000 };
+            let psi = psi_estimate(n, k, rho, delta, trials, 0xB1 + k as u64);
+            let c = implied_c(n, k, rho, psi);
+            worst[i] = worst[i].max(c);
+            t.row(&[
+                k.to_string(),
+                n.to_string(),
+                format!("{rho}"),
+                format!("{psi:.4}"),
+                format!("{:.4}", psi_lower_bound(n, k, rho, 2.0)),
+                format!("{c:.3}"),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv("target/experiments/psi_calibration.csv").ok();
+
+    // paper's calibration bands (generous: Monte-Carlo noise)
+    assert!(worst[0] <= 2.2, "k=10: C = {} should be ≲ 2", worst[0]);
+    assert!(worst[1] <= 1.6, "k=100: C = {} should be ≲ 1.4", worst[1]);
+    assert!(worst[2] <= 1.25, "k=1000: C = {} should be ≲ 1.1", worst[2]);
+    println!(
+        "shape checks ok: C = {:.2}/{:.2}/{:.2} for k = 10/100/1000",
+        worst[0], worst[1], worst[2]
+    );
+}

@@ -1,0 +1,100 @@
+//! Table 3 reproduction: NRMSE of frequency-moment estimates
+//! `‖ν‖_{p'}^{p'}` from ℓp samples.
+//!
+//! Rows (ℓp, Zipf[α], ν^{p'}) exactly as the paper: (ℓ2, 2, ν³),
+//! (ℓ2, 2, ν²), (ℓ1, 2, ν), (ℓ1, 1, ν³), (ℓ1, 2, ν³).
+//! Columns: perfect WR, perfect WOR, 1-pass WORp, 2-pass WORp.
+//! n = 10^4, k = 100, CountSketch k×31, averaged over RUNS runs.
+//!
+//! Shape to hold (paper Table 3): 2-pass ≈ perfect WOR; WOR ≪ WR except
+//! the (ℓ1, Zipf[1], ν³) row where WR's heavy draws happen to help less;
+//! 1-pass in between (larger sketch error at fixed size).
+
+use worp::data::stream::unaggregate;
+use worp::data::zipf::zipf_frequencies;
+use worp::estimate::{moment_estimate, wr_moment_estimate};
+use worp::sampler::ppswor::perfect_ppswor;
+use worp::sampler::worp1::OnePassWorp;
+use worp::sampler::worp2::two_pass_sample;
+use worp::sampler::wr::perfect_wr;
+use worp::sampler::SamplerConfig;
+use worp::util::fmt::{sci, Table};
+use worp::util::stats::nrmse;
+
+const RUNS: u64 = 60;
+
+fn main() {
+    let n = 10_000;
+    let k = 100;
+    println!("Table 3 — NRMSE of ‖ν‖_{{p'}}^{{p'}} estimates (n={n}, k={k}, {RUNS} runs, CountSketch {k}×31)\n");
+
+    let cases: &[(f64, f64, f64)] = &[
+        // (p of the sample, zipf alpha, p' of the statistic)
+        (2.0, 2.0, 3.0),
+        (2.0, 2.0, 2.0),
+        (1.0, 2.0, 1.0),
+        (1.0, 1.0, 3.0),
+        (1.0, 2.0, 3.0),
+    ];
+
+    let mut t = Table::new(
+        "NRMSE",
+        &["ℓp", "α", "ν^p'", "perfect WR", "perfect WOR", "1-pass WORp", "2-pass WORp"],
+    );
+
+    for &(p, alpha, pp) in cases {
+        let freqs = zipf_frequencies(n, alpha, 1.0);
+        let truth: f64 = freqs.iter().map(|f| f.powf(pp)).sum();
+        let elems = unaggregate(&freqs, 2, false, 5);
+
+        let (mut e_wr, mut e_wor, mut e_1p, mut e_2p) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for seed in 0..RUNS {
+            let cfg = SamplerConfig::new(p, k)
+                .with_seed(seed)
+                .with_domain(n)
+                .with_sketch_shape(31, k);
+            e_wr.push(wr_moment_estimate(&perfect_wr(&freqs, p, k, seed), pp));
+            e_wor.push(moment_estimate(&perfect_ppswor(&freqs, p, k, seed), pp));
+            let mut w1 = OnePassWorp::new(cfg.clone());
+            for e in &elems {
+                w1.process(e);
+            }
+            e_1p.push(moment_estimate(&w1.sample_enumerating(n as u64), pp));
+            e_2p.push(moment_estimate(&two_pass_sample(&elems, cfg), pp));
+        }
+        t.row(&[
+            format!("ℓ{p}"),
+            format!("Zipf[{alpha}]"),
+            format!("ν^{pp}"),
+            sci(nrmse(&e_wr, truth)),
+            sci(nrmse(&e_wor, truth)),
+            sci(nrmse(&e_1p, truth)),
+            sci(nrmse(&e_2p, truth)),
+        ]);
+
+        // shape assertions per row
+        let (wr_, wor_, p2_) = (
+            nrmse(&e_wr, truth),
+            nrmse(&e_wor, truth),
+            nrmse(&e_2p, truth),
+        );
+        // 2-pass must sit within an order of magnitude of perfect WOR
+        // (occasional borderline-key swaps at the paper's tight k×31
+        // sketch perturb these astronomically small NRMSEs by small
+        // factors — e.g. 6.6e-11 vs 2.1e-11 — while WR sits at 1e-3)
+        assert!(
+            p2_ < 10.0 * wor_ + 1e-12,
+            "2-pass ({p2_:.2e}) must track perfect WOR ({wor_:.2e})"
+        );
+        if alpha >= 2.0 {
+            assert!(
+                wor_ < wr_,
+                "WOR ({wor_:.2e}) must beat WR ({wr_:.2e}) on skewed data"
+            );
+        }
+    }
+    t.print();
+    t.write_csv("target/experiments/table3_nrmse.csv").ok();
+    println!("shape checks ok: 2-pass tracks perfect WOR; WOR beats WR on Zipf[2]");
+}

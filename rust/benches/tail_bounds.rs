@@ -1,0 +1,62 @@
+//! Theorem D.1 reproduction: concentration of R_{n,k,ρ}.
+//!
+//! Empirical tail probabilities versus the theorem's bounds:
+//!   ρ = 1:  Pr[R ≥ C·k·ln(n/k)] ≤ 3e^{−k}
+//!   ρ > 1:  Pr[R ≥ C·k/(ρ−1)]   ≤ 3e^{−k}
+//! and the "back of the envelope" means S_{n,k,ρ} (≈ k ln(n/k) for ρ=1,
+//! ≈ k/(ρ−1) for ρ>1).
+
+use worp::psi::sample_r;
+use worp::util::fmt::Table;
+use worp::util::rng::Rng;
+use worp::util::stats::{mean, quantile};
+
+fn main() {
+    println!("Theorem D.1 — tail of R_{{n,k,ρ}}\n");
+    let mut rng = Rng::new(0xD1);
+    let mut t = Table::new(
+        "empirical R vs predicted scale (2000 draws each)",
+        &["n", "k", "ρ", "mean R", "predicted scale", "ratio", "q99 / scale"],
+    );
+
+    let mut ok = true;
+    for &(n, k) in &[(10_000usize, 10usize), (10_000, 100), (100_000, 100)] {
+        for &rho in &[1.0, 1.5, 2.0] {
+            let draws: Vec<f64> = (0..2_000).map(|_| sample_r(&mut rng, n, k, rho)).collect();
+            let m = mean(&draws);
+            let scale = if rho <= 1.0 {
+                k as f64 * ((n as f64 / k as f64).ln())
+            } else {
+                k as f64 / (rho - 1.0)
+            };
+            let q99 = quantile(&draws, 0.99);
+            t.row(&[
+                n.to_string(),
+                k.to_string(),
+                format!("{rho}"),
+                format!("{m:.1}"),
+                format!("{scale:.1}"),
+                format!("{:.2}", m / scale),
+                format!("{:.2}", q99 / scale),
+            ]);
+            // the mean must sit within a small constant of the predicted
+            // scale and the 99% quantile within C ≈ 4 of it
+            ok &= m / scale > 0.2 && m / scale < 3.0;
+            ok &= q99 / scale < 5.0;
+        }
+    }
+    t.print();
+    t.write_csv("target/experiments/tail_bounds.csv").ok();
+    assert!(ok, "R_{{n,k,rho}} concentration violated the theorem-D.1 scale");
+
+    // direct check of the 3e^{-k} form at small k where it's measurable:
+    // k = 4 -> 3e^-4 ~ 0.055; count exceedances of C*k*scale with C = 4
+    let (n, k, rho) = (10_000, 4usize, 1.0);
+    let scale = 4.0 * k as f64 * ((n as f64 / k as f64).ln());
+    let draws: Vec<f64> = (0..10_000).map(|_| sample_r(&mut rng, n, k, rho)).collect();
+    let exceed = draws.iter().filter(|&&r| r >= scale).count() as f64 / draws.len() as f64;
+    let bound = 3.0 * (-(k as f64)).exp();
+    println!("Pr[R ≥ 4·k·ln(n/k)] = {exceed:.4} ≤ 3e^-k = {bound:.4} (k = {k})");
+    assert!(exceed <= bound, "tail bound violated: {exceed} > {bound}");
+    println!("shape checks ok");
+}

@@ -1,0 +1,116 @@
+//! Performance benches (EXPERIMENTS.md §Perf): sketch-update hot path,
+//! sampler end-to-end throughput, pipeline scaling, and the XLA-offload
+//! comparison.
+
+use worp::data::zipf::ZipfStream;
+use worp::data::Element;
+use worp::pipeline::PipelineOpts;
+use worp::sampler::worp1::OnePassWorp;
+use worp::sampler::SamplerConfig;
+use worp::sketch::countsketch::CountSketch;
+use worp::sketch::countmin::CountMin;
+use worp::sketch::RhhSketch;
+use worp::util::bench::Bencher;
+
+fn elems(n_keys: usize, m: u64, seed: u64) -> Vec<Element> {
+    ZipfStream::new(n_keys, 1.2, m, seed).collect()
+}
+
+fn main() {
+    println!("§Perf — hot-path throughput\n");
+    Bencher::header();
+    let mut b = Bencher::new().with_iters(2, 8);
+
+    let stream = elems(100_000, 1_000_000, 1);
+    let m = stream.len() as u64;
+
+    // ---- L3 native sketch update
+    for &rows in &[5usize, 31] {
+        b.bench_throughput(&format!("countsketch update rows={rows} w=1024"), m, || {
+            let mut cs = CountSketch::with_shape(rows, 1024, 7);
+            for e in &stream {
+                cs.process(e);
+            }
+            cs.table()[0]
+        });
+    }
+    b.bench_throughput("countmin update rows=5 w=1024", m, || {
+        let mut cm = CountMin::with_shape(5, 1024, 7);
+        for e in &stream {
+            cm.process(e);
+        }
+        cm.est(0)
+    });
+
+    // ---- estimates
+    let mut cs = CountSketch::with_shape(5, 1024, 7);
+    for e in &stream {
+        cs.process(e);
+    }
+    b.bench_throughput("countsketch est (100k keys)", 100_000, || {
+        let mut acc = 0.0;
+        for k in 0..100_000u64 {
+            acc += cs.est(k);
+        }
+        acc
+    });
+
+    // ---- 1-pass WORp sampler end-to-end (single thread)
+    let cfg = SamplerConfig::new(1.0, 100)
+        .with_seed(3)
+        .with_domain(100_000)
+        .with_sketch_shape(5, 1024);
+    b.bench_throughput("worp1 process 1M elems (1 thread)", m, || {
+        let mut s = OnePassWorp::new(cfg.clone());
+        for e in &stream {
+            s.process(e);
+        }
+        s.processed()
+    });
+
+    // ---- sharded pipeline scaling
+    for &workers in &[1usize, 2, 4, 8] {
+        let cfg = cfg.clone();
+        let stream = stream.clone();
+        b.bench_throughput(&format!("pipeline 1-pass workers={workers}"), m, move || {
+            let c = worp::coordinator::Coordinator::new(
+                cfg.clone(),
+                PipelineOpts::new(workers, 8192, 16).unwrap(),
+            );
+            let (s, _) = c.one_pass(stream.clone()).unwrap();
+            s.len()
+        });
+    }
+
+    // ---- XLA offload (if artifacts exist)
+    let dir = ["artifacts", "../artifacts"]
+        .iter()
+        .find(|d| worp::runtime::artifact::ArtifactDir::exists(d));
+    match dir {
+        Some(d) => {
+            let rt = worp::runtime::XlaRuntime::cpu().unwrap();
+            let a = worp::runtime::artifact::ArtifactDir::open(d).unwrap();
+            let sub = &stream[..200_000.min(stream.len())];
+            b.bench_throughput("xla countsketch update (batched)", sub.len() as u64, || {
+                let mut xs =
+                    worp::runtime::executor::XlaCountSketch::load(&rt, &a, 7).unwrap();
+                for e in sub {
+                    xs.process(e).unwrap();
+                }
+                xs.flush().unwrap();
+                xs.kernel_calls
+            });
+            // native same-shape reference for the offload comparison
+            b.bench_throughput("native countsketch update (same shape r5)", sub.len() as u64, || {
+                let mut cs = CountSketch::with_shape(5, 1024, 7);
+                for e in sub {
+                    cs.process(e);
+                }
+                cs.table()[0]
+            });
+        }
+        None => println!("(xla offload benches skipped — run `make artifacts`)"),
+    }
+
+    println!("\n(results also summarized in EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,78 @@
+//! Theorem F.1 / Algorithm 1 reproduction: total-variation distance of the
+//! sampled k-tuple from the perfect p-ppswor k-subset distribution.
+//!
+//! A small key domain lets us enumerate the exact subset probabilities and
+//! measure empirical TV over many runs:
+//! - with the *oracle* single-sampler substrate (per-draw TV 0), measured
+//!   TV isolates the subtraction machinery and must be statistically small;
+//! - with the *precision* (sketch) substrate, TV degrades gracefully with
+//!   the inner sketch size.
+
+use std::collections::HashMap;
+use worp::data::stream::unaggregate;
+use worp::sampler::tv1pass::{ppswor_subset_probs, SamplerKind, TvSampler, TvSamplerConfig};
+use worp::util::fmt::Table;
+
+fn empirical_tv(
+    freqs: &[f64],
+    p: f64,
+    k: usize,
+    kind: SamplerKind,
+    trials: u64,
+    r: usize,
+) -> f64 {
+    let exact = ppswor_subset_probs(freqs, p, k);
+    let mut counts: HashMap<Vec<u64>, f64> = HashMap::new();
+    for seed in 0..trials {
+        let cfg = TvSamplerConfig::new(p, k, freqs.len(), seed ^ 0x7EA1, kind).with_r(r);
+        let mut tv = TvSampler::new(cfg);
+        for e in unaggregate(freqs, 2, false, seed ^ 3) {
+            tv.process(&e);
+        }
+        let mut s = tv.produce();
+        if s.len() < k {
+            continue; // FAIL events count against TV via missing mass
+        }
+        s.sort_unstable();
+        *counts.entry(s).or_insert(0.0) += 1.0 / trials as f64;
+    }
+    let mut tvd = 0.0;
+    for (subset, &pr) in &exact {
+        tvd += (pr - counts.get(subset).copied().unwrap_or(0.0)).abs();
+    }
+    for (subset, &emp) in &counts {
+        if !exact.contains_key(subset) {
+            tvd += emp;
+        }
+    }
+    tvd / 2.0
+}
+
+fn main() {
+    let freqs = vec![5.0, 3.0, 2.0, 1.0, 1.0];
+    let p = 1.0;
+    let k = 2;
+    let trials = 3_000;
+    println!(
+        "Theorem F.1 — k-tuple TV distance vs perfect ppswor (n={}, k={k}, {trials} runs)\n",
+        freqs.len()
+    );
+
+    let mut t = Table::new("empirical TV distance", &["substrate", "r (samplers)", "TV"]);
+    let tv_oracle = empirical_tv(&freqs, p, k, SamplerKind::Oracle, trials, 6 * k);
+    t.row(&["oracle (per-draw TV 0)".into(), (6 * k).to_string(), format!("{tv_oracle:.4}")]);
+    for &r in &[2 * k, 6 * k] {
+        let tv_prec = empirical_tv(&freqs, p, k, SamplerKind::Precision, trials / 3, r);
+        t.row(&["precision sketch".into(), r.to_string(), format!("{tv_prec:.4}")]);
+    }
+    t.print();
+    t.write_csv("target/experiments/tv_distance.csv").ok();
+
+    // Monte-Carlo noise floor for 3000 trials over ~10 subsets is ~0.03
+    assert!(
+        tv_oracle < 0.06,
+        "Algorithm 1 with oracle samplers must be statistically indistinguishable \
+         from perfect ppswor (TV = {tv_oracle})"
+    );
+    println!("shape checks ok: oracle-substrate TV ≈ Monte-Carlo noise floor");
+}

@@ -1,0 +1,130 @@
+//! Hand-rolled CLI argument parsing (no `clap` offline — DESIGN.md §7).
+//!
+//! Grammar: `worp <subcommand> [--key value]... [--flag]...`
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first positional argument).
+    pub command: String,
+    /// `--key value` options.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut options = HashMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // value present and not itself an option?
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        options.insert(name.to_string(), it.next().unwrap());
+                    }
+                    _ => flags.push(name.to_string()),
+                }
+            } else {
+                return Err(Error::Config(format!("unexpected positional arg {a:?}")));
+            }
+        }
+        Ok(Args { command, options, flags })
+    }
+
+    /// Option as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; errors on unparsable values.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| Error::Config(format!("cannot parse --{key} {v:?}"))),
+        }
+    }
+
+    /// Flag presence.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Top-level usage text.
+pub fn usage() -> &'static str {
+    "worp — WOR ℓp sampling pipeline (Cohen–Pagh–Woodruff 2020 reproduction)
+
+USAGE:
+    worp <command> [options]
+
+COMMANDS:
+    sample      run a WORp sampler over a generated workload
+                  --config <file.toml>   launcher config (see examples/)
+                  --method <1pass|2pass|tv>   (default 1pass)
+                  --p <f64> --k <n> --workers <n> --alpha <f64>
+                  --backend <native|xla>
+    psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
+                  --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
+    info        print runtime / artifact status
+    help        show this text
+"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse(&["sample", "--p", "2.0", "--k", "100", "--verbose"]);
+        assert_eq!(a.command, "sample");
+        assert_eq!(a.get("p"), Some("2.0"));
+        assert_eq!(a.parse_or::<usize>("k", 0).unwrap(), 100);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["psi"]);
+        assert_eq!(a.parse_or::<f64>("rho", 2.0).unwrap(), 2.0);
+        assert_eq!(a.str_or("method", "1pass"), "1pass");
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["sample", "--k", "ten"]);
+        assert!(a.parse_or::<usize>("k", 1).is_err());
+    }
+
+    #[test]
+    fn stray_positional_rejected() {
+        let r = Args::parse(["sample".into(), "oops".into()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn flag_before_option_parses() {
+        let a = parse(&["sample", "--fast", "--k", "5"]);
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get("k"), Some("5"));
+    }
+}

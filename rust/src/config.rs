@@ -1,0 +1,412 @@
+//! Configuration system: a TOML-subset parser plus the typed configs the
+//! launcher consumes (no `serde`/`toml` crates offline — DESIGN.md §7).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with values of
+//! type integer, float, bool, quoted string, or flat arrays of those;
+//! `#` comments. That covers every config this project ships.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Quoted string.
+    Str(String),
+    /// Flat array of scalars.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As f64 (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// As i64.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config document: `section.key -> Value` (top-level keys live in
+/// the empty section `""`).
+#[derive(Clone, Debug, Default)]
+pub struct Document {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Document {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {}: unterminated section", lineno + 1)))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| Error::Config(format!("line {}: {}", lineno + 1, e)))?;
+            doc.entries.insert((section.clone(), key), val);
+        }
+        Ok(doc)
+    }
+
+    /// Parse from a file.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Document> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Document::parse(&text)
+    }
+
+    /// Get `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// f64 with default.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// i64 with default.
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    /// usize with default.
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.i64_or(section, key, default as i64).max(0) as usize
+    }
+
+    /// bool with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// string with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_array(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_array(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Pipeline launcher configuration (the `[pipeline]`, `[sampler]`,
+/// `[sketch]`, `[workload]` sections of a config file).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// ℓp power `p ∈ (0, 2]`.
+    pub p: f64,
+    /// Sample size `k`.
+    pub k: usize,
+    /// rHH moment `q ∈ {1, 2}` (2 = CountSketch, 1 = CountMin/counters).
+    pub q: f64,
+    /// Shared randomization seed (defines `r_x` and sketch hashes).
+    pub seed: u64,
+    /// Number of shard workers.
+    pub workers: usize,
+    /// Micro-batch size on worker channels.
+    pub batch: usize,
+    /// Bounded-channel capacity (batches) — backpressure window.
+    pub channel_cap: usize,
+    /// Sketch rows (must be odd for CountSketch median).
+    pub rows: usize,
+    /// Sketch width override (0 = derive from Ψ calibration).
+    pub width: usize,
+    /// Failure probability target δ for Ψ calibration.
+    pub delta: f64,
+    /// Key domain size `n` (for KeyHash and Ψ).
+    pub n: usize,
+    /// Sketch-update backend: "native" or "xla".
+    pub backend: String,
+    /// Artifacts directory for the xla backend.
+    pub artifacts_dir: String,
+    /// Workload spec (used by the launcher): "zipf", "gradient", "querylog".
+    pub workload: String,
+    /// Zipf skew α.
+    pub alpha: f64,
+    /// Stream length (elements).
+    pub stream_len: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            p: 1.0,
+            k: 100,
+            q: 2.0,
+            seed: 42,
+            workers: 4,
+            batch: 4096,
+            channel_cap: 16,
+            rows: 31,
+            width: 0,
+            delta: 0.01,
+            n: 10_000,
+            backend: "native".into(),
+            artifacts_dir: "artifacts".into(),
+            workload: "zipf".into(),
+            alpha: 1.0,
+            stream_len: 1_000_000,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Read from a parsed document (missing keys keep defaults).
+    pub fn from_document(doc: &Document) -> Result<PipelineConfig> {
+        let d = PipelineConfig::default();
+        let cfg = PipelineConfig {
+            p: doc.f64_or("sampler", "p", d.p),
+            k: doc.usize_or("sampler", "k", d.k),
+            q: doc.f64_or("sketch", "q", d.q),
+            seed: doc.i64_or("sampler", "seed", d.seed as i64) as u64,
+            workers: doc.usize_or("pipeline", "workers", d.workers),
+            batch: doc.usize_or("pipeline", "batch", d.batch),
+            channel_cap: doc.usize_or("pipeline", "channel_cap", d.channel_cap),
+            rows: doc.usize_or("sketch", "rows", d.rows),
+            width: doc.usize_or("sketch", "width", d.width),
+            delta: doc.f64_or("sketch", "delta", d.delta),
+            n: doc.usize_or("workload", "n", d.n),
+            backend: doc.str_or("pipeline", "backend", &d.backend),
+            artifacts_dir: doc.str_or("pipeline", "artifacts_dir", &d.artifacts_dir),
+            workload: doc.str_or("workload", "kind", &d.workload),
+            alpha: doc.f64_or("workload", "alpha", d.alpha),
+            stream_len: doc.i64_or("workload", "stream_len", d.stream_len as i64) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<PipelineConfig> {
+        PipelineConfig::from_document(&Document::load(path)?)
+    }
+
+    /// Validate parameter ranges (paper: p ∈ (0,2], q ≥ p, q ∈ {1,2}).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.p > 0.0 && self.p <= 2.0) {
+            return Err(Error::Config(format!("p must be in (0,2], got {}", self.p)));
+        }
+        if self.q != 1.0 && self.q != 2.0 {
+            return Err(Error::Config(format!("q must be 1 or 2, got {}", self.q)));
+        }
+        if self.q < self.p {
+            return Err(Error::Config(format!(
+                "need q >= p for the rHH reduction (q={}, p={})",
+                self.q, self.p
+            )));
+        }
+        if self.k == 0 {
+            return Err(Error::Config("k must be positive".into()));
+        }
+        if self.rows % 2 == 0 {
+            return Err(Error::Config(format!(
+                "sketch rows must be odd for the median estimator, got {}",
+                self.rows
+            )));
+        }
+        if self.workers == 0 || self.batch == 0 || self.channel_cap == 0 {
+            return Err(Error::Config("workers/batch/channel_cap must be positive".into()));
+        }
+        match self.backend.as_str() {
+            "native" | "xla" => {}
+            b => return Err(Error::Config(format!("unknown backend {b:?}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# WORp pipeline config
+[sampler]
+p = 2.0
+k = 128
+seed = 7
+
+[sketch]
+q = 2 # CountSketch
+rows = 5
+delta = 0.01
+
+[pipeline]
+workers = 2
+backend = "native"
+caps = [1, 2, 3]
+
+[workload]
+kind = "zipf"
+alpha = 1.5
+n = 1000
+stream_len = 50000
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("sampler", "p"), Some(&Value::Float(2.0)));
+        assert_eq!(doc.get("sampler", "k"), Some(&Value::Int(128)));
+        assert_eq!(doc.get("pipeline", "backend"), Some(&Value::Str("native".into())));
+        assert_eq!(
+            doc.get("pipeline", "caps"),
+            Some(&Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
+        );
+    }
+
+    #[test]
+    fn comments_stripped_even_after_values() {
+        let doc = Document::parse("x = 5 # five\ns = \"a#b\" # hash inside string\n").unwrap();
+        assert_eq!(doc.get("", "x"), Some(&Value::Int(5)));
+        assert_eq!(doc.get("", "s"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn pipeline_config_roundtrip() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.p, 2.0);
+        assert_eq!(cfg.k, 128);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.alpha, 1.5);
+        assert_eq!(cfg.n, 1000);
+        // defaults preserved
+        assert_eq!(cfg.batch, PipelineConfig::default().batch);
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        let mut c = PipelineConfig::default();
+        c.p = 3.0;
+        assert!(c.validate().is_err()); // p > 2: classic lower bound regime
+        let mut c = PipelineConfig::default();
+        c.q = 1.0;
+        c.p = 2.0;
+        assert!(c.validate().is_err()); // q < p
+        let mut c = PipelineConfig::default();
+        c.rows = 4;
+        assert!(c.validate().is_err()); // even rows
+        let mut c = PipelineConfig::default();
+        c.backend = "gpu".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = Document::parse("x == 1\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+        let err = Document::parse("[sec\n").unwrap_err();
+        assert!(err.to_string().contains("unterminated section"));
+    }
+}

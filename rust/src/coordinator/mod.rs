@@ -1,0 +1,294 @@
+//! The coordinator (leader): ties the sharded pipeline to the WORp
+//! samplers — routing, per-shard sampler state, merge tree, two-pass
+//! orchestration, and the XLA-offloaded backend.
+//!
+//! This is the public entry point a downstream user drives (and what the
+//! `worp` binary launches): hand it a stream (replayable for two-pass)
+//! and a config, get back a [`Sample`] plus run metrics.
+
+use crate::config::PipelineConfig;
+use crate::data::Element;
+use crate::error::{Error, Result};
+use crate::pipeline::merge::tree_merge;
+use crate::pipeline::metrics::Metrics;
+use crate::pipeline::{run_sharded, PipelineOpts, ShardSink};
+use crate::sampler::worp1::OnePassWorp;
+use crate::sampler::worp2::{TwoPassWorpPass1, TwoPassWorpPass2};
+use crate::sampler::{Sample, SamplerConfig};
+use std::sync::Arc;
+
+/// A replayable element source (two-pass methods read it twice).
+/// Implementations must produce the *same multiset of elements* on every
+/// call — e.g. a deterministic generator or an in-memory/spooled buffer.
+pub trait StreamSource {
+    /// A fresh iterator over the stream.
+    fn stream(&self) -> Box<dyn Iterator<Item = Element> + Send + '_>;
+}
+
+/// In-memory stream (owns the elements; trivially replayable).
+pub struct VecSource(pub Vec<Element>);
+
+impl StreamSource for VecSource {
+    fn stream(&self) -> Box<dyn Iterator<Item = Element> + Send + '_> {
+        Box::new(self.0.iter().copied())
+    }
+}
+
+/// A replayable deterministic generator: any `Fn() -> Iterator`.
+pub struct FnSource<F>(pub F);
+
+impl<F, I> StreamSource for FnSource<F>
+where
+    F: Fn() -> I,
+    I: Iterator<Item = Element> + Send + 'static,
+{
+    fn stream(&self) -> Box<dyn Iterator<Item = Element> + Send + '_> {
+        Box::new((self.0)())
+    }
+}
+
+impl ShardSink for OnePassWorp {
+    fn process(&mut self, e: &Element) {
+        OnePassWorp::process(self, e)
+    }
+}
+
+impl ShardSink for TwoPassWorpPass1 {
+    fn process(&mut self, e: &Element) {
+        TwoPassWorpPass1::process(self, e)
+    }
+}
+
+impl ShardSink for TwoPassWorpPass2 {
+    fn process(&mut self, e: &Element) {
+        TwoPassWorpPass2::process(self, e)
+    }
+}
+
+/// The leader/coordinator.
+pub struct Coordinator {
+    sampler_cfg: SamplerConfig,
+    opts: PipelineOpts,
+}
+
+impl Coordinator {
+    /// From the launcher config.
+    pub fn from_config(cfg: &PipelineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut scfg = SamplerConfig::new(cfg.p, cfg.k)
+            .with_seed(cfg.seed)
+            .with_domain(cfg.n);
+        scfg.q = cfg.q;
+        scfg.delta = cfg.delta;
+        if cfg.width > 0 {
+            scfg = scfg.with_sketch_shape(cfg.rows, cfg.width);
+        } else {
+            scfg.rows = cfg.rows;
+        }
+        let opts = PipelineOpts::new(cfg.workers, cfg.batch, cfg.channel_cap)?;
+        Ok(Coordinator { sampler_cfg: scfg, opts })
+    }
+
+    /// Direct construction.
+    pub fn new(sampler_cfg: SamplerConfig, opts: PipelineOpts) -> Self {
+        Coordinator { sampler_cfg, opts }
+    }
+
+    /// Sampler configuration in use.
+    pub fn sampler_config(&self) -> &SamplerConfig {
+        &self.sampler_cfg
+    }
+
+    /// 1-pass WORp over a sharded pipeline: each worker owns a sibling
+    /// `OnePassWorp` (same seed → same randomization), the leader
+    /// tree-merges them and extracts the sample.
+    pub fn one_pass<I>(&self, stream: I) -> Result<(Sample, Arc<Metrics>)>
+    where
+        I: IntoIterator<Item = Element>,
+    {
+        let cfg = self.sampler_cfg.clone();
+        let (states, metrics) =
+            run_sharded(stream, self.opts, move |_| OnePassWorp::new(cfg.clone()))?;
+        let merged = tree_merge(states, &metrics, |a, b| a.merge(b))?
+            .ok_or_else(|| Error::Pipeline("no workers".into()))?;
+        Ok((merged.sample(), metrics))
+    }
+
+    /// 2-pass WORp: pass I shards the stream into sibling rHH sketches and
+    /// merges them; pass II replays the stream into sharded top-k′
+    /// collectors seeded with the *merged* pass-I sketch; the leader
+    /// merges collectors and cuts the exact sample.
+    pub fn two_pass<S: StreamSource>(&self, source: &S) -> Result<(Sample, Arc<Metrics>)> {
+        let cfg = self.sampler_cfg.clone();
+
+        // ---- pass I
+        let mk = cfg.clone();
+        let (p1s, metrics1) = run_sharded(source.stream(), self.opts, move |_| {
+            TwoPassWorpPass1::new(mk.clone())
+        })?;
+        let merged_p1 = tree_merge(p1s, &metrics1, |a, b| a.merge(b))?
+            .ok_or_else(|| Error::Pipeline("no workers".into()))?;
+
+        // ---- pass II (every worker gets a clone of the merged sketch)
+        let template = merged_p1.into_pass2();
+        let (p2s, metrics2) = run_sharded(source.stream(), self.opts, move |_| template.clone())?;
+        let merged_p2: TwoPassWorpPass2 = tree_merge(p2s, &metrics2, |a, b| a.merge(b))?
+            .ok_or_else(|| Error::Pipeline("no workers".into()))?;
+
+        // fold pass-I counters into the returned metrics
+        metrics2.note_batch(0);
+        Ok((merged_p2.sample(), metrics2))
+    }
+
+    /// 1-pass WORp with the **XLA backend**: the transformed-element
+    /// CountSketch update executes on the PJRT client via the AOT
+    /// `countsketch_update` artifact (single-threaded — the PJRT client is
+    /// not `Send` in the published crate; the benches compare this against
+    /// the native sharded path).
+    pub fn one_pass_xla<I>(
+        &self,
+        stream: I,
+        artifacts_dir: &str,
+    ) -> Result<(Sample, Arc<Metrics>)>
+    where
+        I: IntoIterator<Item = Element>,
+    {
+        use crate::runtime::artifact::ArtifactDir;
+        use crate::runtime::executor::XlaCountSketch;
+        use crate::runtime::XlaRuntime;
+
+        let rt = XlaRuntime::cpu()?;
+        let dir = ArtifactDir::open(artifacts_dir)?;
+        let cfg = &self.sampler_cfg;
+        let mut xs = XlaCountSketch::load(&rt, &dir, cfg.seed ^ 0x1AB5)?;
+        let transform = cfg.transform();
+        let metrics = Arc::new(Metrics::default());
+
+        let mut candidates: std::collections::HashMap<u64, ()> = Default::default();
+        let cand_cap = 8 * (cfg.k + 1);
+        let mut count = 0u64;
+        for e in stream {
+            let te = transform.apply(&e);
+            xs.process(&te)?;
+            candidates.insert(e.key, ());
+            count += 1;
+            if candidates.len() > 4 * cand_cap {
+                // shrink by current estimates
+                xs.flush()?;
+                let mut scored: Vec<(u64, f64)> = candidates
+                    .keys()
+                    .map(|&k| (k, xs.est(k).abs()))
+                    .collect();
+                scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                scored.truncate(cand_cap);
+                candidates = scored.into_iter().map(|(k, _)| (k, ())).collect();
+            }
+        }
+        xs.flush()?;
+        metrics.note_batch(count);
+
+        let mut scored: Vec<(u64, f64)> = candidates
+            .keys()
+            .map(|&k| (k, xs.est(k)))
+            .filter(|(_, v)| *v != 0.0)
+            .collect();
+        scored.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+        let k = cfg.k;
+        let tau = if scored.len() > k { scored[k].1.abs() } else { 0.0 };
+        let entries = scored
+            .into_iter()
+            .take(k)
+            .map(|(key, est)| crate::sampler::SampleEntry {
+                key,
+                freq: transform.invert(key, est),
+                transformed: est,
+            })
+            .collect();
+        Ok((
+            Sample { entries, tau, p: cfg.p, dist: transform.dist() },
+            metrics,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::{zipf_exact_stream, zipf_frequencies};
+    use crate::sampler::ppswor::perfect_ppswor;
+
+    fn cfg(n: usize, k: usize) -> SamplerConfig {
+        SamplerConfig::new(1.0, k)
+            .with_seed(77)
+            .with_domain(n)
+            .with_sketch_shape(9, 2048)
+    }
+
+    #[test]
+    fn sharded_one_pass_matches_perfect_on_skew() {
+        let n = 800;
+        let k = 16;
+        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(4, 256, 4).unwrap());
+        let elems = zipf_exact_stream(n, 1.5, 1e4, 3, 7);
+        let (sample, metrics) = c.one_pass(elems.clone()).unwrap();
+        assert_eq!(metrics.elements() as usize, elems.len());
+        assert_eq!(sample.len(), k);
+        let want = perfect_ppswor(&zipf_frequencies(n, 1.5, 1e4), 1.0, k, 77);
+        let overlap = sample
+            .keys()
+            .iter()
+            .filter(|x| want.keys().contains(x))
+            .count();
+        assert!(overlap >= k - 1, "overlap {overlap}/{k}");
+    }
+
+    #[test]
+    fn sharded_two_pass_equals_perfect_sample() {
+        let n = 600;
+        let k = 12;
+        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(3, 128, 4).unwrap());
+        let elems = zipf_exact_stream(n, 1.2, 1e4, 2, 9);
+        let (sample, _) = c.two_pass(&VecSource(elems)).unwrap();
+        let want = perfect_ppswor(&zipf_frequencies(n, 1.2, 1e4), 1.0, k, 77);
+        assert_eq!(sample.keys(), want.keys());
+        for (g, w) in sample.entries.iter().zip(&want.entries) {
+            assert!((g.freq - w.freq).abs() < 1e-6 * w.freq.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_two_pass_output() {
+        let n = 400;
+        let k = 10;
+        let elems = zipf_exact_stream(n, 1.0, 1e4, 2, 3);
+        let src = VecSource(elems);
+        let mut outputs = Vec::new();
+        for workers in [1usize, 2, 5] {
+            let c = Coordinator::new(cfg(n, k), PipelineOpts::new(workers, 64, 4).unwrap());
+            let (s, _) = c.two_pass(&src).unwrap();
+            outputs.push(s.keys());
+        }
+        assert_eq!(outputs[0], outputs[1]);
+        assert_eq!(outputs[1], outputs[2]);
+    }
+
+    #[test]
+    fn fn_source_replays_deterministically() {
+        let src = FnSource(|| crate::data::zipf::ZipfStream::new(100, 1.0, 1000, 5));
+        let a: Vec<Element> = src.stream().collect();
+        let b: Vec<Element> = src.stream().collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_config_wires_parameters() {
+        let mut pc = crate::config::PipelineConfig::default();
+        pc.p = 2.0;
+        pc.k = 32;
+        pc.rows = 5;
+        pc.width = 777;
+        let c = Coordinator::from_config(&pc).unwrap();
+        assert_eq!(c.sampler_config().p, 2.0);
+        assert_eq!(c.sampler_config().resolved_width_two_pass(), 777);
+    }
+}

@@ -1,0 +1,147 @@
+//! Data substrate: elements, frequency vectors, and workload generators.
+//!
+//! Data arrives *unaggregated* as `(key, value)` elements (paper §2); the
+//! frequency of key `x` is `ν_x = Σ_{e.key = x} e.val`. Generators in
+//! [`zipf`], [`stream`] and [`trace`] produce the paper's evaluation
+//! workloads plus domain workloads (query logs, gradient updates).
+
+pub mod stream;
+pub mod trace;
+pub mod zipf;
+
+use std::collections::HashMap;
+
+/// A data element: key–value pair. Values may be signed (turnstile model).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Element {
+    /// Key identifier (string keys are hashed to u64 upstream; see
+    /// [`crate::util::hashing::hash_str`]).
+    pub key: u64,
+    /// Signed update value.
+    pub val: f64,
+}
+
+impl Element {
+    /// Construct an element.
+    #[inline]
+    pub fn new(key: u64, val: f64) -> Self {
+        Element { key, val }
+    }
+}
+
+/// Aggregate a stream of elements into the frequency map `x -> ν_x`.
+pub fn aggregate<I: IntoIterator<Item = Element>>(elems: I) -> HashMap<u64, f64> {
+    let mut m: HashMap<u64, f64> = HashMap::new();
+    for e in elems {
+        *m.entry(e.key).or_insert(0.0) += e.val;
+    }
+    m
+}
+
+/// A dense frequency vector over keys `0..n` with helpers the experiments
+/// use (true moments, top-k, rank-frequency).
+#[derive(Clone, Debug)]
+pub struct FreqVector {
+    /// `ν_x` for `x in 0..n`.
+    pub freqs: Vec<f64>,
+}
+
+impl FreqVector {
+    /// From a dense vector.
+    pub fn new(freqs: Vec<f64>) -> Self {
+        FreqVector { freqs }
+    }
+
+    /// From an aggregated map with known domain size `n` (missing keys = 0).
+    pub fn from_map(n: usize, m: &HashMap<u64, f64>) -> Self {
+        let mut v = vec![0.0; n];
+        for (&k, &f) in m {
+            if (k as usize) < n {
+                v[k as usize] += f;
+            }
+        }
+        FreqVector { freqs: v }
+    }
+
+    /// Number of keys.
+    pub fn len(&self) -> usize {
+        self.freqs.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.freqs.is_empty()
+    }
+
+    /// `Σ_x |ν_x|^q` — the q-th frequency moment of magnitudes.
+    pub fn moment(&self, q: f64) -> f64 {
+        crate::util::stats::lq_norm_pow(&self.freqs, q)
+    }
+
+    /// Keys sorted by decreasing |ν_x| (the paper's `order(ν)`).
+    pub fn order(&self) -> Vec<u64> {
+        let mut idx: Vec<u64> = (0..self.freqs.len() as u64).collect();
+        idx.sort_by(|&a, &b| {
+            self.freqs[b as usize]
+                .abs()
+                .partial_cmp(&self.freqs[a as usize].abs())
+                .unwrap()
+        });
+        idx
+    }
+
+    /// The top-k keys by |ν_x| with their frequencies.
+    pub fn top_k(&self, k: usize) -> Vec<(u64, f64)> {
+        self.order()
+            .into_iter()
+            .take(k)
+            .map(|x| (x, self.freqs[x as usize]))
+            .collect()
+    }
+
+    /// Rank-frequency series: |ν| sorted decreasing.
+    pub fn rank_frequency(&self) -> Vec<f64> {
+        let mut m: Vec<f64> = self.freqs.iter().map(|x| x.abs()).collect();
+        m.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_sums_per_key() {
+        let elems = vec![
+            Element::new(1, 2.0),
+            Element::new(2, 1.0),
+            Element::new(1, -0.5),
+        ];
+        let m = aggregate(elems);
+        assert_eq!(m[&1], 1.5);
+        assert_eq!(m[&2], 1.0);
+    }
+
+    #[test]
+    fn freq_vector_moments_and_order() {
+        let v = FreqVector::new(vec![3.0, -5.0, 1.0]);
+        assert!((v.moment(2.0) - 35.0).abs() < 1e-12);
+        assert!((v.moment(1.0) - 9.0).abs() < 1e-12);
+        assert_eq!(v.order(), vec![1, 0, 2]);
+        assert_eq!(v.top_k(2), vec![(1, -5.0), (0, 3.0)]);
+        assert_eq!(v.rank_frequency(), vec![5.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn from_map_respects_domain() {
+        let mut m = HashMap::new();
+        m.insert(0u64, 1.0);
+        m.insert(9u64, 2.0);
+        m.insert(100u64, 7.0); // outside the domain — dropped
+        let v = FreqVector::from_map(10, &m);
+        assert_eq!(v.len(), 10);
+        assert_eq!(v.freqs[0], 1.0);
+        assert_eq!(v.freqs[9], 2.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Generic unaggregated-stream generators: signed (turnstile) streams,
+//! multiplicity splitting, adversarial shapes for failure testing.
+
+use super::Element;
+use crate::util::rng::Rng;
+
+/// Split a frequency vector into an unaggregated element stream where each
+/// key's mass arrives in `splits` equal parts, shuffled. With
+/// `signed_noise = true`, each part is emitted as a pair of cancelling
+/// extra updates `(+z, -z)` around its share — net frequency is unchanged
+/// but the stream exercises the turnstile (±) path.
+pub fn unaggregate(
+    freqs: &[f64],
+    splits: usize,
+    signed_noise: bool,
+    seed: u64,
+) -> Vec<Element> {
+    let s = splits.max(1);
+    let mut rng = Rng::new(seed);
+    let mut elems = Vec::with_capacity(freqs.len() * s * if signed_noise { 3 } else { 1 });
+    for (i, &f) in freqs.iter().enumerate() {
+        if f == 0.0 {
+            continue;
+        }
+        for _ in 0..s {
+            let share = f / s as f64;
+            elems.push(Element::new(i as u64, share));
+            if signed_noise {
+                let z = share.abs() * (0.5 + rng.uniform());
+                elems.push(Element::new(i as u64, z));
+                elems.push(Element::new(i as u64, -z));
+            }
+        }
+    }
+    rng.shuffle(&mut elems);
+    elems
+}
+
+/// A stream of signed updates mimicking sparse gradient traffic: `n`
+/// parameters, per-step Gaussian magnitudes scaled by a per-key importance
+/// `~ Zipf[α]`, random signs. Net frequencies are the signed sums.
+pub struct GradientStream {
+    importance: Vec<f64>,
+    rng: Rng,
+    remaining: u64,
+}
+
+impl GradientStream {
+    /// `n` parameter keys, skew `alpha`, `m` updates, RNG `seed`.
+    pub fn new(n: usize, alpha: f64, m: u64, seed: u64) -> Self {
+        let importance = (0..n)
+            .map(|i| ((i + 1) as f64).powf(-alpha))
+            .collect();
+        GradientStream { importance, rng: Rng::new(seed), remaining: m }
+    }
+}
+
+impl Iterator for GradientStream {
+    type Item = Element;
+
+    fn next(&mut self) -> Option<Element> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let n = self.importance.len() as u64;
+        let key = self.rng.below(n);
+        let mag = self.importance[key as usize] * self.rng.normal().abs();
+        let sign = if self.rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        Some(Element::new(key, sign * mag))
+    }
+}
+
+/// Adversarial near-uniform frequency vector: `n` keys all with frequency
+/// 1 ± jitter. This is the hard case for rHH (tail is as heavy as possible
+/// relative to the top-k) and drives the success-probability bench.
+pub fn near_uniform_frequencies(n: usize, jitter: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| 1.0 + jitter * (rng.uniform() - 0.5))
+        .collect()
+}
+
+/// A "worst-case" frequency shape from the proof of Theorem 3.1 (App. B):
+/// `k` heavy keys of relative weight `eps` each, and `n-k` keys sharing the
+/// rest uniformly. As `eps -> 0` this approaches the distribution whose
+/// conditioned ratio matches `R_{n,k,ρ}` — used to calibrate Ψ empirically.
+pub fn worst_case_frequencies(n: usize, k: usize, eps: f64) -> Vec<f64> {
+    assert!(k < n);
+    assert!(eps > 0.0 && eps * (k as f64) < 1.0);
+    let light = (1.0 - eps * k as f64) / (n - k) as f64;
+    (0..n)
+        .map(|i| if i < k { eps } else { light })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::aggregate;
+
+    #[test]
+    fn unaggregate_preserves_frequencies() {
+        let freqs = vec![5.0, -2.0, 0.0, 1.5];
+        for &signed in &[false, true] {
+            let elems = unaggregate(&freqs, 3, signed, 7);
+            let m = aggregate(elems);
+            assert!((m[&0] - 5.0).abs() < 1e-9);
+            assert!((m[&1] + 2.0).abs() < 1e-9);
+            assert!((m[&3] - 1.5).abs() < 1e-9);
+            assert!(!m.contains_key(&2));
+        }
+    }
+
+    #[test]
+    fn signed_noise_actually_negative_somewhere() {
+        let elems = unaggregate(&[1.0, 2.0], 2, true, 3);
+        assert!(elems.iter().any(|e| e.val < 0.0));
+    }
+
+    #[test]
+    fn gradient_stream_signed_and_skewed() {
+        let elems: Vec<Element> = GradientStream::new(100, 1.0, 20_000, 5).collect();
+        assert_eq!(elems.len(), 20_000);
+        assert!(elems.iter().any(|e| e.val < 0.0));
+        assert!(elems.iter().any(|e| e.val > 0.0));
+        // key 0 magnitudes dominate key 99 on average
+        let avg = |k: u64| {
+            let v: Vec<f64> = elems.iter().filter(|e| e.key == k).map(|e| e.val.abs()).collect();
+            v.iter().sum::<f64>() / v.len().max(1) as f64
+        };
+        assert!(avg(0) > 10.0 * avg(99));
+    }
+
+    #[test]
+    fn near_uniform_is_near_uniform() {
+        let f = near_uniform_frequencies(1000, 0.1, 2);
+        let mn = f.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = f.iter().cloned().fold(0.0_f64, f64::max);
+        assert!(mn > 0.94 && mx < 1.06);
+    }
+
+    #[test]
+    fn worst_case_shape() {
+        let f = worst_case_frequencies(100, 5, 0.01);
+        assert_eq!(f.len(), 100);
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(f[0] == 0.01 && f[4] == 0.01);
+        assert!(f[5] < 0.011);
+    }
+}

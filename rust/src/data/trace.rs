@@ -1,0 +1,155 @@
+//! Domain workload traces: synthetic query logs (string keys, unit values)
+//! and co-occurrence streams — the application classes the paper's
+//! introduction motivates (search queries, language-model examples).
+//!
+//! Real query logs are proprietary; these synthetic traces preserve the
+//! relevant structure (Zipfian key popularity, string key domain, bursty
+//! arrival order) per the substitution policy in DESIGN.md §6.
+
+use super::Element;
+use crate::util::hashing::hash_str;
+use crate::util::rng::{sample_cumulative, Rng};
+
+/// A synthetic query-log trace: string queries with Zipfian popularity and
+/// burstiness (repeats arrive near one another, as in real logs).
+pub struct QueryLog {
+    /// Vocabulary of query strings, most popular first.
+    pub queries: Vec<String>,
+    cum: Vec<f64>,
+    rng: Rng,
+    burst: Vec<usize>,
+    remaining: u64,
+}
+
+impl QueryLog {
+    /// `vocab` distinct queries, skew `alpha`, `m` events, RNG `seed`.
+    pub fn new(vocab: usize, alpha: f64, m: u64, seed: u64) -> Self {
+        let queries = (0..vocab)
+            .map(|i| format!("q{:05}:{}", i, synthetic_terms(i)))
+            .collect();
+        let mut cum = Vec::with_capacity(vocab);
+        let mut acc = 0.0;
+        for i in 0..vocab {
+            acc += ((i + 1) as f64).powf(-alpha);
+            cum.push(acc);
+        }
+        QueryLog { queries, cum, rng: Rng::new(seed), burst: Vec::new(), remaining: m }
+    }
+
+    /// Iterate events as `(query_string_index, Element)` where the element
+    /// key is the stable string hash of the query (unit value).
+    pub fn events(mut self) -> impl Iterator<Item = (usize, Element)> {
+        std::iter::from_fn(move || {
+            if self.remaining == 0 {
+                return None;
+            }
+            self.remaining -= 1;
+            // bursts: with prob 0.3, repeat a recently seen query
+            let idx = if !self.burst.is_empty() && self.rng.uniform() < 0.3 {
+                let j = self.rng.below(self.burst.len() as u64) as usize;
+                self.burst[j]
+            } else {
+                sample_cumulative(&mut self.rng, &self.cum)
+            };
+            if self.burst.len() < 32 {
+                self.burst.push(idx);
+            } else {
+                let j = self.rng.below(32) as usize;
+                self.burst[j] = idx;
+            }
+            let key = hash_str(0x9_4a7, &self.queries[idx]);
+            Some((idx, Element::new(key, 1.0)))
+        })
+    }
+}
+
+fn synthetic_terms(i: usize) -> String {
+    const TERMS: [&str; 12] = [
+        "weather", "flights", "news", "recipe", "score", "map", "movie",
+        "stock", "hotel", "translate", "lyrics", "howto",
+    ];
+    format!(
+        "{} {}",
+        TERMS[i % TERMS.len()],
+        TERMS[(i / TERMS.len()) % TERMS.len()]
+    )
+}
+
+/// A co-occurrence stream over `(term_a, term_b)` keys (language-model
+/// example weighting): pairs drawn from a Zipfian unigram model; the
+/// element key is the hashed pair.
+pub struct CooccurrenceStream {
+    cum: Vec<f64>,
+    rng: Rng,
+    remaining: u64,
+}
+
+impl CooccurrenceStream {
+    /// `vocab` unigram terms, skew `alpha`, `m` pair events, RNG `seed`.
+    pub fn new(vocab: usize, alpha: f64, m: u64, seed: u64) -> Self {
+        let mut cum = Vec::with_capacity(vocab);
+        let mut acc = 0.0;
+        for i in 0..vocab {
+            acc += ((i + 1) as f64).powf(-alpha);
+            cum.push(acc);
+        }
+        CooccurrenceStream { cum, rng: Rng::new(seed), remaining: m }
+    }
+}
+
+impl Iterator for CooccurrenceStream {
+    type Item = Element;
+
+    fn next(&mut self) -> Option<Element> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let a = sample_cumulative(&mut self.rng, &self.cum) as u64;
+        let b = sample_cumulative(&mut self.rng, &self.cum) as u64;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let key = crate::util::hashing::hash64(lo.wrapping_mul(0x1F3B), hi);
+        Some(Element::new(key, 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_log_produces_m_events_with_stable_hashes() {
+        let log = QueryLog::new(100, 1.0, 5_000, 1);
+        let evs: Vec<(usize, Element)> = log.events().collect();
+        assert_eq!(evs.len(), 5_000);
+        // same query index -> same key hash
+        use std::collections::HashMap;
+        let mut seen: HashMap<usize, u64> = HashMap::new();
+        for (idx, e) in &evs {
+            let k = seen.entry(*idx).or_insert(e.key);
+            assert_eq!(*k, e.key);
+        }
+    }
+
+    #[test]
+    fn query_log_is_skewed() {
+        let log = QueryLog::new(200, 1.2, 20_000, 2);
+        let mut counts = vec![0u64; 200];
+        for (idx, _) in log.events() {
+            counts[idx] += 1;
+        }
+        assert!(counts[0] > 20 * counts[150].max(1));
+    }
+
+    #[test]
+    fn cooccurrence_symmetric_pair_keys() {
+        // (a,b) and (b,a) must map to the same key: check via construction
+        let lo = 3u64;
+        let hi = 17u64;
+        let k1 = crate::util::hashing::hash64(lo.wrapping_mul(0x1F3B), hi);
+        let k2 = crate::util::hashing::hash64(lo.wrapping_mul(0x1F3B), hi);
+        assert_eq!(k1, k2);
+        let s: Vec<Element> = CooccurrenceStream::new(50, 1.0, 1000, 3).collect();
+        assert_eq!(s.len(), 1000);
+    }
+}

@@ -1,0 +1,128 @@
+//! Zipf workloads — the paper's evaluation distribution.
+//!
+//! `Zipf[α]` over support `n`: key `i` (0-indexed) has weight
+//! `(i+1)^{-α}`. The paper evaluates on `Zipf[1]` and `Zipf[2]` with
+//! `n = 10^4` (Figs 1–2, Table 3).
+
+use super::Element;
+use crate::util::rng::{sample_cumulative, Rng};
+
+/// The exact Zipf frequency vector (deterministic weights, not sampled):
+/// `ν_i = scale · (i+1)^{-α}`.
+pub fn zipf_frequencies(n: usize, alpha: f64, scale: f64) -> Vec<f64> {
+    (0..n).map(|i| scale * ((i + 1) as f64).powf(-alpha)).collect()
+}
+
+/// An iterator producing `m` unaggregated elements whose keys are drawn
+/// i.i.d. from `Zipf[α]` over `0..n`, each with value 1.0 (count stream).
+///
+/// The *expected* frequency vector is Zipf; the realized one is multinomial
+/// around it, matching how the paper's Colab draws element streams.
+pub struct ZipfStream {
+    cum: Vec<f64>,
+    rng: Rng,
+    remaining: u64,
+}
+
+impl ZipfStream {
+    /// `n` keys, skew `alpha`, `m` elements, RNG `seed`.
+    pub fn new(n: usize, alpha: f64, m: u64, seed: u64) -> Self {
+        assert!(n > 0);
+        let mut cum = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += ((i + 1) as f64).powf(-alpha);
+            cum.push(acc);
+        }
+        ZipfStream { cum, rng: Rng::new(seed), remaining: m }
+    }
+
+    /// Number of keys in the support.
+    pub fn support(&self) -> usize {
+        self.cum.len()
+    }
+}
+
+impl Iterator for ZipfStream {
+    type Item = Element;
+
+    fn next(&mut self) -> Option<Element> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let key = sample_cumulative(&mut self.rng, &self.cum) as u64;
+        Some(Element::new(key, 1.0))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining as usize, Some(self.remaining as usize))
+    }
+}
+
+/// Materialize an *exact* unaggregated stream realizing the deterministic
+/// Zipf frequency vector: key `i` appears with total value `(i+1)^{-α}·scale`
+/// split across `splits` elements, interleaved in hashed order. This is the
+/// workload used for the figure reproductions where the paper fixes the
+/// frequency vector and varies only the sampling randomness.
+pub fn zipf_exact_stream(
+    n: usize,
+    alpha: f64,
+    scale: f64,
+    splits: usize,
+    seed: u64,
+) -> Vec<Element> {
+    let freqs = zipf_frequencies(n, alpha, scale);
+    let mut elems = Vec::with_capacity(n * splits.max(1));
+    for (i, &f) in freqs.iter().enumerate() {
+        let s = splits.max(1);
+        for _ in 0..s {
+            elems.push(Element::new(i as u64, f / s as f64));
+        }
+    }
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    rng.shuffle(&mut elems);
+    elems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::aggregate;
+
+    #[test]
+    fn frequencies_are_zipf() {
+        let f = zipf_frequencies(4, 1.0, 1.0);
+        assert!((f[0] - 1.0).abs() < 1e-12);
+        assert!((f[1] - 0.5).abs() < 1e-12);
+        assert!((f[3] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_is_skewed_and_sized() {
+        let elems: Vec<Element> = ZipfStream::new(100, 1.5, 50_000, 1).collect();
+        assert_eq!(elems.len(), 50_000);
+        let m = aggregate(elems);
+        let f0 = m.get(&0).copied().unwrap_or(0.0);
+        let f50 = m.get(&50).copied().unwrap_or(0.0);
+        assert!(f0 > 50.0 * f50.max(1.0), "f0={f0} f50={f50}");
+    }
+
+    #[test]
+    fn stream_deterministic_by_seed() {
+        let a: Vec<Element> = ZipfStream::new(50, 1.0, 1000, 9).collect();
+        let b: Vec<Element> = ZipfStream::new(50, 1.0, 1000, 9).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn exact_stream_realizes_frequencies() {
+        let elems = zipf_exact_stream(10, 2.0, 100.0, 4, 3);
+        assert_eq!(elems.len(), 40);
+        let m = aggregate(elems);
+        for i in 0..10u64 {
+            let want = 100.0 * ((i + 1) as f64).powf(-2.0);
+            assert!((m[&i] - want).abs() < 1e-9, "key {i}");
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the WORp library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Configuration file / CLI parameter problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A sketch or sampler was used with incompatible parameters
+    /// (e.g. merging sketches with different shapes or randomization).
+    #[error("incompatible sketches: {0}")]
+    Incompatible(String),
+
+    /// The dataset failed the rHH test — the sample cannot be certified
+    /// (Appendix A, "Testing for failure").
+    #[error("rHH failure: {0}")]
+    RhhFailure(String),
+
+    /// PJRT / XLA runtime errors (artifact loading, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Pipeline orchestration errors (worker panic, channel close, ...).
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+
+    /// I/O errors.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::Config(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Config("missing key 'p'".into());
+        assert!(e.to_string().contains("missing key 'p'"));
+        let e = Error::RhhFailure("tail too heavy".into());
+        assert!(e.to_string().contains("rHH"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,204 @@
+//! Estimators over samples (paper §2.1 Eqs. 1–3, §5 Eq. 17).
+//!
+//! Bottom-k samples give conditioned inverse-probability
+//! (Horvitz–Thompson) per-key estimates:
+//!
+//! ```text
+//! f̂(ν_x) = f(ν_x) / Pr_{r~D}[ r ≤ (|ν_x|/τ)^p ]   for x ∈ S, else 0
+//! ```
+//!
+//! which are unbiased for perfect samples and `O(ε)`-biased for 1-pass
+//! WORp (Theorem 5.1). Sum statistics `Σ_x f(ν_x) L_x` are estimated by
+//! summing per-key estimates over the sample. WR samples use the
+//! Hansen–Hurwitz estimator. [`rankfreq`] estimates the rank-frequency
+//! distribution (Figs 1–2).
+
+pub mod rankfreq;
+pub mod similarity;
+
+use crate::sampler::{Sample, SampleEntry};
+use crate::sampler::wr::WrSample;
+
+/// Per-key inverse-probability estimate of `f(ν_x)` for a sampled entry
+/// (0 for keys outside the sample — simply don't call it for those).
+pub fn per_key_estimate<F: Fn(f64) -> f64>(sample: &Sample, entry: &SampleEntry, f: &F) -> f64 {
+    let p_inc = sample.inclusion_prob(entry.freq);
+    if p_inc <= 0.0 {
+        return 0.0;
+    }
+    f(entry.freq) / p_inc
+}
+
+/// Estimate the sum statistic `Σ_x f(ν_x) · L(x)` from a WOR sample
+/// (paper Eq. 2); `l` is the per-key multiplier (selector) function.
+pub fn sum_statistic<F, L>(sample: &Sample, f: &F, l: &L) -> f64
+where
+    F: Fn(f64) -> f64,
+    L: Fn(u64) -> f64,
+{
+    if sample.tau <= 0.0 {
+        // degenerate sample (fewer keys than k): the sample *is* the data
+        return sample.entries.iter().map(|e| f(e.freq) * l(e.key)).sum();
+    }
+    sample
+        .entries
+        .iter()
+        .map(|e| per_key_estimate(sample, e, f) * l(e.key))
+        .sum()
+}
+
+/// Estimate the frequency moment `‖ν‖_{p'}^{p'} = Σ |ν_x|^{p'}` from a
+/// WOR sample (the statistic of the paper's Table 3).
+pub fn moment_estimate(sample: &Sample, p_prime: f64) -> f64 {
+    sum_statistic(sample, &|v: f64| v.abs().powf(p_prime), &|_| 1.0)
+}
+
+/// Hansen–Hurwitz estimate of `Σ_x f(ν_x)` from a WR ℓp sample:
+/// `(1/k) Σ_draws f(ν_i)/q_i`. Note: degenerate (zero-variance) when
+/// `f(ν) ∝ ν^p`; the sample-based estimator below is what a WR *sample*
+/// (the sparse summary) actually supports and what the paper reports.
+pub fn wr_sum_estimate_hh<F: Fn(f64) -> f64>(sample: &WrSample, f: &F) -> f64 {
+    let k = sample.k as f64;
+    sample
+        .draws
+        .iter()
+        .enumerate()
+        .map(|(i, _)| f(sample.freqs[i]) / sample.probs[i])
+        .sum::<f64>()
+        / k
+}
+
+/// Distinct-key inverse-inclusion (Horvitz–Thompson) estimate of
+/// `Σ_x f(ν_x)` from a WR sample: each distinct key is weighted by
+/// `1/(1 − (1−q_x)^k)`. This treats the WR draw as a *sample of keys* —
+/// the comparison the paper's Table 3 makes.
+pub fn wr_sum_estimate<F: Fn(f64) -> f64>(sample: &WrSample, f: &F) -> f64 {
+    sample
+        .distinct()
+        .into_iter()
+        .map(|(_, freq, q)| f(freq) / wr_inclusion_prob(q, sample.k).max(1e-300))
+        .sum()
+}
+
+/// WR moment estimate `‖ν‖_{p'}^{p'}` (Table 3 "perfect WR" column).
+pub fn wr_moment_estimate(sample: &WrSample, p_prime: f64) -> f64 {
+    wr_sum_estimate(sample, &|v: f64| v.abs().powf(p_prime))
+}
+
+/// Per-key WR inclusion probability over k draws: `1 − (1 − q_x)^k`
+/// (used by the WR distinct-key rank-frequency estimator).
+pub fn wr_inclusion_prob(q: f64, k: usize) -> f64 {
+    1.0 - (1.0 - q).powi(k as i32)
+}
+
+/// Sparse vector representation: the sample as `(key, f̂(ν_x))` pairs —
+/// the "sparse summary" use-case of the introduction (e.g. sparsified
+/// gradients).
+pub fn sparsify<F: Fn(f64) -> f64>(sample: &Sample, f: &F) -> Vec<(u64, f64)> {
+    sample
+        .entries
+        .iter()
+        .map(|e| (e.key, per_key_estimate(sample, e, f)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::zipf_frequencies;
+    use crate::sampler::ppswor::perfect_ppswor;
+    use crate::sampler::wr::perfect_wr;
+    use crate::util::stats::{mean, nrmse};
+
+    #[test]
+    fn moment_estimate_unbiased_over_seeds() {
+        // perfect ppswor estimates of ||nu||_1 should average to the truth
+        let freqs = zipf_frequencies(500, 1.0, 100.0);
+        let truth: f64 = freqs.iter().sum();
+        let ests: Vec<f64> = (0..400)
+            .map(|seed| moment_estimate(&perfect_ppswor(&freqs, 1.0, 50, seed), 1.0))
+            .collect();
+        let m = mean(&ests);
+        assert!(
+            (m - truth).abs() / truth < 0.02,
+            "mean {m} vs truth {truth}"
+        );
+    }
+
+    #[test]
+    fn wor_beats_wr_on_skewed_second_moment() {
+        // the paper's headline comparison: l2 sampling of Zipf[2],
+        // estimating ||nu||_2^2 — WOR must have much smaller NRMSE
+        let freqs = zipf_frequencies(2_000, 2.0, 1.0);
+        let truth: f64 = freqs.iter().map(|f| f * f).sum();
+        let k = 50;
+        let runs = 150;
+        let wor: Vec<f64> = (0..runs)
+            .map(|s| moment_estimate(&perfect_ppswor(&freqs, 2.0, k, s), 2.0))
+            .collect();
+        let wr: Vec<f64> = (0..runs)
+            .map(|s| wr_moment_estimate(&perfect_wr(&freqs, 2.0, k, s), 2.0))
+            .collect();
+        let e_wor = nrmse(&wor, truth);
+        let e_wr = nrmse(&wr, truth);
+        assert!(
+            e_wor < 0.5 * e_wr,
+            "NRMSE wor={e_wor:.2e} wr={e_wr:.2e} — WOR should win clearly"
+        );
+    }
+
+    #[test]
+    fn subset_sum_statistic() {
+        // estimate the total frequency of even keys only
+        let freqs = zipf_frequencies(300, 1.0, 10.0);
+        let truth: f64 = freqs.iter().enumerate().filter(|(i, _)| i % 2 == 0).map(|(_, f)| f).sum();
+        let ests: Vec<f64> = (0..300)
+            .map(|seed| {
+                let s = perfect_ppswor(&freqs, 1.0, 60, seed);
+                sum_statistic(&s, &|v| v, &|k| if k % 2 == 0 { 1.0 } else { 0.0 })
+            })
+            .collect();
+        let m = mean(&ests);
+        assert!((m - truth).abs() / truth < 0.05, "mean {m} truth {truth}");
+    }
+
+    #[test]
+    fn degenerate_sample_returns_exact_sums() {
+        // domain smaller than k: tau = 0, estimates are exact sums
+        let freqs = vec![3.0, 4.0];
+        let s = perfect_ppswor(&freqs, 1.0, 10, 1);
+        assert_eq!(s.tau, 0.0);
+        let est = moment_estimate(&s, 1.0);
+        assert!((est - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wr_estimator_unbiased() {
+        let freqs = zipf_frequencies(200, 1.0, 5.0);
+        let truth: f64 = freqs.iter().map(|f| f * f).sum();
+        let ests: Vec<f64> = (0..500)
+            .map(|s| wr_moment_estimate(&perfect_wr(&freqs, 1.0, 40, s), 2.0))
+            .collect();
+        let m = mean(&ests);
+        assert!((m - truth).abs() / truth < 0.05, "mean {m} truth {truth}");
+    }
+
+    #[test]
+    fn wr_inclusion_prob_sane() {
+        assert!((wr_inclusion_prob(0.5, 1) - 0.5).abs() < 1e-12);
+        assert!((wr_inclusion_prob(0.5, 2) - 0.75).abs() < 1e-12);
+        assert!(wr_inclusion_prob(1.0, 3) == 1.0);
+    }
+
+    #[test]
+    fn sparsify_shape() {
+        let freqs = zipf_frequencies(100, 1.0, 10.0);
+        let s = perfect_ppswor(&freqs, 1.0, 10, 3);
+        let sparse = sparsify(&s, &|v| v);
+        assert_eq!(sparse.len(), 10);
+        // estimates upper-bound the raw frequency (inverse prob >= 1)
+        for (k, est) in &sparse {
+            assert!(*est >= freqs[*k as usize] - 1e-9);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Rank-frequency distribution estimation (paper Fig 1 right, Fig 2).
+//!
+//! From a WOR sample: sort sampled keys by decreasing frequency; the
+//! estimated rank of the i-th sampled key is the running sum of inverse
+//! inclusion probabilities `Σ_{j ≤ i} 1/p_j` — an unbiased estimate of
+//! `|{y : ν_y ≥ ν_x}|`. Plotting (estimated rank, frequency) reproduces
+//! the paper's rank-frequency series. The WR variant weights distinct
+//! draws by `1/(1 − (1−q)^k)`.
+
+use super::wr_inclusion_prob;
+use crate::sampler::wr::WrSample;
+use crate::sampler::Sample;
+
+/// One point of the estimated rank-frequency curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankFreqPoint {
+    /// Estimated rank (number of keys with frequency ≥ this one).
+    pub rank: f64,
+    /// The key's (estimated or exact) frequency.
+    pub freq: f64,
+}
+
+/// Estimate the rank-frequency curve from a WOR bottom-k sample.
+pub fn rank_frequency_wor(sample: &Sample) -> Vec<RankFreqPoint> {
+    let mut entries: Vec<(f64, f64)> = sample
+        .entries
+        .iter()
+        .map(|e| {
+            let p = if sample.tau > 0.0 {
+                sample.inclusion_prob(e.freq)
+            } else {
+                1.0
+            };
+            (e.freq.abs(), p.max(1e-300))
+        })
+        .collect();
+    entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut acc = 0.0;
+    entries
+        .into_iter()
+        .map(|(freq, p)| {
+            acc += 1.0 / p;
+            RankFreqPoint { rank: acc, freq }
+        })
+        .collect()
+}
+
+/// Estimate the rank-frequency curve from a WR sample (distinct draws,
+/// inverse per-key inclusion over k draws).
+pub fn rank_frequency_wr(sample: &WrSample) -> Vec<RankFreqPoint> {
+    let mut entries: Vec<(f64, f64)> = sample
+        .distinct()
+        .into_iter()
+        .map(|(_, freq, q)| (freq.abs(), wr_inclusion_prob(q, sample.k).max(1e-300)))
+        .collect();
+    entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut acc = 0.0;
+    entries
+        .into_iter()
+        .map(|(freq, p)| {
+            acc += 1.0 / p;
+            RankFreqPoint { rank: acc, freq }
+        })
+        .collect()
+}
+
+/// Mean relative error between an estimated curve and the true
+/// rank-frequency vector (`true_rf[r]` = frequency of rank r+1), evaluated
+/// at the estimated ranks; splits head (ranks ≤ `head`) and tail. Used by
+/// the Fig 2 bench to quantify "WOR approximates the tail much better".
+pub fn curve_error(
+    points: &[RankFreqPoint],
+    true_rf: &[f64],
+    head: usize,
+) -> (f64, f64) {
+    let (mut eh, mut nh, mut et, mut nt) = (0.0, 0u32, 0.0, 0u32);
+    for pt in points {
+        let r = (pt.rank.round().max(1.0) as usize - 1).min(true_rf.len() - 1);
+        let truth = true_rf[r];
+        if truth <= 0.0 {
+            continue;
+        }
+        let rel = (pt.freq - truth).abs() / truth;
+        if r < head {
+            eh += rel;
+            nh += 1;
+        } else {
+            et += rel;
+            nt += 1;
+        }
+    }
+    (
+        if nh > 0 { eh / nh as f64 } else { 0.0 },
+        if nt > 0 { et / nt as f64 } else { 0.0 },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::zipf_frequencies;
+    use crate::data::FreqVector;
+    use crate::sampler::ppswor::perfect_ppswor;
+    use crate::sampler::wr::perfect_wr;
+
+    #[test]
+    fn wor_curve_monotone_and_anchored() {
+        let freqs = zipf_frequencies(1000, 1.0, 100.0);
+        let s = perfect_ppswor(&freqs, 1.0, 50, 3);
+        let pts = rank_frequency_wor(&s);
+        assert_eq!(pts.len(), 50);
+        for w in pts.windows(2) {
+            assert!(w[0].rank < w[1].rank);
+            assert!(w[0].freq >= w[1].freq);
+        }
+        // the top key is nearly always sampled with p ~ 1 -> rank ~ 1
+        assert!(pts[0].rank < 2.0, "top rank {}", pts[0].rank);
+    }
+
+    #[test]
+    fn wor_ranks_track_truth_on_zipf() {
+        let n = 2000;
+        let freqs = zipf_frequencies(n, 1.0, 1000.0);
+        let true_rf = FreqVector::new(freqs.clone()).rank_frequency();
+        // average the estimated freq at mid ranks over seeds
+        let mut rel_errs = Vec::new();
+        for seed in 0..30 {
+            let s = perfect_ppswor(&freqs, 1.0, 100, seed);
+            let pts = rank_frequency_wor(&s);
+            let (_, tail) = curve_error(&pts, &true_rf, 10);
+            rel_errs.push(tail);
+        }
+        let avg = crate::util::stats::mean(&rel_errs);
+        assert!(avg < 0.6, "avg tail rel err {avg}");
+    }
+
+    #[test]
+    fn wr_curve_tail_worse_than_wor_on_skew() {
+        // Fig 1 right: WR's tail estimates are much worse on Zipf[2]
+        let n = 2000;
+        let freqs = zipf_frequencies(n, 2.0, 1000.0);
+        let true_rf = FreqVector::new(freqs.clone()).rank_frequency();
+        let k = 100;
+        let (mut wor_tail, mut wr_tail) = (0.0, 0.0);
+        let runs = 30;
+        for seed in 0..runs {
+            let sw = perfect_ppswor(&freqs, 2.0, k, seed);
+            let (_, t1) = curve_error(&rank_frequency_wor(&sw), &true_rf, 10);
+            wor_tail += t1;
+            let sr = perfect_wr(&freqs, 2.0, k, seed);
+            let (_, t2) = curve_error(&rank_frequency_wr(&sr), &true_rf, 10);
+            wr_tail += t2;
+        }
+        wor_tail /= runs as f64;
+        wr_tail /= runs as f64;
+        assert!(
+            wor_tail < wr_tail,
+            "wor tail {wor_tail} should beat wr tail {wr_tail}"
+        );
+    }
+
+    #[test]
+    fn wr_effective_size_small_on_skew() {
+        // Fig 1 left/middle: WR effective sample size collapses
+        let freqs = zipf_frequencies(10_000, 2.0, 1.0);
+        let s = perfect_wr(&freqs, 2.0, 100, 7);
+        assert!(s.effective_size() < 40, "eff={}", s.effective_size());
+    }
+}

@@ -1,0 +1,196 @@
+//! Multi-set estimators over **coordinated** samples (paper Conclusion:
+//! "coordinated samples facilitate powerful estimators for multi-set
+//! statistics and similarity measures such as weighted Jaccard
+//! similarity, min or max sums, ...").
+//!
+//! Two bottom-k samples built with the *same* randomization `r_x` are
+//! coordinated: key `x` is in sample `i` iff `r_x ≤ (ν_x^{(i)}/τ_i)^p`,
+//! with the same draw `r_x` on both sides. Hence
+//!
+//! - `x ∈ S₁ ∩ S₂  ⇔  r_x ≤ min_i (ν_x^{(i)}/τ_i)^p`
+//!
+//! which yields rigorous inverse-probability estimators for min-sums over
+//! the intersection, and plug-in ratio estimators for weighted Jaccard.
+
+use crate::sampler::Sample;
+use crate::util::hashing::BottomKDist;
+use std::collections::HashMap;
+
+fn incl_prob(dist: BottomKDist, ratio_p: f64) -> f64 {
+    match dist {
+        BottomKDist::Exp => 1.0 - (-ratio_p).exp(),
+        BottomKDist::Uniform => ratio_p.min(1.0),
+    }
+}
+
+/// Check two samples are coordinated-compatible (same p and D; the caller
+/// is responsible for having used the same seed).
+fn check_pair(a: &Sample, b: &Sample) {
+    assert_eq!(a.p, b.p, "coordinated samples need equal p");
+    assert_eq!(a.dist, b.dist, "coordinated samples need equal D");
+}
+
+/// Unbiased estimate of the min-sum `Σ_x min(ν_x^{(1)}, ν_x^{(2)})` from
+/// two coordinated samples (frequencies taken by magnitude). Keys outside
+/// `S₁ ∩ S₂` contribute through inverse-probability weighting of the
+/// intersection membership condition.
+pub fn min_sum(a: &Sample, b: &Sample) -> f64 {
+    check_pair(a, b);
+    let fb: HashMap<u64, f64> = b.entries.iter().map(|e| (e.key, e.freq)).collect();
+    let mut total = 0.0;
+    for e in &a.entries {
+        let Some(&f2) = fb.get(&e.key) else { continue };
+        let f1 = e.freq.abs();
+        let f2 = f2.abs();
+        let m = f1.min(f2);
+        if m <= 0.0 {
+            continue;
+        }
+        // Pr[x in S1 ∩ S2] under shared r_x:
+        // r_x <= min((f1/tau1)^p, (f2/tau2)^p)
+        let r1 = if a.tau > 0.0 { (f1 / a.tau).powf(a.p) } else { f64::INFINITY };
+        let r2 = if b.tau > 0.0 { (f2 / b.tau).powf(b.p) } else { f64::INFINITY };
+        let ratio = r1.min(r2);
+        let p_inc = if ratio.is_finite() { incl_prob(a.dist, ratio) } else { 1.0 };
+        total += m / p_inc.max(1e-300);
+    }
+    total
+}
+
+/// Plug-in estimate of the max-sum `Σ_x max(ν_x^{(1)}, ν_x^{(2)})` via
+/// `sum₁ + sum₂ − min_sum` (each `sum_i` estimated from its own sample).
+pub fn max_sum(a: &Sample, b: &Sample) -> f64 {
+    let s1 = crate::estimate::moment_estimate(a, 1.0);
+    let s2 = crate::estimate::moment_estimate(b, 1.0);
+    (s1 + s2 - min_sum(a, b)).max(0.0)
+}
+
+/// Plug-in estimate of the weighted Jaccard similarity
+/// `J = Σ min / Σ max ∈ [0, 1]`. Slightly biased (ratio of estimates) but
+/// consistent; coordination makes the numerator estimable at all.
+pub fn weighted_jaccard(a: &Sample, b: &Sample) -> f64 {
+    let mn = min_sum(a, b);
+    let mx = max_sum(a, b);
+    if mx <= 0.0 {
+        return 0.0;
+    }
+    (mn / mx).clamp(0.0, 1.0)
+}
+
+/// Sample-overlap diagnostic: |S₁ ∩ S₂| / k — with coordination this is
+/// itself an estimator of sample stability (paper's LSH property).
+pub fn key_overlap(a: &Sample, b: &Sample) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return 0.0;
+    }
+    let kb: std::collections::HashSet<u64> = b.keys().into_iter().collect();
+    let inter = a.keys().iter().filter(|k| kb.contains(k)).count();
+    inter as f64 / a.len().min(b.len()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::zipf_frequencies;
+    use crate::sampler::ppswor::perfect_ppswor;
+    use crate::util::stats::mean;
+
+    fn true_min_max_jaccard(f1: &[f64], f2: &[f64]) -> (f64, f64, f64) {
+        let mut mn = 0.0;
+        let mut mx = 0.0;
+        for i in 0..f1.len().max(f2.len()) {
+            let a = f1.get(i).copied().unwrap_or(0.0).abs();
+            let b = f2.get(i).copied().unwrap_or(0.0).abs();
+            mn += a.min(b);
+            mx += a.max(b);
+        }
+        (mn, mx, mn / mx)
+    }
+
+    fn perturbed(f: &[f64], factor: f64, stride: usize) -> Vec<f64> {
+        f.iter()
+            .enumerate()
+            .map(|(i, &v)| if i % stride == 0 { v * factor } else { v })
+            .collect()
+    }
+
+    #[test]
+    fn min_sum_unbiased_on_coordinated_samples() {
+        let n = 500;
+        let f1 = zipf_frequencies(n, 1.2, 1e4);
+        let f2 = perturbed(&f1, 0.5, 3);
+        let (true_min, _, _) = true_min_max_jaccard(&f1, &f2);
+        let ests: Vec<f64> = (0..300)
+            .map(|seed| {
+                let a = perfect_ppswor(&f1, 1.0, 80, seed);
+                let b = perfect_ppswor(&f2, 1.0, 80, seed); // same seed!
+                min_sum(&a, &b)
+            })
+            .collect();
+        let m = mean(&ests);
+        assert!(
+            (m - true_min).abs() / true_min < 0.08,
+            "min-sum mean {m} vs truth {true_min}"
+        );
+    }
+
+    #[test]
+    fn jaccard_accurate_on_similar_sets() {
+        let n = 500;
+        let f1 = zipf_frequencies(n, 1.5, 1e4);
+        let f2 = perturbed(&f1, 0.8, 2);
+        let (_, _, true_j) = true_min_max_jaccard(&f1, &f2);
+        let ests: Vec<f64> = (0..200)
+            .map(|seed| {
+                let a = perfect_ppswor(&f1, 1.0, 100, seed);
+                let b = perfect_ppswor(&f2, 1.0, 100, seed);
+                weighted_jaccard(&a, &b)
+            })
+            .collect();
+        let m = mean(&ests);
+        assert!((m - true_j).abs() < 0.08, "J est {m} vs truth {true_j}");
+    }
+
+    #[test]
+    fn identical_datasets_give_jaccard_one() {
+        let f = zipf_frequencies(300, 1.0, 1e3);
+        let a = perfect_ppswor(&f, 1.0, 50, 7);
+        let b = perfect_ppswor(&f, 1.0, 50, 7);
+        assert_eq!(a.keys(), b.keys());
+        assert!((weighted_jaccard(&a, &b) - 1.0).abs() < 1e-6);
+        assert_eq!(key_overlap(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn disjoint_datasets_give_jaccard_zero() {
+        let n = 200;
+        let mut f1 = vec![0.0; n];
+        let mut f2 = vec![0.0; n];
+        for i in 0..100 {
+            f1[i] = 10.0;
+            f2[i + 100] = 10.0;
+        }
+        let a = perfect_ppswor(&f1, 1.0, 30, 3);
+        let b = perfect_ppswor(&f2, 1.0, 30, 3);
+        assert_eq!(min_sum(&a, &b), 0.0);
+        assert_eq!(weighted_jaccard(&a, &b), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal p")]
+    fn mismatched_p_rejected() {
+        let f = zipf_frequencies(100, 1.0, 1e3);
+        let a = perfect_ppswor(&f, 1.0, 10, 3);
+        let b = perfect_ppswor(&f, 2.0, 10, 3);
+        min_sum(&a, &b);
+    }
+
+    #[test]
+    fn uncoordinated_samples_lose_overlap() {
+        let f = zipf_frequencies(2000, 1.0, 1e4);
+        let a = perfect_ppswor(&f, 1.0, 50, 7);
+        let b_coord = perfect_ppswor(&f, 1.0, 50, 7);
+        let b_indep = perfect_ppswor(&f, 1.0, 50, 8);
+        assert!(key_overlap(&a, &b_coord) > key_overlap(&a, &b_indep));
+    }
+}

@@ -1,0 +1,49 @@
+//! # WORp — composable sketches for WOR ℓp sampling
+//!
+//! Reproduction of Cohen, Pagh & Woodruff, *"WOR and p's: Sketches for
+//! ℓp-Sampling Without Replacement"* (2020), as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)**: a streaming-pipeline coordinator — sharded
+//!   workers over unaggregated element streams, composable sketch merging,
+//!   bounded-channel backpressure, two-pass orchestration — plus native
+//!   implementations of every sketch and sampler the paper uses.
+//! - **Layer 2/1 (build time, `python/compile`)**: the CountSketch update /
+//!   estimate hot paths authored as Pallas kernels inside a JAX graph,
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use worp::data::zipf::ZipfStream;
+//! use worp::sampler::worp1::OnePassWorp;
+//! use worp::sampler::SamplerConfig;
+//!
+//! // ℓ1 sample (p=1) of k=64 keys from a Zipf[1.2] stream of 1M elements.
+//! let cfg = SamplerConfig::new(1.0, 64).with_seed(7);
+//! let mut s = OnePassWorp::new(cfg);
+//! for e in ZipfStream::new(10_000, 1.2, 1_000_000, 42) {
+//!     s.process(&e);
+//! }
+//! let sample = s.sample();
+//! assert_eq!(sample.entries.len(), 64);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `benches/` for the
+//! reproduction of every table and figure in the paper.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod estimate;
+pub mod pipeline;
+pub mod psi;
+pub mod runtime;
+pub mod sampler;
+pub mod sketch;
+pub mod transform;
+pub mod util;
+
+pub use error::{Error, Result};

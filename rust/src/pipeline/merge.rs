@@ -1,0 +1,78 @@
+//! Merge tree: fold per-shard composable summaries into one, pairwise,
+//! tree-shaped (log-depth — the order a distributed reduce would use),
+//! counting merges in [`super::metrics::Metrics`].
+
+use crate::error::Result;
+use crate::pipeline::metrics::Metrics;
+
+/// Pairwise tree-merge of summaries using `merge(acc, other)`.
+/// Consumes the vector and returns the root. Returns `None` for empty
+/// input.
+pub fn tree_merge<S, F>(mut items: Vec<S>, metrics: &Metrics, mut merge: F) -> Result<Option<S>>
+where
+    F: FnMut(&mut S, &S) -> Result<()>,
+{
+    if items.is_empty() {
+        return Ok(None);
+    }
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                merge(&mut a, &b)?;
+                metrics.note_merge();
+            }
+            next.push(a);
+        }
+        items = next;
+    }
+    Ok(items.pop())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Element;
+    use crate::sketch::countsketch::CountSketch;
+    use crate::sketch::{RhhSketch, SketchParams};
+
+    #[test]
+    fn tree_merge_equals_sequential_merge() {
+        let params = SketchParams::new(5, 64, 9);
+        let mut shards: Vec<CountSketch> = (0..5).map(|_| CountSketch::new(params)).collect();
+        let mut reference = CountSketch::new(params);
+        for i in 0..1000u64 {
+            let e = Element::new(i % 97, (i % 13) as f64 - 6.0);
+            shards[(i % 5) as usize].process(&e);
+            reference.process(&e);
+        }
+        let metrics = Metrics::default();
+        let merged = tree_merge(shards, &metrics, |a, b| a.merge(b))
+            .unwrap()
+            .unwrap();
+        for (x, y) in merged.table().iter().zip(reference.table()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        assert_eq!(metrics.merges(), 4); // n-1 merges for n shards
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let metrics = Metrics::default();
+        let none: Option<i32> = tree_merge(Vec::<i32>::new(), &metrics, |_, _| Ok(())).unwrap();
+        assert!(none.is_none());
+        let one = tree_merge(vec![42], &metrics, |_, _| Ok(())).unwrap();
+        assert_eq!(one, Some(42));
+        assert_eq!(metrics.merges(), 0);
+    }
+
+    #[test]
+    fn merge_errors_propagate() {
+        let metrics = Metrics::default();
+        let r = tree_merge(vec![1, 2], &metrics, |_, _| {
+            Err(crate::error::Error::Incompatible("nope".into()))
+        });
+        assert!(r.is_err());
+    }
+}

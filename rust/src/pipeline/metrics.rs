@@ -1,0 +1,120 @@
+//! Pipeline run metrics: lock-free counters shared between the router,
+//! workers and the leader. Reported by the launcher and the benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Counters for one pipeline run.
+#[derive(Debug)]
+pub struct Metrics {
+    elements: AtomicU64,
+    batches: AtomicU64,
+    stalls: AtomicU64,
+    merges: AtomicU64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            elements: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            merges: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    /// Record a processed batch of `n` elements.
+    pub fn note_batch(&self, n: u64) {
+        self.elements.fetch_add(n, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a backpressure stall (router blocked on a full channel).
+    pub fn note_stall(&self) {
+        self.stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a sketch merge.
+    pub fn note_merge(&self) {
+        self.merges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total elements processed by workers.
+    pub fn elements(&self) -> u64 {
+        self.elements.load(Ordering::Relaxed)
+    }
+
+    /// Total batches processed.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Backpressure stalls observed by the router.
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Merges performed.
+    pub fn merges(&self) -> u64 {
+        self.merges.load(Ordering::Relaxed)
+    }
+
+    /// Wall-clock since construction.
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.started.elapsed()
+    }
+
+    /// Elements per second over the run so far.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.elements() as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "elements={} batches={} stalls={} merges={} elapsed={:.3}s throughput={:.2}M/s",
+            self.elements(),
+            self.batches(),
+            self.stalls(),
+            self.merges(),
+            self.elapsed().as_secs_f64(),
+            self.throughput() / 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.note_batch(10);
+        m.note_batch(5);
+        m.note_stall();
+        m.note_merge();
+        assert_eq!(m.elements(), 15);
+        assert_eq!(m.batches(), 2);
+        assert_eq!(m.stalls(), 1);
+        assert_eq!(m.merges(), 1);
+        assert!(m.report().contains("elements=15"));
+    }
+
+    #[test]
+    fn throughput_positive_after_work() {
+        let m = Metrics::default();
+        m.note_batch(1000);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(m.throughput() > 0.0);
+    }
+}

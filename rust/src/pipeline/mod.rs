@@ -1,0 +1,233 @@
+//! The L3 streaming pipeline: sharded workers over an unaggregated
+//! element stream, composable-sketch merging, and explicit backpressure.
+//!
+//! Topology (DESIGN.md §4):
+//!
+//! ```text
+//! source ──router (hash shard)──▶ worker 0 ─┐
+//!        ──bounded channels─────▶ worker 1 ─┼─▶ merge tree ─▶ leader
+//!        (backpressure)          ...        ─┘   (composable sketches)
+//! ```
+//!
+//! Workers own shard-local state (a pass-I WORp sketch, a pass-II
+//! collector, or any [`ShardSink`]); the leader merges the per-shard
+//! summaries — correctness rests exactly on the paper's composability
+//! property, which the worp1/worp2 merge tests verify.
+
+pub mod merge;
+pub mod metrics;
+pub mod shard;
+pub mod spool;
+
+use crate::data::Element;
+use crate::error::{Error, Result};
+use metrics::Metrics;
+use shard::Router;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+/// Shard-local consumer state. Implementations must be `Send` — each
+/// instance lives on its own worker thread.
+pub trait ShardSink: Send + 'static {
+    /// Process one element routed to this shard.
+    fn process(&mut self, e: &Element);
+}
+
+impl<F: FnMut(&Element) + Send + 'static> ShardSink for F {
+    fn process(&mut self, e: &Element) {
+        self(e)
+    }
+}
+
+/// Pipeline configuration (subset of [`crate::config::PipelineConfig`]
+/// relevant to the execution topology).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineOpts {
+    /// Number of shard workers.
+    pub workers: usize,
+    /// Elements per micro-batch on the worker channels.
+    pub batch: usize,
+    /// Channel capacity in batches (the backpressure window).
+    pub channel_cap: usize,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts { workers: 4, batch: 4096, channel_cap: 16 }
+    }
+}
+
+impl PipelineOpts {
+    /// Validated constructor.
+    pub fn new(workers: usize, batch: usize, channel_cap: usize) -> Result<Self> {
+        if workers == 0 || batch == 0 || channel_cap == 0 {
+            return Err(Error::Pipeline(
+                "workers, batch and channel_cap must be positive".into(),
+            ));
+        }
+        Ok(PipelineOpts { workers, batch, channel_cap })
+    }
+}
+
+/// Run a sharded pipeline: route `stream` across `opts.workers` workers,
+/// each owning the state built by `make(shard_idx)`; returns the
+/// per-shard states (in shard order) and the run metrics.
+///
+/// Routing is by stable key hash, so *all elements of a key land on the
+/// same shard* — required for SpaceSaving/TopK composability and good for
+/// locality; the hashed-array sketches are insensitive to the split.
+pub fn run_sharded<S, F, I>(stream: I, opts: PipelineOpts, make: F) -> Result<(Vec<S>, Arc<Metrics>)>
+where
+    S: ShardSink,
+    F: Fn(usize) -> S,
+    I: IntoIterator<Item = Element>,
+{
+    let metrics = Arc::new(Metrics::default());
+    let router = Router::new(opts.workers);
+
+    let mut senders: Vec<SyncSender<Vec<Element>>> = Vec::with_capacity(opts.workers);
+    let mut handles = Vec::with_capacity(opts.workers);
+    for w in 0..opts.workers {
+        let (tx, rx): (SyncSender<Vec<Element>>, Receiver<Vec<Element>>) =
+            sync_channel(opts.channel_cap);
+        senders.push(tx);
+        let mut state = make(w);
+        let m = Arc::clone(&metrics);
+        handles.push(std::thread::spawn(move || {
+            for batch in rx {
+                for e in &batch {
+                    state.process(e);
+                }
+                m.note_batch(batch.len() as u64);
+            }
+            state
+        }));
+    }
+
+    // router loop on the caller thread
+    let mut buffers: Vec<Vec<Element>> = (0..opts.workers)
+        .map(|_| Vec::with_capacity(opts.batch))
+        .collect();
+    for e in stream {
+        let w = router.route(e.key);
+        buffers[w].push(e);
+        if buffers[w].len() == opts.batch {
+            let full = std::mem::replace(&mut buffers[w], Vec::with_capacity(opts.batch));
+            send_with_backpressure(&senders[w], full, &metrics)?;
+        }
+    }
+    for (w, buf) in buffers.into_iter().enumerate() {
+        if !buf.is_empty() {
+            send_with_backpressure(&senders[w], buf, &metrics)?;
+        }
+    }
+    drop(senders);
+
+    let mut states = Vec::with_capacity(opts.workers);
+    for h in handles {
+        states.push(
+            h.join()
+                .map_err(|_| Error::Pipeline("worker panicked".into()))?,
+        );
+    }
+    Ok((states, metrics))
+}
+
+fn send_with_backpressure(
+    tx: &SyncSender<Vec<Element>>,
+    batch: Vec<Element>,
+    metrics: &Metrics,
+) -> Result<()> {
+    // try_send first so we can count stalls (backpressure events)
+    match tx.try_send(batch) {
+        Ok(()) => Ok(()),
+        Err(std::sync::mpsc::TrySendError::Full(batch)) => {
+            metrics.note_stall();
+            tx.send(batch)
+                .map_err(|_| Error::Pipeline("worker channel closed".into()))
+        }
+        Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+            Err(Error::Pipeline("worker channel closed".into()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::ZipfStream;
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    #[test]
+    fn all_elements_processed_exactly_once() {
+        let n = 100_000u64;
+        let stream = ZipfStream::new(1000, 1.0, n, 3);
+        let opts = PipelineOpts::new(4, 512, 4).unwrap();
+        let counted = Arc::new(Mutex::new(0u64));
+        let c2 = Arc::clone(&counted);
+        let (_, metrics) = run_sharded(stream, opts, move |_| {
+            let c = Arc::clone(&c2);
+            move |_e: &Element| {
+                *c.lock().unwrap() += 1;
+            }
+        })
+        .unwrap();
+        assert_eq!(metrics.elements(), n);
+        assert_eq!(*counted.lock().unwrap(), n);
+        assert!(metrics.batches() >= n / 512);
+    }
+
+    /// A sink that records per-key sums (for routing-invariance tests).
+    struct MapSink {
+        sums: HashMap<u64, f64>,
+    }
+
+    impl ShardSink for MapSink {
+        fn process(&mut self, e: &Element) {
+            *self.sums.entry(e.key).or_insert(0.0) += e.val;
+        }
+    }
+
+    #[test]
+    fn key_routing_is_consistent_and_partitioned() {
+        let stream: Vec<Element> = ZipfStream::new(200, 1.0, 20_000, 7).collect();
+        let truth = crate::data::aggregate(stream.clone());
+        let opts = PipelineOpts::new(3, 128, 4).unwrap();
+        let (states, _) = run_sharded(stream, opts, |_| MapSink { sums: HashMap::new() })
+            .unwrap();
+        // every key appears on exactly one shard, with its exact total
+        let mut seen: HashMap<u64, f64> = HashMap::new();
+        for s in &states {
+            for (&k, &v) in &s.sums {
+                assert!(!seen.contains_key(&k), "key {k} on two shards");
+                seen.insert(k, v);
+            }
+        }
+        assert_eq!(seen.len(), truth.len());
+        for (k, v) in truth {
+            assert!((seen[&k] - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn backpressure_counted_with_tiny_channel() {
+        // slow worker + capacity-1 channel => the router must stall
+        let stream: Vec<Element> = (0..20_000).map(|i| Element::new(i % 16, 1.0)).collect();
+        let opts = PipelineOpts::new(1, 64, 1).unwrap();
+        let (_, metrics) = run_sharded(stream, opts, |_| {
+            |_e: &Element| {
+                std::hint::black_box((0..50).sum::<u64>());
+            }
+        })
+        .unwrap();
+        assert!(metrics.stalls() > 0, "expected backpressure stalls");
+    }
+
+    #[test]
+    fn invalid_opts_rejected() {
+        assert!(PipelineOpts::new(0, 1, 1).is_err());
+        assert!(PipelineOpts::new(1, 0, 1).is_err());
+        assert!(PipelineOpts::new(1, 1, 0).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Key→shard routing. Stable hash routing keeps each key on one worker
+//! (required by the counter/top-k structures; harmless for hashed-array
+//! sketches) and supports rebalancing to a different worker count via
+//! deterministic re-hash.
+
+use crate::util::hashing::hash64;
+
+/// Stable hash router over `n` shards.
+#[derive(Clone, Debug)]
+pub struct Router {
+    n: usize,
+    seed: u64,
+}
+
+impl Router {
+    /// Router over `n` shards with the default routing seed.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Router { n, seed: 0x5A4D_0C95 }
+    }
+
+    /// Router with an explicit seed (rebalancing epochs use new seeds).
+    pub fn with_seed(n: usize, seed: u64) -> Self {
+        assert!(n > 0);
+        Router { n, seed }
+    }
+
+    /// Shard of a key.
+    #[inline]
+    pub fn route(&self, key: u64) -> usize {
+        (((hash64(self.seed, key) as u128) * (self.n as u128)) >> 64) as usize
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.n
+    }
+
+    /// Expected fraction of keys that move when resizing `self.n → m`
+    /// with plain range-partition re-hash (reported by rebalancing
+    /// diagnostics; multiply-shift keeps moves ≈ |1 − n/m| of keys when
+    /// growing).
+    pub fn resize_move_fraction(&self, m: usize) -> f64 {
+        if m == self.n {
+            0.0
+        } else if m > self.n {
+            1.0 - self.n as f64 / m as f64
+        } else {
+            1.0 - m as f64 / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_stable_and_in_range() {
+        let r = Router::new(7);
+        for k in 0..10_000u64 {
+            let s = r.route(k);
+            assert!(s < 7);
+            assert_eq!(s, r.route(k));
+        }
+    }
+
+    #[test]
+    fn routing_balanced() {
+        let r = Router::new(8);
+        let mut counts = [0u32; 8];
+        for k in 0..80_000u64 {
+            counts[r.route(k)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_route_differently() {
+        let a = Router::with_seed(4, 1);
+        let b = Router::with_seed(4, 2);
+        let moved = (0..1000u64).filter(|&k| a.route(k) != b.route(k)).count();
+        assert!(moved > 500);
+    }
+
+    #[test]
+    fn move_fraction_monotone() {
+        let r = Router::new(4);
+        assert_eq!(r.resize_move_fraction(4), 0.0);
+        assert!((r.resize_move_fraction(8) - 0.5).abs() < 1e-12);
+        assert!((r.resize_move_fraction(2) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,167 @@
+//! Disk-spooled stream source: two-pass methods must replay the stream,
+//! but materializing it in memory defeats the point of sketching for
+//! large inputs. `SpoolSource` writes elements to a binary temp file
+//! (16 bytes per element) on the first pass and replays from disk on the
+//! second — constant memory, sequential I/O.
+
+use crate::coordinator::StreamSource;
+use crate::data::Element;
+use crate::error::Result;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::PathBuf;
+
+/// A stream spooled to a binary file.
+pub struct SpoolSource {
+    path: PathBuf,
+    len: u64,
+    /// Remove the file on drop (off for user-provided paths).
+    owned: bool,
+}
+
+impl SpoolSource {
+    /// Spool an element stream into `dir` (created if needed); returns the
+    /// replayable source.
+    pub fn create<I: IntoIterator<Item = Element>>(
+        dir: &std::path::Path,
+        stream: I,
+    ) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!(
+            "worp-spool-{}-{}.bin",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos())
+                .unwrap_or(0)
+        ));
+        let mut w = BufWriter::new(File::create(&path)?);
+        let mut len = 0u64;
+        for e in stream {
+            w.write_all(&e.key.to_le_bytes())?;
+            w.write_all(&e.val.to_le_bytes())?;
+            len += 1;
+        }
+        w.flush()?;
+        Ok(SpoolSource { path, len, owned: true })
+    }
+
+    /// Number of spooled elements.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// True when no elements were spooled.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// On-disk size in bytes.
+    pub fn bytes(&self) -> u64 {
+        16 * self.len
+    }
+
+    /// Path of the spool file.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for SpoolSource {
+    fn drop(&mut self) {
+        if self.owned {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Iterator over a spool file.
+pub struct SpoolIter {
+    reader: BufReader<File>,
+    remaining: u64,
+}
+
+impl Iterator for SpoolIter {
+    type Item = Element;
+
+    fn next(&mut self) -> Option<Element> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let mut kb = [0u8; 8];
+        let mut vb = [0u8; 8];
+        self.reader.read_exact(&mut kb).ok()?;
+        self.reader.read_exact(&mut vb).ok()?;
+        self.remaining -= 1;
+        Some(Element::new(u64::from_le_bytes(kb), f64::from_le_bytes(vb)))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining as usize, Some(self.remaining as usize))
+    }
+}
+
+impl StreamSource for SpoolSource {
+    fn stream(&self) -> Box<dyn Iterator<Item = Element> + Send + '_> {
+        let file = File::open(&self.path).expect("spool file vanished");
+        Box::new(SpoolIter { reader: BufReader::new(file), remaining: self.len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::ZipfStream;
+
+    fn tmp() -> PathBuf {
+        std::env::temp_dir().join("worp_spool_tests")
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let elems: Vec<Element> = ZipfStream::new(100, 1.0, 10_000, 3).collect();
+        let spool = SpoolSource::create(&tmp(), elems.iter().copied()).unwrap();
+        assert_eq!(spool.len(), 10_000);
+        assert_eq!(spool.bytes(), 160_000);
+        let replay: Vec<Element> = spool.stream().collect();
+        assert_eq!(replay, elems);
+        // second replay identical (replayable contract)
+        let replay2: Vec<Element> = spool.stream().collect();
+        assert_eq!(replay2, elems);
+    }
+
+    #[test]
+    fn file_removed_on_drop() {
+        let spool = SpoolSource::create(&tmp(), vec![Element::new(1, 2.0)]).unwrap();
+        let path = spool.path().to_path_buf();
+        assert!(path.exists());
+        drop(spool);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn two_pass_over_spool_matches_vec_source() {
+        use crate::coordinator::{Coordinator, VecSource};
+        use crate::pipeline::PipelineOpts;
+        use crate::sampler::SamplerConfig;
+
+        let elems: Vec<Element> =
+            crate::data::zipf::zipf_exact_stream(300, 1.3, 1e4, 2, 9);
+        let spool = SpoolSource::create(&tmp(), elems.iter().copied()).unwrap();
+        let cfg = SamplerConfig::new(1.0, 12)
+            .with_seed(5)
+            .with_domain(300)
+            .with_sketch_shape(7, 1024);
+        let c = Coordinator::new(cfg, PipelineOpts::new(2, 128, 4).unwrap());
+        let (a, _) = c.two_pass(&spool).unwrap();
+        let (b, _) = c.two_pass(&VecSource(elems)).unwrap();
+        assert_eq!(a.keys(), b.keys());
+    }
+
+    #[test]
+    fn empty_spool() {
+        let spool = SpoolSource::create(&tmp(), Vec::<Element>::new()).unwrap();
+        assert!(spool.is_empty());
+        assert_eq!(spool.stream().count(), 0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Ψ calibration — paper Appendix B.1.
+//!
+//! `Ψ_{n,k,ρ}(δ)` (Eq. 9) is the largest rHH parameter ψ such that for
+//! *any* input frequencies and any conditioned order, the top-k transformed
+//! frequencies are `ℓq(k, ψ)` residual heavy hitters with probability
+//! ≥ 1−δ. By the domination result (Lemma C.1) it suffices to bound the
+//! tail of
+//!
+//! ```text
+//! R_{n,k,ρ} = Σ_{i=k+1}^{n} (Σ_{j≤k} Z_j)^ρ / (Σ_{j≤i} Z_j)^ρ,  Z ~ Exp[1]
+//! ```
+//!
+//! and `Ψ(δ)` solves `Pr[R ≥ k/ψ] = δ`: simulate i.i.d. draws of `R`, take
+//! the (1−δ)-quantile `z'`, return `k/z'`.
+//!
+//! Theorem 3.1 lower bounds: `Ψ ≥ 1/(C ln(n/k))` for ρ=1 and
+//! `Ψ ≥ max{ρ−1, 1/ln(n/k)}/C` for ρ>1, with C < 2 empirically for
+//! δ=0.01, k ≥ 10 (the `psi_calibration` bench reproduces this).
+
+use crate::util::rng::Rng;
+use crate::util::stats::quantile;
+
+/// Draw one sample of `R_{n,k,ρ}` (Definition B.1).
+///
+/// Uses the prefix-sum form: with `S_i = Σ_{j≤i} Z_j`,
+/// `R = S_k^ρ · Σ_{i=k+1}^n S_i^{-ρ}`.
+pub fn sample_r(rng: &mut Rng, n: usize, k: usize, rho: f64) -> f64 {
+    assert!(k >= 1 && n > k, "need 1 <= k < n");
+    let mut s = 0.0;
+    for _ in 0..k {
+        s += rng.exp1();
+    }
+    let sk = s;
+    let log_sk = sk.ln();
+    let mut total = 0.0;
+    for _ in k..n {
+        s += rng.exp1();
+        // (sk / s)^rho via exp/ln for stability at large rho
+        total += (rho * (log_sk - s.ln())).exp();
+    }
+    total
+}
+
+/// Monte-Carlo estimate of `Ψ_{n,k,ρ}(δ)` from `trials` i.i.d. draws of
+/// `R_{n,k,ρ}` (Appendix B.1): `Ψ ≈ k / quantile_{1−δ}(R)`.
+pub fn psi_estimate(n: usize, k: usize, rho: f64, delta: f64, trials: usize, seed: u64) -> f64 {
+    assert!(delta > 0.0 && delta < 1.0);
+    assert!(trials >= 10);
+    let mut rng = Rng::new(seed);
+    let draws: Vec<f64> = (0..trials).map(|_| sample_r(&mut rng, n, k, rho)).collect();
+    let z = quantile(&draws, 1.0 - delta);
+    k as f64 / z
+}
+
+/// The Theorem 3.1 analytic lower bound with constant `c`.
+pub fn psi_lower_bound(n: usize, k: usize, rho: f64, c: f64) -> f64 {
+    let ln_nk = ((n as f64) / (k as f64)).ln().max(1.0);
+    if rho <= 1.0 {
+        1.0 / (c * ln_nk)
+    } else {
+        (rho - 1.0).max(1.0 / ln_nk) / c
+    }
+}
+
+/// A process-wide cache of calibrated Ψ values so repeated sampler
+/// construction does not redo the Monte-Carlo (keys are rounded params).
+#[derive(Default)]
+pub struct PsiCache {
+    map: std::sync::Mutex<std::collections::HashMap<(usize, usize, u64, u64), f64>>,
+}
+
+impl PsiCache {
+    /// Shared global cache.
+    pub fn global() -> &'static PsiCache {
+        static CACHE: once_cell::sync::Lazy<PsiCache> = once_cell::sync::Lazy::new(PsiCache::default);
+        &CACHE
+    }
+
+    /// Get (or compute) `Ψ_{n,k,ρ}(δ)` with a default trial budget.
+    pub fn get(&self, n: usize, k: usize, rho: f64, delta: f64) -> f64 {
+        let key = (n, k, (rho * 1e6) as u64, (delta * 1e9) as u64);
+        if let Some(v) = self.map.lock().unwrap().get(&key) {
+            return *v;
+        }
+        // trials scale with 1/delta so the quantile is resolved
+        let trials = ((10.0 / delta) as usize).clamp(1_000, 20_000);
+        let v = psi_estimate(n, k, rho, delta, trials, 0x9_51_C0DE);
+        self.map.lock().unwrap().insert(key, v);
+        v
+    }
+}
+
+/// Derived sketch parameter `ψ` for WORp given sampler settings
+/// (paper §4: `ψ ← Ψ_{n,k,ρ}(δ) / (3q)` for the 2-pass method, §5:
+/// `ψ ← ε^q Ψ_{n,k+1,ρ}` for 1-pass).
+pub fn worp_psi_two_pass(n: usize, k: usize, p: f64, q: f64, delta: f64) -> f64 {
+    let rho = q / p;
+    PsiCache::global().get(n, k + 1, rho, delta) / (3.0 * q)
+}
+
+/// 1-pass ψ with accuracy parameter ε ∈ (0, 1/3].
+pub fn worp_psi_one_pass(n: usize, k: usize, p: f64, q: f64, delta: f64, eps: f64) -> f64 {
+    assert!(eps > 0.0 && eps <= 1.0 / 3.0 + 1e-12);
+    let rho = q / p;
+    eps.powf(q) * PsiCache::global().get(n, k + 1, rho, delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_r_positive_and_finite() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let r = sample_r(&mut rng, 1000, 10, 2.0);
+            assert!(r.is_finite() && r > 0.0);
+        }
+    }
+
+    #[test]
+    fn r_mean_close_to_back_of_envelope_rho2() {
+        // S_{n,k,2} ≈ k for rho=2 (sum k^2/i^2 ≈ k); empirical mean should
+        // be within a factor ~1.5
+        let mut rng = Rng::new(2);
+        let (n, k) = (2000, 50);
+        let m: f64 = (0..300).map(|_| sample_r(&mut rng, n, k, 2.0)).sum::<f64>() / 300.0;
+        assert!(m > 0.4 * k as f64 && m < 2.5 * k as f64, "mean={m}");
+    }
+
+    #[test]
+    fn r_grows_like_k_log_for_rho1() {
+        let mut rng = Rng::new(3);
+        let (n, k) = (10_000, 20);
+        let m: f64 = (0..200).map(|_| sample_r(&mut rng, n, k, 1.0)).sum::<f64>() / 200.0;
+        let pred = k as f64 * ((n as f64 / k as f64).ln());
+        assert!(m > 0.5 * pred && m < 2.0 * pred, "mean={m} pred={pred}");
+    }
+
+    #[test]
+    fn psi_estimate_in_theorem_band() {
+        // paper App B.1: C = 2 suffices for delta=0.01, k >= 10
+        for &rho in &[1.0, 2.0] {
+            let psi = psi_estimate(10_000, 100, rho, 0.01, 4_000, 7);
+            let lb = psi_lower_bound(10_000, 100, rho, 2.0);
+            assert!(psi >= lb, "rho={rho}: psi={psi} < lb={lb}");
+            assert!(psi <= 1.0, "psi={psi} should be <= 1");
+        }
+    }
+
+    #[test]
+    fn psi_decreasing_in_n_increasing_in_k_for_rho1() {
+        let p_small_n = psi_estimate(1_000, 50, 1.0, 0.05, 2_000, 5);
+        let p_large_n = psi_estimate(100_000, 50, 1.0, 0.05, 2_000, 5);
+        assert!(p_large_n < p_small_n);
+    }
+
+    #[test]
+    fn cache_returns_stable_values() {
+        let c = PsiCache::global();
+        let a = c.get(5_000, 64, 2.0, 0.01);
+        let b = c.get(5_000, 64, 2.0, 0.01);
+        assert_eq!(a, b);
+        assert!(a > 0.0 && a < 2.0);
+    }
+
+    #[test]
+    fn derived_psis_scale_correctly() {
+        let two = worp_psi_two_pass(10_000, 100, 1.0, 2.0, 0.01);
+        let one_coarse = worp_psi_one_pass(10_000, 100, 1.0, 2.0, 0.01, 1.0 / 3.0);
+        let one_fine = worp_psi_one_pass(10_000, 100, 1.0, 2.0, 0.01, 0.1);
+        assert!(one_fine < one_coarse, "smaller eps -> smaller psi -> bigger sketch");
+        assert!(two > 0.0 && one_coarse > 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Artifact discovery: locate AOT outputs and read the manifest written by
+//! `python/compile/aot.py`.
+//!
+//! The manifest (`artifacts/manifest.txt`) uses the same TOML subset as
+//! the config system: one section per kernel with its lowered shapes, e.g.
+//!
+//! ```toml
+//! [countsketch_update]
+//! file = "countsketch_update_r5_w1024_b4096.hlo.txt"
+//! rows = 5
+//! width = 1024
+//! batch = 4096
+//! ```
+
+use crate::config::Document;
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Description of one compiled kernel artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// Kernel name (manifest section).
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: PathBuf,
+    /// Sketch rows baked into the artifact.
+    pub rows: usize,
+    /// Sketch width baked into the artifact.
+    pub width: usize,
+    /// Micro-batch size baked into the artifact.
+    pub batch: usize,
+}
+
+/// The artifacts directory and its manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactDir {
+    /// Open `dir` and parse `manifest.txt`.
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        if !manifest.exists() {
+            return Err(Error::Runtime(format!(
+                "no manifest at {manifest:?} — run `make artifacts` first"
+            )));
+        }
+        let doc = Document::load(&manifest)?;
+        let mut specs = Vec::new();
+        for name in known_kernels() {
+            if let Some(v) = doc.get(name, "file") {
+                let file = v
+                    .as_str()
+                    .ok_or_else(|| Error::Runtime(format!("manifest [{name}] file not a string")))?;
+                specs.push(ArtifactSpec {
+                    name: name.to_string(),
+                    file: PathBuf::from(file),
+                    rows: doc.usize_or(name, "rows", 0),
+                    width: doc.usize_or(name, "width", 0),
+                    batch: doc.usize_or(name, "batch", 0),
+                });
+            }
+        }
+        Ok(ArtifactDir { dir, specs })
+    }
+
+    /// Check whether an artifacts dir looks usable without opening it.
+    pub fn exists<P: AsRef<Path>>(dir: P) -> bool {
+        dir.as_ref().join("manifest.txt").exists()
+    }
+
+    /// All kernels in the manifest.
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Find a kernel by name.
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| Error::Runtime(format!("kernel {name:?} not in manifest")))
+    }
+
+    /// Absolute path of a spec's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+/// Kernel names the runtime knows how to drive.
+pub fn known_kernels() -> &'static [&'static str] {
+    &[
+        "countsketch_update",
+        "countsketch_estimate",
+        "ppswor_transform_update",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_sections() {
+        let dir = std::env::temp_dir().join("worp_artifact_test1");
+        write_manifest(
+            &dir,
+            r#"
+[countsketch_update]
+file = "cs_update.hlo.txt"
+rows = 5
+width = 256
+batch = 1024
+
+[countsketch_estimate]
+file = "cs_est.hlo.txt"
+rows = 5
+width = 256
+batch = 64
+"#,
+        );
+        let a = ArtifactDir::open(&dir).unwrap();
+        assert_eq!(a.specs().len(), 2);
+        let u = a.find("countsketch_update").unwrap();
+        assert_eq!(u.rows, 5);
+        assert_eq!(u.batch, 1024);
+        assert!(a.path_of(u).ends_with("cs_update.hlo.txt"));
+        assert!(a.find("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable_error() {
+        let dir = std::env::temp_dir().join("worp_artifact_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = ArtifactDir::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+        assert!(!ArtifactDir::exists(&dir));
+    }
+}

@@ -1,0 +1,240 @@
+//! Compiled-kernel executors: the XLA-offloaded CountSketch backend.
+//!
+//! [`XlaCountSketch`] mirrors the native [`crate::sketch::countsketch::CountSketch`]
+//! but performs the table update on the PJRT client by executing the
+//! AOT-lowered Pallas kernel (`countsketch_update`). Hashing stays in rust
+//! (single source of randomness — DESIGN.md §4): per element we compute
+//! the per-row `(bucket, sign·value)` coordinates and buffer them; a full
+//! micro-batch executes one kernel call
+//!
+//! ```text
+//! sketch[R,W] , bucket[R,B] i32 , signval[R,B] f32  ->  sketch'[R,W]
+//! ```
+//!
+//! Partial batches are padded with `signval = 0` (a no-op contribution).
+
+use super::artifact::{ArtifactDir, ArtifactSpec};
+use super::XlaRuntime;
+use crate::data::Element;
+use crate::error::{Error, Result};
+use crate::util::hashing::SketchHasher;
+
+/// A compiled `countsketch_update` executable plus its staging buffers.
+pub struct XlaCountSketch {
+    exe: xla::PjRtLoadedExecutable,
+    hasher: SketchHasher,
+    rows: usize,
+    width: usize,
+    batch: usize,
+    /// Current sketch table, row-major `rows × width` (f32 on device).
+    table: Vec<f32>,
+    /// Staged bucket indices, `rows × batch`.
+    buckets: Vec<i32>,
+    /// Staged sign·value entries, `rows × batch`.
+    signvals: Vec<f32>,
+    /// Number of staged elements (< batch).
+    staged: usize,
+    /// Elements processed (including staged).
+    processed: u64,
+    /// Kernel invocations so far.
+    pub kernel_calls: u64,
+}
+
+impl XlaCountSketch {
+    /// Load the `countsketch_update` artifact from `dir` and build an
+    /// empty sketch with the artifact's baked shape. `seed` must match the
+    /// native sketch it is compared against.
+    pub fn load(rt: &XlaRuntime, dir: &ArtifactDir, seed: u64) -> Result<Self> {
+        let spec = dir.find("countsketch_update")?.clone();
+        Self::from_spec(rt, dir, &spec, seed)
+    }
+
+    /// Build from an explicit artifact spec.
+    pub fn from_spec(
+        rt: &XlaRuntime,
+        dir: &ArtifactDir,
+        spec: &ArtifactSpec,
+        seed: u64,
+    ) -> Result<Self> {
+        if spec.rows == 0 || spec.width == 0 || spec.batch == 0 {
+            return Err(Error::Runtime(format!(
+                "artifact {} has incomplete shape metadata",
+                spec.name
+            )));
+        }
+        let exe = rt.compile_hlo_text(&dir.path_of(spec))?;
+        Ok(XlaCountSketch {
+            exe,
+            hasher: SketchHasher::new(seed, spec.width),
+            rows: spec.rows,
+            width: spec.width,
+            batch: spec.batch,
+            table: vec![0.0; spec.rows * spec.width],
+            buckets: vec![0; spec.rows * spec.batch],
+            signvals: vec![0.0; spec.rows * spec.batch],
+            staged: 0,
+            processed: 0,
+            kernel_calls: 0,
+        })
+    }
+
+    /// Sketch shape `(rows, width)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.width)
+    }
+
+    /// Micro-batch size baked into the artifact.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Stage one element; executes the kernel when the batch fills.
+    pub fn process(&mut self, e: &Element) -> Result<()> {
+        let b = self.staged;
+        for r in 0..self.rows {
+            self.buckets[r * self.batch + b] = self.hasher.bucket(r, e.key) as i32;
+            self.signvals[r * self.batch + b] =
+                (self.hasher.sign(r, e.key) * e.val) as f32;
+        }
+        self.staged += 1;
+        self.processed += 1;
+        if self.staged == self.batch {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Execute the kernel on the staged (possibly partial, zero-padded)
+    /// batch and fold the result into the table.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.staged == 0 {
+            return Ok(());
+        }
+        // zero-pad the rest of the batch
+        for r in 0..self.rows {
+            for b in self.staged..self.batch {
+                self.buckets[r * self.batch + b] = 0;
+                self.signvals[r * self.batch + b] = 0.0;
+            }
+        }
+        let sketch = xla::Literal::vec1(&self.table)
+            .reshape(&[self.rows as i64, self.width as i64])
+            .map_err(wrap)?;
+        let buckets = xla::Literal::vec1(&self.buckets)
+            .reshape(&[self.rows as i64, self.batch as i64])
+            .map_err(wrap)?;
+        let signvals = xla::Literal::vec1(&self.signvals)
+            .reshape(&[self.rows as i64, self.batch as i64])
+            .map_err(wrap)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[sketch, buckets, signvals])
+            .map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let out = result.to_tuple1().map_err(wrap)?;
+        self.table = out.to_vec::<f32>().map_err(wrap)?;
+        self.staged = 0;
+        self.kernel_calls += 1;
+        Ok(())
+    }
+
+    /// Median-of-rows estimate (computed natively over the table — the
+    /// update is the hot path worth offloading; see also the
+    /// `countsketch_estimate` artifact exercised in the benches).
+    pub fn est(&self, key: u64) -> f64 {
+        let mut vals: Vec<f32> = (0..self.rows)
+            .map(|r| {
+                let b = self.hasher.bucket(r, key);
+                (self.hasher.sign(r, key) as f32) * self.table[r * self.width + b]
+            })
+            .collect();
+        let mid = vals.len() / 2;
+        vals.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        vals[mid] as f64
+    }
+
+    /// Current table (row-major f32).
+    pub fn table(&self) -> &[f32] {
+        &self.table
+    }
+}
+
+fn wrap<E: std::fmt::Display>(e: E) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A compiled `countsketch_estimate` executor: batched key estimates,
+/// used by benches to demonstrate the full offload of the read path.
+pub struct XlaEstimator {
+    exe: xla::PjRtLoadedExecutable,
+    hasher: SketchHasher,
+    rows: usize,
+    width: usize,
+    batch: usize,
+}
+
+impl XlaEstimator {
+    /// Load `countsketch_estimate` from `dir`.
+    pub fn load(rt: &XlaRuntime, dir: &ArtifactDir, seed: u64) -> Result<Self> {
+        let spec = dir.find("countsketch_estimate")?.clone();
+        let exe = rt.compile_hlo_text(&dir.path_of(&spec))?;
+        Ok(XlaEstimator {
+            exe,
+            hasher: SketchHasher::new(seed, spec.width),
+            rows: spec.rows,
+            width: spec.width,
+            batch: spec.batch,
+        })
+    }
+
+    /// Batch size baked into the artifact.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Estimate a batch of keys (≤ batch size) against a sketch table.
+    pub fn estimate(&self, table: &[f32], keys: &[u64]) -> Result<Vec<f64>> {
+        if keys.len() > self.batch {
+            return Err(Error::Runtime(format!(
+                "estimate batch {} exceeds artifact batch {}",
+                keys.len(),
+                self.batch
+            )));
+        }
+        let mut buckets = vec![0i32; self.rows * self.batch];
+        let mut signs = vec![0.0f32; self.rows * self.batch];
+        for (i, &k) in keys.iter().enumerate() {
+            for r in 0..self.rows {
+                buckets[r * self.batch + i] = self.hasher.bucket(r, k) as i32;
+                signs[r * self.batch + i] = self.hasher.sign(r, k) as f32;
+            }
+        }
+        let sketch = xla::Literal::vec1(table)
+            .reshape(&[self.rows as i64, self.width as i64])
+            .map_err(wrap)?;
+        let b = xla::Literal::vec1(&buckets)
+            .reshape(&[self.rows as i64, self.batch as i64])
+            .map_err(wrap)?;
+        let s = xla::Literal::vec1(&signs)
+            .reshape(&[self.rows as i64, self.batch as i64])
+            .map_err(wrap)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[sketch, b, s])
+            .map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let out = result.to_tuple1().map_err(wrap)?;
+        let ests: Vec<f32> = out.to_vec::<f32>().map_err(wrap)?;
+        Ok(ests[..keys.len()].iter().map(|&v| v as f64).collect())
+    }
+}
+
+// Integration tests live in rust/tests/xla_runtime.rs (they require
+// `make artifacts` to have run).

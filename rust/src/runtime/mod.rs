@@ -1,0 +1,74 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced by `make artifacts` →
+//! `python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! Interchange format is **HLO text** — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Python never runs at
+//! request time: artifacts are compiled once here and executed per
+//! micro-batch.
+
+pub mod artifact;
+pub mod executor;
+
+use crate::error::{Error, Result};
+
+/// A process-wide PJRT CPU client (compilation is cached per executable,
+/// the client itself is shared).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(XlaRuntime { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it on this client.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {path:?}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+        assert!(rt.device_count() >= 1);
+        let p = rt.platform().to_lowercase();
+        assert!(p.contains("cpu") || p.contains("host"), "platform={p}");
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = XlaRuntime::cpu().unwrap();
+        match rt.compile_hlo_text(std::path::Path::new("/nonexistent/x.hlo.txt")) {
+            Err(err) => assert!(err.to_string().contains("runtime error")),
+            Ok(_) => panic!("expected an error for a missing artifact"),
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Samplers: perfect baselines (ppswor / priority / WR over aggregated
+//! data) and the paper's streaming contributions (1-pass WORp, 2-pass
+//! WORp, and the low-TV-distance Algorithm 1).
+//!
+//! All WOR samplers produce a [`Sample`]: up to `k` keys with (exact or
+//! approximate) input frequencies, the transformed frequencies used for
+//! ranking, and the threshold `τ` — everything the inverse-probability
+//! estimators of [`crate::estimate`] need.
+
+pub mod perfect_lp;
+pub mod ppswor;
+pub mod priority;
+pub mod tv1pass;
+pub mod windowed;
+pub mod worp1;
+pub mod worp2;
+pub mod worp_strings;
+pub mod wr;
+
+use crate::util::hashing::BottomKDist;
+
+/// One sampled key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleEntry {
+    /// Key id.
+    pub key: u64,
+    /// Input-domain frequency `ν_x` (exact for 2-pass / perfect samplers,
+    /// approximate `ν'_x` for 1-pass WORp).
+    pub freq: f64,
+    /// Transformed frequency `ν*_x = ν_x · r_x^{-1/p}` used for ranking.
+    pub transformed: f64,
+}
+
+/// A without-replacement bottom-k sample with its threshold.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Sampled entries, sorted by decreasing `|transformed|`.
+    pub entries: Vec<SampleEntry>,
+    /// Threshold `τ`: the (k+1)-st largest `|ν*|` (exact or estimated).
+    pub tau: f64,
+    /// The power `p` the sample is weighted by (`ν^p`).
+    pub p: f64,
+    /// The bottom-k distribution (`Exp` = ppswor, `Uniform` = priority).
+    pub dist: BottomKDist,
+}
+
+impl Sample {
+    /// Number of sampled keys.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The sampled key set.
+    pub fn keys(&self) -> Vec<u64> {
+        self.entries.iter().map(|e| e.key).collect()
+    }
+
+    /// Inclusion probability of a key with frequency `freq`, conditioned
+    /// on the out-of-sample threshold `τ` (paper Eq. 1 denominator).
+    pub fn inclusion_prob(&self, freq: f64) -> f64 {
+        debug_assert!(self.tau > 0.0);
+        let ratio = (freq.abs() / self.tau).powf(self.p);
+        match self.dist {
+            BottomKDist::Exp => 1.0 - (-ratio).exp(),
+            BottomKDist::Uniform => ratio.min(1.0),
+        }
+    }
+}
+
+/// Shared configuration for the WORp samplers.
+#[derive(Clone, Debug)]
+pub struct SamplerConfig {
+    /// Power `p ∈ (0, 2]` — sampling is weighted by `ν^p`.
+    pub p: f64,
+    /// Sample size `k`.
+    pub k: usize,
+    /// rHH norm `q ∈ {1, 2}` (2 = CountSketch; requires `q ≥ p`).
+    pub q: f64,
+    /// Shared randomization seed (transform + sketch hashes).
+    pub seed: u64,
+    /// Key-domain size `n` used for Ψ calibration.
+    pub n: usize,
+    /// Target failure probability δ.
+    pub delta: f64,
+    /// 1-pass accuracy parameter ε ∈ (0, 1/3].
+    pub eps: f64,
+    /// Sketch rows (odd). 0 = default (paper uses a k×31 CountSketch).
+    pub rows: usize,
+    /// Sketch width override; 0 = derive from Ψ calibration.
+    pub width: usize,
+    /// Bottom-k distribution: `Exp` = p-ppswor (paper default),
+    /// `Uniform` = p-priority (sequential Poisson).
+    pub dist: BottomKDist,
+}
+
+impl SamplerConfig {
+    /// Defaults matching the paper's experiments (§7): CountSketch,
+    /// δ=0.01, ε=1/3, n=10^4.
+    pub fn new(p: f64, k: usize) -> Self {
+        assert!(p > 0.0 && p <= 2.0, "p must be in (0,2]");
+        assert!(k >= 1);
+        SamplerConfig {
+            p,
+            k,
+            q: 2.0,
+            seed: 1,
+            n: 10_000,
+            delta: 0.01,
+            eps: 1.0 / 3.0,
+            rows: 0,
+            width: 0,
+            dist: BottomKDist::Exp,
+        }
+    }
+
+    /// Switch to priority (sequential Poisson) sampling, `D = U[0,1]`.
+    pub fn with_priority(mut self) -> Self {
+        self.dist = BottomKDist::Uniform;
+        self
+    }
+
+    /// Build the bottom-k transform this config prescribes.
+    pub fn transform(&self) -> crate::transform::BottomKTransform {
+        match self.dist {
+            BottomKDist::Exp => crate::transform::BottomKTransform::ppswor(self.seed, self.p),
+            BottomKDist::Uniform => {
+                crate::transform::BottomKTransform::priority(self.seed, self.p)
+            }
+        }
+    }
+
+    /// Set the shared randomization seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the key-domain size.
+    pub fn with_domain(mut self, n: usize) -> Self {
+        self.n = n;
+        self
+    }
+
+    /// Set sketch shape explicitly (rows must be odd).
+    pub fn with_sketch_shape(mut self, rows: usize, width: usize) -> Self {
+        assert!(rows % 2 == 1, "rows must be odd");
+        self.rows = rows;
+        self.width = width;
+        self
+    }
+
+    /// Set the 1-pass accuracy parameter ε.
+    pub fn with_eps(mut self, eps: f64) -> Self {
+        assert!(eps > 0.0 && eps <= 1.0 / 3.0 + 1e-12);
+        self.eps = eps;
+        self
+    }
+
+    /// Resolved sketch rows: explicit, else the paper's default 31
+    /// (Table 3 / Fig 2 use a k×31 CountSketch).
+    pub fn resolved_rows(&self) -> usize {
+        if self.rows > 0 {
+            self.rows
+        } else {
+            31
+        }
+    }
+
+    /// Resolved sketch width for the two-pass method: explicit override,
+    /// else `O(k/ψ)` with ψ from the Ψ calibration (paper §4), capped to
+    /// stay sample-sized. The paper's experiments simply use width = k.
+    pub fn resolved_width_two_pass(&self) -> usize {
+        if self.width > 0 {
+            return self.width;
+        }
+        let psi = crate::psi::worp_psi_two_pass(self.n, self.k, self.p, self.q, self.delta);
+        ((self.k as f64 / psi).ceil() as usize).clamp(self.k, 64 * self.k)
+    }
+
+    /// Resolved width for the 1-pass method (`ψ ← ε^q Ψ`).
+    pub fn resolved_width_one_pass(&self) -> usize {
+        if self.width > 0 {
+            return self.width;
+        }
+        let psi =
+            crate::psi::worp_psi_one_pass(self.n, self.k, self.p, self.q, self.delta, self.eps);
+        ((self.k as f64 / psi).ceil() as usize).clamp(self.k, 256 * self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_match_paper() {
+        let c = SamplerConfig::new(1.0, 100);
+        assert_eq!(c.resolved_rows(), 31);
+        assert_eq!(c.q, 2.0);
+        assert_eq!(c.n, 10_000);
+    }
+
+    #[test]
+    fn one_pass_width_at_least_two_pass() {
+        let c = SamplerConfig::new(1.0, 50).with_domain(5_000);
+        assert!(c.resolved_width_one_pass() >= c.resolved_width_two_pass());
+    }
+
+    #[test]
+    fn explicit_shape_wins() {
+        let c = SamplerConfig::new(2.0, 10).with_sketch_shape(5, 333);
+        assert_eq!(c.resolved_rows(), 5);
+        assert_eq!(c.resolved_width_two_pass(), 333);
+        assert_eq!(c.resolved_width_one_pass(), 333);
+    }
+
+    #[test]
+    fn sample_inclusion_prob_matches_transform() {
+        let s = Sample {
+            entries: vec![],
+            tau: 2.0,
+            p: 1.0,
+            dist: BottomKDist::Exp,
+        };
+        let want = 1.0 - (-0.5f64).exp();
+        assert!((s.inclusion_prob(1.0) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn p_out_of_range_rejected() {
+        SamplerConfig::new(2.5, 10);
+    }
+}

@@ -1,0 +1,149 @@
+//! Perfect p-ppswor sampling over **aggregated** data — the gold-standard
+//! WOR baseline the paper compares against ("perfect WOR", Figs 1–2,
+//! Table 3).
+//!
+//! Given the exact frequency vector, apply the bottom-k transform with the
+//! shared hash-defined randomness and take the exact top-k of
+//! `ν* = ν · r^{-1/p}` plus the exact threshold `τ = |ν*_(k+1)|`.
+//! By §2.2 this is precisely a ppswor (successive WOR) sample by `ν^p`.
+
+use super::{Sample, SampleEntry};
+use crate::transform::BottomKTransform;
+
+/// Perfect p-ppswor sample of `k` keys from the dense frequency vector
+/// `freqs` (key `i` has frequency `freqs[i]`; zero entries never sampled).
+pub fn perfect_ppswor(freqs: &[f64], p: f64, k: usize, seed: u64) -> Sample {
+    let t = BottomKTransform::ppswor(seed, p);
+    sample_with_transform(freqs, k, &t)
+}
+
+/// Perfect bottom-k sample under an arbitrary transform (shared by the
+/// priority variant and by tests that need a fixed randomization).
+pub fn sample_with_transform(freqs: &[f64], k: usize, t: &BottomKTransform) -> Sample {
+    let mut scored: Vec<SampleEntry> = freqs
+        .iter()
+        .enumerate()
+        .filter(|(_, &f)| f != 0.0)
+        .map(|(x, &f)| {
+            let key = x as u64;
+            SampleEntry { key, freq: f, transformed: f * t.scale(key) }
+        })
+        .collect();
+    scored.sort_by(|a, b| {
+        b.transformed
+            .abs()
+            .partial_cmp(&a.transformed.abs())
+            .unwrap()
+    });
+    let tau = if scored.len() > k {
+        scored[k].transformed.abs()
+    } else {
+        0.0
+    };
+    scored.truncate(k);
+    Sample { entries: scored, tau, p: t.p(), dist: t.dist() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Gen};
+    use std::collections::HashSet;
+
+    #[test]
+    fn returns_k_distinct_keys_and_positive_tau() {
+        let freqs: Vec<f64> = (0..100).map(|i| (i + 1) as f64).collect();
+        let s = perfect_ppswor(&freqs, 1.0, 10, 7);
+        assert_eq!(s.len(), 10);
+        let keys: HashSet<u64> = s.keys().into_iter().collect();
+        assert_eq!(keys.len(), 10);
+        assert!(s.tau > 0.0);
+        // entries sorted by decreasing transformed magnitude, all >= tau
+        for w in s.entries.windows(2) {
+            assert!(w[0].transformed.abs() >= w[1].transformed.abs());
+        }
+        assert!(s.entries.last().unwrap().transformed.abs() >= s.tau);
+    }
+
+    #[test]
+    fn skips_zero_frequencies() {
+        let freqs = vec![0.0, 5.0, 0.0, 3.0];
+        let s = perfect_ppswor(&freqs, 1.0, 4, 3);
+        let keys: HashSet<u64> = s.keys().into_iter().collect();
+        assert_eq!(keys, HashSet::from([1, 3]));
+        assert_eq!(s.tau, 0.0); // fewer than k+1 keys
+    }
+
+    #[test]
+    fn first_key_marginal_is_pps() {
+        // Pr[key 0 is top-1] = w0^p / sum(w^p) for ppswor
+        let freqs = vec![3.0, 1.0, 1.0, 1.0];
+        let p = 2.0;
+        let want = 9.0 / 12.0;
+        let trials = 5000;
+        let mut hits = 0;
+        for seed in 0..trials {
+            let s = perfect_ppswor(&freqs, p, 1, seed as u64 ^ 0xFEED);
+            if s.entries[0].key == 0 {
+                hits += 1;
+            }
+        }
+        let frac = hits as f64 / trials as f64;
+        assert!((frac - want).abs() < 0.02, "frac={frac} want={want}");
+    }
+
+    #[test]
+    fn without_replacement_second_draw_renormalizes() {
+        // with weights (2,1,1) and p=1: Pr[sample = {0,1}] =
+        // 2/4*1/2 + 1/4*2/3 = 5/12 (order-summed)
+        let freqs = vec![2.0, 1.0, 1.0];
+        let trials = 8000;
+        let mut hits = 0;
+        for seed in 0..trials {
+            let s = perfect_ppswor(&freqs, 1.0, 2, seed as u64 ^ 0xABC);
+            let keys: HashSet<u64> = s.keys().into_iter().collect();
+            if keys == HashSet::from([0, 1]) {
+                hits += 1;
+            }
+        }
+        let frac = hits as f64 / trials as f64;
+        assert!((frac - 5.0 / 12.0).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn negative_frequencies_sampled_by_magnitude() {
+        let freqs = vec![-100.0, 1.0, 1.0];
+        let mut hits = 0;
+        for seed in 0..500 {
+            let s = perfect_ppswor(&freqs, 2.0, 1, seed);
+            if s.entries[0].key == 0 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 480); // |−100|² dominates overwhelmingly
+        let s = perfect_ppswor(&freqs, 2.0, 1, 0);
+        assert_eq!(s.entries[0].freq, -100.0); // original sign preserved
+    }
+
+    #[test]
+    fn property_sample_is_exact_topk_of_transformed() {
+        run("ppswor = top-k of nu*", 25, |g: &mut Gen| {
+            let n = g.usize_range(5, 200);
+            let k = g.usize_range(1, n.min(20));
+            let p = *g.choose(&[0.5, 1.0, 2.0]);
+            let seed = g.u64_below(1 << 48);
+            let freqs = g.freq_vector(n, 1.0, true);
+            let t = BottomKTransform::ppswor(seed, p);
+            let s = sample_with_transform(&freqs, k, &t);
+            // brute-force top-k
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                let ta = (freqs[a] * t.scale(a as u64)).abs();
+                let tb = (freqs[b] * t.scale(b as u64)).abs();
+                tb.partial_cmp(&ta).unwrap()
+            });
+            let want: Vec<u64> = idx[..k].iter().map(|&i| i as u64).collect();
+            assert_eq!(s.keys(), want);
+        });
+    }
+}

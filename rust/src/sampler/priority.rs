@@ -1,0 +1,59 @@
+//! Perfect priority (sequential Poisson) sampling over aggregated data —
+//! bottom-k with `D = U[0,1]` (paper §2.1). Mimics probability-
+//! proportional-to-size with probabilities truncated at 1.
+
+use super::Sample;
+use crate::transform::BottomKTransform;
+
+/// Perfect p-priority sample of `k` keys from the dense frequency vector.
+pub fn perfect_priority(freqs: &[f64], p: f64, k: usize, seed: u64) -> Sample {
+    let t = BottomKTransform::priority(seed, p);
+    super::ppswor::sample_with_transform(freqs, k, &t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hashing::BottomKDist;
+    use std::collections::HashSet;
+
+    #[test]
+    fn returns_k_distinct_keys() {
+        let freqs: Vec<f64> = (0..50).map(|i| 1.0 / (i + 1) as f64).collect();
+        let s = perfect_priority(&freqs, 1.0, 8, 3);
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.dist, BottomKDist::Uniform);
+        let keys: HashSet<u64> = s.keys().into_iter().collect();
+        assert_eq!(keys.len(), 8);
+    }
+
+    #[test]
+    fn inclusion_prob_is_truncated_pps() {
+        // key with nu/tau >= 1 has inclusion probability exactly 1
+        let s = perfect_priority(&[5.0, 1.0, 1.0, 1.0], 1.0, 2, 9);
+        assert!(s.inclusion_prob(10.0 * s.tau) == 1.0);
+        assert!((s.inclusion_prob(0.5 * s.tau) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heavy_key_nearly_always_included() {
+        let freqs = vec![1000.0, 1.0, 1.0, 1.0, 1.0];
+        let mut hits = 0;
+        for seed in 0..300 {
+            let s = perfect_priority(&freqs, 1.0, 2, seed);
+            if s.keys().contains(&0) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 299);
+    }
+
+    #[test]
+    fn priority_and_ppswor_differ_in_randomization() {
+        let freqs: Vec<f64> = (0..100).map(|i| (i + 1) as f64).collect();
+        let a = perfect_priority(&freqs, 1.0, 10, 4);
+        let b = super::super::ppswor::perfect_ppswor(&freqs, 1.0, 10, 4);
+        // same seed, different D -> generally different samples
+        assert_ne!(a.keys(), b.keys());
+    }
+}

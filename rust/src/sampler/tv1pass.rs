@@ -1,0 +1,306 @@
+//! Algorithm 1 (paper §6 / Appendix F): 1-pass WOR sampling with
+//! polynomially-small total-variation distance to a true p-ppswor k-tuple.
+//!
+//! `r` independent perfect ℓp single samplers run alongside an rHH sketch
+//! `R`. Producing the sample walks the samplers in order; every fresh
+//! index `Out_i` is added to `S` and **subtracted** from all later
+//! samplers via the linear update `(Out_i, −R(Out_i))`, uncovering fresh
+//! WOR picks. With `r = Θ(k log n)` the procedure fails (returns fewer
+//! than k keys) with probability `1/poly(n)`.
+
+use super::perfect_lp::{OracleSampler, PrecisionSampler, SingleLpSampler};
+use crate::data::Element;
+use crate::sketch::countsketch::CountSketch;
+use crate::sketch::{RhhSketch, SketchParams};
+
+/// Which single-sampler substrate to use (DESIGN.md §6 substitution).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Exact per-draw distribution (TV 0 per draw) — isolates the
+    /// subtraction machinery; linear memory.
+    Oracle,
+    /// Sketch-based precision sampler — honest 1-pass memory profile.
+    Precision,
+}
+
+/// Configuration for the low-TV sampler.
+#[derive(Clone, Debug)]
+pub struct TvSamplerConfig {
+    /// Power `p ∈ (0, 2]`.
+    pub p: f64,
+    /// Sample size `k`.
+    pub k: usize,
+    /// Number of single samplers `r` (paper: `C·k·log n`).
+    pub r: usize,
+    /// Seed.
+    pub seed: u64,
+    /// Substrate choice.
+    pub kind: SamplerKind,
+    /// rHH sketch shape for the subtraction estimates.
+    pub rhh_rows: usize,
+    /// rHH sketch width.
+    pub rhh_width: usize,
+    /// Precision-sampler sketch shape (ignored for Oracle).
+    pub inner_rows: usize,
+    /// Precision-sampler sketch width.
+    pub inner_width: usize,
+}
+
+impl TvSamplerConfig {
+    /// Paper-faithful defaults: `r = ceil(C k ln n)` with C=4.
+    pub fn new(p: f64, k: usize, n: usize, seed: u64, kind: SamplerKind) -> Self {
+        let r = ((4.0 * k as f64 * (n.max(2) as f64).ln()).ceil() as usize).max(2 * k);
+        TvSamplerConfig {
+            p,
+            k,
+            r,
+            seed,
+            kind,
+            rhh_rows: 7,
+            rhh_width: (8 * k).max(64),
+            inner_rows: 5,
+            inner_width: (4 * k).max(128),
+        }
+    }
+
+    /// Override the sampler count `r`.
+    pub fn with_r(mut self, r: usize) -> Self {
+        self.r = r;
+        self
+    }
+}
+
+enum Samplers {
+    Oracle(Vec<OracleSampler>),
+    Precision(Vec<PrecisionSampler>),
+}
+
+/// The 1-pass low-TV WOR sampler (Algorithm 1).
+pub struct TvSampler {
+    cfg: TvSamplerConfig,
+    samplers: Samplers,
+    rhh: CountSketch,
+}
+
+impl TvSampler {
+    /// Build all `r` samplers plus the rHH sketch.
+    pub fn new(cfg: TvSamplerConfig) -> Self {
+        let samplers = match cfg.kind {
+            SamplerKind::Oracle => Samplers::Oracle(
+                (0..cfg.r)
+                    .map(|i| OracleSampler::new(cfg.p, cfg.seed ^ (i as u64).wrapping_mul(0xD1E5)))
+                    .collect(),
+            ),
+            SamplerKind::Precision => Samplers::Precision(
+                (0..cfg.r)
+                    .map(|i| {
+                        PrecisionSampler::new(
+                            cfg.p,
+                            cfg.seed ^ (i as u64).wrapping_mul(0xD1E5),
+                            cfg.inner_rows,
+                            cfg.inner_width,
+                        )
+                    })
+                    .collect(),
+            ),
+        };
+        let rhh = CountSketch::new(SketchParams::new(
+            cfg.rhh_rows,
+            cfg.rhh_width,
+            cfg.seed ^ 0x0FF5E7,
+        ));
+        TvSampler { cfg, samplers, rhh }
+    }
+
+    /// Pass 1: feed a stream update into every sampler and the rHH sketch.
+    pub fn process(&mut self, e: &Element) {
+        match &mut self.samplers {
+            Samplers::Oracle(v) => {
+                for s in v.iter_mut() {
+                    s.process(e);
+                }
+            }
+            Samplers::Precision(v) => {
+                for s in v.iter_mut() {
+                    s.process(e);
+                }
+            }
+        }
+        self.rhh.process(e);
+    }
+
+    /// Produce the WOR k-tuple (paper Algorithm 1 "Produce sample").
+    /// Returns fewer than `k` keys only on FAIL (probability 1/poly(n)).
+    pub fn produce(mut self) -> Vec<u64> {
+        let mut selected: Vec<u64> = Vec::with_capacity(self.cfg.k);
+        let r = self.cfg.r;
+        for i in 0..r {
+            let out = match &mut self.samplers {
+                Samplers::Oracle(v) => v[i].output(),
+                Samplers::Precision(v) => v[i].output(),
+            };
+            let Some(out) = out else { continue };
+            if selected.contains(&out) {
+                continue;
+            }
+            selected.push(out);
+            if selected.len() == self.cfg.k {
+                return selected;
+            }
+            // subtract the selection from all later samplers using the
+            // rHH estimate of its frequency
+            let est = self.rhh.est(out);
+            if est != 0.0 {
+                let update = Element::new(out, -est);
+                match &mut self.samplers {
+                    Samplers::Oracle(v) => {
+                        for s in v.iter_mut().skip(i + 1) {
+                            s.process(&update);
+                        }
+                    }
+                    Samplers::Precision(v) => {
+                        for s in v.iter_mut().skip(i + 1) {
+                            s.process(&update);
+                        }
+                    }
+                }
+            }
+        }
+        selected
+    }
+
+    /// Total memory words across samplers and the rHH sketch
+    /// (Oracle excluded — it is an oracle, not a sketch).
+    pub fn size_words(&self) -> usize {
+        let inner = match &self.samplers {
+            Samplers::Oracle(_) => 0,
+            Samplers::Precision(v) => v.iter().map(|s| s.size_words()).sum(),
+        };
+        inner + self.rhh.size_words()
+    }
+}
+
+/// Exact k-tuple *set* probabilities of perfect p-ppswor over a small
+/// domain, by enumeration (used by the TV-distance bench): returns the
+/// probability of each k-subset under successive WOR `|ν|^p` sampling.
+pub fn ppswor_subset_probs(freqs: &[f64], p: f64, k: usize) -> std::collections::HashMap<Vec<u64>, f64> {
+    let n = freqs.len();
+    assert!(k <= n && n <= 12, "enumeration is exponential; keep n small");
+    let weights: Vec<f64> = freqs.iter().map(|f| f.abs().powf(p)).collect();
+    let mut probs: std::collections::HashMap<Vec<u64>, f64> = std::collections::HashMap::new();
+    // DFS over ordered prefixes
+    fn dfs(
+        weights: &[f64],
+        chosen: &mut Vec<u64>,
+        used: u64,
+        prob: f64,
+        k: usize,
+        probs: &mut std::collections::HashMap<Vec<u64>, f64>,
+    ) {
+        if chosen.len() == k {
+            let mut key = chosen.clone();
+            key.sort_unstable();
+            *probs.entry(key).or_insert(0.0) += prob;
+            return;
+        }
+        let total: f64 = weights
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| used & (1 << i) == 0)
+            .map(|(_, w)| w)
+            .sum();
+        if total <= 0.0 {
+            return;
+        }
+        for i in 0..weights.len() {
+            if used & (1 << i) == 0 && weights[i] > 0.0 {
+                chosen.push(i as u64);
+                dfs(weights, chosen, used | (1 << i), prob * weights[i] / total, k, probs);
+                chosen.pop();
+            }
+        }
+    }
+    let mut chosen = Vec::new();
+    dfs(&weights, &mut chosen, 0, 1.0, k, &mut probs);
+    probs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::unaggregate;
+
+    fn run(freqs: &[f64], p: f64, k: usize, seed: u64, kind: SamplerKind) -> Vec<u64> {
+        let cfg = TvSamplerConfig::new(p, k, freqs.len(), seed, kind).with_r(8 * k + 16);
+        let mut tv = TvSampler::new(cfg);
+        for e in unaggregate(freqs, 2, false, seed ^ 7) {
+            tv.process(&e);
+        }
+        tv.produce()
+    }
+
+    #[test]
+    fn produces_k_distinct_keys() {
+        let freqs: Vec<f64> = (0..50).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        for kind in [SamplerKind::Oracle, SamplerKind::Precision] {
+            let s = run(&freqs, 1.0, 8, 3, kind);
+            assert_eq!(s.len(), 8, "kind={kind:?}");
+            let set: std::collections::HashSet<u64> = s.iter().copied().collect();
+            assert_eq!(set.len(), 8);
+        }
+    }
+
+    #[test]
+    fn oracle_tuple_distribution_close_to_ppswor() {
+        // small domain: compare empirical subset frequencies with exact
+        // successive-WOR probabilities
+        let freqs = vec![4.0, 2.0, 1.0, 1.0];
+        let p = 1.0;
+        let k = 2;
+        let exact = ppswor_subset_probs(&freqs, p, k);
+        let trials = 4000;
+        let mut counts: std::collections::HashMap<Vec<u64>, f64> = Default::default();
+        for seed in 0..trials {
+            let mut s = run(&freqs, p, k, seed as u64 ^ 0x7117, SamplerKind::Oracle);
+            s.sort_unstable();
+            *counts.entry(s).or_insert(0.0) += 1.0 / trials as f64;
+        }
+        let mut tv = 0.0;
+        for (subset, &pr) in &exact {
+            let emp = counts.get(subset).copied().unwrap_or(0.0);
+            tv += (pr - emp).abs();
+        }
+        tv /= 2.0;
+        assert!(tv < 0.05, "empirical TV distance {tv}");
+    }
+
+    #[test]
+    fn subtraction_prevents_heavy_key_repeat() {
+        // one huge key: without subtraction every sampler would return it;
+        // with subtraction we still get k distinct keys
+        let mut freqs = vec![1.0; 30];
+        freqs[0] = 1000.0;
+        let s = run(&freqs, 1.0, 10, 11, SamplerKind::Oracle);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s[0], 0); // heavy key first
+    }
+
+    #[test]
+    fn subset_probs_sum_to_one() {
+        let freqs = vec![3.0, 2.0, 1.0];
+        let probs = ppswor_subset_probs(&freqs, 1.0, 2);
+        let sum: f64 = probs.values().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert_eq!(probs.len(), 3);
+        // P({0,1}) should be the largest
+        let p01 = probs[&vec![0u64, 1]];
+        assert!(probs.values().all(|&v| v <= p01 + 1e-12));
+    }
+
+    #[test]
+    fn fails_gracefully_when_domain_smaller_than_k() {
+        let freqs = vec![1.0, 2.0];
+        let s = run(&freqs, 1.0, 5, 3, SamplerKind::Oracle);
+        assert_eq!(s.len(), 2); // all available keys, no panic
+    }
+}

@@ -1,0 +1,175 @@
+//! Sliding-window WORp: WOR ℓp sampling over the **recent** stream — the
+//! time-decay variant of 1-pass WORp built on
+//! [`crate::sketch::window::WindowedCountSketch`] (paper Conclusion).
+//!
+//! The bottom-k transform randomization `r_x` is time-invariant (the same
+//! hash), so windowed samples taken at different times are *coordinated*:
+//! a key's rank moves only when its windowed frequency moves — the LSH
+//! property the paper highlights for sample stability.
+
+use super::{Sample, SampleEntry, SamplerConfig};
+use crate::data::Element;
+use crate::sketch::window::WindowedCountSketch;
+use crate::sketch::SketchParams;
+use crate::transform::BottomKTransform;
+use std::collections::HashMap;
+
+/// Windowed 1-pass WORp sampler.
+#[derive(Clone, Debug)]
+pub struct WindowedWorp {
+    cfg: SamplerConfig,
+    transform: BottomKTransform,
+    sketch: WindowedCountSketch,
+    /// Candidate keys → last touch time.
+    candidates: HashMap<u64, u64>,
+    cand_cap: usize,
+    window: u64,
+}
+
+impl WindowedWorp {
+    /// Sampler over a sliding window of `window` time units split into
+    /// `buckets` sub-sketches. Only the CountSketch (q = 2) path supports
+    /// windows (subtraction on expiry needs linearity).
+    pub fn new(cfg: SamplerConfig, window: u64, buckets: usize) -> Self {
+        assert!(cfg.q >= 2.0, "windowed WORp requires the CountSketch (q=2) path");
+        let params = SketchParams::new(
+            cfg.resolved_rows(),
+            cfg.resolved_width_one_pass(),
+            cfg.seed ^ 0x3AB5,
+        );
+        let transform = cfg.transform();
+        let cand_cap = 16 * (cfg.k + 1);
+        WindowedWorp {
+            cfg,
+            transform,
+            sketch: WindowedCountSketch::new(params, window, buckets),
+            candidates: HashMap::new(),
+            cand_cap,
+            window,
+        }
+    }
+
+    /// Process an element stamped with non-decreasing time `t`.
+    pub fn process_at(&mut self, e: &Element, t: u64) {
+        let te = self.transform.apply(e);
+        self.sketch.process_at(&te, t);
+        self.candidates.insert(e.key, t);
+        if self.candidates.len() > 2 * self.cand_cap {
+            self.prune(t);
+        }
+    }
+
+    /// Drop candidates last touched outside the window; if still over
+    /// capacity keep the most recently touched.
+    fn prune(&mut self, now: u64) {
+        let cutoff = now.saturating_sub(self.window);
+        self.candidates.retain(|_, &mut t| t >= cutoff);
+        if self.candidates.len() > 2 * self.cand_cap {
+            let mut v: Vec<(u64, u64)> = self.candidates.iter().map(|(&k, &t)| (k, t)).collect();
+            v.sort_by_key(|&(_, t)| std::cmp::Reverse(t));
+            v.truncate(self.cand_cap);
+            self.candidates = v.into_iter().collect();
+        }
+    }
+
+    /// The sample over the current window.
+    pub fn sample(&self) -> Sample {
+        let cutoff = self.sketch.now().saturating_sub(self.window);
+        let mut scored: Vec<(u64, f64)> = self
+            .candidates
+            .iter()
+            .filter(|(_, &t)| t >= cutoff)
+            .map(|(&key, _)| (key, self.sketch.est(key)))
+            .filter(|(_, e)| e.abs() > 1e-12)
+            .collect();
+        scored.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+        let k = self.cfg.k;
+        let tau = if scored.len() > k { scored[k].1.abs() } else { 0.0 };
+        let entries = scored
+            .into_iter()
+            .take(k)
+            .map(|(key, est)| SampleEntry {
+                key,
+                freq: self.transform.invert(key, est),
+                transformed: est,
+            })
+            .collect();
+        Sample { entries, tau, p: self.cfg.p, dist: self.transform.dist() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn cfg(k: usize) -> SamplerConfig {
+        SamplerConfig::new(1.0, k)
+            .with_seed(5)
+            .with_domain(1000)
+            .with_sketch_shape(7, 1024)
+    }
+
+    #[test]
+    fn sample_tracks_the_window() {
+        let mut w = WindowedWorp::new(cfg(5), 100, 10);
+        // era 1: keys 0..10 heavy
+        for t in 0..100u64 {
+            for key in 0..10u64 {
+                w.process_at(&Element::new(key, 10.0), t);
+            }
+        }
+        let s1: HashSet<u64> = w.sample().keys().into_iter().collect();
+        assert!(s1.iter().all(|&k| k < 10));
+        // era 2: keys 100..110 heavy; era-1 mass expires
+        for t in 300..400u64 {
+            for key in 100..110u64 {
+                w.process_at(&Element::new(key, 10.0), t);
+            }
+        }
+        let s2: HashSet<u64> = w.sample().keys().into_iter().collect();
+        assert!(s2.iter().all(|&k| (100..110).contains(&k)), "{s2:?}");
+    }
+
+    #[test]
+    fn windowed_samples_are_coordinated_over_time() {
+        // stationary stream: consecutive window samples barely change
+        let mut w = WindowedWorp::new(cfg(10), 200, 10);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut prev: Option<HashSet<u64>> = None;
+        let mut min_overlap = usize::MAX;
+        for t in 0..2000u64 {
+            // zipf-ish stationary keys
+            let bound = 1 + rng.below(100);
+            let key = rng.below(bound);
+            w.process_at(&Element::new(key, 1.0), t);
+            if t >= 400 && t % 200 == 0 {
+                let s: HashSet<u64> = w.sample().keys().into_iter().collect();
+                if let Some(p) = &prev {
+                    min_overlap = min_overlap.min(s.intersection(p).count());
+                }
+                prev = Some(s);
+            }
+        }
+        assert!(min_overlap >= 6, "coordinated windows: overlap {min_overlap}/10");
+    }
+
+    #[test]
+    fn freq_estimates_reflect_windowed_counts() {
+        let mut w = WindowedWorp::new(cfg(3), 50, 5);
+        for t in 0..40u64 {
+            w.process_at(&Element::new(1, 2.0), t);
+        }
+        let s = w.sample();
+        let e = s.entries.iter().find(|e| e.key == 1).expect("key 1 sampled");
+        assert!((e.freq - 80.0).abs() < 1.0, "freq {}", e.freq);
+    }
+
+    #[test]
+    #[should_panic(expected = "q=2")]
+    fn countmin_path_rejected() {
+        let mut c = cfg(3);
+        c.q = 1.0;
+        WindowedWorp::new(c, 10, 2);
+    }
+}

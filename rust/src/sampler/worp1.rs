@@ -1,0 +1,364 @@
+//! 1-pass WORp (paper §5): a composable sketch whose output approximates
+//! a p-ppswor sample of size `k`.
+//!
+//! - **Sketch**: an `ℓq(k+1, ψ)` rHH sketch of the transformed elements
+//!   `(x, v·r_x^{-1/p})` with `ψ ← ε^q Ψ_{n,k+1,ρ}`.
+//! - **Candidates**: streaming sketches cannot enumerate the key domain,
+//!   so (as the paper prescribes for streaming, Appendix A) we maintain an
+//!   auxiliary structure of keys with the currently-largest estimates; it
+//!   holds `O(k)` keys and is composable (merge = union + re-estimate +
+//!   truncate against the *merged* sketch).
+//! - **Sample**: the top-k candidates by `|ν̂*_x|`, with approximate input
+//!   frequencies `ν'_x = ν̂*_x · r_x^{1/p}` (Eq. 6) and threshold
+//!   `τ = |ν̂*|_(k+1)`.
+
+use super::{Sample, SampleEntry, SamplerConfig};
+use crate::data::Element;
+use crate::error::Result;
+use crate::sketch::{AnyRhh, RhhSketch, SketchParams};
+use crate::transform::BottomKTransform;
+use crate::util::fastset::FastSet;
+
+/// Composable 1-pass WORp sampler.
+#[derive(Clone, Debug)]
+pub struct OnePassWorp {
+    cfg: SamplerConfig,
+    transform: BottomKTransform,
+    sketch: AnyRhh,
+    /// Candidate keys (scored lazily against the sketch — §Perf L3-1/5).
+    candidates: FastSet,
+    /// Candidate capacity (a small multiple of k).
+    cand_cap: usize,
+    processed: u64,
+}
+
+impl OnePassWorp {
+    /// Build from a sampler config.
+    pub fn new(cfg: SamplerConfig) -> Self {
+        let rows = cfg.resolved_rows();
+        let width = cfg.resolved_width_one_pass();
+        let params = SketchParams::new(rows, width, cfg.seed ^ 0x1AB5);
+        let sketch = AnyRhh::for_q(cfg.q, params);
+        let transform = cfg.transform();
+        let cand_cap = 8 * (cfg.k + 1);
+        OnePassWorp {
+            cfg,
+            transform,
+            sketch,
+            candidates: FastSet::with_capacity(2 * cand_cap),
+            cand_cap,
+            processed: 0,
+        }
+    }
+
+    /// Sampler configuration.
+    pub fn config(&self) -> &SamplerConfig {
+        &self.cfg
+    }
+
+    /// The shared bottom-k transform (exposed for coordinated samples).
+    pub fn transform(&self) -> &BottomKTransform {
+        &self.transform
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Sketch size in memory words (excluding candidates).
+    pub fn sketch_words(&self) -> usize {
+        self.sketch.size_words()
+    }
+
+    /// Total summary size in words (sketch + candidate slots).
+    pub fn size_words(&self) -> usize {
+        self.sketch.size_words() + 2 * self.cand_cap
+    }
+
+    /// Process one raw element (untransformed).
+    ///
+    /// §Perf L3-1: the hot loop does *not* estimate the key — it only
+    /// records it as a candidate. Estimates are computed lazily, in bulk,
+    /// when the candidate set overflows (amortized `O(est/elem · cap/N)`)
+    /// and at sample time. Before this change every element paid a full
+    /// `rows`-row estimate (hashing + median), which dominated the
+    /// profile at ~2× the sketch-update cost.
+    pub fn process(&mut self, e: &Element) {
+        let te = self.transform.apply(e);
+        self.sketch.process(&te);
+        self.processed += 1;
+        self.candidates.insert(e.key);
+        if self.candidates.len() > 2 * self.cand_cap {
+            self.shrink_candidates();
+        }
+    }
+
+    fn shrink_candidates(&mut self) {
+        // score all candidates against the sketch, keep the top cand_cap
+        let mut v: Vec<(u64, f64)> = self
+            .candidates
+            .iter()
+            .map(|k| (k, self.sketch.est(k).abs()))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.truncate(self.cand_cap);
+        self.candidates.clear();
+        for (k, _) in v {
+            self.candidates.insert(k);
+        }
+    }
+
+    /// Merge a sibling sampler (same config & seed). The merged candidate
+    /// set is re-scored against the merged sketch.
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        self.sketch.merge(&other.sketch)?;
+        self.processed += other.processed;
+        for k in other.candidates.iter() {
+            self.candidates.insert(k);
+        }
+        // candidates are re-scored lazily (shrink / sample time) against
+        // the now-merged sketch
+        if self.candidates.len() > self.cand_cap {
+            self.shrink_candidates();
+        }
+        Ok(())
+    }
+
+    /// Produce the approximate p-ppswor sample (paper §5) from the
+    /// tracked candidate set.
+    ///
+    /// Candidate tracking can lose a key whose *relative* standing rises
+    /// only because other keys shrink (pure-deletion phases). When the key
+    /// domain is a known `[n]`, use [`Self::sample_enumerating`] — the
+    /// paper's recovery prescription for CountSketch (Appendix A).
+    pub fn sample(&self) -> Sample {
+        self.sample_from_keys(self.candidates.iter())
+    }
+
+    /// Produce the sample by scoring an explicit key universe (paper
+    /// Appendix A: "the rHH keys can be recovered by enumerating over
+    /// [n] and retaining the keys with largest estimates").
+    pub fn sample_enumerating(&self, n: u64) -> Sample {
+        self.sample_from_keys(0..n)
+    }
+
+    /// The rHH failure test (paper Appendix A, "Testing for failure"):
+    /// the dataset may simply not have `(k, ψ)` residual heavy hitters
+    /// after the transform. Declare failure when the k-th largest
+    /// estimated transformed frequency falls below the sketch's own error
+    /// scale `sqrt(ψ/k · ‖tail_k(ν̂*)‖₂²)` (q = 2 path), with the tail
+    /// mass estimated from the sketch table itself.
+    pub fn certify(&self, sample: &Sample) -> crate::error::Result<()> {
+        let AnyRhh::CountSketch(cs) = &self.sketch else {
+            return Ok(()); // counter sketches are deterministic: no test
+        };
+        if sample.entries.len() < self.cfg.k || sample.tau <= 0.0 {
+            return Err(crate::error::Error::RhhFailure(format!(
+                "sample has {} of {} keys",
+                sample.entries.len(),
+                self.cfg.k
+            )));
+        }
+        // E[sum of row squares] = ||nu*||_2^2; median over rows is robust
+        let params = cs.params();
+        let mut row_mass: Vec<f64> = (0..params.rows)
+            .map(|r| {
+                cs.table()[r * params.width..(r + 1) * params.width]
+                    .iter()
+                    .map(|c| c * c)
+                    .sum()
+            })
+            .collect();
+        row_mass.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total_sq = row_mass[row_mass.len() / 2];
+        let topk_sq: f64 = sample.entries.iter().map(|e| e.transformed * e.transformed).sum();
+        let tail_sq = (total_sq - topk_sq).max(0.0);
+        let psi = crate::psi::worp_psi_one_pass(
+            self.cfg.n,
+            self.cfg.k,
+            self.cfg.p,
+            self.cfg.q,
+            self.cfg.delta,
+            self.cfg.eps,
+        );
+        let noise_scale = (psi / self.cfg.k as f64 * tail_sq).sqrt();
+        let kth = sample.entries.last().unwrap().transformed.abs();
+        if kth < noise_scale {
+            return Err(crate::error::Error::RhhFailure(format!(
+                "k-th transformed estimate {kth:.3e} below error scale {noise_scale:.3e} — \
+                 dataset lacks (k, ψ) rHH; enlarge the sketch or reduce k"
+            )));
+        }
+        Ok(())
+    }
+
+    fn sample_from_keys<I: IntoIterator<Item = u64>>(&self, keys: I) -> Sample {
+        let mut scored: Vec<(u64, f64)> = keys
+            .into_iter()
+            .map(|k| (k, self.sketch.est(k)))
+            .filter(|(_, e)| *e != 0.0)
+            .collect();
+        scored.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+        let k = self.cfg.k;
+        // fewer than k+1 scored keys: the "sample" is the whole dataset
+        // and tau = 0 marks estimates as exact (paper Eq. 1 degenerates)
+        let tau = if scored.len() > k { scored[k].1.abs() } else { 0.0 };
+        let entries: Vec<SampleEntry> = scored
+            .into_iter()
+            .take(k)
+            .map(|(key, est)| SampleEntry {
+                key,
+                freq: self.transform.invert(key, est),
+                transformed: est,
+            })
+            .collect();
+        Sample { entries, tau, p: self.cfg.p, dist: self.transform.dist() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::{zipf_exact_stream, zipf_frequencies};
+    use crate::sampler::ppswor::perfect_ppswor;
+    use std::collections::HashSet;
+
+    fn run_stream(s: &mut OnePassWorp, elems: &[Element]) {
+        for e in elems {
+            s.process(e);
+        }
+    }
+
+    #[test]
+    fn returns_k_keys_on_zipf() {
+        let cfg = SamplerConfig::new(1.0, 20)
+            .with_seed(3)
+            .with_domain(500)
+            .with_sketch_shape(7, 512);
+        let mut s = OnePassWorp::new(cfg);
+        let elems = zipf_exact_stream(500, 1.0, 1e4, 3, 1);
+        run_stream(&mut s, &elems);
+        let sample = s.sample();
+        assert_eq!(sample.len(), 20);
+        assert!(sample.tau > 0.0);
+        let distinct: HashSet<u64> = sample.keys().into_iter().collect();
+        assert_eq!(distinct.len(), 20);
+    }
+
+    #[test]
+    fn matches_perfect_ppswor_on_skewed_data() {
+        // with a generous sketch, the 1-pass sample should equal the
+        // perfect p-ppswor sample that shares its randomization
+        let n = 1000;
+        let k = 10;
+        let cfg = SamplerConfig::new(2.0, k)
+            .with_seed(11)
+            .with_domain(n)
+            .with_sketch_shape(9, 4096);
+        let mut s = OnePassWorp::new(cfg);
+        let elems = zipf_exact_stream(n, 2.0, 1e4, 2, 7);
+        run_stream(&mut s, &elems);
+        let got: HashSet<u64> = s.sample().keys().into_iter().collect();
+        let freqs = zipf_frequencies(n, 2.0, 1e4);
+        let want: HashSet<u64> = perfect_ppswor(&freqs, 2.0, k, 11).keys().into_iter().collect();
+        let overlap = got.intersection(&want).count();
+        assert!(overlap >= k - 1, "overlap {overlap}/{k}");
+    }
+
+    #[test]
+    fn approximate_freqs_close_to_truth() {
+        let n = 500;
+        let cfg = SamplerConfig::new(1.0, 10)
+            .with_seed(5)
+            .with_domain(n)
+            .with_sketch_shape(9, 2048);
+        let mut s = OnePassWorp::new(cfg);
+        let elems = zipf_exact_stream(n, 1.5, 1e4, 2, 9);
+        run_stream(&mut s, &elems);
+        let freqs = zipf_frequencies(n, 1.5, 1e4);
+        for e in &s.sample().entries {
+            let truth = freqs[e.key as usize];
+            let rel = (e.freq - truth).abs() / truth;
+            assert!(rel < 0.2, "key {}: est {} truth {truth}", e.key, e.freq);
+        }
+    }
+
+    #[test]
+    fn merge_two_shards_equals_single_stream_sample() {
+        let n = 400;
+        let cfg = SamplerConfig::new(1.0, 15)
+            .with_seed(13)
+            .with_domain(n)
+            .with_sketch_shape(7, 1024);
+        let elems = zipf_exact_stream(n, 1.0, 1e4, 2, 5);
+        let mut whole = OnePassWorp::new(cfg.clone());
+        run_stream(&mut whole, &elems);
+        let mut a = OnePassWorp::new(cfg.clone());
+        let mut b = OnePassWorp::new(cfg);
+        for (i, e) in elems.iter().enumerate() {
+            if i % 2 == 0 {
+                a.process(e);
+            } else {
+                b.process(e);
+            }
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.processed(), whole.processed());
+        let ka: Vec<u64> = a.sample().keys();
+        let kw: Vec<u64> = whole.sample().keys();
+        // sketches are identical post-merge; candidate sets may differ
+        // slightly, but the top keys must agree
+        let overlap = ka.iter().filter(|k| kw.contains(k)).count();
+        assert!(overlap >= 14, "overlap {overlap}");
+    }
+
+    #[test]
+    fn certify_accepts_skewed_rejects_degenerate() {
+        // skewed data with a roomy sketch: certification passes
+        let n = 1000;
+        let cfg = SamplerConfig::new(1.0, 10)
+            .with_seed(3)
+            .with_domain(n)
+            .with_sketch_shape(9, 2048);
+        let mut s = OnePassWorp::new(cfg.clone());
+        for e in zipf_exact_stream(n, 2.0, 1e4, 2, 3) {
+            s.process(&e);
+        }
+        let sample = s.sample();
+        assert!(s.certify(&sample).is_ok());
+
+        // fewer distinct keys than k: must fail certification
+        let mut s = OnePassWorp::new(cfg);
+        for i in 0..5u64 {
+            s.process(&Element::new(i, 1.0));
+        }
+        let sample = s.sample();
+        let err = s.certify(&sample).unwrap_err();
+        assert!(err.to_string().contains("rHH"), "{err}");
+    }
+
+    #[test]
+    fn signed_stream_supported() {
+        // turnstile: insert then partially delete; sampling follows |nu|
+        let cfg = SamplerConfig::new(2.0, 5)
+            .with_seed(17)
+            .with_domain(100)
+            .with_sketch_shape(7, 512);
+        let mut s = OnePassWorp::new(cfg);
+        for i in 0..100u64 {
+            s.process(&Element::new(i, 10.0));
+        }
+        // delete most of every key except 0..5
+        for i in 5..100u64 {
+            s.process(&Element::new(i, -9.9));
+        }
+        // candidate tracking may lose un-retouched keys under heavy
+        // deletion; domain enumeration (paper Appendix A) recovers them
+        let sample = s.sample_enumerating(100);
+        let keys: HashSet<u64> = sample.keys().into_iter().collect();
+        // the five surviving heavy keys should dominate the l2 sample
+        let heavy_in = (0..5u64).filter(|k| keys.contains(k)).count();
+        assert!(heavy_in >= 4, "heavy_in={heavy_in}");
+    }
+}

@@ -1,0 +1,330 @@
+//! 2-pass WORp (paper §4, Algorithm 2): an **exact** p-ppswor sample in
+//! two passes.
+//!
+//! - **Pass I** computes an `ℓq(k+1, ψ)` rHH sketch `R` of the transformed
+//!   elements, `ψ ← Ψ_{n,k,ρ}(δ)/(3q)`.
+//! - **Pass II** runs the composable top structure `T` ([`crate::sketch::topk`]):
+//!   keys with top pass-I estimates collect *exact* frequencies. Capacity
+//!   follows the §4.1 practical optimization (≈2(k+1) keys, merge cap
+//!   3(k+1)) instead of the worst-case `B(k+1)` with `B = 63`
+//!   (Corollary D.2).
+//! - **Output**: re-rank stored keys by exact `ν*_x = ν_x · r_x^{-1/p}`;
+//!   the top-k with threshold `τ = |ν*|_(k+1)` form an exact p-ppswor
+//!   sample whenever property (15) held — w.p. ≥ (1−δ)(1−3e^{−k}).
+
+use super::{Sample, SampleEntry, SamplerConfig};
+use crate::data::Element;
+use crate::error::Result;
+use crate::sketch::topk::TopK;
+use crate::sketch::{AnyRhh, RhhSketch, SketchParams};
+use crate::transform::BottomKTransform;
+
+/// Pass-I composable sketch.
+#[derive(Clone, Debug)]
+pub struct TwoPassWorpPass1 {
+    cfg: SamplerConfig,
+    transform: BottomKTransform,
+    sketch: AnyRhh,
+    processed: u64,
+}
+
+impl TwoPassWorpPass1 {
+    /// Build from a sampler config.
+    pub fn new(cfg: SamplerConfig) -> Self {
+        let rows = cfg.resolved_rows();
+        let width = cfg.resolved_width_two_pass();
+        let params = SketchParams::new(rows, width, cfg.seed ^ 0x2AB5);
+        let sketch = AnyRhh::for_q(cfg.q, params);
+        let transform = cfg.transform();
+        TwoPassWorpPass1 { cfg, transform, sketch, processed: 0 }
+    }
+
+    /// Process one raw element.
+    #[inline]
+    pub fn process(&mut self, e: &Element) {
+        let te = self.transform.apply(e);
+        self.sketch.process(&te);
+        self.processed += 1;
+    }
+
+    /// Merge a sibling pass-I sketch.
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        self.sketch.merge(&other.sketch)?;
+        self.processed += other.processed;
+        Ok(())
+    }
+
+    /// Estimate a key's transformed frequency `ν̂*_x`.
+    pub fn est(&self, key: u64) -> f64 {
+        self.sketch.est(key)
+    }
+
+    /// Elements processed in pass I.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Sketch size in words.
+    pub fn size_words(&self) -> usize {
+        self.sketch.size_words()
+    }
+
+    /// Finish pass I: freeze into the pass-II collector.
+    ///
+    /// Capacity 4(k+1) (merge cap 6(k+1)): the §4.1 threshold condition
+    /// (16) stores *every* key with `ν̂* ≥ ½ ν̂*_(k+1)` — unbounded but
+    /// ~O(k) in practice; a fixed 4(k+1) slots subsumes it in all our
+    /// workloads while staying far below the worst-case B(k+1) = 63(k+1)
+    /// of Corollary D.2.
+    pub fn into_pass2(self) -> TwoPassWorpPass2 {
+        let cap = 4 * (self.cfg.k + 1);
+        let merge_cap = 6 * (self.cfg.k + 1);
+        TwoPassWorpPass2 {
+            cfg: self.cfg,
+            transform: self.transform,
+            sketch: self.sketch,
+            topk: TopK::new(cap, merge_cap),
+        }
+    }
+}
+
+/// Pass-II composable collector.
+#[derive(Clone, Debug)]
+pub struct TwoPassWorpPass2 {
+    cfg: SamplerConfig,
+    transform: BottomKTransform,
+    sketch: AnyRhh,
+    topk: TopK,
+}
+
+impl TwoPassWorpPass2 {
+    /// Process one raw element in pass II (same stream, replayed).
+    #[inline]
+    pub fn process(&mut self, e: &Element) {
+        let priority = self.sketch.est(e.key).abs();
+        self.topk.process(e.key, e.val, priority);
+    }
+
+    /// Merge a sibling pass-II collector (disjoint shards of the stream).
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        self.topk.merge(&other.topk)
+    }
+
+    /// Number of keys currently stored in `T`.
+    pub fn stored_keys(&self) -> usize {
+        self.topk.len()
+    }
+
+    /// Total summary size in words (rHH sketch + T slots).
+    pub fn size_words(&self) -> usize {
+        self.sketch.size_words() + self.topk.size_words()
+    }
+
+    /// Produce the exact p-ppswor sample: re-rank stored keys by exact
+    /// transformed frequency and cut at k (paper "Producing a p-ppswor
+    /// sample from T").
+    pub fn sample(&self) -> Sample {
+        let t = &self.transform;
+        let ranked = self.topk.by_score(|e| (e.value * t.scale(e.key)).abs());
+        let k = self.cfg.k;
+        let tau = if ranked.len() > k { ranked[k].1 } else { 0.0 };
+        let entries: Vec<SampleEntry> = ranked
+            .into_iter()
+            .take(k)
+            .map(|(e, _)| SampleEntry {
+                key: e.key,
+                freq: e.value,
+                transformed: e.value * t.scale(e.key),
+            })
+            .collect();
+        Sample { entries, tau, p: self.cfg.p, dist: t.dist() }
+    }
+
+    /// The §4.1 "larger effective sample" extraction: every stored key
+    /// whose exact `|ν*_x|` clears the certification threshold
+    /// `L + |ν*|_(k+1)/3` is returned (≥ k keys), with `τ` the smallest
+    /// retained `|ν*|`. Estimation quality can only improve.
+    pub fn extended_sample(&self) -> Sample {
+        let t = &self.transform;
+        let ranked = self.topk.by_score(|e| (e.value * t.scale(e.key)).abs());
+        let k = self.cfg.k;
+        if ranked.len() <= k + 1 {
+            return self.sample();
+        }
+        // uniform error bound |nu*_(k+1)|/3 (paper Eq. 14);
+        // L = min estimated |nu*| over stored keys
+        let nu_k1 = ranked[k].1;
+        let l = ranked
+            .iter()
+            .map(|(e, _)| self.sketch.est(e.key).abs())
+            .fold(f64::INFINITY, f64::min);
+        let cut = l + nu_k1 / 3.0;
+        let mut kept: Vec<(crate::sketch::topk::TopKEntry, f64)> = ranked
+            .into_iter()
+            .filter(|(_, s)| *s >= cut)
+            .collect();
+        if kept.len() <= k {
+            return self.sample();
+        }
+        // threshold = smallest retained |nu*|; that key is excluded
+        let tau = kept.last().unwrap().1;
+        kept.pop();
+        let entries = kept
+            .into_iter()
+            .map(|(e, s)| SampleEntry { key: e.key, freq: e.value, transformed: s })
+            .collect();
+        Sample { entries, tau, p: self.cfg.p, dist: t.dist() }
+    }
+}
+
+/// Convenience driver: run both passes over an in-memory stream.
+pub fn two_pass_sample(elems: &[Element], cfg: SamplerConfig) -> Sample {
+    let mut p1 = TwoPassWorpPass1::new(cfg);
+    for e in elems {
+        p1.process(e);
+    }
+    let mut p2 = p1.into_pass2();
+    for e in elems {
+        p2.process(e);
+    }
+    p2.sample()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::{zipf_exact_stream, zipf_frequencies};
+    use crate::sampler::ppswor::perfect_ppswor;
+    use std::collections::HashSet;
+
+    #[test]
+    fn recovers_exact_ppswor_sample_on_zipf() {
+        // the headline guarantee: 2-pass output == perfect p-ppswor with
+        // the same randomization, including *exact* frequencies
+        for &(p, alpha) in &[(1.0, 1.0), (2.0, 2.0), (0.5, 1.0)] {
+            let n = 1000;
+            let k = 25;
+            let cfg = SamplerConfig::new(p, k)
+                .with_seed(21)
+                .with_domain(n)
+                .with_sketch_shape(9, 2048);
+            let elems = zipf_exact_stream(n, alpha, 1e4, 3, 5);
+            let got = two_pass_sample(&elems, cfg);
+            let freqs = zipf_frequencies(n, alpha, 1e4);
+            let want = perfect_ppswor(&freqs, p, k, 21);
+            assert_eq!(got.keys(), want.keys(), "p={p} alpha={alpha}");
+            for (g, w) in got.entries.iter().zip(&want.entries) {
+                assert!((g.freq - w.freq).abs() < 1e-6 * w.freq.abs().max(1.0));
+            }
+            assert!((got.tau - want.tau).abs() < 1e-6 * want.tau);
+        }
+    }
+
+    #[test]
+    fn pass1_merge_then_pass2_merge_matches_single() {
+        let n = 500;
+        let cfg = SamplerConfig::new(1.0, 10)
+            .with_seed(31)
+            .with_domain(n)
+            .with_sketch_shape(7, 1024);
+        let elems = zipf_exact_stream(n, 1.5, 1e4, 2, 9);
+
+        // single-node reference
+        let whole = two_pass_sample(&elems, cfg.clone());
+
+        // two shards
+        let (ea, eb): (Vec<(usize, Element)>, Vec<(usize, Element)>) = elems
+            .iter()
+            .copied()
+            .enumerate()
+            .partition(|(i, _)| i % 2 == 0);
+        let ea: Vec<Element> = ea.into_iter().map(|(_, e)| e).collect();
+        let eb: Vec<Element> = eb.into_iter().map(|(_, e)| e).collect();
+
+        let mut a1 = TwoPassWorpPass1::new(cfg.clone());
+        let mut b1 = TwoPassWorpPass1::new(cfg);
+        for e in &ea {
+            a1.process(e);
+        }
+        for e in &eb {
+            b1.process(e);
+        }
+        a1.merge(&b1).unwrap();
+        let mut a2 = a1.clone().into_pass2();
+        let mut b2 = a1.into_pass2();
+        for e in &ea {
+            a2.process(e);
+        }
+        for e in &eb {
+            b2.process(e);
+        }
+        a2.merge(&b2).unwrap();
+        let merged = a2.sample();
+        assert_eq!(merged.keys(), whole.keys());
+        for (g, w) in merged.entries.iter().zip(&whole.entries) {
+            assert!((g.freq - w.freq).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn signed_turnstile_sample_follows_net_frequencies() {
+        let n = 200;
+        let k = 8;
+        let mut freqs: Vec<f64> = vec![1.0; n];
+        for i in 0..10 {
+            freqs[i] = 100.0 * (i + 1) as f64;
+        }
+        let elems = crate::data::stream::unaggregate(&freqs, 4, true, 3);
+        let cfg = SamplerConfig::new(2.0, k)
+            .with_seed(41)
+            .with_domain(n)
+            .with_sketch_shape(9, 1024);
+        let got = two_pass_sample(&elems, cfg);
+        let want = perfect_ppswor(&freqs, 2.0, k, 41);
+        assert_eq!(got.keys(), want.keys());
+    }
+
+    #[test]
+    fn extended_sample_supersets_base_sample() {
+        let n = 800;
+        let cfg = SamplerConfig::new(1.0, 20)
+            .with_seed(51)
+            .with_domain(n)
+            .with_sketch_shape(9, 2048);
+        let elems = zipf_exact_stream(n, 1.2, 1e4, 2, 7);
+        let mut p1 = TwoPassWorpPass1::new(cfg);
+        for e in &elems {
+            p1.process(e);
+        }
+        let mut p2 = p1.into_pass2();
+        for e in &elems {
+            p2.process(e);
+        }
+        let base = p2.sample();
+        let ext = p2.extended_sample();
+        assert!(ext.len() >= base.len());
+        let base_keys: HashSet<u64> = base.keys().into_iter().collect();
+        let ext_keys: HashSet<u64> = ext.keys().into_iter().collect();
+        assert!(base_keys.is_subset(&ext_keys));
+        assert!(ext.tau <= base.tau + 1e-12);
+    }
+
+    #[test]
+    fn stored_keys_bounded_by_capacity() {
+        let n = 2000;
+        let cfg = SamplerConfig::new(1.0, 10)
+            .with_seed(61)
+            .with_domain(n)
+            .with_sketch_shape(7, 512);
+        let elems = zipf_exact_stream(n, 1.0, 1e4, 1, 3);
+        let mut p1 = TwoPassWorpPass1::new(cfg);
+        for e in &elems {
+            p1.process(e);
+        }
+        let mut p2 = p1.into_pass2();
+        for e in &elems {
+            p2.process(e);
+        }
+        assert!(p2.stored_keys() <= 4 * 11, "stored={}", p2.stored_keys());
+    }
+}

@@ -1,0 +1,273 @@
+//! String-keyed 2-pass WORp for positive streams — the counter-based path
+//! of the paper's Table 2 (`+, p ≤ 1` rows): SpaceSaving natively stores
+//! key strings (Appendix A), so no KeyHash domain and no second lookup
+//! structure is needed.
+//!
+//! Pass I runs SpaceSaving over the transformed (still positive) stream;
+//! pass II collects exact frequencies for the tracked strings; output
+//! re-ranks by exact `ν*` and cuts at k — exactly Algorithm 2 with the
+//! deterministic ℓ1 sketch.
+
+use crate::transform::BottomKTransform;
+use crate::sketch::spacesaving::SpaceSaving;
+use crate::util::hashing::hash_str;
+use std::collections::HashMap;
+
+/// One sampled string key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StringSampleEntry {
+    /// The key, in its original string form.
+    pub key: String,
+    /// Exact frequency `ν_x` (collected in pass II).
+    pub freq: f64,
+    /// Exact transformed frequency `ν*_x`.
+    pub transformed: f64,
+}
+
+/// A WOR sample of string keys with threshold.
+#[derive(Clone, Debug)]
+pub struct StringSample {
+    /// Entries sorted by decreasing `transformed`.
+    pub entries: Vec<StringSampleEntry>,
+    /// Threshold `τ` (the (k+1)-st `ν*` among candidates; 0 if degenerate).
+    pub tau: f64,
+    /// The power p.
+    pub p: f64,
+}
+
+/// Pass-I state: SpaceSaving over the transformed stream.
+pub struct StringWorpPass1 {
+    p: f64,
+    k: usize,
+    transform: BottomKTransform,
+    sketch: SpaceSaving<String>,
+}
+
+impl StringWorpPass1 {
+    /// `capacity` counters (≥ 4k recommended); positive values only,
+    /// p ≤ 1 (the counter guarantee regime of Table 2).
+    pub fn new(p: f64, k: usize, capacity: usize, seed: u64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "counter-based WORp requires p <= 1");
+        assert!(capacity >= 2 * k);
+        StringWorpPass1 {
+            p,
+            k,
+            transform: BottomKTransform::ppswor(seed, p),
+            sketch: SpaceSaving::new(capacity),
+        }
+    }
+
+    /// The per-key randomizer value for a string key.
+    fn scale_of(&self, key: &str) -> f64 {
+        self.transform.scale(hash_str(0x57A6, key))
+    }
+
+    /// Process a positive element.
+    pub fn process(&mut self, key: &str, val: f64) {
+        assert!(val >= 0.0, "counter path requires positive values");
+        let scaled = val * self.scale_of(key);
+        self.sketch.process(key.to_string(), scaled);
+    }
+
+    /// Merge a sibling pass-I summary.
+    pub fn merge(&mut self, other: &Self) -> crate::error::Result<()> {
+        self.sketch.merge(&other.sketch)
+    }
+
+    /// Sketch size in words.
+    pub fn size_words(&self) -> usize {
+        self.sketch.size_words()
+    }
+
+    /// Freeze into pass II: the tracked strings become the candidate set.
+    pub fn into_pass2(self) -> StringWorpPass2 {
+        let candidates = self
+            .sketch
+            .top()
+            .into_iter()
+            .map(|c| (c.key, 0.0))
+            .collect();
+        StringWorpPass2 {
+            p: self.p,
+            k: self.k,
+            transform: self.transform,
+            exact: candidates,
+        }
+    }
+}
+
+/// Pass-II state: exact frequency collection for candidate strings.
+pub struct StringWorpPass2 {
+    p: f64,
+    k: usize,
+    transform: BottomKTransform,
+    exact: HashMap<String, f64>,
+}
+
+impl StringWorpPass2 {
+    /// Process an element of the replayed stream.
+    pub fn process(&mut self, key: &str, val: f64) {
+        if let Some(f) = self.exact.get_mut(key) {
+            *f += val;
+        }
+    }
+
+    /// Merge a sibling pass-II collector over a disjoint shard.
+    pub fn merge(&mut self, other: &Self) {
+        for (k, v) in &other.exact {
+            *self.exact.entry(k.clone()).or_insert(0.0) += v;
+        }
+    }
+
+    /// Candidate count.
+    pub fn candidates(&self) -> usize {
+        self.exact.len()
+    }
+
+    /// Produce the sample: re-rank by exact `ν*`, cut at k.
+    pub fn sample(self) -> StringSample {
+        let t = &self.transform;
+        let mut ranked: Vec<StringSampleEntry> = self
+            .exact
+            .into_iter()
+            .filter(|(_, v)| *v > 0.0)
+            .map(|(key, freq)| {
+                let transformed = freq * t.scale(hash_str(0x57A6, &key));
+                StringSampleEntry { key, freq, transformed }
+            })
+            .collect();
+        ranked.sort_by(|a, b| b.transformed.partial_cmp(&a.transformed).unwrap());
+        let tau = if ranked.len() > self.k {
+            ranked[self.k].transformed
+        } else {
+            0.0
+        };
+        ranked.truncate(self.k);
+        StringSample { entries: ranked, tau, p: self.p }
+    }
+}
+
+impl StringSample {
+    /// Inverse-probability estimate of `Σ f(ν_x)` over the dataset.
+    pub fn sum_estimate<F: Fn(f64) -> f64>(&self, f: F) -> f64 {
+        if self.tau <= 0.0 {
+            return self.entries.iter().map(|e| f(e.freq)).sum();
+        }
+        // ppswor inclusion: x ∈ S ⇔ ν_x r_x^{-1/p} ≥ τ ⇔ r_x ≤ (ν_x/τ)^p,
+        // so Pr = 1 − exp(−(ν_x/τ)^p) with τ on the transformed scale
+        self.entries
+            .iter()
+            .map(|e| {
+                let ratio = (e.freq / self.tau).powf(self.p);
+                f(e.freq) / (1.0 - (-ratio).exp())
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Vec<(String, f64)> {
+        // 60 words with zipfian counts
+        (0..60)
+            .map(|i| (format!("word{i:02}"), 1000.0 / (i + 1) as f64))
+            .collect()
+    }
+
+    fn run_two_pass(k: usize, seed: u64) -> StringSample {
+        let data = corpus();
+        let mut p1 = StringWorpPass1::new(1.0, k, 8 * k, seed);
+        for (w, c) in &data {
+            // unaggregated: split each count into 3 parts
+            for _ in 0..3 {
+                p1.process(w, c / 3.0);
+            }
+        }
+        let mut p2 = p1.into_pass2();
+        for (w, c) in &data {
+            for _ in 0..3 {
+                p2.process(w, c / 3.0);
+            }
+        }
+        p2.sample()
+    }
+
+    #[test]
+    fn returns_k_string_keys_with_exact_counts() {
+        let s = run_two_pass(10, 3);
+        assert_eq!(s.entries.len(), 10);
+        assert!(s.tau > 0.0);
+        for e in &s.entries {
+            let i: usize = e.key[4..].parse().unwrap();
+            let want = 1000.0 / (i + 1) as f64;
+            assert!((e.freq - want).abs() < 1e-9, "{}: {} vs {want}", e.key, e.freq);
+        }
+    }
+
+    #[test]
+    fn matches_perfect_ppswor_over_hashed_keys() {
+        // the string sampler must agree with the numeric perfect sampler
+        // run on the same hashed randomization
+        let k = 8;
+        let seed = 7;
+        let data = corpus();
+        let s = run_two_pass(k, seed);
+        let t = BottomKTransform::ppswor(seed, 1.0);
+        let mut want: Vec<(String, f64)> = data
+            .iter()
+            .map(|(w, c)| (w.clone(), c * t.scale(hash_str(0x57A6, w))))
+            .collect();
+        want.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let want_keys: Vec<String> = want.into_iter().take(k).map(|(w, _)| w).collect();
+        let got_keys: Vec<String> = s.entries.iter().map(|e| e.key.clone()).collect();
+        assert_eq!(got_keys, want_keys);
+    }
+
+    #[test]
+    fn sum_estimates_reasonable() {
+        let data = corpus();
+        let truth: f64 = data.iter().map(|(_, c)| c).sum();
+        let ests: Vec<f64> = (0..200)
+            .map(|seed| run_two_pass(20, seed).sum_estimate(|v| v))
+            .collect();
+        let m = crate::util::stats::mean(&ests);
+        assert!((m - truth).abs() / truth < 0.1, "mean {m} truth {truth}");
+    }
+
+    #[test]
+    fn merge_shards_equals_whole() {
+        let data = corpus();
+        let k = 6;
+        let mut whole = StringWorpPass1::new(1.0, k, 8 * k, 5);
+        let mut a = StringWorpPass1::new(1.0, k, 8 * k, 5);
+        let mut b = StringWorpPass1::new(1.0, k, 8 * k, 5);
+        for (i, (w, c)) in data.iter().enumerate() {
+            whole.process(w, *c);
+            if i % 2 == 0 {
+                a.process(w, *c);
+            } else {
+                b.process(w, *c);
+            }
+        }
+        a.merge(&b).unwrap();
+        let mut p2a = a.into_pass2();
+        let mut p2w = whole.into_pass2();
+        for (w, c) in &data {
+            p2a.process(w, *c);
+            p2w.process(w, *c);
+        }
+        let sa = p2a.sample();
+        let sw = p2w.sample();
+        let ka: Vec<&String> = sa.entries.iter().map(|e| &e.key).collect();
+        let kw: Vec<&String> = sw.entries.iter().map(|e| &e.key).collect();
+        assert_eq!(ka, kw);
+    }
+
+    #[test]
+    #[should_panic(expected = "p <= 1")]
+    fn p_above_one_rejected() {
+        StringWorpPass1::new(1.5, 5, 20, 1);
+    }
+}

@@ -1,0 +1,120 @@
+//! Perfect with-replacement (WR) ℓp sampling over aggregated data — the
+//! baseline the paper contrasts WOR against (Fig 1, Table 3 "perfect WR").
+//!
+//! Draws `k` i.i.d. keys with `Pr[x] = |ν_x|^p / ‖ν‖_p^p`. Repetitions are
+//! retained (that is the point: heavy keys eat the sample), and the
+//! Hansen–Hurwitz / distinct-key estimators live in [`crate::estimate`].
+
+use crate::util::rng::{sample_cumulative, Rng};
+
+/// A with-replacement ℓp sample: `k` draws (with repetition) plus the
+/// drawing probabilities needed for estimation.
+#[derive(Clone, Debug)]
+pub struct WrSample {
+    /// The `k` drawn keys, in draw order (repeats possible).
+    pub draws: Vec<u64>,
+    /// Frequency of each drawn key.
+    pub freqs: Vec<f64>,
+    /// Drawing probability `q_x = |ν_x|^p / ‖ν‖_p^p` of each draw.
+    pub probs: Vec<f64>,
+    /// Number of draws `k`.
+    pub k: usize,
+    /// The power `p`.
+    pub p: f64,
+}
+
+impl WrSample {
+    /// Distinct keys with their (freq, prob), keeping first occurrence.
+    pub fn distinct(&self) -> Vec<(u64, f64, f64)> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for i in 0..self.draws.len() {
+            if seen.insert(self.draws[i]) {
+                out.push((self.draws[i], self.freqs[i], self.probs[i]));
+            }
+        }
+        out
+    }
+
+    /// Effective sample size: number of distinct keys (Fig 1 left/middle).
+    pub fn effective_size(&self) -> usize {
+        self.draws.iter().collect::<std::collections::HashSet<_>>().len()
+    }
+}
+
+/// Draw a perfect WR ℓp sample of size `k` from the dense frequency
+/// vector (zero frequencies are never drawn).
+pub fn perfect_wr(freqs: &[f64], p: f64, k: usize, seed: u64) -> WrSample {
+    let weights: Vec<f64> = freqs.iter().map(|f| f.abs().powf(p)).collect();
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "cannot sample from all-zero frequencies");
+    let mut cum = Vec::with_capacity(weights.len());
+    let mut acc = 0.0;
+    for &w in &weights {
+        acc += w;
+        cum.push(acc);
+    }
+    let mut rng = Rng::new(seed ^ 0x3141_5926);
+    let mut draws = Vec::with_capacity(k);
+    let mut fs = Vec::with_capacity(k);
+    let mut probs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let x = sample_cumulative(&mut rng, &cum);
+        draws.push(x as u64);
+        fs.push(freqs[x]);
+        probs.push(weights[x] / total);
+    }
+    WrSample { draws, freqs: fs, probs, k, p }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_k_with_correct_probs() {
+        let freqs = vec![3.0, 1.0];
+        let s = perfect_wr(&freqs, 2.0, 100, 1);
+        assert_eq!(s.draws.len(), 100);
+        for (i, &d) in s.draws.iter().enumerate() {
+            let want = if d == 0 { 0.9 } else { 0.1 };
+            assert!((s.probs[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn heavy_key_repeats_shrink_effective_size() {
+        // Zipf[2]-like: the heavy key should appear many times
+        let freqs: Vec<f64> = (0..1000).map(|i| ((i + 1) as f64).powf(-2.0)).collect();
+        let s = perfect_wr(&freqs, 1.0, 100, 5);
+        assert!(s.effective_size() < 80, "eff={}", s.effective_size());
+        let zero_draws = s.draws.iter().filter(|&&d| d == 0).count();
+        assert!(zero_draws > 30, "zero_draws={zero_draws}");
+    }
+
+    #[test]
+    fn frequency_of_draws_matches_lp_weights() {
+        let freqs = vec![2.0, 1.0, 1.0];
+        let trials = 30_000;
+        let s = perfect_wr(&freqs, 1.0, trials, 9);
+        let frac0 = s.draws.iter().filter(|&&d| d == 0).count() as f64 / trials as f64;
+        assert!((frac0 - 0.5).abs() < 0.01, "frac0={frac0}");
+    }
+
+    #[test]
+    fn distinct_keeps_first_occurrence() {
+        let freqs = vec![1.0, 1.0];
+        let s = perfect_wr(&freqs, 1.0, 50, 3);
+        let d = s.distinct();
+        assert!(d.len() <= 2);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn signed_frequencies_use_magnitudes() {
+        let freqs = vec![-5.0, 1.0];
+        let s = perfect_wr(&freqs, 2.0, 200, 7);
+        let neg_draws = s.draws.iter().filter(|&&d| d == 0).count();
+        assert!(neg_draws > 170); // 25/26 of the mass
+    }
+}

@@ -1,0 +1,168 @@
+//! CountMin sketch (Cormode–Muthukrishnan) — ℓ1 rHH for **positive**
+//! streams (paper §2.3 "(i) ℓ1 sketches ... the randomized CountMin").
+//!
+//! `est` returns the *minimum* over rows of the key's bucket — an
+//! overestimate by at most `(ψ/k)‖tail_k(ν)‖₁` with width `O(k/ψ)` rows
+//! `O(log(n/δ))`. Values must be non-negative; `process` asserts this in
+//! debug builds (the paper's + column of Table 2).
+
+use super::{RhhSketch, SketchParams};
+use crate::data::Element;
+use crate::error::{Error, Result};
+use crate::util::hashing::SketchHasher;
+
+/// CountMin with min-of-rows estimation.
+#[derive(Clone, Debug)]
+pub struct CountMin {
+    params: SketchParams,
+    hasher: SketchHasher,
+    table: Vec<f64>,
+    processed: u64,
+}
+
+impl CountMin {
+    /// Create an empty sketch.
+    pub fn new(params: SketchParams) -> Self {
+        let hasher = SketchHasher::new(params.seed ^ 0xC0_FFEE, params.width);
+        CountMin {
+            params,
+            hasher,
+            table: vec![0.0; params.rows * params.width],
+            processed: 0,
+        }
+    }
+
+    /// Convenience constructor.
+    pub fn with_shape(rows: usize, width: usize, seed: u64) -> Self {
+        Self::new(SketchParams::new(rows, width, seed))
+    }
+
+    /// Shape/seed parameters.
+    pub fn params(&self) -> &SketchParams {
+        &self.params
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl RhhSketch for CountMin {
+    #[inline]
+    fn process(&mut self, e: &Element) {
+        debug_assert!(e.val >= 0.0, "CountMin requires non-negative values");
+        let c = self.hasher.coords_of(e.key);
+        let w = self.params.width;
+        for r in 0..self.params.rows {
+            let b = self.hasher.bucket_from(&c, r);
+            self.table[r * w + b] += e.val;
+        }
+        self.processed += 1;
+    }
+
+    fn merge(&mut self, other: &Self) -> Result<()> {
+        if self.params != other.params {
+            return Err(Error::Incompatible(format!(
+                "CountMin params differ: {:?} vs {:?}",
+                self.params, other.params
+            )));
+        }
+        for (a, b) in self.table.iter_mut().zip(other.table.iter()) {
+            *a += *b;
+        }
+        self.processed += other.processed;
+        Ok(())
+    }
+
+    fn est(&self, key: u64) -> f64 {
+        let c = self.hasher.coords_of(key);
+        let w = self.params.width;
+        (0..self.params.rows)
+            .map(|r| self.table[r * w + self.hasher.bucket_from(&c, r)])
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn size_words(&self) -> usize {
+        self.table.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Gen};
+
+    #[test]
+    fn overestimates_never_underestimates() {
+        let mut cm = CountMin::with_shape(5, 32, 1);
+        let freqs: Vec<f64> = (0..200).map(|i| 1.0 + (i % 7) as f64).collect();
+        for (i, &f) in freqs.iter().enumerate() {
+            cm.process(&Element::new(i as u64, f));
+        }
+        for (i, &f) in freqs.iter().enumerate() {
+            assert!(cm.est(i as u64) >= f - 1e-12, "key {i}");
+        }
+    }
+
+    #[test]
+    fn l1_error_bound() {
+        // error ≤ ||v||_1 / width per row, min over rows does better;
+        // check the conservative bound
+        let n = 1000;
+        let width = 256;
+        let mut cm = CountMin::with_shape(5, width, 3);
+        let freqs: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-1.0) * 100.0).collect();
+        let l1: f64 = freqs.iter().sum();
+        for (i, &f) in freqs.iter().enumerate() {
+            cm.process(&Element::new(i as u64, f));
+        }
+        for (i, &f) in freqs.iter().enumerate() {
+            let err = cm.est(i as u64) - f;
+            assert!(err >= -1e-12);
+            assert!(err <= 4.0 * l1 / width as f64, "key {i}: err={err}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let p = SketchParams::new(3, 64, 9);
+        let (mut all, mut a, mut b) = (CountMin::new(p), CountMin::new(p), CountMin::new(p));
+        for i in 0..500u64 {
+            let e = Element::new(i % 97, 1.0);
+            all.process(&e);
+            if i % 3 == 0 {
+                a.process(&e);
+            } else {
+                b.process(&e);
+            }
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.table, all.table);
+    }
+
+    #[test]
+    fn merge_rejects_mismatch() {
+        let mut a = CountMin::with_shape(3, 64, 1);
+        let b = CountMin::with_shape(3, 65, 1);
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn property_monotone_overestimate() {
+        run("countmin overestimates", 25, |g: &mut Gen| {
+            let mut cm = CountMin::with_shape(3, g.usize_range(16, 128), g.u64_below(1 << 40));
+            let n = g.usize_range(1, 300);
+            let mut truth = std::collections::HashMap::new();
+            for _ in 0..n {
+                let k = g.u64_below(1000);
+                let v = g.f64_range(0.0, 10.0);
+                cm.process(&Element::new(k, v));
+                *truth.entry(k).or_insert(0.0) += v;
+            }
+            for (&k, &f) in &truth {
+                assert!(cm.est(k) >= f - 1e-9);
+            }
+        });
+    }
+}

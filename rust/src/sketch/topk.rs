@@ -1,0 +1,241 @@
+//! The composable pass-II structure `T` of 2-pass WORp (paper Algorithm 2
+//! and Lemma 4.2): for keys whose pass-I estimates `ν̂*_x` are among the
+//! top priorities, collect **exact** frequencies in a second pass.
+//!
+//! Keys carry a fixed *priority* (the pass-I estimate) and an accumulating
+//! *value*. Insertion: existing keys accumulate; new keys enter if the
+//! table is below capacity or their priority beats the current minimum
+//! (which is evicted). Because a key's priority is constant during pass II
+//! and the eviction threshold only grows, any key that is in `T` at the end
+//! was inserted at its first element — so its collected value is its exact
+//! frequency (Lemma 4.2 part 1).
+//!
+//! `merge` adds up values per key and retains the top `merge_cap ≥ cap`
+//! priorities (Algorithm 2: "Add up values and retain 3k top priority
+//! keys").
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// An entry of the structure.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TopKEntry {
+    /// Key id.
+    pub key: u64,
+    /// Fixed priority (pass-I estimate `|ν̂*_x|`).
+    pub priority: f64,
+    /// Accumulated exact value (pass-II `ν_x`).
+    pub value: f64,
+}
+
+/// Composable top-k-by-priority structure with exact value collection.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    cap: usize,
+    merge_cap: usize,
+    entries: HashMap<u64, TopKEntry>,
+}
+
+impl TopK {
+    /// `cap` keys held while streaming; merges may temporarily retain
+    /// `merge_cap ≥ cap` (Algorithm 2 uses 2k / 3k).
+    pub fn new(cap: usize, merge_cap: usize) -> Self {
+        assert!(cap > 0 && merge_cap >= cap);
+        TopK { cap, merge_cap, entries: HashMap::with_capacity(cap + 1) }
+    }
+
+    /// Streaming capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Number of stored keys.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Smallest stored priority (`∞` when empty is represented as None).
+    pub fn min_priority(&self) -> Option<f64> {
+        self.entries
+            .values()
+            .map(|e| e.priority)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Process one pass-II element. `priority` must be the key's fixed
+    /// pass-I estimate `|ν̂*_x|` (recomputed by the caller via the rHH
+    /// sketch — the structure does not hold the sketch).
+    pub fn process(&mut self, key: u64, val: f64, priority: f64) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.value += val;
+            return;
+        }
+        if self.entries.len() < self.cap {
+            self.entries.insert(key, TopKEntry { key, priority, value: val });
+            return;
+        }
+        let (min_key, min_pri) = self
+            .entries
+            .values()
+            .map(|e| (e.key, e.priority))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("non-empty");
+        if priority > min_pri {
+            self.entries.remove(&min_key);
+            self.entries.insert(key, TopKEntry { key, priority, value: val });
+        }
+    }
+
+    /// Merge another structure built with the same capacities over a
+    /// disjoint shard (values add; priorities agree because both sides use
+    /// the same pass-I sketch). Retains top `merge_cap` priorities.
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        if self.cap != other.cap || self.merge_cap != other.merge_cap {
+            return Err(Error::Incompatible(format!(
+                "TopK capacities differ: ({}, {}) vs ({}, {})",
+                self.cap, self.merge_cap, other.cap, other.merge_cap
+            )));
+        }
+        for (k, e) in &other.entries {
+            match self.entries.get_mut(k) {
+                Some(mine) => {
+                    mine.value += e.value;
+                    // priorities agree up to float noise; keep the larger
+                    mine.priority = mine.priority.max(e.priority);
+                }
+                None => {
+                    self.entries.insert(*k, *e);
+                }
+            }
+        }
+        if self.entries.len() > self.merge_cap {
+            let mut all: Vec<TopKEntry> = self.entries.values().copied().collect();
+            all.sort_by(|a, b| b.priority.partial_cmp(&a.priority).unwrap());
+            all.truncate(self.merge_cap);
+            self.entries = all.into_iter().map(|e| (e.key, e)).collect();
+        }
+        Ok(())
+    }
+
+    /// Entries sorted by decreasing priority.
+    pub fn by_priority(&self) -> Vec<TopKEntry> {
+        let mut v: Vec<TopKEntry> = self.entries.values().copied().collect();
+        v.sort_by(|a, b| b.priority.partial_cmp(&a.priority).unwrap());
+        v
+    }
+
+    /// Entries sorted by a caller-supplied score, decreasing — used by
+    /// WORp to re-rank by the exact transformed frequency `ν_x · r_x^{-1/p}`.
+    pub fn by_score<F: Fn(&TopKEntry) -> f64>(&self, score: F) -> Vec<(TopKEntry, f64)> {
+        let mut v: Vec<(TopKEntry, f64)> = self
+            .entries
+            .values()
+            .map(|e| (*e, score(e)))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    /// Memory words: 3 per slot (key, priority, value).
+    pub fn size_words(&self) -> usize {
+        3 * self.merge_cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Gen};
+
+    #[test]
+    fn accumulates_exact_values_for_kept_keys() {
+        let mut t = TopK::new(3, 4);
+        t.process(1, 2.0, 10.0);
+        t.process(2, 1.0, 20.0);
+        t.process(1, 3.0, 10.0);
+        assert_eq!(t.len(), 2);
+        let top = t.by_priority();
+        assert_eq!(top[0].key, 2);
+        assert_eq!(top[1].value, 5.0);
+    }
+
+    #[test]
+    fn eviction_keeps_higher_priorities() {
+        let mut t = TopK::new(2, 2);
+        t.process(1, 1.0, 5.0);
+        t.process(2, 1.0, 7.0);
+        t.process(3, 1.0, 6.0); // evicts key 1 (pri 5)
+        let keys: Vec<u64> = t.by_priority().iter().map(|e| e.key).collect();
+        assert_eq!(keys, vec![2, 3]);
+        t.process(4, 1.0, 1.0); // too low, rejected
+        assert_eq!(t.len(), 2);
+        assert!(t.by_priority().iter().all(|e| e.key != 4));
+    }
+
+    #[test]
+    fn first_insertion_collects_full_value_thereafter() {
+        // the Lemma 4.2 argument: keys above the final threshold were
+        // inserted at their first element
+        let mut t = TopK::new(3, 3);
+        for round in 0..10 {
+            t.process(100, 1.0, 50.0); // heavy, always kept
+            t.process(200 + round, 1.0, round as f64); // churn
+        }
+        let heavy = t.by_priority()[0];
+        assert_eq!(heavy.key, 100);
+        assert_eq!(heavy.value, 10.0);
+    }
+
+    #[test]
+    fn merge_adds_values_and_truncates() {
+        let mut a = TopK::new(2, 3);
+        let mut b = TopK::new(2, 3);
+        a.process(1, 5.0, 10.0);
+        a.process(2, 1.0, 9.0);
+        b.process(1, 2.0, 10.0);
+        b.process(3, 1.0, 8.0);
+        a.merge(&b).unwrap();
+        assert_eq!(a.len(), 3); // merge_cap
+        let top = a.by_priority();
+        assert_eq!(top[0].key, 1);
+        assert_eq!(top[0].value, 7.0);
+    }
+
+    #[test]
+    fn merge_rejects_capacity_mismatch() {
+        let mut a = TopK::new(2, 3);
+        let b = TopK::new(3, 3);
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn by_score_reranks() {
+        let mut t = TopK::new(3, 3);
+        t.process(1, 100.0, 1.0);
+        t.process(2, 1.0, 3.0);
+        let ranked = t.by_score(|e| e.value);
+        assert_eq!(ranked[0].0.key, 1);
+    }
+
+    #[test]
+    fn property_no_key_above_all_minpriorities_is_lost() {
+        run("topk keeps dominant keys", 25, |g: &mut Gen| {
+            let cap = g.usize_range(2, 10);
+            let mut t = TopK::new(cap, cap);
+            // one dominant key with max priority processed first, then churn
+            t.process(9999, 1.0, 1e9);
+            for _ in 0..g.usize_range(10, 500) {
+                let k = g.u64_below(100);
+                t.process(k, 1.0, g.f64_range(0.0, 100.0));
+                t.process(9999, 1.0, 1e9);
+            }
+            assert_eq!(t.by_priority()[0].key, 9999);
+            assert!(t.len() <= cap);
+        });
+    }
+}

@@ -1,0 +1,170 @@
+//! Sliding-window CountSketch — the time-decay variant the paper's
+//! conclusion calls out ("streaming HH sketches that support time decay
+//! (for example, sliding windows [8]) provide a respective time-decay
+//! variant of sampling").
+//!
+//! The window of the last `window` time units is covered by a ring of
+//! `buckets` sub-sketches, each spanning `window / buckets` units. A
+//! materialized *active table* holds the sum of all live sub-sketches
+//! (CountSketch is linear), so estimates cost the same as a plain sketch;
+//! expiry subtracts the oldest sub-table. Granularity: expiry happens at
+//! bucket boundaries, so the effective window is `window ± window/buckets`
+//! — the standard bucketed-window trade-off.
+
+use super::countsketch::CountSketch;
+use super::{RhhSketch, SketchParams};
+use crate::data::Element;
+use std::collections::VecDeque;
+
+/// CountSketch over a sliding window of recent elements.
+#[derive(Clone, Debug)]
+pub struct WindowedCountSketch {
+    params: SketchParams,
+    /// Window length in time units.
+    window: u64,
+    /// Time units per sub-sketch bucket.
+    span: u64,
+    /// Live sub-sketches, oldest first, tagged by bucket start time.
+    ring: VecDeque<(u64, CountSketch)>,
+    /// Sum of all live sub-sketch tables.
+    active: CountSketch,
+    /// Latest timestamp seen.
+    now: u64,
+}
+
+impl WindowedCountSketch {
+    /// A window of `window` time units split into `buckets` sub-sketches.
+    pub fn new(params: SketchParams, window: u64, buckets: usize) -> Self {
+        assert!(window > 0 && buckets > 0 && window >= buckets as u64);
+        WindowedCountSketch {
+            params,
+            window,
+            span: window / buckets as u64,
+            ring: VecDeque::new(),
+            active: CountSketch::new(params),
+            now: 0,
+        }
+    }
+
+    /// Latest timestamp processed.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Number of live sub-sketches.
+    pub fn live_buckets(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Process an element stamped with time `t` (non-decreasing).
+    pub fn process_at(&mut self, e: &Element, t: u64) {
+        debug_assert!(t >= self.now, "timestamps must be non-decreasing");
+        self.now = t;
+        self.expire(t);
+        let bucket_start = t - (t % self.span.max(1));
+        let needs_new = match self.ring.back() {
+            Some((start, _)) => *start != bucket_start,
+            None => true,
+        };
+        if needs_new {
+            self.ring.push_back((bucket_start, CountSketch::new(self.params)));
+        }
+        self.ring.back_mut().unwrap().1.process(e);
+        self.active.process(e);
+    }
+
+    /// Drop sub-sketches entirely outside the window ending at `t`.
+    fn expire(&mut self, t: u64) {
+        let cutoff = t.saturating_sub(self.window);
+        while let Some((start, _)) = self.ring.front() {
+            if start + self.span <= cutoff {
+                let (_, old) = self.ring.pop_front().unwrap();
+                // subtract the expired table from the active sum
+                for (a, b) in self
+                    .active
+                    .table_mut()
+                    .iter_mut()
+                    .zip(old.table().iter())
+                {
+                    *a -= *b;
+                }
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Estimate the windowed frequency of `key` (elements within the last
+    /// `window` units, at bucket granularity).
+    pub fn est(&self, key: u64) -> f64 {
+        self.active.est(key)
+    }
+
+    /// Memory words across the ring plus the active table.
+    pub fn size_words(&self) -> usize {
+        (self.ring.len() + 1) * self.active.size_words()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> SketchParams {
+        SketchParams::new(5, 512, 77)
+    }
+
+    #[test]
+    fn estimates_recent_mass_only() {
+        let mut w = WindowedCountSketch::new(params(), 100, 10);
+        // key 1 at t=0..9, key 2 at t=200..209: window 100 at t=209 only
+        // contains key 2
+        for t in 0..10u64 {
+            w.process_at(&Element::new(1, 1.0), t);
+        }
+        for t in 200..210u64 {
+            w.process_at(&Element::new(2, 1.0), t);
+        }
+        assert!(w.est(1).abs() < 1e-9, "expired key: {}", w.est(1));
+        assert!((w.est(2) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_boundary_granularity() {
+        let mut w = WindowedCountSketch::new(params(), 100, 10);
+        w.process_at(&Element::new(5, 3.0), 0);
+        // at t = 50 the key is still inside the window
+        w.process_at(&Element::new(6, 1.0), 50);
+        assert!((w.est(5) - 3.0).abs() < 1e-9);
+        // at t = 111 the bucket [0, 10) is fully outside [11, 111]
+        w.process_at(&Element::new(6, 1.0), 111);
+        assert!(w.est(5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_equals_sum_of_live_buckets() {
+        let mut w = WindowedCountSketch::new(params(), 50, 5);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for t in 0..300u64 {
+            let e = Element::new(rng.below(40), rng.normal());
+            w.process_at(&e, t);
+        }
+        // reconstruct the active table from the ring
+        let mut sum = CountSketch::new(params());
+        for (_, s) in &w.ring {
+            sum.merge(s).unwrap();
+        }
+        for (a, b) in w.active.table().iter().zip(sum.table().iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert!(w.live_buckets() <= 6);
+    }
+
+    #[test]
+    fn signed_updates_within_window_cancel() {
+        let mut w = WindowedCountSketch::new(params(), 1000, 10);
+        w.process_at(&Element::new(9, 5.0), 10);
+        w.process_at(&Element::new(9, -5.0), 20);
+        assert!(w.est(9).abs() < 1e-9);
+    }
+}

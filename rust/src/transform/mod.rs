@@ -1,0 +1,190 @@
+//! The bottom-k (p-ppswor / p-priority) transform of unaggregated data —
+//! paper §2.2, Eqs. (4)–(6).
+//!
+//! Each input element `(x, v)` becomes `(x, v · r_x^{-1/p})` where
+//! `r_x ~ D` is hash-defined per key. The top-k keys of the transformed
+//! frequency vector `ν* = ν · r^{-1/p}` are a bottom-k sample by `ν^p`
+//! under `D` — ppswor for `D = Exp[1]`, priority for `D = U[0,1]`.
+
+use crate::data::Element;
+use crate::util::hashing::{BottomKDist, KeyRandomizer};
+
+/// A p-ppswor / p-priority element transform.
+#[derive(Clone, Debug)]
+pub struct BottomKTransform {
+    randomizer: KeyRandomizer,
+    p: f64,
+}
+
+impl BottomKTransform {
+    /// ppswor transform (`D = Exp[1]`) with power `p`.
+    pub fn ppswor(seed: u64, p: f64) -> Self {
+        assert!(p > 0.0 && p <= 2.0, "p must be in (0, 2]");
+        BottomKTransform { randomizer: KeyRandomizer::ppswor(seed), p }
+    }
+
+    /// priority transform (`D = U[0,1]`) with power `p`.
+    pub fn priority(seed: u64, p: f64) -> Self {
+        assert!(p > 0.0 && p <= 2.0, "p must be in (0, 2]");
+        BottomKTransform { randomizer: KeyRandomizer::priority(seed), p }
+    }
+
+    /// Power `p`.
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// The underlying per-key randomizer.
+    pub fn randomizer(&self) -> &KeyRandomizer {
+        &self.randomizer
+    }
+
+    /// Distribution of `r_x`.
+    pub fn dist(&self) -> BottomKDist {
+        self.randomizer.dist()
+    }
+
+    /// `r_x` for a key.
+    #[inline]
+    pub fn r(&self, key: u64) -> f64 {
+        self.randomizer.r(key)
+    }
+
+    /// The per-key multiplier `r_x^{-1/p}`.
+    #[inline]
+    pub fn scale(&self, key: u64) -> f64 {
+        self.randomizer.scale(key, self.p)
+    }
+
+    /// Transform one element: `(x, v) -> (x, v · r_x^{-1/p})` (Eq. 5).
+    #[inline]
+    pub fn apply(&self, e: &Element) -> Element {
+        Element::new(e.key, e.val * self.scale(e.key))
+    }
+
+    /// Invert an (estimated) transformed frequency back to the input
+    /// frequency domain: `ν̂ = ν̂* · r_x^{1/p}` (Eq. 6). Relative error is
+    /// preserved exactly.
+    #[inline]
+    pub fn invert(&self, key: u64, transformed_freq: f64) -> f64 {
+        transformed_freq * self.r(key).powf(1.0 / self.p)
+    }
+
+    /// Inclusion probability of a key with input frequency `ν_x` under a
+    /// fixed threshold `τ` on transformed frequencies (ppswor:
+    /// `Pr[ν_x r^{-1/p} ≥ τ] = 1 − exp(−(ν_x/τ)^p)`; priority:
+    /// `min(1, (ν_x/τ)^p)`). Used by the inverse-probability estimators.
+    pub fn inclusion_prob(&self, freq: f64, tau: f64) -> f64 {
+        assert!(tau > 0.0);
+        let ratio = (freq.abs() / tau).powf(self.p);
+        match self.dist() {
+            BottomKDist::Exp => 1.0 - (-ratio).exp(),
+            BottomKDist::Uniform => ratio.min(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Gen};
+
+    #[test]
+    fn apply_matches_definition() {
+        let t = BottomKTransform::ppswor(7, 2.0);
+        let e = Element::new(42, 3.0);
+        let out = t.apply(&e);
+        assert_eq!(out.key, 42);
+        let want = 3.0 * t.r(42).powf(-0.5);
+        assert!((out.val - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invert_roundtrips_exactly() {
+        for &p in &[0.5, 1.0, 1.5, 2.0] {
+            let t = BottomKTransform::ppswor(3, p);
+            for key in 0..100u64 {
+                let freq = 1.0 + key as f64;
+                let transformed = freq * t.scale(key);
+                let back = t.invert(key, transformed);
+                assert!((back - freq).abs() < 1e-9 * freq, "p={p} key={key}");
+            }
+        }
+    }
+
+    #[test]
+    fn transform_linear_over_element_splits() {
+        // transforming element-by-element then aggregating = transforming
+        // the aggregate (the property that makes pass I composable)
+        let t = BottomKTransform::ppswor(11, 1.5);
+        let parts = [2.0, -0.5, 1.5, 3.0];
+        let total: f64 = parts.iter().sum();
+        let sum_transformed: f64 = parts
+            .iter()
+            .map(|&v| t.apply(&Element::new(5, v)).val)
+            .sum();
+        let direct = t.apply(&Element::new(5, total)).val;
+        assert!((sum_transformed - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ppswor_inclusion_prob_formula() {
+        let t = BottomKTransform::ppswor(1, 1.0);
+        let p = t.inclusion_prob(2.0, 4.0);
+        assert!((p - (1.0 - (-0.5f64).exp())).abs() < 1e-12);
+        // monotone in frequency
+        assert!(t.inclusion_prob(3.0, 4.0) > p);
+    }
+
+    #[test]
+    fn priority_inclusion_prob_truncates_at_one() {
+        let t = BottomKTransform::priority(1, 1.0);
+        assert!((t.inclusion_prob(2.0, 4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(t.inclusion_prob(8.0, 4.0), 1.0);
+    }
+
+    #[test]
+    fn top1_by_transformed_is_weighted_draw() {
+        // with 2 keys of weights (2w, w) and p=1 ppswor, key 0 wins with
+        // probability 2/3: check over many independent seeds
+        let mut wins = 0;
+        let trials = 4000;
+        for seed in 0..trials {
+            let t = BottomKTransform::ppswor(seed as u64 ^ 0xABCDE, 1.0);
+            let s0 = 2.0 * t.scale(0);
+            let s1 = 1.0 * t.scale(1);
+            if s0 > s1 {
+                wins += 1;
+            }
+        }
+        let frac = wins as f64 / trials as f64;
+        assert!((frac - 2.0 / 3.0).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn property_order_invariant_to_monotone_power() {
+        // order(w*) for sampling nu^p == order under equivalent transform
+        // (paper §2.2 equivalence)
+        run("bottom-k order equivalence", 20, |g: &mut Gen| {
+            let p = *g.choose(&[0.5, 1.0, 2.0]);
+            let seed = g.u64_below(1 << 48);
+            let t = BottomKTransform::ppswor(seed, p);
+            let n = g.usize_range(2, 50);
+            let freqs = g.freq_vector(n, 1.0, false);
+            // w^T = w^p / r  vs  w* = w / r^{1/p}: same order
+            let mut by_t: Vec<usize> = (0..n).collect();
+            let mut by_star: Vec<usize> = (0..n).collect();
+            by_t.sort_by(|&a, &b| {
+                let ta = freqs[a].powf(p) / t.r(a as u64);
+                let tb = freqs[b].powf(p) / t.r(b as u64);
+                tb.partial_cmp(&ta).unwrap()
+            });
+            by_star.sort_by(|&a, &b| {
+                let sa = freqs[a] * t.scale(a as u64);
+                let sb = freqs[b] * t.scale(b as u64);
+                sb.partial_cmp(&sa).unwrap()
+            });
+            assert_eq!(by_t, by_star);
+        });
+    }
+}

@@ -1,0 +1,192 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §7). Used by every target under `rust/benches/`.
+//!
+//! Reports wall-clock mean / p50 / p95 per iteration plus optional
+//! throughput (items/s), after a warmup phase. Output is plain text so
+//! `cargo bench | tee bench_output.txt` archives cleanly.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Number of measured iterations.
+    pub iters: u32,
+    /// Mean time per iteration.
+    pub mean: Duration,
+    /// Median time per iteration.
+    pub p50: Duration,
+    /// 95th-percentile time per iteration.
+    pub p95: Duration,
+    /// Optional items processed per iteration (for throughput).
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    /// Items per second, when `items_per_iter` is known.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n as f64 / self.mean.as_secs_f64())
+    }
+
+    /// One-line human-readable summary.
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gitems/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitems/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kitems/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} items/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}{}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            tp
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and configurable iteration count.
+pub struct Bencher {
+    warmup_iters: u32,
+    iters: u32,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    /// Default: 3 warmup iterations, 10 measured.
+    pub fn new() -> Self {
+        Bencher { warmup_iters: 3, iters: 10, results: Vec::new() }
+    }
+
+    /// Override iteration counts.
+    pub fn with_iters(mut self, warmup: u32, iters: u32) -> Self {
+        self.warmup_iters = warmup;
+        self.iters = iters.max(1);
+        self
+    }
+
+    /// Time `f`, which should perform one full iteration of the workload
+    /// and return a value (returned to prevent dead-code elimination).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_items(name, None, &mut f)
+    }
+
+    /// Like [`bench`](Self::bench) but records `items` processed per
+    /// iteration so throughput is reported.
+    pub fn bench_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_items(name, Some(items), &mut f)
+    }
+
+    fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let mean =
+            samples.iter().sum::<Duration>() / self.iters;
+        let p50 = samples[samples.len() / 2];
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean,
+            p50,
+            p95,
+            items_per_iter: items,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the standard header row.
+    pub fn header() {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "p50", "p95"
+        );
+        println!("{}", "-".repeat(96));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let mut b = Bencher::new().with_iters(1, 3);
+        let r = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(r.iters, 3);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bencher::new().with_iters(0, 2);
+        let r = b.bench_throughput("tp", 1_000, || std::thread::sleep(Duration::from_micros(100)));
+        let tp = r.throughput().unwrap();
+        assert!(tp > 0.0 && tp < 1e9, "tp={tp}");
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,390 @@
+//! Stable, seeded hashing — the randomness substrate of the paper.
+//!
+//! The bottom-k transform (paper Eq. 5) needs an i.i.d.-looking map
+//! `x -> r_x` from keys to `Exp[1]` (ppswor) or `U[0,1]` (priority)
+//! variates that is *identical* across stream passes, shards and workers.
+//! We realize it as hash-defined randomness: `r_x = G(h(seed, x))` where
+//! `h` is a strong 64-bit mixer and `G` the inverse CDF.
+//!
+//! The same substrate provides
+//! - `KeyHash : strings/u64 -> [n]` (paper §4 pass I),
+//! - CountSketch / CountMin per-row bucket and sign hashes,
+//! - shard routing hashes for the L3 pipeline.
+//!
+//! All hashes are independent given distinct `seed`/`row` tags because the
+//! tag is mixed into the state before the key.
+
+use super::rng::mix64;
+
+/// Strong stateless 64-bit hash of `(seed, key)`.
+#[inline]
+pub fn hash64(seed: u64, key: u64) -> u64 {
+    // Two SplitMix64 finalizer rounds over seed-xor-key with distinct
+    // round constants; passes avalanche tests (see unit tests).
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
+    h = mix64(h ^ key);
+    h = mix64(h.wrapping_add(0x6A09_E667_F3BC_C909) ^ key.rotate_left(32));
+    h
+}
+
+/// Stable 64-bit hash of a byte string (FNV-1a core + SplitMix finalizer).
+#[inline]
+pub fn hash_bytes(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325_u64 ^ seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    mix64(h ^ seed.rotate_left(17))
+}
+
+/// Stable hash of a string key to a `u64` key-id. Used to map arbitrary
+/// key domains into the numeric domain the randomized sketches need.
+#[inline]
+pub fn hash_str(seed: u64, s: &str) -> u64 {
+    hash_bytes(seed, s.as_bytes())
+}
+
+/// Hash to `U[0,1)` with 53-bit resolution.
+#[inline]
+pub fn hash_unit(seed: u64, key: u64) -> f64 {
+    (hash64(seed, key) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Hash to `U(0,1]` — strictly positive, safe for `ln`/division.
+#[inline]
+pub fn hash_unit_open(seed: u64, key: u64) -> f64 {
+    ((hash64(seed, key) >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Hash to `Exp[1]` via inverse CDF.
+#[inline]
+pub fn hash_exp1(seed: u64, key: u64) -> f64 {
+    -hash_unit_open(seed, key).ln()
+}
+
+/// The distribution `D` of the bottom-k randomizers `r_x` (paper §2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BottomKDist {
+    /// `Exp[1]` — ppswor (successive probability-proportional-to-size WOR).
+    Exp,
+    /// `U[0,1]` — priority (sequential Poisson) sampling.
+    Uniform,
+}
+
+/// Hash-defined per-key randomness for the p-ppswor / p-priority transform.
+///
+/// `r(x)` is the paper's `r_x ~ D`; `scale(x, p)` is `r_x^{-1/p}`, the
+/// multiplier the transform applies to every element value of key `x`
+/// (paper Eq. 4/5). Deterministic across passes, shards and processes.
+#[derive(Clone, Debug)]
+pub struct KeyRandomizer {
+    seed: u64,
+    dist: BottomKDist,
+}
+
+impl KeyRandomizer {
+    /// ppswor randomizer (`D = Exp[1]`).
+    pub fn ppswor(seed: u64) -> Self {
+        KeyRandomizer { seed, dist: BottomKDist::Exp }
+    }
+
+    /// priority randomizer (`D = U[0,1]`).
+    pub fn priority(seed: u64) -> Self {
+        KeyRandomizer { seed, dist: BottomKDist::Uniform }
+    }
+
+    /// The distribution this randomizer draws from.
+    pub fn dist(&self) -> BottomKDist {
+        self.dist
+    }
+
+    /// Seed (identifies the shared randomization; merges require equality).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The paper's `r_x`.
+    #[inline]
+    pub fn r(&self, key: u64) -> f64 {
+        match self.dist {
+            BottomKDist::Exp => hash_exp1(self.seed, key),
+            BottomKDist::Uniform => hash_unit_open(self.seed, key),
+        }
+    }
+
+    /// `r_x^{-1/p}` — the element-value multiplier of the transform.
+    ///
+    /// §Perf L3-4: `powf` fast paths for the common powers (p = 1, 2,
+    /// 1/2) — `recip`/`rsqrt`-style forms are 5-10× cheaper than the
+    /// general `powf` and these three cover every experiment in the paper.
+    #[inline]
+    pub fn scale(&self, key: u64, p: f64) -> f64 {
+        let r = self.r(key);
+        if p == 1.0 {
+            r.recip()
+        } else if p == 2.0 {
+            r.sqrt().recip()
+        } else if p == 0.5 {
+            let ri = r.recip();
+            ri * ri
+        } else {
+            r.powf(-1.0 / p)
+        }
+    }
+}
+
+/// Per-row bucket/sign hash family for CountSketch / CountMin.
+///
+/// Row `i` of a sketch with `width` buckets maps key `x` to bucket
+/// `bucket(i, x)` with sign `sign(i, x) ∈ {-1, +1}` (CountMin ignores the
+/// sign).
+///
+/// Perf (§Perf L3-2): rows derive from **two** base hashes via
+/// Kirsch–Mitzenmacher double hashing plus one finalizer round per row —
+/// `m_i = mix(h1 + i·h2)` — instead of two full `hash64` calls per row.
+/// This halves-plus the hashing cost of every sketch update while keeping
+/// per-row avalanche (validated by the unit tests below); KM double
+/// hashing preserves the pairwise-independence-style guarantees sketching
+/// needs in practice.
+#[derive(Clone, Debug)]
+pub struct SketchHasher {
+    seed: u64,
+    width: usize,
+}
+
+/// Per-key derived state: compute once, then O(1) per row.
+#[derive(Clone, Copy, Debug)]
+pub struct KeyCoords {
+    h1: u64,
+    h2: u64,
+}
+
+impl KeyCoords {
+    /// Mixed per-row word.
+    #[inline(always)]
+    fn row_word(&self, row: usize) -> u64 {
+        let mut m = self.h1.wrapping_add((row as u64).wrapping_mul(self.h2));
+        // one finalizer round restores avalanche after the linear combine
+        m = (m ^ (m >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        m ^ (m >> 31)
+    }
+}
+
+impl SketchHasher {
+    /// Create a hasher for a sketch of `width` buckets per row.
+    pub fn new(seed: u64, width: usize) -> Self {
+        assert!(width > 0, "sketch width must be positive");
+        SketchHasher { seed, width }
+    }
+
+    /// Derive the per-key state (two base hashes) once.
+    #[inline]
+    pub fn coords_of(&self, key: u64) -> KeyCoords {
+        KeyCoords {
+            h1: hash64(self.seed, key),
+            // force h2 odd so rows never collapse
+            h2: hash64(self.seed ^ 0x5851_F42D_4C95_7F2D, key) | 1,
+        }
+    }
+
+    /// Bucket of `key` in row `row`.
+    #[inline]
+    pub fn bucket(&self, row: usize, key: u64) -> usize {
+        self.bucket_from(&self.coords_of(key), row)
+    }
+
+    /// Bucket from precomputed key state.
+    #[inline(always)]
+    pub fn bucket_from(&self, c: &KeyCoords, row: usize) -> usize {
+        let m = c.row_word(row);
+        // multiply-shift range reduction (unbiased enough for sketching)
+        (((m as u128) * (self.width as u128)) >> 64) as usize
+    }
+
+    /// Sign of `key` in row `row` (+1.0 or -1.0).
+    #[inline]
+    pub fn sign(&self, row: usize, key: u64) -> f64 {
+        self.sign_from(&self.coords_of(key), row)
+    }
+
+    /// Sign from precomputed key state.
+    #[inline(always)]
+    pub fn sign_from(&self, c: &KeyCoords, row: usize) -> f64 {
+        // use a bit not consumed by the bucket reduction's high bits
+        if c.row_word(row) & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Sketch width (buckets per row).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// `KeyHash`: map a (possibly huge / string) key domain to `[n]`
+/// (paper §4, Eq. 13). Collisions are part of the analysis for n large.
+#[derive(Clone, Debug)]
+pub struct KeyHash {
+    seed: u64,
+    n: u64,
+}
+
+impl KeyHash {
+    /// Hash into `[n]`.
+    pub fn new(seed: u64, n: u64) -> Self {
+        assert!(n > 0);
+        KeyHash { seed, n }
+    }
+
+    /// Numeric key -> `[n]`.
+    #[inline]
+    pub fn of(&self, key: u64) -> u64 {
+        (((hash64(self.seed, key) as u128) * (self.n as u128)) >> 64) as u64
+    }
+
+    /// String key -> `[n]`.
+    #[inline]
+    pub fn of_str(&self, key: &str) -> u64 {
+        self.of(hash_str(self.seed ^ 0x517C_C1B7_2722_0A95, key))
+    }
+
+    /// Domain size `n`.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash64_is_stable_and_seed_sensitive() {
+        assert_eq!(hash64(1, 42), hash64(1, 42));
+        assert_ne!(hash64(1, 42), hash64(2, 42));
+        assert_ne!(hash64(1, 42), hash64(1, 43));
+    }
+
+    #[test]
+    fn hash64_avalanche() {
+        let mut worst: f64 = 32.0;
+        for b in 0..64 {
+            let mut total = 0u32;
+            for k in 0..256u64 {
+                let x = k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                total += (hash64(7, x) ^ hash64(7, x ^ (1 << b))).count_ones();
+            }
+            let avg = total as f64 / 256.0;
+            if (avg - 32.0).abs() > (worst - 32.0).abs() {
+                worst = avg;
+            }
+        }
+        assert!((worst - 32.0).abs() < 6.0, "worst bit avg flips = {worst}");
+    }
+
+    #[test]
+    fn unit_hash_uniformity() {
+        let n = 100_000u64;
+        let mut sum = 0.0;
+        for k in 0..n {
+            let u = hash_unit(3, k);
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn exp_hash_mean_one() {
+        let n = 100_000u64;
+        let mut sum = 0.0;
+        for k in 0..n {
+            sum += hash_exp1(5, k);
+        }
+        assert!((sum / n as f64 - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn randomizer_reproducible_and_dist_specific() {
+        let a = KeyRandomizer::ppswor(9);
+        let b = KeyRandomizer::ppswor(9);
+        let c = KeyRandomizer::priority(9);
+        for k in 0..100 {
+            assert_eq!(a.r(k), b.r(k));
+            // Exp and Uniform draws differ (different codomain anyway)
+            assert!(c.r(k) <= 1.0 && c.r(k) > 0.0);
+            assert!(a.r(k) > 0.0);
+        }
+    }
+
+    #[test]
+    fn transform_scale_matches_definition() {
+        let kr = KeyRandomizer::ppswor(11);
+        for k in 0..50 {
+            for &p in &[0.5, 1.0, 1.5, 2.0] {
+                let want = kr.r(k).powf(-1.0 / p);
+                // fast paths (recip/sqrt) differ from powf at ulp scale
+                assert!((kr.scale(k, p) - want).abs() < 1e-12 * want.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_hasher_bucket_in_range_and_balanced() {
+        let sh = SketchHasher::new(13, 64);
+        let mut counts = vec![0u32; 64];
+        for k in 0..64_000u64 {
+            let b = sh.bucket(0, k);
+            assert!(b < 64);
+            counts[b] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 200.0, "bucket skew: {c}");
+        }
+    }
+
+    #[test]
+    fn sketch_hasher_signs_balanced_and_row_independent() {
+        let sh = SketchHasher::new(17, 8);
+        let mut pos = 0i64;
+        let mut agree = 0i64;
+        let n = 50_000u64;
+        for k in 0..n {
+            let s0 = sh.sign(0, k);
+            let s1 = sh.sign(1, k);
+            if s0 > 0.0 {
+                pos += 1;
+            }
+            if s0 == s1 {
+                agree += 1;
+            }
+        }
+        assert!((pos as f64 / n as f64 - 0.5).abs() < 0.01);
+        assert!((agree as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn keyhash_range_and_string_stability() {
+        let kh = KeyHash::new(19, 1_000);
+        for k in 0..10_000u64 {
+            assert!(kh.of(k) < 1_000);
+        }
+        assert_eq!(kh.of_str("query: foo"), kh.of_str("query: foo"));
+        assert_ne!(kh.of_str("query: foo"), kh.of_str("query: bar"));
+    }
+
+    #[test]
+    fn hash_bytes_differs_on_length_extension() {
+        assert_ne!(hash_bytes(1, b"ab"), hash_bytes(1, b"abc"));
+        assert_ne!(hash_bytes(1, b""), hash_bytes(1, b"\0"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared substrates: seeded randomness, stable hashing, statistics,
+//! an in-tree property-testing runner, and a micro-benchmark harness.
+//!
+//! These stand in for `rand`, `proptest` and `criterion`, none of which are
+//! available in the offline build image (DESIGN.md §7) — and double as the
+//! paper's *hash-defined randomness* substrate: the bottom-k transform
+//! requires a reproducible map `key -> r_x` shared by every worker and both
+//! passes, which is exactly what [`hashing::KeyRandomizer`] provides.
+
+pub mod bench;
+pub mod fastset;
+pub mod fmt;
+pub mod hashing;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,173 @@
+//! A small in-tree property-testing runner (the `proptest` crate is not
+//! available in the offline build image — DESIGN.md §7).
+//!
+//! Usage:
+//! ```no_run
+//! # // no_run: rustdoc test binaries don't inherit the crate's
+//! # // -rpath to libxla_extension's bundled libstdc++ (see .cargo/config.toml)
+//! use worp::util::proptest::{Gen, run};
+//! run("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.f64_range(-1e6, 1e6);
+//!     let b = g.f64_range(-1e6, 1e6);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets an independent deterministic seed derived from the case
+//! index; failures panic with the seed so the case can be replayed with
+//! [`run_one`].
+
+use super::rng::Rng;
+
+/// A generator handed to property bodies; wraps a seeded [`Rng`] with
+/// convenience constructors for common shapes.
+pub struct Gen {
+    rng: Rng,
+    seed: u64,
+}
+
+impl Gen {
+    /// Create a generator with an explicit seed.
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    /// Seed of this case (printed on failure).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Raw RNG access.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform u64 in `[0, n)`.
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// A bool with probability `p_true`.
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.uniform() < p_true
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Vector of `len` f64 values in `[lo, hi)`.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    /// Vector of `len` u64 keys below `key_space`.
+    pub fn vec_keys(&mut self, len: usize, key_space: u64) -> Vec<u64> {
+        (0..len).map(|_| self.u64_below(key_space)).collect()
+    }
+
+    /// A frequency vector with controllable skew: `n` entries
+    /// `~ i^{-alpha}` jittered, some possibly negated when `signed`.
+    pub fn freq_vector(&mut self, n: usize, alpha: f64, signed: bool) -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let base = ((i + 1) as f64).powf(-alpha) * 1000.0;
+                let jitter = 0.5 + self.rng.uniform();
+                let v = base * jitter;
+                if signed && self.bool(0.5) {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+}
+
+/// Run `cases` independent cases of a property. Panics (with the failing
+/// seed) on the first failure.
+pub fn run<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut body: F) {
+    for i in 0..cases {
+        let seed = 0xC0FF_EE00_0000_0000 ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            body(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {i} (replay with run_one(seed={seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case with a known seed.
+pub fn run_one<F: FnOnce(&mut Gen)>(seed: u64, body: F) {
+    let mut g = Gen::new(seed);
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run("trivial", 50, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run("always-fails", 10, |_g| {
+                panic!("boom");
+            });
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay with"), "msg: {msg}");
+        assert!(msg.contains("boom"), "msg: {msg}");
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        assert_eq!(a.vec_keys(16, 1000), b.vec_keys(16, 1000));
+        assert_eq!(a.f64_range(0.0, 1.0), b.f64_range(0.0, 1.0));
+    }
+
+    #[test]
+    fn freq_vector_shapes() {
+        let mut g = Gen::new(7);
+        let v = g.freq_vector(100, 1.0, false);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x > 0.0));
+        let s = g.freq_vector(100, 1.0, true);
+        assert!(s.iter().any(|&x| x < 0.0));
+    }
+}

@@ -1,0 +1,267 @@
+//! Seeded pseudo-randomness: SplitMix64 (seeding / hashing finalizer) and
+//! xoshiro256++ (bulk generation), plus the variate transforms the paper
+//! needs: `U[0,1]`, `Exp[1]`, and Zipf.
+//!
+//! Everything here is deterministic given the seed — required both for the
+//! composable-sketch contract (all workers must share the transform
+//! randomness) and for reproducible experiments.
+
+/// SplitMix64 step: advances `state` and returns a well-mixed 64-bit value.
+///
+/// This is the standard finalizer from Steele et al.; it is also the mixing
+/// core of [`crate::util::hashing`].
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Mix a single u64 (stateless SplitMix64 finalizer).
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut s = x;
+    splitmix64(&mut s)
+}
+
+/// xoshiro256++ generator. Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create from a 64-bit seed (expanded via SplitMix64, per the
+    /// xoshiro authors' recommendation).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`, 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `(0, 1]` — safe to take `ln` of.
+    #[inline]
+    pub fn uniform_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// `Exp[1]` variate via inverse CDF.
+    #[inline]
+    pub fn exp1(&mut self) -> f64 {
+        -self.uniform_open().ln()
+    }
+
+    /// Uniform integer in `[0, n)`. Uses Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 128-bit multiply rejection sampling (unbiased).
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Random f64 in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Standard normal via Box–Muller (used by signed-stream generators).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform_open();
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Geometric number of trials with success prob `q` (support `1..`).
+    pub fn geometric(&mut self, q: f64) -> u64 {
+        debug_assert!(q > 0.0 && q <= 1.0);
+        if q >= 1.0 {
+            return 1;
+        }
+        (self.uniform_open().ln() / (1.0 - q).ln()).ceil().max(1.0) as u64
+    }
+}
+
+/// Sample from a discrete distribution given cumulative weights
+/// (`cum` strictly increasing, last entry = total). Returns an index.
+pub fn sample_cumulative(rng: &mut Rng, cum: &[f64]) -> usize {
+    let total = *cum.last().expect("non-empty cumulative weights");
+    let t = rng.uniform() * total;
+    // binary search for first cum[i] > t
+    match cum.binary_search_by(|c| c.partial_cmp(&t).unwrap()) {
+        Ok(i) => (i + 1).min(cum.len() - 1),
+        Err(i) => i.min(cum.len() - 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(123);
+        let mut b = Rng::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_mean() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exp1_mean_and_positivity() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let e = r.exp1();
+            assert!(e > 0.0);
+            sum += e;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut r = Rng::new(11);
+        let mut counts = [0u64; 5];
+        for _ in 0..100_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 20_000.0).abs() < 1_500.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        assert!((s1 / n as f64).abs() < 0.02);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn geometric_mean() {
+        let mut r = Rng::new(13);
+        let q = 0.25;
+        let n = 100_000;
+        let mut sum = 0u64;
+        for _ in 0..n {
+            sum += r.geometric(q);
+        }
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 1.0 / q).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn cumulative_sampling_respects_weights() {
+        let mut r = Rng::new(17);
+        let cum = [1.0, 3.0, 6.0]; // weights 1,2,3
+        let mut counts = [0u64; 3];
+        for _ in 0..60_000 {
+            counts[sample_cumulative(&mut r, &cum)] += 1;
+        }
+        assert!((counts[0] as f64 - 10_000.0).abs() < 1_200.0);
+        assert!((counts[1] as f64 - 20_000.0).abs() < 1_500.0);
+        assert!((counts[2] as f64 - 30_000.0).abs() < 1_500.0);
+    }
+
+    #[test]
+    fn mix64_avalanche() {
+        // flipping one input bit should flip ~half the output bits
+        let x = 0xDEAD_BEEF_u64;
+        let h = mix64(x);
+        let mut total = 0;
+        for b in 0..64 {
+            total += (h ^ mix64(x ^ (1 << b))).count_ones();
+        }
+        let avg = total as f64 / 64.0;
+        assert!((avg - 32.0).abs() < 6.0, "avg flipped = {avg}");
+    }
+}

@@ -1,0 +1,210 @@
+//! Statistics helpers used by estimators, benches and experiments:
+//! means, quantiles, NRMSE, and norm/tail utilities over frequency vectors.
+
+/// Arithmetic mean. Returns 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance. Returns 0.0 for len < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Root-mean-square of a slice of errors.
+pub fn rms(errs: &[f64]) -> f64 {
+    if errs.is_empty() {
+        return 0.0;
+    }
+    (errs.iter().map(|e| e * e).sum::<f64>() / errs.len() as f64).sqrt()
+}
+
+/// Normalized RMSE of estimates vs a single true value (paper Table 3):
+/// `sqrt(mean((est - truth)^2)) / truth`.
+pub fn nrmse(estimates: &[f64], truth: f64) -> f64 {
+    assert!(truth != 0.0, "NRMSE undefined for zero truth");
+    let ms = estimates
+        .iter()
+        .map(|e| {
+            let d = e - truth;
+            d * d
+        })
+        .sum::<f64>()
+        / estimates.len().max(1) as f64;
+    ms.sqrt() / truth.abs()
+}
+
+/// Empirical quantile `q ∈ [0,1]` (nearest-rank on a sorted copy).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((q * (v.len() - 1) as f64).round() as usize).min(v.len() - 1);
+    v[idx]
+}
+
+/// `‖w‖_q^q` — the q-th power of the ℓq norm (sum of |w_i|^q).
+pub fn lq_norm_pow(w: &[f64], q: f64) -> f64 {
+    w.iter().map(|x| x.abs().powf(q)).sum()
+}
+
+/// `‖tail_k(w)‖_q^q`: remove the k largest magnitudes, then `‖·‖_q^q`
+/// (paper §2, tail definition).
+pub fn tail_norm_pow(w: &[f64], k: usize, q: f64) -> f64 {
+    if k >= w.len() {
+        return 0.0;
+    }
+    let mut mags: Vec<f64> = w.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    mags[k..].iter().map(|x| x.powf(q)).sum()
+}
+
+/// The k-th largest magnitude `|w_(k)|` (1-indexed: `k=1` is the max).
+pub fn kth_magnitude(w: &[f64], k: usize) -> f64 {
+    assert!(k >= 1 && k <= w.len());
+    let mut mags: Vec<f64> = w.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    mags[k - 1]
+}
+
+/// Streaming mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    /// New empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (0.0 when n < 2).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Merge another accumulator (parallel Welford).
+    pub fn merge(&mut self, o: &Welford) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let n = self.n + o.n;
+        let d = o.mean - self.mean;
+        self.m2 += o.m2 + d * d * (self.n as f64 * o.n as f64) / n as f64;
+        self.mean += d * o.n as f64 / n as f64;
+        self.n = n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn nrmse_zero_for_perfect_estimates() {
+        assert_eq!(nrmse(&[5.0, 5.0, 5.0], 5.0), 0.0);
+        let e = nrmse(&[6.0, 4.0], 5.0);
+        assert!((e - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn tail_norm_removes_top_k() {
+        let w = [10.0, -8.0, 3.0, 2.0, 1.0];
+        // tail_2 removes 10 and -8 -> 3^2+2^2+1^2 = 14
+        assert!((tail_norm_pow(&w, 2, 2.0) - 14.0).abs() < 1e-12);
+        // l1 tail
+        assert!((tail_norm_pow(&w, 2, 1.0) - 6.0).abs() < 1e-12);
+        assert_eq!(tail_norm_pow(&w, 10, 2.0), 0.0);
+    }
+
+    #[test]
+    fn kth_magnitude_ordering() {
+        let w = [3.0, -7.0, 5.0];
+        assert_eq!(kth_magnitude(&w, 1), 7.0);
+        assert_eq!(kth_magnitude(&w, 2), 5.0);
+        assert_eq!(kth_magnitude(&w, 3), 3.0);
+    }
+
+    #[test]
+    fn lq_norm_pow_matches_manual() {
+        let w = [1.0, -2.0, 2.0];
+        assert!((lq_norm_pow(&w, 2.0) - 9.0).abs() < 1e-12);
+        assert!((lq_norm_pow(&w, 1.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch_and_merges() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin() * 3.0 + 1.0).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-9);
+
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..400] {
+            a.push(x);
+        }
+        for &x in &xs[400..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - w.mean()).abs() < 1e-9);
+        assert!((a.variance() - w.variance()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,167 @@
+//! Cross-module integration tests: pipeline ∘ samplers ∘ estimators over
+//! realistic workloads, coordinator invariants as properties, and failure
+//! injection.
+
+use worp::coordinator::{Coordinator, FnSource, VecSource};
+use worp::data::stream::{unaggregate, GradientStream};
+use worp::data::zipf::{zipf_exact_stream, zipf_frequencies, ZipfStream};
+use worp::data::Element;
+use worp::estimate::moment_estimate;
+use worp::pipeline::PipelineOpts;
+use worp::sampler::ppswor::perfect_ppswor;
+use worp::sampler::SamplerConfig;
+use worp::util::proptest::{run, Gen};
+use worp::util::stats::mean;
+
+fn cfg(p: f64, k: usize, n: usize, seed: u64) -> SamplerConfig {
+    SamplerConfig::new(p, k)
+        .with_seed(seed)
+        .with_domain(n)
+        .with_sketch_shape(9, 2048)
+}
+
+#[test]
+fn moment_estimates_from_pipeline_are_consistent() {
+    // estimates from the sharded 2-pass pipeline average to the truth
+    let n = 1_000;
+    let freqs = zipf_frequencies(n, 1.3, 1e4);
+    let truth: f64 = freqs.iter().sum();
+    let elems = unaggregate(&freqs, 3, false, 3);
+    let src = VecSource(elems);
+    let ests: Vec<f64> = (0..40)
+        .map(|seed| {
+            let c = Coordinator::new(cfg(1.0, 60, n, seed), PipelineOpts::new(3, 256, 8).unwrap());
+            let (s, _) = c.two_pass(&src).unwrap();
+            moment_estimate(&s, 1.0)
+        })
+        .collect();
+    let m = mean(&ests);
+    assert!((m - truth).abs() / truth < 0.05, "mean {m} truth {truth}");
+}
+
+#[test]
+fn generator_source_streams_without_materializing() {
+    // FnSource feeds the two-pass pipeline twice from a generator
+    let n = 500;
+    let src = FnSource(move || ZipfStream::new(n, 1.5, 200_000, 11));
+    let c = Coordinator::new(cfg(1.0, 20, n, 5), PipelineOpts::new(2, 1024, 8).unwrap());
+    let (sample, metrics) = c.two_pass(&src).unwrap();
+    assert_eq!(sample.len(), 20);
+    assert_eq!(metrics.elements(), 200_000); // pass-II element count
+}
+
+#[test]
+fn property_two_pass_invariant_to_topology() {
+    // coordinator invariant: worker count, batch size and channel depth
+    // never change the 2-pass output (composability end-to-end)
+    run("two-pass topology invariance", 6, |g: &mut Gen| {
+        let n = 300;
+        let k = 8;
+        let seed = g.u64_below(1 << 40);
+        let elems = zipf_exact_stream(n, 1.2, 1e4, 2, seed ^ 1);
+        let src = VecSource(elems);
+        let reference: Vec<u64> = {
+            let c = Coordinator::new(cfg(1.0, k, n, seed), PipelineOpts::new(1, 64, 2).unwrap());
+            c.two_pass(&src).unwrap().0.keys()
+        };
+        let workers = g.usize_range(2, 6);
+        let batch = *g.choose(&[16usize, 128, 1024]);
+        let cap = g.usize_range(1, 8);
+        let c = Coordinator::new(
+            cfg(1.0, k, n, seed),
+            PipelineOpts::new(workers, batch, cap).unwrap(),
+        );
+        let got = c.two_pass(&src).unwrap().0.keys();
+        assert_eq!(got, reference, "workers={workers} batch={batch} cap={cap}");
+    });
+}
+
+#[test]
+fn property_one_pass_merge_associative_across_shardings() {
+    // routing invariance of the merged sketch: any partition of the
+    // stream yields the same merged estimates
+    run("one-pass sharding invariance", 5, |g: &mut Gen| {
+        let n = 200;
+        let seed = g.u64_below(1 << 40);
+        let elems = zipf_exact_stream(n, 1.0, 1e3, 2, seed ^ 9);
+        let c1 = Coordinator::new(cfg(1.0, 10, n, seed), PipelineOpts::new(1, 32, 2).unwrap());
+        let cn = Coordinator::new(
+            cfg(1.0, 10, n, seed),
+            PipelineOpts::new(g.usize_range(2, 8), 32, 2).unwrap(),
+        );
+        let (s1, _) = c1.one_pass(elems.clone()).unwrap();
+        let (sn, _) = cn.one_pass(elems).unwrap();
+        assert_eq!(s1.keys(), sn.keys());
+        for (a, b) in s1.entries.iter().zip(&sn.entries) {
+            assert!((a.freq - b.freq).abs() < 1e-6 * a.freq.abs().max(1.0));
+        }
+    });
+}
+
+#[test]
+fn signed_gradient_pipeline_end_to_end() {
+    // turnstile workload through the full sharded path, l2 sampling
+    let n = 5_000;
+    let elems: Vec<Element> = GradientStream::new(n, 1.0, 300_000, 7).collect();
+    let c = Coordinator::new(cfg(2.0, 50, n, 13), PipelineOpts::new(4, 2048, 8).unwrap());
+    let (sample, metrics) = c.one_pass(elems.clone()).unwrap();
+    assert_eq!(metrics.elements(), 300_000);
+    assert_eq!(sample.len(), 50);
+    // heavy parameters (small indices) dominate the l2 sample
+    let heavy_hits = sample.keys().iter().filter(|&&k| k < 100).count();
+    assert!(heavy_hits > 25, "heavy_hits={heavy_hits}");
+}
+
+#[test]
+fn failure_injection_worker_panic_is_reported() {
+    struct Bomb;
+    impl worp::pipeline::ShardSink for Bomb {
+        fn process(&mut self, e: &Element) {
+            if e.key == 13 {
+                panic!("injected worker failure");
+            }
+        }
+    }
+    let elems: Vec<Element> = (0..1000u64).map(|i| Element::new(i % 50, 1.0)).collect();
+    let r = worp::pipeline::run_sharded(elems, PipelineOpts::new(2, 64, 2).unwrap(), |_| Bomb);
+    match r {
+        Err(e) => assert!(e.to_string().contains("pipeline")),
+        Ok(_) => panic!("worker panic must surface as a pipeline error"),
+    }
+}
+
+#[test]
+fn degenerate_streams_handled() {
+    // empty stream
+    let c = Coordinator::new(cfg(1.0, 5, 100, 1), PipelineOpts::new(2, 16, 2).unwrap());
+    let (s, m) = c.one_pass(Vec::<Element>::new()).unwrap();
+    assert_eq!(m.elements(), 0);
+    assert!(s.is_empty());
+    // single-key stream
+    let elems = vec![Element::new(7, 1.0); 100];
+    let (s, _) = c.one_pass(elems).unwrap();
+    assert_eq!(s.len(), 1);
+    assert_eq!(s.entries[0].key, 7);
+    assert_eq!(s.tau, 0.0);
+}
+
+#[test]
+fn coordinated_samples_share_randomization() {
+    // samples of two *different* datasets built with the same seed are
+    // coordinated (paper Conclusion): keys rank by the same r_x, so
+    // overlapping heavy keys coincide
+    let n = 400;
+    let f1 = zipf_frequencies(n, 1.5, 1e4);
+    let mut f2 = f1.clone();
+    for i in 0..20 {
+        f2[i] *= 1.05; // small perturbation
+    }
+    let s1 = perfect_ppswor(&f1, 1.0, 40, 99);
+    let s2 = perfect_ppswor(&f2, 1.0, 40, 99);
+    let overlap = s1.keys().iter().filter(|k| s2.keys().contains(k)).count();
+    assert!(overlap >= 35, "coordinated samples should barely change: {overlap}/40");
+    // different seed -> far less coordination in the random tail
+    let s3 = perfect_ppswor(&f2, 1.0, 40, 100);
+    let overlap3 = s1.keys().iter().filter(|k| s3.keys().contains(k)).count();
+    assert!(overlap3 < overlap, "{overlap3} vs {overlap}");
+}

@@ -1,0 +1,122 @@
+//! Integration: the AOT-compiled JAX/Pallas artifacts executed from rust
+//! must agree with the native CountSketch bit-for-bit (up to f32).
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when the
+//! artifacts directory is absent so `cargo test` stays runnable standalone.
+
+use worp::data::Element;
+use worp::runtime::artifact::ArtifactDir;
+use worp::runtime::executor::{XlaCountSketch, XlaEstimator};
+use worp::runtime::XlaRuntime;
+use worp::sketch::countsketch::CountSketch;
+use worp::sketch::RhhSketch;
+use worp::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactDir> {
+    for dir in ["artifacts", "../artifacts"] {
+        if ArtifactDir::exists(dir) {
+            return ArtifactDir::open(dir).ok();
+        }
+    }
+    eprintln!("SKIP: no artifacts (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn xla_update_matches_native_countsketch() {
+    let Some(dir) = artifacts() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    let seed = 0xBEEF;
+    let mut xs = XlaCountSketch::load(&rt, &dir, seed).unwrap();
+    let (rows, width) = xs.shape();
+    let mut native = CountSketch::with_shape(rows, width, seed);
+
+    let mut rng = Rng::new(42);
+    let elems: Vec<Element> = (0..10_000)
+        .map(|_| Element::new(rng.below(5_000), (rng.below(200) as f64 - 100.0) / 4.0))
+        .collect();
+    for e in &elems {
+        xs.process(e).unwrap();
+        native.process(e);
+    }
+    xs.flush().unwrap();
+    assert!(xs.kernel_calls >= 2, "batched execution expected");
+
+    // tables agree to f32 precision
+    for (i, (&x, &n)) in xs.table().iter().zip(native.table().iter()).enumerate() {
+        assert!(
+            (x as f64 - n).abs() < 1e-2 + 1e-5 * n.abs(),
+            "cell {i}: xla={x} native={n}"
+        );
+    }
+    // estimates agree on hot keys
+    for key in 0..64u64 {
+        let a = xs.est(key);
+        let b = native.est(key);
+        assert!((a - b).abs() < 1e-2 + 1e-4 * b.abs(), "key {key}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn xla_estimator_matches_native_estimates() {
+    let Some(dir) = artifacts() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    let seed = 0xF00D;
+    let mut xs = XlaCountSketch::load(&rt, &dir, seed).unwrap();
+    let (rows, width) = xs.shape();
+    let mut native = CountSketch::with_shape(rows, width, seed);
+    let mut rng = Rng::new(7);
+    for _ in 0..5_000 {
+        let e = Element::new(rng.below(1_000), rng.normal() * 10.0);
+        xs.process(&e).unwrap();
+        native.process(&e);
+    }
+    xs.flush().unwrap();
+
+    let est = XlaEstimator::load(&rt, &dir, seed).unwrap();
+    let keys: Vec<u64> = (0..est.batch_size().min(256) as u64).collect();
+    let got = est.estimate(xs.table(), &keys).unwrap();
+    for (i, &k) in keys.iter().enumerate() {
+        let want = native.est(k);
+        assert!(
+            (got[i] - want).abs() < 1e-2 + 1e-4 * want.abs(),
+            "key {k}: xla={} native={want}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn xla_one_pass_coordinator_end_to_end() {
+    let Some(_) = artifacts() else { return };
+    use worp::coordinator::Coordinator;
+    use worp::data::zipf::zipf_exact_stream;
+    use worp::pipeline::PipelineOpts;
+    use worp::sampler::SamplerConfig;
+
+    let n = 500;
+    let k = 10;
+    // shape must match the artifact (rows=5, width=1024)
+    let cfg = SamplerConfig::new(1.0, k)
+        .with_seed(33)
+        .with_domain(n)
+        .with_sketch_shape(5, 1024);
+    let c = Coordinator::new(cfg.clone(), PipelineOpts::default());
+    let elems = zipf_exact_stream(n, 1.5, 1e4, 2, 3);
+    let dir = if ArtifactDir::exists("artifacts") { "artifacts" } else { "../artifacts" };
+    let (xla_sample, _) = c.one_pass_xla(elems.clone(), dir).unwrap();
+    assert_eq!(xla_sample.len(), k);
+
+    // the native 1-pass sampler with the same seed must agree on the keys
+    let mut native = worp::sampler::worp1::OnePassWorp::new(cfg);
+    for e in &elems {
+        native.process(e);
+    }
+    let native_sample = native.sample();
+    let overlap = xla_sample
+        .keys()
+        .iter()
+        .filter(|k| native_sample.keys().contains(k))
+        .count();
+    assert!(overlap >= k - 1, "xla vs native overlap {overlap}/{k}");
+}
