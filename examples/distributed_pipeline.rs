@@ -25,8 +25,8 @@ use worp::estimate::rankfreq::{curve_error, rank_frequency_wor, rank_frequency_w
 use worp::estimate::{moment_estimate, wr_moment_estimate};
 use worp::pipeline::PipelineOpts;
 use worp::sampler::wr::perfect_wr;
-use worp::sampler::SamplerConfig;
 use worp::util::fmt::{sci, Table};
+use worp::{Method, Worp};
 
 fn main() {
     let vocab = 20_000;
@@ -52,24 +52,32 @@ fn main() {
     let mut true_rf: Vec<f64> = truth.values().copied().collect();
     true_rf.sort_by(|a, b| b.partial_cmp(a).unwrap());
 
-    // ---- the pipeline: 2-pass WORp, 4 workers
-    let cfg = SamplerConfig::new(1.0, k).with_seed(4242).with_domain(vocab);
-    let coord = Coordinator::new(cfg.clone(), PipelineOpts::new(4, 4096, 16).unwrap());
+    // ---- the pipeline: both WORp methods through ONE method-agnostic
+    // driver — build a `Box<dyn WorSampler>` and let the coordinator run
+    // every pass, shard, and merge (the paper's composability in action)
+    let builder = Worp::p(1.0).k(k).seed(4242).domain(vocab);
+    let coord = Coordinator::new(
+        builder.sampler_config().unwrap(),
+        PipelineOpts::new(4, 4096, 16).unwrap(),
+    );
     let src = VecSource(elems.clone());
 
-    let t1 = std::time::Instant::now();
-    let (sample2, m2) = coord.two_pass(&src).expect("two-pass pipeline");
-    let dt2 = t1.elapsed();
-    println!("\n2-pass WORp : {}", m2.report());
-    println!("             wall {:.2}s ({:.2}M elements/s across both passes)",
-        dt2.as_secs_f64(), 2.0 * events as f64 / dt2.as_secs_f64() / 1e6);
-
-    let t1 = std::time::Instant::now();
-    let (sample1, m1) = coord.one_pass(elems.clone()).expect("one-pass pipeline");
-    let dt1 = t1.elapsed();
-    println!("1-pass WORp : {}", m1.report());
-    println!("             wall {:.2}s ({:.2}M elements/s)",
-        dt1.as_secs_f64(), events as f64 / dt1.as_secs_f64() / 1e6);
+    let run = |method: Method| {
+        let sampler = builder.clone().method(method).build().expect("build sampler");
+        let passes = if method == Method::TwoPass { 2.0 } else { 1.0 };
+        let t1 = std::time::Instant::now();
+        let (sample, m) = coord.run_dyn(&src, sampler).expect("sharded pipeline");
+        let dt = t1.elapsed();
+        println!("\n{:<5} WORp : {}", method.name(), m.report());
+        println!(
+            "             wall {:.2}s ({:.2}M elements/s across {passes} pass(es))",
+            dt.as_secs_f64(),
+            passes * events as f64 / dt.as_secs_f64() / 1e6
+        );
+        sample
+    };
+    let sample2 = run(Method::TwoPass);
+    let sample1 = run(Method::OnePass);
 
     // ---- headline metric: estimate quality vs perfect WR
     let freq_vec: Vec<f64> = {
@@ -107,7 +115,10 @@ fn main() {
     // ---- scaling sweep
     let mut t = Table::new("1-pass scaling sweep", &["workers", "wall s", "Melem/s", "stalls"]);
     for workers in [1usize, 2, 4, 8] {
-        let c = Coordinator::new(cfg.clone(), PipelineOpts::new(workers, 4096, 16).unwrap());
+        let c = Coordinator::new(
+            builder.sampler_config().unwrap(),
+            PipelineOpts::new(workers, 4096, 16).unwrap(),
+        );
         let t1 = std::time::Instant::now();
         let (_, m) = c.one_pass(elems.clone()).unwrap();
         let dt = t1.elapsed().as_secs_f64();

@@ -9,12 +9,12 @@
 //!
 //! Run: `cargo run --release --example gradient_sparsify`
 
+use worp::api::{StreamSummary, WorSampler};
 use worp::data::stream::GradientStream;
 use worp::data::Element;
 use worp::estimate::sparsify;
-use worp::sampler::worp1::OnePassWorp;
-use worp::sampler::SamplerConfig;
 use worp::util::fmt::Table;
+use worp::Worp;
 
 fn main() {
     let n_params = 50_000;
@@ -26,13 +26,19 @@ fn main() {
     let dense = worp::data::aggregate(elems.iter().copied());
     let grad_norm2: f64 = dense.values().map(|v| v * v).sum();
 
-    // sample k coordinates WOR ∝ ν² in one pass over the updates
-    let cfg = SamplerConfig::new(2.0, k).with_seed(99).with_domain(n_params);
-    let mut s = OnePassWorp::new(cfg);
-    for e in &elems {
-        s.process(e);
+    // sample k coordinates WOR ∝ ν² in one pass over the updates —
+    // batched through the trait surface, exactly as the pipeline feeds it
+    let mut s = Worp::p(2.0)
+        .k(k)
+        .one_pass()
+        .seed(99)
+        .domain(n_params)
+        .build()
+        .expect("valid sampler config");
+    for chunk in elems.chunks(4096) {
+        s.process_batch(chunk);
     }
-    let sample = s.sample();
+    let sample = s.sample().expect("single-pass sampler");
 
     // de-sparsified estimate: coordinate value ν̂ (freq is signed!)
     let sparse = sparsify(&sample, &|v| v);

@@ -1,28 +1,34 @@
 //! Quickstart: sample k keys by frequency (ℓ1) from a Zipf stream with
-//! 1-pass WORp, then estimate statistics from the sample.
+//! the `Worp` builder, then estimate statistics from the sample.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use worp::api::{StreamSummary, WorSampler};
 use worp::data::zipf::ZipfStream;
 use worp::estimate::{moment_estimate, sparsify};
-use worp::sampler::worp1::OnePassWorp;
-use worp::sampler::SamplerConfig;
 use worp::util::fmt::{sci, Table};
+use worp::Worp;
 
 fn main() {
     // 1. a stream of 1M (key, 1.0) elements, Zipf[1.1] over 10k keys
     let n = 10_000;
     let stream = ZipfStream::new(n, 1.1, 1_000_000, 42);
 
-    // 2. a composable 1-pass WORp sampler: p=1 (sample ∝ frequency), k=64
-    let cfg = SamplerConfig::new(1.0, 64).with_seed(7).with_domain(n);
-    let mut sampler = OnePassWorp::new(cfg);
+    // 2. a composable 1-pass WORp sampler via the builder:
+    //    p=1 (sample ∝ frequency), k=64, shared randomization seed 7
+    let mut sampler = Worp::p(1.0)
+        .k(64)
+        .one_pass()
+        .seed(7)
+        .domain(n)
+        .build()
+        .expect("valid sampler config");
     for e in stream {
         sampler.process(&e);
     }
 
     // 3. the sample: k keys WOR by frequency + approximate frequencies
-    let sample = sampler.sample();
+    let sample = sampler.sample().expect("single-pass sampler");
     let mut t = Table::new("1-pass WORp sample (top 10)", &["key", "ν̂", "ν̂* (transformed)"]);
     for e in sample.entries.iter().take(10) {
         t.row(&[e.key.to_string(), sci(e.freq), sci(e.transformed)]);
@@ -36,5 +42,5 @@ fn main() {
     // 5. the sample as a sparse representation of ν
     let sparse = sparsify(&sample, &|v| v);
     println!("sparse summary holds {} weighted entries", sparse.len());
-    println!("sketch size: {} words for k = 64", sampler.size_words());
+    println!("summary size: {} words for k = 64", sampler.size_words());
 }

@@ -68,6 +68,37 @@ fn main() {
         s.processed()
     });
 
+    // same work through the unified trait surface: per-element vs the
+    // vectorized process_batch override (what the pipeline workers call)
+    b.bench_throughput("worp1 via StreamSummary::process", m, || {
+        let mut s = OnePassWorp::new(cfg.clone());
+        for e in &stream {
+            worp::api::StreamSummary::process(&mut s, e);
+        }
+        s.processed()
+    });
+    b.bench_throughput("worp1 via StreamSummary::process_batch(4096)", m, || {
+        let mut s = OnePassWorp::new(cfg.clone());
+        for chunk in stream.chunks(4096) {
+            worp::api::StreamSummary::process_batch(&mut s, chunk);
+        }
+        s.processed()
+    });
+    b.bench_throughput("worp1 via Box<dyn WorSampler> batch(4096)", m, || {
+        let mut s = worp::Worp::p(1.0)
+            .k(100)
+            .one_pass()
+            .seed(3)
+            .domain(100_000)
+            .sketch_shape(5, 1024)
+            .build()
+            .unwrap();
+        for chunk in stream.chunks(4096) {
+            worp::api::StreamSummary::process_batch(&mut s, chunk);
+        }
+        worp::api::StreamSummary::processed(&s)
+    });
+
     // ---- sharded pipeline scaling
     for &workers in &[1usize, 2, 4, 8] {
         let cfg = cfg.clone();
@@ -88,7 +119,13 @@ fn main() {
         .find(|d| worp::runtime::artifact::ArtifactDir::exists(d));
     match dir {
         Some(d) => {
-            let rt = worp::runtime::XlaRuntime::cpu().unwrap();
+            let rt = match worp::runtime::XlaRuntime::cpu() {
+                Ok(rt) => rt,
+                Err(e) => {
+                    println!("(xla offload benches skipped — {e})");
+                    return;
+                }
+            };
             let a = worp::runtime::artifact::ArtifactDir::open(d).unwrap();
             let sub = &stream[..200_000.min(stream.len())];
             b.bench_throughput("xla countsketch update (batched)", sub.len() as u64, || {

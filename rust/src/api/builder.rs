@@ -1,0 +1,444 @@
+//! The `Worp` builder facade: one fluent entry point that configures and
+//! constructs any of the crate's WOR samplers behind
+//! `Box<dyn `[`WorSampler`]`>`.
+//!
+//! ```no_run
+//! use worp::Worp;
+//!
+//! // ℓ1, k = 64, 1-pass, priority (sequential Poisson) randomization.
+//! let sampler = Worp::p(1.0).k(64).one_pass().priority().seed(7).build().unwrap();
+//! # let _ = sampler;
+//! ```
+//!
+//! Generic call sites that want static dispatch use the typed
+//! constructors ([`Worp::build_one_pass`], [`Worp::build_two_pass`],
+//! [`Worp::build_exact`]) or the concrete types directly.
+
+use super::WorSampler;
+use crate::config::PipelineConfig;
+use crate::error::{Error, Result};
+use crate::sampler::exact::ExactWor;
+use crate::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
+use crate::sampler::windowed::WindowedWorp;
+use crate::sampler::worp1::OnePassWorp;
+use crate::sampler::worp2::TwoPassWorp;
+use crate::sampler::SamplerConfig;
+use crate::util::hashing::BottomKDist;
+
+/// The sampling method a [`Worp`] builder constructs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// 1-pass WORp (paper §5): composable sketch, approximate frequencies.
+    OnePass,
+    /// 2-pass WORp (paper §4): exact p-ppswor sample in two passes.
+    TwoPass,
+    /// Algorithm 1 (paper §6): 1-pass, polynomially-small TV distance.
+    Tv,
+    /// Sliding-window 1-pass WORp (paper Conclusion).
+    Windowed,
+    /// Exact streaming baseline: aggregates frequencies, perfect bottom-k
+    /// sample (linear memory — the "perfect WOR" of Figs 1–2).
+    Exact,
+}
+
+impl Method {
+    /// Parse the CLI / config spelling of a method.
+    pub fn parse(s: &str) -> Result<Method> {
+        match s {
+            "1pass" | "one-pass" | "onepass" => Ok(Method::OnePass),
+            "2pass" | "two-pass" | "twopass" => Ok(Method::TwoPass),
+            "tv" => Ok(Method::Tv),
+            "windowed" | "window" => Ok(Method::Windowed),
+            "exact" | "perfect" => Ok(Method::Exact),
+            other => Err(Error::Config(format!(
+                "unknown method {other:?} (expected 1pass|2pass|tv|windowed|exact)"
+            ))),
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::OnePass => "1pass",
+            Method::TwoPass => "2pass",
+            Method::Tv => "tv",
+            Method::Windowed => "windowed",
+            Method::Exact => "exact",
+        }
+    }
+}
+
+/// Fluent builder for every WOR sampler in the crate. Start with
+/// [`Worp::p`]; defaults match the paper's experiments (§7).
+#[derive(Clone, Debug)]
+pub struct Worp {
+    p: f64,
+    k: usize,
+    q: f64,
+    seed: u64,
+    n: usize,
+    delta: f64,
+    eps: f64,
+    rows: usize,
+    width: usize,
+    dist: BottomKDist,
+    method: Method,
+    window: u64,
+    buckets: usize,
+    tv_kind: SamplerKind,
+    tv_r: usize,
+}
+
+impl Worp {
+    /// Start a builder for ℓp sampling with power `p ∈ (0, 2]`.
+    pub fn p(p: f64) -> Worp {
+        Worp {
+            p,
+            k: 64,
+            q: 2.0,
+            seed: 1,
+            n: 10_000,
+            delta: 0.01,
+            eps: 1.0 / 3.0,
+            rows: 0,
+            width: 0,
+            dist: BottomKDist::Exp,
+            method: Method::OnePass,
+            window: 0,
+            buckets: 8,
+            tv_kind: SamplerKind::Oracle,
+            tv_r: 0,
+        }
+    }
+
+    /// Sample size `k ≥ 1`.
+    pub fn k(mut self, k: usize) -> Worp {
+        self.k = k;
+        self
+    }
+
+    /// Shared randomization seed (transform + sketch hashes). Samplers
+    /// that should be mergeable or coordinated must share it.
+    pub fn seed(mut self, seed: u64) -> Worp {
+        self.seed = seed;
+        self
+    }
+
+    /// Key-domain size `n` used for Ψ calibration.
+    pub fn domain(mut self, n: usize) -> Worp {
+        self.n = n;
+        self
+    }
+
+    /// rHH norm `q ∈ {1, 2}` (2 = CountSketch, 1 = CountMin; needs q ≥ p).
+    pub fn q(mut self, q: f64) -> Worp {
+        self.q = q;
+        self
+    }
+
+    /// Target failure probability δ.
+    pub fn delta(mut self, delta: f64) -> Worp {
+        self.delta = delta;
+        self
+    }
+
+    /// 1-pass accuracy parameter ε ∈ (0, 1/3].
+    pub fn eps(mut self, eps: f64) -> Worp {
+        self.eps = eps;
+        self
+    }
+
+    /// Explicit sketch shape (rows must be odd); 0-width derives the
+    /// width from the Ψ calibration.
+    pub fn sketch_shape(mut self, rows: usize, width: usize) -> Worp {
+        self.rows = rows;
+        self.width = width;
+        self
+    }
+
+    /// ppswor randomization (`D = Exp[1]`, the paper default).
+    pub fn ppswor(mut self) -> Worp {
+        self.dist = BottomKDist::Exp;
+        self
+    }
+
+    /// Priority (sequential Poisson) randomization (`D = U[0,1]`).
+    pub fn priority(mut self) -> Worp {
+        self.dist = BottomKDist::Uniform;
+        self
+    }
+
+    /// Select the 1-pass WORp method.
+    pub fn one_pass(mut self) -> Worp {
+        self.method = Method::OnePass;
+        self
+    }
+
+    /// Select the 2-pass WORp method (exact sample, two stream passes).
+    pub fn two_pass(mut self) -> Worp {
+        self.method = Method::TwoPass;
+        self
+    }
+
+    /// Select the exact streaming baseline (linear memory).
+    pub fn exact(mut self) -> Worp {
+        self.method = Method::Exact;
+        self
+    }
+
+    /// Select the low-TV Algorithm 1 with the exact-oracle substrate.
+    pub fn tv(mut self) -> Worp {
+        self.method = Method::Tv;
+        self.tv_kind = SamplerKind::Oracle;
+        self
+    }
+
+    /// Select Algorithm 1 with the sketch-based precision-sampler
+    /// substrate (honest 1-pass memory profile).
+    pub fn tv_precision(mut self) -> Worp {
+        self.method = Method::Tv;
+        self.tv_kind = SamplerKind::Precision;
+        self
+    }
+
+    /// Override Algorithm 1's single-sampler count `r` (default `Θ(k log n)`).
+    pub fn tv_r(mut self, r: usize) -> Worp {
+        self.tv_r = r;
+        self
+    }
+
+    /// Select the sliding-window method over the last `window` time units
+    /// split into `buckets` sub-sketches.
+    pub fn windowed(mut self, window: u64, buckets: usize) -> Worp {
+        self.method = Method::Windowed;
+        self.window = window;
+        self.buckets = buckets;
+        self
+    }
+
+    /// Select a method by enum (CLI / config path).
+    pub fn method(mut self, m: Method) -> Worp {
+        self.method = m;
+        self
+    }
+
+    /// Seed a builder from the launcher config (method, dist, and all
+    /// sampler/sketch parameters).
+    pub fn from_config(cfg: &PipelineConfig) -> Result<Worp> {
+        cfg.validate()?;
+        let mut w = Worp::p(cfg.p)
+            .k(cfg.k)
+            .q(cfg.q)
+            .seed(cfg.seed)
+            .domain(cfg.n)
+            .delta(cfg.delta)
+            .eps(cfg.eps)
+            .sketch_shape(cfg.rows, cfg.width)
+            .method(Method::parse(&cfg.method)?);
+        w = match cfg.dist.as_str() {
+            "priority" => w.priority(),
+            _ => w.ppswor(),
+        };
+        if cfg.window > 0 {
+            w.window = cfg.window;
+            w.buckets = cfg.buckets.max(1);
+        }
+        Ok(w)
+    }
+
+    /// The chosen method.
+    pub fn selected_method(&self) -> Method {
+        self.method
+    }
+
+    /// Validate and materialize the [`SamplerConfig`] this builder
+    /// prescribes (errors instead of panicking on bad parameters).
+    pub fn sampler_config(&self) -> Result<SamplerConfig> {
+        if !(self.p > 0.0 && self.p <= 2.0) {
+            return Err(Error::Config(format!("p must be in (0,2], got {}", self.p)));
+        }
+        if self.k == 0 {
+            return Err(Error::Config("k must be positive".into()));
+        }
+        if self.q != 1.0 && self.q != 2.0 {
+            return Err(Error::Config(format!("q must be 1 or 2, got {}", self.q)));
+        }
+        if self.q < self.p {
+            return Err(Error::Config(format!(
+                "need q >= p for the rHH reduction (q={}, p={})",
+                self.q, self.p
+            )));
+        }
+        if self.rows > 0 && self.rows % 2 == 0 {
+            return Err(Error::Config(format!(
+                "sketch rows must be odd for the median estimator, got {}",
+                self.rows
+            )));
+        }
+        if !(self.eps > 0.0 && self.eps <= 1.0 / 3.0 + 1e-12) {
+            return Err(Error::Config(format!(
+                "eps must be in (0, 1/3], got {}",
+                self.eps
+            )));
+        }
+        if !(self.delta > 0.0 && self.delta < 1.0) {
+            return Err(Error::Config(format!(
+                "delta must be in (0,1), got {}",
+                self.delta
+            )));
+        }
+        Ok(SamplerConfig {
+            p: self.p,
+            k: self.k,
+            q: self.q,
+            seed: self.seed,
+            n: self.n,
+            delta: self.delta,
+            eps: self.eps,
+            rows: self.rows,
+            width: self.width,
+            dist: self.dist,
+        })
+    }
+
+    /// Build the selected sampler behind `Box<dyn WorSampler>`.
+    pub fn build(&self) -> Result<Box<dyn WorSampler>> {
+        let cfg = self.sampler_config()?;
+        Ok(match self.method {
+            Method::OnePass => Box::new(OnePassWorp::new(cfg)),
+            Method::TwoPass => Box::new(TwoPassWorp::new(cfg)),
+            Method::Exact => Box::new(ExactWor::new(cfg)),
+            Method::Windowed => {
+                if self.window == 0 || self.buckets == 0 {
+                    return Err(Error::Config(
+                        "windowed method requires .windowed(window, buckets) with window > 0"
+                            .into(),
+                    ));
+                }
+                if self.q < 2.0 {
+                    return Err(Error::Config(
+                        "windowed WORp requires the CountSketch (q=2) path".into(),
+                    ));
+                }
+                Box::new(WindowedWorp::new(cfg, self.window, self.buckets))
+            }
+            Method::Tv => {
+                // Algorithm 1 draws successive-WOR (ppswor-style) tuples;
+                // it has no bottom-k transform to re-randomize, so a
+                // priority request cannot be honored — fail loudly.
+                if self.dist != BottomKDist::Exp {
+                    return Err(Error::Config(
+                        "tv method draws ppswor-style tuples; dist = priority is not supported"
+                            .into(),
+                    ));
+                }
+                let mut tvc =
+                    TvSamplerConfig::new(self.p, self.k, self.n, self.seed, self.tv_kind);
+                if self.rows > 0 {
+                    tvc.rhh_rows = self.rows;
+                }
+                if self.width > 0 {
+                    tvc.rhh_width = self.width;
+                }
+                if self.tv_r > 0 {
+                    tvc = tvc.with_r(self.tv_r);
+                }
+                Box::new(TvSampler::new(tvc))
+            }
+        })
+    }
+
+    /// Statically-typed 1-pass construction (generic call sites).
+    pub fn build_one_pass(&self) -> Result<OnePassWorp> {
+        Ok(OnePassWorp::new(self.sampler_config()?))
+    }
+
+    /// Statically-typed 2-pass construction.
+    pub fn build_two_pass(&self) -> Result<TwoPassWorp> {
+        Ok(TwoPassWorp::new(self.sampler_config()?))
+    }
+
+    /// Statically-typed exact-baseline construction.
+    pub fn build_exact(&self) -> Result<ExactWor> {
+        Ok(ExactWor::new(self.sampler_config()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrips() {
+        for m in [
+            Method::OnePass,
+            Method::TwoPass,
+            Method::Tv,
+            Method::Windowed,
+            Method::Exact,
+        ] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn builder_wires_config() {
+        let w = Worp::p(2.0)
+            .k(32)
+            .seed(9)
+            .domain(500)
+            .sketch_shape(5, 128)
+            .priority();
+        let cfg = w.sampler_config().unwrap();
+        assert_eq!(cfg.p, 2.0);
+        assert_eq!(cfg.k, 32);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.n, 500);
+        assert_eq!(cfg.rows, 5);
+        assert_eq!(cfg.width, 128);
+        assert_eq!(cfg.dist, BottomKDist::Uniform);
+    }
+
+    #[test]
+    fn invalid_parameters_error_instead_of_panicking() {
+        assert!(Worp::p(3.0).sampler_config().is_err());
+        assert!(Worp::p(1.0).k(0).sampler_config().is_err());
+        assert!(Worp::p(2.0).q(1.0).sampler_config().is_err()); // q < p
+        assert!(Worp::p(1.0).q(1.5).sampler_config().is_err());
+        assert!(Worp::p(1.0).sketch_shape(4, 64).sampler_config().is_err());
+        assert!(Worp::p(1.0).eps(0.9).sampler_config().is_err());
+    }
+
+    #[test]
+    fn build_constructs_every_method() {
+        assert_eq!(Worp::p(1.0).one_pass().build().unwrap().name(), "1pass");
+        assert_eq!(Worp::p(1.0).two_pass().build().unwrap().name(), "2pass");
+        assert_eq!(Worp::p(1.0).exact().build().unwrap().name(), "exact");
+        assert_eq!(Worp::p(1.0).k(4).tv().build().unwrap().name(), "tv");
+        assert_eq!(
+            Worp::p(1.0).windowed(100, 10).build().unwrap().name(),
+            "windowed"
+        );
+        // windowed without a window is a config error
+        assert!(Worp::p(1.0).method(Method::Windowed).build().is_err());
+        // windowed on the counter path is a config error
+        assert!(Worp::p(1.0).q(1.0).windowed(10, 2).build().is_err());
+        // tv cannot honor a priority randomization — loud error, not a
+        // silently-mislabeled sample
+        assert!(Worp::p(1.0).k(4).tv().priority().build().is_err());
+    }
+
+    #[test]
+    fn from_config_respects_method_and_dist() {
+        let mut pc = PipelineConfig::default();
+        pc.method = "2pass".into();
+        pc.dist = "priority".into();
+        pc.p = 0.5;
+        let w = Worp::from_config(&pc).unwrap();
+        assert_eq!(w.selected_method(), Method::TwoPass);
+        let cfg = w.sampler_config().unwrap();
+        assert_eq!(cfg.dist, BottomKDist::Uniform);
+        assert_eq!(cfg.p, 0.5);
+    }
+}

@@ -1,0 +1,397 @@
+//! The unified summary API: every sampler and sketch in this crate is a
+//! [`StreamSummary`]; the composable ones are [`Mergeable`]; the ones
+//! that produce an output implement [`Finalize`]; multi-pass methods are
+//! first-class state machines via [`MultiPass`]; and every WOR sampler
+//! can be driven behind `Box<dyn `[`WorSampler`]`>` for dynamic dispatch
+//! (the CLI / pipeline path) while generic call sites keep static
+//! dispatch.
+//!
+//! This is the paper's composability story surfaced at the API level
+//! (Cohen–Pagh–Woodruff 2020; cf. "Composable Sketches for Functions of
+//! Frequencies"): a WOR ℓp sampler *is* a mergeable sketch, so
+//! distributed / sharded execution falls out of one `merge` property.
+//! [`crate::pipeline::run_sharded`] accepts any `StreamSummary`, the
+//! merge tree folds any `Mergeable`, and [`crate::coordinator`] drives
+//! any `WorSampler` — no per-sampler glue anywhere.
+//!
+//! # Merge safety
+//!
+//! Merging summaries built with different seeds or shapes silently
+//! corrupts estimates, so [`Mergeable::merge`] *always* compares
+//! [`Fingerprint`]s first and fails loudly with
+//! [`Error::Incompatible`] on mismatch. Implementations provide
+//! [`Mergeable::merge_unchecked`]; callers use `merge`.
+//!
+//! # Construction
+//!
+//! Use the [`builder::Worp`] facade:
+//!
+//! ```no_run
+//! use worp::api::{StreamSummary, WorSampler};
+//! use worp::Worp;
+//!
+//! let mut s = Worp::p(1.0).k(64).one_pass().seed(7).build().unwrap();
+//! s.process(&worp::data::Element::new(42, 1.0));
+//! let sample = s.sample().unwrap();
+//! # let _ = sample;
+//! ```
+
+pub mod builder;
+
+use crate::data::Element;
+use crate::error::{Error, Result};
+use crate::sampler::{Sample, SamplerConfig};
+use crate::sketch::countmin::CountMin;
+use crate::sketch::countsketch::CountSketch;
+use crate::sketch::{AnyRhh, RhhSketch};
+use crate::util::hashing::{hash64, hash_bytes, BottomKDist};
+use std::any::Any;
+
+// ---------------------------------------------------------------------------
+// Fingerprint
+
+/// A compatibility fingerprint: a digest of everything that must agree
+/// for two summaries to be mergeable (concrete type, seed, shape, power,
+/// distribution, pass index, ...). Equal fingerprints ⇒ compatible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint(u64);
+
+impl Fingerprint {
+    /// Start a fingerprint from a type tag (usually the summary's name).
+    pub fn new(tag: &str) -> Self {
+        Fingerprint(hash_bytes(0xF16E_5EED, tag.as_bytes()))
+    }
+
+    /// Fold an integer component into the fingerprint.
+    pub fn with(self, x: u64) -> Self {
+        Fingerprint(hash64(self.0, x))
+    }
+
+    /// Fold a float component (by bit pattern).
+    pub fn with_f64(self, x: f64) -> Self {
+        self.with(x.to_bits())
+    }
+
+    /// Fold the bottom-k distribution choice.
+    pub fn with_dist(self, d: BottomKDist) -> Self {
+        self.with(match d {
+            BottomKDist::Exp => 1,
+            BottomKDist::Uniform => 2,
+        })
+    }
+
+    /// The digest value.
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Fingerprint of the shared [`SamplerConfig`] components (everything
+/// that defines the randomization and sketch shape).
+pub fn config_fingerprint(tag: &str, cfg: &SamplerConfig) -> Fingerprint {
+    Fingerprint::new(tag)
+        .with_f64(cfg.p)
+        .with(cfg.k as u64)
+        .with_f64(cfg.q)
+        .with(cfg.seed)
+        .with(cfg.n as u64)
+        .with_f64(cfg.delta)
+        .with_f64(cfg.eps)
+        .with(cfg.rows as u64)
+        .with(cfg.width as u64)
+        .with_dist(cfg.dist)
+}
+
+// ---------------------------------------------------------------------------
+// Core traits
+
+/// Anything that consumes a stream of [`Element`]s and maintains a
+/// bounded summary: sketches, samplers, pass states, sinks.
+pub trait StreamSummary {
+    /// Process one element.
+    fn process(&mut self, e: &Element);
+
+    /// Process a micro-batch. The default is a plain loop; concrete
+    /// summaries may override it with a vectorized / amortized path
+    /// (e.g. [`crate::sampler::worp1::OnePassWorp`] defers candidate
+    /// maintenance to once per batch).
+    fn process_batch(&mut self, batch: &[Element]) {
+        for e in batch {
+            self.process(e);
+        }
+    }
+
+    /// Summary size in memory words (f64/u64 cells).
+    fn size_words(&self) -> usize;
+
+    /// Elements processed so far (in the current pass, for multi-pass
+    /// summaries).
+    fn processed(&self) -> u64;
+}
+
+/// A composable summary: merging the summaries of a sharded stream is
+/// equivalent to summarizing the whole stream.
+pub trait Mergeable: StreamSummary {
+    /// Digest of everything that must agree for a merge to be sound.
+    fn fingerprint(&self) -> Fingerprint;
+
+    /// Merge `other` into `self` without the compatibility check.
+    /// Prefer [`Mergeable::merge`].
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()>;
+
+    /// Fail with [`Error::Incompatible`] unless the fingerprints agree.
+    fn check_compatible(&self, other: &Self) -> Result<()> {
+        let (a, b) = (self.fingerprint(), other.fingerprint());
+        if a != b {
+            return Err(Error::Incompatible(format!(
+                "fingerprint mismatch: {:#018x} vs {:#018x} — summaries were built \
+                 with different seeds, shapes or parameters",
+                a.value(),
+                b.value()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Checked merge: verifies compatibility, then merges.
+    fn merge(&mut self, other: &Self) -> Result<()> {
+        self.check_compatible(other)?;
+        self.merge_unchecked(other)
+    }
+}
+
+/// A summary with a final output (a [`Sample`] for WOR samplers, a draw
+/// for single samplers, ...). Finalization never consumes the summary:
+/// streaming can continue afterwards.
+pub trait Finalize {
+    /// The output type.
+    type Output;
+
+    /// Produce the output from the current state.
+    fn finalize(&self) -> Self::Output;
+}
+
+/// Pass structure of a summary. Single-pass summaries use the defaults;
+/// multi-pass methods (2-pass WORp) override all three and model the
+/// pass-I → pass-II handoff as an explicit state transition.
+pub trait MultiPass {
+    /// Total number of passes over the stream (≥ 1).
+    fn passes(&self) -> usize {
+        1
+    }
+
+    /// Current pass index (0-based).
+    fn pass(&self) -> usize {
+        0
+    }
+
+    /// Seal the current pass and arm the next. Errors with
+    /// [`Error::State`] when there is no next pass.
+    fn advance(&mut self) -> Result<()> {
+        Err(Error::State(
+            "single-pass summary has no next pass to advance to".into(),
+        ))
+    }
+}
+
+/// Object-safe facade over every WOR sampler: stream in, [`Sample`] out,
+/// mergeable across shards, clonable into workers. Built by
+/// [`builder::Worp`]; driven by [`crate::coordinator::Coordinator::run_dyn`].
+pub trait WorSampler: StreamSummary + MultiPass + Send {
+    /// Extract the WOR sample. Errors with [`Error::State`] when the
+    /// sampler still has passes to run (see [`MultiPass`]).
+    fn sample(&self) -> Result<Sample>;
+
+    /// Compatibility digest (same contract as [`Mergeable::fingerprint`]).
+    fn fingerprint(&self) -> Fingerprint;
+
+    /// Merge another sampler of the *same concrete type and fingerprint*;
+    /// anything else fails with [`Error::Incompatible`].
+    fn merge_dyn(&mut self, other: &dyn WorSampler) -> Result<()>;
+
+    /// Clone into a fresh box (workers clone the leader's prototype).
+    fn clone_box(&self) -> Box<dyn WorSampler>;
+
+    /// Downcast support for [`WorSampler::merge_dyn`].
+    fn as_any(&self) -> &dyn Any;
+
+    /// Short method name for diagnostics ("1pass", "2pass", ...).
+    fn name(&self) -> &'static str;
+
+    /// Whether sharding this sampler across parallel workers preserves
+    /// its semantics. `false` for summaries whose [`StreamSummary::process`]
+    /// depends on a stream-global clock (the windowed sampler's implicit
+    /// per-element ticks are shard-local, so per-shard windows would
+    /// cover different spans of the stream); the coordinator serializes
+    /// such samplers onto one worker instead of merging skewed clocks.
+    fn parallel_safe(&self) -> bool {
+        true
+    }
+}
+
+impl Clone for Box<dyn WorSampler> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Boxed summaries are summaries (lets `Box<dyn WorSampler>` flow through
+/// the sharded pipeline and the merge tree unchanged).
+impl<T: StreamSummary + ?Sized> StreamSummary for Box<T> {
+    fn process(&mut self, e: &Element) {
+        (**self).process(e)
+    }
+
+    fn process_batch(&mut self, batch: &[Element]) {
+        (**self).process_batch(batch)
+    }
+
+    fn size_words(&self) -> usize {
+        (**self).size_words()
+    }
+
+    fn processed(&self) -> u64 {
+        (**self).processed()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sketch impls (the samplers implement the traits in their own modules)
+
+impl StreamSummary for CountSketch {
+    fn process(&mut self, e: &Element) {
+        RhhSketch::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        RhhSketch::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        CountSketch::processed(self)
+    }
+}
+
+impl Mergeable for CountSketch {
+    fn fingerprint(&self) -> Fingerprint {
+        let p = self.params();
+        Fingerprint::new("countsketch")
+            .with(p.rows as u64)
+            .with(p.width as u64)
+            .with(p.seed)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        RhhSketch::merge(self, other)
+    }
+}
+
+impl StreamSummary for CountMin {
+    fn process(&mut self, e: &Element) {
+        RhhSketch::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        RhhSketch::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        CountMin::processed(self)
+    }
+}
+
+impl Mergeable for CountMin {
+    fn fingerprint(&self) -> Fingerprint {
+        let p = self.params();
+        Fingerprint::new("countmin")
+            .with(p.rows as u64)
+            .with(p.width as u64)
+            .with(p.seed)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        RhhSketch::merge(self, other)
+    }
+}
+
+impl StreamSummary for AnyRhh {
+    fn process(&mut self, e: &Element) {
+        RhhSketch::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        RhhSketch::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        AnyRhh::processed(self)
+    }
+}
+
+impl Mergeable for AnyRhh {
+    fn fingerprint(&self) -> Fingerprint {
+        let p = self.params();
+        Fingerprint::new("anyrhh")
+            .with_f64(self.q())
+            .with(p.rows as u64)
+            .with(p.width as u64)
+            .with(p.seed)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        RhhSketch::merge(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchParams;
+
+    #[test]
+    fn fingerprints_separate_components() {
+        let base = Fingerprint::new("x").with(1).with_f64(2.0);
+        assert_eq!(base, Fingerprint::new("x").with(1).with_f64(2.0));
+        assert_ne!(base, Fingerprint::new("y").with(1).with_f64(2.0));
+        assert_ne!(base, Fingerprint::new("x").with(2).with_f64(2.0));
+        assert_ne!(base, Fingerprint::new("x").with(1).with_f64(2.5));
+        assert_ne!(
+            Fingerprint::new("x").with_dist(BottomKDist::Exp),
+            Fingerprint::new("x").with_dist(BottomKDist::Uniform)
+        );
+    }
+
+    #[test]
+    fn sketch_merge_checks_fingerprint() {
+        let mut a = CountSketch::new(SketchParams::new(5, 64, 1));
+        let b = CountSketch::new(SketchParams::new(5, 64, 2));
+        let err = Mergeable::merge(&mut a, &b).unwrap_err();
+        assert!(matches!(err, Error::Incompatible(_)), "{err}");
+        let c = CountSketch::new(SketchParams::new(5, 64, 1));
+        assert!(Mergeable::merge(&mut a, &c).is_ok());
+    }
+
+    #[test]
+    fn batch_default_equals_loop() {
+        let params = SketchParams::new(5, 128, 9);
+        let mut a = CountSketch::new(params);
+        let mut b = CountSketch::new(params);
+        let batch: Vec<Element> = (0..100u64)
+            .map(|i| Element::new(i % 13, i as f64 - 50.0))
+            .collect();
+        for e in &batch {
+            StreamSummary::process(&mut a, e);
+        }
+        StreamSummary::process_batch(&mut b, &batch);
+        assert_eq!(a.table(), b.table());
+        assert_eq!(StreamSummary::processed(&a), StreamSummary::processed(&b));
+    }
+
+    #[test]
+    fn boxed_summary_delegates() {
+        let mut boxed: Box<CountSketch> = Box::new(CountSketch::new(SketchParams::new(3, 32, 7)));
+        StreamSummary::process(&mut boxed, &Element::new(5, 2.0));
+        assert_eq!(StreamSummary::processed(&boxed), 1);
+        assert_eq!(StreamSummary::size_words(&boxed), 96);
+    }
+}

@@ -1,8 +1,23 @@
-//! Hand-rolled CLI argument parsing (no `clap` offline — DESIGN.md §7).
+//! Command-line surface: hand-rolled argument parsing (no `clap` offline
+//! — DESIGN.md §7) plus the command implementations the `worp` binary
+//! dispatches to.
 //!
 //! Grammar: `worp <subcommand> [--key value]... [--flag]...`
+//!
+//! The `sample` command is method-agnostic: it builds a
+//! `Box<dyn WorSampler>` through the [`Worp`] builder and hands it to
+//! [`Coordinator::run_dyn`] — adding a sampler to the crate requires no
+//! CLI changes beyond the builder.
 
+use crate::api::builder::{Method, Worp};
+use crate::config::PipelineConfig;
+use crate::coordinator::{Coordinator, VecSource};
+use crate::data::stream::GradientStream;
+use crate::data::zipf::ZipfStream;
+use crate::data::Element;
 use crate::error::{Error, Result};
+use crate::estimate::moment_estimate;
+use crate::util::fmt::{sci, Table};
 use std::collections::HashMap;
 
 /// Parsed command line: subcommand + options.
@@ -74,15 +89,179 @@ USAGE:
 
 COMMANDS:
     sample      run a WORp sampler over a generated workload
-                  --config <file.toml>   launcher config (see examples/)
-                  --method <1pass|2pass|tv>   (default 1pass)
+                  --config <worp.toml>   TOML config (see worp.example.toml);
+                                         flags below override its values
+                  --method <1pass|2pass|tv|windowed|exact>
+                  --dist <ppswor|priority>
                   --p <f64> --k <n> --workers <n> --alpha <f64>
+                  --window <n> --buckets <n>   (windowed method)
                   --backend <native|xla>
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
     info        print runtime / artifact status
     help        show this text
 "
+}
+
+/// Dispatch a parsed command line.
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "sample" => cmd_sample(args),
+        "psi" => cmd_psi(args),
+        "info" => cmd_info(args),
+        "" | "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown command {other:?}; see `worp help`"
+        ))),
+    }
+}
+
+/// Resolve the launcher config: `--config <file.toml>` (if given) with
+/// CLI flags layered on top.
+pub fn load_config(args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => PipelineConfig::load(path)?,
+        None => PipelineConfig::default(),
+    };
+    // CLI overrides
+    cfg.p = args.parse_or("p", cfg.p)?;
+    cfg.k = args.parse_or("k", cfg.k)?;
+    cfg.q = args.parse_or("q", cfg.q)?;
+    cfg.eps = args.parse_or("eps", cfg.eps)?;
+    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    cfg.workers = args.parse_or("workers", cfg.workers)?;
+    cfg.n = args.parse_or("n", cfg.n)?;
+    cfg.alpha = args.parse_or("alpha", cfg.alpha)?;
+    cfg.stream_len = args.parse_or("stream-len", cfg.stream_len)?;
+    cfg.rows = args.parse_or("rows", cfg.rows)?;
+    cfg.width = args.parse_or("width", cfg.width)?;
+    cfg.window = args.parse_or("window", cfg.window)?;
+    cfg.buckets = args.parse_or("buckets", cfg.buckets)?;
+    if let Some(m) = args.get("method") {
+        cfg.method = m.to_string();
+    }
+    if let Some(d) = args.get("dist") {
+        cfg.dist = d.to_string();
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+    }
+    if let Some(w) = args.get("workload") {
+        cfg.workload = w.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn make_stream(cfg: &PipelineConfig) -> Vec<Element> {
+    match cfg.workload.as_str() {
+        "gradient" => GradientStream::new(cfg.n, cfg.alpha, cfg.stream_len, cfg.seed ^ 0xE1E)
+            .collect(),
+        _ => ZipfStream::new(cfg.n, cfg.alpha, cfg.stream_len, cfg.seed ^ 0xE1E).collect(),
+    }
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let coord = Coordinator::from_config(&cfg)?;
+    println!(
+        "workload={} n={} alpha={} stream_len={} | p={} k={} method={} dist={} backend={} workers={}",
+        cfg.workload,
+        cfg.n,
+        cfg.alpha,
+        cfg.stream_len,
+        cfg.p,
+        cfg.k,
+        cfg.method,
+        cfg.dist,
+        cfg.backend,
+        cfg.workers
+    );
+    let elems = make_stream(&cfg);
+    let (sample, metrics) = match cfg.backend.as_str() {
+        // the XLA offload is a backend of the 1-pass sketch update only
+        "xla" => {
+            if Method::parse(&cfg.method)? != Method::OnePass {
+                return Err(Error::Config(format!(
+                    "backend xla supports method 1pass only (got {})",
+                    cfg.method
+                )));
+            }
+            coord.one_pass_xla(elems, &cfg.artifacts_dir)?
+        }
+        _ => {
+            let sampler = Worp::from_config(&cfg)?.build()?;
+            coord.run_dyn(&VecSource(elems), sampler)?
+        }
+    };
+    println!("pipeline: {}", metrics.report());
+    let mut t = Table::new(
+        &format!("top sampled keys (of {})", sample.len()),
+        &["key", "freq", "transformed"],
+    );
+    for e in sample.entries.iter().take(15) {
+        t.row(&[e.key.to_string(), sci(e.freq), sci(e.transformed)]);
+    }
+    t.print();
+    println!("tau = {}", sci(sample.tau));
+    if sample.tau > 0.0 {
+        for p_prime in [1.0, 2.0] {
+            println!(
+                "estimated ||nu||_{p_prime}^{p_prime} = {}",
+                sci(moment_estimate(&sample, p_prime))
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_psi(args: &Args) -> Result<()> {
+    let n = args.parse_or("n", 10_000usize)?;
+    let k = args.parse_or("k", 100usize)?;
+    let rho = args.parse_or("rho", 2.0f64)?;
+    let delta = args.parse_or("delta", 0.01f64)?;
+    let trials = args.parse_or("trials", 2_000usize)?;
+    let psi = crate::psi::psi_estimate(n, k, rho, delta, trials, 0xCA11B);
+    let lb2 = crate::psi::psi_lower_bound(n, k, rho, 2.0);
+    println!(
+        "Psi_{{n={n},k={k},rho={rho}}}(delta={delta}) ~= {psi:.5}  (thm 3.1 bound @C=2: {lb2:.5})"
+    );
+    // the effective constant C the simulation implies (paper App B.1)
+    let ln_nk = ((n as f64) / (k as f64)).ln().max(1.0);
+    let c = if rho <= 1.0 {
+        1.0 / (psi * ln_nk)
+    } else {
+        (rho - 1.0f64).max(1.0 / ln_nk) / psi
+    };
+    println!("implied constant C = {c:.3} (paper: C<2 suffices for k>=10)");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    match crate::runtime::XlaRuntime::cpu() {
+        Ok(rt) => println!(
+            "PJRT: platform={} devices={}",
+            rt.platform(),
+            rt.device_count()
+        ),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    match crate::runtime::artifact::ArtifactDir::open(&dir) {
+        Ok(a) => {
+            for s in a.specs() {
+                println!(
+                    "artifact {}: file={:?} rows={} width={} batch={}",
+                    s.name, s.file, s.rows, s.width, s.batch
+                );
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -126,5 +305,37 @@ mod tests {
         let a = parse(&["sample", "--fast", "--k", "5"]);
         assert!(a.has_flag("fast"));
         assert_eq!(a.get("k"), Some("5"));
+    }
+
+    #[test]
+    fn load_config_layers_cli_over_file_defaults() {
+        let a = parse(&["sample", "--method", "exact", "--dist", "priority", "--k", "7"]);
+        let cfg = load_config(&a).unwrap();
+        assert_eq!(cfg.method, "exact");
+        assert_eq!(cfg.dist, "priority");
+        assert_eq!(cfg.k, 7);
+        // bad method spelling surfaces as a config error
+        let a = parse(&["sample", "--method", "zeropass"]);
+        assert!(load_config(&a).is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrips_through_load_config() {
+        let dir = std::env::temp_dir().join("worp_cli_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("worp.toml");
+        std::fs::write(
+            &path,
+            "[sampler]\nmethod = \"2pass\"\nk = 33\n\n[pipeline]\nworkers = 3\n",
+        )
+        .unwrap();
+        let a = parse(&["sample", "--config", path.to_str().unwrap()]);
+        let cfg = load_config(&a).unwrap();
+        assert_eq!(cfg.method, "2pass");
+        assert_eq!(cfg.k, 33);
+        assert_eq!(cfg.workers, 3);
+        // CLI still wins over the file
+        let a = parse(&["sample", "--config", path.to_str().unwrap(), "--k", "5"]);
+        assert_eq!(load_config(&a).unwrap().k, 5);
     }
 }

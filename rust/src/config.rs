@@ -200,7 +200,8 @@ fn split_array(s: &str) -> Vec<&str> {
 }
 
 /// Pipeline launcher configuration (the `[pipeline]`, `[sampler]`,
-/// `[sketch]`, `[workload]` sections of a config file).
+/// `[sketch]`, `[workload]` sections of a config file — see
+/// `worp.example.toml` at the repository root for a commented reference).
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
     /// ℓp power `p ∈ (0, 2]`.
@@ -209,6 +210,17 @@ pub struct PipelineConfig {
     pub k: usize,
     /// rHH moment `q ∈ {1, 2}` (2 = CountSketch, 1 = CountMin/counters).
     pub q: f64,
+    /// Sampling method: "1pass", "2pass", "tv", "windowed" or "exact".
+    pub method: String,
+    /// Bottom-k randomization: "ppswor" (Exp[1]) or "priority" (U[0,1]).
+    pub dist: String,
+    /// 1-pass accuracy parameter ε ∈ (0, 1/3].
+    pub eps: f64,
+    /// Sliding-window length in time units (0 = unwindowed; required > 0
+    /// when `method = "windowed"`).
+    pub window: u64,
+    /// Sub-sketch buckets covering the window.
+    pub buckets: usize,
     /// Shared randomization seed (defines `r_x` and sketch hashes).
     pub seed: u64,
     /// Number of shard workers.
@@ -243,6 +255,11 @@ impl Default for PipelineConfig {
             p: 1.0,
             k: 100,
             q: 2.0,
+            method: "1pass".into(),
+            dist: "ppswor".into(),
+            eps: 1.0 / 3.0,
+            window: 0,
+            buckets: 10,
             seed: 42,
             workers: 4,
             batch: 4096,
@@ -268,6 +285,11 @@ impl PipelineConfig {
             p: doc.f64_or("sampler", "p", d.p),
             k: doc.usize_or("sampler", "k", d.k),
             q: doc.f64_or("sketch", "q", d.q),
+            method: doc.str_or("sampler", "method", &d.method),
+            dist: doc.str_or("sampler", "dist", &d.dist),
+            eps: doc.f64_or("sampler", "eps", d.eps),
+            window: doc.i64_or("sampler", "window", d.window as i64).max(0) as u64,
+            buckets: doc.usize_or("sampler", "buckets", d.buckets),
             seed: doc.i64_or("sampler", "seed", d.seed as i64) as u64,
             workers: doc.usize_or("pipeline", "workers", d.workers),
             batch: doc.usize_or("pipeline", "batch", d.batch),
@@ -317,6 +339,21 @@ impl PipelineConfig {
         if self.workers == 0 || self.batch == 0 || self.channel_cap == 0 {
             return Err(Error::Config("workers/batch/channel_cap must be positive".into()));
         }
+        crate::api::builder::Method::parse(&self.method)?;
+        match self.dist.as_str() {
+            "ppswor" | "priority" => {}
+            d => {
+                return Err(Error::Config(format!(
+                    "unknown dist {d:?} (expected ppswor|priority)"
+                )))
+            }
+        }
+        if !(self.eps > 0.0 && self.eps <= 1.0 / 3.0 + 1e-12) {
+            return Err(Error::Config(format!(
+                "eps must be in (0, 1/3], got {}",
+                self.eps
+            )));
+        }
         match self.backend.as_str() {
             "native" | "xla" => {}
             b => return Err(Error::Config(format!("unknown backend {b:?}"))),
@@ -335,6 +372,8 @@ mod tests {
 p = 2.0
 k = 128
 seed = 7
+method = "2pass"
+dist = "priority"
 
 [sketch]
 q = 2 # CountSketch
@@ -381,8 +420,24 @@ stream_len = 50000
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.alpha, 1.5);
         assert_eq!(cfg.n, 1000);
+        assert_eq!(cfg.method, "2pass");
+        assert_eq!(cfg.dist, "priority");
         // defaults preserved
         assert_eq!(cfg.batch, PipelineConfig::default().batch);
+        assert_eq!(cfg.eps, PipelineConfig::default().eps);
+    }
+
+    #[test]
+    fn validation_rejects_bad_method_and_dist() {
+        let mut c = PipelineConfig::default();
+        c.method = "3pass".into();
+        assert!(c.validate().is_err());
+        let mut c = PipelineConfig::default();
+        c.dist = "uniformish".into();
+        assert!(c.validate().is_err());
+        let mut c = PipelineConfig::default();
+        c.eps = 0.5;
+        assert!(c.validate().is_err());
     }
 
     #[test]

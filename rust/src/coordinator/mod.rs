@@ -1,19 +1,26 @@
-//! The coordinator (leader): ties the sharded pipeline to the WORp
-//! samplers — routing, per-shard sampler state, merge tree, two-pass
-//! orchestration, and the XLA-offloaded backend.
+//! The coordinator (leader): ties the sharded pipeline to the unified
+//! summary API — routing, per-shard summary state, merge tree, and the
+//! multi-pass loop — plus the XLA-offloaded backend.
 //!
-//! This is the public entry point a downstream user drives (and what the
-//! `worp` binary launches): hand it a stream (replayable for two-pass)
-//! and a config, get back a [`Sample`] plus run metrics.
+//! Everything is driven through the [`crate::api`] traits:
+//!
+//! - [`Coordinator::run_summary`] shards *any* [`Mergeable`] summary and
+//!   folds the shards back with the fingerprint-checked merge tree;
+//! - [`Coordinator::run_dyn`] drives *any* `Box<dyn `[`WorSampler`]`>`
+//!   (from the [`crate::Worp`] builder) through all of its passes — one
+//!   generic loop, no per-sampler match arms anywhere;
+//! - [`Coordinator::one_pass`] / [`Coordinator::two_pass`] are the
+//!   statically-typed conveniences built on the same primitives.
 
+use crate::api::{Finalize, Mergeable, MultiPass, WorSampler};
 use crate::config::PipelineConfig;
 use crate::data::Element;
 use crate::error::{Error, Result};
-use crate::pipeline::merge::tree_merge;
+use crate::pipeline::merge::{merge_all, tree_merge};
 use crate::pipeline::metrics::Metrics;
-use crate::pipeline::{run_sharded, PipelineOpts, ShardSink};
+use crate::pipeline::{run_sharded, PipelineOpts};
 use crate::sampler::worp1::OnePassWorp;
-use crate::sampler::worp2::{TwoPassWorpPass1, TwoPassWorpPass2};
+use crate::sampler::worp2::TwoPassWorp;
 use crate::sampler::{Sample, SamplerConfig};
 use std::sync::Arc;
 
@@ -47,24 +54,6 @@ where
     }
 }
 
-impl ShardSink for OnePassWorp {
-    fn process(&mut self, e: &Element) {
-        OnePassWorp::process(self, e)
-    }
-}
-
-impl ShardSink for TwoPassWorpPass1 {
-    fn process(&mut self, e: &Element) {
-        TwoPassWorpPass1::process(self, e)
-    }
-}
-
-impl ShardSink for TwoPassWorpPass2 {
-    fn process(&mut self, e: &Element) {
-        TwoPassWorpPass2::process(self, e)
-    }
-}
-
 /// The leader/coordinator.
 pub struct Coordinator {
     sampler_cfg: SamplerConfig,
@@ -80,6 +69,7 @@ impl Coordinator {
             .with_domain(cfg.n);
         scfg.q = cfg.q;
         scfg.delta = cfg.delta;
+        scfg.eps = cfg.eps;
         if cfg.width > 0 {
             scfg = scfg.with_sketch_shape(cfg.rows, cfg.width);
         } else {
@@ -99,6 +89,55 @@ impl Coordinator {
         &self.sampler_cfg
     }
 
+    /// Shard `stream` across the workers, each owning a clone of `proto`,
+    /// and fold the per-shard summaries back through the
+    /// fingerprint-checked merge tree. Works for any [`Mergeable`]
+    /// summary: samplers, sketches, pass states.
+    pub fn run_summary<S, I>(&self, stream: I, proto: S) -> Result<(S, Arc<Metrics>)>
+    where
+        S: Mergeable + Clone + Send + 'static,
+        I: IntoIterator<Item = Element>,
+    {
+        let (states, metrics) = run_sharded(stream, self.opts, move |_| proto.clone())?;
+        let merged = merge_all(states, &metrics)?
+            .ok_or_else(|| Error::Pipeline("no workers".into()))?;
+        Ok((merged, metrics))
+    }
+
+    /// Drive a boxed WOR sampler (from the [`crate::Worp`] builder)
+    /// through *all* of its passes over `source`, sharding every pass
+    /// across the workers, and extract the final sample. The multi-pass
+    /// handoff, sharding and merging are method-agnostic — this is the
+    /// single driver behind the CLI.
+    pub fn run_dyn(
+        &self,
+        source: &dyn StreamSource,
+        proto: Box<dyn WorSampler>,
+    ) -> Result<(Sample, Arc<Metrics>)> {
+        let passes = proto.passes().max(1);
+        // clock-dependent samplers (see WorSampler::parallel_safe) are
+        // serialized onto one worker instead of merging skewed clocks
+        let opts = if proto.parallel_safe() {
+            self.opts
+        } else {
+            PipelineOpts { workers: 1, ..self.opts }
+        };
+        let mut current = proto;
+        let mut metrics = Arc::new(Metrics::default());
+        for pass in 0..passes {
+            if pass > 0 {
+                current.advance()?;
+            }
+            let template = current;
+            let (states, m) = run_sharded(source.stream(), opts, move |_| template.clone())?;
+            current = tree_merge(states, &m, |a, b| a.merge_dyn(&**b))?
+                .ok_or_else(|| Error::Pipeline("no workers".into()))?;
+            metrics = m;
+        }
+        let sample = current.sample()?;
+        Ok((sample, metrics))
+    }
+
     /// 1-pass WORp over a sharded pipeline: each worker owns a sibling
     /// `OnePassWorp` (same seed → same randomization), the leader
     /// tree-merges them and extracts the sample.
@@ -106,45 +145,31 @@ impl Coordinator {
     where
         I: IntoIterator<Item = Element>,
     {
-        let cfg = self.sampler_cfg.clone();
-        let (states, metrics) =
-            run_sharded(stream, self.opts, move |_| OnePassWorp::new(cfg.clone()))?;
-        let merged = tree_merge(states, &metrics, |a, b| a.merge(b))?
-            .ok_or_else(|| Error::Pipeline("no workers".into()))?;
-        Ok((merged.sample(), metrics))
+        let proto = OnePassWorp::new(self.sampler_cfg.clone());
+        let (merged, metrics) = self.run_summary(stream, proto)?;
+        Ok((merged.finalize(), metrics))
     }
 
-    /// 2-pass WORp: pass I shards the stream into sibling rHH sketches and
-    /// merges them; pass II replays the stream into sharded top-k′
-    /// collectors seeded with the *merged* pass-I sketch; the leader
-    /// merges collectors and cuts the exact sample.
+    /// 2-pass WORp: pass I shards the stream into sibling rHH sketches
+    /// and merges them; [`MultiPass::advance`] arms pass II; the replayed
+    /// stream fills sharded collectors seeded with the *merged* pass-I
+    /// sketch; the leader merges collectors and cuts the exact sample.
     pub fn two_pass<S: StreamSource>(&self, source: &S) -> Result<(Sample, Arc<Metrics>)> {
-        let cfg = self.sampler_cfg.clone();
-
-        // ---- pass I
-        let mk = cfg.clone();
-        let (p1s, metrics1) = run_sharded(source.stream(), self.opts, move |_| {
-            TwoPassWorpPass1::new(mk.clone())
-        })?;
-        let merged_p1 = tree_merge(p1s, &metrics1, |a, b| a.merge(b))?
-            .ok_or_else(|| Error::Pipeline("no workers".into()))?;
-
-        // ---- pass II (every worker gets a clone of the merged sketch)
-        let template = merged_p1.into_pass2();
-        let (p2s, metrics2) = run_sharded(source.stream(), self.opts, move |_| template.clone())?;
-        let merged_p2: TwoPassWorpPass2 = tree_merge(p2s, &metrics2, |a, b| a.merge(b))?
-            .ok_or_else(|| Error::Pipeline("no workers".into()))?;
-
+        let proto = TwoPassWorp::new(self.sampler_cfg.clone());
+        let (mut w, _m1) = self.run_summary(source.stream(), proto)?;
+        w.advance()?;
+        let (w, metrics) = self.run_summary(source.stream(), w)?;
         // fold pass-I counters into the returned metrics
-        metrics2.note_batch(0);
-        Ok((merged_p2.sample(), metrics2))
+        metrics.note_batch(0);
+        Ok((w.sample()?, metrics))
     }
 
     /// 1-pass WORp with the **XLA backend**: the transformed-element
     /// CountSketch update executes on the PJRT client via the AOT
     /// `countsketch_update` artifact (single-threaded — the PJRT client is
     /// not `Send` in the published crate; the benches compare this against
-    /// the native sharded path).
+    /// the native sharded path). Without the `xla` cargo feature this
+    /// returns a clean runtime error.
     pub fn one_pass_xla<I>(
         &self,
         stream: I,
@@ -214,8 +239,9 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::zipf::{zipf_exact_stream, zipf_frequencies};
+    use crate::data::zipf::{zipf_exact_stream, zipf_frequencies, ZipfStream};
     use crate::sampler::ppswor::perfect_ppswor;
+    use crate::Worp;
 
     fn cfg(n: usize, k: usize) -> SamplerConfig {
         SamplerConfig::new(1.0, k)
@@ -270,6 +296,88 @@ mod tests {
         }
         assert_eq!(outputs[0], outputs[1]);
         assert_eq!(outputs[1], outputs[2]);
+    }
+
+    #[test]
+    fn run_dyn_matches_typed_paths_for_every_method() {
+        // one generic driver: the dynamic pipeline output must equal the
+        // statically-typed convenience wrappers
+        let n = 400;
+        let k = 10;
+        let elems = zipf_exact_stream(n, 1.2, 1e4, 2, 5);
+        let src = VecSource(elems.clone());
+        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(3, 128, 4).unwrap());
+
+        let builder = Worp::p(1.0)
+            .k(k)
+            .seed(77)
+            .domain(n)
+            .sketch_shape(9, 2048);
+
+        let (dyn1, _) = c
+            .run_dyn(&src, builder.clone().one_pass().build().unwrap())
+            .unwrap();
+        let (typed1, _) = c.one_pass(elems.clone()).unwrap();
+        assert_eq!(dyn1.keys(), typed1.keys());
+
+        let (dyn2, m2) = c
+            .run_dyn(&src, builder.clone().two_pass().build().unwrap())
+            .unwrap();
+        let (typed2, _) = c.two_pass(&src).unwrap();
+        assert_eq!(dyn2.keys(), typed2.keys());
+        assert_eq!(m2.elements() as usize, elems.len()); // pass-II count
+
+        // the exact baseline through the same driver equals perfect ppswor
+        let (dyn_exact, _) = c
+            .run_dyn(&src, builder.clone().exact().build().unwrap())
+            .unwrap();
+        let want = perfect_ppswor(&zipf_frequencies(n, 1.2, 1e4), 1.0, k, 77);
+        assert_eq!(dyn_exact.keys(), want.keys());
+    }
+
+    #[test]
+    fn run_dyn_serializes_clock_dependent_samplers() {
+        // the windowed sampler's implicit clock is stream-global; run_dyn
+        // must force one worker so the worker count cannot change output
+        let n = 300;
+        let k = 8;
+        let elems = zipf_exact_stream(n, 1.2, 1e4, 2, 7);
+        let src = VecSource(elems);
+        let b = Worp::p(1.0)
+            .k(k)
+            .seed(5)
+            .domain(n)
+            .sketch_shape(7, 1024)
+            .windowed(100, 10); // small window: sharded clocks would skew it
+        let c1 = Coordinator::new(
+            b.sampler_config().unwrap(),
+            PipelineOpts::new(1, 64, 4).unwrap(),
+        );
+        let c4 = Coordinator::new(
+            b.sampler_config().unwrap(),
+            PipelineOpts::new(4, 64, 4).unwrap(),
+        );
+        let (s1, _) = c1.run_dyn(&src, b.build().unwrap()).unwrap();
+        let (s4, _) = c4.run_dyn(&src, b.build().unwrap()).unwrap();
+        assert_eq!(s1.keys(), s4.keys());
+    }
+
+    #[test]
+    fn run_summary_rejects_incompatible_shards() {
+        // a worker construction bug (different seeds per shard) must fail
+        // loudly in the merge tree, not silently corrupt the sample
+        use crate::sketch::countsketch::CountSketch;
+        use crate::sketch::SketchParams;
+        let c = Coordinator::new(cfg(100, 5), PipelineOpts::new(2, 64, 4).unwrap());
+        let stream: Vec<Element> = ZipfStream::new(100, 1.0, 1000, 3).collect();
+        let (states, metrics) =
+            run_sharded(stream, PipelineOpts::new(2, 64, 4).unwrap(), |shard| {
+                CountSketch::new(SketchParams::new(3, 64, shard as u64))
+            })
+            .unwrap();
+        let err = merge_all(states, &metrics).unwrap_err();
+        assert!(matches!(err, Error::Incompatible(_)), "{err}");
+        let _ = c;
     }
 
     #[test]

@@ -1,35 +1,64 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — no
+//! `thiserror` offline, DESIGN.md §7).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the WORp library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / CLI parameter problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// A sketch or sampler was used with incompatible parameters
-    /// (e.g. merging sketches with different shapes or randomization).
-    #[error("incompatible sketches: {0}")]
+    /// (e.g. merging summaries with different shapes, seeds or types).
     Incompatible(String),
+
+    /// A summary was driven through an invalid state transition (e.g.
+    /// finalizing a multi-pass sampler before its last pass, or advancing
+    /// a single-pass summary).
+    State(String),
 
     /// The dataset failed the rHH test — the sample cannot be certified
     /// (Appendix A, "Testing for failure").
-    #[error("rHH failure: {0}")]
     RhhFailure(String),
 
     /// PJRT / XLA runtime errors (artifact loading, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Pipeline orchestration errors (worker panic, channel close, ...).
-    #[error("pipeline error: {0}")]
     Pipeline(String),
 
     /// I/O errors.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Incompatible(m) => write!(f, "incompatible sketches: {m}"),
+            Error::State(m) => write!(f, "invalid state: {m}"),
+            Error::RhhFailure(m) => write!(f, "rHH failure: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -51,6 +80,8 @@ mod tests {
         assert!(e.to_string().contains("missing key 'p'"));
         let e = Error::RhhFailure("tail too heavy".into());
         assert!(e.to_string().contains("rHH"));
+        let e = Error::State("pass I not finished".into());
+        assert!(e.to_string().contains("invalid state"));
     }
 
     #[test]
@@ -58,5 +89,6 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -6,32 +6,63 @@
 //!
 //! - **Layer 3 (this crate)**: a streaming-pipeline coordinator — sharded
 //!   workers over unaggregated element streams, composable sketch merging,
-//!   bounded-channel backpressure, two-pass orchestration — plus native
+//!   bounded-channel backpressure, multi-pass orchestration — plus native
 //!   implementations of every sketch and sampler the paper uses.
 //! - **Layer 2/1 (build time, `python/compile`)**: the CountSketch update /
 //!   estimate hot paths authored as Pallas kernels inside a JAX graph,
-//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT
+//!   (behind the `xla` cargo feature).
+//!
+//! ## The unified summary API
+//!
+//! The paper's central claim is *composability*: every WOR sampler is a
+//! mergeable sketch. The [`api`] module surfaces that as a trait
+//! hierarchy every sampler and sketch implements:
+//!
+//! | trait | contract |
+//! |---|---|
+//! | [`api::StreamSummary`] | `process` / `process_batch` / `size_words` / `processed` |
+//! | [`api::Mergeable`] | fingerprint-checked `merge` (incompatible seeds/shapes fail loudly) |
+//! | [`api::Finalize`] | `finalize() -> Output` (a [`sampler::Sample`] for WOR samplers) |
+//! | [`api::MultiPass`] | `passes` / `pass` / `advance` — pass handoff as a state machine |
+//! | [`api::WorSampler`] | object-safe bundle of the above for `Box<dyn WorSampler>` |
 //!
 //! ## Quick start
 //!
 //! ```no_run
+//! use worp::api::{StreamSummary, WorSampler};
 //! use worp::data::zipf::ZipfStream;
-//! use worp::sampler::worp1::OnePassWorp;
-//! use worp::sampler::SamplerConfig;
+//! use worp::Worp;
 //!
 //! // ℓ1 sample (p=1) of k=64 keys from a Zipf[1.2] stream of 1M elements.
-//! let cfg = SamplerConfig::new(1.0, 64).with_seed(7);
-//! let mut s = OnePassWorp::new(cfg);
+//! let mut s = Worp::p(1.0).k(64).one_pass().seed(7).build().unwrap();
 //! for e in ZipfStream::new(10_000, 1.2, 1_000_000, 42) {
 //!     s.process(&e);
 //! }
-//! let sample = s.sample();
+//! let sample = s.sample().unwrap();
 //! assert_eq!(sample.entries.len(), 64);
 //! ```
 //!
-//! See `examples/` for end-to-end drivers and `benches/` for the
-//! reproduction of every table and figure in the paper.
+//! Sharded execution goes through the coordinator — any method, one
+//! driver:
+//!
+//! ```no_run
+//! use worp::coordinator::{Coordinator, VecSource};
+//! use worp::pipeline::PipelineOpts;
+//! use worp::{Method, Worp};
+//!
+//! let builder = Worp::p(1.0).k(64).seed(7).method(Method::TwoPass);
+//! let coord = Coordinator::new(builder.sampler_config().unwrap(), PipelineOpts::default());
+//! let stream = VecSource(worp::data::zipf::zipf_exact_stream(10_000, 1.2, 1e6, 3, 42));
+//! let (sample, metrics) = coord.run_dyn(&stream, builder.build().unwrap()).unwrap();
+//! # let _ = (sample, metrics);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers, `benches/` for the
+//! reproduction of every table and figure in the paper, and the README
+//! for the old-API → new-API migration table.
 
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -46,4 +77,6 @@ pub mod sketch;
 pub mod transform;
 pub mod util;
 
+pub use api::builder::{Method, Worp};
+pub use api::{Finalize, Mergeable, MultiPass, StreamSummary, WorSampler};
 pub use error::{Error, Result};

@@ -1,22 +1,14 @@
 //! `worp` — launcher binary for the WORp sampling pipeline.
 //!
-//! See `worp help` for the command surface. The heavy lifting lives in the
-//! library ([`worp`] crate); this binary wires configs, workloads and
-//! reporting together.
+//! See `worp help` for the command surface. All logic lives in the
+//! library ([`worp::cli`] wires configs, workloads and reporting
+//! together); this binary only parses argv and sets the exit code.
 
-use worp::cli::{usage, Args};
-use worp::config::PipelineConfig;
-use worp::coordinator::{Coordinator, VecSource};
-use worp::data::stream::GradientStream;
-use worp::data::zipf::ZipfStream;
-use worp::data::Element;
-use worp::error::{Error, Result};
-use worp::estimate::moment_estimate;
-use worp::util::fmt::{sci, Table};
+use worp::cli::{dispatch, Args};
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let code = match run(args) {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match Args::parse(argv).and_then(|args| dispatch(&args)) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
@@ -24,154 +16,4 @@ fn main() {
         }
     };
     std::process::exit(code);
-}
-
-fn run(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv)?;
-    match args.command.as_str() {
-        "sample" => cmd_sample(&args),
-        "psi" => cmd_psi(&args),
-        "info" => cmd_info(&args),
-        "" | "help" | "--help" | "-h" => {
-            println!("{}", usage());
-            Ok(())
-        }
-        other => Err(Error::Config(format!(
-            "unknown command {other:?}; see `worp help`"
-        ))),
-    }
-}
-
-fn load_config(args: &Args) -> Result<PipelineConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => PipelineConfig::load(path)?,
-        None => PipelineConfig::default(),
-    };
-    // CLI overrides
-    cfg.p = args.parse_or("p", cfg.p)?;
-    cfg.k = args.parse_or("k", cfg.k)?;
-    cfg.q = args.parse_or("q", cfg.q)?;
-    cfg.seed = args.parse_or("seed", cfg.seed)?;
-    cfg.workers = args.parse_or("workers", cfg.workers)?;
-    cfg.n = args.parse_or("n", cfg.n)?;
-    cfg.alpha = args.parse_or("alpha", cfg.alpha)?;
-    cfg.stream_len = args.parse_or("stream-len", cfg.stream_len)?;
-    cfg.rows = args.parse_or("rows", cfg.rows)?;
-    cfg.width = args.parse_or("width", cfg.width)?;
-    if let Some(b) = args.get("backend") {
-        cfg.backend = b.to_string();
-    }
-    if let Some(w) = args.get("workload") {
-        cfg.workload = w.to_string();
-    }
-    cfg.validate()?;
-    Ok(cfg)
-}
-
-fn make_stream(cfg: &PipelineConfig) -> Vec<Element> {
-    match cfg.workload.as_str() {
-        "gradient" => GradientStream::new(cfg.n, cfg.alpha, cfg.stream_len, cfg.seed ^ 0xE1E)
-            .collect(),
-        _ => ZipfStream::new(cfg.n, cfg.alpha, cfg.stream_len, cfg.seed ^ 0xE1E).collect(),
-    }
-}
-
-fn cmd_sample(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
-    let method = args.str_or("method", "1pass");
-    let coord = Coordinator::from_config(&cfg)?;
-    println!(
-        "workload={} n={} alpha={} stream_len={} | p={} k={} method={method} backend={} workers={}",
-        cfg.workload, cfg.n, cfg.alpha, cfg.stream_len, cfg.p, cfg.k, cfg.backend, cfg.workers
-    );
-    let elems = make_stream(&cfg);
-    let (sample, metrics) = match (method.as_str(), cfg.backend.as_str()) {
-        ("1pass", "native") => coord.one_pass(elems.clone())?,
-        ("1pass", "xla") => coord.one_pass_xla(elems.clone(), &cfg.artifacts_dir)?,
-        ("2pass", _) => coord.two_pass(&VecSource(elems.clone()))?,
-        ("tv", _) => {
-            use worp::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
-            let tvc = TvSamplerConfig::new(cfg.p, cfg.k, cfg.n, cfg.seed, SamplerKind::Oracle)
-                .with_r(8 * cfg.k);
-            let mut tv = TvSampler::new(tvc);
-            for e in &elems {
-                tv.process(e);
-            }
-            let keys = tv.produce();
-            println!(
-                "tv sample ({} keys): {:?}",
-                keys.len(),
-                &keys[..keys.len().min(20)]
-            );
-            return Ok(());
-        }
-        (m, b) => {
-            return Err(Error::Config(format!(
-                "unsupported method/backend combination {m}/{b}"
-            )))
-        }
-    };
-    println!("pipeline: {}", metrics.report());
-    let mut t = Table::new(
-        &format!("top sampled keys (of {})", sample.len()),
-        &["key", "freq", "transformed"],
-    );
-    for e in sample.entries.iter().take(15) {
-        t.row(&[e.key.to_string(), sci(e.freq), sci(e.transformed)]);
-    }
-    t.print();
-    println!("tau = {}", sci(sample.tau));
-    for p_prime in [1.0, 2.0] {
-        println!(
-            "estimated ||nu||_{p_prime}^{p_prime} = {}",
-            sci(moment_estimate(&sample, p_prime))
-        );
-    }
-    Ok(())
-}
-
-fn cmd_psi(args: &Args) -> Result<()> {
-    let n = args.parse_or("n", 10_000usize)?;
-    let k = args.parse_or("k", 100usize)?;
-    let rho = args.parse_or("rho", 2.0f64)?;
-    let delta = args.parse_or("delta", 0.01f64)?;
-    let trials = args.parse_or("trials", 2_000usize)?;
-    let psi = worp::psi::psi_estimate(n, k, rho, delta, trials, 0xCA11B);
-    let lb2 = worp::psi::psi_lower_bound(n, k, rho, 2.0);
-    println!(
-        "Psi_{{n={n},k={k},rho={rho}}}(delta={delta}) ~= {psi:.5}  (thm 3.1 bound @C=2: {lb2:.5})"
-    );
-    // the effective constant C the simulation implies (paper App B.1)
-    let ln_nk = ((n as f64) / (k as f64)).ln().max(1.0);
-    let c = if rho <= 1.0 {
-        1.0 / (psi * ln_nk)
-    } else {
-        (rho - 1.0f64).max(1.0 / ln_nk) / psi
-    };
-    println!("implied constant C = {c:.3} (paper: C<2 suffices for k>=10)");
-    Ok(())
-}
-
-fn cmd_info(args: &Args) -> Result<()> {
-    let dir = args.str_or("artifacts", "artifacts");
-    match worp::runtime::XlaRuntime::cpu() {
-        Ok(rt) => println!(
-            "PJRT: platform={} devices={}",
-            rt.platform(),
-            rt.device_count()
-        ),
-        Err(e) => println!("PJRT: unavailable ({e})"),
-    }
-    match worp::runtime::artifact::ArtifactDir::open(&dir) {
-        Ok(a) => {
-            for s in a.specs() {
-                println!(
-                    "artifact {}: file={:?} rows={} width={} batch={}",
-                    s.name, s.file, s.rows, s.width, s.batch
-                );
-            }
-        }
-        Err(e) => println!("artifacts: {e}"),
-    }
-    Ok(())
 }

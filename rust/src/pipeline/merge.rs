@@ -1,9 +1,24 @@
 //! Merge tree: fold per-shard composable summaries into one, pairwise,
 //! tree-shaped (log-depth — the order a distributed reduce would use),
 //! counting merges in [`super::metrics::Metrics`].
+//!
+//! [`merge_all`] is the typed entry point over any
+//! [`crate::api::Mergeable`]; [`tree_merge`] is the closure-driven
+//! engine (used directly for dynamic summaries like
+//! `Box<dyn WorSampler>` whose merge goes through `merge_dyn`).
 
 use crate::error::Result;
 use crate::pipeline::metrics::Metrics;
+
+/// Tree-merge any [`crate::api::Mergeable`] summaries (compatibility
+/// fingerprints are checked on every pairwise merge). Returns `None`
+/// for empty input.
+pub fn merge_all<S: crate::api::Mergeable>(
+    items: Vec<S>,
+    metrics: &Metrics,
+) -> Result<Option<S>> {
+    tree_merge(items, metrics, |a, b| crate::api::Mergeable::merge(a, b))
+}
 
 /// Pairwise tree-merge of summaries using `merge(acc, other)`.
 /// Consumes the vector and returns the root. Returns `None` for empty
@@ -74,5 +89,24 @@ mod tests {
             Err(crate::error::Error::Incompatible("nope".into()))
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn merge_all_checks_fingerprints() {
+        let metrics = Metrics::default();
+        // same shape, different seed: the typed merge tree must refuse
+        let shards = vec![
+            CountSketch::new(SketchParams::new(3, 32, 1)),
+            CountSketch::new(SketchParams::new(3, 32, 2)),
+        ];
+        let r = merge_all(shards, &metrics);
+        assert!(matches!(r, Err(crate::error::Error::Incompatible(_))));
+        // compatible shards fold fine
+        let shards = vec![
+            CountSketch::new(SketchParams::new(3, 32, 1)),
+            CountSketch::new(SketchParams::new(3, 32, 1)),
+            CountSketch::new(SketchParams::new(3, 32, 1)),
+        ];
+        assert!(merge_all(shards, &metrics).unwrap().is_some());
     }
 }

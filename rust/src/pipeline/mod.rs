@@ -19,6 +19,7 @@ pub mod metrics;
 pub mod shard;
 pub mod spool;
 
+use crate::api::StreamSummary;
 use crate::data::Element;
 use crate::error::{Error, Result};
 use metrics::Metrics;
@@ -26,16 +27,58 @@ use shard::Router;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
-/// Shard-local consumer state. Implementations must be `Send` — each
-/// instance lives on its own worker thread.
+/// Shard-local consumer state. Every `Send` [`StreamSummary`] is a
+/// `ShardSink` via the blanket impl below — samplers, sketches, pass
+/// states and `Box<dyn WorSampler>` all flow through [`run_sharded`]
+/// without per-type glue. Ad-hoc closures wrap in [`FnSink`].
 pub trait ShardSink: Send + 'static {
     /// Process one element routed to this shard.
     fn process(&mut self, e: &Element);
+
+    /// Process a routed micro-batch (defaults to an element loop).
+    fn process_batch(&mut self, batch: &[Element]) {
+        for e in batch {
+            self.process(e);
+        }
+    }
 }
 
-impl<F: FnMut(&Element) + Send + 'static> ShardSink for F {
+impl<S: StreamSummary + Send + 'static> ShardSink for S {
     fn process(&mut self, e: &Element) {
-        self(e)
+        StreamSummary::process(self, e)
+    }
+
+    fn process_batch(&mut self, batch: &[Element]) {
+        StreamSummary::process_batch(self, batch)
+    }
+}
+
+/// Adapter: drive a closure as a [`StreamSummary`] (and hence a
+/// [`ShardSink`]) — handy for tests and side-effecting sinks.
+pub struct FnSink<F> {
+    f: F,
+    processed: u64,
+}
+
+impl<F: FnMut(&Element)> FnSink<F> {
+    /// Wrap a closure.
+    pub fn new(f: F) -> Self {
+        FnSink { f, processed: 0 }
+    }
+}
+
+impl<F: FnMut(&Element)> StreamSummary for FnSink<F> {
+    fn process(&mut self, e: &Element) {
+        (self.f)(e);
+        self.processed += 1;
+    }
+
+    fn size_words(&self) -> usize {
+        0
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
     }
 }
 
@@ -95,9 +138,7 @@ where
         let m = Arc::clone(&metrics);
         handles.push(std::thread::spawn(move || {
             for batch in rx {
-                for e in &batch {
-                    state.process(e);
-                }
+                state.process_batch(&batch);
                 m.note_batch(batch.len() as u64);
             }
             state
@@ -166,26 +207,37 @@ mod tests {
         let opts = PipelineOpts::new(4, 512, 4).unwrap();
         let counted = Arc::new(Mutex::new(0u64));
         let c2 = Arc::clone(&counted);
-        let (_, metrics) = run_sharded(stream, opts, move |_| {
+        let (states, metrics) = run_sharded(stream, opts, move |_| {
             let c = Arc::clone(&c2);
-            move |_e: &Element| {
+            FnSink::new(move |_e: &Element| {
                 *c.lock().unwrap() += 1;
-            }
+            })
         })
         .unwrap();
         assert_eq!(metrics.elements(), n);
         assert_eq!(*counted.lock().unwrap(), n);
+        let per_shard: u64 = states.iter().map(StreamSummary::processed).sum();
+        assert_eq!(per_shard, n);
         assert!(metrics.batches() >= n / 512);
     }
 
     /// A sink that records per-key sums (for routing-invariance tests).
+    /// Implements [`StreamSummary`]; `ShardSink` comes via the blanket.
     struct MapSink {
         sums: HashMap<u64, f64>,
     }
 
-    impl ShardSink for MapSink {
+    impl StreamSummary for MapSink {
         fn process(&mut self, e: &Element) {
             *self.sums.entry(e.key).or_insert(0.0) += e.val;
+        }
+
+        fn size_words(&self) -> usize {
+            2 * self.sums.len()
+        }
+
+        fn processed(&self) -> u64 {
+            0
         }
     }
 
@@ -216,9 +268,9 @@ mod tests {
         let stream: Vec<Element> = (0..20_000).map(|i| Element::new(i % 16, 1.0)).collect();
         let opts = PipelineOpts::new(1, 64, 1).unwrap();
         let (_, metrics) = run_sharded(stream, opts, |_| {
-            |_e: &Element| {
+            FnSink::new(|_e: &Element| {
                 std::hint::black_box((0..50).sum::<u64>());
-            }
+            })
         })
         .unwrap();
         assert!(metrics.stalls() > 0, "expected backpressure stalls");

@@ -7,18 +7,29 @@
 //! reassigns ids (see /opt/xla-example/README.md). Python never runs at
 //! request time: artifacts are compiled once here and executed per
 //! micro-batch.
+//!
+//! The PJRT bindings (`xla` crate) are not available offline, so the
+//! whole backend is gated behind the `xla` cargo feature. The default
+//! build compiles the stub below: every entry point returns
+//! [`Error::Runtime`] with an actionable message, artifact discovery
+//! ([`artifact`]) stays fully functional, and the rest of the crate is
+//! unaffected.
 
 pub mod artifact;
+
+#[cfg(feature = "xla")]
 pub mod executor;
 
 use crate::error::{Error, Result};
 
+#[cfg(feature = "xla")]
 /// A process-wide PJRT CPU client (compilation is cached per executable,
 /// the client itself is shared).
 pub struct XlaRuntime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -51,10 +62,126 @@ impl XlaRuntime {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+fn unavailable() -> Error {
+    Error::Runtime(
+        "XLA backend unavailable: this binary was built without the `xla` cargo feature \
+         (add the vendored xla_extension bindings as a dependency in rust/Cargo.toml, \
+         then rebuild with `--features xla`)"
+            .into(),
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+/// Stub PJRT client: every constructor fails with a clear message.
+pub struct XlaRuntime {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    /// Always fails in stub builds.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+/// Stub executors mirroring `runtime::executor` so downstream code
+/// compiles unchanged; all entry points fail with [`Error::Runtime`].
+pub mod executor {
+    use super::{unavailable, XlaRuntime};
+    use crate::data::Element;
+    use crate::error::Result;
+    use crate::runtime::artifact::ArtifactDir;
+
+    /// Stub of the XLA-offloaded CountSketch.
+    pub struct XlaCountSketch {
+        /// Kernel invocations (always 0 in stub builds).
+        pub kernel_calls: u64,
+        table: Vec<f32>,
+    }
+
+    impl XlaCountSketch {
+        /// Always fails in stub builds.
+        pub fn load(_rt: &XlaRuntime, _dir: &ArtifactDir, _seed: u64) -> Result<Self> {
+            Err(unavailable())
+        }
+
+        /// Unreachable in stub builds (`load` never succeeds).
+        pub fn process(&mut self, _e: &Element) -> Result<()> {
+            Err(unavailable())
+        }
+
+        /// Unreachable in stub builds.
+        pub fn flush(&mut self) -> Result<()> {
+            Err(unavailable())
+        }
+
+        /// Unreachable in stub builds.
+        pub fn est(&self, _key: u64) -> f64 {
+            0.0
+        }
+
+        /// Sketch shape `(rows, width)`.
+        pub fn shape(&self) -> (usize, usize) {
+            (0, 0)
+        }
+
+        /// Micro-batch size baked into the artifact.
+        pub fn batch_size(&self) -> usize {
+            0
+        }
+
+        /// Elements processed.
+        pub fn processed(&self) -> u64 {
+            0
+        }
+
+        /// Current table (row-major f32).
+        pub fn table(&self) -> &[f32] {
+            &self.table
+        }
+    }
+
+    /// Stub of the batched estimate executor.
+    pub struct XlaEstimator {
+        _private: (),
+    }
+
+    impl XlaEstimator {
+        /// Always fails in stub builds.
+        pub fn load(_rt: &XlaRuntime, _dir: &ArtifactDir, _seed: u64) -> Result<Self> {
+            Err(unavailable())
+        }
+
+        /// Micro-batch size baked into the artifact.
+        pub fn batch_size(&self) -> usize {
+            0
+        }
+
+        /// Unreachable in stub builds.
+        pub fn estimate(&self, _table: &[f32], _keys: &[u64]) -> Result<Vec<f64>> {
+            Err(unavailable())
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    #[cfg(feature = "xla")]
     #[test]
     fn cpu_client_boots() {
         let rt = XlaRuntime::cpu().expect("PJRT CPU client");
@@ -63,6 +190,7 @@ mod tests {
         assert!(p.contains("cpu") || p.contains("host"), "platform={p}");
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn missing_artifact_is_clean_error() {
         let rt = XlaRuntime::cpu().unwrap();
@@ -70,5 +198,12 @@ mod tests {
             Err(err) => assert!(err.to_string().contains("runtime error")),
             Ok(_) => panic!("expected an error for a missing artifact"),
         }
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_fails_with_actionable_message() {
+        let err = XlaRuntime::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }

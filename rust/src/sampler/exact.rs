@@ -1,0 +1,229 @@
+//! `ExactWor` — the exact streaming WOR baseline: aggregate the stream
+//! into the exact frequency map, then take the perfect bottom-k sample
+//! under the shared hash-defined randomization (paper §2.2, the "perfect
+//! WOR" of Figs 1–2 / Table 3 — here as a composable `StreamSummary`
+//! rather than a free function over a dense vector).
+//!
+//! Memory is linear in the number of distinct keys — this is the
+//! gold-standard precision baseline the sketched samplers are compared
+//! against, not a small-space method.
+
+use super::{Sample, SampleEntry, SamplerConfig};
+use crate::api::{self, config_fingerprint, Fingerprint, WorSampler};
+use crate::data::Element;
+use crate::error::Result;
+use crate::transform::BottomKTransform;
+use std::collections::HashMap;
+
+/// Exact streaming p-ppswor / p-priority sampler (linear memory).
+#[derive(Clone, Debug)]
+pub struct ExactWor {
+    cfg: SamplerConfig,
+    transform: BottomKTransform,
+    freqs: HashMap<u64, f64>,
+    processed: u64,
+}
+
+impl ExactWor {
+    /// Build from a sampler config (only `p`, `k`, `seed` and `dist`
+    /// matter; sketch parameters are ignored).
+    pub fn new(cfg: SamplerConfig) -> Self {
+        let transform = cfg.transform();
+        ExactWor { cfg, transform, freqs: HashMap::new(), processed: 0 }
+    }
+
+    /// Sampler configuration.
+    pub fn config(&self) -> &SamplerConfig {
+        &self.cfg
+    }
+
+    /// Number of distinct keys currently tracked.
+    pub fn distinct_keys(&self) -> usize {
+        self.freqs.len()
+    }
+
+    /// Process one element (exact aggregation).
+    #[inline]
+    pub fn process(&mut self, e: &Element) {
+        *self.freqs.entry(e.key).or_insert(0.0) += e.val;
+        self.processed += 1;
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Summary size in words (2 per tracked key).
+    pub fn size_words(&self) -> usize {
+        2 * self.freqs.len()
+    }
+
+    /// Merge a sibling summary (same seed / config): exact frequency maps
+    /// add; keys whose net frequency cancels to ~0 are dropped.
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        for (&k, &v) in &other.freqs {
+            *self.freqs.entry(k).or_insert(0.0) += v;
+        }
+        self.freqs.retain(|_, f| f.abs() > 1e-12);
+        self.processed += other.processed;
+        Ok(())
+    }
+
+    /// The exact bottom-k sample of the aggregated frequencies.
+    pub fn sample(&self) -> Sample {
+        let t = &self.transform;
+        let mut scored: Vec<SampleEntry> = self
+            .freqs
+            .iter()
+            .filter(|(_, &f)| f.abs() > 1e-12)
+            .map(|(&key, &freq)| SampleEntry {
+                key,
+                freq,
+                transformed: freq * t.scale(key),
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            b.transformed
+                .abs()
+                .partial_cmp(&a.transformed.abs())
+                .unwrap()
+        });
+        let k = self.cfg.k;
+        let tau = if scored.len() > k {
+            scored[k].transformed.abs()
+        } else {
+            0.0
+        };
+        scored.truncate(k);
+        Sample { entries: scored, tau, p: self.cfg.p, dist: t.dist() }
+    }
+}
+
+impl api::StreamSummary for ExactWor {
+    fn process(&mut self, e: &Element) {
+        ExactWor::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        ExactWor::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl api::Mergeable for ExactWor {
+    fn fingerprint(&self) -> Fingerprint {
+        config_fingerprint("exact", &self.cfg)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        ExactWor::merge(self, other)
+    }
+}
+
+impl api::Finalize for ExactWor {
+    type Output = Sample;
+
+    fn finalize(&self) -> Sample {
+        self.sample()
+    }
+}
+
+impl api::MultiPass for ExactWor {}
+
+impl api::WorSampler for ExactWor {
+    fn sample(&self) -> Result<Sample> {
+        Ok(ExactWor::sample(self))
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        api::Mergeable::fingerprint(self)
+    }
+
+    fn merge_dyn(&mut self, other: &dyn api::WorSampler) -> Result<()> {
+        match other.as_any().downcast_ref::<Self>() {
+            Some(o) => api::Mergeable::merge(self, o),
+            None => Err(crate::error::Error::Incompatible(format!(
+                "cannot merge exact baseline with {}",
+                other.name()
+            ))),
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn api::WorSampler> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::ppswor::perfect_ppswor;
+
+    #[test]
+    fn matches_perfect_ppswor_over_dense_vector() {
+        let n = 300;
+        let freqs: Vec<f64> = (0..n).map(|i| 1000.0 / (i + 1) as f64).collect();
+        let cfg = SamplerConfig::new(1.0, 20).with_seed(17).with_domain(n);
+        let mut s = ExactWor::new(cfg);
+        // unaggregated: split each frequency into 3 parts
+        for (i, &f) in freqs.iter().enumerate() {
+            for _ in 0..3 {
+                s.process(&Element::new(i as u64, f / 3.0));
+            }
+        }
+        let got = s.sample();
+        let want = perfect_ppswor(&freqs, 1.0, 20, 17);
+        assert_eq!(got.keys(), want.keys());
+        assert!((got.tau - want.tau).abs() < 1e-9 * want.tau.max(1.0));
+        for (g, w) in got.entries.iter().zip(&want.entries) {
+            assert!((g.freq - w.freq).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn merge_equals_whole_stream_exactly() {
+        let cfg = SamplerConfig::new(2.0, 8).with_seed(3);
+        let elems: Vec<Element> = (0..500u64)
+            .map(|i| Element::new(i % 97, (i % 5) as f64 - 1.5))
+            .collect();
+        let mut whole = ExactWor::new(cfg.clone());
+        let mut a = ExactWor::new(cfg.clone());
+        let mut b = ExactWor::new(cfg);
+        for (i, e) in elems.iter().enumerate() {
+            whole.process(e);
+            if i % 2 == 0 {
+                a.process(e);
+            } else {
+                b.process(e);
+            }
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.processed(), whole.processed());
+        let (sa, sw) = (a.sample(), whole.sample());
+        assert_eq!(sa.keys(), sw.keys());
+        assert_eq!(sa.tau, sw.tau);
+    }
+
+    #[test]
+    fn cancelled_keys_leave_the_sample() {
+        let cfg = SamplerConfig::new(2.0, 5).with_seed(1);
+        let mut s = ExactWor::new(cfg);
+        s.process(&Element::new(1, 5.0));
+        s.process(&Element::new(2, 3.0));
+        s.process(&Element::new(1, -5.0));
+        let keys = s.sample().keys();
+        assert_eq!(keys, vec![2]);
+    }
+}

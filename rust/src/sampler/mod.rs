@@ -7,6 +7,7 @@
 //! ranking, and the threshold `τ` — everything the inverse-probability
 //! estimators of [`crate::estimate`] need.
 
+pub mod exact;
 pub mod perfect_lp;
 pub mod ppswor;
 pub mod priority;

@@ -18,7 +18,9 @@
 //! (estimated) mass, exactly what Algorithm 1's "subtract prior
 //! selections" step requires.
 
+use crate::api::{self, Fingerprint};
 use crate::data::Element;
+use crate::error::{Error, Result};
 use crate::sketch::countsketch::CountSketch;
 use crate::sketch::{RhhSketch, SketchParams};
 use crate::util::hashing::hash_unit_open;
@@ -38,14 +40,38 @@ pub trait SingleLpSampler {
 #[derive(Clone, Debug)]
 pub struct OracleSampler {
     p: f64,
+    seed: u64,
     freqs: HashMap<u64, f64>,
     rng: Rng,
+    processed: u64,
 }
 
 impl OracleSampler {
     /// Sampler with private randomness `seed`.
     pub fn new(p: f64, seed: u64) -> Self {
-        OracleSampler { p, freqs: HashMap::new(), rng: Rng::new(seed ^ 0x0AC1E) }
+        OracleSampler {
+            p,
+            seed,
+            freqs: HashMap::new(),
+            rng: Rng::new(seed ^ 0x0AC1E),
+            processed: 0,
+        }
+    }
+
+    /// Merge a sibling sampler (exact frequency maps add; the private
+    /// draw randomness is untouched by processing, so the merged sampler
+    /// draws exactly as a single-stream one would).
+    pub fn merge(&mut self, other: &Self) {
+        for (&k, &v) in &other.freqs {
+            *self.freqs.entry(k).or_insert(0.0) += v;
+        }
+        self.freqs.retain(|_, f| f.abs() >= 1e-12);
+        self.processed += other.processed;
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        self.processed
     }
 }
 
@@ -56,6 +82,7 @@ impl SingleLpSampler for OracleSampler {
         if f.abs() < 1e-12 {
             self.freqs.remove(&e.key);
         }
+        self.processed += 1;
     }
 
     fn output(&mut self) -> Option<u64> {
@@ -83,6 +110,7 @@ pub struct PrecisionSampler {
     /// keys seen (candidate recovery set; bounded)
     candidates: HashMap<u64, ()>,
     cand_cap: usize,
+    processed: u64,
 }
 
 impl PrecisionSampler {
@@ -94,7 +122,39 @@ impl PrecisionSampler {
             sketch: CountSketch::new(SketchParams::new(rows, width, seed ^ 0x9C13)),
             candidates: HashMap::new(),
             cand_cap: 4 * width,
+            processed: 0,
         }
+    }
+
+    /// Merge a sibling sampler sharing seed and sketch shape: the scaled
+    /// sketches add (linearity) and the candidate sets union.
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        if self.seed != other.seed || self.p != other.p {
+            return Err(Error::Incompatible(
+                "precision samplers have different private seeds".into(),
+            ));
+        }
+        RhhSketch::merge(&mut self.sketch, &other.sketch)?;
+        for &k in other.candidates.keys() {
+            self.candidates.insert(k, ());
+        }
+        if self.candidates.len() > 2 * self.cand_cap {
+            let mut scored: Vec<(u64, f64)> = self
+                .candidates
+                .keys()
+                .map(|&k| (k, self.sketch.est(k).abs()))
+                .collect();
+            scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            scored.truncate(self.cand_cap);
+            self.candidates = scored.into_iter().map(|(k, _)| (k, ())).collect();
+        }
+        self.processed += other.processed;
+        Ok(())
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        self.processed
     }
 
     /// Private per-key scale `u_i^{-1/p}` with `u_i ~ U(0,1]`.
@@ -111,6 +171,7 @@ impl PrecisionSampler {
 
 impl SingleLpSampler for PrecisionSampler {
     fn process(&mut self, e: &Element) {
+        self.processed += 1;
         let scaled = Element::new(e.key, e.val * self.scale(e.key));
         self.sketch.process(&scaled);
         if self.candidates.len() < self.cand_cap {
@@ -141,6 +202,78 @@ impl SingleLpSampler for PrecisionSampler {
             .filter(|(_, v)| *v > 0.0)
             .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .map(|(k, _)| k)
+    }
+}
+
+impl api::StreamSummary for OracleSampler {
+    fn process(&mut self, e: &Element) {
+        SingleLpSampler::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        2 * self.freqs.len()
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl api::Mergeable for OracleSampler {
+    fn fingerprint(&self) -> Fingerprint {
+        Fingerprint::new("oracle-lp").with_f64(self.p).with(self.seed)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        OracleSampler::merge(self, other);
+        Ok(())
+    }
+}
+
+impl api::Finalize for OracleSampler {
+    type Output = Option<u64>;
+
+    /// The sampler's output index (drawn on a clone — finalization does
+    /// not advance the private randomness of the live summary).
+    fn finalize(&self) -> Option<u64> {
+        self.clone().output()
+    }
+}
+
+impl api::StreamSummary for PrecisionSampler {
+    fn process(&mut self, e: &Element) {
+        SingleLpSampler::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        PrecisionSampler::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl api::Mergeable for PrecisionSampler {
+    fn fingerprint(&self) -> Fingerprint {
+        let params = *self.sketch.params();
+        Fingerprint::new("precision-lp")
+            .with_f64(self.p)
+            .with(self.seed)
+            .with(params.rows as u64)
+            .with(params.width as u64)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        PrecisionSampler::merge(self, other)
+    }
+}
+
+impl api::Finalize for PrecisionSampler {
+    type Output = Option<u64>;
+
+    fn finalize(&self) -> Option<u64> {
+        self.clone().output()
     }
 }
 

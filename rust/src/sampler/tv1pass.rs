@@ -9,9 +9,13 @@
 //! than k keys) with probability `1/poly(n)`.
 
 use super::perfect_lp::{OracleSampler, PrecisionSampler, SingleLpSampler};
+use super::{Sample, SampleEntry};
+use crate::api::{self, Fingerprint, WorSampler};
 use crate::data::Element;
+use crate::error::{Error, Result};
 use crate::sketch::countsketch::CountSketch;
 use crate::sketch::{RhhSketch, SketchParams};
+use crate::util::hashing::BottomKDist;
 
 /// Which single-sampler substrate to use (DESIGN.md §6 substitution).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,16 +74,19 @@ impl TvSamplerConfig {
     }
 }
 
+#[derive(Clone)]
 enum Samplers {
     Oracle(Vec<OracleSampler>),
     Precision(Vec<PrecisionSampler>),
 }
 
 /// The 1-pass low-TV WOR sampler (Algorithm 1).
+#[derive(Clone)]
 pub struct TvSampler {
     cfg: TvSamplerConfig,
     samplers: Samplers,
     rhh: CountSketch,
+    processed: u64,
 }
 
 impl TvSampler {
@@ -109,7 +116,17 @@ impl TvSampler {
             cfg.rhh_width,
             cfg.seed ^ 0x0FF5E7,
         ));
-        TvSampler { cfg, samplers, rhh }
+        TvSampler { cfg, samplers, rhh, processed: 0 }
+    }
+
+    /// Sampler configuration.
+    pub fn config(&self) -> &TvSamplerConfig {
+        &self.cfg
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        self.processed
     }
 
     /// Pass 1: feed a stream update into every sampler and the rHH sketch.
@@ -127,6 +144,35 @@ impl TvSampler {
             }
         }
         self.rhh.process(e);
+        self.processed += 1;
+    }
+
+    /// Merge a sibling sampler built with the same config and seed. All
+    /// substrates are linear, so merging is sampler-by-sampler merging
+    /// plus an rHH sketch merge — the WOR k-tuple of the merged state
+    /// equals the single-stream one (the samplers' private randomness is
+    /// untouched by processing).
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        match (&mut self.samplers, &other.samplers) {
+            (Samplers::Oracle(a), Samplers::Oracle(b)) if a.len() == b.len() => {
+                for (x, y) in a.iter_mut().zip(b.iter()) {
+                    x.merge(y);
+                }
+            }
+            (Samplers::Precision(a), Samplers::Precision(b)) if a.len() == b.len() => {
+                for (x, y) in a.iter_mut().zip(b.iter()) {
+                    x.merge(y)?;
+                }
+            }
+            _ => {
+                return Err(Error::Incompatible(
+                    "TV samplers differ in substrate kind or sampler count".into(),
+                ))
+            }
+        }
+        RhhSketch::merge(&mut self.rhh, &other.rhh)?;
+        self.processed += other.processed;
+        Ok(())
     }
 
     /// Produce the WOR k-tuple (paper Algorithm 1 "Produce sample").
@@ -169,6 +215,12 @@ impl TvSampler {
         selected
     }
 
+    /// Non-consuming variant of [`TvSampler::produce`]: walks a clone so
+    /// the summary can keep streaming afterwards.
+    pub fn produce_keys(&self) -> Vec<u64> {
+        self.clone().produce()
+    }
+
     /// Total memory words across samplers and the rHH sketch
     /// (Oracle excluded — it is an oracle, not a sketch).
     pub fn size_words(&self) -> usize {
@@ -177,6 +229,102 @@ impl TvSampler {
             Samplers::Precision(v) => v.iter().map(|s| s.size_words()).sum(),
         };
         inner + self.rhh.size_words()
+    }
+}
+
+impl api::StreamSummary for TvSampler {
+    fn process(&mut self, e: &Element) {
+        TvSampler::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        TvSampler::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl api::Mergeable for TvSampler {
+    fn fingerprint(&self) -> Fingerprint {
+        let kind = match self.cfg.kind {
+            SamplerKind::Oracle => 1u64,
+            SamplerKind::Precision => 2u64,
+        };
+        Fingerprint::new("tv1pass")
+            .with_f64(self.cfg.p)
+            .with(self.cfg.k as u64)
+            .with(self.cfg.r as u64)
+            .with(self.cfg.seed)
+            .with(kind)
+            .with(self.cfg.rhh_rows as u64)
+            .with(self.cfg.rhh_width as u64)
+            .with(self.cfg.inner_rows as u64)
+            .with(self.cfg.inner_width as u64)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        TvSampler::merge(self, other)
+    }
+}
+
+impl api::Finalize for TvSampler {
+    type Output = Sample;
+
+    fn finalize(&self) -> Sample {
+        WorSampler::sample(self).expect("tv sample is infallible")
+    }
+}
+
+impl api::MultiPass for TvSampler {}
+
+impl WorSampler for TvSampler {
+    /// The WOR k-tuple as a [`Sample`]: keys from Algorithm 1's produce
+    /// step, frequencies estimated from the rHH sketch. `τ = 0` marks the
+    /// sample as threshold-free (Algorithm 1 yields a tuple, not a
+    /// bottom-k threshold).
+    fn sample(&self) -> Result<Sample> {
+        let entries = self
+            .produce_keys()
+            .into_iter()
+            .map(|key| {
+                let freq = self.rhh.est(key);
+                SampleEntry { key, freq, transformed: freq }
+            })
+            .collect();
+        Ok(Sample {
+            entries,
+            tau: 0.0,
+            p: self.cfg.p,
+            dist: BottomKDist::Exp,
+        })
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        api::Mergeable::fingerprint(self)
+    }
+
+    fn merge_dyn(&mut self, other: &dyn WorSampler) -> Result<()> {
+        match other.as_any().downcast_ref::<Self>() {
+            Some(o) => api::Mergeable::merge(self, o),
+            None => Err(Error::Incompatible(format!(
+                "cannot merge TV sampler with {}",
+                other.name()
+            ))),
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn WorSampler> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "tv"
     }
 }
 

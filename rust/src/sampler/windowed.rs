@@ -8,7 +8,9 @@
 //! property the paper highlights for sample stability.
 
 use super::{Sample, SampleEntry, SamplerConfig};
+use crate::api::{self, config_fingerprint, Fingerprint, WorSampler};
 use crate::data::Element;
+use crate::error::Result;
 use crate::sketch::window::WindowedCountSketch;
 use crate::sketch::SketchParams;
 use crate::transform::BottomKTransform;
@@ -24,6 +26,7 @@ pub struct WindowedWorp {
     candidates: HashMap<u64, u64>,
     cand_cap: usize,
     window: u64,
+    processed: u64,
 }
 
 impl WindowedWorp {
@@ -46,7 +49,18 @@ impl WindowedWorp {
             candidates: HashMap::new(),
             cand_cap,
             window,
+            processed: 0,
         }
+    }
+
+    /// Sampler configuration.
+    pub fn config(&self) -> &SamplerConfig {
+        &self.cfg
+    }
+
+    /// Elements processed (all time, not only the current window).
+    pub fn processed(&self) -> u64 {
+        self.processed
     }
 
     /// Process an element stamped with non-decreasing time `t`.
@@ -54,9 +68,26 @@ impl WindowedWorp {
         let te = self.transform.apply(e);
         self.sketch.process_at(&te, t);
         self.candidates.insert(e.key, t);
+        self.processed += 1;
         if self.candidates.len() > 2 * self.cand_cap {
             self.prune(t);
         }
+    }
+
+    /// Merge a sibling windowed sampler whose timestamps come from the
+    /// same clock (same seed / shape / window).
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        self.sketch.merge(&other.sketch)?;
+        for (&k, &t) in &other.candidates {
+            let slot = self.candidates.entry(k).or_insert(t);
+            *slot = (*slot).max(t);
+        }
+        self.processed += other.processed;
+        let now = self.sketch.now();
+        if self.candidates.len() > 2 * self.cand_cap {
+            self.prune(now);
+        }
+        Ok(())
     }
 
     /// Drop candidates last touched outside the window; if still over
@@ -95,6 +126,86 @@ impl WindowedWorp {
             })
             .collect();
         Sample { entries, tau, p: self.cfg.p, dist: self.transform.dist() }
+    }
+}
+
+impl api::StreamSummary for WindowedWorp {
+    /// Untimestamped path: each element advances an implicit clock by one
+    /// tick, so "window" means "the last `window` elements". Use
+    /// [`WindowedWorp::process_at`] for real event time.
+    fn process(&mut self, e: &Element) {
+        let t = self.sketch.now().saturating_add(1);
+        self.process_at(e, t);
+    }
+
+    fn size_words(&self) -> usize {
+        self.sketch.size_words() + 2 * self.candidates.len()
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl api::Mergeable for WindowedWorp {
+    fn fingerprint(&self) -> Fingerprint {
+        config_fingerprint("windowed", &self.cfg)
+            .with(self.window)
+            .with(self.sketch.span())
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        WindowedWorp::merge(self, other)
+    }
+}
+
+impl api::Finalize for WindowedWorp {
+    type Output = Sample;
+
+    fn finalize(&self) -> Sample {
+        self.sample()
+    }
+}
+
+impl api::MultiPass for WindowedWorp {}
+
+impl WorSampler for WindowedWorp {
+    fn sample(&self) -> Result<Sample> {
+        Ok(WindowedWorp::sample(self))
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        api::Mergeable::fingerprint(self)
+    }
+
+    fn merge_dyn(&mut self, other: &dyn WorSampler) -> Result<()> {
+        match other.as_any().downcast_ref::<Self>() {
+            Some(o) => api::Mergeable::merge(self, o),
+            None => Err(crate::error::Error::Incompatible(format!(
+                "cannot merge windowed WORp with {}",
+                other.name()
+            ))),
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn WorSampler> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "windowed"
+    }
+
+    /// The untimestamped [`api::StreamSummary::process`] path ticks a
+    /// clock per processed element; sharding would give every worker its
+    /// own clock and make the merged window cover skewed spans of the
+    /// stream, so the coordinator must run this sampler on one worker.
+    fn parallel_safe(&self) -> bool {
+        false
     }
 }
 

@@ -13,6 +13,7 @@
 //!   `τ = |ν̂*|_(k+1)`.
 
 use super::{Sample, SampleEntry, SamplerConfig};
+use crate::api::{self, config_fingerprint, Fingerprint, WorSampler};
 use crate::data::Element;
 use crate::error::Result;
 use crate::sketch::{AnyRhh, RhhSketch, SketchParams};
@@ -214,6 +215,86 @@ impl OnePassWorp {
             })
             .collect();
         Sample { entries, tau, p: self.cfg.p, dist: self.transform.dist() }
+    }
+}
+
+impl api::StreamSummary for OnePassWorp {
+    fn process(&mut self, e: &Element) {
+        OnePassWorp::process(self, e)
+    }
+
+    /// Vectorized batch path: sketch updates stream through; the
+    /// candidate-overflow check is amortized to once per batch.
+    fn process_batch(&mut self, batch: &[Element]) {
+        for e in batch {
+            let te = self.transform.apply(e);
+            self.sketch.process(&te);
+            self.candidates.insert(e.key);
+        }
+        self.processed += batch.len() as u64;
+        if self.candidates.len() > 2 * self.cand_cap {
+            self.shrink_candidates();
+        }
+    }
+
+    fn size_words(&self) -> usize {
+        OnePassWorp::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl api::Mergeable for OnePassWorp {
+    fn fingerprint(&self) -> Fingerprint {
+        config_fingerprint("worp1", &self.cfg)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        OnePassWorp::merge(self, other)
+    }
+}
+
+impl api::Finalize for OnePassWorp {
+    type Output = Sample;
+
+    fn finalize(&self) -> Sample {
+        self.sample()
+    }
+}
+
+impl api::MultiPass for OnePassWorp {}
+
+impl WorSampler for OnePassWorp {
+    fn sample(&self) -> Result<Sample> {
+        Ok(OnePassWorp::sample(self))
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        api::Mergeable::fingerprint(self)
+    }
+
+    fn merge_dyn(&mut self, other: &dyn WorSampler) -> Result<()> {
+        match other.as_any().downcast_ref::<Self>() {
+            Some(o) => api::Mergeable::merge(self, o),
+            None => Err(crate::error::Error::Incompatible(format!(
+                "cannot merge 1-pass WORp with {}",
+                other.name()
+            ))),
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn WorSampler> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "1pass"
     }
 }
 

@@ -13,8 +13,9 @@
 //!   sample whenever property (15) held — w.p. ≥ (1−δ)(1−3e^{−k}).
 
 use super::{Sample, SampleEntry, SamplerConfig};
+use crate::api::{self, config_fingerprint, Fingerprint, WorSampler};
 use crate::data::Element;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::sketch::topk::TopK;
 use crate::sketch::{AnyRhh, RhhSketch, SketchParams};
 use crate::transform::BottomKTransform;
@@ -84,6 +85,7 @@ impl TwoPassWorpPass1 {
             transform: self.transform,
             sketch: self.sketch,
             topk: TopK::new(cap, merge_cap),
+            processed: 0,
         }
     }
 }
@@ -95,6 +97,7 @@ pub struct TwoPassWorpPass2 {
     transform: BottomKTransform,
     sketch: AnyRhh,
     topk: TopK,
+    processed: u64,
 }
 
 impl TwoPassWorpPass2 {
@@ -103,11 +106,21 @@ impl TwoPassWorpPass2 {
     pub fn process(&mut self, e: &Element) {
         let priority = self.sketch.est(e.key).abs();
         self.topk.process(e.key, e.val, priority);
+        self.processed += 1;
     }
 
     /// Merge a sibling pass-II collector (disjoint shards of the stream).
+    /// Only the collectors merge — every sibling holds the *same* merged
+    /// pass-I sketch, which must not be double-counted.
     pub fn merge(&mut self, other: &Self) -> Result<()> {
-        self.topk.merge(&other.topk)
+        self.topk.merge(&other.topk)?;
+        self.processed += other.processed;
+        Ok(())
+    }
+
+    /// Elements processed in pass II.
+    pub fn processed(&self) -> u64 {
+        self.processed
     }
 
     /// Number of keys currently stored in `T`.
@@ -177,17 +190,269 @@ impl TwoPassWorpPass2 {
     }
 }
 
+/// 2-pass WORp as a first-class state machine: one summary that is in
+/// pass I (rHH sketching) or pass II (exact collection), with the
+/// handoff modeled by [`api::MultiPass::advance`] instead of two
+/// loosely-coupled structs. This is what the [`crate::Worp`] builder
+/// returns for `.two_pass()` and what the coordinator's generic pass
+/// loop drives.
+#[derive(Clone, Debug)]
+pub struct TwoPassWorp {
+    state: TwoPassState,
+}
+
+#[derive(Clone, Debug)]
+enum TwoPassState {
+    One(TwoPassWorpPass1),
+    Two(TwoPassWorpPass2),
+    /// Transient marker held only inside `advance`.
+    Poisoned,
+}
+
+impl TwoPassWorp {
+    /// Start in pass I.
+    pub fn new(cfg: SamplerConfig) -> Self {
+        TwoPassWorp { state: TwoPassState::One(TwoPassWorpPass1::new(cfg)) }
+    }
+
+    /// Sampler configuration.
+    pub fn config(&self) -> &SamplerConfig {
+        match &self.state {
+            TwoPassState::One(p) => &p.cfg,
+            TwoPassState::Two(p) => &p.cfg,
+            TwoPassState::Poisoned => unreachable!("poisoned two-pass state"),
+        }
+    }
+
+    /// Current pass index (0 = pass I, 1 = pass II).
+    pub fn pass_index(&self) -> usize {
+        match &self.state {
+            TwoPassState::One(_) => 0,
+            TwoPassState::Two(_) => 1,
+            TwoPassState::Poisoned => unreachable!("poisoned two-pass state"),
+        }
+    }
+
+    /// Process one element of the current pass.
+    #[inline]
+    pub fn process(&mut self, e: &Element) {
+        match &mut self.state {
+            TwoPassState::One(p) => p.process(e),
+            TwoPassState::Two(p) => p.process(e),
+            TwoPassState::Poisoned => unreachable!("poisoned two-pass state"),
+        }
+    }
+
+    /// Seal pass I and arm pass II; errors when already in pass II.
+    pub fn advance(&mut self) -> Result<()> {
+        match std::mem::replace(&mut self.state, TwoPassState::Poisoned) {
+            TwoPassState::One(p1) => {
+                self.state = TwoPassState::Two(p1.into_pass2());
+                Ok(())
+            }
+            s @ TwoPassState::Two(_) => {
+                self.state = s;
+                Err(Error::State("2-pass WORp is already in pass II".into()))
+            }
+            TwoPassState::Poisoned => unreachable!("poisoned two-pass state"),
+        }
+    }
+
+    /// Merge a sibling in the *same pass*; merging across passes is an
+    /// incompatibility (the fingerprint encodes the pass index).
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        match (&mut self.state, &other.state) {
+            (TwoPassState::One(a), TwoPassState::One(b)) => a.merge(b),
+            (TwoPassState::Two(a), TwoPassState::Two(b)) => a.merge(b),
+            _ => Err(Error::Incompatible(
+                "cannot merge 2-pass summaries in different passes".into(),
+            )),
+        }
+    }
+
+    /// The exact sample; errors until pass II has been armed.
+    pub fn sample(&self) -> Result<Sample> {
+        match &self.state {
+            TwoPassState::Two(p) => Ok(p.sample()),
+            _ => Err(Error::State(
+                "2-pass WORp has not finished pass I — call advance() and replay the stream"
+                    .into(),
+            )),
+        }
+    }
+
+    /// The §4.1 larger effective sample; errors until pass II.
+    pub fn extended_sample(&self) -> Result<Sample> {
+        match &self.state {
+            TwoPassState::Two(p) => Ok(p.extended_sample()),
+            _ => Err(Error::State("2-pass WORp has not finished pass I".into())),
+        }
+    }
+
+    /// Summary size in words for the current state.
+    pub fn size_words(&self) -> usize {
+        match &self.state {
+            TwoPassState::One(p) => p.size_words(),
+            TwoPassState::Two(p) => p.size_words(),
+            TwoPassState::Poisoned => 0,
+        }
+    }
+
+    /// Elements processed in the current pass.
+    pub fn processed(&self) -> u64 {
+        match &self.state {
+            TwoPassState::One(p) => p.processed(),
+            TwoPassState::Two(p) => p.processed(),
+            TwoPassState::Poisoned => 0,
+        }
+    }
+}
+
+impl api::StreamSummary for TwoPassWorp {
+    fn process(&mut self, e: &Element) {
+        TwoPassWorp::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        TwoPassWorp::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        TwoPassWorp::processed(self)
+    }
+}
+
+impl api::Mergeable for TwoPassWorp {
+    fn fingerprint(&self) -> Fingerprint {
+        config_fingerprint("worp2", self.config()).with(self.pass_index() as u64)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        TwoPassWorp::merge(self, other)
+    }
+}
+
+impl api::Finalize for TwoPassWorp {
+    type Output = Result<Sample>;
+
+    fn finalize(&self) -> Result<Sample> {
+        self.sample()
+    }
+}
+
+impl api::MultiPass for TwoPassWorp {
+    fn passes(&self) -> usize {
+        2
+    }
+
+    fn pass(&self) -> usize {
+        self.pass_index()
+    }
+
+    fn advance(&mut self) -> Result<()> {
+        TwoPassWorp::advance(self)
+    }
+}
+
+impl WorSampler for TwoPassWorp {
+    fn sample(&self) -> Result<Sample> {
+        TwoPassWorp::sample(self)
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        api::Mergeable::fingerprint(self)
+    }
+
+    fn merge_dyn(&mut self, other: &dyn WorSampler) -> Result<()> {
+        match other.as_any().downcast_ref::<Self>() {
+            Some(o) => api::Mergeable::merge(self, o),
+            None => Err(Error::Incompatible(format!(
+                "cannot merge 2-pass WORp with {}",
+                other.name()
+            ))),
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn WorSampler> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "2pass"
+    }
+}
+
+impl api::StreamSummary for TwoPassWorpPass1 {
+    fn process(&mut self, e: &Element) {
+        TwoPassWorpPass1::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        TwoPassWorpPass1::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        TwoPassWorpPass1::processed(self)
+    }
+}
+
+impl api::Mergeable for TwoPassWorpPass1 {
+    fn fingerprint(&self) -> Fingerprint {
+        config_fingerprint("worp2-pass1", &self.cfg)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        TwoPassWorpPass1::merge(self, other)
+    }
+}
+
+impl api::StreamSummary for TwoPassWorpPass2 {
+    fn process(&mut self, e: &Element) {
+        TwoPassWorpPass2::process(self, e)
+    }
+
+    fn size_words(&self) -> usize {
+        TwoPassWorpPass2::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl api::Mergeable for TwoPassWorpPass2 {
+    fn fingerprint(&self) -> Fingerprint {
+        config_fingerprint("worp2-pass2", &self.cfg)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        TwoPassWorpPass2::merge(self, other)
+    }
+}
+
+impl api::Finalize for TwoPassWorpPass2 {
+    type Output = Sample;
+
+    fn finalize(&self) -> Sample {
+        self.sample()
+    }
+}
+
 /// Convenience driver: run both passes over an in-memory stream.
 pub fn two_pass_sample(elems: &[Element], cfg: SamplerConfig) -> Sample {
-    let mut p1 = TwoPassWorpPass1::new(cfg);
+    let mut w = TwoPassWorp::new(cfg);
     for e in elems {
-        p1.process(e);
+        w.process(e);
     }
-    let mut p2 = p1.into_pass2();
+    w.advance().expect("pass I -> pass II");
     for e in elems {
-        p2.process(e);
+        w.process(e);
     }
-    p2.sample()
+    w.sample().expect("pass II complete")
 }
 
 #[cfg(test)]
@@ -307,6 +572,42 @@ mod tests {
         let ext_keys: HashSet<u64> = ext.keys().into_iter().collect();
         assert!(base_keys.is_subset(&ext_keys));
         assert!(ext.tau <= base.tau + 1e-12);
+    }
+
+    #[test]
+    fn state_machine_enforces_pass_order() {
+        let cfg = SamplerConfig::new(1.0, 5)
+            .with_seed(3)
+            .with_domain(100)
+            .with_sketch_shape(5, 256);
+        let mut w = TwoPassWorp::new(cfg);
+        assert_eq!(w.pass_index(), 0);
+        // sampling before pass II is an invalid state
+        let err = w.sample().unwrap_err();
+        assert!(matches!(err, crate::error::Error::State(_)), "{err}");
+        w.process(&Element::new(1, 2.0));
+        assert_eq!(w.processed(), 1);
+        w.advance().unwrap();
+        assert_eq!(w.pass_index(), 1);
+        assert_eq!(w.processed(), 0); // per-pass counter
+        w.process(&Element::new(1, 2.0));
+        assert!(w.sample().is_ok());
+        // advancing past the last pass is an invalid state
+        let err = w.advance().unwrap_err();
+        assert!(matches!(err, crate::error::Error::State(_)), "{err}");
+    }
+
+    #[test]
+    fn cross_pass_merge_is_incompatible() {
+        let cfg = SamplerConfig::new(1.0, 5)
+            .with_seed(3)
+            .with_domain(100)
+            .with_sketch_shape(5, 256);
+        let mut a = TwoPassWorp::new(cfg.clone());
+        let mut b = TwoPassWorp::new(cfg);
+        b.advance().unwrap();
+        let err = api::Mergeable::merge(&mut a, &b).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Incompatible(_)), "{err}");
     }
 
     #[test]

@@ -66,6 +66,22 @@ impl AnyRhh {
             AnyRhh::CountMin(_) => 1.0,
         }
     }
+
+    /// Shape/seed parameters of the wrapped sketch.
+    pub fn params(&self) -> &SketchParams {
+        match self {
+            AnyRhh::CountSketch(s) => s.params(),
+            AnyRhh::CountMin(s) => s.params(),
+        }
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        match self {
+            AnyRhh::CountSketch(s) => s.processed(),
+            AnyRhh::CountMin(s) => s.processed(),
+        }
+    }
 }
 
 impl RhhSketch for AnyRhh {

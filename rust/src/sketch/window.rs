@@ -14,6 +14,7 @@
 use super::countsketch::CountSketch;
 use super::{RhhSketch, SketchParams};
 use crate::data::Element;
+use crate::error::{Error, Result};
 use std::collections::VecDeque;
 
 /// CountSketch over a sliding window of recent elements.
@@ -49,6 +50,21 @@ impl WindowedCountSketch {
     /// Latest timestamp processed.
     pub fn now(&self) -> u64 {
         self.now
+    }
+
+    /// Shape/seed parameters of the sub-sketches.
+    pub fn params(&self) -> &SketchParams {
+        &self.params
+    }
+
+    /// Window length in time units.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Time units per sub-sketch bucket.
+    pub fn span(&self) -> u64 {
+        self.span
     }
 
     /// Number of live sub-sketches.
@@ -104,6 +120,43 @@ impl WindowedCountSketch {
     pub fn size_words(&self) -> usize {
         (self.ring.len() + 1) * self.active.size_words()
     }
+
+    /// Merge a sibling windowed sketch (same shape, window and bucket
+    /// span) whose timestamps come from the same clock: rings union
+    /// bucket-by-bucket (CountSketch linearity), the active table is
+    /// rebuilt from the merged ring, and expiry advances to the later
+    /// `now` of the two.
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        if self.params != other.params || self.window != other.window || self.span != other.span
+        {
+            return Err(Error::Incompatible(format!(
+                "windowed sketches differ: {:?}/w{}/s{} vs {:?}/w{}/s{}",
+                self.params, self.window, self.span, other.params, other.window, other.span
+            )));
+        }
+        for (start, sk) in &other.ring {
+            let mine = self.ring.iter_mut().find(|(s, _)| s == start);
+            match mine {
+                Some((_, existing)) => existing.merge(sk)?,
+                None => {
+                    let pos = self
+                        .ring
+                        .iter()
+                        .position(|(s, _)| *s > *start)
+                        .unwrap_or(self.ring.len());
+                    self.ring.insert(pos, (*start, sk.clone()));
+                }
+            }
+        }
+        let mut active = CountSketch::new(self.params);
+        for (_, sk) in &self.ring {
+            active.merge(sk)?;
+        }
+        self.active = active;
+        self.now = self.now.max(other.now);
+        self.expire(self.now);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -158,6 +211,35 @@ mod tests {
             assert!((a - b).abs() < 1e-9);
         }
         assert!(w.live_buckets() <= 6);
+    }
+
+    #[test]
+    fn merge_of_time_sharded_streams_matches_whole() {
+        let mut whole = WindowedCountSketch::new(params(), 100, 10);
+        let mut a = WindowedCountSketch::new(params(), 100, 10);
+        let mut b = WindowedCountSketch::new(params(), 100, 10);
+        let mut rng = crate::util::rng::Rng::new(7);
+        for t in 0..400u64 {
+            let e = Element::new(rng.below(30), 1.0);
+            whole.process_at(&e, t);
+            if e.key % 2 == 0 {
+                a.process_at(&e, t);
+            } else {
+                b.process_at(&e, t);
+            }
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.now(), whole.now());
+        for key in 0..30u64 {
+            assert!((a.est(key) - whole.est(key)).abs() < 1e-9, "key {key}");
+        }
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_window() {
+        let mut a = WindowedCountSketch::new(params(), 100, 10);
+        let b = WindowedCountSketch::new(params(), 200, 10);
+        assert!(a.merge(&b).is_err());
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Contract tests for the unified summary API: one generic driver covers
+//! every WOR sampler through `Box<dyn WorSampler>` (the same path the
+//! CLI/pipeline uses), checking the paper's composability property
+//! `merge(split stream) ≡ process(whole stream)` and the loud-failure
+//! contract for incompatible merges.
+
+use worp::api::{Mergeable, MultiPass, StreamSummary, WorSampler};
+use worp::data::zipf::zipf_exact_stream;
+use worp::data::Element;
+use worp::sampler::Sample;
+use worp::{Error, Worp};
+
+fn stream(n: usize, seed: u64) -> Vec<Element> {
+    zipf_exact_stream(n, 1.2, 1e4, 2, seed)
+}
+
+/// Drive a boxed sampler through all its passes, single stream.
+fn drive_seq(proto: &dyn WorSampler, elems: &[Element]) -> Sample {
+    let mut c = proto.clone_box();
+    for pass in 0..c.passes() {
+        if pass > 0 {
+            c.advance().unwrap();
+        }
+        for e in elems {
+            c.process(e);
+        }
+    }
+    c.sample().unwrap()
+}
+
+/// Drive a boxed sampler through all its passes with the stream split
+/// across two "shards" that are merged per pass.
+fn drive_split(proto: &dyn WorSampler, elems: &[Element]) -> Sample {
+    let mut current = proto.clone_box();
+    for pass in 0..current.passes() {
+        if pass > 0 {
+            current.advance().unwrap();
+        }
+        let mut a = current.clone();
+        let mut b = current.clone();
+        for (i, e) in elems.iter().enumerate() {
+            if i % 2 == 0 {
+                a.process(e);
+            } else {
+                b.process(e);
+            }
+        }
+        a.merge_dyn(&*b).unwrap();
+        current = a;
+    }
+    assert_eq!(current.processed(), elems.len() as u64);
+    current.sample().unwrap()
+}
+
+fn assert_samples_agree(method: &str, split: &Sample, whole: &Sample) {
+    assert_eq!(split.keys(), whole.keys(), "{method}: key sets differ");
+    assert!(
+        (split.tau - whole.tau).abs() <= 1e-9 * whole.tau.abs().max(1.0),
+        "{method}: tau {} vs {}",
+        split.tau,
+        whole.tau
+    );
+    for (s, w) in split.entries.iter().zip(&whole.entries) {
+        assert!(
+            (s.freq - w.freq).abs() <= 1e-6 * w.freq.abs().max(1.0),
+            "{method}: freq {} vs {} for key {}",
+            s.freq,
+            w.freq,
+            s.key
+        );
+    }
+}
+
+/// The satellite property, generically: for every WOR sampler the
+/// builder can produce, merging shard summaries equals summarizing the
+/// whole stream — same sample keys and threshold τ.
+#[test]
+fn merge_split_stream_equals_whole_stream_for_every_sampler() {
+    // n is kept below the 1-pass candidate capacity so candidate-set
+    // truncation (timing-dependent by design) cannot perturb the check
+    let n = 200;
+    let elems = stream(n, 5);
+    let base = Worp::p(1.0)
+        .k(16)
+        .seed(77)
+        .domain(n)
+        .sketch_shape(7, 1024);
+    let builders = [
+        base.clone().one_pass(),
+        base.clone().two_pass(),
+        base.clone().exact(),
+        // effectively-unbounded window: trait ticks stay inside it
+        base.clone().windowed(1 << 40, 4),
+        base.clone().k(6).tv().tv_r(64),
+    ];
+    for b in builders {
+        let proto = b.build().unwrap();
+        let method = proto.name();
+        let whole = drive_seq(&*proto, &elems);
+        let split = drive_split(&*proto, &elems);
+        assert_samples_agree(method, &split, &whole);
+        assert!(!whole.entries.is_empty(), "{method}: empty sample");
+    }
+}
+
+/// Same property through static dispatch, for call sites that keep
+/// concrete types (the generic constraint is the whole test: any
+/// `WorSampler + Mergeable + Clone` passes through unchanged).
+fn split_merge_static<S>(proto: S, elems: &[Element]) -> (Sample, Sample)
+where
+    S: WorSampler + Mergeable + Clone,
+{
+    let mut whole = proto.clone();
+    for e in elems {
+        whole.process(e);
+    }
+    let mut a = proto.clone();
+    let mut b = proto;
+    for (i, e) in elems.iter().enumerate() {
+        if i % 2 == 0 {
+            a.process(e);
+        } else {
+            b.process(e);
+        }
+    }
+    Mergeable::merge(&mut a, &b).unwrap();
+    assert_eq!(
+        StreamSummary::processed(&a),
+        StreamSummary::processed(&whole)
+    );
+    (
+        WorSampler::sample(&a).unwrap(),
+        WorSampler::sample(&whole).unwrap(),
+    )
+}
+
+#[test]
+fn static_dispatch_merge_property() {
+    let n = 200;
+    let elems = stream(n, 9);
+    let base = Worp::p(2.0).k(12).seed(3).domain(n).sketch_shape(7, 1024);
+    let (s, w) = split_merge_static(base.build_one_pass().unwrap(), &elems);
+    assert_samples_agree("1pass-static", &s, &w);
+    let (s, w) = split_merge_static(base.build_exact().unwrap(), &elems);
+    assert_samples_agree("exact-static", &s, &w);
+}
+
+/// Satellite: merging summaries built from different seeds or sketch
+/// shapes returns `Error::Incompatible` — never a panic, never silent
+/// corruption.
+#[test]
+fn incompatible_merges_fail_loudly() {
+    let base = Worp::p(1.0).k(8).domain(100).sketch_shape(5, 256);
+    let elems = stream(100, 1);
+
+    // different seeds
+    for method in ["1pass", "2pass", "exact", "windowed", "tv"] {
+        let m = worp::Method::parse(method).unwrap();
+        let mk = |seed: u64| {
+            let mut b = base.clone().seed(seed).method(m);
+            if m == worp::Method::Windowed {
+                b = b.windowed(1 << 20, 4);
+            }
+            let mut s = b.build().unwrap();
+            for e in &elems {
+                s.process(e);
+            }
+            s
+        };
+        let mut a = mk(1);
+        let b2 = mk(2);
+        let err = a.merge_dyn(&*b2).unwrap_err();
+        assert!(
+            matches!(err, Error::Incompatible(_)),
+            "{method} seed mismatch: {err}"
+        );
+    }
+
+    // different sketch shapes
+    let mut a = base.clone().one_pass().build().unwrap();
+    let b2 = base.clone().sketch_shape(5, 512).one_pass().build().unwrap();
+    let err = a.merge_dyn(&*b2).unwrap_err();
+    assert!(matches!(err, Error::Incompatible(_)), "shape mismatch: {err}");
+
+    // different concrete samplers
+    let mut a = base.clone().one_pass().build().unwrap();
+    let b2 = base.clone().exact().build().unwrap();
+    let err = a.merge_dyn(&*b2).unwrap_err();
+    assert!(matches!(err, Error::Incompatible(_)), "cross-method: {err}");
+
+    // different k
+    let mut a = base.clone().exact().build().unwrap();
+    let b2 = base.clone().k(9).exact().build().unwrap();
+    let err = a.merge_dyn(&*b2).unwrap_err();
+    assert!(matches!(err, Error::Incompatible(_)), "k mismatch: {err}");
+}
+
+#[test]
+fn multipass_surface_is_consistent() {
+    let one = Worp::p(1.0).k(4).one_pass().build().unwrap();
+    assert_eq!(one.passes(), 1);
+    assert_eq!(one.pass(), 0);
+    let mut one = one;
+    assert!(matches!(one.advance(), Err(Error::State(_))));
+
+    let mut two = Worp::p(1.0).k(4).two_pass().build().unwrap();
+    assert_eq!(two.passes(), 2);
+    assert_eq!(two.pass(), 0);
+    assert!(matches!(two.sample(), Err(Error::State(_))));
+    two.advance().unwrap();
+    assert_eq!(two.pass(), 1);
+    assert!(two.sample().is_ok());
+    assert!(matches!(two.advance(), Err(Error::State(_))));
+}
+
+#[test]
+fn batch_and_element_paths_agree() {
+    let n = 300;
+    let elems = stream(n, 11);
+    let b = Worp::p(1.0).k(10).seed(5).domain(n).sketch_shape(7, 1024);
+    let mut by_elem = b.clone().one_pass().build().unwrap();
+    let mut by_batch = b.one_pass().build().unwrap();
+    for e in &elems {
+        by_elem.process(e);
+    }
+    for chunk in elems.chunks(64) {
+        by_batch.process_batch(chunk);
+    }
+    assert_eq!(by_elem.processed(), by_batch.processed());
+    assert_eq!(
+        by_elem.sample().unwrap().keys(),
+        by_batch.sample().unwrap().keys()
+    );
+}

@@ -115,11 +115,20 @@ fn signed_gradient_pipeline_end_to_end() {
 #[test]
 fn failure_injection_worker_panic_is_reported() {
     struct Bomb;
-    impl worp::pipeline::ShardSink for Bomb {
+    // StreamSummary is the only impl a sink needs — ShardSink is blanket
+    impl worp::api::StreamSummary for Bomb {
         fn process(&mut self, e: &Element) {
             if e.key == 13 {
                 panic!("injected worker failure");
             }
+        }
+
+        fn size_words(&self) -> usize {
+            0
+        }
+
+        fn processed(&self) -> u64 {
+            0
         }
     }
     let elems: Vec<Element> = (0..1000u64).map(|i| Element::new(i % 50, 1.0)).collect();

@@ -1,8 +1,10 @@
 //! Integration: the AOT-compiled JAX/Pallas artifacts executed from rust
 //! must agree with the native CountSketch bit-for-bit (up to f32).
 //!
-//! Requires `make artifacts`; tests skip (with a notice) when the
-//! artifacts directory is absent so `cargo test` stays runnable standalone.
+//! Requires the `xla` cargo feature (PJRT bindings) and `make artifacts`;
+//! tests skip (with a notice) when the artifacts directory is absent so
+//! `cargo test` stays runnable standalone.
+#![cfg(feature = "xla")]
 
 use worp::data::Element;
 use worp::runtime::artifact::ArtifactDir;
