@@ -113,6 +113,17 @@ fn main() {
         });
     }
 
+    // ---- machine-readable batch-vs-scalar suite (perf trajectory data)
+    // runs before the XLA section, which early-returns when the PJRT
+    // runtime is unavailable
+    println!("\n§Perf — batch-vs-scalar suite (BENCH_PR2.json)\n");
+    let opts = worp::perf::PerfOpts::full();
+    let records = worp::perf::run_suite(&opts);
+    match worp::perf::write_json("BENCH_PR2.json", &opts, &records) {
+        Ok(()) => println!("\nwrote {} records to BENCH_PR2.json\n", records.len()),
+        Err(e) => println!("\n(could not write BENCH_PR2.json: {e})\n"),
+    }
+
     // ---- XLA offload (if artifacts exist)
     let dir = ["artifacts", "../artifacts"]
         .iter()

@@ -43,6 +43,7 @@ use crate::error::{Error, Result};
 use crate::sampler::{Sample, SamplerConfig};
 use crate::sketch::countmin::CountMin;
 use crate::sketch::countsketch::CountSketch;
+use crate::sketch::spacesaving::SpaceSaving;
 use crate::sketch::{AnyRhh, RhhSketch};
 use crate::util::hashing::{hash64, hash_bytes, BottomKDist};
 use std::any::Any;
@@ -263,6 +264,11 @@ impl StreamSummary for CountSketch {
         RhhSketch::process(self, e)
     }
 
+    /// Columnar batch path (§Perf L3-6): block hashing + row-major sweeps.
+    fn process_batch(&mut self, batch: &[Element]) {
+        CountSketch::process_batch(self, batch)
+    }
+
     fn size_words(&self) -> usize {
         RhhSketch::size_words(self)
     }
@@ -289,6 +295,11 @@ impl Mergeable for CountSketch {
 impl StreamSummary for CountMin {
     fn process(&mut self, e: &Element) {
         RhhSketch::process(self, e)
+    }
+
+    /// Columnar batch path (§Perf L3-6).
+    fn process_batch(&mut self, batch: &[Element]) {
+        CountMin::process_batch(self, batch)
     }
 
     fn size_words(&self) -> usize {
@@ -319,6 +330,11 @@ impl StreamSummary for AnyRhh {
         RhhSketch::process(self, e)
     }
 
+    /// Columnar batch path (§Perf L3-6), dispatched to the wrapped sketch.
+    fn process_batch(&mut self, batch: &[Element]) {
+        AnyRhh::process_batch(self, batch)
+    }
+
     fn size_words(&self) -> usize {
         RhhSketch::size_words(self)
     }
@@ -340,6 +356,36 @@ impl Mergeable for AnyRhh {
 
     fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
         RhhSketch::merge(self, other)
+    }
+}
+
+impl StreamSummary for SpaceSaving<u64> {
+    fn process(&mut self, e: &Element) {
+        SpaceSaving::process(self, e.key, e.val)
+    }
+
+    /// Deferred-heap batch path (§Perf L3-6): hoisted bookkeeping plus the
+    /// lazy-deletion eviction heap.
+    fn process_batch(&mut self, batch: &[Element]) {
+        SpaceSaving::process_elements(self, batch)
+    }
+
+    fn size_words(&self) -> usize {
+        SpaceSaving::size_words(self)
+    }
+
+    fn processed(&self) -> u64 {
+        SpaceSaving::processed(self)
+    }
+}
+
+impl Mergeable for SpaceSaving<u64> {
+    fn fingerprint(&self) -> Fingerprint {
+        Fingerprint::new("spacesaving").with(self.capacity() as u64)
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        SpaceSaving::merge(self, other)
     }
 }
 

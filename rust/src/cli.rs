@@ -98,6 +98,11 @@ COMMANDS:
                   --backend <native|xla>
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
+    bench       batch-vs-scalar ingestion throughput per summary,
+                written as machine-readable JSON
+                  --smoke                 small CI profile (default: full)
+                  --out <path>            output file (default BENCH_PR2.json)
+                  --stream-len <n> --n <keys> --batch <n> --iters <n> --k <n>
     info        print runtime / artifact status
     help        show this text
 "
@@ -108,6 +113,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "sample" => cmd_sample(args),
         "psi" => cmd_psi(args),
+        "bench" => cmd_bench(args),
         "info" => cmd_info(args),
         "" | "help" | "--help" | "-h" => {
             println!("{}", usage());
@@ -237,6 +243,32 @@ fn cmd_psi(args: &Args) -> Result<()> {
         (rho - 1.0f64).max(1.0 / ln_nk) / psi
     };
     println!("implied constant C = {c:.3} (paper: C<2 suffices for k>=10)");
+    Ok(())
+}
+
+/// `worp bench`: run the batch-vs-scalar ingestion suite and emit the
+/// machine-readable perf artifact (`BENCH_PR2.json` by default). Smoke
+/// mode is the CI profile — it exists to catch panics and keep the
+/// artifact schema alive, not to produce stable numbers.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mut opts = if args.has_flag("smoke") {
+        crate::perf::PerfOpts::smoke()
+    } else {
+        crate::perf::PerfOpts::full()
+    };
+    opts.stream_len = args.parse_or("stream-len", opts.stream_len)?;
+    opts.n_keys = args.parse_or("n", opts.n_keys)?;
+    opts.batch = args.parse_or("batch", opts.batch)?;
+    opts.iters = args.parse_or("iters", opts.iters)?;
+    opts.k = args.parse_or("k", opts.k)?;
+    let out = args.str_or("out", "BENCH_PR2.json");
+    println!(
+        "bench: stream_len={} n_keys={} batch={} iters={} k={} smoke={}\n",
+        opts.stream_len, opts.n_keys, opts.batch, opts.iters, opts.k, opts.smoke
+    );
+    let records = crate::perf::run_suite(&opts);
+    crate::perf::write_json(&out, &opts, &records)?;
+    println!("\nwrote {} records to {out}", records.len());
     Ok(())
 }
 

@@ -204,7 +204,8 @@ impl Coordinator {
                     .keys()
                     .map(|&k| (k, xs.est(k).abs()))
                     .collect();
-                scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                // rank_desc: deterministic truncation (see worp1)
+                scored.sort_by(crate::util::stats::rank_desc);
                 scored.truncate(cand_cap);
                 candidates = scored.into_iter().map(|(k, _)| (k, ())).collect();
             }

@@ -69,6 +69,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod estimate;
+pub mod perf;
 pub mod pipeline;
 pub mod psi;
 pub mod runtime;

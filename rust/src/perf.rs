@@ -1,0 +1,259 @@
+//! Machine-readable performance suite — the data source for the perf
+//! trajectory (`BENCH_PR2.json`).
+//!
+//! One suite, two drivers: the `worp bench` CLI subcommand (smoke mode in
+//! CI — fails on panics, never on numbers) and `cargo bench --bench
+//! throughput` (full mode). Each summary is measured twice over the same
+//! seeded Zipf stream: the scalar [`StreamSummary::process`] loop and the
+//! micro-batched [`StreamSummary::process_batch`] path, so every record
+//! pair quantifies what the columnar hot path buys.
+
+use crate::api::StreamSummary;
+use crate::data::zipf::ZipfStream;
+use crate::data::Element;
+use crate::sampler::exact::ExactWor;
+use crate::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
+use crate::sampler::windowed::WindowedWorp;
+use crate::sampler::worp1::OnePassWorp;
+use crate::sampler::worp2::TwoPassWorp;
+use crate::sampler::SamplerConfig;
+use crate::sketch::countmin::CountMin;
+use crate::sketch::countsketch::CountSketch;
+use crate::util::bench::Bencher;
+use std::io::Write;
+
+/// Suite configuration.
+#[derive(Clone, Debug)]
+pub struct PerfOpts {
+    /// Elements in the generated Zipf stream.
+    pub stream_len: u64,
+    /// Key-domain size.
+    pub n_keys: usize,
+    /// Micro-batch size for the batched runs.
+    pub batch: usize,
+    /// Measured iterations per benchmark.
+    pub iters: u32,
+    /// Warmup iterations per benchmark.
+    pub warmup: u32,
+    /// Sample size k for the samplers.
+    pub k: usize,
+    /// Smoke mode (recorded in the JSON meta).
+    pub smoke: bool,
+}
+
+impl PerfOpts {
+    /// CI smoke profile: small stream, one measured iteration — exists to
+    /// catch panics and emit a well-formed JSON artifact, not to produce
+    /// stable numbers.
+    pub fn smoke() -> Self {
+        PerfOpts {
+            stream_len: 50_000,
+            n_keys: 5_000,
+            batch: 4096,
+            iters: 2,
+            warmup: 1,
+            k: 32,
+            smoke: true,
+        }
+    }
+
+    /// Full profile (the `cargo bench` path).
+    pub fn full() -> Self {
+        PerfOpts {
+            stream_len: 1_000_000,
+            n_keys: 100_000,
+            batch: 4096,
+            iters: 8,
+            warmup: 2,
+            k: 100,
+            smoke: false,
+        }
+    }
+}
+
+/// One measurement: a (summary, mode) pair with its throughput.
+#[derive(Clone, Debug)]
+pub struct PerfRecord {
+    /// Summary under test ("countsketch", "worp1", "ppswor", ...).
+    pub summary: String,
+    /// "scalar" (per-element `process`) or "batch" (`process_batch`).
+    pub mode: String,
+    /// Items per second (mean over iterations).
+    pub items_per_sec: f64,
+    /// Mean iteration wall-clock in nanoseconds.
+    pub mean_ns: u128,
+    /// Median iteration wall-clock in nanoseconds.
+    pub p50_ns: u128,
+    /// 95th-percentile iteration wall-clock in nanoseconds.
+    pub p95_ns: u128,
+}
+
+fn bench_pair<S, F>(
+    b: &mut Bencher,
+    out: &mut Vec<PerfRecord>,
+    name: &str,
+    stream: &[Element],
+    batch: usize,
+    make: F,
+) where
+    S: StreamSummary,
+    F: Fn() -> S,
+{
+    let m = stream.len() as u64;
+    let scalar = b.bench_throughput(&format!("{name} scalar"), m, || {
+        let mut s = make();
+        for e in stream {
+            s.process(e);
+        }
+        s.processed()
+    });
+    out.push(record(name, "scalar", scalar));
+    let batched = b.bench_throughput(&format!("{name} batch({batch})"), m, || {
+        let mut s = make();
+        for chunk in stream.chunks(batch) {
+            s.process_batch(chunk);
+        }
+        s.processed()
+    });
+    out.push(record(name, "batch", batched));
+}
+
+fn record(name: &str, mode: &str, r: &crate::util::bench::BenchResult) -> PerfRecord {
+    PerfRecord {
+        summary: name.to_string(),
+        mode: mode.to_string(),
+        items_per_sec: r.throughput().unwrap_or(0.0),
+        mean_ns: r.mean.as_nanos(),
+        p50_ns: r.p50.as_nanos(),
+        p95_ns: r.p95.as_nanos(),
+    }
+}
+
+/// Run the batch-vs-scalar suite over every summary family.
+pub fn run_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
+    let stream: Vec<Element> = ZipfStream::new(opts.n_keys, 1.2, opts.stream_len, 1).collect();
+    let k = opts.k;
+    let cfg = SamplerConfig::new(1.0, k)
+        .with_seed(3)
+        .with_domain(opts.n_keys)
+        .with_sketch_shape(5, 1024);
+
+    Bencher::header();
+    let mut b = Bencher::new().with_iters(opts.warmup, opts.iters);
+    let mut out = Vec::new();
+
+    bench_pair(&mut b, &mut out, "countsketch", &stream, opts.batch, || {
+        CountSketch::with_shape(5, 1024, 7)
+    });
+    bench_pair(&mut b, &mut out, "countmin", &stream, opts.batch, || {
+        CountMin::with_shape(5, 1024, 7)
+    });
+    bench_pair(&mut b, &mut out, "worp1", &stream, opts.batch, {
+        let cfg = cfg.clone();
+        move || OnePassWorp::new(cfg.clone())
+    });
+    bench_pair(&mut b, &mut out, "worp2-pass1", &stream, opts.batch, {
+        let cfg = cfg.clone();
+        move || TwoPassWorp::new(cfg.clone())
+    });
+    // "ppswor": the exact streaming p-ppswor baseline (linear memory)
+    bench_pair(&mut b, &mut out, "ppswor", &stream, opts.batch, {
+        let cfg = cfg.clone();
+        move || ExactWor::new(cfg.clone())
+    });
+    bench_pair(&mut b, &mut out, "windowed", &stream, opts.batch, {
+        let cfg = cfg.clone();
+        let window = (opts.stream_len / 2).max(16);
+        move || WindowedWorp::new(cfg.clone(), window, 8)
+    });
+    // the TV sampler runs r parallel single samplers; keep its stream
+    // slice small so the suite stays minutes, not hours
+    let tv_stream = &stream[..stream.len().min(opts.stream_len as usize / 16).max(1)];
+    bench_pair(&mut b, &mut out, "tv1pass", tv_stream, opts.batch, {
+        let n = opts.n_keys;
+        move || TvSampler::new(TvSamplerConfig::new(1.0, 8, n, 3, SamplerKind::Oracle).with_r(32))
+    });
+
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render the suite result as a JSON document (hand-rolled — no serde in
+/// the offline image).
+pub fn to_json(opts: &PerfOpts, records: &[PerfRecord]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"meta\": {");
+    s.push_str(&format!(
+        "\"stream_len\": {}, \"n_keys\": {}, \"batch\": {}, \"iters\": {}, \"k\": {}, \"smoke\": {}",
+        opts.stream_len, opts.n_keys, opts.batch, opts.iters, opts.k, opts.smoke
+    ));
+    s.push_str("},\n  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"summary\": \"{}\", \"mode\": \"{}\", \"items_per_sec\": {:.1}, \"mean_ns\": {}, \"p50_ns\": {}, \"p95_ns\": {}}}{}\n",
+            json_escape(&r.summary),
+            json_escape(&r.mode),
+            r.items_per_sec,
+            r.mean_ns,
+            r.p50_ns,
+            r.p95_ns,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write the suite result to `path` as JSON.
+pub fn write_json(path: &str, opts: &PerfOpts, records: &[PerfRecord]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(to_json(opts, records).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_suite_runs_and_serializes() {
+        // minimal opts: existence/shape test, not a measurement
+        let opts = PerfOpts {
+            stream_len: 500,
+            n_keys: 100,
+            batch: 64,
+            iters: 1,
+            warmup: 0,
+            k: 4,
+            smoke: true,
+        };
+        let records = run_suite(&opts);
+        // every summary contributes a scalar + batch pair
+        assert_eq!(records.len() % 2, 0);
+        for name in ["countsketch", "worp1", "ppswor"] {
+            for mode in ["scalar", "batch"] {
+                assert!(
+                    records
+                        .iter()
+                        .any(|r| r.summary == name && r.mode == mode && r.items_per_sec > 0.0),
+                    "missing {name}/{mode}"
+                );
+            }
+        }
+        let json = to_json(&opts, &records);
+        assert!(json.contains("\"items_per_sec\""));
+        assert!(json.contains("\"smoke\": true"));
+        // crude balance check so the artifact is parseable downstream
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count()
+        );
+    }
+
+    #[test]
+    fn json_escaping_handles_quotes() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+    }
+}

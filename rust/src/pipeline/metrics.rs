@@ -11,6 +11,7 @@ pub struct Metrics {
     batches: AtomicU64,
     stalls: AtomicU64,
     merges: AtomicU64,
+    buffer_reuses: AtomicU64,
     started: Instant,
 }
 
@@ -21,6 +22,7 @@ impl Default for Metrics {
             batches: AtomicU64::new(0),
             stalls: AtomicU64::new(0),
             merges: AtomicU64::new(0),
+            buffer_reuses: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -43,6 +45,12 @@ impl Metrics {
         self.merges.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a recycled micro-batch buffer (router reused a worker's
+    /// drained allocation instead of allocating a fresh one).
+    pub fn note_buffer_reuse(&self) {
+        self.buffer_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Total elements processed by workers.
     pub fn elements(&self) -> u64 {
         self.elements.load(Ordering::Relaxed)
@@ -63,6 +71,11 @@ impl Metrics {
         self.merges.load(Ordering::Relaxed)
     }
 
+    /// Micro-batch buffers recycled through the worker return pool.
+    pub fn buffer_reuses(&self) -> u64 {
+        self.buffer_reuses.load(Ordering::Relaxed)
+    }
+
     /// Wall-clock since construction.
     pub fn elapsed(&self) -> std::time::Duration {
         self.started.elapsed()
@@ -81,11 +94,12 @@ impl Metrics {
     /// One-line report.
     pub fn report(&self) -> String {
         format!(
-            "elements={} batches={} stalls={} merges={} elapsed={:.3}s throughput={:.2}M/s",
+            "elements={} batches={} stalls={} merges={} buffer_reuses={} elapsed={:.3}s throughput={:.2}M/s",
             self.elements(),
             self.batches(),
             self.stalls(),
             self.merges(),
+            self.buffer_reuses(),
             self.elapsed().as_secs_f64(),
             self.throughput() / 1e6
         )
@@ -103,11 +117,14 @@ mod tests {
         m.note_batch(5);
         m.note_stall();
         m.note_merge();
+        m.note_buffer_reuse();
         assert_eq!(m.elements(), 15);
         assert_eq!(m.batches(), 2);
         assert_eq!(m.stalls(), 1);
         assert_eq!(m.merges(), 1);
+        assert_eq!(m.buffer_reuses(), 1);
         assert!(m.report().contains("elements=15"));
+        assert!(m.report().contains("buffer_reuses=1"));
     }
 
     #[test]

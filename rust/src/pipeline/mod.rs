@@ -24,7 +24,7 @@ use crate::data::Element;
 use crate::error::{Error, Result};
 use metrics::Metrics;
 use shard::Router;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
 /// Shard-local consumer state. Every `Send` [`StreamSummary`] is a
@@ -71,6 +71,15 @@ impl<F: FnMut(&Element)> StreamSummary for FnSink<F> {
     fn process(&mut self, e: &Element) {
         (self.f)(e);
         self.processed += 1;
+    }
+
+    /// The closure is inherently per-element; the batch path just hoists
+    /// the processed counter out of the loop.
+    fn process_batch(&mut self, batch: &[Element]) {
+        for e in batch {
+            (self.f)(e);
+        }
+        self.processed += batch.len() as u64;
     }
 
     fn size_words(&self) -> usize {
@@ -128,6 +137,12 @@ where
     let metrics = Arc::new(Metrics::default());
     let router = Router::new(opts.workers);
 
+    // §Perf L3-6: workers return drained batch buffers to the router
+    // through an unbounded pool channel, so steady-state routing reuses
+    // the same `workers × (channel_cap + 2)` buffers instead of allocating
+    // one per batch.
+    let (pool_tx, pool_rx) = channel::<Vec<Element>>();
+
     let mut senders: Vec<SyncSender<Vec<Element>>> = Vec::with_capacity(opts.workers);
     let mut handles = Vec::with_capacity(opts.workers);
     for w in 0..opts.workers {
@@ -136,14 +151,19 @@ where
         senders.push(tx);
         let mut state = make(w);
         let m = Arc::clone(&metrics);
+        let pool = pool_tx.clone();
         handles.push(std::thread::spawn(move || {
-            for batch in rx {
+            for mut batch in rx {
                 state.process_batch(&batch);
                 m.note_batch(batch.len() as u64);
+                batch.clear();
+                // router may already have hung up at end-of-stream
+                let _ = pool.send(batch);
             }
             state
         }));
     }
+    drop(pool_tx); // only worker clones remain
 
     // router loop on the caller thread
     let mut buffers: Vec<Vec<Element>> = (0..opts.workers)
@@ -153,7 +173,8 @@ where
         let w = router.route(e.key);
         buffers[w].push(e);
         if buffers[w].len() == opts.batch {
-            let full = std::mem::replace(&mut buffers[w], Vec::with_capacity(opts.batch));
+            let fresh = recycled_buffer(&pool_rx, opts.batch, &metrics);
+            let full = std::mem::replace(&mut buffers[w], fresh);
             send_with_backpressure(&senders[w], full, &metrics)?;
         }
     }
@@ -172,6 +193,22 @@ where
         );
     }
     Ok((states, metrics))
+}
+
+/// Grab a drained buffer from the worker return pool, falling back to a
+/// fresh allocation when none has come back yet.
+fn recycled_buffer(
+    pool: &Receiver<Vec<Element>>,
+    cap: usize,
+    metrics: &Metrics,
+) -> Vec<Element> {
+    match pool.try_recv() {
+        Ok(buf) => {
+            metrics.note_buffer_reuse();
+            buf
+        }
+        Err(_) => Vec::with_capacity(cap),
+    }
 }
 
 fn send_with_backpressure(
@@ -264,12 +301,20 @@ mod tests {
 
     #[test]
     fn backpressure_counted_with_tiny_channel() {
-        // slow worker + capacity-1 channel => the router must stall
+        // deterministic-by-construction stall: the single worker parks on
+        // its first batch long enough for the router to fill the
+        // capacity-1 channel and hit try_send Full (the old version relied
+        // on a busy-loop being slower than the router — a seed-red flake
+        // on fast or heavily-loaded machines)
         let stream: Vec<Element> = (0..20_000).map(|i| Element::new(i % 16, 1.0)).collect();
         let opts = PipelineOpts::new(1, 64, 1).unwrap();
         let (_, metrics) = run_sharded(stream, opts, |_| {
-            FnSink::new(|_e: &Element| {
-                std::hint::black_box((0..50).sum::<u64>());
+            let mut slept = false;
+            FnSink::new(move |_e: &Element| {
+                if !slept {
+                    slept = true;
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                }
             })
         })
         .unwrap();
@@ -281,5 +326,22 @@ mod tests {
         assert!(PipelineOpts::new(0, 1, 1).is_err());
         assert!(PipelineOpts::new(1, 0, 1).is_err());
         assert!(PipelineOpts::new(1, 1, 0).is_err());
+    }
+
+    #[test]
+    fn router_recycles_worker_buffers() {
+        // long stream, small batches: after the first channel_cap batches
+        // drain, the router must start reusing returned buffers
+        let stream: Vec<Element> = (0..100_000u64).map(|i| Element::new(i % 8, 1.0)).collect();
+        let opts = PipelineOpts::new(2, 128, 2).unwrap();
+        let (_, metrics) = run_sharded(stream, opts, |_| {
+            FnSink::new(|_e: &Element| {})
+        })
+        .unwrap();
+        assert!(
+            metrics.buffer_reuses() > 0,
+            "expected recycled batch buffers, report: {}",
+            metrics.report()
+        );
     }
 }

@@ -88,6 +88,7 @@ impl ExactWor {
                 .abs()
                 .partial_cmp(&a.transformed.abs())
                 .unwrap()
+                .then_with(|| a.key.cmp(&b.key))
         });
         let k = self.cfg.k;
         let tau = if scored.len() > k {
@@ -103,6 +104,17 @@ impl ExactWor {
 impl api::StreamSummary for ExactWor {
     fn process(&mut self, e: &Element) {
         ExactWor::process(self, e)
+    }
+
+    /// Micro-batch path (§Perf L3-6): the per-element processed counter is
+    /// hoisted and the map grows at most once per batch (aggregation is
+    /// order-free, so this is exactly the scalar loop's result).
+    fn process_batch(&mut self, batch: &[Element]) {
+        self.freqs.reserve(batch.len().min(4096));
+        for e in batch {
+            *self.freqs.entry(e.key).or_insert(0.0) += e.val;
+        }
+        self.processed += batch.len() as u64;
     }
 
     fn size_words(&self) -> usize {

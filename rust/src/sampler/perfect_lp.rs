@@ -25,7 +25,7 @@ use crate::sketch::countsketch::CountSketch;
 use crate::sketch::{RhhSketch, SketchParams};
 use crate::util::hashing::hash_unit_open;
 use crate::util::rng::Rng;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Common interface of perfect ℓp single samplers (one WR draw each).
 pub trait SingleLpSampler {
@@ -37,11 +37,17 @@ pub trait SingleLpSampler {
 }
 
 /// Exact-frequency oracle sampler (TV distance 0 per draw).
+///
+/// Frequencies live in a `BTreeMap` so [`SingleLpSampler::output`] walks
+/// keys in a deterministic order: with a `HashMap`, the per-instance
+/// random iteration order made the drawn key depend on which *instance*
+/// held the (identical) frequencies — a seed-red flake in every test that
+/// compares two samplers fed the same stream.
 #[derive(Clone, Debug)]
 pub struct OracleSampler {
     p: f64,
     seed: u64,
-    freqs: HashMap<u64, f64>,
+    freqs: BTreeMap<u64, f64>,
     rng: Rng,
     processed: u64,
 }
@@ -52,7 +58,7 @@ impl OracleSampler {
         OracleSampler {
             p,
             seed,
-            freqs: HashMap::new(),
+            freqs: BTreeMap::new(),
             rng: Rng::new(seed ^ 0x0AC1E),
             processed: 0,
         }
@@ -111,6 +117,8 @@ pub struct PrecisionSampler {
     candidates: HashMap<u64, ()>,
     cand_cap: usize,
     processed: u64,
+    /// Reusable scaled-element buffer for the batch path (§Perf L3-6).
+    tbuf: Vec<Element>,
 }
 
 impl PrecisionSampler {
@@ -123,6 +131,7 @@ impl PrecisionSampler {
             candidates: HashMap::new(),
             cand_cap: 4 * width,
             processed: 0,
+            tbuf: Vec::new(),
         }
     }
 
@@ -144,7 +153,8 @@ impl PrecisionSampler {
                 .keys()
                 .map(|&k| (k, self.sketch.est(k).abs()))
                 .collect();
-            scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            // rank_desc: truncation must not inherit HashMap order
+            scored.sort_by(crate::util::stats::rank_desc);
             scored.truncate(self.cand_cap);
             self.candidates = scored.into_iter().map(|(k, _)| (k, ())).collect();
         }
@@ -186,7 +196,8 @@ impl SingleLpSampler for PrecisionSampler {
                     .keys()
                     .map(|&k| (k, self.sketch.est(k).abs()))
                     .collect();
-                scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                // rank_desc: truncation must not inherit HashMap order
+                scored.sort_by(crate::util::stats::rank_desc);
                 scored.truncate(self.cand_cap);
                 self.candidates = scored.into_iter().map(|(k, _)| (k, ())).collect();
             }
@@ -195,12 +206,14 @@ impl SingleLpSampler for PrecisionSampler {
 
     fn output(&mut self) -> Option<u64> {
         // the max of the scaled vector is the sample (precision sampling);
-        // recover it as the candidate with the largest estimate
+        // recover it as the candidate with the largest estimate. The
+        // comparator is a total order over (estimate, key) so estimate
+        // ties cannot leak the candidate map's iteration order.
         self.candidates
             .keys()
             .map(|&k| (k, self.sketch.est(k).abs()))
             .filter(|(_, v)| *v > 0.0)
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)))
             .map(|(k, _)| k)
     }
 }
@@ -208,6 +221,19 @@ impl SingleLpSampler for PrecisionSampler {
 impl api::StreamSummary for OracleSampler {
     fn process(&mut self, e: &Element) {
         SingleLpSampler::process(self, e)
+    }
+
+    /// Batch path (§Perf L3-6): identical per-element aggregation with the
+    /// processed counter hoisted to once per batch.
+    fn process_batch(&mut self, batch: &[Element]) {
+        for e in batch {
+            let f = self.freqs.entry(e.key).or_insert(0.0);
+            *f += e.val;
+            if f.abs() < 1e-12 {
+                self.freqs.remove(&e.key);
+            }
+        }
+        self.processed += batch.len() as u64;
     }
 
     fn size_words(&self) -> usize {
@@ -243,6 +269,35 @@ impl api::Finalize for OracleSampler {
 impl api::StreamSummary for PrecisionSampler {
     fn process(&mut self, e: &Element) {
         SingleLpSampler::process(self, e)
+    }
+
+    /// Batch path (§Perf L3-6). When candidate truncation cannot fire
+    /// within this batch, the privately-scaled elements go through the
+    /// CountSketch columnar update in one call (bit-identical tables) and
+    /// candidate bookkeeping reduces to plain inserts (the scalar branch
+    /// structure is insert in every reachable case). Otherwise fall back
+    /// to the literal scalar loop, so mid-batch truncation scores never
+    /// see sketch updates from *future* elements — batch ≡ scalar always.
+    fn process_batch(&mut self, batch: &[Element]) {
+        if self.candidates.len() + batch.len() <= 2 * self.cand_cap {
+            let mut scaled = std::mem::take(&mut self.tbuf);
+            scaled.clear();
+            scaled.extend(
+                batch
+                    .iter()
+                    .map(|e| Element::new(e.key, e.val * self.scale(e.key))),
+            );
+            self.sketch.process_batch(&scaled);
+            self.tbuf = scaled;
+            for e in batch {
+                self.candidates.insert(e.key, ());
+            }
+            self.processed += batch.len() as u64;
+        } else {
+            for e in batch {
+                SingleLpSampler::process(self, e);
+            }
+        }
     }
 
     fn size_words(&self) -> usize {

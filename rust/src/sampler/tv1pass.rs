@@ -147,6 +147,30 @@ impl TvSampler {
         self.processed += 1;
     }
 
+    /// Micro-batch path (§Perf L3-6): the loop nest is swapped to
+    /// sampler-major — each of the `r` single samplers streams the whole
+    /// batch (through its own specialized batch path) while its private
+    /// state is hot, instead of all `r` states being touched per element —
+    /// and the rHH sketch takes the batch through its columnar path.
+    /// Samplers are mutually independent during pass 1, so the reordering
+    /// is semantically identical.
+    pub fn process_batch(&mut self, batch: &[Element]) {
+        match &mut self.samplers {
+            Samplers::Oracle(v) => {
+                for s in v.iter_mut() {
+                    api::StreamSummary::process_batch(s, batch);
+                }
+            }
+            Samplers::Precision(v) => {
+                for s in v.iter_mut() {
+                    api::StreamSummary::process_batch(s, batch);
+                }
+            }
+        }
+        self.rhh.process_batch(batch);
+        self.processed += batch.len() as u64;
+    }
+
     /// Merge a sibling sampler built with the same config and seed. All
     /// substrates are linear, so merging is sampler-by-sampler merging
     /// plus an rHH sketch merge — the WOR k-tuple of the merged state
@@ -235,6 +259,10 @@ impl TvSampler {
 impl api::StreamSummary for TvSampler {
     fn process(&mut self, e: &Element) {
         TvSampler::process(self, e)
+    }
+
+    fn process_batch(&mut self, batch: &[Element]) {
+        TvSampler::process_batch(self, batch)
     }
 
     fn size_words(&self) -> usize {

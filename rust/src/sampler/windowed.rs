@@ -27,6 +27,8 @@ pub struct WindowedWorp {
     cand_cap: usize,
     window: u64,
     processed: u64,
+    /// Reusable transformed-element buffer for the batch path (§Perf L3-6).
+    tbuf: Vec<Element>,
 }
 
 impl WindowedWorp {
@@ -50,6 +52,7 @@ impl WindowedWorp {
             cand_cap,
             window,
             processed: 0,
+            tbuf: Vec::new(),
         }
     }
 
@@ -97,7 +100,9 @@ impl WindowedWorp {
         self.candidates.retain(|_, &mut t| t >= cutoff);
         if self.candidates.len() > 2 * self.cand_cap {
             let mut v: Vec<(u64, u64)> = self.candidates.iter().map(|(&k, &t)| (k, t)).collect();
-            v.sort_by_key(|&(_, t)| std::cmp::Reverse(t));
+            // key-tiebroken: many keys share a touch time, and truncation
+            // must not depend on HashMap iteration order
+            v.sort_by_key(|&(k, t)| (std::cmp::Reverse(t), k));
             v.truncate(self.cand_cap);
             self.candidates = v.into_iter().collect();
         }
@@ -113,7 +118,9 @@ impl WindowedWorp {
             .map(|(&key, _)| (key, self.sketch.est(key)))
             .filter(|(_, e)| e.abs() > 1e-12)
             .collect();
-        scored.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+        scored.sort_by(|a, b| {
+            crate::util::stats::rank_desc(&(a.0, a.1.abs()), &(b.0, b.1.abs()))
+        });
         let k = self.cfg.k;
         let tau = if scored.len() > k { scored[k].1.abs() } else { 0.0 };
         let entries = scored
@@ -136,6 +143,34 @@ impl api::StreamSummary for WindowedWorp {
     fn process(&mut self, e: &Element) {
         let t = self.sketch.now().saturating_add(1);
         self.process_at(e, t);
+    }
+
+    /// Micro-batch path for the implicit clock (§Perf L3-6): transform
+    /// into the reusable buffer, one run-chunked columnar pass through the
+    /// windowed sketch (bit-identical tables), candidate touch-times
+    /// stamped arithmetically, and the candidate-prune check amortized to
+    /// once per batch. Deferred pruning uses the end-of-batch clock, so
+    /// when the tracker overflows mid-batch the retained *candidate set*
+    /// can differ from the per-element path (later cutoff, different
+    /// truncation population) — expired keys are filtered out of
+    /// [`WindowedWorp::sample`] by timestamp either way, so only the
+    /// over-capacity truncation choice is timing-dependent, the same
+    /// deliberate trade the 1-pass sampler's deferred shrink makes.
+    fn process_batch(&mut self, batch: &[Element]) {
+        let t0 = self.sketch.now();
+        let mut tbuf = std::mem::take(&mut self.tbuf);
+        tbuf.clear();
+        tbuf.extend(batch.iter().map(|e| self.transform.apply(e)));
+        self.sketch.process_batch_ticks(&tbuf);
+        self.tbuf = tbuf;
+        for (i, e) in batch.iter().enumerate() {
+            self.candidates.insert(e.key, t0 + 1 + i as u64);
+        }
+        self.processed += batch.len() as u64;
+        if self.candidates.len() > 2 * self.cand_cap {
+            let now = self.sketch.now();
+            self.prune(now);
+        }
     }
 
     fn size_words(&self) -> usize {

@@ -31,6 +31,8 @@ pub struct OnePassWorp {
     /// Candidate capacity (a small multiple of k).
     cand_cap: usize,
     processed: u64,
+    /// Reusable transformed-element buffer for the batch path (§Perf L3-6).
+    tbuf: Vec<Element>,
 }
 
 impl OnePassWorp {
@@ -49,6 +51,7 @@ impl OnePassWorp {
             candidates: FastSet::with_capacity(2 * cand_cap),
             cand_cap,
             processed: 0,
+            tbuf: Vec::new(),
         }
     }
 
@@ -97,12 +100,13 @@ impl OnePassWorp {
 
     fn shrink_candidates(&mut self) {
         // score all candidates against the sketch, keep the top cand_cap
+        // (rank_desc: deterministic on score ties)
         let mut v: Vec<(u64, f64)> = self
             .candidates
             .iter()
             .map(|k| (k, self.sketch.est(k).abs()))
             .collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(crate::util::stats::rank_desc);
         v.truncate(self.cand_cap);
         self.candidates.clear();
         for (k, _) in v {
@@ -200,7 +204,9 @@ impl OnePassWorp {
             .map(|k| (k, self.sketch.est(k)))
             .filter(|(_, e)| *e != 0.0)
             .collect();
-        scored.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+        scored.sort_by(|a, b| {
+            crate::util::stats::rank_desc(&(a.0, a.1.abs()), &(b.0, b.1.abs()))
+        });
         let k = self.cfg.k;
         // fewer than k+1 scored keys: the "sample" is the whole dataset
         // and tau = 0 marks estimates as exact (paper Eq. 1 degenerates)
@@ -223,12 +229,17 @@ impl api::StreamSummary for OnePassWorp {
         OnePassWorp::process(self, e)
     }
 
-    /// Vectorized batch path: sketch updates stream through; the
-    /// candidate-overflow check is amortized to once per batch.
+    /// Vectorized batch path (§Perf L3-6): the whole batch is transformed
+    /// into a reusable buffer, the sketch ingests it through its columnar
+    /// `process_batch`, and the candidate-overflow check is amortized to
+    /// once per batch.
     fn process_batch(&mut self, batch: &[Element]) {
+        let mut tbuf = std::mem::take(&mut self.tbuf);
+        tbuf.clear();
+        tbuf.extend(batch.iter().map(|e| self.transform.apply(e)));
+        self.sketch.process_batch(&tbuf);
+        self.tbuf = tbuf;
         for e in batch {
-            let te = self.transform.apply(e);
-            self.sketch.process(&te);
             self.candidates.insert(e.key);
         }
         self.processed += batch.len() as u64;

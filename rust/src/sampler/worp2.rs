@@ -27,6 +27,8 @@ pub struct TwoPassWorpPass1 {
     transform: BottomKTransform,
     sketch: AnyRhh,
     processed: u64,
+    /// Reusable transformed-element buffer for the batch path (§Perf L3-6).
+    tbuf: Vec<Element>,
 }
 
 impl TwoPassWorpPass1 {
@@ -37,7 +39,7 @@ impl TwoPassWorpPass1 {
         let params = SketchParams::new(rows, width, cfg.seed ^ 0x2AB5);
         let sketch = AnyRhh::for_q(cfg.q, params);
         let transform = cfg.transform();
-        TwoPassWorpPass1 { cfg, transform, sketch, processed: 0 }
+        TwoPassWorpPass1 { cfg, transform, sketch, processed: 0, tbuf: Vec::new() }
     }
 
     /// Process one raw element.
@@ -46,6 +48,17 @@ impl TwoPassWorpPass1 {
         let te = self.transform.apply(e);
         self.sketch.process(&te);
         self.processed += 1;
+    }
+
+    /// Micro-batch path (§Perf L3-6): transform into the reusable buffer,
+    /// then one columnar sketch update for the whole batch.
+    pub fn process_batch(&mut self, batch: &[Element]) {
+        let mut tbuf = std::mem::take(&mut self.tbuf);
+        tbuf.clear();
+        tbuf.extend(batch.iter().map(|e| self.transform.apply(e)));
+        self.sketch.process_batch(&tbuf);
+        self.tbuf = tbuf;
+        self.processed += batch.len() as u64;
     }
 
     /// Merge a sibling pass-I sketch.
@@ -102,11 +115,31 @@ pub struct TwoPassWorpPass2 {
 
 impl TwoPassWorpPass2 {
     /// Process one raw element in pass II (same stream, replayed).
+    ///
+    /// §Perf L3-6: membership is checked *before* the pass-I estimate —
+    /// repeat elements of stored keys (the common case on skewed streams)
+    /// accumulate in O(1) without touching the rHH sketch at all; only
+    /// first sightings pay the rows-wide `est`.
     #[inline]
     pub fn process(&mut self, e: &Element) {
-        let priority = self.sketch.est(e.key).abs();
-        self.topk.process(e.key, e.val, priority);
+        if !self.topk.accumulate(e.key, e.val) {
+            let priority = self.sketch.est(e.key).abs();
+            self.topk.process(e.key, e.val, priority);
+        }
         self.processed += 1;
+    }
+
+    /// Micro-batch path: same accumulate-first fast path with the
+    /// per-element bookkeeping hoisted; sub-threshold unseen keys reject
+    /// in O(1) against the collector's cached minimum.
+    pub fn process_batch(&mut self, batch: &[Element]) {
+        for e in batch {
+            if !self.topk.accumulate(e.key, e.val) {
+                let priority = self.sketch.est(e.key).abs();
+                self.topk.process(e.key, e.val, priority);
+            }
+        }
+        self.processed += batch.len() as u64;
     }
 
     /// Merge a sibling pass-II collector (disjoint shards of the stream).
@@ -243,6 +276,15 @@ impl TwoPassWorp {
         }
     }
 
+    /// Process a micro-batch of the current pass (§Perf L3-6).
+    pub fn process_batch(&mut self, batch: &[Element]) {
+        match &mut self.state {
+            TwoPassState::One(p) => p.process_batch(batch),
+            TwoPassState::Two(p) => p.process_batch(batch),
+            TwoPassState::Poisoned => unreachable!("poisoned two-pass state"),
+        }
+    }
+
     /// Seal pass I and arm pass II; errors when already in pass II.
     pub fn advance(&mut self) -> Result<()> {
         match std::mem::replace(&mut self.state, TwoPassState::Poisoned) {
@@ -311,6 +353,10 @@ impl TwoPassWorp {
 impl api::StreamSummary for TwoPassWorp {
     fn process(&mut self, e: &Element) {
         TwoPassWorp::process(self, e)
+    }
+
+    fn process_batch(&mut self, batch: &[Element]) {
+        TwoPassWorp::process_batch(self, batch)
     }
 
     fn size_words(&self) -> usize {
@@ -391,6 +437,10 @@ impl api::StreamSummary for TwoPassWorpPass1 {
         TwoPassWorpPass1::process(self, e)
     }
 
+    fn process_batch(&mut self, batch: &[Element]) {
+        TwoPassWorpPass1::process_batch(self, batch)
+    }
+
     fn size_words(&self) -> usize {
         TwoPassWorpPass1::size_words(self)
     }
@@ -413,6 +463,10 @@ impl api::Mergeable for TwoPassWorpPass1 {
 impl api::StreamSummary for TwoPassWorpPass2 {
     fn process(&mut self, e: &Element) {
         TwoPassWorpPass2::process(self, e)
+    }
+
+    fn process_batch(&mut self, batch: &[Element]) {
+        TwoPassWorpPass2::process_batch(self, batch)
     }
 
     fn size_words(&self) -> usize {

@@ -82,6 +82,15 @@ impl AnyRhh {
             AnyRhh::CountMin(s) => s.processed(),
         }
     }
+
+    /// Columnar micro-batch update — dispatches to the wrapped sketch's
+    /// specialized batch path (§Perf L3-6).
+    pub fn process_batch(&mut self, batch: &[Element]) {
+        match self {
+            AnyRhh::CountSketch(s) => s.process_batch(batch),
+            AnyRhh::CountMin(s) => s.process_batch(batch),
+        }
+    }
 }
 
 impl RhhSketch for AnyRhh {

@@ -12,9 +12,19 @@
 //! of keys in either summary (using each side's upper bound for missing
 //! keys is *not* needed for the rHH bound — summing estimates keeps the
 //! residual guarantee with capacities added).
+//!
+//! §Perf L3-6 (batch hot path): eviction used to scan all `capacity`
+//! counters per unseen key — `O(cap)` on exactly the miss-heavy streams
+//! that stress the structure. The minimum is now tracked by a
+//! **lazy-deletion min-heap** over `(count, key)`: hits never touch the
+//! heap (their heap entry just goes stale); evictions pop entries,
+//! refreshing stale ones in place, until the true minimum surfaces —
+//! `O(log cap)` amortized. Ties break on the key, so eviction order is
+//! fully deterministic (the old `HashMap` scan inherited the map's
+//! per-instance random iteration order on count ties).
 
 use crate::error::{Error, Result};
-use std::collections::HashMap;
+use std::collections::{BinaryHeap, HashMap};
 use std::hash::Hash;
 
 /// One tracked counter.
@@ -28,19 +38,63 @@ pub struct Counter<K> {
     pub overestimate: f64,
 }
 
-/// SpaceSaving summary over an arbitrary hashable key domain (strings in
-/// the query-log example, u64 elsewhere).
+/// Min-heap entry ordered by `(count, key)` ascending. `Ord` is reversed
+/// so `BinaryHeap` (a max-heap) pops the smallest pair first. Counts are
+/// finite and non-negative, so the `partial_cmp` unwrap is safe.
 #[derive(Clone, Debug)]
-pub struct SpaceSaving<K: Eq + Hash + Clone> {
-    capacity: usize,
-    counters: HashMap<K, Counter<K>>,
+struct HeapEntry<K> {
+    count: f64,
+    key: K,
 }
 
-impl<K: Eq + Hash + Clone> SpaceSaving<K> {
+impl<K: Eq> PartialEq for HeapEntry<K> {
+    fn eq(&self, other: &Self) -> bool {
+        self.count == other.count && self.key == other.key
+    }
+}
+
+impl<K: Eq> Eq for HeapEntry<K> {}
+
+impl<K: Ord> Ord for HeapEntry<K> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .count
+            .partial_cmp(&self.count)
+            .unwrap()
+            .then_with(|| other.key.cmp(&self.key))
+    }
+}
+
+impl<K: Ord> PartialOrd for HeapEntry<K> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// SpaceSaving summary over an arbitrary hashable, orderable key domain
+/// (strings in the query-log example, u64 elsewhere). `Ord` is required
+/// for the deterministic `(count, key)` eviction order.
+#[derive(Clone, Debug)]
+pub struct SpaceSaving<K: Eq + Hash + Clone + Ord> {
+    capacity: usize,
+    counters: HashMap<K, Counter<K>>,
+    /// Lazy-deletion min-heap over (count, key); entries go stale when a
+    /// counter is hit and are refreshed when popped.
+    heap: BinaryHeap<HeapEntry<K>>,
+    /// Elements processed (diagnostics; the unified summary API reports it).
+    processed: u64,
+}
+
+impl<K: Eq + Hash + Clone + Ord> SpaceSaving<K> {
     /// Create with `capacity` counters (`O(k/ψ)` for `(k, ψ)` rHH).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
-        SpaceSaving { capacity, counters: HashMap::with_capacity(capacity + 1) }
+        SpaceSaving {
+            capacity,
+            counters: HashMap::with_capacity(capacity + 1),
+            heap: BinaryHeap::with_capacity(capacity + 1),
+            processed: 0,
+        }
     }
 
     /// Capacity in counters.
@@ -58,31 +112,80 @@ impl<K: Eq + Hash + Clone> SpaceSaving<K> {
         self.counters.is_empty()
     }
 
+    /// Elements processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
     /// Process a positive increment for `key`.
     pub fn process(&mut self, key: K, val: f64) {
+        self.processed += 1;
+        self.update(key, val);
+    }
+
+    /// Process a micro-batch of positive increments (§Perf L3-6): the
+    /// per-element bookkeeping is hoisted; hits cost one map probe, and
+    /// the eviction heap amortizes miss-heavy runs.
+    pub fn process_batch(&mut self, batch: &[(K, f64)]) {
+        for (key, val) in batch {
+            self.update(key.clone(), *val);
+        }
+        self.processed += batch.len() as u64;
+    }
+
+    /// One update, without touching the processed counter.
+    #[inline]
+    fn update(&mut self, key: K, val: f64) {
         debug_assert!(val >= 0.0, "SpaceSaving requires non-negative values");
         if let Some(c) = self.counters.get_mut(&key) {
+            // the key's heap entry goes stale; pop-time refresh fixes it
             c.count += val;
             return;
         }
         if self.counters.len() < self.capacity {
+            self.heap.push(HeapEntry { count: val, key: key.clone() });
             self.counters.insert(
                 key.clone(),
                 Counter { key, count: val, overestimate: 0.0 },
             );
             return;
         }
-        // evict the minimum counter; the newcomer inherits its count
-        let (min_key, min_count) = self
-            .counters
-            .iter()
-            .map(|(k, c)| (k.clone(), c.count))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .expect("non-empty");
+        // evict the (count, key)-minimum counter; the newcomer inherits it
+        let (min_key, min_count) = self.pop_min();
         self.counters.remove(&min_key);
+        self.heap.push(HeapEntry { count: min_count + val, key: key.clone() });
         self.counters.insert(
             key.clone(),
             Counter { key, count: min_count + val, overestimate: min_count },
+        );
+    }
+
+    /// Pop the true minimum `(count, key)` over live counters, refreshing
+    /// stale heap entries in place. The heap always holds exactly one
+    /// entry per live key (possibly stale), so this terminates after at
+    /// most one refresh per key.
+    fn pop_min(&mut self) -> (K, f64) {
+        loop {
+            let e = self.heap.pop().expect("heap tracks every live counter");
+            match self.counters.get(&e.key) {
+                Some(c) if c.count == e.count => return (e.key, e.count),
+                Some(c) => {
+                    // stale: the counter grew since this entry was pushed
+                    let count = c.count;
+                    self.heap.push(HeapEntry { count, key: e.key });
+                }
+                None => {} // key merged away / rebuilt; drop the orphan
+            }
+        }
+    }
+
+    /// Rebuild the eviction heap from the live counters (after a merge).
+    fn rebuild_heap(&mut self) {
+        self.heap.clear();
+        self.heap.extend(
+            self.counters
+                .values()
+                .map(|c| HeapEntry { count: c.count, key: c.key.clone() }),
         );
     }
 
@@ -99,10 +202,16 @@ impl<K: Eq + Hash + Clone> SpaceSaving<K> {
             .unwrap_or(0.0)
     }
 
-    /// The tracked keys sorted by decreasing estimate.
+    /// The tracked keys sorted by decreasing estimate (key-tiebroken, so
+    /// the order is deterministic).
     pub fn top(&self) -> Vec<Counter<K>> {
         let mut v: Vec<Counter<K>> = self.counters.values().cloned().collect();
-        v.sort_by(|a, b| b.count.partial_cmp(&a.count).unwrap());
+        v.sort_by(|a, b| {
+            b.count
+                .partial_cmp(&a.count)
+                .unwrap()
+                .then_with(|| a.key.cmp(&b.key))
+        });
         v
     }
 
@@ -129,22 +238,40 @@ impl<K: Eq + Hash + Clone> SpaceSaving<K> {
         }
         if self.counters.len() > self.capacity {
             let mut all: Vec<Counter<K>> = self.counters.values().cloned().collect();
-            all.sort_by(|a, b| b.count.partial_cmp(&a.count).unwrap());
-            let floor = all[self.capacity - 1].count;
+            all.sort_by(|a, b| {
+                b.count
+                    .partial_cmp(&a.count)
+                    .unwrap()
+                    .then_with(|| a.key.cmp(&b.key))
+            });
             self.counters = all
                 .into_iter()
                 .take(self.capacity)
                 .map(|c| (c.key.clone(), c))
                 .collect();
-            // surviving counters implicitly absorb evicted mass up to floor
-            let _ = floor;
         }
+        self.rebuild_heap();
+        self.processed += other.processed;
         Ok(())
     }
 
-    /// Memory words: 3 per counter (key slot, count, overestimate).
+    /// Memory words: 3 per counter (key slot, count, overestimate) plus
+    /// 2 per eviction-heap slot (count, key).
     pub fn size_words(&self) -> usize {
-        3 * self.capacity
+        5 * self.capacity
+    }
+}
+
+impl SpaceSaving<u64> {
+    /// Micro-batch entry point over stream elements (§Perf L3-6): the
+    /// per-element processed bookkeeping is hoisted to once per batch and
+    /// misses amortize through the eviction heap. This is what the
+    /// unified-summary batch path calls.
+    pub fn process_elements(&mut self, batch: &[crate::data::Element]) {
+        for e in batch {
+            self.update(e.key, e.val);
+        }
+        self.processed += batch.len() as u64;
     }
 }
 
@@ -165,6 +292,7 @@ mod tests {
             assert_eq!(ss.lower_bound(&i), (i + 2) as f64);
         }
         assert_eq!(ss.est(&99), 0.0);
+        assert_eq!(ss.processed(), 10);
     }
 
     #[test]
@@ -216,6 +344,48 @@ mod tests {
         assert!(a.est(&3) >= 45.0); // 40 + 5
         let mut c: SpaceSaving<u64> = SpaceSaving::new(5);
         assert!(c.merge(&SpaceSaving::new(4)).is_err());
+    }
+
+    #[test]
+    fn eviction_is_deterministic_on_count_ties() {
+        // all-ones stream over more keys than capacity: counts tie
+        // constantly; the (count, key) order must make runs reproducible
+        let runs: Vec<Vec<u64>> = (0..2)
+            .map(|_| {
+                let mut ss: SpaceSaving<u64> = SpaceSaving::new(6);
+                for t in 0..500u64 {
+                    ss.process((t * 7) % 23, 1.0);
+                }
+                ss.top().into_iter().map(|c| c.key).collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+    }
+
+    #[test]
+    fn batch_equals_scalar_loop() {
+        run("spacesaving batch == scalar", 20, |g: &mut Gen| {
+            let cap = g.usize_range(2, 16);
+            let mut scalar: SpaceSaving<u64> = SpaceSaving::new(cap);
+            let mut batched: SpaceSaving<u64> = SpaceSaving::new(cap);
+            let m = g.usize_range(1, 600);
+            let updates: Vec<(u64, f64)> = (0..m)
+                .map(|_| (g.u64_below(60), g.f64_range(0.0, 5.0)))
+                .collect();
+            for (k, v) in &updates {
+                scalar.process(*k, *v);
+            }
+            for c in updates.chunks(g.usize_range(1, m + 3)) {
+                batched.process_batch(c);
+            }
+            assert_eq!(scalar.processed(), batched.processed());
+            let (st, bt) = (scalar.top(), batched.top());
+            assert_eq!(st.len(), bt.len());
+            for (a, b) in st.iter().zip(&bt) {
+                assert_eq!(a.key, b.key);
+                assert!((a.count - b.count).abs() < 1e-9);
+            }
+        });
     }
 
     #[test]

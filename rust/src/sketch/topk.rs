@@ -13,6 +13,16 @@
 //! `merge` adds up values per key and retains the top `merge_cap ≥ cap`
 //! priorities (Algorithm 2: "Add up values and retain 3k top priority
 //! keys").
+//!
+//! §Perf L3-6 (batch hot path): once the table is full, the overwhelmingly
+//! common pass-II event is "unseen key whose priority is below the
+//! admission threshold". That used to cost a full `O(cap)` minimum scan
+//! per rejection; the minimum is now cached (priorities are fixed, so
+//! hits never invalidate it) and rejections are `O(1)`. Evictions — rare,
+//! since the threshold only rises — invalidate the cache and the next
+//! miss rescans. Ties on priority break on the key, making eviction
+//! deterministic (the old `HashMap` scan inherited per-instance random
+//! iteration order).
 
 use crate::error::{Error, Result};
 use std::collections::HashMap;
@@ -28,12 +38,23 @@ pub struct TopKEntry {
     pub value: f64,
 }
 
+/// `(priority, key)` ascending order — the deterministic eviction order.
+#[inline]
+fn pri_key_lt(a_pri: f64, a_key: u64, b_pri: f64, b_key: u64) -> bool {
+    a_pri < b_pri || (a_pri == b_pri && a_key < b_key)
+}
+
 /// Composable top-k-by-priority structure with exact value collection.
 #[derive(Clone, Debug)]
 pub struct TopK {
     cap: usize,
     merge_cap: usize,
     entries: HashMap<u64, TopKEntry>,
+    /// Cached `(key, priority)` minimum over `entries`, or `None` when it
+    /// must be rescanned. Valid whenever set: hits don't change
+    /// priorities, inserts below capacity update it incrementally, and
+    /// evictions/merges clear it.
+    min_cache: Option<(u64, f64)>,
 }
 
 impl TopK {
@@ -41,7 +62,12 @@ impl TopK {
     /// `merge_cap ≥ cap` (Algorithm 2 uses 2k / 3k).
     pub fn new(cap: usize, merge_cap: usize) -> Self {
         assert!(cap > 0 && merge_cap >= cap);
-        TopK { cap, merge_cap, entries: HashMap::with_capacity(cap + 1) }
+        TopK {
+            cap,
+            merge_cap,
+            entries: HashMap::with_capacity(cap + 1),
+            min_cache: None,
+        }
     }
 
     /// Streaming capacity.
@@ -59,7 +85,7 @@ impl TopK {
         self.entries.is_empty()
     }
 
-    /// Smallest stored priority (`∞` when empty is represented as None).
+    /// Smallest stored priority (`None` when empty).
     pub fn min_priority(&self) -> Option<f64> {
         self.entries
             .values()
@@ -67,27 +93,62 @@ impl TopK {
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
+    /// Accumulate `val` into an already-stored key. Returns `false` when
+    /// the key is not stored — the caller then computes the priority and
+    /// calls [`TopK::process`]. This is the batch hot path: hits skip the
+    /// (expensive, sketch-backed) priority computation entirely.
+    #[inline]
+    pub fn accumulate(&mut self, key: u64, val: f64) -> bool {
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.value += val;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The current `(key, priority)` minimum, from the cache when valid.
+    fn min_entry(&mut self) -> (u64, f64) {
+        if let Some(m) = self.min_cache {
+            return m;
+        }
+        let m = self
+            .entries
+            .values()
+            .map(|e| (e.key, e.priority))
+            .min_by(|a, b| {
+                a.1.partial_cmp(&b.1)
+                    .unwrap()
+                    .then_with(|| a.0.cmp(&b.0))
+            })
+            .expect("non-empty");
+        self.min_cache = Some(m);
+        m
+    }
+
     /// Process one pass-II element. `priority` must be the key's fixed
     /// pass-I estimate `|ν̂*_x|` (recomputed by the caller via the rHH
     /// sketch — the structure does not hold the sketch).
     pub fn process(&mut self, key: u64, val: f64, priority: f64) {
-        if let Some(e) = self.entries.get_mut(&key) {
-            e.value += val;
+        if self.accumulate(key, val) {
             return;
         }
         if self.entries.len() < self.cap {
             self.entries.insert(key, TopKEntry { key, priority, value: val });
+            if let Some((ck, cp)) = self.min_cache {
+                if pri_key_lt(priority, key, cp, ck) {
+                    self.min_cache = Some((key, priority));
+                }
+            }
             return;
         }
-        let (min_key, min_pri) = self
-            .entries
-            .values()
-            .map(|e| (e.key, e.priority))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .expect("non-empty");
+        let (min_key, min_pri) = self.min_entry();
+        // strict >: priority ties never displace an incumbent
         if priority > min_pri {
             self.entries.remove(&min_key);
             self.entries.insert(key, TopKEntry { key, priority, value: val });
+            self.min_cache = None;
         }
     }
 
@@ -115,29 +176,45 @@ impl TopK {
         }
         if self.entries.len() > self.merge_cap {
             let mut all: Vec<TopKEntry> = self.entries.values().copied().collect();
-            all.sort_by(|a, b| b.priority.partial_cmp(&a.priority).unwrap());
+            all.sort_by(|a, b| {
+                b.priority
+                    .partial_cmp(&a.priority)
+                    .unwrap()
+                    .then_with(|| a.key.cmp(&b.key))
+            });
             all.truncate(self.merge_cap);
             self.entries = all.into_iter().map(|e| (e.key, e)).collect();
         }
+        self.min_cache = None;
         Ok(())
     }
 
-    /// Entries sorted by decreasing priority.
+    /// Entries sorted by decreasing priority (key-tiebroken — deterministic).
     pub fn by_priority(&self) -> Vec<TopKEntry> {
         let mut v: Vec<TopKEntry> = self.entries.values().copied().collect();
-        v.sort_by(|a, b| b.priority.partial_cmp(&a.priority).unwrap());
+        v.sort_by(|a, b| {
+            b.priority
+                .partial_cmp(&a.priority)
+                .unwrap()
+                .then_with(|| a.key.cmp(&b.key))
+        });
         v
     }
 
-    /// Entries sorted by a caller-supplied score, decreasing — used by
-    /// WORp to re-rank by the exact transformed frequency `ν_x · r_x^{-1/p}`.
+    /// Entries sorted by a caller-supplied score, decreasing (key-tiebroken)
+    /// — used by WORp to re-rank by the exact transformed frequency
+    /// `ν_x · r_x^{-1/p}`.
     pub fn by_score<F: Fn(&TopKEntry) -> f64>(&self, score: F) -> Vec<(TopKEntry, f64)> {
         let mut v: Vec<(TopKEntry, f64)> = self
             .entries
             .values()
             .map(|e| (*e, score(e)))
             .collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap()
+                .then_with(|| a.0.key.cmp(&b.0.key))
+        });
         v
     }
 
@@ -220,6 +297,49 @@ mod tests {
         t.process(2, 1.0, 3.0);
         let ranked = t.by_score(|e| e.value);
         assert_eq!(ranked[0].0.key, 1);
+    }
+
+    #[test]
+    fn accumulate_reports_membership() {
+        let mut t = TopK::new(2, 2);
+        assert!(!t.accumulate(5, 1.0));
+        t.process(5, 1.0, 3.0);
+        assert!(t.accumulate(5, 2.0));
+        assert_eq!(t.by_priority()[0].value, 3.0);
+    }
+
+    #[test]
+    fn eviction_deterministic_on_priority_ties() {
+        // four keys, all priority 1.0, capacity 2: the (priority, key)
+        // order must keep the largest keys, identically on every run
+        let runs: Vec<Vec<u64>> = (0..2)
+            .map(|_| {
+                let mut t = TopK::new(2, 2);
+                for key in [10u64, 30, 20, 40] {
+                    t.process(key, 1.0, 1.0);
+                }
+                t.by_priority().iter().map(|e| e.key).collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+        // strict admission: ties never displace, so the first two stay
+        assert_eq!(runs[0], vec![10, 30]);
+    }
+
+    #[test]
+    fn property_cached_min_matches_rescan() {
+        run("topk min cache consistent", 25, |g: &mut Gen| {
+            let cap = g.usize_range(2, 8);
+            let mut t = TopK::new(cap, cap);
+            for _ in 0..g.usize_range(10, 300) {
+                let k = g.u64_below(50);
+                t.process(k, 1.0, g.f64_range(0.0, 10.0));
+                if let Some((_, cp)) = t.min_cache {
+                    assert_eq!(Some(cp), t.min_priority());
+                }
+            }
+            assert!(t.len() <= cap);
+        });
     }
 
     #[test]

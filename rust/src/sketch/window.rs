@@ -89,6 +89,51 @@ impl WindowedCountSketch {
         self.active.process(e);
     }
 
+    /// Micro-batch path for the implicit-clock mode (§Perf L3-6): element
+    /// `i` of the batch is stamped `now + 1 + i`, exactly like repeated
+    /// [`WindowedCountSketch::process_at`] calls with per-element ticks.
+    ///
+    /// The batch is split into *runs* that stay inside one ring bucket and
+    /// cross no expiry tick; each run flows through the columnar
+    /// [`CountSketch::process_batch`] of the back bucket and the active
+    /// table. Expiry/bucket structure changes only at span boundaries and
+    /// at `front.start + span + window` (the next expiry tick), so within
+    /// a run the scalar loop performs the same per-cell additions in the
+    /// same order — the result is bit-identical to element-at-a-time
+    /// processing.
+    pub fn process_batch_ticks(&mut self, batch: &[Element]) {
+        let mut i = 0;
+        let n = batch.len();
+        let span = self.span.max(1);
+        while i < n {
+            let t = self.now + 1;
+            self.expire(t);
+            let bucket_start = t - (t % span);
+            let needs_new = match self.ring.back() {
+                Some((start, _)) => *start != bucket_start,
+                None => true,
+            };
+            if needs_new {
+                self.ring.push_back((bucket_start, CountSketch::new(self.params)));
+            }
+            // last tick of this run: stay inside the bucket and strictly
+            // before the next expiry tick (expire(t) above guarantees the
+            // remaining front expires only at a future tick)
+            let next_expiry = self
+                .ring
+                .front()
+                .map(|(s, _)| s + span + self.window)
+                .unwrap_or(u64::MAX);
+            let run_last_t = (bucket_start + span - 1).min(next_expiry - 1);
+            let run_len = ((run_last_t - t + 1) as usize).min(n - i);
+            let chunk = &batch[i..i + run_len];
+            self.ring.back_mut().unwrap().1.process_batch(chunk);
+            self.active.process_batch(chunk);
+            self.now = t + run_len as u64 - 1;
+            i += run_len;
+        }
+    }
+
     /// Drop sub-sketches entirely outside the window ending at `t`.
     fn expire(&mut self, t: u64) {
         let cutoff = t.saturating_sub(self.window);
@@ -240,6 +285,32 @@ mod tests {
         let mut a = WindowedCountSketch::new(params(), 100, 10);
         let b = WindowedCountSketch::new(params(), 200, 10);
         assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn batch_ticks_bit_identical_to_scalar_ticks() {
+        // window 40, 4 buckets (span 10): batches straddle bucket
+        // boundaries and expiry ticks
+        let mut scalar = WindowedCountSketch::new(params(), 40, 4);
+        let mut batched = WindowedCountSketch::new(params(), 40, 4);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let elems: Vec<Element> = (0..500)
+            .map(|_| Element::new(rng.below(25), rng.normal()))
+            .collect();
+        for e in &elems {
+            let t = scalar.now() + 1;
+            scalar.process_at(e, t);
+        }
+        for chunk in elems.chunks(33) {
+            batched.process_batch_ticks(chunk);
+        }
+        assert_eq!(scalar.now(), batched.now());
+        assert_eq!(scalar.live_buckets(), batched.live_buckets());
+        assert_eq!(scalar.active.table(), batched.active.table());
+        for ((sa, s), (ba, b)) in scalar.ring.iter().zip(batched.ring.iter()) {
+            assert_eq!(sa, ba);
+            assert_eq!(s.table(), b.table());
+        }
     }
 
     #[test]

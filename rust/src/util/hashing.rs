@@ -219,6 +219,32 @@ impl SketchHasher {
         }
     }
 
+    /// Bucket *and* sign from precomputed key state with a single mix.
+    ///
+    /// §Perf L3-6: `bucket_from` + `sign_from` each re-derive the row word
+    /// (one finalizer round); fusing them halves the per-(key, row) mixing
+    /// in every sketch update. The bucket comes from the multiply-shift
+    /// high bits, the sign from bit 0 — exactly the pair the separate
+    /// accessors return.
+    #[inline(always)]
+    pub fn bucket_sign_from(&self, c: &KeyCoords, row: usize) -> (usize, f64) {
+        let m = c.row_word(row);
+        let b = (((m as u128) * (self.width as u128)) >> 64) as usize;
+        let s = if m & 1 == 0 { 1.0 } else { -1.0 };
+        (b, s)
+    }
+
+    /// Columnar block hashing (§Perf L3-6): derive the per-key state for a
+    /// whole micro-batch of keys in one pass into a caller-owned scratch
+    /// buffer (cleared first, so steady-state batches allocate nothing).
+    /// Row coordinates are then `O(1)` per (key, row) via
+    /// [`SketchHasher::bucket_sign_from`] — no per-row rehash.
+    #[inline]
+    pub fn fill_coords<I: IntoIterator<Item = u64>>(&self, keys: I, out: &mut Vec<KeyCoords>) {
+        out.clear();
+        out.extend(keys.into_iter().map(|k| self.coords_of(k)));
+    }
+
     /// Sketch width (buckets per row).
     pub fn width(&self) -> usize {
         self.width
@@ -370,6 +396,35 @@ mod tests {
         }
         assert!((pos as f64 / n as f64 - 0.5).abs() < 0.01);
         assert!((agree as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn fused_bucket_sign_matches_separate_accessors() {
+        let sh = SketchHasher::new(23, 777);
+        for key in 0..2_000u64 {
+            let c = sh.coords_of(key);
+            for row in 0..9 {
+                let (b, s) = sh.bucket_sign_from(&c, row);
+                assert_eq!(b, sh.bucket_from(&c, row));
+                assert_eq!(s, sh.sign_from(&c, row));
+            }
+        }
+    }
+
+    #[test]
+    fn fill_coords_matches_scalar_derivation_and_reuses_buffer() {
+        let sh = SketchHasher::new(29, 64);
+        let keys: Vec<u64> = (0..500).map(|i| i * 31 + 7).collect();
+        let mut out = Vec::new();
+        sh.fill_coords(keys.iter().copied(), &mut out);
+        assert_eq!(out.len(), keys.len());
+        for (k, c) in keys.iter().zip(&out) {
+            let want = sh.coords_of(*k);
+            assert_eq!((c.h1, c.h2), (want.h1, want.h2));
+        }
+        // refills clear first — no stale coords survive
+        sh.fill_coords([1u64, 2].into_iter(), &mut out);
+        assert_eq!(out.len(), 2);
     }
 
     #[test]

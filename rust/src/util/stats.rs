@@ -75,6 +75,20 @@ pub fn kth_magnitude(w: &[f64], k: usize) -> f64 {
     mags[k - 1]
 }
 
+/// THE deterministic ranking policy for scored keys: descending score,
+/// ascending key on ties. Every candidate-truncation and sample sort over
+/// `(key, score)` pairs uses this comparator so that output is a pure
+/// function of the seed, never of `HashMap`/`FastSet` iteration order
+/// ([`crate::sketch::topk::TopK`] and the SpaceSaving eviction heap
+/// implement the same `(score, key)` total order internally on their own
+/// entry types). Scores must be non-NaN.
+#[inline]
+pub fn rank_desc(a: &(u64, f64), b: &(u64, f64)) -> std::cmp::Ordering {
+    b.1.partial_cmp(&a.1)
+        .unwrap()
+        .then_with(|| a.0.cmp(&b.0))
+}
+
 /// Streaming mean/variance accumulator (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Welford {
@@ -183,6 +197,13 @@ mod tests {
         let w = [1.0, -2.0, 2.0];
         assert!((lq_norm_pow(&w, 2.0) - 9.0).abs() < 1e-12);
         assert!((lq_norm_pow(&w, 1.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_desc_orders_by_score_then_key() {
+        let mut v = vec![(3u64, 1.0), (1, 2.0), (2, 1.0), (0, 0.5)];
+        v.sort_by(rank_desc);
+        assert_eq!(v, vec![(1, 2.0), (2, 1.0), (3, 1.0), (0, 0.5)]);
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Batch contract: for every `StreamSummary` implementation,
+//! `process_batch` must be equivalent to the per-element `process` loop —
+//! including signed/turnstile updates and merges performed *after* batch
+//! ingestion. The columnar sketch paths are held to **bit-identical**
+//! tables (per-cell addition order is preserved by construction); sampler
+//! outputs are held to exact sample equality with domains sized below the
+//! candidate-truncation thresholds (truncation timing is the one place
+//! the batch path legitimately defers work).
+//!
+//! All cases are seeded and deterministic (`worp::util::proptest`).
+
+use worp::api::{Mergeable, MultiPass, StreamSummary, WorSampler};
+use worp::data::Element;
+use worp::sampler::exact::ExactWor;
+use worp::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
+use worp::sampler::windowed::WindowedWorp;
+use worp::sampler::worp1::OnePassWorp;
+use worp::sampler::worp2::TwoPassWorp;
+use worp::sampler::SamplerConfig;
+use worp::sketch::countmin::CountMin;
+use worp::sketch::countsketch::CountSketch;
+use worp::sketch::spacesaving::SpaceSaving;
+use worp::sketch::{AnyRhh, RhhSketch, SketchParams};
+use worp::util::proptest::{run, Gen};
+
+/// Drive a clone per path: per-element vs chunked batches.
+fn scalar_vs_batch<S: StreamSummary + Clone>(proto: &S, elems: &[Element], chunk: usize) -> (S, S) {
+    let mut scalar = proto.clone();
+    let mut batched = proto.clone();
+    for e in elems {
+        scalar.process(e);
+    }
+    for c in elems.chunks(chunk.max(1)) {
+        batched.process_batch(c);
+    }
+    assert_eq!(scalar.processed(), batched.processed());
+    (scalar, batched)
+}
+
+/// A seeded signed (turnstile) element stream.
+fn signed_stream(g: &mut Gen, m: usize, keys: u64) -> Vec<Element> {
+    (0..m)
+        .map(|_| Element::new(g.u64_below(keys), g.f64_range(-20.0, 20.0)))
+        .collect()
+}
+
+#[test]
+fn countsketch_batch_contract() {
+    run("countsketch batch ≡ scalar", 20, |g: &mut Gen| {
+        let params = SketchParams::new(*g.choose(&[1usize, 5, 7]), g.usize_range(16, 256), g.u64_below(1 << 48));
+        let proto = CountSketch::new(params);
+        let m = g.usize_range(1, 800);
+        let elems = signed_stream(g, m, 3000);
+        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 300));
+        assert_eq!(s.table(), b.table(), "columnar path must be bit-identical");
+    });
+}
+
+#[test]
+fn countmin_batch_contract() {
+    run("countmin batch ≡ scalar", 20, |g: &mut Gen| {
+        let params = SketchParams::new(3, g.usize_range(16, 256), g.u64_below(1 << 48));
+        let proto = CountMin::new(params);
+        let m = g.usize_range(1, 800);
+        let elems: Vec<Element> = (0..m)
+            .map(|_| Element::new(g.u64_below(500), g.f64_range(0.0, 10.0)))
+            .collect();
+        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 200));
+        for key in 0..500u64 {
+            assert_eq!(s.est(key), b.est(key));
+        }
+    });
+}
+
+#[test]
+fn anyrhh_batch_contract_both_arms() {
+    run("anyrhh batch ≡ scalar", 10, |g: &mut Gen| {
+        for q in [1.0, 2.0] {
+            let params = SketchParams::new(5, 128, g.u64_below(1 << 40));
+            let proto = AnyRhh::for_q(q, params);
+            let m = g.usize_range(1, 400);
+            // CountMin arm requires non-negative values
+            let elems: Vec<Element> = (0..m)
+                .map(|_| Element::new(g.u64_below(400), g.f64_range(0.0, 8.0)))
+                .collect();
+            let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 100));
+            for key in 0..400u64 {
+                assert_eq!(s.est(key), b.est(key), "q={q}");
+            }
+        }
+    });
+}
+
+#[test]
+fn spacesaving_batch_contract() {
+    run("spacesaving batch ≡ scalar", 20, |g: &mut Gen| {
+        let proto: SpaceSaving<u64> = SpaceSaving::new(g.usize_range(2, 24));
+        let m = g.usize_range(1, 800);
+        let elems: Vec<Element> = (0..m)
+            .map(|_| Element::new(g.u64_below(80), g.f64_range(0.0, 5.0)))
+            .collect();
+        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 250));
+        let (st, bt) = (s.top(), b.top());
+        assert_eq!(st.len(), bt.len());
+        for (a, c) in st.iter().zip(&bt) {
+            assert_eq!(a.key, c.key);
+            assert!((a.count - c.count).abs() < 1e-9);
+            assert!((a.overestimate - c.overestimate).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn worp1_batch_contract_signed() {
+    run("worp1 batch ≡ scalar", 8, |g: &mut Gen| {
+        // domain stays below the candidate capacity (8·(k+1)·2 with k=8)
+        // so candidate truncation never fires on either path
+        let cfg = SamplerConfig::new(2.0, 8)
+            .with_seed(g.u64_below(1 << 40))
+            .with_domain(120)
+            .with_sketch_shape(5, 512);
+        let proto = OnePassWorp::new(cfg);
+        let m = g.usize_range(20, 600);
+        let elems = signed_stream(g, m, 120);
+        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 200));
+        let (ss, bs) = (WorSampler::sample(&s).unwrap(), WorSampler::sample(&b).unwrap());
+        assert_eq!(ss.entries, bs.entries);
+        assert_eq!(ss.tau, bs.tau);
+    });
+}
+
+#[test]
+fn worp2_batch_contract_both_passes() {
+    run("worp2 batch ≡ scalar across passes", 8, |g: &mut Gen| {
+        let cfg = SamplerConfig::new(1.0, 8)
+            .with_seed(g.u64_below(1 << 40))
+            .with_domain(200)
+            .with_sketch_shape(5, 512);
+        let mut scalar = TwoPassWorp::new(cfg.clone());
+        let mut batched = TwoPassWorp::new(cfg);
+        let m = g.usize_range(20, 500);
+        let elems = signed_stream(g, m, 200);
+        let chunk = g.usize_range(1, 150);
+        for pass in 0..2 {
+            if pass > 0 {
+                scalar.advance().unwrap();
+                batched.advance().unwrap();
+            }
+            for e in &elems {
+                StreamSummary::process(&mut scalar, e);
+            }
+            for c in elems.chunks(chunk) {
+                StreamSummary::process_batch(&mut batched, c);
+            }
+        }
+        let (ss, bs) = (scalar.sample().unwrap(), batched.sample().unwrap());
+        assert_eq!(ss.entries, bs.entries);
+        assert_eq!(ss.tau, bs.tau);
+    });
+}
+
+#[test]
+fn tv_batch_contract() {
+    run("tv batch ≡ scalar", 5, |g: &mut Gen| {
+        let kind = *g.choose(&[SamplerKind::Oracle, SamplerKind::Precision]);
+        let cfg = TvSamplerConfig::new(1.0, 4, 60, g.u64_below(1 << 40), kind).with_r(12);
+        let proto = TvSampler::new(cfg);
+        let m = g.usize_range(10, 200);
+        let elems: Vec<Element> = (0..m)
+            .map(|_| Element::new(g.u64_below(60), g.f64_range(0.1, 5.0)))
+            .collect();
+        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 64));
+        assert_eq!(s.produce_keys(), b.produce_keys());
+    });
+}
+
+#[test]
+fn windowed_batch_contract() {
+    run("windowed batch ≡ scalar", 8, |g: &mut Gen| {
+        // k=4 → candidate prune threshold 2·16·5 = 160 > domain 100:
+        // pruning never fires, so deferred pruning cannot diverge
+        let cfg = SamplerConfig::new(1.0, 4)
+            .with_seed(g.u64_below(1 << 40))
+            .with_domain(100)
+            .with_sketch_shape(5, 256);
+        let window = *g.choose(&[50u64, 128, 1000]);
+        let proto = WindowedWorp::new(cfg, window, 5);
+        let m = g.usize_range(20, 600);
+        let elems = signed_stream(g, m, 100);
+        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 200));
+        let (ss, bs) = (WorSampler::sample(&s).unwrap(), WorSampler::sample(&b).unwrap());
+        assert_eq!(ss.entries, bs.entries);
+        assert_eq!(ss.tau, bs.tau);
+    });
+}
+
+#[test]
+fn exact_batch_contract() {
+    run("exact batch ≡ scalar", 10, |g: &mut Gen| {
+        let cfg = SamplerConfig::new(1.0, 10).with_seed(g.u64_below(1 << 40));
+        let proto = ExactWor::new(cfg);
+        let m = g.usize_range(1, 600);
+        let elems = signed_stream(g, m, 300);
+        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 200));
+        let (ss, bs) = (WorSampler::sample(&s).unwrap(), WorSampler::sample(&b).unwrap());
+        assert_eq!(ss.entries, bs.entries);
+    });
+}
+
+#[test]
+fn merge_after_batch_equals_whole_scalar() {
+    // composability survives the batch path: two shards ingested through
+    // process_batch, merged, must equal one scalar whole-stream summary
+    run("merge-after-batch ≡ whole scalar", 8, |g: &mut Gen| {
+        let seed = g.u64_below(1 << 40);
+        let m = g.usize_range(50, 600);
+        let elems = signed_stream(g, m, 150);
+        let chunk = g.usize_range(1, 100);
+
+        // CountSketch: merged table equals whole table up to fp rounding
+        let params = SketchParams::new(5, 128, seed);
+        let mut whole = CountSketch::new(params);
+        for e in &elems {
+            RhhSketch::process(&mut whole, e);
+        }
+        let mut a = CountSketch::new(params);
+        let mut b = CountSketch::new(params);
+        let (ea, eb): (Vec<_>, Vec<_>) = elems.iter().enumerate().partition(|(i, _)| i % 2 == 0);
+        let ea: Vec<Element> = ea.into_iter().map(|(_, e)| *e).collect();
+        let eb: Vec<Element> = eb.into_iter().map(|(_, e)| *e).collect();
+        for c in ea.chunks(chunk) {
+            StreamSummary::process_batch(&mut a, c);
+        }
+        for c in eb.chunks(chunk) {
+            StreamSummary::process_batch(&mut b, c);
+        }
+        Mergeable::merge(&mut a, &b).unwrap();
+        for (x, y) in a.table().iter().zip(whole.table()) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+
+        // ExactWor: exact aggregation — sample keys identical
+        let cfg = SamplerConfig::new(2.0, 8).with_seed(seed);
+        let mut whole = ExactWor::new(cfg.clone());
+        for e in &elems {
+            StreamSummary::process(&mut whole, e);
+        }
+        let mut a = ExactWor::new(cfg.clone());
+        let mut b = ExactWor::new(cfg);
+        for c in ea.chunks(chunk) {
+            StreamSummary::process_batch(&mut a, c);
+        }
+        for c in eb.chunks(chunk) {
+            StreamSummary::process_batch(&mut b, c);
+        }
+        Mergeable::merge(&mut a, &b).unwrap();
+        assert_eq!(
+            WorSampler::sample(&a).unwrap().keys(),
+            WorSampler::sample(&whole).unwrap().keys()
+        );
+    });
+}
+
+#[test]
+fn boxed_dyn_sampler_batch_contract() {
+    // the builder → Box<dyn WorSampler> route (the CLI/pipeline path)
+    // must hit the specialized overrides, not the default loop: verify the
+    // outputs match the concrete-typed batch path exactly
+    let n = 150;
+    let elems: Vec<Element> = (0..400)
+        .map(|i| Element::new((i * 17) % n, 1.0 + (i % 7) as f64))
+        .collect();
+    let b = worp::Worp::p(1.0)
+        .k(8)
+        .seed(9)
+        .domain(n as usize)
+        .sketch_shape(5, 512);
+    for method in [worp::Method::OnePass, worp::Method::TwoPass, worp::Method::Exact] {
+        let mut boxed = b.clone().method(method).build().unwrap();
+        let mut scalar = b.clone().method(method).build().unwrap();
+        for pass in 0..boxed.passes() {
+            if pass > 0 {
+                boxed.advance().unwrap();
+                scalar.advance().unwrap();
+            }
+            for c in elems.chunks(64) {
+                boxed.process_batch(c);
+            }
+            for e in &elems {
+                scalar.process(e);
+            }
+        }
+        assert_eq!(
+            boxed.sample().unwrap().keys(),
+            scalar.sample().unwrap().keys(),
+            "{method:?}"
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Statistical correctness guards for the paper's distributional claims.
+//!
+//! | test | paper claim |
+//! |---|---|
+//! | `worp1_inclusion_matches_exact_ppswor_chi_square` | §5: 1-pass WORp outputs (approximate) p-ppswor samples — inclusion frequencies match the exact successive-WOR probabilities (here p = 1, enumerated on a small Zipf domain) |
+//! | `wor_beats_wr_nrmse_on_skewed_stream` | §1/§7 (Fig 1, Table 3; Braverman–Ostrovsky–Vorsanger-style comparison): at fixed k, WOR estimates strictly beat WR on heavy-tailed data |
+//!
+//! Everything is seeded: the empirical statistics are identical on every
+//! run, so the thresholds are regression bounds rather than flaky
+//! hypothesis tests. Half the WORp trials ingest through `process_batch`
+//! to tie the distributional guarantee to the columnar hot path.
+
+use worp::api::StreamSummary;
+use worp::data::stream::unaggregate;
+use worp::data::zipf::zipf_frequencies;
+use worp::estimate::{moment_estimate, wr_moment_estimate};
+use worp::sampler::ppswor::perfect_ppswor;
+use worp::sampler::tv1pass::ppswor_subset_probs;
+use worp::sampler::worp1::OnePassWorp;
+use worp::sampler::wr::perfect_wr;
+use worp::sampler::SamplerConfig;
+use worp::util::stats::nrmse;
+
+/// Exact per-key inclusion probabilities of a ppswor bottom-k sample,
+/// by enumeration over all ordered prefixes (n ≤ 12).
+fn exact_inclusion_probs(freqs: &[f64], p: f64, k: usize) -> Vec<f64> {
+    let subset_probs = ppswor_subset_probs(freqs, p, k);
+    let mut incl = vec![0.0; freqs.len()];
+    for (subset, pr) in &subset_probs {
+        for &x in subset {
+            incl[x as usize] += pr;
+        }
+    }
+    incl
+}
+
+#[test]
+fn worp1_inclusion_matches_exact_ppswor_chi_square() {
+    // Zipf[1] frequencies over a small domain where exact successive-WOR
+    // probabilities are enumerable
+    let n = 8;
+    let k = 3;
+    let freqs = zipf_frequencies(n, 1.0, 10.0);
+    let incl = exact_inclusion_probs(&freqs, 1.0, k);
+    let total: f64 = incl.iter().sum();
+    assert!((total - k as f64).abs() < 1e-9, "inclusions sum to k");
+
+    // one stream realization, replayed under independent sampler seeds;
+    // the sketch is generous, so the 1-pass sample equals the perfect
+    // ppswor sample that shares its hash-defined randomization
+    let elems = unaggregate(&freqs, 2, false, 0x5EED);
+    let trials: u64 = 3000;
+    let mut counts = vec![0u64; n];
+    for t in 0..trials {
+        let cfg = SamplerConfig::new(1.0, k)
+            .with_seed(0xBEEF_0000 + t)
+            .with_domain(n)
+            .with_sketch_shape(5, 512);
+        let mut s = OnePassWorp::new(cfg);
+        if t % 2 == 0 {
+            for e in &elems {
+                StreamSummary::process(&mut s, e);
+            }
+        } else {
+            // alternate trials take the columnar batch path
+            for chunk in elems.chunks(5) {
+                StreamSummary::process_batch(&mut s, chunk);
+            }
+        }
+        for key in s.sample().keys() {
+            counts[key as usize] += 1;
+        }
+    }
+
+    // chi-square-style statistic over per-key binomial inclusion counts
+    // (negatively associated across keys, so the chi2_8 comparison is
+    // conservative); E[stat] ≈ n under H0, threshold leaves ~5 sigma
+    let mut stat = 0.0;
+    for i in 0..n {
+        let e = trials as f64 * incl[i];
+        let var = trials as f64 * incl[i] * (1.0 - incl[i]);
+        if var > 1e-9 {
+            let d = counts[i] as f64 - e;
+            stat += d * d / var;
+        }
+    }
+    assert!(
+        stat < 30.0,
+        "chi-square statistic {stat:.2} too large; counts={counts:?}, expected={:?}",
+        incl.iter().map(|p| p * trials as f64).collect::<Vec<_>>()
+    );
+
+    // and the heaviest key must be sampled most often (sanity ordering)
+    assert!(counts[0] >= counts[n - 1]);
+}
+
+#[test]
+fn worp1_batch_and_scalar_trials_share_the_distribution() {
+    // the two ingestion paths are the *same* sampler given a seed:
+    // identical samples per seed, not merely similar aggregates
+    let n = 8;
+    let freqs = zipf_frequencies(n, 1.0, 10.0);
+    let elems = unaggregate(&freqs, 2, false, 0x5EED);
+    for t in 0..50u64 {
+        let cfg = || {
+            SamplerConfig::new(1.0, 3)
+                .with_seed(0xABCD + t)
+                .with_domain(n)
+                .with_sketch_shape(5, 512)
+        };
+        let mut scalar = OnePassWorp::new(cfg());
+        let mut batched = OnePassWorp::new(cfg());
+        for e in &elems {
+            StreamSummary::process(&mut scalar, e);
+        }
+        for chunk in elems.chunks(7) {
+            StreamSummary::process_batch(&mut batched, chunk);
+        }
+        assert_eq!(scalar.sample().keys(), batched.sample().keys(), "seed offset {t}");
+    }
+}
+
+#[test]
+fn wor_beats_wr_nrmse_on_skewed_stream() {
+    // Zipf[2]: the heavy key soaks up WR draws (repeats shrink the
+    // effective sample), while WOR keeps k distinct keys — the paper's
+    // headline motivation. NRMSE of the l1-moment estimate over many
+    // seeded runs must be strictly better for WOR at the same k.
+    let n = 2_000;
+    let k = 50;
+    let freqs = zipf_frequencies(n, 2.0, 1e4);
+    let truth: f64 = freqs.iter().sum();
+    let seeds = 200u64;
+    let wor_ests: Vec<f64> = (0..seeds)
+        .map(|s| moment_estimate(&perfect_ppswor(&freqs, 1.0, k, 0x11AA + s), 1.0))
+        .collect();
+    let wr_ests: Vec<f64> = (0..seeds)
+        .map(|s| wr_moment_estimate(&perfect_wr(&freqs, 1.0, k, 0x11AA + s), 1.0))
+        .collect();
+    let wor = nrmse(&wor_ests, truth);
+    let wr = nrmse(&wr_ests, truth);
+    assert!(
+        wor < wr,
+        "WOR must beat WR at fixed k on skewed data: NRMSE wor={wor:.4} wr={wr:.4}"
+    );
+    // regression floor: WOR stays genuinely accurate, not merely "less bad"
+    assert!(wor < 0.5, "WOR NRMSE {wor:.4} unreasonably large");
+}

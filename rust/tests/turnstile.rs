@@ -1,0 +1,140 @@
+//! Turnstile regression guard: keys whose signed updates cancel to a net
+//! frequency of zero must never be sampled — for p ∈ {0.5, 1, 2}, through
+//! both the scalar and the columnar batch ingestion paths, across every
+//! sampling method that supports signed streams.
+//!
+//! A cancelled key that leaks into a sample is exactly the "speedup
+//! silently corrupts sampling semantics" failure mode this suite guards
+//! against: a batch path that reorders or drops signed updates would
+//! surface here immediately.
+
+use worp::api::{MultiPass, StreamSummary, WorSampler};
+use worp::data::Element;
+use worp::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
+use worp::sampler::SamplerConfig;
+use worp::util::rng::Rng;
+use worp::{Method, Worp};
+
+// 24 live + 10 cancelled = 34 distinct keys, below the 2-pass collector
+// capacity 4·(K+1) = 36: every key is admitted at its *first* element, so
+// collected pass-II values are exact and cancellation is exact (±v/2
+// halves are lossless in binary floating point)
+const LIVE_KEYS: u64 = 24;
+const CANCELLED_KEYS: std::ops::Range<u64> = 100..110;
+const K: usize = 8;
+
+/// Seeded stream: live keys with positive net mass, plus keys whose
+/// updates cancel exactly (each gets +v, −v/2, −v/2 interleaved).
+fn turnstile_stream(seed: u64) -> Vec<Element> {
+    let mut elems = Vec::new();
+    for key in 0..LIVE_KEYS {
+        let f = 100.0 / (key + 1) as f64;
+        for _ in 0..3 {
+            elems.push(Element::new(key, f / 3.0));
+        }
+    }
+    for key in CANCELLED_KEYS {
+        let v = 500.0 + key as f64; // heavy before cancellation
+        elems.push(Element::new(key, v));
+        elems.push(Element::new(key, -v / 2.0));
+        elems.push(Element::new(key, -v / 2.0));
+    }
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut elems);
+    elems
+}
+
+fn assert_no_cancelled_keys(method: &str, p: f64, mode: &str, keys: &[u64]) {
+    for k in keys {
+        assert!(
+            !CANCELLED_KEYS.contains(k),
+            "{method} (p={p}, {mode}): cancelled key {k} leaked into the sample; keys={keys:?}"
+        );
+    }
+    assert!(!keys.is_empty(), "{method} (p={p}, {mode}): empty sample");
+}
+
+/// Drive a boxed sampler through all passes, scalar or batched.
+fn drive(mut s: Box<dyn WorSampler>, elems: &[Element], batch: Option<usize>) -> Vec<u64> {
+    for pass in 0..s.passes() {
+        if pass > 0 {
+            s.advance().unwrap();
+        }
+        match batch {
+            None => {
+                for e in elems {
+                    s.process(e);
+                }
+            }
+            Some(c) => {
+                for chunk in elems.chunks(c) {
+                    s.process_batch(chunk);
+                }
+            }
+        }
+    }
+    s.sample().unwrap().keys()
+}
+
+#[test]
+fn cancelled_keys_never_sampled_scalar_and_batch() {
+    let elems = turnstile_stream(0xCA9CE1);
+    for &p in &[0.5, 1.0, 2.0] {
+        // all signed-capable methods go through the CountSketch (q=2) path
+        for method in [Method::OnePass, Method::TwoPass, Method::Exact] {
+            let b = Worp::p(p)
+                .k(K)
+                .seed(7)
+                .domain(200)
+                .sketch_shape(7, 1024)
+                .method(method);
+            for (mode, batch) in [("scalar", None), ("batch", Some(17)), ("batch", Some(4096))] {
+                let keys = drive(b.build().unwrap(), &elems, batch);
+                assert_no_cancelled_keys(method.name(), p, mode, &keys);
+            }
+        }
+    }
+}
+
+#[test]
+fn cancelled_keys_never_sampled_windowed() {
+    // cancellation happens *within* the window, so the windowed estimate
+    // of a cancelled key is exactly zero
+    let elems = turnstile_stream(0x57ED);
+    for &p in &[0.5, 1.0, 2.0] {
+        let b = Worp::p(p)
+            .k(K)
+            .seed(7)
+            .domain(200)
+            .sketch_shape(7, 1024)
+            .windowed(1 << 30, 4);
+        for (mode, batch) in [("scalar", None), ("batch", Some(23))] {
+            let keys = drive(b.build().unwrap(), &elems, batch);
+            assert_no_cancelled_keys("windowed", p, mode, &keys);
+        }
+    }
+}
+
+#[test]
+fn cancelled_keys_never_sampled_tv() {
+    // Algorithm 1 (oracle substrate): the oracle drops zero-net keys and
+    // the rHH estimates of cancelled keys vanish by linearity
+    let elems = turnstile_stream(0x7F1E);
+    for &p in &[0.5, 1.0, 2.0] {
+        let cfg = TvSamplerConfig::new(p, K, 200, 13, SamplerKind::Oracle).with_r(64);
+        let mut scalar = TvSampler::new(cfg.clone());
+        let mut batched = TvSampler::new(cfg);
+        for e in &elems {
+            StreamSummary::process(&mut scalar, e);
+        }
+        for chunk in elems.chunks(19) {
+            StreamSummary::process_batch(&mut batched, chunk);
+        }
+        for (mode, s) in [("scalar", &scalar), ("batch", &batched)] {
+            let keys = s.produce_keys();
+            assert_no_cancelled_keys("tv", p, mode, &keys);
+        }
+        // the two paths must also agree exactly
+        assert_eq!(scalar.produce_keys(), batched.produce_keys(), "p={p}");
+    }
+}
