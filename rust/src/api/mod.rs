@@ -161,6 +161,40 @@ pub trait Mergeable: StreamSummary {
     }
 }
 
+/// A summary with a portable binary form — the persistence half of the
+/// composability story: `encode_into` appends one self-contained,
+/// versioned [`crate::codec`] envelope (magic, version, type tag, payload
+/// length, fingerprint, checksum, payload); `decode` reconstructs the
+/// summary from such an envelope.
+///
+/// Contract (verified generically by `tests/persist_contract.rs`):
+///
+/// - `decode(encode(s))` preserves the fingerprint, the final output
+///   (sample / estimates) and merge-compatibility of `s`;
+/// - encoding is canonical — logically-equal summaries encode to
+///   byte-identical envelopes — so
+///   `merge(decode(encode(a)), decode(encode(b))) ≡ merge(a, b)`
+///   bit-for-bit;
+/// - `decode` **never panics**: every malformed input maps to
+///   [`Error::Codec`] (see the corruption suite).
+pub trait Persist {
+    /// Append the full envelope for this summary to `out`.
+    fn encode_into(&self, out: &mut Vec<u8>);
+
+    /// Decode a summary from an envelope produced by
+    /// [`Persist::encode_into`].
+    fn decode(bytes: &[u8]) -> Result<Self>
+    where
+        Self: Sized;
+
+    /// Convenience: encode into a fresh buffer.
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+}
+
 /// A summary with a final output (a [`Sample`] for WOR samplers, a draw
 /// for single samplers, ...). Finalization never consumes the summary:
 /// streaming can continue afterwards.
@@ -218,6 +252,13 @@ pub trait WorSampler: StreamSummary + MultiPass + Send {
 
     /// Short method name for diagnostics ("1pass", "2pass", ...).
     fn name(&self) -> &'static str;
+
+    /// Append this sampler's [`Persist`] envelope to `out` — the
+    /// object-safe face of [`Persist::encode_into`]. The inverse is
+    /// [`crate::codec::decode_sampler`], which dispatches on the
+    /// envelope's type tag to rebuild the concrete type behind
+    /// `Box<dyn WorSampler>`.
+    fn encode_state(&self, out: &mut Vec<u8>);
 
     /// Whether sharding this sampler across parallel workers preserves
     /// its semantics. `false` for summaries whose [`StreamSummary::process`]

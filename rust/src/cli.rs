@@ -10,6 +10,7 @@
 //! CLI changes beyond the builder.
 
 use crate::api::builder::{Method, Worp};
+use crate::api::{StreamSummary, WorSampler};
 use crate::config::PipelineConfig;
 use crate::coordinator::{Coordinator, VecSource};
 use crate::data::stream::GradientStream;
@@ -29,6 +30,9 @@ pub struct Args {
     pub options: HashMap<String, String>,
     /// Bare `--flag`s.
     pub flags: Vec<String>,
+    /// Positional arguments after the subcommand (only `merge-files`
+    /// takes any — the input paths; other commands reject them).
+    pub positionals: Vec<String>,
 }
 
 impl Args {
@@ -38,7 +42,14 @@ impl Args {
         let command = it.next().unwrap_or_default();
         let mut options = HashMap::new();
         let mut flags = Vec::new();
+        let mut positionals = Vec::new();
         while let Some(a) = it.next() {
+            if a == "--" {
+                // everything after a bare `--` is positional, so file
+                // lists can never be swallowed as option values
+                positionals.extend(it);
+                break;
+            }
             if let Some(name) = a.strip_prefix("--") {
                 // value present and not itself an option?
                 match it.peek() {
@@ -48,10 +59,18 @@ impl Args {
                     _ => flags.push(name.to_string()),
                 }
             } else {
-                return Err(Error::Config(format!("unexpected positional arg {a:?}")));
+                positionals.push(a);
             }
         }
-        Ok(Args { command, options, flags })
+        Ok(Args { command, options, flags, positionals })
+    }
+
+    /// Reject stray positionals (commands that take none call this first).
+    fn no_positionals(&self) -> Result<()> {
+        match self.positionals.first() {
+            Some(p) => Err(Error::Config(format!("unexpected positional arg {p:?}"))),
+            None => Ok(()),
+        }
     }
 
     /// Option as string.
@@ -96,6 +115,20 @@ COMMANDS:
                   --p <f64> --k <n> --workers <n> --alpha <f64>
                   --window <n> --buckets <n>   (windowed method)
                   --backend <native|xla>
+                  --checkpoint-dir <dir> --checkpoint-every <batches>
+                                         snapshot shard states; a rerun
+                                         resumes from existing snapshots
+    shard       sketch one partition of the workload and write the
+                summary state to disk (offline / multi-process merging)
+                  --out <state.worp>     output file (required)
+                  --shards <m> --shard-index <i>
+                                         process every m-th element
+                                         starting at i (default 1/0)
+                  plus all `sample` workload/sampler options
+    merge-files <a.worp> <b.worp> ...
+                decode per-partition summaries, verify fingerprints,
+                fold through the merge tree, and print the sample
+                  --out <merged.worp>    also write the merged state
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
     bench       batch-vs-scalar ingestion throughput per summary,
@@ -111,10 +144,27 @@ COMMANDS:
 /// Dispatch a parsed command line.
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
-        "sample" => cmd_sample(args),
-        "psi" => cmd_psi(args),
-        "bench" => cmd_bench(args),
-        "info" => cmd_info(args),
+        "sample" => {
+            args.no_positionals()?;
+            cmd_sample(args)
+        }
+        "shard" => {
+            args.no_positionals()?;
+            cmd_shard(args)
+        }
+        "merge-files" => cmd_merge_files(args),
+        "psi" => {
+            args.no_positionals()?;
+            cmd_psi(args)
+        }
+        "bench" => {
+            args.no_positionals()?;
+            cmd_bench(args)
+        }
+        "info" => {
+            args.no_positionals()?;
+            cmd_info(args)
+        }
         "" | "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())
@@ -158,6 +208,10 @@ pub fn load_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(w) = args.get("workload") {
         cfg.workload = w.to_string();
     }
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = d.to_string();
+    }
+    cfg.checkpoint_every = args.parse_or("checkpoint-every", cfg.checkpoint_every)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -196,6 +250,13 @@ fn cmd_sample(args: &Args) -> Result<()> {
                     cfg.method
                 )));
             }
+            // the single-threaded xla path has no sharded workers to
+            // snapshot; refusing beats silently ignoring the request
+            if !cfg.checkpoint_dir.is_empty() {
+                return Err(Error::Config(
+                    "checkpointing (--checkpoint-dir) is not supported with backend xla".into(),
+                ));
+            }
             coord.one_pass_xla(elems, &cfg.artifacts_dir)?
         }
         _ => {
@@ -204,6 +265,15 @@ fn cmd_sample(args: &Args) -> Result<()> {
         }
     };
     println!("pipeline: {}", metrics.report());
+    print_sample(&sample);
+    Ok(())
+}
+
+/// Shared sample report: the top-key table, the threshold and the moment
+/// estimates — `sample` and `merge-files` print identically, so a
+/// two-process shard→merge run can be diffed against a single-process
+/// one (the CI smoke does exactly that).
+fn print_sample(sample: &crate::sampler::Sample) {
     let mut t = Table::new(
         &format!("top sampled keys (of {})", sample.len()),
         &["key", "freq", "transformed"],
@@ -217,9 +287,132 @@ fn cmd_sample(args: &Args) -> Result<()> {
         for p_prime in [1.0, 2.0] {
             println!(
                 "estimated ||nu||_{p_prime}^{p_prime} = {}",
-                sci(moment_estimate(&sample, p_prime))
+                sci(moment_estimate(sample, p_prime))
             );
         }
+    }
+}
+
+/// `worp shard`: sketch one partition of the workload in this process
+/// and write the summary state to `--out` — the offline half of the
+/// cross-process merge path (`worp merge-files` is the other half).
+/// Partitioning is by element position: with `--shards m
+/// --shard-index i` this process consumes elements `i, i+m, i+2m, …`,
+/// so `m` independent processes cover the stream exactly once.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| Error::Config("shard requires --out <state.worp>".into()))?;
+    let shards: usize = args.parse_or("shards", 1)?;
+    let index: usize = args.parse_or("shard-index", 0)?;
+    if shards == 0 || index >= shards {
+        return Err(Error::Config(format!(
+            "need 0 <= shard-index < shards (got {index} of {shards})"
+        )));
+    }
+    let mut sampler = Worp::from_config(&cfg)?.build()?;
+    // clock-dependent samplers (windowed: implicit per-element ticks)
+    // cannot be position-partitioned — each process's clock would only
+    // tick on its own elements, so per-shard windows would cover skewed
+    // spans of the stream and the merged sample would silently differ
+    // from a single-process run (the same hazard run_dyn serializes)
+    if shards > 1 && !sampler.parallel_safe() {
+        return Err(Error::Config(format!(
+            "method {} depends on a stream-global clock and cannot be sharded across \
+             processes; run it with --shards 1",
+            sampler.name()
+        )));
+    }
+    // stream the partition through one reusable micro-batch buffer — no
+    // second materialized copy of the (possibly huge) element stream
+    let batch = cfg.batch.max(1);
+    let mut chunk: Vec<Element> = Vec::with_capacity(batch);
+    for (i, e) in make_stream(&cfg).into_iter().enumerate() {
+        if i % shards != index {
+            continue;
+        }
+        chunk.push(e);
+        if chunk.len() == batch {
+            sampler.process_batch(&chunk);
+            chunk.clear();
+        }
+    }
+    if !chunk.is_empty() {
+        sampler.process_batch(&chunk);
+    }
+    let mut bytes = Vec::new();
+    sampler.encode_state(&mut bytes);
+    std::fs::write(out, &bytes)?;
+    println!(
+        "shard {index}/{shards}: method={} processed={} fingerprint={:#018x} -> {out} ({} bytes)",
+        sampler.name(),
+        sampler.processed(),
+        sampler.fingerprint().value(),
+        bytes.len()
+    );
+    Ok(())
+}
+
+/// `worp merge-files`: decode per-partition summary states, fold them
+/// through the fingerprint-checked merge tree, and report the combined
+/// sample — summaries sketched by independent processes (or machines)
+/// combine exactly as the paper's composability property promises.
+fn cmd_merge_files(args: &Args) -> Result<()> {
+    // the hand-rolled parser cannot know which --options take values, so
+    // a mistyped flag could swallow the first input path as its value;
+    // merge-files therefore rejects anything but --out loudly instead of
+    // silently merging fewer files than the user listed
+    if let Some(k) = args.options.keys().find(|k| k.as_str() != "out") {
+        return Err(Error::Config(format!(
+            "merge-files does not take --{k} (only --out); use `--` before the file list \
+             if a path begins with -"
+        )));
+    }
+    if let Some(f) = args.flags.first() {
+        return Err(Error::Config(format!("merge-files does not take --{f}")));
+    }
+    if args.positionals.is_empty() {
+        return Err(Error::Config(
+            "merge-files needs at least one input: worp merge-files a.worp b.worp ...".into(),
+        ));
+    }
+    let mut summaries: Vec<Box<dyn WorSampler>> = Vec::new();
+    for path in &args.positionals {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+        let s = crate::codec::decode_sampler(&bytes)
+            .map_err(|e| Error::Config(format!("cannot decode {path}: {e}")))?;
+        println!(
+            "loaded {path}: method={} processed={} fingerprint={:#018x}",
+            s.name(),
+            s.processed(),
+            s.fingerprint().value()
+        );
+        summaries.push(s);
+    }
+    let metrics = crate::pipeline::metrics::Metrics::default();
+    let merged = crate::pipeline::merge::tree_merge(summaries, &metrics, |a, b| {
+        a.merge_dyn(&**b)
+    })?
+    .expect("at least one input");
+    println!(
+        "merged {} partitions: processed={} merges={}",
+        args.positionals.len(),
+        crate::api::StreamSummary::processed(&merged),
+        metrics.merges()
+    );
+    if let Some(out) = args.get("out") {
+        let mut bytes = Vec::new();
+        merged.encode_state(&mut bytes);
+        std::fs::write(out, &bytes)?;
+        println!("wrote merged state -> {out} ({} bytes)", bytes.len());
+    }
+    match merged.sample() {
+        Ok(sample) => print_sample(&sample),
+        // a mid-pass multi-pass state merges fine but cannot sample yet
+        Err(Error::State(m)) => println!("no sample yet: {m}"),
+        Err(e) => return Err(e),
     }
     Ok(())
 }
@@ -327,9 +520,108 @@ mod tests {
     }
 
     #[test]
-    fn stray_positional_rejected() {
-        let r = Args::parse(["sample".into(), "oops".into()]);
-        assert!(r.is_err());
+    fn stray_positional_rejected_for_commands_that_take_none() {
+        let a = parse(&["sample", "oops"]);
+        assert_eq!(a.positionals, vec!["oops".to_string()]);
+        assert!(dispatch(&a).is_err());
+        // merge-files *does* take positionals (they are the inputs)
+        let a = parse(&["merge-files", "a.worp", "b.worp"]);
+        assert_eq!(a.positionals.len(), 2);
+    }
+
+    #[test]
+    fn merge_files_rejects_unknown_options_instead_of_swallowing_inputs() {
+        // a mistyped flag would otherwise consume the first input path as
+        // its value and silently merge fewer files than listed
+        let a = parse(&["merge-files", "--verbose", "a.worp", "b.worp"]);
+        assert_eq!(a.positionals.len(), 1); // a.worp was swallowed...
+        let err = dispatch(&a).unwrap_err();
+        assert!(err.to_string().contains("--verbose"), "{err}"); // ...but we refuse
+        // `--` makes every following token positional
+        let a = parse(&["merge-files", "--", "--weird-name.worp", "b.worp"]);
+        assert_eq!(
+            a.positionals,
+            vec!["--weird-name.worp".to_string(), "b.worp".to_string()]
+        );
+    }
+
+    #[test]
+    fn shard_then_merge_files_equals_single_process_sample() {
+        // the cross-process merge path end-to-end: two `worp shard`
+        // invocations over complementary partitions, merged from disk,
+        // must reproduce the single-process exact sample bit-for-bit
+        let dir = std::env::temp_dir().join("worp_cli_shard_merge_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a_path = dir.join("a.worp");
+        let b_path = dir.join("b.worp");
+        let common = [
+            "--method", "exact", "--k", "8", "--n", "200", "--stream-len", "5000",
+            "--seed", "9",
+        ];
+        for (idx, path) in [(0, &a_path), (1, &b_path)] {
+            let mut argv = vec!["shard".to_string()];
+            argv.extend(common.iter().map(|s| s.to_string()));
+            argv.extend([
+                "--shards".into(),
+                "2".into(),
+                "--shard-index".into(),
+                idx.to_string(),
+                "--out".into(),
+                path.to_str().unwrap().into(),
+            ]);
+            dispatch(&Args::parse(argv).unwrap()).unwrap();
+        }
+        // merge from disk and compare against the whole-stream sampler
+        let merged = {
+            let a = crate::codec::decode_sampler(&std::fs::read(&a_path).unwrap()).unwrap();
+            let b = crate::codec::decode_sampler(&std::fs::read(&b_path).unwrap()).unwrap();
+            let mut m = a;
+            m.merge_dyn(&*b).unwrap();
+            m.sample().unwrap()
+        };
+        let whole = {
+            let mut argv = vec!["sample".to_string()];
+            argv.extend(common.iter().map(|s| s.to_string()));
+            let cfg = load_config(&Args::parse(argv).unwrap()).unwrap();
+            let mut s = Worp::from_config(&cfg).unwrap().build().unwrap();
+            for e in make_stream(&cfg) {
+                s.process(&e);
+            }
+            s.sample().unwrap()
+        };
+        assert_eq!(merged.keys(), whole.keys());
+        assert_eq!(merged.tau, whole.tau);
+        // the merge-files command itself accepts the same files
+        let argv = vec![
+            "merge-files".to_string(),
+            a_path.to_str().unwrap().to_string(),
+            b_path.to_str().unwrap().to_string(),
+        ];
+        dispatch(&Args::parse(argv).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn merge_files_rejects_mismatched_fingerprints() {
+        let dir = std::env::temp_dir().join("worp_cli_merge_mismatch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // same method, different seeds: decode succeeds, merge must fail
+        let mut paths = Vec::new();
+        for seed in [1u64, 2] {
+            let mut s = Worp::p(1.0).k(4).seed(seed).exact().build().unwrap();
+            s.process(&Element::new(7, 1.0));
+            let mut bytes = Vec::new();
+            s.encode_state(&mut bytes);
+            let p = dir.join(format!("s{seed}.worp"));
+            std::fs::write(&p, &bytes).unwrap();
+            paths.push(p.to_str().unwrap().to_string());
+        }
+        let mut argv = vec!["merge-files".to_string()];
+        argv.extend(paths);
+        let err = dispatch(&Args::parse(argv).unwrap()).unwrap_err();
+        assert!(
+            matches!(err, Error::Incompatible(_)),
+            "expected fingerprint mismatch, got {err}"
+        );
     }
 
     #[test]

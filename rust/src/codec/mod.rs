@@ -1,0 +1,536 @@
+//! Versioned binary persistence for every composable summary — the wire
+//! format behind [`crate::api::Persist`], pipeline checkpointing and the
+//! `worp shard` / `worp merge-files` cross-process merge path.
+//!
+//! Like the rest of the crate this is std-only and hand-rolled (no serde
+//! offline — DESIGN.md §7), in the same spirit as
+//! [`crate::pipeline::spool`], with which it shares the
+//! [`wire`] endianness helpers.
+//!
+//! # Envelope layout
+//!
+//! Every encoded summary is one self-contained *envelope* (all integers
+//! little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic           "WORP"
+//!      4     2  version         wire::VERSION (currently 1)
+//!      6     2  type tag        see [`tag`]
+//!      8     8  payload length  must equal exactly the bytes that follow
+//!              the 32-byte header
+//!     16     8  fingerprint     Mergeable/WorSampler fingerprint of the
+//!              encoded summary — recomputed after decode and compared
+//!     24     8  checksum        hash_bytes(CHECKSUM_SEED, header[0..24]
+//!              ++ payload) — covers the header fields too, so any
+//!              single corrupted bit anywhere in the envelope is caught
+//!     32     …  payload         per-type layout (each type's Persist impl)
+//! ```
+//!
+//! # Versioning rules
+//!
+//! - Any change to the envelope or to a type's payload layout bumps
+//!   [`wire::VERSION`]; decoders accept exactly one version (no silent
+//!   cross-version reads — summaries are cheap to rebuild, corrupt merges
+//!   are not).
+//! - Type tags are append-only: a tag is never reused for a different
+//!   layout.
+//! - Encoding is *canonical*: unordered containers (hash maps/sets) are
+//!   written sorted by key, so logically-equal summaries encode to
+//!   byte-identical envelopes — the golden-vector tests and the
+//!   `merge ∘ decode ∘ encode ≡ merge` law in `tests/persist_contract.rs`
+//!   rely on this.
+//!
+//! # Safety against untrusted input
+//!
+//! `decode` never panics: every malformed input — truncation, bad magic,
+//! unknown version/tag, payload-length or checksum or fingerprint
+//! mismatch, length-field lies — maps to [`Error::Codec`]. Sequence
+//! lengths are validated against the remaining byte count *before* any
+//! allocation ([`wire::Reader::seq_len`]), so hostile lengths cannot OOM.
+
+pub mod wire;
+
+use crate::api::{Persist, WorSampler};
+use crate::error::{Error, Result};
+use crate::sampler::SamplerConfig;
+use crate::sketch::SketchParams;
+use crate::util::hashing::{hash_bytes2, BottomKDist};
+
+/// Seed of the payload checksum (a keyed FNV/SplitMix digest via
+/// [`hash_bytes2`] — corruption detection, not cryptographic integrity).
+pub const CHECKSUM_SEED: u64 = 0xC0DE_C0DE_5EED_0001;
+
+/// Size of the fixed envelope header in bytes.
+pub const HEADER_LEN: usize = 32;
+
+/// Stable type tags (append-only; see module docs).
+pub mod tag {
+    /// [`crate::sketch::countsketch::CountSketch`]
+    pub const COUNTSKETCH: u16 = 1;
+    /// [`crate::sketch::countmin::CountMin`]
+    pub const COUNTMIN: u16 = 2;
+    /// [`crate::sketch::AnyRhh`]
+    pub const ANY_RHH: u16 = 3;
+    /// [`crate::sketch::spacesaving::SpaceSaving`]`<u64>`
+    pub const SPACESAVING: u16 = 4;
+    /// [`crate::sketch::topk::TopK`]
+    pub const TOPK: u16 = 5;
+    /// [`crate::sketch::window::WindowedCountSketch`]
+    pub const WINDOW_SKETCH: u16 = 6;
+    /// [`crate::sampler::exact::ExactWor`]
+    pub const EXACT_WOR: u16 = 7;
+    /// [`crate::sampler::worp1::OnePassWorp`]
+    pub const WORP1: u16 = 8;
+    /// [`crate::sampler::worp2::TwoPassWorpPass1`]
+    pub const WORP2_PASS1: u16 = 9;
+    /// [`crate::sampler::worp2::TwoPassWorpPass2`]
+    pub const WORP2_PASS2: u16 = 10;
+    /// [`crate::sampler::worp2::TwoPassWorp`]
+    pub const WORP2: u16 = 11;
+    /// [`crate::sampler::tv1pass::TvSampler`]
+    pub const TV: u16 = 12;
+    /// [`crate::sampler::windowed::WindowedWorp`]
+    pub const WINDOWED_WORP: u16 = 13;
+    /// [`crate::sampler::perfect_lp::OracleSampler`]
+    pub const ORACLE_LP: u16 = 14;
+    /// [`crate::sampler::perfect_lp::PrecisionSampler`]
+    pub const PRECISION_LP: u16 = 15;
+}
+
+/// Human-readable name of a type tag (for diagnostics).
+pub fn tag_name(t: u16) -> &'static str {
+    match t {
+        tag::COUNTSKETCH => "countsketch",
+        tag::COUNTMIN => "countmin",
+        tag::ANY_RHH => "anyrhh",
+        tag::SPACESAVING => "spacesaving",
+        tag::TOPK => "topk",
+        tag::WINDOW_SKETCH => "windowsketch",
+        tag::EXACT_WOR => "exact",
+        tag::WORP1 => "1pass",
+        tag::WORP2_PASS1 => "2pass-pass1",
+        tag::WORP2_PASS2 => "2pass-pass2",
+        tag::WORP2 => "2pass",
+        tag::TV => "tv",
+        tag::WINDOWED_WORP => "windowed",
+        tag::ORACLE_LP => "oracle-lp",
+        tag::PRECISION_LP => "precision-lp",
+        _ => "unknown",
+    }
+}
+
+/// Append a complete envelope (header + payload) to `out`.
+pub fn write_envelope(type_tag: u16, fingerprint: u64, payload: &[u8], out: &mut Vec<u8>) {
+    let start = out.len();
+    out.extend_from_slice(&wire::ENVELOPE_MAGIC);
+    wire::put_u16(out, wire::VERSION);
+    wire::put_u16(out, type_tag);
+    wire::put_u64(out, payload.len() as u64);
+    wire::put_u64(out, fingerprint);
+    let checksum = hash_bytes2(CHECKSUM_SEED, &out[start..start + 24], payload);
+    wire::put_u64(out, checksum);
+    out.extend_from_slice(payload);
+}
+
+/// A validated envelope view: header fields plus the checksummed payload.
+pub struct Envelope<'a> {
+    /// The type tag of the encoded summary.
+    pub type_tag: u16,
+    /// The fingerprint recorded at encode time.
+    pub fingerprint: u64,
+    /// The payload bytes (checksum already verified).
+    pub payload: &'a [u8],
+}
+
+/// Parse the validated-but-unchecksummed header fields (magic + version
+/// verified): `(type_tag, payload_len, fingerprint)` plus the reader
+/// positioned at the checksum field. One parser serves both the full
+/// [`read_envelope`] and the cheap [`peek_header`], so the header logic
+/// cannot drift between them.
+fn parse_header(bytes: &[u8]) -> Result<(u16, u64, u64, wire::Reader<'_>)> {
+    let mut r = wire::Reader::new(bytes);
+    let magic = r.take(4)?;
+    if magic != wire::ENVELOPE_MAGIC {
+        return Err(Error::Codec(format!(
+            "bad magic {:02x?} (expected {:02x?} — not a worp summary file?)",
+            magic,
+            wire::ENVELOPE_MAGIC
+        )));
+    }
+    let version = r.u16()?;
+    if version != wire::VERSION {
+        return Err(Error::Codec(format!(
+            "unsupported format version {version} (this build reads version {})",
+            wire::VERSION
+        )));
+    }
+    let type_tag = r.u16()?;
+    let payload_len = r.u64()?;
+    let fingerprint = r.u64()?;
+    Ok((type_tag, payload_len, fingerprint, r))
+}
+
+/// Parse and validate an envelope. `expect_tag = Some(t)` additionally
+/// demands the type tag be `t` (the typed `Persist::decode` path);
+/// `None` accepts any known layout owner (the `Box<dyn WorSampler>`
+/// dispatch peeks the tag itself).
+pub fn read_envelope(bytes: &[u8], expect_tag: Option<u16>) -> Result<Envelope<'_>> {
+    let (type_tag, payload_len, fingerprint, mut r) = parse_header(bytes)?;
+    if let Some(want) = expect_tag {
+        if type_tag != want {
+            return Err(Error::Codec(format!(
+                "type tag mismatch: file holds a {} (tag {type_tag}), expected {} (tag {want})",
+                tag_name(type_tag),
+                tag_name(want)
+            )));
+        }
+    }
+    let checksum = r.u64()?;
+    let payload = r.rest();
+    if payload_len != payload.len() as u64 {
+        return Err(Error::Codec(format!(
+            "payload length field says {payload_len} bytes but {} follow the header",
+            payload.len()
+        )));
+    }
+    // the checksum covers the first 24 header bytes plus the payload, so
+    // every corrupted bit anywhere in the envelope lands here (or in one
+    // of the field checks above)
+    if hash_bytes2(CHECKSUM_SEED, &bytes[..24], payload) != checksum {
+        return Err(Error::Codec(
+            "envelope checksum mismatch — the bytes were corrupted in transit or at rest".into(),
+        ));
+    }
+    Ok(Envelope { type_tag, fingerprint, payload })
+}
+
+/// Compare the fingerprint recorded in the envelope header against the
+/// one recomputed from the decoded summary — a corrupted-but-plausible
+/// configuration fails here instead of poisoning a later merge.
+pub fn check_fingerprint(header: u64, recomputed: u64) -> Result<()> {
+    if header != recomputed {
+        return Err(Error::Codec(format!(
+            "fingerprint mismatch: header records {header:#018x} but the decoded summary \
+             fingerprints to {recomputed:#018x}",
+        )));
+    }
+    Ok(())
+}
+
+/// Append a nested summary as a length-prefixed full envelope (composite
+/// summaries embed their parts this way).
+pub fn put_nested<T: Persist>(out: &mut Vec<u8>, inner: &T) {
+    let mut tmp = Vec::new();
+    inner.encode_into(&mut tmp);
+    wire::put_usize(out, tmp.len());
+    out.extend_from_slice(&tmp);
+}
+
+/// Read the byte slice of a nested envelope written by [`put_nested`].
+pub fn take_nested<'a>(r: &mut wire::Reader<'a>) -> Result<&'a [u8]> {
+    let n = r.seq_len(1)?;
+    r.take(n)
+}
+
+/// Decode a nested envelope written by [`put_nested`].
+pub fn read_nested<T: Persist>(r: &mut wire::Reader<'_>) -> Result<T> {
+    T::decode(take_nested(r)?)
+}
+
+// ---------------------------------------------------------------------------
+// SamplerConfig payload fragment (shared by every WORp sampler codec)
+
+/// Append a [`SamplerConfig`] fragment: `p f64, k u64, q f64, seed u64,
+/// n u64, delta f64, eps f64, rows u64, width u64, dist u8 (1=Exp,
+/// 2=Uniform)`.
+pub fn put_sampler_config(out: &mut Vec<u8>, cfg: &SamplerConfig) {
+    wire::put_f64(out, cfg.p);
+    wire::put_usize(out, cfg.k);
+    wire::put_f64(out, cfg.q);
+    wire::put_u64(out, cfg.seed);
+    wire::put_usize(out, cfg.n);
+    wire::put_f64(out, cfg.delta);
+    wire::put_f64(out, cfg.eps);
+    wire::put_usize(out, cfg.rows);
+    wire::put_usize(out, cfg.width);
+    wire::put_u8(out, dist_to_byte(cfg.dist));
+}
+
+/// Read and validate a [`SamplerConfig`] fragment. The checks mirror the
+/// constructor asserts the decode path bypasses (decoding must never
+/// panic): `p ∈ (0, 2]` keeps the transform constructible, `k ≥ 1`
+/// keeps sample extraction sane, and sizes are capped so derived
+/// capacities cannot overflow.
+pub fn read_sampler_config(r: &mut wire::Reader<'_>) -> Result<SamplerConfig> {
+    const SIZE_CAP: u64 = u32::MAX as u64;
+    let p = r.finite_f64("p")?;
+    let k = r.u64()?;
+    let q = r.finite_f64("q")?;
+    let seed = r.u64()?;
+    let n = r.u64()?;
+    let delta = r.finite_f64("delta")?;
+    let eps = r.finite_f64("eps")?;
+    let rows = r.u64()?;
+    let width = r.u64()?;
+    let dist = dist_from_byte(r.u8()?)?;
+    validate_p(p, "sampler config")?;
+    if k == 0 || k > SIZE_CAP {
+        return Err(Error::Codec(format!("k out of range [1, 2^32]: {k}")));
+    }
+    if n > SIZE_CAP || rows > SIZE_CAP || width > SIZE_CAP {
+        return Err(Error::Codec(format!(
+            "config sizes exceed the 2^32 cap: n={n} rows={rows} width={width}"
+        )));
+    }
+    // mirror the builder's validation: these ranges keep the Ψ
+    // calibration (certify / resolved-width paths) assert-free, so a
+    // hostile config cannot smuggle a panic past decode
+    if q != 1.0 && q != 2.0 {
+        return Err(Error::Codec(format!("q must be 1 or 2: {q}")));
+    }
+    if q < p {
+        return Err(Error::Codec(format!("need q >= p (q={q}, p={p})")));
+    }
+    if !(delta > 0.0 && delta < 1.0) {
+        return Err(Error::Codec(format!("delta out of range (0,1): {delta}")));
+    }
+    if !(eps > 0.0 && eps <= 1.0 / 3.0 + 1e-12) {
+        return Err(Error::Codec(format!("eps out of range (0, 1/3]: {eps}")));
+    }
+    Ok(SamplerConfig {
+        p,
+        k: k as usize,
+        q,
+        seed,
+        n: n as usize,
+        delta,
+        eps,
+        rows: rows as usize,
+        width: width as usize,
+        dist,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Hashed-array sketch payload fragment (CountSketch / CountMin share it)
+
+/// Append a hashed-array sketch body: `rows u64, width u64, seed u64,
+/// processed u64, table_len u64, table f64×len` (row-major).
+pub fn put_rhh_table(out: &mut Vec<u8>, params: &SketchParams, processed: u64, table: &[f64]) {
+    wire::put_usize(out, params.rows);
+    wire::put_usize(out, params.width);
+    wire::put_u64(out, params.seed);
+    wire::put_u64(out, processed);
+    wire::put_usize(out, table.len());
+    for &c in table {
+        wire::put_f64(out, c);
+    }
+}
+
+/// Read and validate a hashed-array sketch body: the shape must be
+/// positive, below the 2^32 cap, and agree exactly with the table length
+/// (which [`wire::Reader::seq_len`] has already bounded by the remaining
+/// bytes, so no hostile allocation is possible). Table cells must be
+/// finite — NaN/∞ would poison the `partial_cmp().unwrap()` comparators
+/// in the median/min estimators one call after decode.
+pub fn read_rhh_table(r: &mut wire::Reader<'_>) -> Result<(SketchParams, u64, Vec<f64>)> {
+    const SIZE_CAP: u64 = u32::MAX as u64;
+    let rows = r.u64()?;
+    let width = r.u64()?;
+    let seed = r.u64()?;
+    let processed = r.u64()?;
+    if rows == 0 || width == 0 || rows > SIZE_CAP || width > SIZE_CAP {
+        return Err(Error::Codec(format!(
+            "sketch shape out of range [1, 2^32]: {rows}x{width}"
+        )));
+    }
+    let n = r.seq_len(8)?;
+    if (rows as usize).checked_mul(width as usize) != Some(n) {
+        return Err(Error::Codec(format!(
+            "table length {n} does not match shape {rows}x{width}"
+        )));
+    }
+    let mut table = Vec::with_capacity(n);
+    for _ in 0..n {
+        table.push(r.finite_f64("sketch table cell")?);
+    }
+    Ok((
+        SketchParams { rows: rows as usize, width: width as usize, seed },
+        processed,
+        table,
+    ))
+}
+
+/// Validate a decoded power `p ∈ (0, 2]` — the single source of truth
+/// for every decoder (the transform constructor asserts this range, so
+/// an unchecked hostile `p` would panic one call after decode).
+pub fn validate_p(p: f64, what: &str) -> Result<()> {
+    if !(p > 0.0 && p <= 2.0) {
+        return Err(Error::Codec(format!("{what}: p out of range (0,2]: {p}")));
+    }
+    Ok(())
+}
+
+/// Wire byte of a bottom-k distribution.
+pub fn dist_to_byte(d: BottomKDist) -> u8 {
+    match d {
+        BottomKDist::Exp => 1,
+        BottomKDist::Uniform => 2,
+    }
+}
+
+/// Parse a bottom-k distribution byte.
+pub fn dist_from_byte(b: u8) -> Result<BottomKDist> {
+    match b {
+        1 => Ok(BottomKDist::Exp),
+        2 => Ok(BottomKDist::Uniform),
+        other => Err(Error::Codec(format!("unknown dist byte {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Box<dyn WorSampler>: type-tagged dynamic decode
+
+/// Cheaply read an envelope's type tag and fingerprint (magic + version
+/// validated, no checksum pass) — dispatchers and compatibility checks
+/// peek these, then let the typed decode do the full validation over the
+/// same bytes exactly once.
+pub fn peek_header(bytes: &[u8]) -> Result<(u16, u64)> {
+    let (type_tag, _payload_len, fingerprint, _r) = parse_header(bytes)?;
+    Ok((type_tag, fingerprint))
+}
+
+/// The type tag alone (see [`peek_header`]).
+pub fn peek_type_tag(bytes: &[u8]) -> Result<u16> {
+    Ok(peek_header(bytes)?.0)
+}
+
+/// Decode any WOR sampler behind `Box<dyn WorSampler>` by dispatching on
+/// the envelope's type tag — the inverse of
+/// [`WorSampler::encode_state`]. Unknown or non-sampler tags fail with
+/// [`Error::Codec`].
+pub fn decode_sampler(bytes: &[u8]) -> Result<Box<dyn WorSampler>> {
+    Ok(match peek_type_tag(bytes)? {
+        tag::WORP1 => Box::new(crate::sampler::worp1::OnePassWorp::decode(bytes)?),
+        tag::WORP2 => Box::new(crate::sampler::worp2::TwoPassWorp::decode(bytes)?),
+        tag::TV => Box::new(crate::sampler::tv1pass::TvSampler::decode(bytes)?),
+        tag::WINDOWED_WORP => Box::new(crate::sampler::windowed::WindowedWorp::decode(bytes)?),
+        tag::EXACT_WOR => Box::new(crate::sampler::exact::ExactWor::decode(bytes)?),
+        t => {
+            return Err(Error::Codec(format!(
+                "type tag {t} ({}) is not a WOR sampler",
+                tag_name(t)
+            )))
+        }
+    })
+}
+
+/// `Box<dyn WorSampler>` persists through the type-tagged envelope: the
+/// encode side delegates to the boxed sampler, the decode side dispatches
+/// on the tag. This is what lets the checkpointed pipeline snapshot the
+/// dynamic (CLI/builder) path with zero per-method glue.
+impl Persist for Box<dyn WorSampler> {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        self.encode_state(out);
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        decode_sampler(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_roundtrips_and_validates() {
+        let payload = b"hello payload";
+        let mut buf = Vec::new();
+        write_envelope(tag::COUNTSKETCH, 0xFEED, payload, &mut buf);
+        assert_eq!(buf.len(), HEADER_LEN + payload.len());
+        let env = read_envelope(&buf, Some(tag::COUNTSKETCH)).unwrap();
+        assert_eq!(env.type_tag, tag::COUNTSKETCH);
+        assert_eq!(env.fingerprint, 0xFEED);
+        assert_eq!(env.payload, payload);
+        // any expected-tag mismatch is loud
+        let err = read_envelope(&buf, Some(tag::TOPK)).unwrap_err();
+        assert!(matches!(err, Error::Codec(_)), "{err}");
+    }
+
+    #[test]
+    fn corrupted_envelopes_are_codec_errors() {
+        let mut buf = Vec::new();
+        write_envelope(tag::TOPK, 1, b"abcdef", &mut buf);
+        // magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(read_envelope(&bad, None), Err(Error::Codec(_))));
+        // version
+        let mut bad = buf.clone();
+        bad[4] = 0xFF;
+        assert!(matches!(read_envelope(&bad, None), Err(Error::Codec(_))));
+        // payload bit flip -> checksum
+        let mut bad = buf.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert!(matches!(read_envelope(&bad, None), Err(Error::Codec(_))));
+        // length-field lie
+        let mut bad = buf.clone();
+        bad[8] = bad[8].wrapping_add(1);
+        assert!(matches!(read_envelope(&bad, None), Err(Error::Codec(_))));
+        // truncation at every prefix
+        for cut in 0..buf.len() {
+            assert!(
+                read_envelope(&buf[..cut], None).is_err(),
+                "prefix of {cut} bytes decoded"
+            );
+        }
+    }
+
+    #[test]
+    fn sampler_config_fragment_roundtrips() {
+        let cfg = SamplerConfig::new(1.5, 12)
+            .with_seed(99)
+            .with_domain(4444)
+            .with_sketch_shape(5, 777)
+            .with_priority();
+        let mut out = Vec::new();
+        put_sampler_config(&mut out, &cfg);
+        let mut r = wire::Reader::new(&out);
+        let back = read_sampler_config(&mut r).unwrap();
+        r.finish("cfg").unwrap();
+        assert_eq!(back.p, cfg.p);
+        assert_eq!(back.k, cfg.k);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.n, cfg.n);
+        assert_eq!(back.rows, cfg.rows);
+        assert_eq!(back.width, cfg.width);
+        assert_eq!(back.dist, cfg.dist);
+    }
+
+    #[test]
+    fn sampler_config_fragment_rejects_hostile_values() {
+        let good = SamplerConfig::new(1.0, 4);
+        let mut base = Vec::new();
+        put_sampler_config(&mut base, &good);
+        // p = 3.0 (out of range)
+        let mut bad = base.clone();
+        bad[..8].copy_from_slice(&3.0f64.to_bits().to_le_bytes());
+        assert!(read_sampler_config(&mut wire::Reader::new(&bad)).is_err());
+        // p = NaN
+        let mut bad = base.clone();
+        bad[..8].copy_from_slice(&f64::NAN.to_bits().to_le_bytes());
+        assert!(read_sampler_config(&mut wire::Reader::new(&bad)).is_err());
+        // k = 0
+        let mut bad = base.clone();
+        bad[8..16].copy_from_slice(&0u64.to_le_bytes());
+        assert!(read_sampler_config(&mut wire::Reader::new(&bad)).is_err());
+        // dist byte = 9
+        let mut bad = base.clone();
+        let last = bad.len() - 1;
+        bad[last] = 9;
+        assert!(read_sampler_config(&mut wire::Reader::new(&bad)).is_err());
+    }
+}

@@ -1,0 +1,264 @@
+//! Shared little-endian wire primitives for every on-disk format in the
+//! crate: the persistence envelopes of [`super`], the checkpoint files of
+//! [`crate::pipeline`], and the element records of
+//! [`crate::pipeline::spool::SpoolSource`] all write through these
+//! helpers, so endianness and record layout are defined in exactly one
+//! place.
+//!
+//! Reading goes through [`Reader`], whose every accessor is bounds-checked
+//! and returns [`Error::Codec`] instead of panicking — the decode path
+//! must survive arbitrary untrusted bytes. Sequence lengths are validated
+//! against the bytes actually remaining *before* any allocation
+//! ([`Reader::seq_len`]), so a length-field lie cannot trigger an OOM.
+
+use crate::data::Element;
+use crate::error::{Error, Result};
+
+/// Magic prefix of a persistence envelope (`*.worp` files).
+pub const ENVELOPE_MAGIC: [u8; 4] = *b"WORP";
+
+/// Magic prefix of a pipeline checkpoint file.
+pub const CHECKPOINT_MAGIC: [u8; 4] = *b"WCKP";
+
+/// Current wire-format version. Bump on any layout change; decoders
+/// reject other versions with [`Error::Codec`].
+pub const VERSION: u16 = 1;
+
+/// Append a `u8`.
+#[inline]
+pub fn put_u8(out: &mut Vec<u8>, x: u8) {
+    out.push(x);
+}
+
+/// Append a little-endian `u16`.
+#[inline]
+pub fn put_u16(out: &mut Vec<u8>, x: u16) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append a little-endian `u32`.
+#[inline]
+pub fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append a little-endian `u64`.
+#[inline]
+pub fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append a `usize` as a little-endian `u64`.
+#[inline]
+pub fn put_usize(out: &mut Vec<u8>, x: usize) {
+    put_u64(out, x as u64);
+}
+
+/// Append an `f64` by IEEE-754 bit pattern (sign of zero and NaN payloads
+/// round-trip exactly).
+#[inline]
+pub fn put_f64(out: &mut Vec<u8>, x: f64) {
+    put_u64(out, x.to_bits());
+}
+
+/// The 16-byte on-disk record of one [`Element`] (key then value, both
+/// little-endian) — the spool file format.
+#[inline]
+pub fn element_to_bytes(e: &Element) -> [u8; 16] {
+    let mut b = [0u8; 16];
+    b[..8].copy_from_slice(&e.key.to_le_bytes());
+    b[8..].copy_from_slice(&e.val.to_le_bytes());
+    b
+}
+
+/// Decode a 16-byte element record.
+#[inline]
+pub fn element_from_bytes(b: &[u8; 16]) -> Element {
+    let mut kb = [0u8; 8];
+    let mut vb = [0u8; 8];
+    kb.copy_from_slice(&b[..8]);
+    vb.copy_from_slice(&b[8..]);
+    Element::new(u64::from_le_bytes(kb), f64::from_le_bytes(vb))
+}
+
+/// Bounds-checked cursor over untrusted bytes. Every failure is a typed
+/// [`Error::Codec`]; nothing here panics or allocates from unvalidated
+/// lengths.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Start reading at the front of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(Error::Codec(format!(
+                "truncated input: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Everything not yet consumed (consumes it).
+    pub fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    /// Next `u8`.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Next little-endian `u16`.
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    /// Next little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Next little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// Next `f64` by bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Next `f64`, rejecting NaN/infinity (for configuration scalars that
+    /// later flow into assertions or comparisons).
+    pub fn finite_f64(&mut self, what: &str) -> Result<f64> {
+        let x = self.f64()?;
+        if !x.is_finite() {
+            return Err(Error::Codec(format!("{what} is not finite: {x}")));
+        }
+        Ok(x)
+    }
+
+    /// A sequence length prefix: reads a `u64` and validates
+    /// `len * elem_bytes` against the bytes actually remaining, so the
+    /// caller can allocate `len` slots without trusting the field.
+    pub fn seq_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let need = n.checked_mul(elem_bytes.max(1) as u64);
+        match need {
+            Some(need) if need <= self.remaining() as u64 => Ok(n as usize),
+            _ => Err(Error::Codec(format!(
+                "length field lies: {n} records of {elem_bytes} bytes exceed the {} remaining",
+                self.remaining()
+            ))),
+        }
+    }
+
+    /// Assert the input is fully consumed (trailing garbage is malformed).
+    pub fn finish(self, what: &str) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::Codec(format!(
+                "{} trailing bytes after {what} payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_roundtrip() {
+        let mut v = Vec::new();
+        put_u8(&mut v, 7);
+        put_u16(&mut v, 0xABCD);
+        put_u32(&mut v, 0xDEAD_BEEF);
+        put_u64(&mut v, u64::MAX - 1);
+        put_f64(&mut v, -0.0);
+        put_f64(&mut v, f64::NAN);
+        let mut r = Reader::new(&v);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xABCD);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        // -0.0 round-trips by bits
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.f64().unwrap().is_nan());
+        r.finish("test").unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let v = vec![1u8, 2, 3];
+        let mut r = Reader::new(&v);
+        assert!(r.u64().is_err());
+        let mut r = Reader::new(&v);
+        assert!(r.take(4).is_err());
+        assert_eq!(r.take(3).unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn seq_len_rejects_lies_before_allocating() {
+        let mut v = Vec::new();
+        put_u64(&mut v, u64::MAX); // astronomically large count
+        let mut r = Reader::new(&v);
+        assert!(r.seq_len(8).is_err());
+        // honest length passes
+        let mut v = Vec::new();
+        put_u64(&mut v, 2);
+        put_u64(&mut v, 1);
+        put_u64(&mut v, 2);
+        let mut r = Reader::new(&v);
+        assert_eq!(r.seq_len(8).unwrap(), 2);
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let v = vec![0u8; 4];
+        let mut r = Reader::new(&v);
+        let _ = r.u16().unwrap();
+        assert!(r.finish("x").is_err());
+    }
+
+    #[test]
+    fn element_record_is_16_bytes_and_roundtrips() {
+        let e = Element::new(0xFEED_F00D, -3.25);
+        let b = element_to_bytes(&e);
+        assert_eq!(element_from_bytes(&b), e);
+    }
+
+    #[test]
+    fn finite_f64_rejects_nan_and_inf() {
+        let mut v = Vec::new();
+        put_f64(&mut v, f64::INFINITY);
+        assert!(Reader::new(&v).finite_f64("p").is_err());
+        let mut v = Vec::new();
+        put_f64(&mut v, 1.5);
+        assert_eq!(Reader::new(&v).finite_f64("p").unwrap(), 1.5);
+    }
+}

@@ -229,6 +229,12 @@ pub struct PipelineConfig {
     pub batch: usize,
     /// Bounded-channel capacity (batches) — backpressure window.
     pub channel_cap: usize,
+    /// Checkpoint directory ("" = checkpointing off). When set, sharded
+    /// runs snapshot worker states there and resume from existing
+    /// snapshots (crash recovery).
+    pub checkpoint_dir: String,
+    /// Batches between worker snapshots (only used with `checkpoint_dir`).
+    pub checkpoint_every: u64,
     /// Sketch rows (must be odd for CountSketch median).
     pub rows: usize,
     /// Sketch width override (0 = derive from Ψ calibration).
@@ -264,6 +270,8 @@ impl Default for PipelineConfig {
             workers: 4,
             batch: 4096,
             channel_cap: 16,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 64,
             rows: 31,
             width: 0,
             delta: 0.01,
@@ -294,6 +302,10 @@ impl PipelineConfig {
             workers: doc.usize_or("pipeline", "workers", d.workers),
             batch: doc.usize_or("pipeline", "batch", d.batch),
             channel_cap: doc.usize_or("pipeline", "channel_cap", d.channel_cap),
+            checkpoint_dir: doc.str_or("pipeline", "checkpoint_dir", &d.checkpoint_dir),
+            checkpoint_every: doc
+                .i64_or("pipeline", "checkpoint_every", d.checkpoint_every as i64)
+                .max(0) as u64,
             rows: doc.usize_or("sketch", "rows", d.rows),
             width: doc.usize_or("sketch", "width", d.width),
             delta: doc.f64_or("sketch", "delta", d.delta),
@@ -338,6 +350,11 @@ impl PipelineConfig {
         }
         if self.workers == 0 || self.batch == 0 || self.channel_cap == 0 {
             return Err(Error::Config("workers/batch/channel_cap must be positive".into()));
+        }
+        if !self.checkpoint_dir.is_empty() && self.checkpoint_every == 0 {
+            return Err(Error::Config(
+                "checkpoint_every must be positive when checkpoint_dir is set".into(),
+            ));
         }
         crate::api::builder::Method::parse(&self.method)?;
         match self.dist.as_str() {
@@ -455,6 +472,26 @@ stream_len = 50000
         let mut c = PipelineConfig::default();
         c.backend = "gpu".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_keys_parse_and_validate() {
+        let doc = Document::parse(
+            "[pipeline]\ncheckpoint_dir = \"/tmp/ck\"\ncheckpoint_every = 8\n",
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.checkpoint_dir, "/tmp/ck");
+        assert_eq!(cfg.checkpoint_every, 8);
+        // zero interval with a directory set is rejected
+        let mut c = PipelineConfig::default();
+        c.checkpoint_dir = "x".into();
+        c.checkpoint_every = 0;
+        assert!(c.validate().is_err());
+        // interval irrelevant when checkpointing is off
+        let mut c = PipelineConfig::default();
+        c.checkpoint_every = 0;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -12,13 +12,13 @@
 //! - [`Coordinator::one_pass`] / [`Coordinator::two_pass`] are the
 //!   statically-typed conveniences built on the same primitives.
 
-use crate::api::{Finalize, Mergeable, MultiPass, WorSampler};
+use crate::api::{Finalize, Mergeable, MultiPass, Persist, WorSampler};
 use crate::config::PipelineConfig;
 use crate::data::Element;
 use crate::error::{Error, Result};
 use crate::pipeline::merge::{merge_all, tree_merge};
 use crate::pipeline::metrics::Metrics;
-use crate::pipeline::{run_sharded, PipelineOpts};
+use crate::pipeline::{run_sharded, run_sharded_checkpointed, CheckpointPolicy, PipelineOpts};
 use crate::sampler::worp1::OnePassWorp;
 use crate::sampler::worp2::TwoPassWorp;
 use crate::sampler::{Sample, SamplerConfig};
@@ -58,10 +58,12 @@ where
 pub struct Coordinator {
     sampler_cfg: SamplerConfig,
     opts: PipelineOpts,
+    checkpoint: Option<CheckpointPolicy>,
 }
 
 impl Coordinator {
-    /// From the launcher config.
+    /// From the launcher config (including the checkpoint policy when
+    /// `checkpoint_dir` is set).
     pub fn from_config(cfg: &PipelineConfig) -> Result<Self> {
         cfg.validate()?;
         let mut scfg = SamplerConfig::new(cfg.p, cfg.k)
@@ -76,12 +78,34 @@ impl Coordinator {
             scfg.rows = cfg.rows;
         }
         let opts = PipelineOpts::new(cfg.workers, cfg.batch, cfg.channel_cap)?;
-        Ok(Coordinator { sampler_cfg: scfg, opts })
+        let mut c = Coordinator { sampler_cfg: scfg, opts, checkpoint: None };
+        if !cfg.checkpoint_dir.is_empty() {
+            c.checkpoint = Some(CheckpointPolicy::new(
+                cfg.checkpoint_every,
+                cfg.checkpoint_dir.clone(),
+            )?);
+        }
+        Ok(c)
     }
 
     /// Direct construction.
     pub fn new(sampler_cfg: SamplerConfig, opts: PipelineOpts) -> Self {
-        Coordinator { sampler_cfg, opts }
+        Coordinator { sampler_cfg, opts, checkpoint: None }
+    }
+
+    /// Enable checkpointing: every pass of [`Coordinator::run_dyn`] (and
+    /// [`Coordinator::run_summary_checkpointed`]) snapshots shard states
+    /// under the policy's directory and resumes from whatever snapshots
+    /// already exist there.
+    ///
+    /// Only those two entry points honor the policy — the statically
+    /// typed conveniences ([`Coordinator::run_summary`],
+    /// [`Coordinator::one_pass`], [`Coordinator::two_pass`]) and the XLA
+    /// path run without snapshots; use `run_summary_checkpointed` where
+    /// typed crash recovery is needed.
+    pub fn with_checkpoints(mut self, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = Some(policy);
+        self
     }
 
     /// Sampler configuration in use.
@@ -99,6 +123,25 @@ impl Coordinator {
         I: IntoIterator<Item = Element>,
     {
         let (states, metrics) = run_sharded(stream, self.opts, move |_| proto.clone())?;
+        let merged = merge_all(states, &metrics)?
+            .ok_or_else(|| Error::Pipeline("no workers".into()))?;
+        Ok((merged, metrics))
+    }
+
+    /// [`Coordinator::run_summary`] with crash recovery for statically
+    /// typed summaries: shard states snapshot to (and resume from) the
+    /// coordinator's checkpoint directory. Falls back to the plain path
+    /// when no policy is configured.
+    pub fn run_summary_checkpointed<S, I>(&self, stream: I, proto: S) -> Result<(S, Arc<Metrics>)>
+    where
+        S: Mergeable + Persist + Clone + Send + 'static,
+        I: IntoIterator<Item = Element>,
+    {
+        let Some(policy) = &self.checkpoint else {
+            return self.run_summary(stream, proto);
+        };
+        let (states, metrics) =
+            run_sharded_checkpointed(stream, self.opts, policy, move |_| proto.clone())?;
         let merged = merge_all(states, &metrics)?
             .ok_or_else(|| Error::Pipeline("no workers".into()))?;
         Ok((merged, metrics))
@@ -129,7 +172,19 @@ impl Coordinator {
                 current.advance()?;
             }
             let template = current;
-            let (states, m) = run_sharded(source.stream(), opts, move |_| template.clone())?;
+            // with a checkpoint policy, every pass snapshots (and
+            // resumes) its shard states in its own pass-<i>/ subdirectory
+            // — the Box<dyn WorSampler> persists through the codec's
+            // type-tagged envelope
+            let (states, m) = match &self.checkpoint {
+                Some(policy) => run_sharded_checkpointed(
+                    source.stream(),
+                    opts,
+                    &policy.for_pass(pass),
+                    move |_| template.clone(),
+                )?,
+                None => run_sharded(source.stream(), opts, move |_| template.clone())?,
+            };
             current = tree_merge(states, &m, |a, b| a.merge_dyn(&**b))?
                 .ok_or_else(|| Error::Pipeline("no workers".into()))?;
             metrics = m;

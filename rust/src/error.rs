@@ -28,6 +28,11 @@ pub enum Error {
     /// Pipeline orchestration errors (worker panic, channel close, ...).
     Pipeline(String),
 
+    /// Malformed bytes fed to the persistence codec (bad magic, version,
+    /// truncation, checksum/fingerprint mismatch, length-field lies).
+    /// Decoding untrusted input maps every failure here — it never panics.
+    Codec(String),
+
     /// I/O errors.
     Io(std::io::Error),
 }
@@ -41,6 +46,7 @@ impl fmt::Display for Error {
             Error::RhhFailure(m) => write!(f, "rHH failure: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -82,6 +88,8 @@ mod tests {
         assert!(e.to_string().contains("rHH"));
         let e = Error::State("pass I not finished".into());
         assert!(e.to_string().contains("invalid state"));
+        let e = Error::Codec("bad magic".into());
+        assert!(e.to_string().contains("codec error: bad magic"));
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! | [`api::Mergeable`] | fingerprint-checked `merge` (incompatible seeds/shapes fail loudly) |
 //! | [`api::Finalize`] | `finalize() -> Output` (a [`sampler::Sample`] for WOR samplers) |
 //! | [`api::MultiPass`] | `passes` / `pass` / `advance` — pass handoff as a state machine |
+//! | [`api::Persist`] | versioned binary `encode_into` / `decode` (the [`codec`] wire format) |
 //! | [`api::WorSampler`] | object-safe bundle of the above for `Box<dyn WorSampler>` |
 //!
 //! ## Quick start
@@ -64,6 +65,7 @@
 
 pub mod api;
 pub mod cli;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -79,5 +81,5 @@ pub mod transform;
 pub mod util;
 
 pub use api::builder::{Method, Worp};
-pub use api::{Finalize, Mergeable, MultiPass, StreamSummary, WorSampler};
+pub use api::{Finalize, Mergeable, MultiPass, Persist, StreamSummary, WorSampler};
 pub use error::{Error, Result};

@@ -12,6 +12,8 @@ pub struct Metrics {
     stalls: AtomicU64,
     merges: AtomicU64,
     buffer_reuses: AtomicU64,
+    snapshots: AtomicU64,
+    restores: AtomicU64,
     started: Instant,
 }
 
@@ -23,6 +25,8 @@ impl Default for Metrics {
             stalls: AtomicU64::new(0),
             merges: AtomicU64::new(0),
             buffer_reuses: AtomicU64::new(0),
+            snapshots: AtomicU64::new(0),
+            restores: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -76,6 +80,26 @@ impl Metrics {
         self.buffer_reuses.load(Ordering::Relaxed)
     }
 
+    /// Record a shard-state snapshot written to the checkpoint directory.
+    pub fn note_snapshot(&self) {
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a shard state restored from a checkpoint at startup.
+    pub fn note_restore(&self) {
+        self.restores.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Checkpoint snapshots written by workers.
+    pub fn snapshots(&self) -> u64 {
+        self.snapshots.load(Ordering::Relaxed)
+    }
+
+    /// Shard states restored from checkpoints.
+    pub fn restores(&self) -> u64 {
+        self.restores.load(Ordering::Relaxed)
+    }
+
     /// Wall-clock since construction.
     pub fn elapsed(&self) -> std::time::Duration {
         self.started.elapsed()
@@ -94,12 +118,14 @@ impl Metrics {
     /// One-line report.
     pub fn report(&self) -> String {
         format!(
-            "elements={} batches={} stalls={} merges={} buffer_reuses={} elapsed={:.3}s throughput={:.2}M/s",
+            "elements={} batches={} stalls={} merges={} buffer_reuses={} snapshots={} restores={} elapsed={:.3}s throughput={:.2}M/s",
             self.elements(),
             self.batches(),
             self.stalls(),
             self.merges(),
             self.buffer_reuses(),
+            self.snapshots(),
+            self.restores(),
             self.elapsed().as_secs_f64(),
             self.throughput() / 1e6
         )
@@ -118,13 +144,19 @@ mod tests {
         m.note_stall();
         m.note_merge();
         m.note_buffer_reuse();
+        m.note_snapshot();
+        m.note_snapshot();
+        m.note_restore();
         assert_eq!(m.elements(), 15);
         assert_eq!(m.batches(), 2);
         assert_eq!(m.stalls(), 1);
         assert_eq!(m.merges(), 1);
         assert_eq!(m.buffer_reuses(), 1);
+        assert_eq!(m.snapshots(), 2);
+        assert_eq!(m.restores(), 1);
         assert!(m.report().contains("elements=15"));
         assert!(m.report().contains("buffer_reuses=1"));
+        assert!(m.report().contains("snapshots=2"));
     }
 
     #[test]

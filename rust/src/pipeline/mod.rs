@@ -19,11 +19,13 @@ pub mod metrics;
 pub mod shard;
 pub mod spool;
 
-use crate::api::StreamSummary;
+use crate::api::{Persist, StreamSummary};
+use crate::codec::{self, wire};
 use crate::data::Element;
 use crate::error::{Error, Result};
 use metrics::Metrics;
 use shard::Router;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
@@ -191,6 +193,355 @@ where
             h.join()
                 .map_err(|_| Error::Pipeline("worker panicked".into()))?,
         );
+    }
+    Ok((states, metrics))
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointing
+
+/// When and where a sharded run snapshots its shard states: every
+/// `every_batches` micro-batches, each worker writes its summary (via
+/// [`Persist`]) plus its element cursor to `dir/shard-<w>.worp`,
+/// atomically (temp file + rename). A later
+/// [`run_sharded_checkpointed`] over the same replayable stream resumes
+/// from those files: restored shards skip exactly the elements their
+/// snapshot already covers, so the finished run is bit-identical to an
+/// uninterrupted one (worker batch boundaries realign because snapshots
+/// are taken on batch edges).
+///
+/// Guardrails on resume: the file's topology stamp (shard / workers /
+/// batch) and its summary fingerprint must match the current run's
+/// prototype — stale snapshots from a different seed, shape, method or
+/// pass fail with [`Error::Incompatible`] instead of silently mixing
+/// runs. What the fingerprint cannot cover is the *stream itself*:
+/// resuming over a different input stream with an identical
+/// configuration is undetectable, so keep one snapshot directory per
+/// (config, stream) pair.
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    every_batches: u64,
+    dir: PathBuf,
+}
+
+impl CheckpointPolicy {
+    /// Snapshot every `every_batches` worker batches into `dir`.
+    pub fn new(every_batches: u64, dir: impl Into<PathBuf>) -> Result<Self> {
+        if every_batches == 0 {
+            return Err(Error::Pipeline(
+                "checkpoint interval must be positive (batches)".into(),
+            ));
+        }
+        Ok(CheckpointPolicy { every_batches, dir: dir.into() })
+    }
+
+    /// Batches between snapshots.
+    pub fn every_batches(&self) -> u64 {
+        self.every_batches
+    }
+
+    /// Snapshot directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshot file of one shard.
+    pub fn shard_path(&self, shard: usize) -> PathBuf {
+        self.dir.join(format!("shard-{shard}.worp"))
+    }
+
+    /// A per-pass sub-policy (multi-pass drivers keep each pass's
+    /// snapshots in their own subdirectory so they cannot collide).
+    pub fn for_pass(&self, pass: usize) -> CheckpointPolicy {
+        CheckpointPolicy {
+            every_batches: self.every_batches,
+            dir: self.dir.join(format!("pass-{pass}")),
+        }
+    }
+}
+
+/// Checkpoint-file topology stamp: shard index, worker count and batch
+/// size. Resume validates all three — a snapshot taken under a different
+/// topology routes (or batches) differently and must not be continued.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct CheckpointMeta {
+    shard: u16,
+    workers: u16,
+    batch: u32,
+}
+
+/// Byte length of the checkpoint-file header fields covered by its
+/// checksum (magic, version, topology stamp, element cursor).
+const CHECKPOINT_HEADER_LEN: usize = 22;
+
+/// Write `dir/shard-<w>.worp` atomically: `WCKP` magic, version, the
+/// topology stamp, the shard's element cursor, a checksum over those
+/// header bytes (the summary envelope carries its own — so *every* byte
+/// of the file is covered by one of the two), then the summary's
+/// [`Persist`] envelope.
+fn write_checkpoint<S: Persist>(
+    path: &Path,
+    meta: CheckpointMeta,
+    elements: u64,
+    state: &S,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&wire::CHECKPOINT_MAGIC);
+    wire::put_u16(&mut buf, wire::VERSION);
+    wire::put_u16(&mut buf, meta.shard);
+    wire::put_u16(&mut buf, meta.workers);
+    wire::put_u32(&mut buf, meta.batch);
+    wire::put_u64(&mut buf, elements);
+    debug_assert_eq!(buf.len(), CHECKPOINT_HEADER_LEN);
+    let checksum =
+        crate::util::hashing::hash_bytes(codec::CHECKSUM_SEED, &buf[..CHECKPOINT_HEADER_LEN]);
+    wire::put_u64(&mut buf, checksum);
+    state.encode_into(&mut buf);
+    let tmp = path.with_extension("worp.tmp");
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        // flush to stable storage *before* the rename becomes visible —
+        // otherwise a power loss can leave a renamed-but-truncated
+        // snapshot that wedges every later resume
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a shard snapshot, or `Ok(None)` when the file does not exist.
+/// Returns the state, its element cursor, and the envelope's type tag +
+/// fingerprint (for the caller's compatibility check against the current
+/// prototype). Corrupt bytes surface as [`Error::Codec`]; a topology
+/// mismatch as [`Error::Incompatible`] — never a silent wrong resume.
+fn load_checkpoint<S: Persist>(
+    path: &Path,
+    meta: CheckpointMeta,
+) -> Result<Option<(S, u64, (u16, u64))>> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let mut r = wire::Reader::new(&bytes);
+    let magic = r.take(4)?;
+    if magic != wire::CHECKPOINT_MAGIC {
+        return Err(Error::Codec(format!(
+            "bad checkpoint magic {magic:02x?} in {}",
+            path.display()
+        )));
+    }
+    let version = r.u16()?;
+    if version != wire::VERSION {
+        return Err(Error::Codec(format!(
+            "unsupported checkpoint version {version} in {}",
+            path.display()
+        )));
+    }
+    let found = CheckpointMeta { shard: r.u16()?, workers: r.u16()?, batch: r.u32()? };
+    let elements = r.u64()?;
+    let checksum = r.u64()?;
+    if crate::util::hashing::hash_bytes(codec::CHECKSUM_SEED, &bytes[..CHECKPOINT_HEADER_LEN])
+        != checksum
+    {
+        return Err(Error::Codec(format!(
+            "checkpoint header checksum mismatch in {} — the topology stamp or element \
+             cursor was corrupted",
+            path.display()
+        )));
+    }
+    if found != meta {
+        return Err(Error::Incompatible(format!(
+            "checkpoint {} was taken under a different topology \
+             (shard {}/{} batch {}, this run is shard {}/{} batch {}) — \
+             remove the snapshot directory or rerun with the original topology",
+            path.display(),
+            found.shard,
+            found.workers,
+            found.batch,
+            meta.shard,
+            meta.workers,
+            meta.batch
+        )));
+    }
+    let envelope = r.rest();
+    let state = S::decode(envelope)?;
+    let header = codec::peek_header(envelope)?;
+    Ok(Some((state, elements, header)))
+}
+
+/// [`run_sharded`] with crash recovery: workers snapshot their shard
+/// state to `policy.dir()` every `policy.every_batches()` batches, and a
+/// rerun over the same (replayable) stream resumes from whatever
+/// snapshots exist — restored shards skip the elements already covered,
+/// the rest of the stream flows as usual, and the result is
+/// bit-identical to an uninterrupted run. [`Metrics::snapshots`] /
+/// [`Metrics::restores`] count both sides.
+pub fn run_sharded_checkpointed<S, F, I>(
+    stream: I,
+    opts: PipelineOpts,
+    policy: &CheckpointPolicy,
+    make: F,
+) -> Result<(Vec<S>, Arc<Metrics>)>
+where
+    S: ShardSink + Persist,
+    F: Fn(usize) -> S,
+    I: IntoIterator<Item = Element>,
+{
+    if opts.workers > u16::MAX as usize || opts.batch > u32::MAX as usize {
+        return Err(Error::Pipeline(
+            "checkpointing supports at most 2^16 workers and 2^32-element batches".into(),
+        ));
+    }
+    std::fs::create_dir_all(policy.dir())?;
+    let metrics = Arc::new(Metrics::default());
+    let router = Router::new(opts.workers);
+    let (pool_tx, pool_rx) = channel::<Vec<Element>>();
+
+    let mut skips: Vec<u64> = Vec::with_capacity(opts.workers);
+    let mut senders: Vec<SyncSender<Vec<Element>>> = Vec::with_capacity(opts.workers);
+    let mut handles = Vec::with_capacity(opts.workers);
+    for w in 0..opts.workers {
+        let meta = CheckpointMeta {
+            shard: w as u16,
+            workers: opts.workers as u16,
+            batch: opts.batch as u32,
+        };
+        let path = policy.shard_path(w);
+        let proto = make(w);
+        let (mut state, done) = match load_checkpoint::<S>(&path, meta)? {
+            Some((s, done, (tag, fp))) => {
+                // a stale snapshot (different seed/config/method/pass)
+                // must not silently resume into this run: the restored
+                // envelope's type tag + fingerprint have to match what
+                // the current prototype would persist as. The encode is
+                // deliberately per-shard — `make(w)` may construct
+                // shard-dependent prototypes, so each snapshot is checked
+                // against *its own* shard's prototype (cost is only paid
+                // on restore)
+                let mut pb = Vec::new();
+                proto.encode_into(&mut pb);
+                let (ptag, pfp) = codec::peek_header(&pb)?;
+                if (tag, fp) != (ptag, pfp) {
+                    return Err(Error::Incompatible(format!(
+                        "checkpoint {} holds a {} summary with fingerprint {fp:#018x}, but \
+                         this run's configuration expects {} with {pfp:#018x} — stale \
+                         snapshot directory? remove it or rerun with the original config",
+                        path.display(),
+                        codec::tag_name(tag),
+                        codec::tag_name(ptag)
+                    )));
+                }
+                metrics.note_restore();
+                (s, done)
+            }
+            None => (proto, 0),
+        };
+        skips.push(done);
+        let (tx, rx): (SyncSender<Vec<Element>>, Receiver<Vec<Element>>) =
+            sync_channel(opts.channel_cap);
+        senders.push(tx);
+        let m = Arc::clone(&metrics);
+        let pool = pool_tx.clone();
+        let every = policy.every_batches();
+        handles.push(std::thread::spawn(move || -> Result<S> {
+            let mut elements = done;
+            let mut batches = 0u64;
+            for mut batch in rx {
+                state.process_batch(&batch);
+                m.note_batch(batch.len() as u64);
+                elements += batch.len() as u64;
+                batches += 1;
+                // only snapshot on *full*-batch edges: a partial batch is
+                // an end-of-stream flush, and a cursor that is not a
+                // multiple of the batch size would misalign the resumed
+                // run's batch boundaries against an uninterrupted one
+                // (batch-boundary-sensitive summaries like worp1 would
+                // then diverge from the bit-identical guarantee)
+                if batches % every == 0 && batch.len() == meta.batch as usize {
+                    write_checkpoint(&path, meta, elements, &state)?;
+                    m.note_snapshot();
+                }
+                batch.clear();
+                let _ = pool.send(batch);
+            }
+            Ok(state)
+        }));
+    }
+    drop(pool_tx);
+
+    let mut buffers: Vec<Vec<Element>> = (0..opts.workers)
+        .map(|_| Vec::with_capacity(opts.batch))
+        .collect();
+    // a send failure usually means a worker bailed (e.g. a snapshot-write
+    // I/O error closed its channel); don't return the generic channel
+    // error — fall through to the join below so the worker's *real*
+    // error (disk full, permission, ...) is what surfaces
+    let mut route_err: Option<Error> = None;
+    for e in stream {
+        let w = router.route(e.key);
+        // elements a restored snapshot already covers are skipped; the
+        // first fresh element lands on the same batch boundary the
+        // interrupted run used (snapshots are taken on full-batch edges)
+        if skips[w] > 0 {
+            skips[w] -= 1;
+            continue;
+        }
+        buffers[w].push(e);
+        if buffers[w].len() == opts.batch {
+            let fresh = recycled_buffer(&pool_rx, opts.batch, &metrics);
+            let full = std::mem::replace(&mut buffers[w], fresh);
+            if let Err(e) = send_with_backpressure(&senders[w], full, &metrics) {
+                route_err = Some(e);
+                break;
+            }
+        }
+    }
+    if route_err.is_none() {
+        for (w, buf) in buffers.into_iter().enumerate() {
+            if !buf.is_empty() {
+                if let Err(e) = send_with_backpressure(&senders[w], buf, &metrics) {
+                    route_err = Some(e);
+                    break;
+                }
+            }
+        }
+    }
+    // the stream ran dry while a restored shard was still owed skipped
+    // elements: the stream is shorter than (so different from) the one
+    // the snapshot was taken over — fail loudly like every other stale
+    // resume instead of returning a state the given stream never produced
+    if route_err.is_none() {
+        if let Some((w, &owed)) = skips.iter().enumerate().find(|(_, &s)| s > 0) {
+            route_err = Some(Error::Incompatible(format!(
+                "stream ended while shard {w} still owed {owed} snapshot-covered elements — \
+                 the resumed stream is shorter than the one the checkpoint was taken over; \
+                 remove the snapshot directory or supply the original stream"
+            )));
+        }
+    }
+    drop(senders);
+
+    let mut states = Vec::with_capacity(opts.workers);
+    let mut worker_err: Option<Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(s)) => states.push(s),
+            Ok(Err(e)) => {
+                worker_err.get_or_insert(e);
+            }
+            Err(_) => {
+                worker_err.get_or_insert(Error::Pipeline("worker panicked".into()));
+            }
+        }
+    }
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
+    if let Some(e) = route_err {
+        return Err(e);
     }
     Ok((states, metrics))
 }

@@ -4,12 +4,21 @@
 //! (16 bytes per element) on the first pass and replays from disk on the
 //! second — constant memory, sequential I/O.
 
+use crate::codec::wire;
 use crate::coordinator::StreamSource;
 use crate::data::Element;
 use crate::error::Result;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide spool counter: two spools created back-to-back (or on
+/// parallel threads) get distinct names. The old scheme used a
+/// `SystemTime` nanosecond stamp, which collides whenever the clock's
+/// granularity is coarser than the spool rate — two spools in the same
+/// tick silently shared (and then double-deleted) one file.
+static SPOOL_COUNTER: AtomicU64 = AtomicU64::new(0);
 
 /// A stream spooled to a binary file.
 pub struct SpoolSource {
@@ -21,7 +30,9 @@ pub struct SpoolSource {
 
 impl SpoolSource {
     /// Spool an element stream into `dir` (created if needed); returns the
-    /// replayable source.
+    /// replayable source. Records are the shared 16-byte element layout of
+    /// [`wire::element_to_bytes`] — the same endianness helpers the
+    /// persistence codec uses.
     pub fn create<I: IntoIterator<Item = Element>>(
         dir: &std::path::Path,
         stream: I,
@@ -30,16 +41,12 @@ impl SpoolSource {
         let path = dir.join(format!(
             "worp-spool-{}-{}.bin",
             std::process::id(),
-            std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .map(|d| d.as_nanos())
-                .unwrap_or(0)
+            SPOOL_COUNTER.fetch_add(1, Ordering::Relaxed)
         ));
         let mut w = BufWriter::new(File::create(&path)?);
         let mut len = 0u64;
         for e in stream {
-            w.write_all(&e.key.to_le_bytes())?;
-            w.write_all(&e.val.to_le_bytes())?;
+            w.write_all(&wire::element_to_bytes(&e))?;
             len += 1;
         }
         w.flush()?;
@@ -88,12 +95,10 @@ impl Iterator for SpoolIter {
         if self.remaining == 0 {
             return None;
         }
-        let mut kb = [0u8; 8];
-        let mut vb = [0u8; 8];
-        self.reader.read_exact(&mut kb).ok()?;
-        self.reader.read_exact(&mut vb).ok()?;
+        let mut rec = [0u8; 16];
+        self.reader.read_exact(&mut rec).ok()?;
         self.remaining -= 1;
-        Some(Element::new(u64::from_le_bytes(kb), f64::from_le_bytes(vb)))
+        Some(wire::element_from_bytes(&rec))
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
@@ -156,6 +161,25 @@ mod tests {
         let (a, _) = c.two_pass(&spool).unwrap();
         let (b, _) = c.two_pass(&VecSource(elems)).unwrap();
         assert_eq!(a.keys(), b.keys());
+    }
+
+    #[test]
+    fn back_to_back_spools_never_collide() {
+        // the old SystemTime naming collided within one clock tick; the
+        // counter naming must hand every spool a distinct live file
+        let spools: Vec<SpoolSource> = (0..8)
+            .map(|i| {
+                SpoolSource::create(&tmp(), vec![Element::new(i, i as f64)]).unwrap()
+            })
+            .collect();
+        let mut paths: Vec<PathBuf> = spools.iter().map(|s| s.path().to_path_buf()).collect();
+        paths.sort();
+        paths.dedup();
+        assert_eq!(paths.len(), 8, "spool paths collided");
+        for (i, s) in spools.iter().enumerate() {
+            let replay: Vec<Element> = s.stream().collect();
+            assert_eq!(replay, vec![Element::new(i as u64, i as f64)]);
+        }
     }
 
     #[test]

@@ -176,6 +176,65 @@ impl api::WorSampler for ExactWor {
     fn name(&self) -> &'static str {
         "exact"
     }
+
+    fn encode_state(&self, out: &mut Vec<u8>) {
+        crate::api::Persist::encode_into(self, out)
+    }
+}
+
+/// Wire payload (canonical — frequencies sorted by key): the shared
+/// [`SamplerConfig`] fragment, `processed u64, n u64,
+/// n × (key u64, freq f64)`. The transform is hash-defined by the config
+/// and rebuilt on decode.
+impl crate::api::Persist for ExactWor {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::with_capacity(80 + 16 * self.freqs.len());
+        crate::codec::put_sampler_config(&mut p, &self.cfg);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        let mut keys: Vec<u64> = self.freqs.keys().copied().collect();
+        keys.sort_unstable();
+        crate::codec::wire::put_usize(&mut p, keys.len());
+        for k in keys {
+            crate::codec::wire::put_u64(&mut p, k);
+            crate::codec::wire::put_f64(&mut p, self.freqs[&k]);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::EXACT_WOR,
+            crate::api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::EXACT_WOR))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let cfg = crate::codec::read_sampler_config(&mut r)?;
+        let processed = r.u64()?;
+        let n = r.seq_len(16)?;
+        let mut freqs = HashMap::with_capacity(n);
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let key = r.u64()?;
+            if prev.is_some_and(|p| p >= key) {
+                return Err(crate::error::Error::Codec(
+                    "ExactWor frequencies are not sorted by strictly increasing key".into(),
+                ));
+            }
+            prev = Some(key);
+            // non-finite frequencies would poison the sample-sort
+            // comparators (which unwrap partial_cmp)
+            freqs.insert(key, r.finite_f64("ExactWor frequency")?);
+        }
+        r.finish("exact")?;
+        let transform = cfg.transform();
+        let s = ExactWor { cfg, transform, freqs, processed };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            crate::api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
 }
 
 #[cfg(test)]

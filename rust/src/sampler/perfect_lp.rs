@@ -332,6 +332,147 @@ impl api::Finalize for PrecisionSampler {
     }
 }
 
+/// Wire payload: `p f64, seed u64, processed u64, rng u64×4` (the
+/// private draw state — a restored sampler continues the same random
+/// sequence), then the exact frequency map (canonical — `BTreeMap`
+/// iteration is already key-sorted) as `n u64, n × (key u64, freq f64)`.
+impl crate::api::Persist for OracleSampler {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::with_capacity(64 + 16 * self.freqs.len());
+        crate::codec::wire::put_f64(&mut p, self.p);
+        crate::codec::wire::put_u64(&mut p, self.seed);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        for s in self.rng.state() {
+            crate::codec::wire::put_u64(&mut p, s);
+        }
+        crate::codec::wire::put_usize(&mut p, self.freqs.len());
+        for (&k, &f) in &self.freqs {
+            crate::codec::wire::put_u64(&mut p, k);
+            crate::codec::wire::put_f64(&mut p, f);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::ORACLE_LP,
+            api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::ORACLE_LP))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let p = r.finite_f64("oracle p")?;
+        crate::codec::validate_p(p, "oracle-lp")?;
+        let seed = r.u64()?;
+        let processed = r.u64()?;
+        let rng = Rng::from_state([r.u64()?, r.u64()?, r.u64()?, r.u64()?]);
+        let n = r.seq_len(16)?;
+        let mut freqs = BTreeMap::new();
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let key = r.u64()?;
+            if prev.is_some_and(|q| q >= key) {
+                return Err(Error::Codec(
+                    "oracle frequencies are not sorted by strictly increasing key".into(),
+                ));
+            }
+            prev = Some(key);
+            // non-finite frequencies would poison later comparators
+            freqs.insert(key, r.finite_f64("oracle frequency")?);
+        }
+        r.finish("oracle-lp")?;
+        let s = OracleSampler { p, seed, freqs, rng, processed };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
+/// Wire payload: `p f64, seed u64, cand_cap u64, processed u64`, the
+/// privately-scaled CountSketch as a nested envelope, then the candidate
+/// key set (canonical — sorted) as `n u64, n × key u64`.
+impl crate::api::Persist for PrecisionSampler {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        crate::codec::wire::put_f64(&mut p, self.p);
+        crate::codec::wire::put_u64(&mut p, self.seed);
+        crate::codec::wire::put_usize(&mut p, self.cand_cap);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        crate::codec::put_nested(&mut p, &self.sketch);
+        let mut keys: Vec<u64> = self.candidates.keys().copied().collect();
+        keys.sort_unstable();
+        crate::codec::wire::put_usize(&mut p, keys.len());
+        for k in keys {
+            crate::codec::wire::put_u64(&mut p, k);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::PRECISION_LP,
+            api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::PRECISION_LP))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let p = r.finite_f64("precision p")?;
+        crate::codec::validate_p(p, "precision-lp")?;
+        let seed = r.u64()?;
+        let cand_cap = r.u64()?;
+        if cand_cap > u32::MAX as u64 {
+            return Err(Error::Codec(format!(
+                "precision candidate capacity out of range: {cand_cap}"
+            )));
+        }
+        let processed = r.u64()?;
+        let sketch: CountSketch = crate::codec::read_nested(&mut r)?;
+        // the constructor invariant is cand_cap == 4 × sketch width; a
+        // payload claiming otherwise describes no constructible sampler
+        if cand_cap != 4 * sketch.params().width as u64 {
+            return Err(Error::Codec(format!(
+                "precision candidate capacity {cand_cap} does not match 4 x sketch width {}",
+                sketch.params().width
+            )));
+        }
+        let n = r.seq_len(8)?;
+        if n as u64 > 2 * cand_cap {
+            return Err(Error::Codec(format!(
+                "precision candidate set of {n} exceeds twice the capacity {cand_cap}"
+            )));
+        }
+        let mut candidates = HashMap::with_capacity(n);
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let key = r.u64()?;
+            if prev.is_some_and(|q| q >= key) {
+                return Err(Error::Codec(
+                    "precision candidates are not sorted by strictly increasing key".into(),
+                ));
+            }
+            prev = Some(key);
+            candidates.insert(key, ());
+        }
+        r.finish("precision-lp")?;
+        let s = PrecisionSampler {
+            p,
+            seed,
+            sketch,
+            candidates,
+            cand_cap: cand_cap as usize,
+            processed,
+            tbuf: Vec::new(),
+        };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

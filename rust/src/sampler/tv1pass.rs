@@ -354,6 +354,132 @@ impl WorSampler for TvSampler {
     fn name(&self) -> &'static str {
         "tv"
     }
+
+    fn encode_state(&self, out: &mut Vec<u8>) {
+        crate::api::Persist::encode_into(self, out)
+    }
+}
+
+/// Wire payload: the full [`TvSamplerConfig`] (`p f64, k u64, r u64,
+/// seed u64, kind u8 (1 = Oracle, 2 = Precision), rhh_rows u64,
+/// rhh_width u64, inner_rows u64, inner_width u64`), `processed u64`,
+/// the subtraction rHH sketch as a nested envelope, then the `r` single
+/// samplers in order, each a nested envelope of the kind's type.
+impl crate::api::Persist for TvSampler {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        crate::codec::wire::put_f64(&mut p, self.cfg.p);
+        crate::codec::wire::put_usize(&mut p, self.cfg.k);
+        crate::codec::wire::put_usize(&mut p, self.cfg.r);
+        crate::codec::wire::put_u64(&mut p, self.cfg.seed);
+        crate::codec::wire::put_u8(
+            &mut p,
+            match self.cfg.kind {
+                SamplerKind::Oracle => 1,
+                SamplerKind::Precision => 2,
+            },
+        );
+        crate::codec::wire::put_usize(&mut p, self.cfg.rhh_rows);
+        crate::codec::wire::put_usize(&mut p, self.cfg.rhh_width);
+        crate::codec::wire::put_usize(&mut p, self.cfg.inner_rows);
+        crate::codec::wire::put_usize(&mut p, self.cfg.inner_width);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        crate::codec::put_nested(&mut p, &self.rhh);
+        match &self.samplers {
+            Samplers::Oracle(v) => {
+                crate::codec::wire::put_usize(&mut p, v.len());
+                for s in v {
+                    crate::codec::put_nested(&mut p, s);
+                }
+            }
+            Samplers::Precision(v) => {
+                crate::codec::wire::put_usize(&mut p, v.len());
+                for s in v {
+                    crate::codec::put_nested(&mut p, s);
+                }
+            }
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::TV,
+            api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        const SIZE_CAP: u64 = u32::MAX as u64;
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::TV))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let p = r.finite_f64("tv p")?;
+        crate::codec::validate_p(p, "tv")?;
+        let k = r.u64()?;
+        let count = r.u64()?;
+        let seed = r.u64()?;
+        let kind = match r.u8()? {
+            1 => SamplerKind::Oracle,
+            2 => SamplerKind::Precision,
+            v => return Err(Error::Codec(format!("unknown tv substrate byte {v}"))),
+        };
+        let rhh_rows = r.u64()?;
+        let rhh_width = r.u64()?;
+        let inner_rows = r.u64()?;
+        let inner_width = r.u64()?;
+        if k == 0
+            || k > SIZE_CAP
+            || count > SIZE_CAP
+            || rhh_rows > SIZE_CAP
+            || rhh_width > SIZE_CAP
+            || inner_rows > SIZE_CAP
+            || inner_width > SIZE_CAP
+        {
+            return Err(Error::Codec(format!(
+                "tv config sizes out of range: k={k} r={count}"
+            )));
+        }
+        let processed = r.u64()?;
+        let rhh: CountSketch = crate::codec::read_nested(&mut r)?;
+        let n = r.seq_len(8)?;
+        if n as u64 != count {
+            return Err(Error::Codec(format!(
+                "tv sampler count {n} does not match configured r={count}"
+            )));
+        }
+        let samplers = match kind {
+            SamplerKind::Oracle => {
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(crate::codec::read_nested::<OracleSampler>(&mut r)?);
+                }
+                Samplers::Oracle(v)
+            }
+            SamplerKind::Precision => {
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(crate::codec::read_nested::<PrecisionSampler>(&mut r)?);
+                }
+                Samplers::Precision(v)
+            }
+        };
+        r.finish("tv")?;
+        let cfg = TvSamplerConfig {
+            p,
+            k: k as usize,
+            r: count as usize,
+            seed,
+            kind,
+            rhh_rows: rhh_rows as usize,
+            rhh_width: rhh_width as usize,
+            inner_rows: inner_rows as usize,
+            inner_width: inner_width as usize,
+        };
+        let s = TvSampler { cfg, samplers, rhh, processed };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
 }
 
 /// Exact k-tuple *set* probabilities of perfect p-ppswor over a small

@@ -242,6 +242,93 @@ impl WorSampler for WindowedWorp {
     fn parallel_safe(&self) -> bool {
         false
     }
+
+    fn encode_state(&self, out: &mut Vec<u8>) {
+        crate::api::Persist::encode_into(self, out)
+    }
+}
+
+/// Wire payload: the shared [`SamplerConfig`] fragment, `window u64,
+/// processed u64`, the windowed sketch as a nested envelope, then the
+/// candidate tracker (canonical — sorted by key) as `n u64,
+/// n × (key u64, last_touch u64)`.
+impl crate::api::Persist for WindowedWorp {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        crate::codec::put_sampler_config(&mut p, &self.cfg);
+        crate::codec::wire::put_u64(&mut p, self.window);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        crate::codec::put_nested(&mut p, &self.sketch);
+        let mut keys: Vec<u64> = self.candidates.keys().copied().collect();
+        keys.sort_unstable();
+        crate::codec::wire::put_usize(&mut p, keys.len());
+        for k in keys {
+            crate::codec::wire::put_u64(&mut p, k);
+            crate::codec::wire::put_u64(&mut p, self.candidates[&k]);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::WINDOWED_WORP,
+            api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::WINDOWED_WORP))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let cfg = crate::codec::read_sampler_config(&mut r)?;
+        if cfg.q < 2.0 {
+            return Err(crate::error::Error::Codec(
+                "windowed WORp requires the CountSketch (q=2) path".into(),
+            ));
+        }
+        let window = r.u64()?;
+        let processed = r.u64()?;
+        let sketch: WindowedCountSketch = crate::codec::read_nested(&mut r)?;
+        if sketch.window() != window {
+            return Err(crate::error::Error::Codec(format!(
+                "windowed sampler window {window} disagrees with its sketch ({})",
+                sketch.window()
+            )));
+        }
+        let cand_cap = 16 * (cfg.k + 1);
+        let n = r.seq_len(16)?;
+        if n > 2 * cand_cap {
+            return Err(crate::error::Error::Codec(format!(
+                "windowed candidate set of {n} exceeds twice the capacity {cand_cap}"
+            )));
+        }
+        let mut candidates = HashMap::with_capacity(n);
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let key = r.u64()?;
+            if prev.is_some_and(|p| p >= key) {
+                return Err(crate::error::Error::Codec(
+                    "windowed candidates are not sorted by strictly increasing key".into(),
+                ));
+            }
+            prev = Some(key);
+            candidates.insert(key, r.u64()?);
+        }
+        r.finish("windowed")?;
+        let transform = cfg.transform();
+        let s = WindowedWorp {
+            cfg,
+            transform,
+            sketch,
+            candidates,
+            cand_cap,
+            window,
+            processed,
+            tbuf: Vec::new(),
+        };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
 }
 
 #[cfg(test)]

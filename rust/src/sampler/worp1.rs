@@ -307,6 +307,81 @@ impl WorSampler for OnePassWorp {
     fn name(&self) -> &'static str {
         "1pass"
     }
+
+    fn encode_state(&self, out: &mut Vec<u8>) {
+        crate::api::Persist::encode_into(self, out)
+    }
+}
+
+/// Wire payload: the shared [`SamplerConfig`] fragment, `processed u64`,
+/// the rHH sketch as a nested envelope, then the candidate key set
+/// (canonical — sorted) as `n u64, n × key u64`. The candidate capacity
+/// and transform are derived from the config; the transform buffer is
+/// transient and not persisted.
+impl crate::api::Persist for OnePassWorp {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        crate::codec::put_sampler_config(&mut p, &self.cfg);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        crate::codec::put_nested(&mut p, &self.sketch);
+        let mut keys: Vec<u64> = self.candidates.iter().collect();
+        keys.sort_unstable();
+        crate::codec::wire::put_usize(&mut p, keys.len());
+        for k in keys {
+            crate::codec::wire::put_u64(&mut p, k);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::WORP1,
+            crate::api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::WORP1))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let cfg = crate::codec::read_sampler_config(&mut r)?;
+        let cand_cap = 8 * (cfg.k + 1);
+        let processed = r.u64()?;
+        let sketch: AnyRhh = crate::codec::read_nested(&mut r)?;
+        let n = r.seq_len(8)?;
+        if n > 2 * cand_cap {
+            return Err(crate::error::Error::Codec(format!(
+                "1-pass candidate set of {n} exceeds twice the capacity {cand_cap}"
+            )));
+        }
+        // allocation from the *actual* candidate count (bounded by the
+        // payload size), never from the untrusted config-derived cand_cap
+        let mut candidates = FastSet::with_capacity(n.max(8));
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let key = r.u64()?;
+            if prev.is_some_and(|q| q >= key) {
+                return Err(crate::error::Error::Codec(
+                    "1-pass candidates are not sorted by strictly increasing key".into(),
+                ));
+            }
+            prev = Some(key);
+            candidates.insert(key);
+        }
+        r.finish("1pass")?;
+        let transform = cfg.transform();
+        let s = OnePassWorp {
+            cfg,
+            transform,
+            sketch,
+            candidates,
+            cand_cap,
+            processed,
+            tbuf: Vec::new(),
+        };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            crate::api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
 }
 
 #[cfg(test)]

@@ -430,6 +430,126 @@ impl WorSampler for TwoPassWorp {
     fn name(&self) -> &'static str {
         "2pass"
     }
+
+    fn encode_state(&self, out: &mut Vec<u8>) {
+        crate::api::Persist::encode_into(self, out)
+    }
+}
+
+/// Wire payload: the shared [`SamplerConfig`] fragment, `processed u64`,
+/// and the pass-I rHH sketch as a nested envelope.
+impl crate::api::Persist for TwoPassWorpPass1 {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        crate::codec::put_sampler_config(&mut p, &self.cfg);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        crate::codec::put_nested(&mut p, &self.sketch);
+        crate::codec::write_envelope(
+            crate::codec::tag::WORP2_PASS1,
+            api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::WORP2_PASS1))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let cfg = crate::codec::read_sampler_config(&mut r)?;
+        let processed = r.u64()?;
+        let sketch: AnyRhh = crate::codec::read_nested(&mut r)?;
+        r.finish("2pass-pass1")?;
+        let transform = cfg.transform();
+        let s = TwoPassWorpPass1 { cfg, transform, sketch, processed, tbuf: Vec::new() };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
+/// Wire payload: the shared [`SamplerConfig`] fragment, `processed u64`,
+/// the (frozen) pass-I rHH sketch and the pass-II collector `T`, both as
+/// nested envelopes.
+impl crate::api::Persist for TwoPassWorpPass2 {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        crate::codec::put_sampler_config(&mut p, &self.cfg);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        crate::codec::put_nested(&mut p, &self.sketch);
+        crate::codec::put_nested(&mut p, &self.topk);
+        crate::codec::write_envelope(
+            crate::codec::tag::WORP2_PASS2,
+            api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::WORP2_PASS2))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let cfg = crate::codec::read_sampler_config(&mut r)?;
+        let processed = r.u64()?;
+        let sketch: AnyRhh = crate::codec::read_nested(&mut r)?;
+        let topk: TopK = crate::codec::read_nested(&mut r)?;
+        r.finish("2pass-pass2")?;
+        let transform = cfg.transform();
+        let s = TwoPassWorpPass2 { cfg, transform, sketch, topk, processed };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
+/// Wire payload: `pass u8 (0 | 1)` followed by the corresponding pass
+/// state as a nested envelope — the state machine round-trips in
+/// whichever pass it was saved.
+impl crate::api::Persist for TwoPassWorp {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        match &self.state {
+            TwoPassState::One(s) => {
+                crate::codec::wire::put_u8(&mut p, 0);
+                crate::codec::put_nested(&mut p, s);
+            }
+            TwoPassState::Two(s) => {
+                crate::codec::wire::put_u8(&mut p, 1);
+                crate::codec::put_nested(&mut p, s);
+            }
+            TwoPassState::Poisoned => unreachable!("poisoned two-pass state"),
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::WORP2,
+            api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::WORP2))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let state = match r.u8()? {
+            0 => TwoPassState::One(crate::codec::read_nested(&mut r)?),
+            1 => TwoPassState::Two(crate::codec::read_nested(&mut r)?),
+            v => {
+                return Err(Error::Codec(format!(
+                    "unknown 2-pass state byte {v} (expected 0 or 1)"
+                )))
+            }
+        };
+        r.finish("2pass")?;
+        let s = TwoPassWorp { state };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
 }
 
 impl api::StreamSummary for TwoPassWorpPass1 {

@@ -113,6 +113,37 @@ impl RhhSketch for CountMin {
     }
 }
 
+/// Wire payload: the shared hashed-array body (same layout as
+/// CountSketch under a distinct type tag; the hasher's `^ 0xC0_FFEE`
+/// seed derivation is re-applied by the constructor on decode).
+impl crate::api::Persist for CountMin {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::with_capacity(40 + 8 * self.table.len());
+        crate::codec::put_rhh_table(&mut p, &self.params, self.processed, &self.table);
+        crate::codec::write_envelope(
+            crate::codec::tag::COUNTMIN,
+            crate::api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> crate::error::Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::COUNTMIN))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let (params, processed, table) = crate::codec::read_rhh_table(&mut r)?;
+        r.finish("countmin")?;
+        let mut s = CountMin::new(params);
+        s.table = table;
+        s.processed = processed;
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            crate::api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

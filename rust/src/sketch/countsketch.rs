@@ -175,6 +175,37 @@ impl RhhSketch for CountSketch {
     }
 }
 
+/// Wire payload: the shared hashed-array body
+/// ([`crate::codec::put_rhh_table`]); the scratch buffer is transient
+/// state and not persisted.
+impl crate::api::Persist for CountSketch {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::with_capacity(40 + 8 * self.table.len());
+        crate::codec::put_rhh_table(&mut p, &self.params, self.processed, &self.table);
+        crate::codec::write_envelope(
+            crate::codec::tag::COUNTSKETCH,
+            crate::api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> crate::error::Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::COUNTSKETCH))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let (params, processed, table) = crate::codec::read_rhh_table(&mut r)?;
+        r.finish("countsketch")?;
+        let mut s = CountSketch::new(params);
+        s.table = table;
+        s.processed = processed;
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            crate::api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -126,6 +126,50 @@ impl RhhSketch for AnyRhh {
     }
 }
 
+/// Wire payload: `variant u8 (1 = CountSketch, 2 = CountMin)` followed by
+/// the wrapped sketch as a nested envelope.
+impl crate::api::Persist for AnyRhh {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        match self {
+            AnyRhh::CountSketch(s) => {
+                crate::codec::wire::put_u8(&mut p, 1);
+                crate::codec::put_nested(&mut p, s);
+            }
+            AnyRhh::CountMin(s) => {
+                crate::codec::wire::put_u8(&mut p, 2);
+                crate::codec::put_nested(&mut p, s);
+            }
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::ANY_RHH,
+            crate::api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> crate::error::Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::ANY_RHH))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let s = match r.u8()? {
+            1 => AnyRhh::CountSketch(crate::codec::read_nested(&mut r)?),
+            2 => AnyRhh::CountMin(crate::codec::read_nested(&mut r)?),
+            v => {
+                return Err(crate::error::Error::Codec(format!(
+                    "unknown AnyRhh variant byte {v}"
+                )))
+            }
+        };
+        r.finish("anyrhh")?;
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            crate::api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
 /// Shape/seed parameters shared by the hashed-array sketches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SketchParams {

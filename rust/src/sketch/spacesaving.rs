@@ -275,6 +275,80 @@ impl SpaceSaving<u64> {
     }
 }
 
+/// Wire payload (canonical — counters sorted by key): `capacity u64,
+/// processed u64, n u64, n × (key u64, count f64, overestimate f64)`.
+/// The eviction heap is derived state and rebuilt on decode.
+impl crate::api::Persist for SpaceSaving<u64> {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::with_capacity(24 + 24 * self.counters.len());
+        crate::codec::wire::put_usize(&mut p, self.capacity);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        let mut keys: Vec<u64> = self.counters.keys().copied().collect();
+        keys.sort_unstable();
+        crate::codec::wire::put_usize(&mut p, keys.len());
+        for k in keys {
+            let c = &self.counters[&k];
+            crate::codec::wire::put_u64(&mut p, k);
+            crate::codec::wire::put_f64(&mut p, c.count);
+            crate::codec::wire::put_f64(&mut p, c.overestimate);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::SPACESAVING,
+            crate::api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::SPACESAVING))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let capacity = r.u64()?;
+        if capacity == 0 || capacity > u32::MAX as u64 {
+            return Err(Error::Codec(format!(
+                "SpaceSaving capacity out of range [1, 2^32]: {capacity}"
+            )));
+        }
+        let capacity = capacity as usize;
+        let processed = r.u64()?;
+        let n = r.seq_len(24)?;
+        if n > capacity {
+            return Err(Error::Codec(format!(
+                "SpaceSaving holds {n} counters but capacity is {capacity}"
+            )));
+        }
+        let mut counters = HashMap::with_capacity(n + 1);
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let key = r.u64()?;
+            if prev.is_some_and(|p| p >= key) {
+                return Err(Error::Codec(
+                    "SpaceSaving counters are not sorted by strictly increasing key".into(),
+                ));
+            }
+            prev = Some(key);
+            // non-finite counts would poison the heap/sort comparators
+            // (which unwrap partial_cmp), so reject them at the boundary
+            let count = r.finite_f64("SpaceSaving count")?;
+            let overestimate = r.finite_f64("SpaceSaving overestimate")?;
+            counters.insert(key, Counter { key, count, overestimate });
+        }
+        r.finish("spacesaving")?;
+        let mut s = SpaceSaving {
+            capacity,
+            counters,
+            heap: BinaryHeap::with_capacity(n + 1),
+            processed,
+        };
+        s.rebuild_heap();
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            crate::api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

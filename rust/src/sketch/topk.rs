@@ -224,6 +224,80 @@ impl TopK {
     }
 }
 
+/// Wire payload (canonical — entries sorted by key): `cap u64,
+/// merge_cap u64, n u64, n × (key u64, priority f64, value f64)`. The
+/// cached minimum is derived state and left cold on decode.
+impl crate::api::Persist for TopK {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::with_capacity(24 + 24 * self.entries.len());
+        crate::codec::wire::put_usize(&mut p, self.cap);
+        crate::codec::wire::put_usize(&mut p, self.merge_cap);
+        let mut keys: Vec<u64> = self.entries.keys().copied().collect();
+        keys.sort_unstable();
+        crate::codec::wire::put_usize(&mut p, keys.len());
+        for k in keys {
+            let e = &self.entries[&k];
+            crate::codec::wire::put_u64(&mut p, k);
+            crate::codec::wire::put_f64(&mut p, e.priority);
+            crate::codec::wire::put_f64(&mut p, e.value);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::TOPK,
+            self.persist_fingerprint().value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::TOPK))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let cap = r.u64()?;
+        let merge_cap = r.u64()?;
+        if cap == 0 || merge_cap < cap || merge_cap > u32::MAX as u64 {
+            return Err(Error::Codec(format!(
+                "TopK capacities out of range: cap={cap} merge_cap={merge_cap}"
+            )));
+        }
+        let (cap, merge_cap) = (cap as usize, merge_cap as usize);
+        let n = r.seq_len(24)?;
+        if n > merge_cap {
+            return Err(Error::Codec(format!(
+                "TopK holds {n} entries but merge capacity is {merge_cap}"
+            )));
+        }
+        let mut entries = HashMap::with_capacity(n + 1);
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let key = r.u64()?;
+            if prev.is_some_and(|p| p >= key) {
+                return Err(Error::Codec(
+                    "TopK entries are not sorted by strictly increasing key".into(),
+                ));
+            }
+            prev = Some(key);
+            // non-finite priorities would poison the eviction comparators
+            let priority = r.finite_f64("TopK priority")?;
+            let value = r.finite_f64("TopK value")?;
+            entries.insert(key, TopKEntry { key, priority, value });
+        }
+        r.finish("topk")?;
+        let t = TopK { cap, merge_cap, entries, min_cache: None };
+        crate::codec::check_fingerprint(env.fingerprint, t.persist_fingerprint().value())?;
+        Ok(t)
+    }
+}
+
+impl TopK {
+    /// The persistence fingerprint (TopK is composable but not an
+    /// [`crate::api::Mergeable`] — it keys on its capacities).
+    fn persist_fingerprint(&self) -> crate::api::Fingerprint {
+        crate::api::Fingerprint::new("topk")
+            .with(self.cap as u64)
+            .with(self.merge_cap as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

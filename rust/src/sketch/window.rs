@@ -204,6 +204,114 @@ impl WindowedCountSketch {
     }
 }
 
+/// Wire payload: `rows u64, width u64, seed u64, window u64, span u64,
+/// now u64`, the active table as a nested CountSketch envelope, then
+/// `n_ring u64` and `n × (start u64, nested CountSketch)` oldest-first.
+/// The active table is persisted (not recomputed) so the float
+/// accumulation order — and hence every future estimate — is
+/// bit-identical across a save/load cycle.
+impl crate::api::Persist for WindowedCountSketch {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::new();
+        crate::codec::wire::put_usize(&mut p, self.params.rows);
+        crate::codec::wire::put_usize(&mut p, self.params.width);
+        crate::codec::wire::put_u64(&mut p, self.params.seed);
+        crate::codec::wire::put_u64(&mut p, self.window);
+        crate::codec::wire::put_u64(&mut p, self.span);
+        crate::codec::wire::put_u64(&mut p, self.now);
+        crate::codec::put_nested(&mut p, &self.active);
+        crate::codec::wire::put_usize(&mut p, self.ring.len());
+        for (start, sk) in &self.ring {
+            crate::codec::wire::put_u64(&mut p, *start);
+            crate::codec::put_nested(&mut p, sk);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::WINDOW_SKETCH,
+            self.persist_fingerprint().value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::WINDOW_SKETCH))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        const SIZE_CAP: u64 = u32::MAX as u64;
+        let rows = r.u64()?;
+        let width = r.u64()?;
+        let seed = r.u64()?;
+        if rows == 0 || width == 0 || rows > SIZE_CAP || width > SIZE_CAP {
+            return Err(Error::Codec(format!(
+                "windowed sketch shape out of range [1, 2^32]: {rows}x{width}"
+            )));
+        }
+        let params = SketchParams { rows: rows as usize, width: width as usize, seed };
+        let window = r.u64()?;
+        let span = r.u64()?;
+        if window == 0 || span == 0 || span > window {
+            return Err(Error::Codec(format!(
+                "windowed sketch geometry invalid: window={window} span={span}"
+            )));
+        }
+        let now = r.u64()?;
+        // expiry arithmetic computes start + span + window; bound the
+        // clock so a crafted near-u64::MAX timestamp cannot overflow
+        // (debug panic / release wraparound) one call after decode
+        if now.checked_add(span).and_then(|x| x.checked_add(window)).is_none() {
+            return Err(Error::Codec(format!(
+                "windowed sketch clock {now} too close to u64::MAX for window {window}"
+            )));
+        }
+        let active: CountSketch = crate::codec::read_nested(&mut r)?;
+        let n = r.seq_len(8)?;
+        let mut ring = VecDeque::with_capacity(n);
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let start = r.u64()?;
+            if prev.is_some_and(|p| p >= start) {
+                return Err(Error::Codec(
+                    "windowed sketch ring buckets are not in increasing time order".into(),
+                ));
+            }
+            if start > now {
+                return Err(Error::Codec(format!(
+                    "windowed sketch ring bucket starts at {start}, after the clock {now}"
+                )));
+            }
+            prev = Some(start);
+            let sk: CountSketch = crate::codec::read_nested(&mut r)?;
+            if *sk.params() != params {
+                return Err(Error::Codec(
+                    "windowed sketch ring bucket has mismatched sketch parameters".into(),
+                ));
+            }
+            ring.push_back((start, sk));
+        }
+        r.finish("windowsketch")?;
+        if *active.params() != params {
+            return Err(Error::Codec(
+                "windowed sketch active table has mismatched sketch parameters".into(),
+            ));
+        }
+        let w = WindowedCountSketch { params, window, span, ring, active, now };
+        crate::codec::check_fingerprint(env.fingerprint, w.persist_fingerprint().value())?;
+        Ok(w)
+    }
+}
+
+impl WindowedCountSketch {
+    /// The persistence fingerprint: everything two windowed sketches must
+    /// agree on to be mergeable (shape, seed, window geometry).
+    fn persist_fingerprint(&self) -> crate::api::Fingerprint {
+        crate::api::Fingerprint::new("windowsketch")
+            .with(self.params.rows as u64)
+            .with(self.params.width as u64)
+            .with(self.params.seed)
+            .with(self.window)
+            .with(self.span)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

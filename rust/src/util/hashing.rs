@@ -27,12 +27,22 @@ pub fn hash64(seed: u64, key: u64) -> u64 {
     h
 }
 
-/// Stable 64-bit hash of a byte string (FNV-1a core + SplitMix finalizer).
+/// Stable 64-bit hash of a byte string (FNV-1a core + SplitMix
+/// finalizer). Delegates to [`hash_bytes2`] so the two can never drift
+/// apart — persisted envelopes depend on their documented equivalence.
 #[inline]
 pub fn hash_bytes(seed: u64, bytes: &[u8]) -> u64 {
+    hash_bytes2(seed, bytes, &[])
+}
+
+/// Stable 64-bit hash of the concatenation `a ++ b` without materializing
+/// it — identical to `hash_bytes(seed, [a, b].concat())`. The codec's
+/// envelope checksum streams the header and payload through this.
+#[inline]
+pub fn hash_bytes2(seed: u64, a: &[u8], b: &[u8]) -> u64 {
     let mut h = 0xCBF2_9CE4_8422_2325_u64 ^ seed;
-    for &b in bytes {
-        h ^= b as u64;
+    for &byte in a.iter().chain(b) {
+        h ^= byte as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01B3);
     }
     mix64(h ^ seed.rotate_left(17))
@@ -441,5 +451,18 @@ mod tests {
     fn hash_bytes_differs_on_length_extension() {
         assert_ne!(hash_bytes(1, b"ab"), hash_bytes(1, b"abc"));
         assert_ne!(hash_bytes(1, b""), hash_bytes(1, b"\0"));
+    }
+
+    #[test]
+    fn hash_bytes2_equals_concatenation() {
+        for (a, b) in [
+            (&b""[..], &b""[..]),
+            (&b"head"[..], &b""[..]),
+            (&b""[..], &b"tail"[..]),
+            (&b"head"[..], &b"tail"[..]),
+        ] {
+            let concat: Vec<u8> = a.iter().chain(b).copied().collect();
+            assert_eq!(hash_bytes2(7, a, b), hash_bytes(7, &concat));
+        }
     }
 }

@@ -1,0 +1,212 @@
+//! Checkpoint / crash-recovery suite: a sharded run killed mid-stream
+//! after a checkpoint, then resumed from the snapshot directory, must
+//! finish **bit-identical** to an uninterrupted run — and the
+//! `end_to_end` topology-invariance property must keep holding with
+//! checkpointing on.
+
+use worp::api::{Mergeable, Persist};
+use worp::coordinator::{Coordinator, VecSource};
+use worp::data::zipf::zipf_exact_stream;
+use worp::data::Element;
+use worp::pipeline::merge::merge_all;
+use worp::pipeline::{run_sharded, run_sharded_checkpointed, CheckpointPolicy, PipelineOpts};
+use worp::sampler::exact::ExactWor;
+use worp::sampler::worp1::OnePassWorp;
+use worp::sampler::SamplerConfig;
+use worp::sketch::countsketch::CountSketch;
+use worp::sketch::SketchParams;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("worp_ckpt_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg(seed: u64) -> SamplerConfig {
+    SamplerConfig::new(1.0, 10)
+        .with_seed(seed)
+        .with_domain(300)
+        .with_sketch_shape(5, 512)
+}
+
+/// Simulated crash: run the pipeline over only a prefix of the stream
+/// (checkpoints get written along the way), throw the in-memory result
+/// away — that is the crash — then rerun over the *full* stream with the
+/// same snapshot directory and compare against an uninterrupted run.
+#[test]
+fn killed_run_resumes_bit_identical_for_exact_summary() {
+    let elems = zipf_exact_stream(300, 1.2, 1e4, 3, 11);
+    let opts = PipelineOpts::new(3, 64, 4).unwrap();
+    let policy = CheckpointPolicy::new(2, tmp("exact")).unwrap();
+    let proto = |_w: usize| ExactWor::new(cfg(7));
+
+    // phase 1: process ~60% of the stream, then "crash" (drop the states)
+    let cut = elems.len() * 6 / 10;
+    let (_lost, m1) =
+        run_sharded_checkpointed(elems[..cut].to_vec(), opts, &policy, proto).unwrap();
+    assert!(m1.snapshots() > 0, "no checkpoints were written before the crash");
+    assert_eq!(m1.restores(), 0);
+
+    // phase 2: resume over the full stream from the snapshot directory
+    let (resumed, m2) =
+        run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+    assert_eq!(m2.restores() as usize, opts.workers, "all shards restore");
+
+    // reference: one uninterrupted (non-checkpointed) run
+    let (reference, _) = run_sharded(elems, opts, proto).unwrap();
+
+    assert_eq!(resumed.len(), reference.len());
+    for (r, q) in resumed.iter().zip(&reference) {
+        assert_eq!(r.encode(), q.encode(), "shard state diverged after resume");
+    }
+    // and the merged samples agree exactly
+    let m = worp::pipeline::metrics::Metrics::default();
+    let a = merge_all(resumed, &m).unwrap().unwrap();
+    let b = merge_all(reference, &m).unwrap().unwrap();
+    assert_eq!(a.sample().entries, b.sample().entries);
+    assert_eq!(a.sample().tau.to_bits(), b.sample().tau.to_bits());
+}
+
+#[test]
+fn killed_run_resumes_bit_identical_for_sketch_and_worp1() {
+    let elems = zipf_exact_stream(300, 1.0, 1e4, 3, 13);
+    let opts = PipelineOpts::new(2, 32, 4).unwrap();
+
+    // linear sketch
+    let policy = CheckpointPolicy::new(3, tmp("sketch")).unwrap();
+    let proto = |_w: usize| CountSketch::new(SketchParams::new(5, 128, 3));
+    let cut = elems.len() / 2;
+    run_sharded_checkpointed(elems[..cut].to_vec(), opts, &policy, proto).unwrap();
+    let (resumed, _) =
+        run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+    let (reference, _) = run_sharded(elems.clone(), opts, proto).unwrap();
+    for (r, q) in resumed.iter().zip(&reference) {
+        assert_eq!(r.table(), q.table());
+        assert_eq!(r.processed(), q.processed());
+    }
+
+    // 1-pass WORp: candidate-shrink timing depends on batch boundaries;
+    // snapshots land on batch edges so the resumed run realigns exactly
+    let policy = CheckpointPolicy::new(2, tmp("worp1")).unwrap();
+    let proto = |_w: usize| OnePassWorp::new(cfg(17));
+    run_sharded_checkpointed(elems[..cut].to_vec(), opts, &policy, proto).unwrap();
+    let (resumed, _) =
+        run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+    let (reference, _) = run_sharded(elems, opts, proto).unwrap();
+    for (r, q) in resumed.iter().zip(&reference) {
+        assert_eq!(r.encode(), q.encode(), "worp1 shard state diverged");
+    }
+}
+
+#[test]
+fn repeated_crashes_still_converge() {
+    // crash after every few batches, many times over — each resume picks
+    // up from the latest snapshot and the final state is still exact
+    let elems: Vec<Element> = (0..4000u64).map(|i| Element::new(i % 97, 1.0)).collect();
+    let opts = PipelineOpts::new(2, 16, 2).unwrap();
+    let policy = CheckpointPolicy::new(1, tmp("repeated")).unwrap();
+    let proto = |_w: usize| ExactWor::new(cfg(23));
+    for frac in [2usize, 3, 5, 7] {
+        let cut = elems.len() * (frac - 1) / frac;
+        run_sharded_checkpointed(elems[..cut].to_vec(), opts, &policy, proto).unwrap();
+    }
+    let (resumed, _) = run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+    let (reference, _) = run_sharded(elems, opts, proto).unwrap();
+    for (r, q) in resumed.iter().zip(&reference) {
+        assert_eq!(r.encode(), q.encode());
+    }
+}
+
+#[test]
+fn coordinator_run_dyn_with_checkpoints_matches_plain_run() {
+    // the dynamic (CLI) path: every method through run_dyn with a
+    // checkpoint policy produces the same sample as without one, and the
+    // multi-pass method snapshots each pass in its own subdirectory
+    let n = 300;
+    let elems = zipf_exact_stream(n, 1.2, 1e4, 2, 19);
+    let src = VecSource(elems);
+    let builder = worp::Worp::p(1.0)
+        .k(8)
+        .seed(3)
+        .domain(n)
+        .sketch_shape(5, 512);
+    for method in [worp::Method::OnePass, worp::Method::TwoPass, worp::Method::Exact] {
+        let dir = tmp(&format!("dyn_{}", method.name()));
+        let plain = Coordinator::new(
+            builder.sampler_config().unwrap(),
+            PipelineOpts::new(3, 64, 4).unwrap(),
+        );
+        let ck = Coordinator::new(
+            builder.sampler_config().unwrap(),
+            PipelineOpts::new(3, 64, 4).unwrap(),
+        )
+        .with_checkpoints(CheckpointPolicy::new(2, &dir).unwrap());
+        let proto = builder.clone().method(method).build().unwrap();
+        let (s_plain, _) = plain.run_dyn(&src, proto.clone()).unwrap();
+        let (s_ck, m) = ck.run_dyn(&src, proto).unwrap();
+        assert_eq!(s_plain.keys(), s_ck.keys(), "{}", method.name());
+        assert!(m.snapshots() > 0, "{}: no snapshots", method.name());
+        if method == worp::Method::TwoPass {
+            assert!(dir.join("pass-0").is_dir());
+            assert!(dir.join("pass-1").is_dir());
+        }
+    }
+}
+
+#[test]
+fn topology_invariance_holds_with_checkpointing_on() {
+    // the end_to_end guarantee, now through the checkpointed path: worker
+    // count / batch size / channel depth never change the merged output
+    // (each topology checkpoints into its own directory)
+    let elems = zipf_exact_stream(300, 1.3, 1e4, 2, 0xF1C);
+    let proto = || {
+        worp::Worp::p(1.0)
+            .k(10)
+            .seed(0xABC)
+            .domain(300)
+            .sketch_shape(5, 512)
+            .two_pass()
+            .build()
+            .unwrap()
+    };
+    let reference: Vec<u64> = {
+        let c = Coordinator::new(cfg(0xABC), PipelineOpts::new(1, 64, 2).unwrap());
+        c.run_dyn(&VecSource(elems.clone()), proto()).unwrap().0.keys()
+    };
+    // batch sizes kept well under the per-shard element count: snapshots
+    // only fire on full-batch edges, and this test wants to prove the
+    // output is invariant *while* checkpointing is actually active
+    for (workers, batch) in [(2usize, 32usize), (3, 61), (4, 32)] {
+        let dir = tmp(&format!("topo_{workers}_{batch}"));
+        let c = Coordinator::new(cfg(0xABC), PipelineOpts::new(workers, batch, 4).unwrap())
+            .with_checkpoints(CheckpointPolicy::new(2, &dir).unwrap());
+        let (s, m) = c.run_dyn(&VecSource(elems.clone()), proto()).unwrap();
+        assert_eq!(s.keys(), reference, "workers={workers} batch={batch}");
+        assert!(m.snapshots() > 0, "workers={workers} batch={batch}");
+    }
+}
+
+#[test]
+fn run_summary_checkpointed_resumes_through_the_coordinator() {
+    let elems = zipf_exact_stream(300, 1.2, 1e4, 2, 29);
+    let dir = tmp("run_summary");
+    let make_coord = || {
+        Coordinator::new(cfg(5), PipelineOpts::new(2, 32, 4).unwrap())
+            .with_checkpoints(CheckpointPolicy::new(2, &dir).unwrap())
+    };
+    let cut = elems.len() / 2;
+    make_coord()
+        .run_summary_checkpointed(elems[..cut].to_vec(), ExactWor::new(cfg(5)))
+        .unwrap();
+    let (resumed, m) = make_coord()
+        .run_summary_checkpointed(elems.clone(), ExactWor::new(cfg(5)))
+        .unwrap();
+    assert!(m.restores() > 0);
+    let plain = Coordinator::new(cfg(5), PipelineOpts::new(2, 32, 4).unwrap());
+    let (reference, _) = plain.run_summary(elems, ExactWor::new(cfg(5))).unwrap();
+    assert_eq!(resumed.encode(), reference.encode());
+    assert_eq!(
+        Mergeable::fingerprint(&resumed),
+        Mergeable::fingerprint(&reference)
+    );
+}

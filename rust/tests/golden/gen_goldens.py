@@ -1,0 +1,446 @@
+#!/usr/bin/env python3
+"""Generator for the committed golden-vector fixtures (tests/golden/*.worp).
+
+This script is an independent, bit-exact reimplementation of the crate's
+persistence codec (rust/src/codec/) for a fixed set of summaries. The
+Rust test suite (tests/persist_golden.rs) builds the same summaries
+through the real encoder and asserts byte equality with these files —
+locking the wire format against silent drift from *either* side.
+
+Every fixture is chosen so that no transcendental floating-point
+operation enters any payload (empty sketches, or integer-valued inputs
+whose sums are exact in IEEE-754), so the bytes are reproducible from
+first principles with plain integer arithmetic plus struct.pack.
+
+Regenerate with:  python3 rust/tests/golden/gen_goldens.py
+"""
+
+import math
+import os
+import struct
+
+M = (1 << 64) - 1
+
+# --- the crate's hashing substrate (util/rng.rs, util/hashing.rs) ---------
+
+
+def rotl(x, n):
+    return ((x << n) | (x >> (64 - n))) & M
+
+
+def splitmix_next(state):
+    state = (state + 0x9E3779B97F4A7C15) & M
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M
+    z = z ^ (z >> 31)
+    return state, z
+
+
+def mix64(x):
+    _, z = splitmix_next(x)
+    return z
+
+
+def hash64(seed, key):
+    h = seed ^ 0x9E3779B97F4A7C15
+    h = mix64(h ^ key)
+    h = mix64(((h + 0x6A09E667F3BCC909) & M) ^ rotl(key, 32))
+    return h
+
+
+def fnv_fold(seed, chunks):
+    """hash_bytes / hash_bytes2: keyed FNV-1a over the concatenated
+    chunks, finished with one SplitMix round (util/hashing.rs)."""
+    h = 0xCBF29CE484222325 ^ seed
+    for data in chunks:
+        for b in data:
+            h ^= b
+            h = (h * 0x00000100000001B3) & M
+    return mix64(h ^ rotl(seed, 17))
+
+
+def hash_bytes(seed, data):
+    return fnv_fold(seed, [data])
+
+
+CHECKSUM_SEED = 0xC0DEC0DE5EED0001
+FP_SEED = 0xF16E5EED
+
+
+def fp_new(tag):
+    return hash_bytes(FP_SEED, tag.encode())
+
+
+def fp_with(fp, x):
+    return hash64(fp, x)
+
+
+def f64_bits(v):
+    return struct.unpack("<Q", struct.pack("<d", v))[0]
+
+
+def fp_with_f64(fp, v):
+    return fp_with(fp, f64_bits(v))
+
+
+def rng_state(seed):
+    sm = seed
+    out = []
+    for _ in range(4):
+        sm, z = splitmix_next(sm)
+        out.append(z)
+    return out
+
+
+# --- SketchHasher (util/hashing.rs) ---------------------------------------
+
+
+def coords_of(seed, key):
+    h1 = hash64(seed, key)
+    h2 = hash64(seed ^ 0x5851F42D4C957F2D, key) | 1
+    return h1, h2
+
+
+def row_word(c, row):
+    h1, h2 = c
+    m = (h1 + row * h2) & M
+    m = ((m ^ (m >> 30)) * 0xBF58476D1CE4E5B9) & M
+    return m ^ (m >> 31)
+
+
+def bucket_sign(seed, width, key, row):
+    m = row_word(coords_of(seed, key), row)
+    b = (m * width) >> 64
+    s = 1.0 if (m & 1) == 0 else -1.0
+    return b, s
+
+
+# --- wire primitives (codec/wire.rs) --------------------------------------
+
+
+def u8(x):
+    return struct.pack("<B", x)
+
+
+def u16(x):
+    return struct.pack("<H", x)
+
+
+def u64(x):
+    return struct.pack("<Q", x)
+
+
+def f64(x):
+    return struct.pack("<d", x)
+
+
+MAGIC = b"WORP"
+VERSION = 1
+
+TAG = {
+    "countsketch": 1,
+    "countmin": 2,
+    "anyrhh": 3,
+    "spacesaving": 4,
+    "topk": 5,
+    "windowsketch": 6,
+    "exact": 7,
+    "worp1": 8,
+    "worp2pass1": 9,
+    "worp2pass2": 10,
+    "worp2": 11,
+    "tv": 12,
+    "windowed": 13,
+    "oracle": 14,
+    "precision": 15,
+}
+
+
+def envelope(tag, fingerprint, payload):
+    head = MAGIC + u16(VERSION) + u16(tag) + u64(len(payload)) + u64(fingerprint)
+    assert len(head) == 24
+    checksum = fnv_fold(CHECKSUM_SEED, [head, payload])
+    return head + u64(checksum) + payload
+
+
+def nested(env):
+    return u64(len(env)) + env
+
+
+# --- per-type payloads (mirroring each Persist impl) ----------------------
+
+
+def countsketch_env(rows, width, seed, elements=()):
+    """CountSketch::with_shape(rows, width, seed) after processing
+    `elements` (hasher seed == params seed)."""
+    table = [0.0] * (rows * width)
+    for key, val in elements:
+        for r in range(rows):
+            b, s = bucket_sign(seed, width, key, r)
+            table[r * width + b] += s * val
+    payload = u64(rows) + u64(width) + u64(seed) + u64(len(elements)) + u64(len(table))
+    for c in table:
+        payload += f64(c)
+    fp = fp_with(fp_with(fp_with(fp_new("countsketch"), rows), width), seed)
+    return envelope(TAG["countsketch"], fp, payload)
+
+
+def countmin_env(rows, width, seed, elements=()):
+    """CountMin::with_shape(rows, width, seed): hasher seed is
+    params.seed ^ 0xC0FFEE; no signs."""
+    hseed = seed ^ 0xC0FFEE
+    table = [0.0] * (rows * width)
+    for key, val in elements:
+        for r in range(rows):
+            b, _ = bucket_sign(hseed, width, key, r)
+            table[r * width + b] += val
+    payload = u64(rows) + u64(width) + u64(seed) + u64(len(elements)) + u64(len(table))
+    for c in table:
+        payload += f64(c)
+    fp = fp_with(fp_with(fp_with(fp_new("countmin"), rows), width), seed)
+    return envelope(TAG["countmin"], fp, payload)
+
+
+def anyrhh_env(q, rows, width, seed, inner_env):
+    variant = 1 if q >= 2.0 else 2
+    payload = u8(variant) + nested(inner_env)
+    fp = fp_new("anyrhh")
+    fp = fp_with_f64(fp, q)
+    fp = fp_with(fp_with(fp_with(fp, rows), width), seed)
+    return envelope(TAG["anyrhh"], fp, payload)
+
+
+def spacesaving_env(capacity, processed, counters):
+    payload = u64(capacity) + u64(processed) + u64(len(counters))
+    for key in sorted(counters):
+        count, over = counters[key]
+        payload += u64(key) + f64(count) + f64(over)
+    fp = fp_with(fp_new("spacesaving"), capacity)
+    return envelope(TAG["spacesaving"], fp, payload)
+
+
+def topk_env(cap, merge_cap, entries):
+    payload = u64(cap) + u64(merge_cap) + u64(len(entries))
+    for key in sorted(entries):
+        pri, val = entries[key]
+        payload += u64(key) + f64(pri) + f64(val)
+    fp = fp_with(fp_with(fp_new("topk"), cap), merge_cap)
+    return envelope(TAG["topk"], fp, payload)
+
+
+def windowsketch_env(rows, width, seed, window, buckets, now=0):
+    span = window // buckets
+    active = countsketch_env(rows, width, seed)
+    payload = (
+        u64(rows)
+        + u64(width)
+        + u64(seed)
+        + u64(window)
+        + u64(span)
+        + u64(now)
+        + nested(active)
+        + u64(0)  # empty ring
+    )
+    fp = fp_new("windowsketch")
+    for x in (rows, width, seed, window, span):
+        fp = fp_with(fp, x)
+    return envelope(TAG["windowsketch"], fp, payload)
+
+
+DIST_EXP = 1
+
+
+def sampler_config_bytes(cfg):
+    return (
+        f64(cfg["p"])
+        + u64(cfg["k"])
+        + f64(cfg["q"])
+        + u64(cfg["seed"])
+        + u64(cfg["n"])
+        + f64(cfg["delta"])
+        + f64(cfg["eps"])
+        + u64(cfg["rows"])
+        + u64(cfg["width"])
+        + u8(cfg["dist"])
+    )
+
+
+def config_fp(tag, cfg):
+    fp = fp_new(tag)
+    fp = fp_with_f64(fp, cfg["p"])
+    fp = fp_with(fp, cfg["k"])
+    fp = fp_with_f64(fp, cfg["q"])
+    fp = fp_with(fp, cfg["seed"])
+    fp = fp_with(fp, cfg["n"])
+    fp = fp_with_f64(fp, cfg["delta"])
+    fp = fp_with_f64(fp, cfg["eps"])
+    fp = fp_with(fp, cfg["rows"])
+    fp = fp_with(fp, cfg["width"])
+    fp = fp_with(fp, cfg["dist"])  # with_dist: Exp -> 1, Uniform -> 2
+    return fp
+
+
+def make_cfg(p, k, seed, n, rows=0, width=0):
+    return {
+        "p": p,
+        "k": k,
+        "q": 2.0,
+        "seed": seed,
+        "n": n,
+        "delta": 0.01,
+        "eps": 1.0 / 3.0,
+        "rows": rows,
+        "width": width,
+        "dist": DIST_EXP,
+    }
+
+
+def exact_env(cfg, processed, freqs):
+    payload = sampler_config_bytes(cfg) + u64(processed) + u64(len(freqs))
+    for key in sorted(freqs):
+        payload += u64(key) + f64(freqs[key])
+    return envelope(TAG["exact"], config_fp("exact", cfg), payload)
+
+
+def worp1_env(cfg):
+    """OnePassWorp::new(cfg), empty. Sketch: AnyRhh CountSketch with
+    params (resolved_rows, resolved_width, cfg.seed ^ 0x1AB5)."""
+    rows, width = cfg["rows"], cfg["width"]
+    sseed = cfg["seed"] ^ 0x1AB5
+    inner = countsketch_env(rows, width, sseed)
+    any_env = anyrhh_env(2.0, rows, width, sseed, inner)
+    payload = sampler_config_bytes(cfg) + u64(0) + nested(any_env) + u64(0)
+    return envelope(TAG["worp1"], config_fp("worp1", cfg), payload)
+
+
+def worp2pass1_env(cfg):
+    rows, width = cfg["rows"], cfg["width"]
+    sseed = cfg["seed"] ^ 0x2AB5
+    inner = countsketch_env(rows, width, sseed)
+    any_env = anyrhh_env(2.0, rows, width, sseed, inner)
+    payload = sampler_config_bytes(cfg) + u64(0) + nested(any_env)
+    return envelope(TAG["worp2pass1"], config_fp("worp2-pass1", cfg), payload)
+
+
+def worp2_env(cfg):
+    """TwoPassWorp::new(cfg), empty (pass I)."""
+    payload = u8(0) + nested(worp2pass1_env(cfg))
+    fp = fp_with(config_fp("worp2", cfg), 0)  # .with(pass_index)
+    return envelope(TAG["worp2"], fp, payload)
+
+
+def worp2pass2_env(cfg):
+    """TwoPassWorpPass1::new(cfg).into_pass2(), empty: TopK(4(k+1), 6(k+1))."""
+    rows, width = cfg["rows"], cfg["width"]
+    sseed = cfg["seed"] ^ 0x2AB5
+    inner = countsketch_env(rows, width, sseed)
+    any_env = anyrhh_env(2.0, rows, width, sseed, inner)
+    cap, merge_cap = 4 * (cfg["k"] + 1), 6 * (cfg["k"] + 1)
+    tk = topk_env(cap, merge_cap, {})
+    payload = sampler_config_bytes(cfg) + u64(0) + nested(any_env) + nested(tk)
+    return envelope(TAG["worp2pass2"], config_fp("worp2-pass2", cfg), payload)
+
+
+def oracle_env(p, seed, processed, freqs):
+    payload = f64(p) + u64(seed) + u64(processed)
+    for s in rng_state(seed ^ 0x0AC1E):
+        payload += u64(s)
+    payload += u64(len(freqs))
+    for key in sorted(freqs):
+        payload += u64(key) + f64(freqs[key])
+    fp = fp_with(fp_with_f64(fp_new("oracle-lp"), p), seed)
+    return envelope(TAG["oracle"], fp, payload)
+
+
+def precision_env(p, seed, rows, width):
+    """PrecisionSampler::new(p, seed, rows, width), empty: sketch seed is
+    seed ^ 0x9C13, cand_cap = 4 * width."""
+    sk = countsketch_env(rows, width, seed ^ 0x9C13)
+    payload = f64(p) + u64(seed) + u64(4 * width) + u64(0) + nested(sk) + u64(0)
+    fp = fp_new("precision-lp")
+    fp = fp_with_f64(fp, p)
+    for x in (seed, rows, width):
+        fp = fp_with(fp, x)
+    return envelope(TAG["precision"], fp, payload)
+
+
+def tv_env(p, k, n_domain, seed, r):
+    """TvSampler::new(TvSamplerConfig::new(p, k, n_domain, seed,
+    Oracle).with_r(r)), empty."""
+    rhh_rows, rhh_width = 7, max(8 * k, 64)
+    inner_rows, inner_width = 5, max(4 * k, 128)
+    rhh = countsketch_env(rhh_rows, rhh_width, seed ^ 0x0FF5E7)
+    payload = (
+        f64(p)
+        + u64(k)
+        + u64(r)
+        + u64(seed)
+        + u8(1)  # Oracle
+        + u64(rhh_rows)
+        + u64(rhh_width)
+        + u64(inner_rows)
+        + u64(inner_width)
+        + u64(0)  # processed
+        + nested(rhh)
+        + u64(r)
+    )
+    for i in range(r):
+        oseed = seed ^ ((i * 0xD1E5) & M)
+        payload += nested(oracle_env(p, oseed, 0, {}))
+    fp = fp_with_f64(fp_new("tv1pass"), p)
+    for x in (k, r, seed, 1, rhh_rows, rhh_width, inner_rows, inner_width):
+        fp = fp_with(fp, x)
+    return envelope(TAG["tv"], fp, payload)
+
+
+def windowed_env(cfg, window, buckets):
+    """WindowedWorp::new(cfg, window, buckets), empty. Sketch params:
+    (resolved_rows, resolved_width_one_pass, cfg.seed ^ 0x3AB5)."""
+    rows, width = cfg["rows"], cfg["width"]
+    ws = windowsketch_env(rows, width, cfg["seed"] ^ 0x3AB5, window, buckets)
+    payload = sampler_config_bytes(cfg) + u64(window) + u64(0) + nested(ws) + u64(0)
+    span = window // buckets
+    fp = fp_with(fp_with(config_fp("windowed", cfg), window), span)
+    return envelope(TAG["windowed"], fp, payload)
+
+
+# --- fixtures -------------------------------------------------------------
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    cfg8 = make_cfg(1.0, 4, 42, 100, rows=3, width=16)
+    fixtures = {
+        # fed fixtures: integer-exact arithmetic only
+        "countsketch.worp": countsketch_env(
+            3, 8, 42, [(1, 2.0), (2, -3.0), (1, 1.0)]
+        ),
+        "countmin.worp": countmin_env(3, 8, 42, [(1, 2.0), (2, 3.0)]),
+        "spacesaving.worp": spacesaving_env(
+            4, 3, {5: (2.0, 0.0), 7: (2.5, 0.0)}
+        ),
+        "topk.worp": topk_env(3, 4, {1: (10.0, 5.0), 2: (5.0, 1.0)}),
+        "exact.worp": exact_env(make_cfg(1.0, 8, 42, 100), 3, {1: 3.0, 2: 3.0}),
+        "oracle.worp": oracle_env(1.0, 42, 1, {1: 2.0}),
+        # empty fixtures: lock layout + fingerprints + nested composition
+        "anyrhh.worp": anyrhh_env(1.0, 3, 8, 42, countmin_env(3, 8, 42)),
+        "windowsketch.worp": windowsketch_env(3, 8, 42, 100, 10),
+        "worp1.worp": worp1_env(cfg8),
+        "worp2.worp": worp2_env(cfg8),
+        "worp2pass2.worp": worp2pass2_env(cfg8),
+        "tv.worp": tv_env(1.0, 2, 16, 42, 3),
+        "windowed.worp": windowed_env(cfg8, 50, 5),
+        "precision.worp": precision_env(1.0, 42, 3, 8),
+    }
+    for name, data in fixtures.items():
+        path = os.path.join(here, name)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"{name}: {len(data)} bytes")
+    # sanity: r used by tv matches ceil-formula floor (documentation only)
+    assert max(2 * 2, math.ceil(4 * 2 * math.log(16))) == 23
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,473 @@
+//! Generic persistence contract: for **every** [`Persist`] summary,
+//! `decode(encode(s))` preserves the fingerprint, the final output and
+//! merge-compatibility; encoding is canonical (logically-equal states
+//! encode to identical bytes); and the key composability law
+//!
+//! ```text
+//! merge(decode(encode(a)), decode(encode(b))) ≡ merge(a, b)   bit-for-bit
+//! ```
+//!
+//! holds — the property the cross-process `worp shard` / `worp
+//! merge-files` workflow and the checkpointed pipeline both rest on.
+
+use worp::api::{Finalize, Mergeable, Persist, StreamSummary, WorSampler};
+use worp::data::zipf::zipf_exact_stream;
+use worp::data::Element;
+use worp::sampler::exact::ExactWor;
+use worp::sampler::perfect_lp::{OracleSampler, PrecisionSampler, SingleLpSampler};
+use worp::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
+use worp::sampler::windowed::WindowedWorp;
+use worp::sampler::worp1::OnePassWorp;
+use worp::sampler::worp2::{TwoPassWorp, TwoPassWorpPass1};
+use worp::sampler::SamplerConfig;
+use worp::sketch::countmin::CountMin;
+use worp::sketch::countsketch::CountSketch;
+use worp::sketch::spacesaving::SpaceSaving;
+use worp::sketch::topk::TopK;
+use worp::sketch::window::WindowedCountSketch;
+use worp::sketch::{AnyRhh, RhhSketch, SketchParams};
+use worp::util::rng::Rng;
+
+fn cfg(p: f64, k: usize, seed: u64) -> SamplerConfig {
+    SamplerConfig::new(p, k)
+        .with_seed(seed)
+        .with_domain(400)
+        .with_sketch_shape(5, 256)
+}
+
+/// Two deterministic disjoint-ish element streams (signed).
+fn streams(seed: u64, len: usize) -> (Vec<Element>, Vec<Element>) {
+    let elems = zipf_exact_stream(400, 1.2, 1e4, 2, seed);
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    for (i, e) in elems.into_iter().enumerate().take(len) {
+        if i % 2 == 0 {
+            a.push(e);
+        } else {
+            b.push(e);
+        }
+    }
+    (a, b)
+}
+
+fn positive(elems: &[Element]) -> Vec<Element> {
+    elems
+        .iter()
+        .map(|e| Element::new(e.key, e.val.abs()))
+        .collect()
+}
+
+/// The generic contract for a Mergeable summary: round-trip preserves
+/// fingerprint + bytes, the decoded state stays merge-compatible, and
+/// merging decoded copies is bit-identical to merging the originals.
+fn check_persist_mergeable<T: Persist + Mergeable + Clone>(a: &T, b: &T, what: &str) {
+    let enc_a = a.encode();
+    let da = T::decode(&enc_a).unwrap_or_else(|e| panic!("{what}: decode failed: {e}"));
+    assert_eq!(
+        Mergeable::fingerprint(&da),
+        Mergeable::fingerprint(a),
+        "{what}: fingerprint changed across the round-trip"
+    );
+    assert_eq!(
+        da.encode(),
+        enc_a,
+        "{what}: re-encoding the decoded state produced different bytes"
+    );
+    // decoded states remain merge-compatible with live siblings
+    let mut dm = T::decode(&enc_a).unwrap();
+    dm.merge(b).unwrap_or_else(|e| panic!("{what}: decoded state refused a merge: {e}"));
+    // the key law, bit-for-bit via canonical encodings
+    let db = T::decode(&b.encode()).unwrap();
+    let mut lhs = T::decode(&enc_a).unwrap();
+    lhs.merge(&db).unwrap();
+    let mut rhs = a.clone();
+    rhs.merge(b).unwrap();
+    assert_eq!(
+        lhs.encode(),
+        rhs.encode(),
+        "{what}: merge(decode(enc(a)), decode(enc(b))) != merge(a, b)"
+    );
+}
+
+#[test]
+fn countsketch_contract() {
+    let params = SketchParams::new(5, 128, 11);
+    let (ea, eb) = streams(1, 2000);
+    let mut a = CountSketch::new(params);
+    let mut b = CountSketch::new(params);
+    for e in &ea {
+        RhhSketch::process(&mut a, e);
+    }
+    for e in &eb {
+        RhhSketch::process(&mut b, e);
+    }
+    check_persist_mergeable(&a, &b, "countsketch");
+    // estimates survive the round-trip exactly
+    let d = CountSketch::decode(&a.encode()).unwrap();
+    for key in 0..50u64 {
+        assert_eq!(d.est(key).to_bits(), a.est(key).to_bits(), "key {key}");
+    }
+    assert_eq!(d.processed(), a.processed());
+    assert_eq!(d.table(), a.table());
+}
+
+#[test]
+fn countmin_contract() {
+    let params = SketchParams::new(3, 64, 7);
+    let (ea, eb) = streams(2, 1500);
+    let mut a = CountMin::new(params);
+    let mut b = CountMin::new(params);
+    for e in &positive(&ea) {
+        RhhSketch::process(&mut a, e);
+    }
+    for e in &positive(&eb) {
+        RhhSketch::process(&mut b, e);
+    }
+    check_persist_mergeable(&a, &b, "countmin");
+    let d = CountMin::decode(&a.encode()).unwrap();
+    for key in 0..50u64 {
+        assert_eq!(d.est(key).to_bits(), a.est(key).to_bits());
+    }
+}
+
+#[test]
+fn anyrhh_contract_both_variants() {
+    let params = SketchParams::new(5, 64, 13);
+    let (ea, eb) = streams(3, 1000);
+    for q in [1.0, 2.0] {
+        let mut a = AnyRhh::for_q(q, params);
+        let mut b = AnyRhh::for_q(q, params);
+        let (fa, fb) = if q < 2.0 {
+            (positive(&ea), positive(&eb))
+        } else {
+            (ea.clone(), eb.clone())
+        };
+        for e in &fa {
+            RhhSketch::process(&mut a, e);
+        }
+        for e in &fb {
+            RhhSketch::process(&mut b, e);
+        }
+        check_persist_mergeable(&a, &b, &format!("anyrhh q={q}"));
+        let d = AnyRhh::decode(&a.encode()).unwrap();
+        assert_eq!(d.q(), a.q());
+        assert_eq!(d.est(5).to_bits(), a.est(5).to_bits());
+    }
+}
+
+#[test]
+fn spacesaving_contract() {
+    let (ea, eb) = streams(4, 1200);
+    let mut a: SpaceSaving<u64> = SpaceSaving::new(16);
+    let mut b: SpaceSaving<u64> = SpaceSaving::new(16);
+    for e in &positive(&ea) {
+        a.process(e.key, e.val);
+    }
+    for e in &positive(&eb) {
+        b.process(e.key, e.val);
+    }
+    check_persist_mergeable(&a, &b, "spacesaving");
+    // the decoded summary keeps streaming correctly (heap was rebuilt):
+    // drive both far past capacity and compare the deterministic top()
+    let mut d = SpaceSaving::<u64>::decode(&a.encode()).unwrap();
+    let mut live = a.clone();
+    for t in 0..2000u64 {
+        d.process((t * 13) % 97, 1.0);
+        live.process((t * 13) % 97, 1.0);
+    }
+    let (dt, lt) = (d.top(), live.top());
+    assert_eq!(dt.len(), lt.len());
+    for (x, y) in dt.iter().zip(&lt) {
+        assert_eq!(x.key, y.key);
+        assert_eq!(x.count.to_bits(), y.count.to_bits());
+    }
+}
+
+#[test]
+fn topk_contract() {
+    // TopK merges through its own inherent merge (it is the composable
+    // pass-II structure, not an api::Mergeable)
+    let mut a = TopK::new(8, 12);
+    let mut b = TopK::new(8, 12);
+    let mut rng = Rng::new(5);
+    for _ in 0..300 {
+        let k = rng.below(60);
+        a.process(k, 1.0, (k % 17) as f64);
+        let k = rng.below(60);
+        b.process(k, 2.0, (k % 17) as f64);
+    }
+    let enc_a = a.encode();
+    let da = TopK::decode(&enc_a).unwrap();
+    assert_eq!(da.encode(), enc_a, "topk canonical re-encode differs");
+    assert_eq!(da.by_priority(), a.by_priority());
+    // merge law, bit-for-bit
+    let db = TopK::decode(&b.encode()).unwrap();
+    let mut lhs = TopK::decode(&enc_a).unwrap();
+    lhs.merge(&db).unwrap();
+    let mut rhs = a.clone();
+    rhs.merge(&b).unwrap();
+    assert_eq!(lhs.encode(), rhs.encode(), "topk merge law violated");
+}
+
+#[test]
+fn window_sketch_contract() {
+    let params = SketchParams::new(5, 128, 21);
+    let mut a = WindowedCountSketch::new(params, 100, 10);
+    let mut b = WindowedCountSketch::new(params, 100, 10);
+    let mut rng = Rng::new(9);
+    for t in 0..400u64 {
+        let e = Element::new(rng.below(50), rng.normal());
+        if e.key % 2 == 0 {
+            a.process_at(&e, t);
+        } else {
+            b.process_at(&e, t);
+        }
+    }
+    let enc_a = a.encode();
+    let da = WindowedCountSketch::decode(&enc_a).unwrap();
+    assert_eq!(da.encode(), enc_a);
+    assert_eq!(da.now(), a.now());
+    assert_eq!(da.live_buckets(), a.live_buckets());
+    for key in 0..50u64 {
+        assert_eq!(da.est(key).to_bits(), a.est(key).to_bits(), "key {key}");
+    }
+    // merge law through the inherent merge
+    let db = WindowedCountSketch::decode(&b.encode()).unwrap();
+    let mut lhs = WindowedCountSketch::decode(&enc_a).unwrap();
+    lhs.merge(&db).unwrap();
+    let mut rhs = a.clone();
+    rhs.merge(&b).unwrap();
+    assert_eq!(lhs.encode(), rhs.encode(), "windowed sketch merge law violated");
+}
+
+#[test]
+fn exact_wor_contract() {
+    let (ea, eb) = streams(6, 2000);
+    let c = cfg(1.0, 12, 31);
+    let mut a = ExactWor::new(c.clone());
+    let mut b = ExactWor::new(c);
+    for e in &ea {
+        a.process(e);
+    }
+    for e in &eb {
+        b.process(e);
+    }
+    check_persist_mergeable(&a, &b, "exact");
+    let d = ExactWor::decode(&a.encode()).unwrap();
+    let (sa, sd) = (a.sample(), d.sample());
+    assert_eq!(sa.entries, sd.entries);
+    assert_eq!(sa.tau.to_bits(), sd.tau.to_bits());
+}
+
+#[test]
+fn worp1_contract() {
+    let (ea, eb) = streams(7, 3000);
+    let c = cfg(1.0, 10, 41);
+    let mut a = OnePassWorp::new(c.clone());
+    let mut b = OnePassWorp::new(c);
+    for e in &ea {
+        a.process(e);
+    }
+    for e in &eb {
+        b.process(e);
+    }
+    check_persist_mergeable(&a, &b, "worp1");
+    let d = OnePassWorp::decode(&a.encode()).unwrap();
+    let (sa, sd) = (OnePassWorp::sample(&a), OnePassWorp::sample(&d));
+    assert_eq!(sa.entries, sd.entries);
+    assert_eq!(sa.tau.to_bits(), sd.tau.to_bits());
+    assert_eq!(d.processed(), a.processed());
+}
+
+#[test]
+fn worp2_contract_both_passes() {
+    let (ea, eb) = streams(8, 2000);
+    let c = cfg(1.0, 10, 51);
+
+    // pass I state machine
+    let mut a = TwoPassWorp::new(c.clone());
+    let mut b = TwoPassWorp::new(c.clone());
+    for e in &ea {
+        StreamSummary::process(&mut a, e);
+    }
+    for e in &eb {
+        StreamSummary::process(&mut b, e);
+    }
+    check_persist_mergeable(&a, &b, "worp2 pass I");
+    // the decoded state machine still advances into pass II
+    let mut d = TwoPassWorp::decode(&a.encode()).unwrap();
+    assert_eq!(d.pass_index(), 0);
+    d.advance().unwrap();
+    assert_eq!(d.pass_index(), 1);
+
+    // standalone pass-I summary
+    let mut p1a = TwoPassWorpPass1::new(c.clone());
+    let mut p1b = TwoPassWorpPass1::new(c.clone());
+    for e in &ea {
+        p1a.process(e);
+    }
+    for e in &eb {
+        p1b.process(e);
+    }
+    check_persist_mergeable(&p1a, &p1b, "worp2 pass1");
+
+    // pass II collectors seeded from the *merged* pass-I sketch
+    let mut merged1 = p1a.clone();
+    merged1.merge(&p1b).unwrap();
+    let mut p2a = merged1.clone().into_pass2();
+    let mut p2b = merged1.into_pass2();
+    for e in &ea {
+        p2a.process(e);
+    }
+    for e in &eb {
+        p2b.process(e);
+    }
+    check_persist_mergeable(&p2a, &p2b, "worp2 pass2");
+    let d2 = worp::sampler::worp2::TwoPassWorpPass2::decode(&p2a.encode()).unwrap();
+    assert_eq!(d2.sample().entries, p2a.sample().entries);
+
+    // full state machine in pass II round-trips with its sample intact
+    let mut w = TwoPassWorp::new(cfg(1.0, 10, 51));
+    for e in &ea {
+        StreamSummary::process(&mut w, e);
+    }
+    w.advance().unwrap();
+    for e in &ea {
+        StreamSummary::process(&mut w, e);
+    }
+    let dw = TwoPassWorp::decode(&w.encode()).unwrap();
+    assert_eq!(dw.pass_index(), 1);
+    assert_eq!(
+        dw.sample().unwrap().entries,
+        w.sample().unwrap().entries
+    );
+    // cross-pass merge of decoded states is still incompatible
+    let d0 = TwoPassWorp::decode(&a.encode()).unwrap();
+    let mut d1 = TwoPassWorp::decode(&w.encode()).unwrap();
+    assert!(Mergeable::merge(&mut d1, &d0).is_err());
+}
+
+#[test]
+fn tv_contract_both_substrates() {
+    let (ea, eb) = streams(9, 800);
+    for kind in [SamplerKind::Oracle, SamplerKind::Precision] {
+        let c = TvSamplerConfig::new(1.0, 4, 400, 61, kind).with_r(10);
+        let mut a = TvSampler::new(c.clone());
+        let mut b = TvSampler::new(c);
+        for e in &ea {
+            a.process(e);
+        }
+        for e in &eb {
+            b.process(e);
+        }
+        check_persist_mergeable(&a, &b, &format!("tv {kind:?}"));
+        // the decoded sampler draws the *same* WOR tuple (the private rng
+        // state of every inner sampler round-trips)
+        let d = TvSampler::decode(&a.encode()).unwrap();
+        assert_eq!(d.produce_keys(), a.produce_keys(), "{kind:?}");
+    }
+}
+
+#[test]
+fn windowed_sampler_contract() {
+    let (ea, eb) = streams(10, 1500);
+    let c = cfg(1.0, 8, 71);
+    let mut a = WindowedWorp::new(c.clone(), 200, 10);
+    let mut b = WindowedWorp::new(c, 200, 10);
+    for (t, e) in ea.iter().enumerate() {
+        a.process_at(e, t as u64);
+    }
+    for (t, e) in eb.iter().enumerate() {
+        b.process_at(e, t as u64);
+    }
+    check_persist_mergeable(&a, &b, "windowed");
+    let d = WindowedWorp::decode(&a.encode()).unwrap();
+    let (sa, sd) = (WindowedWorp::sample(&a), WindowedWorp::sample(&d));
+    assert_eq!(sa.entries, sd.entries);
+}
+
+#[test]
+fn single_lp_samplers_contract() {
+    let (ea, eb) = streams(11, 600);
+    // oracle
+    let mut a = OracleSampler::new(1.0, 81);
+    let mut b = OracleSampler::new(1.0, 81);
+    for e in &ea {
+        SingleLpSampler::process(&mut a, e);
+    }
+    for e in &eb {
+        SingleLpSampler::process(&mut b, e);
+    }
+    check_persist_mergeable(&a, &b, "oracle-lp");
+    let d = OracleSampler::decode(&a.encode()).unwrap();
+    // private randomness round-trips: identical draw sequences
+    assert_eq!(Finalize::finalize(&d), Finalize::finalize(&a));
+    // precision
+    let mut a = PrecisionSampler::new(1.0, 91, 5, 128);
+    let mut b = PrecisionSampler::new(1.0, 91, 5, 128);
+    for e in &ea {
+        SingleLpSampler::process(&mut a, e);
+    }
+    for e in &eb {
+        SingleLpSampler::process(&mut b, e);
+    }
+    check_persist_mergeable(&a, &b, "precision-lp");
+    let d = PrecisionSampler::decode(&a.encode()).unwrap();
+    assert_eq!(Finalize::finalize(&d), Finalize::finalize(&a));
+}
+
+#[test]
+fn boxed_dyn_sampler_roundtrips_for_every_method() {
+    let elems = zipf_exact_stream(300, 1.2, 1e4, 2, 5);
+    let build = |method: &str| -> Box<dyn WorSampler> {
+        let b = worp::Worp::p(1.0)
+            .k(8)
+            .seed(17)
+            .domain(300)
+            .sketch_shape(5, 512)
+            .method(worp::Method::parse(method).unwrap());
+        let b = if method == "windowed" { b.windowed(100, 10) } else { b };
+        let b = if method == "tv" { b.tv_r(20) } else { b };
+        b.build().unwrap()
+    };
+    for method in ["1pass", "2pass", "tv", "windowed", "exact"] {
+        let mut s = build(method);
+        for e in &elems {
+            StreamSummary::process(&mut s, e);
+        }
+        let bytes = Persist::encode(&s);
+        let d: Box<dyn WorSampler> = Persist::decode(&bytes).unwrap();
+        assert_eq!(d.name(), s.name(), "{method}");
+        assert_eq!(d.fingerprint(), s.fingerprint(), "{method}");
+        assert_eq!(d.processed(), s.processed(), "{method}");
+        // canonical re-encode
+        assert_eq!(Persist::encode(&d), bytes, "{method}");
+        // decoded summaries merge through the dynamic path
+        let mut m: Box<dyn WorSampler> = Persist::decode(&bytes).unwrap();
+        m.merge_dyn(&*d).unwrap();
+        match (s.sample(), d.sample()) {
+            (Ok(ss), Ok(ds)) => {
+                assert_eq!(ss.entries, ds.entries, "{method}");
+                assert_eq!(ss.tau.to_bits(), ds.tau.to_bits(), "{method}");
+            }
+            (Err(_), Err(_)) => {} // 2pass mid-pass: both refuse identically
+            (a, b) => panic!("{method}: sample() disagreed: {a:?} vs {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn decode_as_wrong_type_is_a_codec_error() {
+    let mut cs = CountSketch::with_shape(3, 32, 1);
+    RhhSketch::process(&mut cs, &Element::new(4, 2.0));
+    let bytes = cs.encode();
+    assert!(matches!(
+        CountMin::decode(&bytes),
+        Err(worp::Error::Codec(_))
+    ));
+    assert!(matches!(TopK::decode(&bytes), Err(worp::Error::Codec(_))));
+    // a sketch envelope is not a sampler
+    assert!(matches!(
+        worp::codec::decode_sampler(&bytes),
+        Err(worp::Error::Codec(_))
+    ));
+}

@@ -1,0 +1,329 @@
+//! Corruption suite: decoding untrusted bytes must **never panic or
+//! OOM** — truncations, bit-flips, wrong magic/version, fingerprint
+//! tampering and length-field lies over every summary's encoding (and
+//! over the committed golden vectors) all map to typed
+//! [`worp::Error::Codec`] / [`worp::Error::Incompatible`] values.
+//!
+//! The envelope checksum covers the header fields and the payload, so
+//! every single-bit flip anywhere in an envelope is caught
+//! deterministically.
+
+use worp::api::{Persist, StreamSummary};
+use worp::data::zipf::zipf_exact_stream;
+use worp::data::Element;
+use worp::sampler::exact::ExactWor;
+use worp::sampler::SamplerConfig;
+use worp::sketch::countmin::CountMin;
+use worp::sketch::countsketch::CountSketch;
+use worp::sketch::spacesaving::SpaceSaving;
+use worp::sketch::topk::TopK;
+use worp::sketch::window::WindowedCountSketch;
+use worp::sketch::{RhhSketch, SketchParams};
+
+/// Every summary encoding under test, with a decoder that must reject
+/// all corrupted variants (returning, never panicking).
+fn vectors() -> Vec<(&'static str, Vec<u8>, fn(&[u8]) -> bool)> {
+    let elems = zipf_exact_stream(100, 1.2, 1e3, 2, 3);
+
+    let mut cs = CountSketch::with_shape(3, 32, 7);
+    let mut cm = CountMin::with_shape(3, 32, 7);
+    let mut ss: SpaceSaving<u64> = SpaceSaving::new(8);
+    let mut tk = TopK::new(4, 6);
+    let mut ws = WindowedCountSketch::new(SketchParams::new(3, 32, 7), 50, 5);
+    for (i, e) in elems.iter().enumerate() {
+        RhhSketch::process(&mut cs, e);
+        RhhSketch::process(&mut cm, &Element::new(e.key, e.val.abs()));
+        ss.process(e.key, e.val.abs());
+        tk.process(e.key, e.val.abs(), (e.key % 13) as f64);
+        ws.process_at(e, i as u64);
+    }
+    let cfg = SamplerConfig::new(1.0, 6)
+        .with_seed(5)
+        .with_domain(100)
+        .with_sketch_shape(3, 64);
+    let mut ex = ExactWor::new(cfg);
+    let mut w1 = worp::Worp::p(1.0)
+        .k(6)
+        .seed(5)
+        .domain(100)
+        .sketch_shape(3, 64)
+        .one_pass()
+        .build()
+        .unwrap();
+    for e in &elems {
+        ex.process(e);
+        StreamSummary::process(&mut w1, e);
+    }
+
+    fn rejects<T: Persist>(bytes: &[u8]) -> bool {
+        matches!(
+            T::decode(bytes),
+            Err(worp::Error::Codec(_)) | Err(worp::Error::Incompatible(_))
+        )
+    }
+    fn rejects_dyn(bytes: &[u8]) -> bool {
+        matches!(
+            worp::codec::decode_sampler(bytes),
+            Err(worp::Error::Codec(_)) | Err(worp::Error::Incompatible(_))
+        )
+    }
+
+    vec![
+        ("countsketch", cs.encode(), rejects::<CountSketch> as fn(&[u8]) -> bool),
+        ("countmin", cm.encode(), rejects::<CountMin>),
+        ("spacesaving", ss.encode(), rejects::<SpaceSaving<u64>>),
+        ("topk", tk.encode(), rejects::<TopK>),
+        ("windowsketch", ws.encode(), rejects::<WindowedCountSketch>),
+        ("exact", ex.encode(), rejects::<ExactWor>),
+        ("worp1", Persist::encode(&w1), rejects_dyn),
+    ]
+}
+
+#[test]
+fn truncation_at_every_length_is_rejected() {
+    for (name, bytes, rejects) in vectors() {
+        // every strict prefix, exhaustively for the header region and
+        // sampled beyond it (long vectors)
+        for cut in 0..bytes.len() {
+            if cut > 64 && cut % 7 != 0 && cut != bytes.len() - 1 {
+                continue;
+            }
+            assert!(
+                rejects(&bytes[..cut]),
+                "{name}: truncation to {cut}/{} bytes was not rejected",
+                bytes.len()
+            );
+        }
+        assert!(rejects(&[]), "{name}: empty input");
+    }
+}
+
+#[test]
+fn every_single_bit_flip_is_rejected() {
+    for (name, bytes, rejects) in vectors() {
+        for i in 0..bytes.len() {
+            // exhaustive over the header, sampled over long payloads
+            if i >= 64 && i % 5 != 0 {
+                continue;
+            }
+            for bit in 0..8 {
+                let mut bad = bytes.clone();
+                bad[i] ^= 1 << bit;
+                assert!(
+                    rejects(&bad),
+                    "{name}: flip of byte {i} bit {bit} was not rejected"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wrong_magic_version_and_fingerprint_are_rejected() {
+    for (name, bytes, rejects) in vectors() {
+        let mut bad = bytes.clone();
+        bad[..4].copy_from_slice(b"NOPE");
+        assert!(rejects(&bad), "{name}: wrong magic accepted");
+
+        let mut bad = bytes.clone();
+        bad[4..6].copy_from_slice(&999u16.to_le_bytes());
+        assert!(rejects(&bad), "{name}: future version accepted");
+
+        // tamper the embedded fingerprint (bytes 16..24)
+        let mut bad = bytes.clone();
+        for b in &mut bad[16..24] {
+            *b = b.wrapping_add(1);
+        }
+        assert!(rejects(&bad), "{name}: fingerprint tampering accepted");
+    }
+}
+
+#[test]
+fn length_field_lies_are_rejected_without_oom() {
+    for (name, bytes, rejects) in vectors() {
+        // envelope payload-length lies: every interesting value
+        for lie in [0u64, 1, u32::MAX as u64, u64::MAX] {
+            let mut bad = bytes.clone();
+            bad[8..16].copy_from_slice(&lie.to_le_bytes());
+            assert!(rejects(&bad), "{name}: payload length lie {lie} accepted");
+        }
+        // raw interior overwrites are caught by the checksum
+        let start = 32;
+        let mut off = start;
+        while off + 8 <= bytes.len() {
+            let mut bad = bytes.clone();
+            bad[off..off + 8].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+            assert!(
+                rejects(&bad),
+                "{name}: raw interior overwrite at offset {off} accepted"
+            );
+            off += 8;
+        }
+    }
+}
+
+/// Length lies behind a *valid* checksum (a hostile writer, not random
+/// corruption): the payload is tampered and re-wrapped in a fresh,
+/// checksum-correct envelope — the per-type payload parsers must still
+/// reject it via `seq_len` / shape validation, allocating nothing.
+#[test]
+fn hostile_length_fields_with_valid_checksums_are_rejected() {
+    use worp::codec::{read_envelope, write_envelope};
+
+    let rewrap = |bytes: &[u8], mutate: &dyn Fn(&mut Vec<u8>)| -> Vec<u8> {
+        let env = read_envelope(bytes, None).unwrap();
+        let mut payload = env.payload.to_vec();
+        mutate(&mut payload);
+        let mut out = Vec::new();
+        write_envelope(env.type_tag, env.fingerprint, &payload, &mut out);
+        out
+    };
+
+    // CountSketch payload: rows@0, width@8, seed@16, processed@24,
+    // table_len@32 — lie in the table length and in the shape
+    let mut cs = CountSketch::with_shape(3, 32, 7);
+    RhhSketch::process(&mut cs, &Element::new(1, 1.0));
+    let enc = cs.encode();
+    for (off, lie) in [(32usize, u64::MAX), (32, u64::MAX / 8), (0, u64::MAX), (8, 0u64)] {
+        let bad = rewrap(&enc, &|p: &mut Vec<u8>| {
+            p[off..off + 8].copy_from_slice(&lie.to_le_bytes());
+        });
+        assert!(
+            matches!(CountSketch::decode(&bad), Err(worp::Error::Codec(_))),
+            "countsketch: hostile field at {off} = {lie} accepted"
+        );
+    }
+
+    // SpaceSaving payload: capacity@0, processed@8, n@16
+    let mut ss: SpaceSaving<u64> = SpaceSaving::new(4);
+    ss.process(9, 2.0);
+    let enc = ss.encode();
+    for (off, lie) in [(16usize, u64::MAX), (16, 1u64 << 40), (0, u64::MAX)] {
+        let bad = rewrap(&enc, &|p: &mut Vec<u8>| {
+            p[off..off + 8].copy_from_slice(&lie.to_le_bytes());
+        });
+        assert!(
+            matches!(SpaceSaving::<u64>::decode(&bad), Err(worp::Error::Codec(_))),
+            "spacesaving: hostile field at {off} = {lie} accepted"
+        );
+    }
+
+    // truncating a payload behind a fresh envelope still fails cleanly
+    let bad = rewrap(&enc, &|p: &mut Vec<u8>| {
+        p.truncate(12);
+    });
+    assert!(SpaceSaving::<u64>::decode(&bad).is_err());
+
+    // NaN injected into a sketch table cell behind a valid checksum must
+    // be rejected at decode (it would panic the median comparators on
+    // the first est() otherwise)
+    let mut cs = CountSketch::with_shape(3, 8, 7);
+    RhhSketch::process(&mut cs, &Element::new(1, 1.0));
+    let enc = cs.encode();
+    let bad = rewrap(&enc, &|p: &mut Vec<u8>| {
+        // payload: rows@0, width@8, seed@16, processed@24, len@32, cells@40
+        p[40..48].copy_from_slice(&f64::NAN.to_bits().to_le_bytes());
+    });
+    assert!(
+        matches!(CountSketch::decode(&bad), Err(worp::Error::Codec(_))),
+        "NaN table cell behind a valid checksum accepted"
+    );
+}
+
+#[test]
+fn random_garbage_is_rejected() {
+    use worp::util::rng::Rng;
+    let mut rng = Rng::new(0xBAD5EED);
+    for (name, bytes, rejects) in vectors() {
+        for trial in 0..50 {
+            let len = (rng.below(2 * bytes.len() as u64 + 1)) as usize;
+            let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            assert!(
+                rejects(&garbage),
+                "{name}: random garbage of {len} bytes accepted (trial {trial})"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_vectors_survive_the_corruption_suite() {
+    // the committed fixtures are also fuzzed: every header bit flip and
+    // truncation must be rejected by the dynamic decoder or the typed one
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).expect("tests/golden directory exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("worp") {
+            continue;
+        }
+        found += 1;
+        let bytes = std::fs::read(&path).unwrap();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let env = worp::codec::read_envelope(&bytes, None)
+            .unwrap_or_else(|e| panic!("{name}: pristine golden vector rejected: {e}"));
+        let _ = env;
+        for i in 0..bytes.len().min(64) {
+            for bit in 0..8 {
+                let mut bad = bytes.clone();
+                bad[i] ^= 1 << bit;
+                assert!(
+                    worp::codec::read_envelope(&bad, None).is_err(),
+                    "{name}: header flip byte {i} bit {bit} accepted"
+                );
+            }
+        }
+        for cut in 0..bytes.len().min(64) {
+            assert!(
+                worp::codec::read_envelope(&bytes[..cut], None).is_err(),
+                "{name}: truncation to {cut} accepted"
+            );
+        }
+    }
+    assert!(found >= 10, "expected the golden fixtures, found {found}");
+}
+
+#[test]
+fn checkpoint_file_corruption_is_rejected() {
+    use worp::pipeline::{run_sharded_checkpointed, CheckpointPolicy, PipelineOpts};
+    let dir = std::env::temp_dir().join("worp_corrupt_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let policy = CheckpointPolicy::new(2, &dir).unwrap();
+    let opts = PipelineOpts::new(2, 16, 4).unwrap();
+    let elems: Vec<Element> = (0..500u64).map(|i| Element::new(i % 40, 1.0)).collect();
+    let proto = |_w: usize| CountSketch::with_shape(3, 32, 9);
+    let (_, metrics) =
+        run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+    assert!(metrics.snapshots() > 0);
+    // flip one payload byte of a snapshot: the resume must fail loudly
+    let path = policy.shard_path(0);
+    let pristine = std::fs::read(&path).unwrap();
+    let mut bytes = pristine.clone();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap_err();
+    assert!(matches!(err, worp::Error::Codec(_)), "{err}");
+    // flip one bit of the element *cursor* (checkpoint header bytes
+    // 14..22): the header checksum must reject it — a silently wrong
+    // skip count would double-process elements
+    let mut bytes = pristine.clone();
+    bytes[17] ^= 0x04;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap_err();
+    assert!(matches!(err, worp::Error::Codec(_)), "cursor corruption accepted: {err}");
+    std::fs::write(&path, &pristine).unwrap();
+    // a snapshot from a different topology is Incompatible, not silent
+    let _ = std::fs::remove_dir_all(&dir);
+    let (_, _) = run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+    let other_opts = PipelineOpts::new(2, 32, 4).unwrap(); // different batch
+    let err =
+        run_sharded_checkpointed(elems.clone(), other_opts, &policy, proto).unwrap_err();
+    assert!(matches!(err, worp::Error::Incompatible(_)), "{err}");
+    // a stale snapshot from a different *configuration* (here: sketch
+    // seed) is also Incompatible — never a silent mixed-run resume
+    let other_proto = |_w: usize| CountSketch::with_shape(3, 32, 999);
+    let err = run_sharded_checkpointed(elems, opts, &policy, other_proto).unwrap_err();
+    assert!(matches!(err, worp::Error::Incompatible(_)), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,187 @@
+//! Golden-vector suite: the committed `tests/golden/*.worp` fixtures
+//! (generated independently by `tests/golden/gen_goldens.py`) pin the
+//! wire format. Today's encoder must reproduce each fixture
+//! **byte-for-byte**, and today's decoder must accept it — any layout,
+//! hashing, fingerprint or checksum drift fails loudly here instead of
+//! silently orphaning previously persisted summaries.
+//!
+//! Every fixture is constructed so its payload involves only integer
+//! arithmetic and exact IEEE-754 sums, so the bytes are reproducible
+//! from first principles on any platform.
+
+use worp::api::Persist;
+use worp::data::Element;
+use worp::sampler::exact::ExactWor;
+use worp::sampler::perfect_lp::{OracleSampler, PrecisionSampler, SingleLpSampler};
+use worp::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
+use worp::sampler::windowed::WindowedWorp;
+use worp::sampler::worp1::OnePassWorp;
+use worp::sampler::worp2::{TwoPassWorp, TwoPassWorpPass1};
+use worp::sampler::SamplerConfig;
+use worp::sketch::countmin::CountMin;
+use worp::sketch::countsketch::CountSketch;
+use worp::sketch::spacesaving::SpaceSaving;
+use worp::sketch::topk::TopK;
+use worp::sketch::window::WindowedCountSketch;
+use worp::sketch::{AnyRhh, RhhSketch, SketchParams};
+
+fn golden_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn first_diff(a: &[u8], b: &[u8]) -> String {
+    let n = a.len().min(b.len());
+    for i in 0..n {
+        if a[i] != b[i] {
+            let lo = i.saturating_sub(8);
+            return format!(
+                "first difference at byte {i}: encoder {:02x?} vs golden {:02x?} (context from {lo})",
+                &a[lo..(i + 8).min(a.len())],
+                &b[lo..(i + 8).min(b.len())]
+            );
+        }
+    }
+    format!("lengths differ: encoder {} vs golden {}", a.len(), b.len())
+}
+
+/// Assert today's encoder reproduces the fixture and today's decoder
+/// accepts it (with a canonical re-encode back to the same bytes).
+fn check_golden<T: Persist>(name: &str, live: &T) {
+    let path = golden_dir().join(name);
+    let golden = std::fs::read(&path)
+        .unwrap_or_else(|e| panic!("{name}: missing golden fixture {}: {e}", path.display()));
+    let encoded = live.encode();
+    assert!(
+        encoded == golden,
+        "{name}: encoder drifted from the committed format — {}",
+        first_diff(&encoded, &golden)
+    );
+    let decoded = T::decode(&golden)
+        .unwrap_or_else(|e| panic!("{name}: decoder rejects the committed fixture: {e}"));
+    assert!(
+        decoded.encode() == golden,
+        "{name}: decode∘encode is not the identity on the fixture — {}",
+        first_diff(&decoded.encode(), &golden)
+    );
+}
+
+fn cfg8() -> SamplerConfig {
+    SamplerConfig::new(1.0, 4)
+        .with_seed(42)
+        .with_domain(100)
+        .with_sketch_shape(3, 16)
+}
+
+#[test]
+fn golden_countsketch() {
+    let mut s = CountSketch::with_shape(3, 8, 42);
+    for (k, v) in [(1u64, 2.0), (2, -3.0), (1, 1.0)] {
+        RhhSketch::process(&mut s, &Element::new(k, v));
+    }
+    check_golden("countsketch.worp", &s);
+}
+
+#[test]
+fn golden_countmin() {
+    let mut s = CountMin::with_shape(3, 8, 42);
+    for (k, v) in [(1u64, 2.0), (2, 3.0)] {
+        RhhSketch::process(&mut s, &Element::new(k, v));
+    }
+    check_golden("countmin.worp", &s);
+}
+
+#[test]
+fn golden_anyrhh() {
+    let s = AnyRhh::for_q(1.0, SketchParams::new(3, 8, 42));
+    check_golden("anyrhh.worp", &s);
+}
+
+#[test]
+fn golden_spacesaving() {
+    let mut s: SpaceSaving<u64> = SpaceSaving::new(4);
+    s.process(5, 1.0);
+    s.process(5, 1.0);
+    s.process(7, 2.5);
+    check_golden("spacesaving.worp", &s);
+}
+
+#[test]
+fn golden_topk() {
+    let mut s = TopK::new(3, 4);
+    s.process(1, 2.0, 10.0);
+    s.process(2, 1.0, 5.0);
+    s.process(1, 3.0, 10.0);
+    check_golden("topk.worp", &s);
+}
+
+#[test]
+fn golden_windowsketch() {
+    let s = WindowedCountSketch::new(SketchParams::new(3, 8, 42), 100, 10);
+    check_golden("windowsketch.worp", &s);
+}
+
+#[test]
+fn golden_exact() {
+    let mut s = ExactWor::new(SamplerConfig::new(1.0, 8).with_seed(42).with_domain(100));
+    for (k, v) in [(1u64, 2.0), (2, 3.0), (1, 1.0)] {
+        s.process(&Element::new(k, v));
+    }
+    check_golden("exact.worp", &s);
+}
+
+#[test]
+fn golden_worp1() {
+    check_golden("worp1.worp", &OnePassWorp::new(cfg8()));
+}
+
+#[test]
+fn golden_worp2() {
+    check_golden("worp2.worp", &TwoPassWorp::new(cfg8()));
+}
+
+#[test]
+fn golden_worp2pass2() {
+    check_golden("worp2pass2.worp", &TwoPassWorpPass1::new(cfg8()).into_pass2());
+}
+
+#[test]
+fn golden_tv() {
+    let cfg = TvSamplerConfig::new(1.0, 2, 16, 42, SamplerKind::Oracle).with_r(3);
+    check_golden("tv.worp", &TvSampler::new(cfg));
+}
+
+#[test]
+fn golden_windowed() {
+    check_golden("windowed.worp", &WindowedWorp::new(cfg8(), 50, 5));
+}
+
+#[test]
+fn golden_oracle() {
+    let mut s = OracleSampler::new(1.0, 42);
+    SingleLpSampler::process(&mut s, &Element::new(1, 2.0));
+    check_golden("oracle.worp", &s);
+}
+
+#[test]
+fn golden_precision() {
+    check_golden("precision.worp", &PrecisionSampler::new(1.0, 42, 3, 8));
+}
+
+#[test]
+fn golden_fixtures_decode_through_the_dynamic_path() {
+    // sampler fixtures also decode behind Box<dyn WorSampler> via the
+    // type-tagged envelope, with the right method name
+    use worp::api::WorSampler;
+    for (file, name) in [
+        ("worp1.worp", "1pass"),
+        ("worp2.worp", "2pass"),
+        ("tv.worp", "tv"),
+        ("windowed.worp", "windowed"),
+        ("exact.worp", "exact"),
+    ] {
+        let bytes = std::fs::read(golden_dir().join(file)).unwrap();
+        let s: Box<dyn WorSampler> = worp::codec::decode_sampler(&bytes)
+            .unwrap_or_else(|e| panic!("{file}: dynamic decode failed: {e}"));
+        assert_eq!(s.name(), name, "{file}");
+    }
+}
