@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Render the worp perf artifact (BENCH_PR*.json) as a markdown table.
+
+The artifact is emitted by `worp bench [--smoke] --out BENCH_PR4.json`
+(or `cargo bench --bench throughput`); each summary carries a record per
+ingestion mode — "scalar" (per-element `process`), "batch" (AoS
+`process_batch`) and, from PR 4 on, "block" (SoA `process_block`). This
+script pivots the records into one row per summary with speedup columns,
+ready to paste into the README's Performance section.
+
+Usage: python3 python/bench_table.py rust/BENCH_PR4.json [more.json ...]
+"""
+
+import json
+import sys
+
+MODES = ["scalar", "batch", "block"]
+
+
+def human(n):
+    if n >= 1e9:
+        return f"{n / 1e9:.2f}G"
+    if n >= 1e6:
+        return f"{n / 1e6:.2f}M"
+    if n >= 1e3:
+        return f"{n / 1e3:.1f}k"
+    return f"{n:.0f}"
+
+
+def render(path):
+    with open(path) as f:
+        doc = json.load(f)
+    meta = doc.get("meta", {})
+    by_summary = {}
+    for r in doc.get("results", []):
+        by_summary.setdefault(r["summary"], {})[r["mode"]] = r["items_per_sec"]
+
+    print(
+        f"### {path} — stream_len={meta.get('stream_len')} "
+        f"batch={meta.get('batch')} k={meta.get('k')} smoke={meta.get('smoke')}\n"
+    )
+    modes = [m for m in MODES if any(m in v for v in by_summary.values())]
+    header = ["summary"] + [f"{m} items/s" for m in modes]
+    if "scalar" in modes:
+        header += [f"{m}/scalar" for m in modes if m != "scalar"]
+    print("| " + " | ".join(header) + " |")
+    print("|" + "---|" * len(header))
+    for name, recs in by_summary.items():
+        row = [name]
+        for m in modes:
+            row.append(human(recs[m]) if m in recs else "—")
+        if "scalar" in modes:
+            base = recs.get("scalar")
+            for m in modes:
+                if m == "scalar":
+                    continue
+                if base and m in recs:
+                    row.append(f"{recs[m] / base:.2f}×")
+                else:
+                    row.append("—")
+        print("| " + " | ".join(row) + " |")
+    print()
+
+
+def main():
+    paths = sys.argv[1:]
+    if not paths:
+        print(__doc__, file=sys.stderr)
+        return 2
+    for p in paths:
+        render(p)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

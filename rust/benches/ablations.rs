@@ -78,19 +78,22 @@ fn main() {
         .with_seed(3)
         .with_domain(50_000)
         .with_sketch_shape(5, 1024);
-    let mut t = Table::new("A4: micro-batch size (4 workers)", &["batch", "Melem/s", "stalls"]);
+    let mut t = Table::new(
+        "A4: micro-batch size (4 workers)",
+        &["batch", "Melem/s", "block_reuses"],
+    );
     for &batch in &[64usize, 512, 4096, 32768] {
         let c = worp::coordinator::Coordinator::new(
             cfg.clone(),
             worp::pipeline::PipelineOpts::new(4, batch, 16).unwrap(),
         );
         let t0 = std::time::Instant::now();
-        let (_, m) = c.one_pass(stream.clone()).unwrap();
+        let (_, m) = c.one_pass(&stream).unwrap();
         let dt = t0.elapsed().as_secs_f64();
         t.row(&[
             batch.to_string(),
             format!("{:.2}", stream.len() as f64 / dt / 1e6),
-            m.stalls().to_string(),
+            m.buffer_reuses().to_string(),
         ]);
     }
     t.print();

@@ -84,6 +84,18 @@ fn main() {
         }
         s.processed()
     });
+    // SoA block path (what the parallel-partitioning workers deliver)
+    let blocks: Vec<worp::data::ElementBlock> = stream
+        .chunks(4096)
+        .map(worp::data::ElementBlock::from_elements)
+        .collect();
+    b.bench_throughput("worp1 via StreamSummary::process_block(4096)", m, || {
+        let mut s = OnePassWorp::new(cfg.clone());
+        for blk in &blocks {
+            worp::api::StreamSummary::process_block(&mut s, blk);
+        }
+        s.processed()
+    });
     b.bench_throughput("worp1 via Box<dyn WorSampler> batch(4096)", m, || {
         let mut s = worp::Worp::p(1.0)
             .k(100)
@@ -108,20 +120,20 @@ fn main() {
                 cfg.clone(),
                 PipelineOpts::new(workers, 8192, 16).unwrap(),
             );
-            let (s, _) = c.one_pass(stream.clone()).unwrap();
+            let (s, _) = c.one_pass(&stream).unwrap();
             s.len()
         });
     }
 
-    // ---- machine-readable batch-vs-scalar suite (perf trajectory data)
+    // ---- machine-readable scalar/batch/block suite (perf trajectory)
     // runs before the XLA section, which early-returns when the PJRT
     // runtime is unavailable
-    println!("\n§Perf — batch-vs-scalar suite (BENCH_PR2.json)\n");
+    println!("\n§Perf — scalar/batch/block suite (BENCH_PR4.json)\n");
     let opts = worp::perf::PerfOpts::full();
     let records = worp::perf::run_suite(&opts);
-    match worp::perf::write_json("BENCH_PR2.json", &opts, &records) {
-        Ok(()) => println!("\nwrote {} records to BENCH_PR2.json\n", records.len()),
-        Err(e) => println!("\n(could not write BENCH_PR2.json: {e})\n"),
+    match worp::perf::write_json("BENCH_PR4.json", &opts, &records) {
+        Ok(()) => println!("\nwrote {} records to BENCH_PR4.json\n", records.len()),
+        Err(e) => println!("\n(could not write BENCH_PR4.json: {e})\n"),
     }
 
     // ---- XLA offload (if artifacts exist)

@@ -38,7 +38,7 @@
 
 pub mod builder;
 
-use crate::data::Element;
+use crate::data::{Element, ElementBlock};
 use crate::error::{Error, Result};
 use crate::sampler::{Sample, SamplerConfig};
 use crate::sketch::countmin::CountMin;
@@ -120,6 +120,16 @@ pub trait StreamSummary {
         for e in batch {
             self.process(e);
         }
+    }
+
+    /// Process a structure-of-arrays micro-batch (§Perf L3-7) — the unit
+    /// the sharded pipeline moves. The default bridges to
+    /// [`StreamSummary::process_batch`] through a materialized AoS copy
+    /// (bit-identical by construction, one allocation per call); every
+    /// hot summary overrides it with a true columnar path that reads the
+    /// key/value columns directly and allocates nothing.
+    fn process_block(&mut self, block: &ElementBlock) {
+        self.process_batch(&block.to_elements());
     }
 
     /// Summary size in memory words (f64/u64 cells).
@@ -288,6 +298,10 @@ impl<T: StreamSummary + ?Sized> StreamSummary for Box<T> {
         (**self).process_batch(batch)
     }
 
+    fn process_block(&mut self, block: &ElementBlock) {
+        (**self).process_block(block)
+    }
+
     fn size_words(&self) -> usize {
         (**self).size_words()
     }
@@ -308,6 +322,11 @@ impl StreamSummary for CountSketch {
     /// Columnar batch path (§Perf L3-6): block hashing + row-major sweeps.
     fn process_batch(&mut self, batch: &[Element]) {
         CountSketch::process_batch(self, batch)
+    }
+
+    /// SoA block path (§Perf L3-7): hashes straight off the key column.
+    fn process_block(&mut self, block: &ElementBlock) {
+        CountSketch::process_cols(self, &block.keys, &block.vals)
     }
 
     fn size_words(&self) -> usize {
@@ -343,6 +362,11 @@ impl StreamSummary for CountMin {
         CountMin::process_batch(self, batch)
     }
 
+    /// SoA block path (§Perf L3-7).
+    fn process_block(&mut self, block: &ElementBlock) {
+        CountMin::process_cols(self, &block.keys, &block.vals)
+    }
+
     fn size_words(&self) -> usize {
         RhhSketch::size_words(self)
     }
@@ -374,6 +398,11 @@ impl StreamSummary for AnyRhh {
     /// Columnar batch path (§Perf L3-6), dispatched to the wrapped sketch.
     fn process_batch(&mut self, batch: &[Element]) {
         AnyRhh::process_batch(self, batch)
+    }
+
+    /// SoA block path (§Perf L3-7), dispatched to the wrapped sketch.
+    fn process_block(&mut self, block: &ElementBlock) {
+        AnyRhh::process_cols(self, &block.keys, &block.vals)
     }
 
     fn size_words(&self) -> usize {
@@ -409,6 +438,11 @@ impl StreamSummary for SpaceSaving<u64> {
     /// lazy-deletion eviction heap.
     fn process_batch(&mut self, batch: &[Element]) {
         SpaceSaving::process_elements(self, batch)
+    }
+
+    /// SoA block path (§Perf L3-7): updates stream off the dense columns.
+    fn process_block(&mut self, block: &ElementBlock) {
+        SpaceSaving::process_cols(self, &block.keys, &block.vals)
     }
 
     fn size_words(&self) -> usize {
@@ -472,6 +506,51 @@ mod tests {
         StreamSummary::process_batch(&mut b, &batch);
         assert_eq!(a.table(), b.table());
         assert_eq!(StreamSummary::processed(&a), StreamSummary::processed(&b));
+    }
+
+    #[test]
+    fn block_default_bridges_to_batch() {
+        // a summary with no override must see the identical elements
+        // through process_block as through process_batch
+        struct Collect(Vec<Element>);
+        impl StreamSummary for Collect {
+            fn process(&mut self, e: &Element) {
+                self.0.push(*e);
+            }
+            fn size_words(&self) -> usize {
+                0
+            }
+            fn processed(&self) -> u64 {
+                self.0.len() as u64
+            }
+        }
+        let elems: Vec<Element> = (0..10u64).map(|i| Element::new(i, i as f64)).collect();
+        let block = crate::data::ElementBlock::from_elements(&elems);
+        let mut c = Collect(Vec::new());
+        c.process_block(&block);
+        assert_eq!(c.0, elems);
+    }
+
+    #[test]
+    fn sketch_block_overrides_bit_identical_to_scalar() {
+        let params = SketchParams::new(5, 128, 11);
+        let mut scalar = CountSketch::new(params);
+        let mut blocked = CountSketch::new(params);
+        let elems: Vec<Element> = (0..200u64)
+            .map(|i| Element::new(i % 17, i as f64 - 100.0))
+            .collect();
+        for e in &elems {
+            StreamSummary::process(&mut scalar, e);
+        }
+        for c in elems.chunks(33) {
+            let block = crate::data::ElementBlock::from_elements(c);
+            StreamSummary::process_block(&mut blocked, &block);
+        }
+        assert_eq!(scalar.table(), blocked.table());
+        assert_eq!(
+            StreamSummary::processed(&scalar),
+            StreamSummary::processed(&blocked)
+        );
     }
 
     #[test]

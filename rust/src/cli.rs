@@ -131,10 +131,10 @@ COMMANDS:
                   --out <merged.worp>    also write the merged state
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
-    bench       batch-vs-scalar ingestion throughput per summary,
-                written as machine-readable JSON
+    bench       scalar vs batch vs SoA-block ingestion throughput per
+                summary, written as machine-readable JSON
                   --smoke                 small CI profile (default: full)
-                  --out <path>            output file (default BENCH_PR2.json)
+                  --out <path>            output file (default BENCH_PR4.json)
                   --stream-len <n> --n <keys> --batch <n> --iters <n> --k <n>
     info        print runtime / artifact status
     help        show this text
@@ -324,22 +324,23 @@ fn cmd_shard(args: &Args) -> Result<()> {
             sampler.name()
         )));
     }
-    // stream the partition through one reusable micro-batch buffer — no
-    // second materialized copy of the (possibly huge) element stream
+    // stream the partition through one reusable SoA block — no second
+    // materialized copy of the (possibly huge) element stream, and the
+    // sampler ingests through its columnar process_block path
     let batch = cfg.batch.max(1);
-    let mut chunk: Vec<Element> = Vec::with_capacity(batch);
+    let mut block = crate::data::ElementBlock::with_capacity(batch);
     for (i, e) in make_stream(&cfg).into_iter().enumerate() {
         if i % shards != index {
             continue;
         }
-        chunk.push(e);
-        if chunk.len() == batch {
-            sampler.process_batch(&chunk);
-            chunk.clear();
+        block.push(e.key, e.val);
+        if block.len() == batch {
+            sampler.process_block(&block);
+            block.clear();
         }
     }
-    if !chunk.is_empty() {
-        sampler.process_batch(&chunk);
+    if !block.is_empty() {
+        sampler.process_block(&block);
     }
     let mut bytes = Vec::new();
     sampler.encode_state(&mut bytes);
@@ -439,8 +440,8 @@ fn cmd_psi(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `worp bench`: run the batch-vs-scalar ingestion suite and emit the
-/// machine-readable perf artifact (`BENCH_PR2.json` by default). Smoke
+/// `worp bench`: run the scalar/batch/block ingestion suite and emit the
+/// machine-readable perf artifact (`BENCH_PR4.json` by default). Smoke
 /// mode is the CI profile — it exists to catch panics and keep the
 /// artifact schema alive, not to produce stable numbers.
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -454,7 +455,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     opts.batch = args.parse_or("batch", opts.batch)?;
     opts.iters = args.parse_or("iters", opts.iters)?;
     opts.k = args.parse_or("k", opts.k)?;
-    let out = args.str_or("out", "BENCH_PR2.json");
+    let out = args.str_or("out", "BENCH_PR4.json");
     println!(
         "bench: stream_len={} n_keys={} batch={} iters={} k={} smoke={}\n",
         opts.stream_len, opts.n_keys, opts.batch, opts.iters, opts.k, opts.smoke

@@ -11,7 +11,7 @@
 //! against the bytes actually remaining *before* any allocation
 //! ([`Reader::seq_len`]), so a length-field lie cannot trigger an OOM.
 
-use crate::data::Element;
+use crate::data::{Element, ElementBlock};
 use crate::error::{Error, Result};
 
 /// Magic prefix of a persistence envelope (`*.worp` files).
@@ -74,11 +74,59 @@ pub fn element_to_bytes(e: &Element) -> [u8; 16] {
 /// Decode a 16-byte element record.
 #[inline]
 pub fn element_from_bytes(b: &[u8; 16]) -> Element {
+    let (key, val) = element_parts_from_bytes(b);
+    Element::new(key, val)
+}
+
+/// Decode a 16-byte element record into its columns (§Perf L3-7): the
+/// SoA block path appends key and value to separate arrays without ever
+/// materializing an [`Element`] struct.
+#[inline]
+pub fn element_parts_from_bytes(b: &[u8; 16]) -> (u64, f64) {
     let mut kb = [0u8; 8];
     let mut vb = [0u8; 8];
     kb.copy_from_slice(&b[..8]);
     vb.copy_from_slice(&b[8..]);
-    Element::new(u64::from_le_bytes(kb), f64::from_le_bytes(vb))
+    (u64::from_le_bytes(kb), f64::from_le_bytes(vb))
+}
+
+/// Append one element record from its columns — the writing half of the
+/// SoA path ([`element_to_bytes`] is the AoS equivalent; both produce
+/// the identical 16-byte layout).
+#[inline]
+pub fn put_element_parts(out: &mut Vec<u8>, key: u64, val: f64) {
+    put_u64(out, key);
+    put_f64(out, val);
+}
+
+/// Serialize a whole [`ElementBlock`] as consecutive 16-byte element
+/// records, reading straight off the SoA columns.
+pub fn put_block(out: &mut Vec<u8>, block: &ElementBlock) {
+    out.reserve(16 * block.len());
+    for (&key, &val) in block.keys.iter().zip(&block.vals) {
+        put_element_parts(out, key, val);
+    }
+}
+
+/// Parse a run of 16-byte element records into the SoA columns of
+/// `block` (appending). `bytes.len()` must be a multiple of 16.
+pub fn read_block_into(bytes: &[u8], block: &mut ElementBlock) -> Result<()> {
+    if bytes.len() % 16 != 0 {
+        return Err(Error::Codec(format!(
+            "element-record run of {} bytes is not a multiple of 16",
+            bytes.len()
+        )));
+    }
+    let n = bytes.len() / 16;
+    block.keys.reserve(n);
+    block.vals.reserve(n);
+    for rec in bytes.chunks_exact(16) {
+        let mut b = [0u8; 16];
+        b.copy_from_slice(rec);
+        let (key, val) = element_parts_from_bytes(&b);
+        block.push(key, val);
+    }
+    Ok(())
 }
 
 /// Bounds-checked cursor over untrusted bytes. Every failure is a typed
@@ -250,6 +298,41 @@ mod tests {
         let e = Element::new(0xFEED_F00D, -3.25);
         let b = element_to_bytes(&e);
         assert_eq!(element_from_bytes(&b), e);
+    }
+
+    #[test]
+    fn element_parts_agree_with_struct_helpers() {
+        let e = Element::new(0xDEAD_BEEF, -7.125);
+        let mut via_parts = Vec::new();
+        put_element_parts(&mut via_parts, e.key, e.val);
+        assert_eq!(via_parts.as_slice(), &element_to_bytes(&e)[..]);
+        let mut b = [0u8; 16];
+        b.copy_from_slice(&via_parts);
+        assert_eq!(element_parts_from_bytes(&b), (e.key, e.val));
+    }
+
+    #[test]
+    fn block_records_roundtrip_and_match_element_records() {
+        let elems = vec![
+            Element::new(1, 0.5),
+            Element::new(u64::MAX, -0.0),
+            Element::new(42, f64::MIN_POSITIVE),
+        ];
+        let block = ElementBlock::from_elements(&elems);
+        let mut via_block = Vec::new();
+        put_block(&mut via_block, &block);
+        let mut via_elems = Vec::new();
+        for e in &elems {
+            via_elems.extend_from_slice(&element_to_bytes(e));
+        }
+        assert_eq!(via_block, via_elems, "SoA and AoS writers must agree byte-for-byte");
+        let mut back = ElementBlock::new();
+        read_block_into(&via_block, &mut back).unwrap();
+        assert_eq!(back.keys, block.keys);
+        assert_eq!(back.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   block.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        // ragged runs are malformed, not a panic
+        assert!(read_block_into(&via_block[..17], &mut back).is_err());
     }
 
     #[test]

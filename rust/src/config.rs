@@ -225,9 +225,11 @@ pub struct PipelineConfig {
     pub seed: u64,
     /// Number of shard workers.
     pub workers: usize,
-    /// Micro-batch size on worker channels.
+    /// Elements per worker SoA block (and the checkpoint alignment unit).
     pub batch: usize,
-    /// Bounded-channel capacity (batches) — backpressure window.
+    /// Legacy knob of the retired channel-based router (its backpressure
+    /// window). Accepted and validated for config compatibility; the
+    /// scan-partitioning pipeline has no channels and ignores it.
     pub channel_cap: usize,
     /// Checkpoint directory ("" = checkpointing off). When set, sharded
     /// runs snapshot worker states there and resume from existing

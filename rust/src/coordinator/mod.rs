@@ -18,18 +18,41 @@ use crate::data::Element;
 use crate::error::{Error, Result};
 use crate::pipeline::merge::{merge_all, tree_merge};
 use crate::pipeline::metrics::Metrics;
-use crate::pipeline::{run_sharded, run_sharded_checkpointed, CheckpointPolicy, PipelineOpts};
+use crate::pipeline::{
+    run_sharded, run_sharded_checkpointed, CheckpointPolicy, ParallelSource, PipelineOpts,
+};
 use crate::sampler::worp1::OnePassWorp;
 use crate::sampler::worp2::TwoPassWorp;
 use crate::sampler::{Sample, SamplerConfig};
 use std::sync::Arc;
 
-/// A replayable element source (two-pass methods read it twice).
-/// Implementations must produce the *same multiset of elements* on every
+/// A replayable element source (two-pass methods read it twice; the
+/// parallel-partitioning pipeline scans it once *per worker*).
+/// Implementations must produce the *same sequence of elements* on every
 /// call — e.g. a deterministic generator or an in-memory/spooled buffer.
-pub trait StreamSource {
+/// `Sync` because the pipeline workers all stream through one shared
+/// reference, concurrently.
+pub trait StreamSource: Sync {
     /// A fresh iterator over the stream.
     fn stream(&self) -> Box<dyn Iterator<Item = Element> + Send + '_>;
+}
+
+/// Bridge a [`StreamSource`] (dynamically-dispatched, what
+/// [`Coordinator::run_dyn`] holds) into the pipeline's
+/// [`ParallelSource`]: each worker's scan is one `stream()` call.
+pub struct SourceScan<'a, S: StreamSource + ?Sized>(pub &'a S);
+
+impl<'a, S: StreamSource + ?Sized> ParallelSource for SourceScan<'a, S> {
+    type Iter<'b> = Box<dyn Iterator<Item = Element> + Send + 'a>
+    where
+        Self: 'b;
+
+    fn scan(&self) -> Self::Iter<'_> {
+        // copy the `&'a S` out so the returned iterator borrows the
+        // source for 'a, not merely for this `&self` borrow
+        let source: &'a S = self.0;
+        source.stream()
+    }
 }
 
 /// In-memory stream (owns the elements; trivially replayable).
@@ -41,12 +64,25 @@ impl StreamSource for VecSource {
     }
 }
 
+/// Monomorphic scan for the typed pipeline entry points — no per-element
+/// dynamic dispatch when a `VecSource` is used directly as a
+/// [`ParallelSource`].
+impl ParallelSource for VecSource {
+    type Iter<'a> = std::iter::Copied<std::slice::Iter<'a, Element>>
+    where
+        Self: 'a;
+
+    fn scan(&self) -> Self::Iter<'_> {
+        self.0.iter().copied()
+    }
+}
+
 /// A replayable deterministic generator: any `Fn() -> Iterator`.
 pub struct FnSource<F>(pub F);
 
 impl<F, I> StreamSource for FnSource<F>
 where
-    F: Fn() -> I,
+    F: Fn() -> I + Sync,
     I: Iterator<Item = Element> + Send + 'static,
 {
     fn stream(&self) -> Box<dyn Iterator<Item = Element> + Send + '_> {
@@ -113,16 +149,17 @@ impl Coordinator {
         &self.sampler_cfg
     }
 
-    /// Shard `stream` across the workers, each owning a clone of `proto`,
-    /// and fold the per-shard summaries back through the
-    /// fingerprint-checked merge tree. Works for any [`Mergeable`]
-    /// summary: samplers, sketches, pass states.
-    pub fn run_summary<S, I>(&self, stream: I, proto: S) -> Result<(S, Arc<Metrics>)>
+    /// Shard `source` across the workers (each scans it in parallel and
+    /// keeps its own hash-partition), each owning a clone of `proto`, and
+    /// fold the per-shard summaries back through the fingerprint-checked
+    /// merge tree. Works for any [`Mergeable`] summary: samplers,
+    /// sketches, pass states.
+    pub fn run_summary<S, Src>(&self, source: &Src, proto: S) -> Result<(S, Arc<Metrics>)>
     where
         S: Mergeable + Clone + Send + 'static,
-        I: IntoIterator<Item = Element>,
+        Src: ParallelSource + ?Sized,
     {
-        let (states, metrics) = run_sharded(stream, self.opts, move |_| proto.clone())?;
+        let (states, metrics) = run_sharded(source, self.opts, move |_| proto.clone())?;
         let merged = merge_all(states, &metrics)?
             .ok_or_else(|| Error::Pipeline("no workers".into()))?;
         Ok((merged, metrics))
@@ -132,16 +169,20 @@ impl Coordinator {
     /// typed summaries: shard states snapshot to (and resume from) the
     /// coordinator's checkpoint directory. Falls back to the plain path
     /// when no policy is configured.
-    pub fn run_summary_checkpointed<S, I>(&self, stream: I, proto: S) -> Result<(S, Arc<Metrics>)>
+    pub fn run_summary_checkpointed<S, Src>(
+        &self,
+        source: &Src,
+        proto: S,
+    ) -> Result<(S, Arc<Metrics>)>
     where
         S: Mergeable + Persist + Clone + Send + 'static,
-        I: IntoIterator<Item = Element>,
+        Src: ParallelSource + ?Sized,
     {
         let Some(policy) = &self.checkpoint else {
-            return self.run_summary(stream, proto);
+            return self.run_summary(source, proto);
         };
         let (states, metrics) =
-            run_sharded_checkpointed(stream, self.opts, policy, move |_| proto.clone())?;
+            run_sharded_checkpointed(source, self.opts, policy, move |_| proto.clone())?;
         let merged = merge_all(states, &metrics)?
             .ok_or_else(|| Error::Pipeline("no workers".into()))?;
         Ok((merged, metrics))
@@ -178,12 +219,12 @@ impl Coordinator {
             // type-tagged envelope
             let (states, m) = match &self.checkpoint {
                 Some(policy) => run_sharded_checkpointed(
-                    source.stream(),
+                    &SourceScan(source),
                     opts,
                     &policy.for_pass(pass),
                     move |_| template.clone(),
                 )?,
-                None => run_sharded(source.stream(), opts, move |_| template.clone())?,
+                None => run_sharded(&SourceScan(source), opts, move |_| template.clone())?,
             };
             current = tree_merge(states, &m, |a, b| a.merge_dyn(&**b))?
                 .ok_or_else(|| Error::Pipeline("no workers".into()))?;
@@ -196,12 +237,12 @@ impl Coordinator {
     /// 1-pass WORp over a sharded pipeline: each worker owns a sibling
     /// `OnePassWorp` (same seed → same randomization), the leader
     /// tree-merges them and extracts the sample.
-    pub fn one_pass<I>(&self, stream: I) -> Result<(Sample, Arc<Metrics>)>
+    pub fn one_pass<Src>(&self, source: &Src) -> Result<(Sample, Arc<Metrics>)>
     where
-        I: IntoIterator<Item = Element>,
+        Src: ParallelSource + ?Sized,
     {
         let proto = OnePassWorp::new(self.sampler_cfg.clone());
-        let (merged, metrics) = self.run_summary(stream, proto)?;
+        let (merged, metrics) = self.run_summary(source, proto)?;
         Ok((merged.finalize(), metrics))
     }
 
@@ -209,11 +250,11 @@ impl Coordinator {
     /// and merges them; [`MultiPass::advance`] arms pass II; the replayed
     /// stream fills sharded collectors seeded with the *merged* pass-I
     /// sketch; the leader merges collectors and cuts the exact sample.
-    pub fn two_pass<S: StreamSource>(&self, source: &S) -> Result<(Sample, Arc<Metrics>)> {
+    pub fn two_pass<S: StreamSource + ?Sized>(&self, source: &S) -> Result<(Sample, Arc<Metrics>)> {
         let proto = TwoPassWorp::new(self.sampler_cfg.clone());
-        let (mut w, _m1) = self.run_summary(source.stream(), proto)?;
+        let (mut w, _m1) = self.run_summary(&SourceScan(source), proto)?;
         w.advance()?;
-        let (w, metrics) = self.run_summary(source.stream(), w)?;
+        let (w, metrics) = self.run_summary(&SourceScan(source), w)?;
         // fold pass-I counters into the returned metrics
         metrics.note_batch(0);
         Ok((w.sample()?, metrics))
@@ -312,7 +353,7 @@ mod tests {
         let k = 16;
         let c = Coordinator::new(cfg(n, k), PipelineOpts::new(4, 256, 4).unwrap());
         let elems = zipf_exact_stream(n, 1.5, 1e4, 3, 7);
-        let (sample, metrics) = c.one_pass(elems.clone()).unwrap();
+        let (sample, metrics) = c.one_pass(&elems).unwrap();
         assert_eq!(metrics.elements() as usize, elems.len());
         assert_eq!(sample.len(), k);
         let want = perfect_ppswor(&zipf_frequencies(n, 1.5, 1e4), 1.0, k, 77);
@@ -373,7 +414,7 @@ mod tests {
         let (dyn1, _) = c
             .run_dyn(&src, builder.clone().one_pass().build().unwrap())
             .unwrap();
-        let (typed1, _) = c.one_pass(elems.clone()).unwrap();
+        let (typed1, _) = c.one_pass(&elems).unwrap();
         assert_eq!(dyn1.keys(), typed1.keys());
 
         let (dyn2, m2) = c
@@ -427,7 +468,7 @@ mod tests {
         let c = Coordinator::new(cfg(100, 5), PipelineOpts::new(2, 64, 4).unwrap());
         let stream: Vec<Element> = ZipfStream::new(100, 1.0, 1000, 3).collect();
         let (states, metrics) =
-            run_sharded(stream, PipelineOpts::new(2, 64, 4).unwrap(), |shard| {
+            run_sharded(&stream, PipelineOpts::new(2, 64, 4).unwrap(), |shard| {
                 CountSketch::new(SketchParams::new(3, 64, shard as u64))
             })
             .unwrap();

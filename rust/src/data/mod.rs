@@ -29,6 +29,93 @@ impl Element {
     }
 }
 
+/// A structure-of-arrays micro-batch of elements (§Perf L3-7): keys and
+/// values live in two parallel dense arrays instead of interleaved
+/// `(u64, f64)` structs.
+///
+/// This is the unit the hot path moves: pipeline workers fill reusable
+/// blocks from their source scan, [`crate::api::StreamSummary::process_block`]
+/// consumes them, and the columnar sketch kernels hash straight off the
+/// `keys` slice while sweeping values off the `vals` slice — no
+/// per-element struct loads, and the key column alone fits ~2× more
+/// entries per cache line than an AoS `Vec<Element>`.
+///
+/// Invariant: `keys.len() == vals.len()` (every mutator preserves it).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ElementBlock {
+    /// Key column.
+    pub keys: Vec<u64>,
+    /// Value column (same length as `keys`).
+    pub vals: Vec<f64>,
+}
+
+impl ElementBlock {
+    /// An empty block.
+    pub fn new() -> Self {
+        ElementBlock::default()
+    }
+
+    /// An empty block with room for `cap` elements in both columns.
+    pub fn with_capacity(cap: usize) -> Self {
+        ElementBlock {
+            keys: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Build a block from an AoS element slice (tests, bridging).
+    pub fn from_elements(elems: &[Element]) -> Self {
+        ElementBlock {
+            keys: elems.iter().map(|e| e.key).collect(),
+            vals: elems.iter().map(|e| e.val).collect(),
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        debug_assert_eq!(self.keys.len(), self.vals.len());
+        self.keys.len()
+    }
+
+    /// True when the block holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Append one element.
+    #[inline]
+    pub fn push(&mut self, key: u64, val: f64) {
+        self.keys.push(key);
+        self.vals.push(val);
+    }
+
+    /// Drop all elements, keeping both allocations (the reuse path).
+    pub fn clear(&mut self) {
+        self.keys.clear();
+        self.vals.clear();
+    }
+
+    /// The element at `i` (panics out of bounds).
+    #[inline]
+    pub fn get(&self, i: usize) -> Element {
+        Element::new(self.keys[i], self.vals[i])
+    }
+
+    /// Iterate the block as [`Element`]s (the AoS bridge).
+    pub fn iter(&self) -> impl Iterator<Item = Element> + '_ {
+        self.keys
+            .iter()
+            .zip(&self.vals)
+            .map(|(&key, &val)| Element::new(key, val))
+    }
+
+    /// Materialize as an AoS vector (the default
+    /// [`crate::api::StreamSummary::process_block`] bridge).
+    pub fn to_elements(&self) -> Vec<Element> {
+        self.iter().collect()
+    }
+}
+
 /// Aggregate a stream of elements into the frequency map `x -> ν_x`.
 pub fn aggregate<I: IntoIterator<Item = Element>>(elems: I) -> HashMap<u64, f64> {
     let mut m: HashMap<u64, f64> = HashMap::new();
@@ -131,6 +218,40 @@ mod tests {
         assert_eq!(v.order(), vec![1, 0, 2]);
         assert_eq!(v.top_k(2), vec![(1, -5.0), (0, 3.0)]);
         assert_eq!(v.rank_frequency(), vec![5.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn element_block_roundtrips_elements() {
+        let elems = vec![
+            Element::new(7, 1.5),
+            Element::new(3, -2.0),
+            Element::new(7, 0.25),
+        ];
+        let block = ElementBlock::from_elements(&elems);
+        assert_eq!(block.len(), 3);
+        assert!(!block.is_empty());
+        assert_eq!(block.keys, vec![7, 3, 7]);
+        assert_eq!(block.vals, vec![1.5, -2.0, 0.25]);
+        assert_eq!(block.get(1), elems[1]);
+        assert_eq!(block.to_elements(), elems);
+        let collected: Vec<Element> = block.iter().collect();
+        assert_eq!(collected, elems);
+    }
+
+    #[test]
+    fn element_block_push_clear_reuses_capacity() {
+        let mut b = ElementBlock::with_capacity(8);
+        for i in 0..8u64 {
+            b.push(i, i as f64);
+        }
+        assert_eq!(b.len(), 8);
+        let (kc, vc) = (b.keys.capacity(), b.vals.capacity());
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.keys.capacity(), kc);
+        assert_eq!(b.vals.capacity(), vc);
+        b.push(9, 9.0);
+        assert_eq!(b.get(0), Element::new(9, 9.0));
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! ℓp-Sampling Without Replacement"* (2020), as a three-layer
 //! Rust + JAX + Pallas system:
 //!
-//! - **Layer 3 (this crate)**: a streaming-pipeline coordinator — sharded
-//!   workers over unaggregated element streams, composable sketch merging,
-//!   bounded-channel backpressure, multi-pass orchestration — plus native
-//!   implementations of every sketch and sampler the paper uses.
+//! - **Layer 3 (this crate)**: a streaming-pipeline coordinator — workers
+//!   that partition unaggregated element streams in parallel (each scans
+//!   the replayable source and keeps its own hash-shard, packed into
+//!   structure-of-arrays blocks), composable sketch merging, multi-pass
+//!   orchestration — plus native implementations of every sketch and
+//!   sampler the paper uses.
 //! - **Layer 2/1 (build time, `python/compile`)**: the CountSketch update /
 //!   estimate hot paths authored as Pallas kernels inside a JAX graph,
 //!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT
@@ -21,7 +23,7 @@
 //!
 //! | trait | contract |
 //! |---|---|
-//! | [`api::StreamSummary`] | `process` / `process_batch` / `size_words` / `processed` |
+//! | [`api::StreamSummary`] | `process` / `process_batch` / `process_block` (SoA) / `size_words` / `processed` |
 //! | [`api::Mergeable`] | fingerprint-checked `merge` (incompatible seeds/shapes fail loudly) |
 //! | [`api::Finalize`] | `finalize() -> Output` (a [`sampler::Sample`] for WOR samplers) |
 //! | [`api::MultiPass`] | `passes` / `pass` / `advance` — pass handoff as a state machine |

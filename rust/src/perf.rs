@@ -1,16 +1,18 @@
 //! Machine-readable performance suite — the data source for the perf
-//! trajectory (`BENCH_PR2.json`).
+//! trajectory (`BENCH_PR2.json` → `BENCH_PR4.json`).
 //!
 //! One suite, two drivers: the `worp bench` CLI subcommand (smoke mode in
 //! CI — fails on panics, never on numbers) and `cargo bench --bench
-//! throughput` (full mode). Each summary is measured twice over the same
-//! seeded Zipf stream: the scalar [`StreamSummary::process`] loop and the
-//! micro-batched [`StreamSummary::process_batch`] path, so every record
-//! pair quantifies what the columnar hot path buys.
+//! throughput` (full mode). Each summary is measured **three** times over
+//! the same seeded Zipf stream: the scalar [`StreamSummary::process`]
+//! loop, the AoS micro-batched [`StreamSummary::process_batch`] path, and
+//! the SoA [`StreamSummary::process_block`] path (§Perf L3-7) — so every
+//! record triple quantifies first what columnar sweeps buy over scalar,
+//! then what the structure-of-arrays layout buys on top.
 
 use crate::api::StreamSummary;
 use crate::data::zipf::ZipfStream;
-use crate::data::Element;
+use crate::data::{Element, ElementBlock};
 use crate::sampler::exact::ExactWor;
 use crate::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
 use crate::sampler::windowed::WindowedWorp;
@@ -76,7 +78,8 @@ impl PerfOpts {
 pub struct PerfRecord {
     /// Summary under test ("countsketch", "worp1", "ppswor", ...).
     pub summary: String,
-    /// "scalar" (per-element `process`) or "batch" (`process_batch`).
+    /// "scalar" (per-element `process`), "batch" (AoS `process_batch`)
+    /// or "block" (SoA `process_block`).
     pub mode: String,
     /// Items per second (mean over iterations).
     pub items_per_sec: f64,
@@ -88,11 +91,12 @@ pub struct PerfRecord {
     pub p95_ns: u128,
 }
 
-fn bench_pair<S, F>(
+fn bench_triple<S, F>(
     b: &mut Bencher,
     out: &mut Vec<PerfRecord>,
     name: &str,
     stream: &[Element],
+    blocks: &[ElementBlock],
     batch: usize,
     make: F,
 ) where
@@ -116,6 +120,20 @@ fn bench_pair<S, F>(
         s.processed()
     });
     out.push(record(name, "batch", batched));
+    let blocked = b.bench_throughput(&format!("{name} block({batch})"), m, || {
+        let mut s = make();
+        for blk in blocks {
+            s.process_block(blk);
+        }
+        s.processed()
+    });
+    out.push(record(name, "block", blocked));
+}
+
+/// Pre-chunk a stream into SoA blocks of `batch` elements (done once per
+/// suite so the block benches measure ingestion, not conversion).
+fn blocks_of(stream: &[Element], batch: usize) -> Vec<ElementBlock> {
+    stream.chunks(batch).map(ElementBlock::from_elements).collect()
 }
 
 fn record(name: &str, mode: &str, r: &crate::util::bench::BenchResult) -> PerfRecord {
@@ -129,9 +147,10 @@ fn record(name: &str, mode: &str, r: &crate::util::bench::BenchResult) -> PerfRe
     }
 }
 
-/// Run the batch-vs-scalar suite over every summary family.
+/// Run the scalar/batch/block suite over every summary family.
 pub fn run_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
     let stream: Vec<Element> = ZipfStream::new(opts.n_keys, 1.2, opts.stream_len, 1).collect();
+    let blocks = blocks_of(&stream, opts.batch);
     let k = opts.k;
     let cfg = SamplerConfig::new(1.0, k)
         .with_seed(3)
@@ -142,26 +161,26 @@ pub fn run_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
     let mut b = Bencher::new().with_iters(opts.warmup, opts.iters);
     let mut out = Vec::new();
 
-    bench_pair(&mut b, &mut out, "countsketch", &stream, opts.batch, || {
+    bench_triple(&mut b, &mut out, "countsketch", &stream, &blocks, opts.batch, || {
         CountSketch::with_shape(5, 1024, 7)
     });
-    bench_pair(&mut b, &mut out, "countmin", &stream, opts.batch, || {
+    bench_triple(&mut b, &mut out, "countmin", &stream, &blocks, opts.batch, || {
         CountMin::with_shape(5, 1024, 7)
     });
-    bench_pair(&mut b, &mut out, "worp1", &stream, opts.batch, {
+    bench_triple(&mut b, &mut out, "worp1", &stream, &blocks, opts.batch, {
         let cfg = cfg.clone();
         move || OnePassWorp::new(cfg.clone())
     });
-    bench_pair(&mut b, &mut out, "worp2-pass1", &stream, opts.batch, {
+    bench_triple(&mut b, &mut out, "worp2-pass1", &stream, &blocks, opts.batch, {
         let cfg = cfg.clone();
         move || TwoPassWorp::new(cfg.clone())
     });
     // "ppswor": the exact streaming p-ppswor baseline (linear memory)
-    bench_pair(&mut b, &mut out, "ppswor", &stream, opts.batch, {
+    bench_triple(&mut b, &mut out, "ppswor", &stream, &blocks, opts.batch, {
         let cfg = cfg.clone();
         move || ExactWor::new(cfg.clone())
     });
-    bench_pair(&mut b, &mut out, "windowed", &stream, opts.batch, {
+    bench_triple(&mut b, &mut out, "windowed", &stream, &blocks, opts.batch, {
         let cfg = cfg.clone();
         let window = (opts.stream_len / 2).max(16);
         move || WindowedWorp::new(cfg.clone(), window, 8)
@@ -169,7 +188,8 @@ pub fn run_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
     // the TV sampler runs r parallel single samplers; keep its stream
     // slice small so the suite stays minutes, not hours
     let tv_stream = &stream[..stream.len().min(opts.stream_len as usize / 16).max(1)];
-    bench_pair(&mut b, &mut out, "tv1pass", tv_stream, opts.batch, {
+    let tv_blocks = blocks_of(tv_stream, opts.batch);
+    bench_triple(&mut b, &mut out, "tv1pass", tv_stream, &tv_blocks, opts.batch, {
         let n = opts.n_keys;
         move || TvSampler::new(TvSamplerConfig::new(1.0, 8, n, 3, SamplerKind::Oracle).with_r(32))
     });
@@ -230,10 +250,19 @@ mod tests {
             smoke: true,
         };
         let records = run_suite(&opts);
-        // every summary contributes a scalar + batch pair
-        assert_eq!(records.len() % 2, 0);
-        for name in ["countsketch", "worp1", "ppswor"] {
-            for mode in ["scalar", "batch"] {
+        // every summary contributes a scalar + batch + block triple
+        assert_eq!(records.len() % 3, 0);
+        let names = [
+            "countsketch",
+            "countmin",
+            "worp1",
+            "worp2-pass1",
+            "ppswor",
+            "windowed",
+            "tv1pass",
+        ];
+        for name in names {
+            for mode in ["scalar", "batch", "block"] {
                 assert!(
                     records
                         .iter()

@@ -1,4 +1,4 @@
-//! Pipeline run metrics: lock-free counters shared between the router,
+//! Pipeline run metrics: lock-free counters shared between the scan
 //! workers and the leader. Reported by the launcher and the benches.
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -9,7 +9,6 @@ use std::time::Instant;
 pub struct Metrics {
     elements: AtomicU64,
     batches: AtomicU64,
-    stalls: AtomicU64,
     merges: AtomicU64,
     buffer_reuses: AtomicU64,
     snapshots: AtomicU64,
@@ -22,7 +21,6 @@ impl Default for Metrics {
         Metrics {
             elements: AtomicU64::new(0),
             batches: AtomicU64::new(0),
-            stalls: AtomicU64::new(0),
             merges: AtomicU64::new(0),
             buffer_reuses: AtomicU64::new(0),
             snapshots: AtomicU64::new(0),
@@ -37,11 +35,6 @@ impl Metrics {
     pub fn note_batch(&self, n: u64) {
         self.elements.fetch_add(n, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Record a backpressure stall (router blocked on a full channel).
-    pub fn note_stall(&self) {
-        self.stalls.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a sketch merge.
@@ -63,11 +56,6 @@ impl Metrics {
     /// Total batches processed.
     pub fn batches(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
-    }
-
-    /// Backpressure stalls observed by the router.
-    pub fn stalls(&self) -> u64 {
-        self.stalls.load(Ordering::Relaxed)
     }
 
     /// Merges performed.
@@ -118,10 +106,9 @@ impl Metrics {
     /// One-line report.
     pub fn report(&self) -> String {
         format!(
-            "elements={} batches={} stalls={} merges={} buffer_reuses={} snapshots={} restores={} elapsed={:.3}s throughput={:.2}M/s",
+            "elements={} batches={} merges={} buffer_reuses={} snapshots={} restores={} elapsed={:.3}s throughput={:.2}M/s",
             self.elements(),
             self.batches(),
-            self.stalls(),
             self.merges(),
             self.buffer_reuses(),
             self.snapshots(),
@@ -141,7 +128,6 @@ mod tests {
         let m = Metrics::default();
         m.note_batch(10);
         m.note_batch(5);
-        m.note_stall();
         m.note_merge();
         m.note_buffer_reuse();
         m.note_snapshot();
@@ -149,7 +135,6 @@ mod tests {
         m.note_restore();
         assert_eq!(m.elements(), 15);
         assert_eq!(m.batches(), 2);
-        assert_eq!(m.stalls(), 1);
         assert_eq!(m.merges(), 1);
         assert_eq!(m.buffer_reuses(), 1);
         assert_eq!(m.snapshots(), 2);

@@ -1,13 +1,44 @@
-//! The L3 streaming pipeline: sharded workers over an unaggregated
-//! element stream, composable-sketch merging, and explicit backpressure.
+//! The L3 streaming pipeline: parallel source partitioning over an
+//! unaggregated element stream, composable-sketch merging, and pull-based
+//! flow control.
 //!
-//! Topology (DESIGN.md §4):
+//! Topology (§Perf L3-7 — the router bottleneck is gone):
 //!
 //! ```text
-//! source ──router (hash shard)──▶ worker 0 ─┐
-//!        ──bounded channels─────▶ worker 1 ─┼─▶ merge tree ─▶ leader
-//!        (backpressure)          ...        ─┘   (composable sketches)
+//!            ┌─ worker 0: scan ▸ hash-filter ▸ SoA block ▸ summary ─┐
+//! source ────┼─ worker 1: scan ▸ hash-filter ▸ SoA block ▸ summary ─┼─▶ merge tree ─▶ leader
+//! (replayable┼─ ...                                                 ─┘   (composable sketches)
+//!  scan)     └─ worker W-1 ...
 //! ```
+//!
+//! Earlier revisions funneled every element through ONE router thread
+//! that hash-routed into per-shard `Vec<Element>` batches and pushed them
+//! over bounded channels — ingest was capped by that single thread no
+//! matter how many workers ran. Now **each worker scans the source
+//! itself** ([`ParallelSource`] — a replayable scan, so W workers iterate
+//! it concurrently), keeps exactly the elements whose key-hash routes to
+//! its own shard, and packs them into one reusable structure-of-arrays
+//! [`ElementBlock`] that flows into the summary's columnar
+//! [`crate::api::StreamSummary::process_block`] path. No channels, no
+//! backpressure stalls, no router — and flow control is inherent (each
+//! worker pulls at the rate it can process).
+//!
+//! The trade is explicit: the cheap scan + route-hash work is
+//! **replicated** (every worker walks the whole stream, Θ(N) each,
+//! discarding the other shards' elements), while the expensive
+//! per-element summary work — sketch updates, candidate tracking — is
+//! **divided** W ways. For generator, in-memory and page-cached spool
+//! sources the filter costs a couple of ns/element, so removing the
+//! serialized route-and-copy stage wins as long as summary work
+//! dominates; for cold-disk spools note that W workers each read the
+//! whole file.
+//!
+//! The per-shard element subsequence and its block boundaries are
+//! *identical* to what the old router produced (shard w's stream in
+//! order, chunked every `opts.batch` elements), and `process_block` is
+//! bit-identical to `process_batch`, so the pipeline's output is
+//! unchanged — `tests/partition_contract.rs` proves this against a
+//! reference implementation of the old router for a grid of topologies.
 //!
 //! Workers own shard-local state (a pass-I WORp sketch, a pass-II
 //! collector, or any [`ShardSink`]); the leader merges the per-shard
@@ -21,13 +52,80 @@ pub mod spool;
 
 use crate::api::{Persist, StreamSummary};
 use crate::codec::{self, wire};
-use crate::data::Element;
+use crate::data::{Element, ElementBlock};
 use crate::error::{Error, Result};
 use metrics::Metrics;
 use shard::Router;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
+
+/// A source that parallel workers can scan **independently and
+/// concurrently**: every call to [`ParallelSource::scan`] yields a fresh
+/// iterator over the *same* element sequence. In-memory slices, seeded
+/// generators (wrap a closure in [`ScanFn`]) and disk spools
+/// ([`spool::SpoolSource`]) all qualify; a one-shot iterator does not —
+/// collect it first.
+///
+/// `Sync` because all workers scan through one shared reference.
+pub trait ParallelSource: Sync {
+    /// The scan iterator (generic so monomorphized sources pay no
+    /// per-element dynamic dispatch in the worker hot loop).
+    type Iter<'a>: Iterator<Item = Element>
+    where
+        Self: 'a;
+
+    /// A fresh pass over the stream.
+    fn scan(&self) -> Self::Iter<'_>;
+}
+
+impl ParallelSource for [Element] {
+    type Iter<'a> = std::iter::Copied<std::slice::Iter<'a, Element>>
+    where
+        Self: 'a;
+
+    fn scan(&self) -> Self::Iter<'_> {
+        self.iter().copied()
+    }
+}
+
+impl ParallelSource for Vec<Element> {
+    type Iter<'a> = std::iter::Copied<std::slice::Iter<'a, Element>>
+    where
+        Self: 'a;
+
+    fn scan(&self) -> Self::Iter<'_> {
+        self.as_slice().scan()
+    }
+}
+
+impl<T: ParallelSource + ?Sized> ParallelSource for &T {
+    type Iter<'a> = T::Iter<'a>
+    where
+        Self: 'a;
+
+    fn scan(&self) -> Self::Iter<'_> {
+        (**self).scan()
+    }
+}
+
+/// Adapter: any replayable generator closure (`Fn() -> Iterator`) is a
+/// [`ParallelSource`] — e.g. `ScanFn(|| ZipfStream::new(n, a, m, seed))`
+/// lets W workers each regenerate the stream instead of materializing it.
+pub struct ScanFn<F>(pub F);
+
+impl<F, I> ParallelSource for ScanFn<F>
+where
+    F: Fn() -> I + Sync,
+    I: Iterator<Item = Element>,
+{
+    type Iter<'a> = I
+    where
+        Self: 'a;
+
+    fn scan(&self) -> Self::Iter<'_> {
+        (self.0)()
+    }
+}
 
 /// Shard-local consumer state. Every `Send` [`StreamSummary`] is a
 /// `ShardSink` via the blanket impl below — samplers, sketches, pass
@@ -43,6 +141,16 @@ pub trait ShardSink: Send + 'static {
             self.process(e);
         }
     }
+
+    /// Process a routed SoA block (§Perf L3-7) — what the partitioning
+    /// workers actually deliver. Defaults to bridging through
+    /// [`ShardSink::process_batch`] (mirroring the `StreamSummary`
+    /// default), so a direct `ShardSink` implementor that only overrode
+    /// `process_batch` keeps seeing its batch path; the blanket impl
+    /// forwards to the summary's columnar override.
+    fn process_block(&mut self, block: &ElementBlock) {
+        self.process_batch(&block.to_elements());
+    }
 }
 
 impl<S: StreamSummary + Send + 'static> ShardSink for S {
@@ -52,6 +160,10 @@ impl<S: StreamSummary + Send + 'static> ShardSink for S {
 
     fn process_batch(&mut self, batch: &[Element]) {
         StreamSummary::process_batch(self, batch)
+    }
+
+    fn process_block(&mut self, block: &ElementBlock) {
+        StreamSummary::process_block(self, block)
     }
 }
 
@@ -84,6 +196,14 @@ impl<F: FnMut(&Element)> StreamSummary for FnSink<F> {
         self.processed += batch.len() as u64;
     }
 
+    /// Per-element over the SoA columns — no AoS materialization.
+    fn process_block(&mut self, block: &ElementBlock) {
+        for e in block.iter() {
+            (self.f)(&e);
+        }
+        self.processed += block.len() as u64;
+    }
+
     fn size_words(&self) -> usize {
         0
     }
@@ -99,9 +219,13 @@ impl<F: FnMut(&Element)> StreamSummary for FnSink<F> {
 pub struct PipelineOpts {
     /// Number of shard workers.
     pub workers: usize,
-    /// Elements per micro-batch on the worker channels.
+    /// Elements per SoA block a worker processes at a time (and the
+    /// checkpoint alignment unit).
     pub batch: usize,
-    /// Channel capacity in batches (the backpressure window).
+    /// Retained for configuration compatibility with the old
+    /// channel-based router (which used it as its backpressure window).
+    /// The scan pipeline has no channels, so this is validated but
+    /// otherwise unused.
     pub channel_cap: usize,
 }
 
@@ -123,76 +247,76 @@ impl PipelineOpts {
     }
 }
 
-/// Run a sharded pipeline: route `stream` across `opts.workers` workers,
-/// each owning the state built by `make(shard_idx)`; returns the
-/// per-shard states (in shard order) and the run metrics.
+/// Run a sharded pipeline: `opts.workers` workers each scan `source` in
+/// parallel, keep the elements whose key-hash routes to their own shard,
+/// and feed them as reusable SoA blocks into the state built by
+/// `make(shard_idx)`; returns the per-shard states (in shard order) and
+/// the run metrics.
 ///
 /// Routing is by stable key hash, so *all elements of a key land on the
 /// same shard* — required for SpaceSaving/TopK composability and good for
 /// locality; the hashed-array sketches are insensitive to the split.
-pub fn run_sharded<S, F, I>(stream: I, opts: PipelineOpts, make: F) -> Result<(Vec<S>, Arc<Metrics>)>
+/// Shard w sees exactly the subsequence and block boundaries the old
+/// single-threaded router delivered, so outputs are unchanged — but the
+/// partitioning work itself now runs on all W workers.
+pub fn run_sharded<S, F, Src>(
+    source: &Src,
+    opts: PipelineOpts,
+    make: F,
+) -> Result<(Vec<S>, Arc<Metrics>)>
 where
     S: ShardSink,
     F: Fn(usize) -> S,
-    I: IntoIterator<Item = Element>,
+    Src: ParallelSource + ?Sized,
 {
     let metrics = Arc::new(Metrics::default());
     let router = Router::new(opts.workers);
-
-    // §Perf L3-6: workers return drained batch buffers to the router
-    // through an unbounded pool channel, so steady-state routing reuses
-    // the same `workers × (channel_cap + 2)` buffers instead of allocating
-    // one per batch.
-    let (pool_tx, pool_rx) = channel::<Vec<Element>>();
-
-    let mut senders: Vec<SyncSender<Vec<Element>>> = Vec::with_capacity(opts.workers);
-    let mut handles = Vec::with_capacity(opts.workers);
-    for w in 0..opts.workers {
-        let (tx, rx): (SyncSender<Vec<Element>>, Receiver<Vec<Element>>) =
-            sync_channel(opts.channel_cap);
-        senders.push(tx);
-        let mut state = make(w);
-        let m = Arc::clone(&metrics);
-        let pool = pool_tx.clone();
-        handles.push(std::thread::spawn(move || {
-            for mut batch in rx {
-                state.process_batch(&batch);
-                m.note_batch(batch.len() as u64);
-                batch.clear();
-                // router may already have hung up at end-of-stream
-                let _ = pool.send(batch);
-            }
-            state
-        }));
-    }
-    drop(pool_tx); // only worker clones remain
-
-    // router loop on the caller thread
-    let mut buffers: Vec<Vec<Element>> = (0..opts.workers)
-        .map(|_| Vec::with_capacity(opts.batch))
-        .collect();
-    for e in stream {
-        let w = router.route(e.key);
-        buffers[w].push(e);
-        if buffers[w].len() == opts.batch {
-            let fresh = recycled_buffer(&pool_rx, opts.batch, &metrics);
-            let full = std::mem::replace(&mut buffers[w], fresh);
-            send_with_backpressure(&senders[w], full, &metrics)?;
+    let router = &router;
+    let mut joined: Vec<Result<S>> = Vec::with_capacity(opts.workers);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(opts.workers);
+        for w in 0..opts.workers {
+            let mut state = make(w);
+            let m = Arc::clone(&metrics);
+            handles.push(scope.spawn(move || {
+                // ONE block per worker, reused for the whole run: fill,
+                // process, clear — steady state allocates nothing
+                let mut block = ElementBlock::with_capacity(opts.batch);
+                let mut fills = 0u64;
+                for e in source.scan() {
+                    if router.route(e.key) != w {
+                        continue;
+                    }
+                    block.push(e.key, e.val);
+                    if block.len() == opts.batch {
+                        state.process_block(&block);
+                        m.note_batch(block.len() as u64);
+                        fills += 1;
+                        if fills > 1 {
+                            m.note_buffer_reuse();
+                        }
+                        block.clear();
+                    }
+                }
+                if !block.is_empty() {
+                    state.process_block(&block);
+                    m.note_batch(block.len() as u64);
+                }
+                state
+            }));
         }
-    }
-    for (w, buf) in buffers.into_iter().enumerate() {
-        if !buf.is_empty() {
-            send_with_backpressure(&senders[w], buf, &metrics)?;
+        // join every handle (even after a failure) so a panicking worker
+        // can never poison the scope exit
+        for h in handles {
+            joined.push(
+                h.join()
+                    .map_err(|_| Error::Pipeline("worker panicked".into())),
+            );
         }
-    }
-    drop(senders);
-
+    });
     let mut states = Vec::with_capacity(opts.workers);
-    for h in handles {
-        states.push(
-            h.join()
-                .map_err(|_| Error::Pipeline("worker panicked".into()))?,
-        );
+    for r in joined {
+        states.push(r?);
     }
     Ok((states, metrics))
 }
@@ -201,14 +325,14 @@ where
 // Checkpointing
 
 /// When and where a sharded run snapshots its shard states: every
-/// `every_batches` micro-batches, each worker writes its summary (via
+/// `every_batches` full blocks, each worker writes its summary (via
 /// [`Persist`]) plus its element cursor to `dir/shard-<w>.worp`,
 /// atomically (temp file + rename). A later
 /// [`run_sharded_checkpointed`] over the same replayable stream resumes
 /// from those files: restored shards skip exactly the elements their
 /// snapshot already covers, so the finished run is bit-identical to an
-/// uninterrupted one (worker batch boundaries realign because snapshots
-/// are taken on batch edges).
+/// uninterrupted one (worker block boundaries realign because snapshots
+/// are taken on block edges).
 ///
 /// Guardrails on resume: the file's topology stamp (shard / workers /
 /// batch) and its summary fingerprint must match the current run's
@@ -225,7 +349,7 @@ pub struct CheckpointPolicy {
 }
 
 impl CheckpointPolicy {
-    /// Snapshot every `every_batches` worker batches into `dir`.
+    /// Snapshot every `every_batches` worker blocks into `dir`.
     pub fn new(every_batches: u64, dir: impl Into<PathBuf>) -> Result<Self> {
         if every_batches == 0 {
             return Err(Error::Pipeline(
@@ -235,7 +359,7 @@ impl CheckpointPolicy {
         Ok(CheckpointPolicy { every_batches, dir: dir.into() })
     }
 
-    /// Batches between snapshots.
+    /// Blocks between snapshots.
     pub fn every_batches(&self) -> u64 {
         self.every_batches
     }
@@ -262,7 +386,7 @@ impl CheckpointPolicy {
 
 /// Checkpoint-file topology stamp: shard index, worker count and batch
 /// size. Resume validates all three — a snapshot taken under a different
-/// topology routes (or batches) differently and must not be continued.
+/// topology routes (or blocks) differently and must not be continued.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 struct CheckpointMeta {
     shard: u16,
@@ -373,14 +497,15 @@ fn load_checkpoint<S: Persist>(
 }
 
 /// [`run_sharded`] with crash recovery: workers snapshot their shard
-/// state to `policy.dir()` every `policy.every_batches()` batches, and a
-/// rerun over the same (replayable) stream resumes from whatever
-/// snapshots exist — restored shards skip the elements already covered,
-/// the rest of the stream flows as usual, and the result is
-/// bit-identical to an uninterrupted run. [`Metrics::snapshots`] /
-/// [`Metrics::restores`] count both sides.
-pub fn run_sharded_checkpointed<S, F, I>(
-    stream: I,
+/// state to `policy.dir()` every `policy.every_batches()` full blocks,
+/// and a rerun over the same (replayable) stream resumes from whatever
+/// snapshots exist — restored shards skip the elements already covered
+/// (each worker counts its own shard's elements during its scan), the
+/// rest of the stream flows as usual, and the result is bit-identical to
+/// an uninterrupted run. [`Metrics::snapshots`] / [`Metrics::restores`]
+/// count both sides.
+pub fn run_sharded_checkpointed<S, F, Src>(
+    source: &Src,
     opts: PipelineOpts,
     policy: &CheckpointPolicy,
     make: F,
@@ -388,7 +513,7 @@ pub fn run_sharded_checkpointed<S, F, I>(
 where
     S: ShardSink + Persist,
     F: Fn(usize) -> S,
-    I: IntoIterator<Item = Element>,
+    Src: ParallelSource + ?Sized,
 {
     if opts.workers > u16::MAX as usize || opts.batch > u32::MAX as usize {
         return Err(Error::Pipeline(
@@ -398,11 +523,11 @@ where
     std::fs::create_dir_all(policy.dir())?;
     let metrics = Arc::new(Metrics::default());
     let router = Router::new(opts.workers);
-    let (pool_tx, pool_rx) = channel::<Vec<Element>>();
+    let router = &router;
 
-    let mut skips: Vec<u64> = Vec::with_capacity(opts.workers);
-    let mut senders: Vec<SyncSender<Vec<Element>>> = Vec::with_capacity(opts.workers);
-    let mut handles = Vec::with_capacity(opts.workers);
+    // restore (or build) every shard's state on the caller thread first,
+    // so stale-snapshot incompatibilities fail before any thread spawns
+    let mut restored: Vec<(S, u64, CheckpointMeta, PathBuf)> = Vec::with_capacity(opts.workers);
     for w in 0..opts.workers {
         let meta = CheckpointMeta {
             shard: w as u16,
@@ -411,7 +536,7 @@ where
         };
         let path = policy.shard_path(w);
         let proto = make(w);
-        let (mut state, done) = match load_checkpoint::<S>(&path, meta)? {
+        let (state, done) = match load_checkpoint::<S>(&path, meta)? {
             Some((s, done, (tag, fp))) => {
                 // a stale snapshot (different seed/config/method/pass)
                 // must not silently resume into this run: the restored
@@ -439,146 +564,86 @@ where
             }
             None => (proto, 0),
         };
-        skips.push(done);
-        let (tx, rx): (SyncSender<Vec<Element>>, Receiver<Vec<Element>>) =
-            sync_channel(opts.channel_cap);
-        senders.push(tx);
-        let m = Arc::clone(&metrics);
-        let pool = pool_tx.clone();
-        let every = policy.every_batches();
-        handles.push(std::thread::spawn(move || -> Result<S> {
-            let mut elements = done;
-            let mut batches = 0u64;
-            for mut batch in rx {
-                state.process_batch(&batch);
-                m.note_batch(batch.len() as u64);
-                elements += batch.len() as u64;
-                batches += 1;
-                // only snapshot on *full*-batch edges: a partial batch is
-                // an end-of-stream flush, and a cursor that is not a
-                // multiple of the batch size would misalign the resumed
-                // run's batch boundaries against an uninterrupted one
-                // (batch-boundary-sensitive summaries like worp1 would
-                // then diverge from the bit-identical guarantee)
-                if batches % every == 0 && batch.len() == meta.batch as usize {
-                    write_checkpoint(&path, meta, elements, &state)?;
-                    m.note_snapshot();
-                }
-                batch.clear();
-                let _ = pool.send(batch);
-            }
-            Ok(state)
-        }));
+        restored.push((state, done, meta, path));
     }
-    drop(pool_tx);
 
-    let mut buffers: Vec<Vec<Element>> = (0..opts.workers)
-        .map(|_| Vec::with_capacity(opts.batch))
-        .collect();
-    // a send failure usually means a worker bailed (e.g. a snapshot-write
-    // I/O error closed its channel); don't return the generic channel
-    // error — fall through to the join below so the worker's *real*
-    // error (disk full, permission, ...) is what surfaces
-    let mut route_err: Option<Error> = None;
-    for e in stream {
-        let w = router.route(e.key);
-        // elements a restored snapshot already covers are skipped; the
-        // first fresh element lands on the same batch boundary the
-        // interrupted run used (snapshots are taken on full-batch edges)
-        if skips[w] > 0 {
-            skips[w] -= 1;
-            continue;
-        }
-        buffers[w].push(e);
-        if buffers[w].len() == opts.batch {
-            let fresh = recycled_buffer(&pool_rx, opts.batch, &metrics);
-            let full = std::mem::replace(&mut buffers[w], fresh);
-            if let Err(e) = send_with_backpressure(&senders[w], full, &metrics) {
-                route_err = Some(e);
-                break;
-            }
-        }
-    }
-    if route_err.is_none() {
-        for (w, buf) in buffers.into_iter().enumerate() {
-            if !buf.is_empty() {
-                if let Err(e) = send_with_backpressure(&senders[w], buf, &metrics) {
-                    route_err = Some(e);
-                    break;
+    let every = policy.every_batches();
+    let mut joined: Vec<Result<S>> = Vec::with_capacity(opts.workers);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(opts.workers);
+        for (w, (mut state, done, meta, path)) in restored.into_iter().enumerate() {
+            let m = Arc::clone(&metrics);
+            handles.push(scope.spawn(move || -> Result<S> {
+                let mut block = ElementBlock::with_capacity(opts.batch);
+                // elements a restored snapshot already covers are skipped;
+                // the first fresh element lands on the same block boundary
+                // the interrupted run used (snapshots land on block edges)
+                let mut skip = done;
+                let mut elements = done;
+                let mut batches = 0u64;
+                for e in source.scan() {
+                    if router.route(e.key) != w {
+                        continue;
+                    }
+                    if skip > 0 {
+                        skip -= 1;
+                        continue;
+                    }
+                    block.push(e.key, e.val);
+                    if block.len() == opts.batch {
+                        state.process_block(&block);
+                        m.note_batch(block.len() as u64);
+                        elements += block.len() as u64;
+                        batches += 1;
+                        if batches > 1 {
+                            m.note_buffer_reuse();
+                        }
+                        // only snapshot on *full*-block edges: a partial
+                        // block is an end-of-stream flush, and a cursor
+                        // that is not a multiple of the batch size would
+                        // misalign the resumed run's block boundaries
+                        // against an uninterrupted one (block-boundary-
+                        // sensitive summaries like worp1 would then
+                        // diverge from the bit-identical guarantee)
+                        if batches % every == 0 {
+                            write_checkpoint(&path, meta, elements, &state)?;
+                            m.note_snapshot();
+                        }
+                        block.clear();
+                    }
                 }
-            }
+                // the stream ran dry while this restored shard was still
+                // owed skipped elements: the stream is shorter than (so
+                // different from) the one the snapshot was taken over —
+                // fail loudly like every other stale resume instead of
+                // returning a state the given stream never produced
+                if skip > 0 {
+                    return Err(Error::Incompatible(format!(
+                        "stream ended while shard {w} still owed {skip} snapshot-covered \
+                         elements — the resumed stream is shorter than the one the \
+                         checkpoint was taken over; remove the snapshot directory or \
+                         supply the original stream"
+                    )));
+                }
+                if !block.is_empty() {
+                    state.process_block(&block);
+                    m.note_batch(block.len() as u64);
+                }
+                Ok(state)
+            }));
         }
-    }
-    // the stream ran dry while a restored shard was still owed skipped
-    // elements: the stream is shorter than (so different from) the one
-    // the snapshot was taken over — fail loudly like every other stale
-    // resume instead of returning a state the given stream never produced
-    if route_err.is_none() {
-        if let Some((w, &owed)) = skips.iter().enumerate().find(|(_, &s)| s > 0) {
-            route_err = Some(Error::Incompatible(format!(
-                "stream ended while shard {w} still owed {owed} snapshot-covered elements — \
-                 the resumed stream is shorter than the one the checkpoint was taken over; \
-                 remove the snapshot directory or supply the original stream"
-            )));
+        for h in handles {
+            joined.push(match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(Error::Pipeline("worker panicked".into())),
+            });
         }
-    }
-    drop(senders);
-
+    });
     let mut states = Vec::with_capacity(opts.workers);
-    let mut worker_err: Option<Error> = None;
-    for h in handles {
-        match h.join() {
-            Ok(Ok(s)) => states.push(s),
-            Ok(Err(e)) => {
-                worker_err.get_or_insert(e);
-            }
-            Err(_) => {
-                worker_err.get_or_insert(Error::Pipeline("worker panicked".into()));
-            }
-        }
-    }
-    if let Some(e) = worker_err {
-        return Err(e);
-    }
-    if let Some(e) = route_err {
-        return Err(e);
+    for r in joined {
+        states.push(r?);
     }
     Ok((states, metrics))
-}
-
-/// Grab a drained buffer from the worker return pool, falling back to a
-/// fresh allocation when none has come back yet.
-fn recycled_buffer(
-    pool: &Receiver<Vec<Element>>,
-    cap: usize,
-    metrics: &Metrics,
-) -> Vec<Element> {
-    match pool.try_recv() {
-        Ok(buf) => {
-            metrics.note_buffer_reuse();
-            buf
-        }
-        Err(_) => Vec::with_capacity(cap),
-    }
-}
-
-fn send_with_backpressure(
-    tx: &SyncSender<Vec<Element>>,
-    batch: Vec<Element>,
-    metrics: &Metrics,
-) -> Result<()> {
-    // try_send first so we can count stalls (backpressure events)
-    match tx.try_send(batch) {
-        Ok(()) => Ok(()),
-        Err(std::sync::mpsc::TrySendError::Full(batch)) => {
-            metrics.note_stall();
-            tx.send(batch)
-                .map_err(|_| Error::Pipeline("worker channel closed".into()))
-        }
-        Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
-            Err(Error::Pipeline("worker channel closed".into()))
-        }
-    }
 }
 
 #[cfg(test)]
@@ -591,11 +656,13 @@ mod tests {
     #[test]
     fn all_elements_processed_exactly_once() {
         let n = 100_000u64;
-        let stream = ZipfStream::new(1000, 1.0, n, 3);
+        // a generator source: every worker regenerates (replays) the
+        // stream instead of sharing a materialized copy
+        let source = ScanFn(move || ZipfStream::new(1000, 1.0, n, 3));
         let opts = PipelineOpts::new(4, 512, 4).unwrap();
         let counted = Arc::new(Mutex::new(0u64));
         let c2 = Arc::clone(&counted);
-        let (states, metrics) = run_sharded(stream, opts, move |_| {
+        let (states, metrics) = run_sharded(&source, opts, move |_| {
             let c = Arc::clone(&c2);
             FnSink::new(move |_e: &Element| {
                 *c.lock().unwrap() += 1;
@@ -634,7 +701,7 @@ mod tests {
         let stream: Vec<Element> = ZipfStream::new(200, 1.0, 20_000, 7).collect();
         let truth = crate::data::aggregate(stream.clone());
         let opts = PipelineOpts::new(3, 128, 4).unwrap();
-        let (states, _) = run_sharded(stream, opts, |_| MapSink { sums: HashMap::new() })
+        let (states, _) = run_sharded(&stream, opts, |_| MapSink { sums: HashMap::new() })
             .unwrap();
         // every key appears on exactly one shard, with its exact total
         let mut seen: HashMap<u64, f64> = HashMap::new();
@@ -651,25 +718,27 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_counted_with_tiny_channel() {
-        // deterministic-by-construction stall: the single worker parks on
-        // its first batch long enough for the router to fill the
-        // capacity-1 channel and hit try_send Full (the old version relied
-        // on a busy-loop being slower than the router — a seed-red flake
-        // on fast or heavily-loaded machines)
+    fn slow_worker_does_not_block_the_others() {
+        // pull-based flow control: worker 0 sleeps on its first element
+        // while the other worker must still finish its whole shard — the
+        // run completes and counts every element exactly once (the old
+        // router would have seen backpressure stalls here; now there is
+        // no shared channel to stall on)
         let stream: Vec<Element> = (0..20_000).map(|i| Element::new(i % 16, 1.0)).collect();
-        let opts = PipelineOpts::new(1, 64, 1).unwrap();
-        let (_, metrics) = run_sharded(stream, opts, |_| {
+        let opts = PipelineOpts::new(2, 64, 1).unwrap();
+        let (states, metrics) = run_sharded(&stream, opts, |w| {
             let mut slept = false;
             FnSink::new(move |_e: &Element| {
-                if !slept {
+                if w == 0 && !slept {
                     slept = true;
-                    std::thread::sleep(std::time::Duration::from_millis(200));
+                    std::thread::sleep(std::time::Duration::from_millis(100));
                 }
             })
         })
         .unwrap();
-        assert!(metrics.stalls() > 0, "expected backpressure stalls");
+        assert_eq!(metrics.elements(), 20_000);
+        let per_shard: u64 = states.iter().map(StreamSummary::processed).sum();
+        assert_eq!(per_shard, 20_000);
     }
 
     #[test]
@@ -680,19 +749,32 @@ mod tests {
     }
 
     #[test]
-    fn router_recycles_worker_buffers() {
-        // long stream, small batches: after the first channel_cap batches
-        // drain, the router must start reusing returned buffers
+    fn workers_reuse_their_blocks() {
+        // long stream, small blocks: after each worker's first fill, the
+        // same SoA allocation must be recycled for every later block
         let stream: Vec<Element> = (0..100_000u64).map(|i| Element::new(i % 8, 1.0)).collect();
         let opts = PipelineOpts::new(2, 128, 2).unwrap();
-        let (_, metrics) = run_sharded(stream, opts, |_| {
+        let (_, metrics) = run_sharded(&stream, opts, |_| {
             FnSink::new(|_e: &Element| {})
         })
         .unwrap();
         assert!(
             metrics.buffer_reuses() > 0,
-            "expected recycled batch buffers, report: {}",
+            "expected recycled SoA blocks, report: {}",
             metrics.report()
         );
+        // every full block beyond each worker's first is a reuse
+        assert!(metrics.buffer_reuses() >= metrics.batches().saturating_sub(2 * 2));
+    }
+
+    #[test]
+    fn scan_sources_replay_identically() {
+        let v: Vec<Element> = (0..100u64).map(|i| Element::new(i, i as f64)).collect();
+        let a: Vec<Element> = (&v).scan().collect();
+        let b: Vec<Element> = v.scan().collect();
+        assert_eq!(a, b);
+        let f = ScanFn(|| (0..50u64).map(|i| Element::new(i, 1.0)));
+        assert_eq!(f.scan().count(), 50);
+        assert_eq!(f.scan().count(), 50, "generator sources must replay");
     }
 }

@@ -3,7 +3,7 @@
 //! sketches) and supports rebalancing to a different worker count via
 //! deterministic re-hash.
 
-use crate::util::hashing::hash64;
+use crate::util::hashing::{hash64, hash_bytes_fast};
 
 /// Stable hash router over `n` shards.
 #[derive(Clone, Debug)]
@@ -29,6 +29,24 @@ impl Router {
     #[inline]
     pub fn route(&self, key: u64) -> usize {
         (((hash64(self.seed, key) as u128) * (self.n as u128)) >> 64) as usize
+    }
+
+    /// Shard of a raw byte key — the string-keyed ingest fan-out
+    /// (partition raw records *before* the numeric
+    /// [`crate::util::hashing::hash_str`] domain mapping). Routing
+    /// decisions are never persisted, so this path uses the 8-byte-chunked
+    /// [`hash_bytes_fast`] rather than the codec-critical byte-at-a-time
+    /// `hash_bytes`; only the assignment's distribution matters, and the
+    /// hashing unit tests hold both to the same balance bar.
+    #[inline]
+    pub fn route_bytes(&self, key: &[u8]) -> usize {
+        (((hash_bytes_fast(self.seed, key) as u128) * (self.n as u128)) >> 64) as usize
+    }
+
+    /// Shard of a string key (see [`Router::route_bytes`]).
+    #[inline]
+    pub fn route_str(&self, key: &str) -> usize {
+        self.route_bytes(key.as_bytes())
     }
 
     /// Number of shards.
@@ -74,6 +92,23 @@ mod tests {
         }
         for &c in &counts {
             assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn byte_routing_stable_in_range_and_balanced() {
+        let r = Router::new(8);
+        let mut counts = [0u32; 8];
+        for k in 0..40_000u64 {
+            let key = format!("query:{k}");
+            let s = r.route_str(&key);
+            assert!(s < 8);
+            assert_eq!(s, r.route_bytes(key.as_bytes()), "str/bytes must agree");
+            assert_eq!(s, r.route_str(&key), "routing must be stable");
+            counts[s] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 5_000.0).abs() < 400.0, "{counts:?}");
         }
     }
 

@@ -117,6 +117,17 @@ impl api::StreamSummary for ExactWor {
         self.processed += batch.len() as u64;
     }
 
+    /// SoA block path (§Perf L3-7): aggregation streams off the dense
+    /// key/value columns — same per-key addition order as the scalar
+    /// loop, so the map is bit-identical.
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        self.freqs.reserve(block.len().min(4096));
+        for (&k, &v) in block.keys.iter().zip(&block.vals) {
+            *self.freqs.entry(k).or_insert(0.0) += v;
+        }
+        self.processed += block.len() as u64;
+    }
+
     fn size_words(&self) -> usize {
         ExactWor::size_words(self)
     }

@@ -236,6 +236,19 @@ impl api::StreamSummary for OracleSampler {
         self.processed += batch.len() as u64;
     }
 
+    /// SoA block path (§Perf L3-7): the same aggregation straight off the
+    /// dense columns, skipping the default bridge's AoS materialization.
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        for (&k, &v) in block.keys.iter().zip(&block.vals) {
+            let f = self.freqs.entry(k).or_insert(0.0);
+            *f += v;
+            if f.abs() < 1e-12 {
+                self.freqs.remove(&k);
+            }
+        }
+        self.processed += block.len() as u64;
+    }
+
     fn size_words(&self) -> usize {
         2 * self.freqs.len()
     }

@@ -87,6 +87,10 @@ pub struct TvSampler {
     samplers: Samplers,
     rhh: CountSketch,
     processed: u64,
+    /// Reusable AoS bridge buffer for the SoA block path (§Perf L3-7):
+    /// the `r` single samplers consume element slices, so one shared
+    /// materialization serves all of them per block.
+    ebuf: Vec<Element>,
 }
 
 impl TvSampler {
@@ -116,7 +120,7 @@ impl TvSampler {
             cfg.rhh_width,
             cfg.seed ^ 0x0FF5E7,
         ));
-        TvSampler { cfg, samplers, rhh, processed: 0 }
+        TvSampler { cfg, samplers, rhh, processed: 0, ebuf: Vec::new() }
     }
 
     /// Sampler configuration.
@@ -169,6 +173,33 @@ impl TvSampler {
         }
         self.rhh.process_batch(batch);
         self.processed += batch.len() as u64;
+    }
+
+    /// SoA block path (§Perf L3-7): the rHH sketch hashes straight off
+    /// the key column via its columnar `process_cols`; the `r` single
+    /// samplers (whose interface is element slices) share ONE reusable
+    /// AoS materialization of the block instead of each paying the
+    /// default bridge's per-sampler allocation. Sampler-major order as in
+    /// `process_batch`, so the state is identical.
+    pub fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        let mut ebuf = std::mem::take(&mut self.ebuf);
+        ebuf.clear();
+        ebuf.extend(block.iter());
+        match &mut self.samplers {
+            Samplers::Oracle(v) => {
+                for s in v.iter_mut() {
+                    api::StreamSummary::process_batch(s, &ebuf);
+                }
+            }
+            Samplers::Precision(v) => {
+                for s in v.iter_mut() {
+                    api::StreamSummary::process_batch(s, &ebuf);
+                }
+            }
+        }
+        self.ebuf = ebuf;
+        self.rhh.process_cols(&block.keys, &block.vals);
+        self.processed += block.len() as u64;
     }
 
     /// Merge a sibling sampler built with the same config and seed. All
@@ -263,6 +294,10 @@ impl api::StreamSummary for TvSampler {
 
     fn process_batch(&mut self, batch: &[Element]) {
         TvSampler::process_batch(self, batch)
+    }
+
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        TvSampler::process_block(self, block)
     }
 
     fn size_words(&self) -> usize {
@@ -473,7 +508,7 @@ impl crate::api::Persist for TvSampler {
             inner_rows: inner_rows as usize,
             inner_width: inner_width as usize,
         };
-        let s = TvSampler { cfg, samplers, rhh, processed };
+        let s = TvSampler { cfg, samplers, rhh, processed, ebuf: Vec::new() };
         crate::codec::check_fingerprint(
             env.fingerprint,
             api::Mergeable::fingerprint(&s).value(),

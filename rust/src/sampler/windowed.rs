@@ -29,6 +29,8 @@ pub struct WindowedWorp {
     processed: u64,
     /// Reusable transformed-element buffer for the batch path (§Perf L3-6).
     tbuf: Vec<Element>,
+    /// Reusable transformed-value column for the SoA block path (§Perf L3-7).
+    vbuf: Vec<f64>,
 }
 
 impl WindowedWorp {
@@ -53,6 +55,7 @@ impl WindowedWorp {
             window,
             processed: 0,
             tbuf: Vec::new(),
+            vbuf: Vec::new(),
         }
     }
 
@@ -167,6 +170,28 @@ impl api::StreamSummary for WindowedWorp {
             self.candidates.insert(e.key, t0 + 1 + i as u64);
         }
         self.processed += batch.len() as u64;
+        if self.candidates.len() > 2 * self.cand_cap {
+            let now = self.sketch.now();
+            self.prune(now);
+        }
+    }
+
+    /// SoA block path for the implicit clock (§Perf L3-7): the transform
+    /// rewrites only the value column (reusable `vbuf`), the windowed
+    /// sketch takes `(keys, vbuf)` through its run-chunked columnar
+    /// `process_cols_ticks` (bit-identical tables), and candidate
+    /// touch-times stamp straight off the key column — same deferred
+    /// prune semantics as `process_batch`.
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        let t0 = self.sketch.now();
+        let mut vbuf = std::mem::take(&mut self.vbuf);
+        self.transform.apply_cols(&block.keys, &block.vals, &mut vbuf);
+        self.sketch.process_cols_ticks(&block.keys, &vbuf);
+        self.vbuf = vbuf;
+        for (i, &k) in block.keys.iter().enumerate() {
+            self.candidates.insert(k, t0 + 1 + i as u64);
+        }
+        self.processed += block.len() as u64;
         if self.candidates.len() > 2 * self.cand_cap {
             let now = self.sketch.now();
             self.prune(now);
@@ -322,6 +347,7 @@ impl crate::api::Persist for WindowedWorp {
             window,
             processed,
             tbuf: Vec::new(),
+            vbuf: Vec::new(),
         };
         crate::codec::check_fingerprint(
             env.fingerprint,

@@ -33,6 +33,9 @@ pub struct OnePassWorp {
     processed: u64,
     /// Reusable transformed-element buffer for the batch path (§Perf L3-6).
     tbuf: Vec<Element>,
+    /// Reusable transformed-value column for the SoA block path (§Perf
+    /// L3-7) — the key column passes through untransformed.
+    vbuf: Vec<f64>,
 }
 
 impl OnePassWorp {
@@ -52,6 +55,7 @@ impl OnePassWorp {
             cand_cap,
             processed: 0,
             tbuf: Vec::new(),
+            vbuf: Vec::new(),
         }
     }
 
@@ -99,12 +103,16 @@ impl OnePassWorp {
     }
 
     fn shrink_candidates(&mut self) {
-        // score all candidates against the sketch, keep the top cand_cap
-        // (rank_desc: deterministic on score ties)
-        let mut v: Vec<(u64, f64)> = self
-            .candidates
-            .iter()
-            .map(|k| (k, self.sketch.est(k).abs()))
+        // score all candidates against the sketch in one est_many sweep
+        // (one shared scratch for the whole set — §Perf L3-7), keep the
+        // top cand_cap (rank_desc: deterministic on score ties)
+        let keys: Vec<u64> = self.candidates.iter().collect();
+        let mut ests = vec![0.0f64; keys.len()];
+        self.sketch.est_many(&keys, &mut ests);
+        let mut v: Vec<(u64, f64)> = keys
+            .into_iter()
+            .zip(ests)
+            .map(|(k, e)| (k, e.abs()))
             .collect();
         v.sort_by(crate::util::stats::rank_desc);
         v.truncate(self.cand_cap);
@@ -199,9 +207,14 @@ impl OnePassWorp {
     }
 
     fn sample_from_keys<I: IntoIterator<Item = u64>>(&self, keys: I) -> Sample {
+        // candidate scoring goes through est_many: one scratch for the
+        // whole key universe instead of one per est call (§Perf L3-7)
+        let keys: Vec<u64> = keys.into_iter().collect();
+        let mut ests = vec![0.0f64; keys.len()];
+        self.sketch.est_many(&keys, &mut ests);
         let mut scored: Vec<(u64, f64)> = keys
             .into_iter()
-            .map(|k| (k, self.sketch.est(k)))
+            .zip(ests)
             .filter(|(_, e)| *e != 0.0)
             .collect();
         scored.sort_by(|a, b| {
@@ -243,6 +256,25 @@ impl api::StreamSummary for OnePassWorp {
             self.candidates.insert(e.key);
         }
         self.processed += batch.len() as u64;
+        if self.candidates.len() > 2 * self.cand_cap {
+            self.shrink_candidates();
+        }
+    }
+
+    /// SoA block path (§Perf L3-7): the transform rewrites only the value
+    /// column into the reusable `vbuf` (the key column passes through),
+    /// the sketch ingests `(keys, vbuf)` through its columnar
+    /// `process_cols`, and candidates insert straight off the key slice —
+    /// no `Element` structs anywhere. Bit-identical to `process_batch`.
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        let mut vbuf = std::mem::take(&mut self.vbuf);
+        self.transform.apply_cols(&block.keys, &block.vals, &mut vbuf);
+        self.sketch.process_cols(&block.keys, &vbuf);
+        self.vbuf = vbuf;
+        for &k in &block.keys {
+            self.candidates.insert(k);
+        }
+        self.processed += block.len() as u64;
         if self.candidates.len() > 2 * self.cand_cap {
             self.shrink_candidates();
         }
@@ -375,6 +407,7 @@ impl crate::api::Persist for OnePassWorp {
             cand_cap,
             processed,
             tbuf: Vec::new(),
+            vbuf: Vec::new(),
         };
         crate::codec::check_fingerprint(
             env.fingerprint,

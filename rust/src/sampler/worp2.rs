@@ -29,6 +29,8 @@ pub struct TwoPassWorpPass1 {
     processed: u64,
     /// Reusable transformed-element buffer for the batch path (§Perf L3-6).
     tbuf: Vec<Element>,
+    /// Reusable transformed-value column for the SoA block path (§Perf L3-7).
+    vbuf: Vec<f64>,
 }
 
 impl TwoPassWorpPass1 {
@@ -39,7 +41,14 @@ impl TwoPassWorpPass1 {
         let params = SketchParams::new(rows, width, cfg.seed ^ 0x2AB5);
         let sketch = AnyRhh::for_q(cfg.q, params);
         let transform = cfg.transform();
-        TwoPassWorpPass1 { cfg, transform, sketch, processed: 0, tbuf: Vec::new() }
+        TwoPassWorpPass1 {
+            cfg,
+            transform,
+            sketch,
+            processed: 0,
+            tbuf: Vec::new(),
+            vbuf: Vec::new(),
+        }
     }
 
     /// Process one raw element.
@@ -59,6 +68,17 @@ impl TwoPassWorpPass1 {
         self.sketch.process_batch(&tbuf);
         self.tbuf = tbuf;
         self.processed += batch.len() as u64;
+    }
+
+    /// SoA block path (§Perf L3-7): the transform rewrites only the value
+    /// column (reusable `vbuf`); the sketch hashes straight off the
+    /// block's key column. Bit-identical to `process_batch`.
+    pub fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        let mut vbuf = std::mem::take(&mut self.vbuf);
+        self.transform.apply_cols(&block.keys, &block.vals, &mut vbuf);
+        self.sketch.process_cols(&block.keys, &vbuf);
+        self.vbuf = vbuf;
+        self.processed += block.len() as u64;
     }
 
     /// Merge a sibling pass-I sketch.
@@ -142,6 +162,16 @@ impl TwoPassWorpPass2 {
         self.processed += batch.len() as u64;
     }
 
+    /// SoA block path (§Perf L3-7): the collector's columnar sweep over
+    /// the key/value columns, with pass-I estimates computed only for
+    /// first sightings. Identical update order to the scalar loop.
+    pub fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        let sketch = &self.sketch;
+        self.topk
+            .process_cols(&block.keys, &block.vals, |k| sketch.est(k).abs());
+        self.processed += block.len() as u64;
+    }
+
     /// Merge a sibling pass-II collector (disjoint shards of the stream).
     /// Only the collectors merge — every sibling holds the *same* merged
     /// pass-I sketch, which must not be double-counted.
@@ -198,12 +228,13 @@ impl TwoPassWorpPass2 {
             return self.sample();
         }
         // uniform error bound |nu*_(k+1)|/3 (paper Eq. 14);
-        // L = min estimated |nu*| over stored keys
+        // L = min estimated |nu*| over stored keys — scored in one
+        // est_many sweep (shared scratch, §Perf L3-7)
         let nu_k1 = ranked[k].1;
-        let l = ranked
-            .iter()
-            .map(|(e, _)| self.sketch.est(e.key).abs())
-            .fold(f64::INFINITY, f64::min);
+        let keys: Vec<u64> = ranked.iter().map(|(e, _)| e.key).collect();
+        let mut ests = vec![0.0f64; keys.len()];
+        self.sketch.est_many(&keys, &mut ests);
+        let l = ests.iter().map(|e| e.abs()).fold(f64::INFINITY, f64::min);
         let cut = l + nu_k1 / 3.0;
         let mut kept: Vec<(crate::sketch::topk::TopKEntry, f64)> = ranked
             .into_iter()
@@ -285,6 +316,15 @@ impl TwoPassWorp {
         }
     }
 
+    /// Process an SoA block of the current pass (§Perf L3-7).
+    pub fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        match &mut self.state {
+            TwoPassState::One(p) => p.process_block(block),
+            TwoPassState::Two(p) => p.process_block(block),
+            TwoPassState::Poisoned => unreachable!("poisoned two-pass state"),
+        }
+    }
+
     /// Seal pass I and arm pass II; errors when already in pass II.
     pub fn advance(&mut self) -> Result<()> {
         match std::mem::replace(&mut self.state, TwoPassState::Poisoned) {
@@ -357,6 +397,10 @@ impl api::StreamSummary for TwoPassWorp {
 
     fn process_batch(&mut self, batch: &[Element]) {
         TwoPassWorp::process_batch(self, batch)
+    }
+
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        TwoPassWorp::process_block(self, block)
     }
 
     fn size_words(&self) -> usize {
@@ -460,7 +504,14 @@ impl crate::api::Persist for TwoPassWorpPass1 {
         let sketch: AnyRhh = crate::codec::read_nested(&mut r)?;
         r.finish("2pass-pass1")?;
         let transform = cfg.transform();
-        let s = TwoPassWorpPass1 { cfg, transform, sketch, processed, tbuf: Vec::new() };
+        let s = TwoPassWorpPass1 {
+            cfg,
+            transform,
+            sketch,
+            processed,
+            tbuf: Vec::new(),
+            vbuf: Vec::new(),
+        };
         crate::codec::check_fingerprint(
             env.fingerprint,
             api::Mergeable::fingerprint(&s).value(),
@@ -561,6 +612,10 @@ impl api::StreamSummary for TwoPassWorpPass1 {
         TwoPassWorpPass1::process_batch(self, batch)
     }
 
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        TwoPassWorpPass1::process_block(self, block)
+    }
+
     fn size_words(&self) -> usize {
         TwoPassWorpPass1::size_words(self)
     }
@@ -587,6 +642,10 @@ impl api::StreamSummary for TwoPassWorpPass2 {
 
     fn process_batch(&mut self, batch: &[Element]) {
         TwoPassWorpPass2::process_batch(self, batch)
+    }
+
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        TwoPassWorpPass2::process_block(self, block)
     }
 
     fn size_words(&self) -> usize {

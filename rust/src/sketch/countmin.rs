@@ -50,6 +50,40 @@ impl CountMin {
         self.processed
     }
 
+    /// Estimate a whole column of keys into `out` (§Perf L3-7), matching
+    /// [`CountSketch::est_many`](crate::sketch::countsketch::CountSketch::est_many)'s
+    /// contract: each entry is bit-identical to [`RhhSketch::est`]. The
+    /// min-of-rows fold needs no scratch at all.
+    pub fn est_many(&self, keys: &[u64], out: &mut [f64]) {
+        assert_eq!(keys.len(), out.len(), "est_many requires out.len() == keys.len()");
+        for (&k, slot) in keys.iter().zip(out.iter_mut()) {
+            *slot = RhhSketch::est(self, k);
+        }
+    }
+
+    /// Columnar SoA update (§Perf L3-7): hash straight off the dense key
+    /// column, sweep the dense value column — same per-cell addition
+    /// order as the scalar loop and the AoS batch path, so bit-identical
+    /// to both.
+    pub fn process_cols(&mut self, keys: &[u64], vals: &[f64]) {
+        debug_assert_eq!(keys.len(), vals.len());
+        debug_assert!(
+            vals.iter().all(|&v| v >= 0.0),
+            "CountMin requires non-negative values"
+        );
+        let mut coords = std::mem::take(&mut self.scratch);
+        self.hasher.fill_coords_slice(keys, &mut coords);
+        let w = self.params.width;
+        for r in 0..self.params.rows {
+            let row = &mut self.table[r * w..(r + 1) * w];
+            for (c, &v) in coords.iter().zip(vals) {
+                row[self.hasher.bucket_from(c, r)] += v;
+            }
+        }
+        self.processed += keys.len() as u64;
+        self.scratch = coords;
+    }
+
     /// Columnar micro-batch update (§Perf L3-6): one-pass block hashing,
     /// then row-major table sweeps — same pattern as
     /// [`crate::sketch::countsketch::CountSketch::process_batch`], minus
@@ -223,6 +257,35 @@ mod tests {
             }
             assert_eq!(scalar.table, batched.table);
             assert_eq!(scalar.processed(), batched.processed());
+        });
+    }
+
+    #[test]
+    fn soa_block_path_and_est_many_match_scalar() {
+        run("countmin cols == scalar", 15, |g: &mut Gen| {
+            let width = g.usize_range(16, 256);
+            let seed = g.u64_below(1 << 40);
+            let mut scalar = CountMin::with_shape(3, width, seed);
+            let mut blocked = CountMin::with_shape(3, width, seed);
+            let m = g.usize_range(1, 400);
+            let elems: Vec<Element> = (0..m)
+                .map(|_| Element::new(g.u64_below(1000), g.f64_range(0.0, 10.0)))
+                .collect();
+            for e in &elems {
+                scalar.process(e);
+            }
+            for c in elems.chunks(g.usize_range(1, m + 5)) {
+                let block = crate::data::ElementBlock::from_elements(c);
+                blocked.process_cols(&block.keys, &block.vals);
+            }
+            assert_eq!(scalar.table, blocked.table);
+            assert_eq!(scalar.processed(), blocked.processed());
+            let keys: Vec<u64> = (0..300).map(|_| g.u64_below(1200)).collect();
+            let mut out = vec![0.0f64; keys.len()];
+            blocked.est_many(&keys, &mut out);
+            for (&k, &e) in keys.iter().zip(&out) {
+                assert_eq!(e.to_bits(), scalar.est(k).to_bits());
+            }
         });
     }
 

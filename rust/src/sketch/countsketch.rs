@@ -85,11 +85,66 @@ impl CountSketch {
             .collect()
     }
 
-    /// Median of a small scratch vector (len = rows, odd).
-    fn median(mut vals: Vec<f64>) -> f64 {
-        let mid = vals.len() / 2;
-        vals.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
-        vals[mid]
+    /// Fill `buf` (len = rows) with the per-row signed bucket reads of
+    /// `key` and select the median in place — the shared estimation
+    /// kernel behind [`RhhSketch::est`] and [`CountSketch::est_many`].
+    /// `select_nth_unstable_by` (not a full sort) with the usual
+    /// `partial_cmp` order; the median *value* is deterministic because
+    /// selection only permutes equal-valued candidates.
+    #[inline]
+    fn est_into(&self, key: u64, buf: &mut [f64]) -> f64 {
+        let c = self.hasher.coords_of(key);
+        let w = self.params.width;
+        for (r, slot) in buf.iter_mut().enumerate() {
+            let (b, s) = self.hasher.bucket_sign_from(&c, r);
+            *slot = s * self.table[r * w + b];
+        }
+        let mid = buf.len() / 2;
+        buf.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        buf[mid]
+    }
+
+    /// Estimate a whole column of keys into `out` (§Perf L3-7): one
+    /// reusable rows-sized scratch is shared across the entire key slice,
+    /// so candidate-scoring loops (worp1 shrink/sample, worp2 finalize)
+    /// pay zero allocations per key instead of one scratch per `est`
+    /// call. Each entry is bit-identical to [`RhhSketch::est`].
+    pub fn est_many(&self, keys: &[u64], out: &mut [f64]) {
+        assert_eq!(keys.len(), out.len(), "est_many requires out.len() == keys.len()");
+        let rows = self.params.rows;
+        if rows <= 63 {
+            let mut buf = [0.0f64; 63];
+            for (&k, slot) in keys.iter().zip(out.iter_mut()) {
+                *slot = self.est_into(k, &mut buf[..rows]);
+            }
+        } else {
+            let mut buf = vec![0.0f64; rows];
+            for (&k, slot) in keys.iter().zip(out.iter_mut()) {
+                *slot = self.est_into(k, &mut buf);
+            }
+        }
+    }
+
+    /// Columnar SoA update (§Perf L3-7): the same row-major sweep as
+    /// [`CountSketch::process_batch`], but hashing straight off the dense
+    /// `keys` column and sweeping the dense `vals` column — no
+    /// per-element struct loads anywhere. Per table cell the additions
+    /// happen in element order, so the result is bit-identical to both
+    /// the scalar loop and the AoS batch path.
+    pub fn process_cols(&mut self, keys: &[u64], vals: &[f64]) {
+        debug_assert_eq!(keys.len(), vals.len());
+        let mut coords = std::mem::take(&mut self.scratch);
+        self.hasher.fill_coords_slice(keys, &mut coords);
+        let w = self.params.width;
+        for r in 0..self.params.rows {
+            let row = &mut self.table[r * w..(r + 1) * w];
+            for (c, &v) in coords.iter().zip(vals) {
+                let (b, s) = self.hasher.bucket_sign_from(c, r);
+                row[b] += s * v;
+            }
+        }
+        self.processed += keys.len() as u64;
+        self.scratch = coords;
     }
 
     /// Columnar micro-batch update (§Perf L3-6).
@@ -146,27 +201,16 @@ impl RhhSketch for CountSketch {
     }
 
     fn est(&self, key: u64) -> f64 {
-        // §Perf L3-3: stack buffer for ≤ 63 rows (no per-call allocation)
-        let c = self.hasher.coords_of(key);
-        let w = self.params.width;
+        // §Perf L3-3: stack buffer for ≤ 63 rows (no per-call allocation);
+        // wide sketches pay one scratch per call — batch queries should go
+        // through est_many, which shares one scratch across all keys
         let rows = self.params.rows;
         if rows <= 63 {
             let mut buf = [0.0f64; 63];
-            for (r, slot) in buf[..rows].iter_mut().enumerate() {
-                let b = self.hasher.bucket_from(&c, r);
-                *slot = self.hasher.sign_from(&c, r) * self.table[r * w + b];
-            }
-            let mid = rows / 2;
-            buf[..rows].select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
-            buf[mid]
+            self.est_into(key, &mut buf[..rows])
         } else {
-            let vals: Vec<f64> = (0..rows)
-                .map(|r| {
-                    let b = self.hasher.bucket_from(&c, r);
-                    self.hasher.sign_from(&c, r) * self.table[r * w + b]
-                })
-                .collect();
-            Self::median(vals)
+            let mut buf = vec![0.0f64; rows];
+            self.est_into(key, &mut buf)
         }
     }
 
@@ -360,6 +404,53 @@ mod tests {
     fn size_words_matches_shape() {
         let cs = CountSketch::with_shape(31, 100, 1);
         assert_eq!(cs.size_words(), 3100);
+    }
+
+    #[test]
+    fn soa_block_path_bit_identical_to_batch_and_scalar() {
+        run("countsketch cols == batch == scalar", 20, |g: &mut Gen| {
+            let rows = *g.choose(&[1usize, 3, 7]);
+            let width = g.usize_range(16, 512);
+            let seed = g.u64_below(u64::MAX);
+            let mut scalar = CountSketch::with_shape(rows, width, seed);
+            let mut batched = CountSketch::with_shape(rows, width, seed);
+            let mut blocked = CountSketch::with_shape(rows, width, seed);
+            let m = g.usize_range(1, 600);
+            let elems: Vec<Element> = (0..m)
+                .map(|_| Element::new(g.u64_below(1 << 20), g.f64_range(-50.0, 50.0)))
+                .collect();
+            for e in &elems {
+                scalar.process(e);
+            }
+            let chunk = g.usize_range(1, m + 7);
+            for c in elems.chunks(chunk) {
+                batched.process_batch(c);
+                let block = crate::data::ElementBlock::from_elements(c);
+                blocked.process_cols(&block.keys, &block.vals);
+            }
+            assert_eq!(scalar.table(), batched.table());
+            assert_eq!(batched.table(), blocked.table());
+            assert_eq!(scalar.processed(), blocked.processed());
+        });
+    }
+
+    #[test]
+    fn est_many_bit_identical_to_est() {
+        run("countsketch est_many == est", 15, |g: &mut Gen| {
+            // cover both the stack-buffer (<=63) and heap-scratch rows paths
+            let rows = *g.choose(&[5usize, 7, 65]);
+            let width = g.usize_range(32, 256);
+            let mut cs = CountSketch::with_shape(rows, width, g.u64_below(1 << 48));
+            for _ in 0..g.usize_range(1, 500) {
+                cs.process(&Element::new(g.u64_below(2000), g.f64_range(-10.0, 10.0)));
+            }
+            let keys: Vec<u64> = (0..200).map(|_| g.u64_below(2500)).collect();
+            let mut out = vec![0.0f64; keys.len()];
+            cs.est_many(&keys, &mut out);
+            for (&k, &e) in keys.iter().zip(&out) {
+                assert_eq!(e.to_bits(), cs.est(k).to_bits(), "key {k}");
+            }
+        });
     }
 
     #[test]

@@ -91,6 +91,24 @@ impl AnyRhh {
             AnyRhh::CountMin(s) => s.process_batch(batch),
         }
     }
+
+    /// Columnar SoA update (§Perf L3-7) — dispatches to the wrapped
+    /// sketch's `process_cols`; bit-identical to the scalar loop.
+    pub fn process_cols(&mut self, keys: &[u64], vals: &[f64]) {
+        match self {
+            AnyRhh::CountSketch(s) => s.process_cols(keys, vals),
+            AnyRhh::CountMin(s) => s.process_cols(keys, vals),
+        }
+    }
+
+    /// Column estimation (§Perf L3-7) — one scratch shared across the
+    /// whole key slice; each entry bit-identical to [`RhhSketch::est`].
+    pub fn est_many(&self, keys: &[u64], out: &mut [f64]) {
+        match self {
+            AnyRhh::CountSketch(s) => s.est_many(keys, out),
+            AnyRhh::CountMin(s) => s.est_many(keys, out),
+        }
+    }
 }
 
 impl RhhSketch for AnyRhh {

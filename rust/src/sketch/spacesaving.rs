@@ -158,6 +158,16 @@ impl<K: Eq + Hash + Clone + Ord> SpaceSaving<K> {
             key.clone(),
             Counter { key, count: min_count + val, overestimate: min_count },
         );
+        // Bound the lazy-deletion heap: the intended invariant is one
+        // entry per live counter, but that rests on every code path
+        // popping exactly what it pushes — compact back to the live set
+        // if drift ever accumulates, so adversarial churn can never grow
+        // the heap past 2×capacity. Rebuilding from the counters does not
+        // change eviction order (pop_min converges to the same (count,
+        // key) minimum with or without stale entries).
+        if self.heap.len() > 2 * self.capacity {
+            self.rebuild_heap();
+        }
     }
 
     /// Pop the true minimum `(count, key)` over live counters, refreshing
@@ -187,6 +197,13 @@ impl<K: Eq + Hash + Clone + Ord> SpaceSaving<K> {
                 .values()
                 .map(|c| HeapEntry { count: c.count, key: c.key.clone() }),
         );
+    }
+
+    /// Live size of the lazy-deletion eviction heap (diagnostics; the
+    /// compaction in `update` keeps this ≤ 2 × capacity — asserted by the
+    /// churn unit test below).
+    pub fn eviction_heap_len(&self) -> usize {
+        self.heap.len()
     }
 
     /// Estimated frequency (upper bound; 0 for untracked keys).
@@ -272,6 +289,17 @@ impl SpaceSaving<u64> {
             self.update(e.key, e.val);
         }
         self.processed += batch.len() as u64;
+    }
+
+    /// Columnar SoA entry point (§Perf L3-7): updates stream off the two
+    /// dense columns with no per-element struct loads; identical update
+    /// order to the scalar loop, so the summary state is the same.
+    pub fn process_cols(&mut self, keys: &[u64], vals: &[f64]) {
+        debug_assert_eq!(keys.len(), vals.len());
+        for (&k, &v) in keys.iter().zip(vals) {
+            self.update(k, v);
+        }
+        self.processed += keys.len() as u64;
     }
 }
 
@@ -458,6 +486,60 @@ mod tests {
             for (a, b) in st.iter().zip(&bt) {
                 assert_eq!(a.key, b.key);
                 assert!((a.count - b.count).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn eviction_heap_stays_bounded_under_adversarial_churn() {
+        // adversarial mix: constant hits on tracked keys (staling their
+        // heap entries) interleaved with a rotating front of fresh keys
+        // (forcing evictions) — the lazy-deletion heap must stay within
+        // 2× capacity at every step, never growing with stream length
+        let cap = 8;
+        let mut ss: SpaceSaving<u64> = SpaceSaving::new(cap);
+        for t in 0..20_000u64 {
+            match t % 4 {
+                // hits on a small hot set: stale entries
+                0 | 1 => ss.process(t % 3, 1.0),
+                // cold churn: unseen keys, constant evictions
+                _ => ss.process(1000 + t, 1.0),
+            }
+            assert!(
+                ss.eviction_heap_len() <= 2 * cap,
+                "heap grew to {} at t={t} (cap {cap})",
+                ss.eviction_heap_len()
+            );
+        }
+        // hot keys survived the churn with exact-ish counts
+        assert!(ss.est(&0) >= 1000.0);
+    }
+
+    #[test]
+    fn soa_cols_equal_scalar_loop() {
+        run("spacesaving cols == scalar", 15, |g: &mut Gen| {
+            let cap = g.usize_range(2, 16);
+            let mut scalar: SpaceSaving<u64> = SpaceSaving::new(cap);
+            let mut blocked: SpaceSaving<u64> = SpaceSaving::new(cap);
+            let m = g.usize_range(1, 500);
+            let updates: Vec<(u64, f64)> = (0..m)
+                .map(|_| (g.u64_below(60), g.f64_range(0.0, 5.0)))
+                .collect();
+            for (k, v) in &updates {
+                scalar.process(*k, *v);
+            }
+            for c in updates.chunks(g.usize_range(1, m + 3)) {
+                let keys: Vec<u64> = c.iter().map(|(k, _)| *k).collect();
+                let vals: Vec<f64> = c.iter().map(|(_, v)| *v).collect();
+                blocked.process_cols(&keys, &vals);
+            }
+            assert_eq!(scalar.processed(), blocked.processed());
+            let (st, bt) = (scalar.top(), blocked.top());
+            assert_eq!(st.len(), bt.len());
+            for (a, b) in st.iter().zip(&bt) {
+                assert_eq!(a.key, b.key);
+                assert_eq!(a.count.to_bits(), b.count.to_bits());
+                assert_eq!(a.overestimate.to_bits(), b.overestimate.to_bits());
             }
         });
     }

@@ -152,6 +152,28 @@ impl TopK {
         }
     }
 
+    /// Columnar SoA pass-II sweep (§Perf L3-7): stream a block's key and
+    /// value columns through the accumulate-first hot path. `priority_of`
+    /// is only invoked for unseen keys (the rHH-sketch estimate the
+    /// caller owns), so repeat elements of stored keys — the common case
+    /// on skewed streams — cost one map probe and touch no sketch at all.
+    /// Update order equals the scalar element loop, so the final state is
+    /// identical.
+    pub fn process_cols<P: FnMut(u64) -> f64>(
+        &mut self,
+        keys: &[u64],
+        vals: &[f64],
+        mut priority_of: P,
+    ) {
+        debug_assert_eq!(keys.len(), vals.len());
+        for (&k, &v) in keys.iter().zip(vals) {
+            if !self.accumulate(k, v) {
+                let priority = priority_of(k);
+                self.process(k, v, priority);
+            }
+        }
+    }
+
     /// Merge another structure built with the same capacities over a
     /// disjoint shard (values add; priorities agree because both sides use
     /// the same pass-I sketch). Retains top `merge_cap` priorities.
@@ -380,6 +402,39 @@ mod tests {
         t.process(5, 1.0, 3.0);
         assert!(t.accumulate(5, 2.0));
         assert_eq!(t.by_priority()[0].value, 3.0);
+    }
+
+    #[test]
+    fn process_cols_equals_scalar_and_skips_priorities_for_hits() {
+        let mut scalar = TopK::new(3, 4);
+        let mut blocked = TopK::new(3, 4);
+        let updates: [(u64, f64); 7] = [
+            (1, 2.0),
+            (2, 1.0),
+            (1, 3.0),
+            (3, 1.0),
+            (4, 5.0), // eviction candidate
+            (1, 1.0),
+            (4, 1.0),
+        ];
+        let pri = |k: u64| (10 * k) as f64;
+        for &(k, v) in &updates {
+            if !scalar.accumulate(k, v) {
+                scalar.process(k, v, pri(k));
+            }
+        }
+        let keys: Vec<u64> = updates.iter().map(|(k, _)| *k).collect();
+        let vals: Vec<f64> = updates.iter().map(|(_, v)| *v).collect();
+        let mut priority_calls = 0;
+        blocked.process_cols(&keys, &vals, |k| {
+            priority_calls += 1;
+            pri(k)
+        });
+        assert_eq!(scalar.by_priority(), blocked.by_priority());
+        // only misses pay a priority lookup: first sightings of keys
+        // 1, 2, 3, 4 plus the re-sighting of key 1 after its eviction —
+        // the two accumulate hits ((1, 3.0) and (4, 1.0)) pay nothing
+        assert_eq!(priority_calls, 5);
     }
 
     #[test]

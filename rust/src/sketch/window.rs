@@ -89,21 +89,21 @@ impl WindowedCountSketch {
         self.active.process(e);
     }
 
-    /// Micro-batch path for the implicit-clock mode (§Perf L3-6): element
-    /// `i` of the batch is stamped `now + 1 + i`, exactly like repeated
-    /// [`WindowedCountSketch::process_at`] calls with per-element ticks.
-    ///
-    /// The batch is split into *runs* that stay inside one ring bucket and
-    /// cross no expiry tick; each run flows through the columnar
-    /// [`CountSketch::process_batch`] of the back bucket and the active
-    /// table. Expiry/bucket structure changes only at span boundaries and
-    /// at `front.start + span + window` (the next expiry tick), so within
-    /// a run the scalar loop performs the same per-cell additions in the
-    /// same order — the result is bit-identical to element-at-a-time
-    /// processing.
-    pub fn process_batch_ticks(&mut self, batch: &[Element]) {
+    /// Shared run-chunking engine of the two implicit-clock batch paths:
+    /// split `n` per-element ticks into *runs* that stay inside one ring
+    /// bucket and cross no expiry tick, calling
+    /// `apply(back_bucket, active, offset, run_len)` for each. Expiry and
+    /// bucket structure change only at span boundaries and at
+    /// `front.start + span + window` (the next expiry tick), so within a
+    /// run the scalar loop performs the same per-cell additions in the
+    /// same order — whatever `apply` feeds the two sketches is
+    /// bit-identical to element-at-a-time processing. One copy of the
+    /// boundary arithmetic keeps the AoS and SoA paths from drifting.
+    fn process_runs<F>(&mut self, n: usize, mut apply: F)
+    where
+        F: FnMut(&mut CountSketch, &mut CountSketch, usize, usize),
+    {
         let mut i = 0;
-        let n = batch.len();
         let span = self.span.max(1);
         while i < n {
             let t = self.now + 1;
@@ -126,12 +126,38 @@ impl WindowedCountSketch {
                 .unwrap_or(u64::MAX);
             let run_last_t = (bucket_start + span - 1).min(next_expiry - 1);
             let run_len = ((run_last_t - t + 1) as usize).min(n - i);
-            let chunk = &batch[i..i + run_len];
-            self.ring.back_mut().unwrap().1.process_batch(chunk);
-            self.active.process_batch(chunk);
+            let back = &mut self.ring.back_mut().unwrap().1;
+            apply(back, &mut self.active, i, run_len);
             self.now = t + run_len as u64 - 1;
             i += run_len;
         }
+    }
+
+    /// Micro-batch path for the implicit-clock mode (§Perf L3-6): element
+    /// `i` of the batch is stamped `now + 1 + i`, exactly like repeated
+    /// [`WindowedCountSketch::process_at`] calls with per-element ticks;
+    /// each run flows through the columnar [`CountSketch::process_batch`]
+    /// of the back bucket and the active table (see
+    /// `process_runs` for the bit-identity argument).
+    pub fn process_batch_ticks(&mut self, batch: &[Element]) {
+        self.process_runs(batch.len(), |back, active, i, len| {
+            let chunk = &batch[i..i + len];
+            back.process_batch(chunk);
+            active.process_batch(chunk);
+        });
+    }
+
+    /// SoA twin of [`WindowedCountSketch::process_batch_ticks`] (§Perf
+    /// L3-7): the same run-chunking, but each run's sub-slices of the
+    /// key/value columns flow through the columnar
+    /// [`CountSketch::process_cols`] of the back bucket and the active
+    /// table — bit-identical to element-at-a-time processing.
+    pub fn process_cols_ticks(&mut self, keys: &[u64], vals: &[f64]) {
+        debug_assert_eq!(keys.len(), vals.len());
+        self.process_runs(keys.len(), |back, active, i, len| {
+            back.process_cols(&keys[i..i + len], &vals[i..i + len]);
+            active.process_cols(&keys[i..i + len], &vals[i..i + len]);
+        });
     }
 
     /// Drop sub-sketches entirely outside the window ending at `t`.
@@ -416,6 +442,28 @@ mod tests {
         assert_eq!(scalar.live_buckets(), batched.live_buckets());
         assert_eq!(scalar.active.table(), batched.active.table());
         for ((sa, s), (ba, b)) in scalar.ring.iter().zip(batched.ring.iter()) {
+            assert_eq!(sa, ba);
+            assert_eq!(s.table(), b.table());
+        }
+    }
+
+    #[test]
+    fn soa_cols_ticks_bit_identical_to_batch_ticks() {
+        let mut batched = WindowedCountSketch::new(params(), 40, 4);
+        let mut blocked = WindowedCountSketch::new(params(), 40, 4);
+        let mut rng = crate::util::rng::Rng::new(23);
+        let elems: Vec<Element> = (0..500)
+            .map(|_| Element::new(rng.below(25), rng.normal()))
+            .collect();
+        for chunk in elems.chunks(37) {
+            batched.process_batch_ticks(chunk);
+            let block = crate::data::ElementBlock::from_elements(chunk);
+            blocked.process_cols_ticks(&block.keys, &block.vals);
+        }
+        assert_eq!(batched.now(), blocked.now());
+        assert_eq!(batched.live_buckets(), blocked.live_buckets());
+        assert_eq!(batched.active.table(), blocked.active.table());
+        for ((sa, s), (ba, b)) in batched.ring.iter().zip(blocked.ring.iter()) {
             assert_eq!(sa, ba);
             assert_eq!(s.table(), b.table());
         }

@@ -62,6 +62,19 @@ impl BottomKTransform {
         Element::new(e.key, e.val * self.scale(e.key))
     }
 
+    /// Columnar transform (§Perf L3-7): fill `out` with
+    /// `vals[i] · r_{keys[i]}^{-1/p}` for a whole SoA block. The key
+    /// column is untouched by the transform, so callers reuse the block's
+    /// `keys` slice directly and only the value column is rewritten —
+    /// each entry is the same float expression as
+    /// [`BottomKTransform::apply`], hence bit-identical.
+    pub fn apply_cols(&self, keys: &[u64], vals: &[f64], out: &mut Vec<f64>) {
+        debug_assert_eq!(keys.len(), vals.len());
+        out.clear();
+        out.reserve(keys.len());
+        out.extend(keys.iter().zip(vals).map(|(&k, &v)| v * self.scale(k)));
+    }
+
     /// Invert an (estimated) transformed frequency back to the input
     /// frequency domain: `ν̂ = ν̂* · r_x^{1/p}` (Eq. 6). Relative error is
     /// preserved exactly.
@@ -97,6 +110,19 @@ mod tests {
         assert_eq!(out.key, 42);
         let want = 3.0 * t.r(42).powf(-0.5);
         assert!((out.val - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_cols_bit_identical_to_apply() {
+        let t = BottomKTransform::ppswor(5, 1.0);
+        let keys: Vec<u64> = (0..100).map(|i| i * 7 + 3).collect();
+        let vals: Vec<f64> = (0..100).map(|i| i as f64 - 50.0).collect();
+        let mut out = Vec::new();
+        t.apply_cols(&keys, &vals, &mut out);
+        assert_eq!(out.len(), keys.len());
+        for ((&k, &v), &o) in keys.iter().zip(&vals).zip(&out) {
+            assert_eq!(o.to_bits(), t.apply(&Element::new(k, v)).val.to_bits());
+        }
     }
 
     #[test]

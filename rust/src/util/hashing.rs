@@ -48,6 +48,37 @@ pub fn hash_bytes2(seed: u64, a: &[u8], b: &[u8]) -> u64 {
     mix64(h ^ seed.rotate_left(17))
 }
 
+/// Fast 64-bit hash of a byte string, processing aligned 8-byte chunks
+/// (§Perf L3-7). **Not** [`hash_bytes`]-compatible: the byte-at-a-time
+/// FNV core of `hash_bytes`/`hash_bytes2` is load-bearing for every
+/// persisted artifact (envelope checksums, fingerprints, golden
+/// fixtures) and cannot change, so this chunked variant exists only for
+/// the **non-persisted** paths — shard routing of raw string/byte keys
+/// ([`crate::pipeline::shard::Router::route_bytes`]) — where only the
+/// output *distribution* matters, never the exact value. The unit tests
+/// below hold it to the same stability/avalanche/balance properties as
+/// `hash_bytes`.
+#[inline]
+pub fn hash_bytes_fast(seed: u64, bytes: &[u8]) -> u64 {
+    const M: u64 = 0x2545_F491_4F6C_DD1D;
+    let mut h = 0xCBF2_9CE4_8422_2325_u64 ^ seed;
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let mut w = [0u8; 8];
+        w.copy_from_slice(c);
+        h = (h ^ u64::from_le_bytes(w)).wrapping_mul(M).rotate_left(29);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        // zero-padded tail; the length fold below separates "ab" from
+        // "ab\0" even though their padded words collide
+        let mut w = [0u8; 8];
+        w[..rem.len()].copy_from_slice(rem);
+        h = (h ^ u64::from_le_bytes(w)).wrapping_mul(M).rotate_left(29);
+    }
+    mix64(h ^ (bytes.len() as u64) ^ seed.rotate_left(17))
+}
+
 /// Stable hash of a string key to a `u64` key-id. Used to map arbitrary
 /// key domains into the numeric domain the randomized sketches need.
 #[inline]
@@ -255,6 +286,15 @@ impl SketchHasher {
         out.extend(keys.into_iter().map(|k| self.coords_of(k)));
     }
 
+    /// [`SketchHasher::fill_coords`] over a dense key column (§Perf
+    /// L3-7): the SoA block path hands the hasher the `&[u64]` key slice
+    /// of an [`crate::data::ElementBlock`] — a straight-line sweep over
+    /// contiguous keys with no per-element struct loads.
+    #[inline]
+    pub fn fill_coords_slice(&self, keys: &[u64], out: &mut Vec<KeyCoords>) {
+        self.fill_coords(keys.iter().copied(), out);
+    }
+
     /// Sketch width (buckets per row).
     pub fn width(&self) -> usize {
         self.width
@@ -435,6 +475,89 @@ mod tests {
         // refills clear first — no stale coords survive
         sh.fill_coords([1u64, 2].into_iter(), &mut out);
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn fill_coords_slice_matches_iterator_path() {
+        let sh = SketchHasher::new(31, 128);
+        let keys: Vec<u64> = (0..300).map(|i| i * 977 + 5).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        sh.fill_coords(keys.iter().copied(), &mut a);
+        sh.fill_coords_slice(&keys, &mut b);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.h1, x.h2), (y.h1, y.h2));
+        }
+        // refill clears first
+        sh.fill_coords_slice(&[1, 2, 3], &mut b);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn hash_bytes_fast_stable_and_input_sensitive() {
+        assert_eq!(hash_bytes_fast(1, b"shard key"), hash_bytes_fast(1, b"shard key"));
+        assert_ne!(hash_bytes_fast(1, b"shard key"), hash_bytes_fast(2, b"shard key"));
+        assert_ne!(hash_bytes_fast(1, b"shard key"), hash_bytes_fast(1, b"shard kez"));
+        // zero-padded tails must not collide with explicit zero bytes
+        assert_ne!(hash_bytes_fast(1, b"ab"), hash_bytes_fast(1, b"ab\0"));
+        assert_ne!(hash_bytes_fast(1, b""), hash_bytes_fast(1, b"\0\0\0\0\0\0\0\0"));
+        // exercises the exact-chunk boundary (8 and 16 bytes, no tail)
+        assert_ne!(hash_bytes_fast(1, b"12345678"), hash_bytes_fast(1, b"1234567812345678"));
+    }
+
+    #[test]
+    fn hash_bytes_fast_distribution_matches_slow_hash() {
+        // equivalence of *distribution* (not value) with hash_bytes: both
+        // hashes bucketed 64 ways over the same key corpus must be
+        // near-uniform with the same tolerance — the property shard
+        // routing actually needs
+        let n = 64_000u64;
+        let mut fast = vec![0u32; 64];
+        let mut slow = vec![0u32; 64];
+        for i in 0..n {
+            let key = format!("user:{i}:event");
+            let b = key.as_bytes();
+            fast[(((hash_bytes_fast(9, b) as u128) * 64) >> 64) as usize] += 1;
+            slow[(((hash_bytes(9, b) as u128) * 64) >> 64) as usize] += 1;
+        }
+        for bucket in 0..64 {
+            assert!((fast[bucket] as f64 - 1000.0).abs() < 200.0, "fast skew: {}", fast[bucket]);
+            assert!((slow[bucket] as f64 - 1000.0).abs() < 200.0, "slow skew: {}", slow[bucket]);
+        }
+        // and the two assignments are independent (≈ 1/64 agreement), so
+        // the fast hash is not a degenerate transform of the slow one
+        let agree = (0..4000u64)
+            .filter(|i| {
+                let key = format!("k{i}");
+                let b = key.as_bytes();
+                (hash_bytes_fast(9, b) >> 58) == (hash_bytes(9, b) >> 58)
+            })
+            .count();
+        let frac = agree as f64 / 4000.0;
+        assert!(frac < 0.05, "agreement {frac} too high for independent hashes");
+    }
+
+    #[test]
+    fn hash_bytes_fast_avalanche() {
+        // flipping any input bit flips ~half the output bits
+        let mut worst: f64 = 32.0;
+        let base: Vec<u8> = (0..24u8).collect();
+        for byte in 0..24 {
+            for bit in 0..8 {
+                let mut total = 0u32;
+                for s in 0..64u64 {
+                    let mut flipped = base.clone();
+                    flipped[byte] ^= 1 << bit;
+                    total += (hash_bytes_fast(s, &base) ^ hash_bytes_fast(s, &flipped))
+                        .count_ones();
+                }
+                let avg = total as f64 / 64.0;
+                if (avg - 32.0).abs() > (worst - 32.0).abs() {
+                    worst = avg;
+                }
+            }
+        }
+        assert!((worst - 32.0).abs() < 8.0, "worst bit avg flips = {worst}");
     }
 
     #[test]

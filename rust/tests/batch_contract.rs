@@ -1,16 +1,17 @@
-//! Batch contract: for every `StreamSummary` implementation,
-//! `process_batch` must be equivalent to the per-element `process` loop —
-//! including signed/turnstile updates and merges performed *after* batch
-//! ingestion. The columnar sketch paths are held to **bit-identical**
-//! tables (per-cell addition order is preserved by construction); sampler
+//! Batch contract: for every `StreamSummary` implementation, the AoS
+//! `process_batch` path **and** the SoA `process_block` path must be
+//! equivalent to the per-element `process` loop — including
+//! signed/turnstile updates and merges performed *after* batch ingestion.
+//! The columnar sketch paths are held to **bit-identical** tables
+//! (per-cell addition order is preserved by construction); sampler
 //! outputs are held to exact sample equality with domains sized below the
 //! candidate-truncation thresholds (truncation timing is the one place
-//! the batch path legitimately defers work).
+//! the batch/block paths legitimately defer work).
 //!
 //! All cases are seeded and deterministic (`worp::util::proptest`).
 
 use worp::api::{Mergeable, MultiPass, StreamSummary, WorSampler};
-use worp::data::Element;
+use worp::data::{Element, ElementBlock};
 use worp::sampler::exact::ExactWor;
 use worp::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
 use worp::sampler::windowed::WindowedWorp;
@@ -23,18 +24,27 @@ use worp::sketch::spacesaving::SpaceSaving;
 use worp::sketch::{AnyRhh, RhhSketch, SketchParams};
 use worp::util::proptest::{run, Gen};
 
-/// Drive a clone per path: per-element vs chunked batches.
-fn scalar_vs_batch<S: StreamSummary + Clone>(proto: &S, elems: &[Element], chunk: usize) -> (S, S) {
+/// Drive a clone per path: per-element vs chunked AoS batches vs chunked
+/// SoA blocks (identical chunk boundaries, so deferred bookkeeping fires
+/// at the same points on both non-scalar paths).
+fn scalar_vs_batch_vs_block<S: StreamSummary + Clone>(
+    proto: &S,
+    elems: &[Element],
+    chunk: usize,
+) -> (S, S, S) {
     let mut scalar = proto.clone();
     let mut batched = proto.clone();
+    let mut blocked = proto.clone();
     for e in elems {
         scalar.process(e);
     }
     for c in elems.chunks(chunk.max(1)) {
         batched.process_batch(c);
+        blocked.process_block(&ElementBlock::from_elements(c));
     }
     assert_eq!(scalar.processed(), batched.processed());
-    (scalar, batched)
+    assert_eq!(scalar.processed(), blocked.processed());
+    (scalar, batched, blocked)
 }
 
 /// A seeded signed (turnstile) element stream.
@@ -51,8 +61,9 @@ fn countsketch_batch_contract() {
         let proto = CountSketch::new(params);
         let m = g.usize_range(1, 800);
         let elems = signed_stream(g, m, 3000);
-        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 300));
-        assert_eq!(s.table(), b.table(), "columnar path must be bit-identical");
+        let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, g.usize_range(1, 300));
+        assert_eq!(s.table(), b.table(), "columnar batch path must be bit-identical");
+        assert_eq!(s.table(), blk.table(), "SoA block path must be bit-identical");
     });
 }
 
@@ -65,9 +76,10 @@ fn countmin_batch_contract() {
         let elems: Vec<Element> = (0..m)
             .map(|_| Element::new(g.u64_below(500), g.f64_range(0.0, 10.0)))
             .collect();
-        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 200));
+        let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, g.usize_range(1, 200));
         for key in 0..500u64 {
             assert_eq!(s.est(key), b.est(key));
+            assert_eq!(s.est(key), blk.est(key));
         }
     });
 }
@@ -83,9 +95,10 @@ fn anyrhh_batch_contract_both_arms() {
             let elems: Vec<Element> = (0..m)
                 .map(|_| Element::new(g.u64_below(400), g.f64_range(0.0, 8.0)))
                 .collect();
-            let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 100));
+            let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, g.usize_range(1, 100));
             for key in 0..400u64 {
                 assert_eq!(s.est(key), b.est(key), "q={q}");
+                assert_eq!(s.est(key), blk.est(key), "q={q}");
             }
         }
     });
@@ -99,13 +112,17 @@ fn spacesaving_batch_contract() {
         let elems: Vec<Element> = (0..m)
             .map(|_| Element::new(g.u64_below(80), g.f64_range(0.0, 5.0)))
             .collect();
-        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 250));
-        let (st, bt) = (s.top(), b.top());
+        let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, g.usize_range(1, 250));
+        let (st, bt, kt) = (s.top(), b.top(), blk.top());
         assert_eq!(st.len(), bt.len());
-        for (a, c) in st.iter().zip(&bt) {
+        assert_eq!(st.len(), kt.len());
+        for ((a, c), d) in st.iter().zip(&bt).zip(&kt) {
             assert_eq!(a.key, c.key);
+            assert_eq!(a.key, d.key);
             assert!((a.count - c.count).abs() < 1e-9);
+            assert_eq!(c.count.to_bits(), d.count.to_bits());
             assert!((a.overestimate - c.overestimate).abs() < 1e-9);
+            assert_eq!(c.overestimate.to_bits(), d.overestimate.to_bits());
         }
     });
 }
@@ -122,10 +139,16 @@ fn worp1_batch_contract_signed() {
         let proto = OnePassWorp::new(cfg);
         let m = g.usize_range(20, 600);
         let elems = signed_stream(g, m, 120);
-        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 200));
-        let (ss, bs) = (WorSampler::sample(&s).unwrap(), WorSampler::sample(&b).unwrap());
+        let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, g.usize_range(1, 200));
+        let (ss, bs, ks) = (
+            WorSampler::sample(&s).unwrap(),
+            WorSampler::sample(&b).unwrap(),
+            WorSampler::sample(&blk).unwrap(),
+        );
         assert_eq!(ss.entries, bs.entries);
+        assert_eq!(ss.entries, ks.entries);
         assert_eq!(ss.tau, bs.tau);
+        assert_eq!(ss.tau, ks.tau);
     });
 }
 
@@ -137,7 +160,8 @@ fn worp2_batch_contract_both_passes() {
             .with_domain(200)
             .with_sketch_shape(5, 512);
         let mut scalar = TwoPassWorp::new(cfg.clone());
-        let mut batched = TwoPassWorp::new(cfg);
+        let mut batched = TwoPassWorp::new(cfg.clone());
+        let mut blocked = TwoPassWorp::new(cfg);
         let m = g.usize_range(20, 500);
         let elems = signed_stream(g, m, 200);
         let chunk = g.usize_range(1, 150);
@@ -145,17 +169,25 @@ fn worp2_batch_contract_both_passes() {
             if pass > 0 {
                 scalar.advance().unwrap();
                 batched.advance().unwrap();
+                blocked.advance().unwrap();
             }
             for e in &elems {
                 StreamSummary::process(&mut scalar, e);
             }
             for c in elems.chunks(chunk) {
                 StreamSummary::process_batch(&mut batched, c);
+                StreamSummary::process_block(&mut blocked, &ElementBlock::from_elements(c));
             }
         }
-        let (ss, bs) = (scalar.sample().unwrap(), batched.sample().unwrap());
+        let (ss, bs, ks) = (
+            scalar.sample().unwrap(),
+            batched.sample().unwrap(),
+            blocked.sample().unwrap(),
+        );
         assert_eq!(ss.entries, bs.entries);
+        assert_eq!(ss.entries, ks.entries);
         assert_eq!(ss.tau, bs.tau);
+        assert_eq!(ss.tau, ks.tau);
     });
 }
 
@@ -169,8 +201,9 @@ fn tv_batch_contract() {
         let elems: Vec<Element> = (0..m)
             .map(|_| Element::new(g.u64_below(60), g.f64_range(0.1, 5.0)))
             .collect();
-        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 64));
+        let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, g.usize_range(1, 64));
         assert_eq!(s.produce_keys(), b.produce_keys());
+        assert_eq!(s.produce_keys(), blk.produce_keys());
     });
 }
 
@@ -187,10 +220,16 @@ fn windowed_batch_contract() {
         let proto = WindowedWorp::new(cfg, window, 5);
         let m = g.usize_range(20, 600);
         let elems = signed_stream(g, m, 100);
-        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 200));
-        let (ss, bs) = (WorSampler::sample(&s).unwrap(), WorSampler::sample(&b).unwrap());
+        let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, g.usize_range(1, 200));
+        let (ss, bs, ks) = (
+            WorSampler::sample(&s).unwrap(),
+            WorSampler::sample(&b).unwrap(),
+            WorSampler::sample(&blk).unwrap(),
+        );
         assert_eq!(ss.entries, bs.entries);
+        assert_eq!(ss.entries, ks.entries);
         assert_eq!(ss.tau, bs.tau);
+        assert_eq!(ss.tau, ks.tau);
     });
 }
 
@@ -201,9 +240,14 @@ fn exact_batch_contract() {
         let proto = ExactWor::new(cfg);
         let m = g.usize_range(1, 600);
         let elems = signed_stream(g, m, 300);
-        let (s, b) = scalar_vs_batch(&proto, &elems, g.usize_range(1, 200));
-        let (ss, bs) = (WorSampler::sample(&s).unwrap(), WorSampler::sample(&b).unwrap());
+        let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, g.usize_range(1, 200));
+        let (ss, bs, ks) = (
+            WorSampler::sample(&s).unwrap(),
+            WorSampler::sample(&b).unwrap(),
+            WorSampler::sample(&blk).unwrap(),
+        );
         assert_eq!(ss.entries, bs.entries);
+        assert_eq!(ss.entries, ks.entries);
     });
 }
 
@@ -262,10 +306,11 @@ fn merge_after_batch_equals_whole_scalar() {
 }
 
 #[test]
-fn boxed_dyn_sampler_batch_contract() {
+fn boxed_dyn_sampler_batch_and_block_contract() {
     // the builder → Box<dyn WorSampler> route (the CLI/pipeline path)
-    // must hit the specialized overrides, not the default loop: verify the
-    // outputs match the concrete-typed batch path exactly
+    // must hit the specialized overrides, not the default loops: both the
+    // AoS batch path and the SoA block path through the trait object must
+    // match the scalar loop exactly
     let n = 150;
     let elems: Vec<Element> = (0..400)
         .map(|i| Element::new((i * 17) % n, 1.0 + (i % 7) as f64))
@@ -277,14 +322,17 @@ fn boxed_dyn_sampler_batch_contract() {
         .sketch_shape(5, 512);
     for method in [worp::Method::OnePass, worp::Method::TwoPass, worp::Method::Exact] {
         let mut boxed = b.clone().method(method).build().unwrap();
+        let mut blocked = b.clone().method(method).build().unwrap();
         let mut scalar = b.clone().method(method).build().unwrap();
         for pass in 0..boxed.passes() {
             if pass > 0 {
                 boxed.advance().unwrap();
+                blocked.advance().unwrap();
                 scalar.advance().unwrap();
             }
             for c in elems.chunks(64) {
                 boxed.process_batch(c);
+                blocked.process_block(&ElementBlock::from_elements(c));
             }
             for e in &elems {
                 scalar.process(e);
@@ -294,6 +342,11 @@ fn boxed_dyn_sampler_batch_contract() {
             boxed.sample().unwrap().keys(),
             scalar.sample().unwrap().keys(),
             "{method:?}"
+        );
+        assert_eq!(
+            blocked.sample().unwrap().keys(),
+            scalar.sample().unwrap().keys(),
+            "{method:?} (block)"
         );
     }
 }

@@ -43,17 +43,17 @@ fn killed_run_resumes_bit_identical_for_exact_summary() {
     // phase 1: process ~60% of the stream, then "crash" (drop the states)
     let cut = elems.len() * 6 / 10;
     let (_lost, m1) =
-        run_sharded_checkpointed(elems[..cut].to_vec(), opts, &policy, proto).unwrap();
+        run_sharded_checkpointed(&elems[..cut], opts, &policy, proto).unwrap();
     assert!(m1.snapshots() > 0, "no checkpoints were written before the crash");
     assert_eq!(m1.restores(), 0);
 
     // phase 2: resume over the full stream from the snapshot directory
     let (resumed, m2) =
-        run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+        run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap();
     assert_eq!(m2.restores() as usize, opts.workers, "all shards restore");
 
     // reference: one uninterrupted (non-checkpointed) run
-    let (reference, _) = run_sharded(elems, opts, proto).unwrap();
+    let (reference, _) = run_sharded(&elems, opts, proto).unwrap();
 
     assert_eq!(resumed.len(), reference.len());
     for (r, q) in resumed.iter().zip(&reference) {
@@ -76,10 +76,10 @@ fn killed_run_resumes_bit_identical_for_sketch_and_worp1() {
     let policy = CheckpointPolicy::new(3, tmp("sketch")).unwrap();
     let proto = |_w: usize| CountSketch::new(SketchParams::new(5, 128, 3));
     let cut = elems.len() / 2;
-    run_sharded_checkpointed(elems[..cut].to_vec(), opts, &policy, proto).unwrap();
+    run_sharded_checkpointed(&elems[..cut], opts, &policy, proto).unwrap();
     let (resumed, _) =
-        run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
-    let (reference, _) = run_sharded(elems.clone(), opts, proto).unwrap();
+        run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap();
+    let (reference, _) = run_sharded(&elems, opts, proto).unwrap();
     for (r, q) in resumed.iter().zip(&reference) {
         assert_eq!(r.table(), q.table());
         assert_eq!(r.processed(), q.processed());
@@ -89,10 +89,10 @@ fn killed_run_resumes_bit_identical_for_sketch_and_worp1() {
     // snapshots land on batch edges so the resumed run realigns exactly
     let policy = CheckpointPolicy::new(2, tmp("worp1")).unwrap();
     let proto = |_w: usize| OnePassWorp::new(cfg(17));
-    run_sharded_checkpointed(elems[..cut].to_vec(), opts, &policy, proto).unwrap();
+    run_sharded_checkpointed(&elems[..cut], opts, &policy, proto).unwrap();
     let (resumed, _) =
-        run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
-    let (reference, _) = run_sharded(elems, opts, proto).unwrap();
+        run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap();
+    let (reference, _) = run_sharded(&elems, opts, proto).unwrap();
     for (r, q) in resumed.iter().zip(&reference) {
         assert_eq!(r.encode(), q.encode(), "worp1 shard state diverged");
     }
@@ -108,10 +108,10 @@ fn repeated_crashes_still_converge() {
     let proto = |_w: usize| ExactWor::new(cfg(23));
     for frac in [2usize, 3, 5, 7] {
         let cut = elems.len() * (frac - 1) / frac;
-        run_sharded_checkpointed(elems[..cut].to_vec(), opts, &policy, proto).unwrap();
+        run_sharded_checkpointed(&elems[..cut], opts, &policy, proto).unwrap();
     }
-    let (resumed, _) = run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
-    let (reference, _) = run_sharded(elems, opts, proto).unwrap();
+    let (resumed, _) = run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap();
+    let (reference, _) = run_sharded(&elems, opts, proto).unwrap();
     for (r, q) in resumed.iter().zip(&reference) {
         assert_eq!(r.encode(), q.encode());
     }
@@ -196,14 +196,14 @@ fn run_summary_checkpointed_resumes_through_the_coordinator() {
     };
     let cut = elems.len() / 2;
     make_coord()
-        .run_summary_checkpointed(elems[..cut].to_vec(), ExactWor::new(cfg(5)))
+        .run_summary_checkpointed(&elems[..cut], ExactWor::new(cfg(5)))
         .unwrap();
     let (resumed, m) = make_coord()
-        .run_summary_checkpointed(elems.clone(), ExactWor::new(cfg(5)))
+        .run_summary_checkpointed(&elems, ExactWor::new(cfg(5)))
         .unwrap();
     assert!(m.restores() > 0);
     let plain = Coordinator::new(cfg(5), PipelineOpts::new(2, 32, 4).unwrap());
-    let (reference, _) = plain.run_summary(elems, ExactWor::new(cfg(5))).unwrap();
+    let (reference, _) = plain.run_summary(&elems, ExactWor::new(cfg(5))).unwrap();
     assert_eq!(resumed.encode(), reference.encode());
     assert_eq!(
         Mergeable::fingerprint(&resumed),

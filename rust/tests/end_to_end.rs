@@ -97,8 +97,8 @@ fn property_one_pass_merge_associative_across_shardings() {
             cfg(1.0, 10, n, seed),
             PipelineOpts::new(g.usize_range(2, 8), 32, 2).unwrap(),
         );
-        let (s1, _) = c1.one_pass(elems.clone()).unwrap();
-        let (sn, _) = cn.one_pass(elems).unwrap();
+        let (s1, _) = c1.one_pass(&elems).unwrap();
+        let (sn, _) = cn.one_pass(&elems).unwrap();
         assert_eq!(s1.keys(), sn.keys());
         for (a, b) in s1.entries.iter().zip(&sn.entries) {
             assert!((a.freq - b.freq).abs() < 1e-6 * a.freq.abs().max(1.0));
@@ -137,7 +137,7 @@ fn signed_gradient_pipeline_end_to_end() {
     let n = 5_000;
     let elems: Vec<Element> = GradientStream::new(n, 1.0, 300_000, 7).collect();
     let c = Coordinator::new(cfg(2.0, 50, n, 13), PipelineOpts::new(4, 2048, 8).unwrap());
-    let (sample, metrics) = c.one_pass(elems.clone()).unwrap();
+    let (sample, metrics) = c.one_pass(&elems).unwrap();
     assert_eq!(metrics.elements(), 300_000);
     assert_eq!(sample.len(), 50);
     // heavy parameters (small indices) dominate the l2 sample
@@ -165,7 +165,7 @@ fn failure_injection_worker_panic_is_reported() {
         }
     }
     let elems: Vec<Element> = (0..1000u64).map(|i| Element::new(i % 50, 1.0)).collect();
-    let r = worp::pipeline::run_sharded(elems, PipelineOpts::new(2, 64, 2).unwrap(), |_| Bomb);
+    let r = worp::pipeline::run_sharded(&elems, PipelineOpts::new(2, 64, 2).unwrap(), |_| Bomb);
     match r {
         Err(e) => assert!(e.to_string().contains("pipeline")),
         Ok(_) => panic!("worker panic must surface as a pipeline error"),
@@ -176,12 +176,12 @@ fn failure_injection_worker_panic_is_reported() {
 fn degenerate_streams_handled() {
     // empty stream
     let c = Coordinator::new(cfg(1.0, 5, 100, 1), PipelineOpts::new(2, 16, 2).unwrap());
-    let (s, m) = c.one_pass(Vec::<Element>::new()).unwrap();
+    let (s, m) = c.one_pass(&Vec::<Element>::new()).unwrap();
     assert_eq!(m.elements(), 0);
     assert!(s.is_empty());
     // single-key stream
     let elems = vec![Element::new(7, 1.0); 100];
-    let (s, _) = c.one_pass(elems).unwrap();
+    let (s, _) = c.one_pass(&elems).unwrap();
     assert_eq!(s.len(), 1);
     assert_eq!(s.entries[0].key, 7);
     assert_eq!(s.tau, 0.0);

@@ -1,0 +1,204 @@
+//! Parallel-partitioning contract: the scan-based pipeline (every worker
+//! scans the source and keeps its own hash-partition, packed into SoA
+//! blocks) must produce **exactly** the output of the retired
+//! single-threaded router (route-and-copy into per-shard AoS batches,
+//! pushed over channels) — for every worker count and batch size, down to
+//! per-shard element order, block boundaries, and bit-identical summary
+//! state.
+//!
+//! The reference below reimplements the old router's semantics verbatim
+//! in one thread; `run_sharded` is compared against it over a topology
+//! grid, with three sinks of increasing strictness: an order-recording
+//! sink (exact per-shard subsequence + flush boundaries), a CountSketch
+//! (bit-identical tables), and a 1-pass WORp sampler (batch-boundary
+//! sensitive — candidate shrink timing depends on block edges, so
+//! bit-identical encodes prove the boundaries match too).
+
+use worp::api::{Persist, StreamSummary};
+use worp::data::zipf::ZipfStream;
+use worp::data::Element;
+use worp::pipeline::shard::Router;
+use worp::pipeline::{run_sharded, PipelineOpts, ScanFn};
+use worp::sampler::worp1::OnePassWorp;
+use worp::sampler::SamplerConfig;
+use worp::sketch::countsketch::CountSketch;
+use worp::sketch::SketchParams;
+
+/// The old router, reimplemented as the reference: one sequential pass
+/// over the stream, hash-routing each element into a per-shard buffer
+/// that is flushed (via `process_batch`) whenever it reaches `batch`
+/// elements, with partial buffers flushed at end-of-stream.
+fn reference_router<S, F>(stream: &[Element], opts: PipelineOpts, make: F) -> Vec<S>
+where
+    S: StreamSummary,
+    F: Fn(usize) -> S,
+{
+    let router = Router::new(opts.workers);
+    let mut states: Vec<S> = (0..opts.workers).map(&make).collect();
+    let mut buffers: Vec<Vec<Element>> = (0..opts.workers)
+        .map(|_| Vec::with_capacity(opts.batch))
+        .collect();
+    for e in stream {
+        let w = router.route(e.key);
+        buffers[w].push(*e);
+        if buffers[w].len() == opts.batch {
+            states[w].process_batch(&buffers[w]);
+            buffers[w].clear();
+        }
+    }
+    for (w, buf) in buffers.iter().enumerate() {
+        if !buf.is_empty() {
+            states[w].process_batch(buf);
+        }
+    }
+    states
+}
+
+/// An order-recording sink: every element in arrival order, plus the
+/// flush boundaries (so block edges are part of the comparison).
+#[derive(Clone, Default)]
+struct TraceSink {
+    elems: Vec<Element>,
+    boundaries: Vec<usize>,
+}
+
+impl StreamSummary for TraceSink {
+    fn process(&mut self, e: &Element) {
+        self.elems.push(*e);
+    }
+
+    fn process_batch(&mut self, batch: &[Element]) {
+        self.elems.extend_from_slice(batch);
+        self.boundaries.push(self.elems.len());
+    }
+
+    fn process_block(&mut self, block: &worp::data::ElementBlock) {
+        self.elems.extend(block.iter());
+        self.boundaries.push(self.elems.len());
+    }
+
+    fn size_words(&self) -> usize {
+        0
+    }
+
+    fn processed(&self) -> u64 {
+        self.elems.len() as u64
+    }
+}
+
+fn topology_grid() -> Vec<PipelineOpts> {
+    let mut grid = Vec::new();
+    for workers in [1usize, 2, 3, 5] {
+        for batch in [1usize, 7, 64, 1000, 100_000] {
+            grid.push(PipelineOpts::new(workers, batch, 4).unwrap());
+        }
+    }
+    grid
+}
+
+#[test]
+fn partitioning_preserves_per_shard_order_and_block_edges() {
+    let stream: Vec<Element> = ZipfStream::new(500, 1.1, 30_000, 5).collect();
+    for opts in topology_grid() {
+        let reference = reference_router(&stream, opts, |_| TraceSink::default());
+        let (parallel, metrics) = run_sharded(&stream, opts, |_| TraceSink::default()).unwrap();
+        assert_eq!(metrics.elements() as usize, stream.len());
+        for (w, (r, p)) in reference.iter().zip(&parallel).enumerate() {
+            assert_eq!(
+                r.elems, p.elems,
+                "shard {w} order diverged (workers={} batch={})",
+                opts.workers, opts.batch
+            );
+            assert_eq!(
+                r.boundaries, p.boundaries,
+                "shard {w} block edges diverged (workers={} batch={})",
+                opts.workers, opts.batch
+            );
+        }
+    }
+}
+
+#[test]
+fn partitioning_is_bit_identical_for_sketch_state() {
+    let stream: Vec<Element> = ZipfStream::new(300, 1.0, 20_000, 9).collect();
+    for opts in topology_grid() {
+        let make = |_w: usize| CountSketch::new(SketchParams::new(5, 128, 7));
+        let reference = reference_router(&stream, opts, make);
+        let (parallel, _) = run_sharded(&stream, opts, make).unwrap();
+        for (w, (r, p)) in reference.iter().zip(&parallel).enumerate() {
+            assert_eq!(
+                r.table(),
+                p.table(),
+                "shard {w} table diverged (workers={} batch={})",
+                opts.workers,
+                opts.batch
+            );
+            assert_eq!(r.processed(), p.processed());
+        }
+    }
+}
+
+#[test]
+fn partitioning_is_bit_identical_for_batch_sensitive_sampler() {
+    // worp1's candidate shrink fires on block edges: only identical
+    // per-shard subsequences AND identical block boundaries reproduce the
+    // old router's state bit-for-bit (compared via canonical encoding)
+    let stream: Vec<Element> = ZipfStream::new(2_000, 1.2, 15_000, 3).collect();
+    let cfg = SamplerConfig::new(1.0, 8)
+        .with_seed(13)
+        .with_domain(2_000)
+        .with_sketch_shape(5, 512);
+    for opts in topology_grid() {
+        let make = |_w: usize| OnePassWorp::new(cfg.clone());
+        let reference = reference_router(&stream, opts, make);
+        let (parallel, _) = run_sharded(&stream, opts, make).unwrap();
+        for (w, (r, p)) in reference.iter().zip(&parallel).enumerate() {
+            assert_eq!(
+                r.encode(),
+                p.encode(),
+                "shard {w} worp1 state diverged (workers={} batch={})",
+                opts.workers,
+                opts.batch
+            );
+        }
+    }
+}
+
+#[test]
+fn generator_and_vec_sources_agree() {
+    // the same stream through a materialized Vec and through a per-worker
+    // regenerating ScanFn must land in identical shard states
+    let n = 20_000u64;
+    let opts = PipelineOpts::new(3, 256, 4).unwrap();
+    let make = |_w: usize| CountSketch::new(SketchParams::new(5, 64, 21));
+    let vec_stream: Vec<Element> = ZipfStream::new(400, 1.0, n, 17).collect();
+    let (from_vec, _) = run_sharded(&vec_stream, opts, make).unwrap();
+    let (from_gen, _) =
+        run_sharded(&ScanFn(|| ZipfStream::new(400, 1.0, n, 17)), opts, make).unwrap();
+    for (a, b) in from_vec.iter().zip(&from_gen) {
+        assert_eq!(a.table(), b.table());
+        assert_eq!(a.processed(), b.processed());
+    }
+}
+
+#[test]
+fn degenerate_topologies() {
+    // empty stream: every worker returns its pristine state
+    let empty: Vec<Element> = Vec::new();
+    let opts = PipelineOpts::new(4, 16, 2).unwrap();
+    let (states, metrics) = run_sharded(&empty, opts, |_| TraceSink::default()).unwrap();
+    assert_eq!(metrics.elements(), 0);
+    assert!(states.iter().all(|s| s.elems.is_empty()));
+
+    // more workers than distinct keys: idle shards stay empty, totals add
+    let stream: Vec<Element> = (0..100u64).map(|_| Element::new(1, 1.0)).collect();
+    let opts = PipelineOpts::new(8, 7, 2).unwrap();
+    let reference = reference_router(&stream, opts, |_| TraceSink::default());
+    let (parallel, _) = run_sharded(&stream, opts, |_| TraceSink::default()).unwrap();
+    for (r, p) in reference.iter().zip(&parallel) {
+        assert_eq!(r.elems, p.elems);
+        assert_eq!(r.boundaries, p.boundaries);
+    }
+    let total: usize = parallel.iter().map(|s| s.elems.len()).sum();
+    assert_eq!(total, 100);
+}

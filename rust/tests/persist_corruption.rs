@@ -293,7 +293,7 @@ fn checkpoint_file_corruption_is_rejected() {
     let elems: Vec<Element> = (0..500u64).map(|i| Element::new(i % 40, 1.0)).collect();
     let proto = |_w: usize| CountSketch::with_shape(3, 32, 9);
     let (_, metrics) =
-        run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+        run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap();
     assert!(metrics.snapshots() > 0);
     // flip one payload byte of a snapshot: the resume must fail loudly
     let path = policy.shard_path(0);
@@ -302,7 +302,7 @@ fn checkpoint_file_corruption_is_rejected() {
     let last = bytes.len() - 1;
     bytes[last] ^= 0x10;
     std::fs::write(&path, &bytes).unwrap();
-    let err = run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap_err();
+    let err = run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap_err();
     assert!(matches!(err, worp::Error::Codec(_)), "{err}");
     // flip one bit of the element *cursor* (checkpoint header bytes
     // 14..22): the header checksum must reject it — a silently wrong
@@ -310,20 +310,20 @@ fn checkpoint_file_corruption_is_rejected() {
     let mut bytes = pristine.clone();
     bytes[17] ^= 0x04;
     std::fs::write(&path, &bytes).unwrap();
-    let err = run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap_err();
+    let err = run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap_err();
     assert!(matches!(err, worp::Error::Codec(_)), "cursor corruption accepted: {err}");
     std::fs::write(&path, &pristine).unwrap();
     // a snapshot from a different topology is Incompatible, not silent
     let _ = std::fs::remove_dir_all(&dir);
-    let (_, _) = run_sharded_checkpointed(elems.clone(), opts, &policy, proto).unwrap();
+    let (_, _) = run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap();
     let other_opts = PipelineOpts::new(2, 32, 4).unwrap(); // different batch
     let err =
-        run_sharded_checkpointed(elems.clone(), other_opts, &policy, proto).unwrap_err();
+        run_sharded_checkpointed(&elems, other_opts, &policy, proto).unwrap_err();
     assert!(matches!(err, worp::Error::Incompatible(_)), "{err}");
     // a stale snapshot from a different *configuration* (here: sketch
     // seed) is also Incompatible — never a silent mixed-run resume
     let other_proto = |_w: usize| CountSketch::with_shape(3, 32, 999);
-    let err = run_sharded_checkpointed(elems, opts, &policy, other_proto).unwrap_err();
+    let err = run_sharded_checkpointed(&elems, opts, &policy, other_proto).unwrap_err();
     assert!(matches!(err, worp::Error::Incompatible(_)), "{err}");
     let _ = std::fs::remove_dir_all(&dir);
 }
