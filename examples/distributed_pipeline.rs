@@ -1,16 +1,17 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): the full three-layer system on
-//! a real small workload.
+//! a real small workload, driven through the **Engine** — the crate's
+//! primary (service-shaped) API.
 //!
 //! Workload: a synthetic query log (string keys, Zipfian popularity,
 //! bursty arrivals) of 2M events over 20k distinct queries — the
 //! data-pipeline scenario the paper's introduction motivates.
 //!
 //! Exercises, in one run:
-//!   L3 sharded pipeline (parallel source partitioning → SoA worker
-//!   blocks → merge tree)
-//!   2-pass WORp (exact sample) and 1-pass WORp (single-pass sample)
-//!   estimation (frequency moments + rank-frequency tail quality)
-//!   scaling sweep over worker counts
+//!   Engine registry (one named instance per method, shared shards/batch)
+//!   2-pass WORp (exact sample, inter-pass `advance` handoff) and
+//!   1-pass WORp, both through the same ingest path
+//!   the unified query surface (sample / moment / rank-frequency)
+//!   estimation quality vs perfect WR, and a scaling sweep over shards
 //!
 //! Reports the paper's headline metric: WOR sample quality (NRMSE vs the
 //! true statistic, versus perfect WR on the same workload) and pipeline
@@ -19,12 +20,11 @@
 //! Run: `cargo run --release --example distributed_pipeline`
 
 use std::collections::HashMap;
-use worp::coordinator::{Coordinator, VecSource};
 use worp::data::trace::QueryLog;
 use worp::data::Element;
+use worp::engine::{Engine, EngineOpts};
 use worp::estimate::rankfreq::{curve_error, rank_frequency_wor, rank_frequency_wr};
 use worp::estimate::{moment_estimate, wr_moment_estimate};
-use worp::pipeline::PipelineOpts;
 use worp::sampler::wr::perfect_wr;
 use worp::util::fmt::{sci, Table};
 use worp::{Method, Worp};
@@ -46,39 +46,55 @@ fn main() {
     }
     println!("trace generated in {:.2}s", t0.elapsed().as_secs_f64());
 
-    // ground truth (for evaluation only — the pipeline never sees this)
+    // ground truth (for evaluation only — the engine never sees this)
     let truth = worp::data::aggregate(elems.iter().copied());
     let l1: f64 = truth.values().sum();
     let l2: f64 = truth.values().map(|v| v * v).sum();
     let mut true_rf: Vec<f64> = truth.values().copied().collect();
     true_rf.sort_by(|a, b| b.partial_cmp(a).unwrap());
 
-    // ---- the pipeline: both WORp methods through ONE method-agnostic
-    // driver — build a `Box<dyn WorSampler>` and let the coordinator run
-    // every pass, shard, and merge (the paper's composability in action)
+    // ---- the engine: one registry, one named instance per method, every
+    // pass driven through the same sharded ingest path a served
+    // deployment uses (the paper's composability in action)
     let builder = Worp::p(1.0).k(k).seed(4242).domain(vocab);
-    let coord = Coordinator::new(
-        builder.sampler_config().unwrap(),
-        PipelineOpts::new(4, 4096, 16).unwrap(),
-    );
-    let src = VecSource(elems.clone());
+    let engine = Engine::new(EngineOpts::new(4, 4096).unwrap());
 
     let run = |method: Method| {
-        let sampler = builder.clone().method(method).build().expect("build sampler");
-        let passes = if method == Method::TwoPass { 2.0 } else { 1.0 };
+        let name = format!("e2e/{}", method.name());
+        engine
+            .create(&name, &builder.clone().method(method))
+            .expect("create instance");
+        let passes = if method == Method::TwoPass { 2 } else { 1 };
         let t1 = std::time::Instant::now();
-        let (sample, m) = coord.run_dyn(&src, sampler).expect("sharded pipeline");
+        let mut last_report = String::new();
+        for pass in 0..passes {
+            if pass > 0 {
+                engine.advance(&name).expect("pass handoff");
+            }
+            let m = engine.ingest_source(&name, &elems).expect("sharded ingest");
+            last_report = m.report();
+        }
         let dt = t1.elapsed();
-        println!("\n{:<5} WORp : {}", method.name(), m.report());
+        println!("\n{:<5} WORp : {last_report}", method.name());
         println!(
             "             wall {:.2}s ({:.2}M elements/s across {passes} pass(es))",
             dt.as_secs_f64(),
-            passes * events as f64 / dt.as_secs_f64() / 1e6
+            passes as f64 * events as f64 / dt.as_secs_f64() / 1e6
         );
-        sample
+        engine.sample(&name).expect("sample")
     };
     let sample2 = run(Method::TwoPass);
     let sample1 = run(Method::OnePass);
+    for info in engine.list().expect("list") {
+        println!(
+            "instance {}: {} shards, {} words, pass {}/{}",
+            info.name,
+            info.shards,
+            info.size_words,
+            info.pass + 1,
+            info.passes
+        );
+    }
 
     // ---- headline metric: estimate quality vs perfect WR
     let freq_vec: Vec<f64> = {
@@ -113,22 +129,20 @@ fn main() {
         println!("  {:>10.0}  {q}", e.freq);
     }
 
-    // ---- scaling sweep (partitioning happens on the workers themselves,
-    // so ingest scales with the worker count instead of being capped by a
+    // ---- scaling sweep (each shard scans and filters the source itself,
+    // so ingest scales with the shard count instead of being capped by a
     // single routing thread)
     let mut t = Table::new(
         "1-pass scaling sweep",
-        &["workers", "wall s", "Melem/s", "block_reuses"],
+        &["shards", "wall s", "Melem/s", "block_reuses"],
     );
-    for workers in [1usize, 2, 4, 8] {
-        let c = Coordinator::new(
-            builder.sampler_config().unwrap(),
-            PipelineOpts::new(workers, 4096, 16).unwrap(),
-        );
+    for shards in [1usize, 2, 4, 8] {
+        let eng = Engine::new(EngineOpts::new(shards, 4096).unwrap());
+        eng.create("sweep", &builder.clone().one_pass()).unwrap();
         let t1 = std::time::Instant::now();
-        let (_, m) = c.one_pass(&elems).unwrap();
+        let m = eng.ingest_source("sweep", &elems).unwrap();
         let dt = t1.elapsed().as_secs_f64();
-        t.row(&[workers.to_string(), format!("{dt:.2}"),
+        t.row(&[shards.to_string(), format!("{dt:.2}"),
                 format!("{:.2}", events as f64 / dt / 1e6), m.buffer_reuses().to_string()]);
     }
     t.print();

@@ -1,0 +1,104 @@
+//! Serving session over localhost: the full engine lifecycle —
+//! create → ingest → query → snapshot → restore — through the real TCP
+//! protocol, in one process.
+//!
+//! A `worp serve` instance is started on an ephemeral port, then driven
+//! exactly as an external `worp client` (or the Python client) would
+//! drive it: a ℓ1 sampler instance is created, a Zipf trace is streamed
+//! in over the socket, samples and moment estimates are queried live,
+//! and finally the instance is snapshotted, restored under a second
+//! engine, and shown to continue ingesting seamlessly.
+//!
+//! Run: `cargo run --release --example serve_session`
+
+use std::sync::Arc;
+use worp::config::PipelineConfig;
+use worp::data::zipf::ZipfStream;
+use worp::data::ElementBlock;
+use worp::engine::client::Client;
+use worp::engine::proto::InstanceSpec;
+use worp::engine::server::{ServeOpts, Server};
+use worp::engine::{Engine, EngineOpts};
+use worp::util::fmt::sci;
+
+fn main() {
+    // ---- the server side: one engine, shards/batch like a pipeline run
+    let engine = Arc::new(Engine::new(EngineOpts::new(4, 2048).unwrap()));
+    let srv = Server::start(Arc::clone(&engine), "127.0.0.1:0", ServeOpts::default())
+        .expect("bind localhost");
+    let addr = srv.local_addr().to_string();
+    println!("serving on {addr}\n");
+
+    // ---- the client side: everything below goes over the socket
+    let mut client = Client::connect(&addr).expect("connect");
+    client.ping().expect("ping");
+
+    // create an instance: ℓ1, k = 64, over a 20k-key domain
+    let mut cfg = PipelineConfig::default();
+    cfg.method = "1pass".into();
+    cfg.k = 64;
+    cfg.seed = 4242;
+    cfg.n = 20_000;
+    client
+        .create("demo/queries", &InstanceSpec::from_config(&cfg))
+        .expect("create");
+
+    // stream 1M Zipf events in 8k-element frames, querying as we go
+    const FRAME: usize = 8192;
+    let mut block = ElementBlock::with_capacity(FRAME);
+    let mut sent = 0u64;
+    for e in ZipfStream::new(cfg.n, 1.1, 1_000_000, 7) {
+        block.push(e.key, e.val);
+        if block.len() == FRAME {
+            client.ingest("demo/queries", &block).expect("ingest");
+            sent += block.len() as u64;
+            block.clear();
+            if sent % (32 * FRAME as u64) == 0 {
+                // live query mid-stream (bounded staleness: pending
+                // blocks are not yet visible)
+                let est = client.moment("demo/queries", 1.0).expect("moment");
+                println!("after {sent:>9} events: est ||nu||_1 = {}", sci(est));
+            }
+        }
+    }
+    if !block.is_empty() {
+        client.ingest("demo/queries", &block).expect("ingest tail");
+    }
+    client.flush("demo/queries").expect("flush");
+
+    let sample = client.sample("demo/queries").expect("sample");
+    println!("\nfinal sample: {} keys, tau = {}", sample.len(), sci(sample.tau));
+    for e in sample.entries.iter().take(5) {
+        println!("  key {:>6}  freq {}", e.key, sci(e.freq));
+    }
+    let stats = client.stats("demo/queries").expect("stats");
+    println!(
+        "instance: {} shards, {} processed, {} words",
+        stats.shards, stats.processed, stats.size_words
+    );
+
+    // ---- snapshot the live instance and restore it on a second engine
+    let snapshot = client.snapshot("demo/queries").expect("snapshot");
+    println!("\nsnapshot: {} bytes (summaries + pending blocks)", snapshot.len());
+
+    let engine2 = Arc::new(Engine::new(EngineOpts::new(4, 2048).unwrap()));
+    let srv2 = Server::start(Arc::clone(&engine2), "127.0.0.1:0", ServeOpts::default())
+        .expect("bind second server");
+    let mut client2 = Client::connect(&srv2.local_addr().to_string()).expect("connect 2");
+    let name = client2.restore(&snapshot).expect("restore");
+    // the restored instance keeps ingesting where the original left off
+    let mut more = ElementBlock::new();
+    for e in ZipfStream::new(cfg.n, 1.1, 10_000, 8) {
+        more.push(e.key, e.val);
+    }
+    client2.ingest(&name, &more).expect("ingest after restore");
+    client2.flush(&name).expect("flush 2");
+    println!(
+        "restored {name} on {}: now {} processed",
+        srv2.local_addr(),
+        client2.stats(&name).expect("stats 2").processed
+    );
+
+    client.drop_instance("demo/queries").expect("drop");
+    println!("\nsession complete");
+}

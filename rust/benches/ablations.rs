@@ -85,7 +85,7 @@ fn main() {
     for &batch in &[64usize, 512, 4096, 32768] {
         let c = worp::coordinator::Coordinator::new(
             cfg.clone(),
-            worp::pipeline::PipelineOpts::new(4, batch, 16).unwrap(),
+            worp::pipeline::PipelineOpts::new(4, batch).unwrap(),
         );
         let t0 = std::time::Instant::now();
         let (_, m) = c.one_pass(&stream).unwrap();

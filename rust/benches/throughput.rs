@@ -118,7 +118,7 @@ fn main() {
         b.bench_throughput(&format!("pipeline 1-pass workers={workers}"), m, move || {
             let c = worp::coordinator::Coordinator::new(
                 cfg.clone(),
-                PipelineOpts::new(workers, 8192, 16).unwrap(),
+                PipelineOpts::new(workers, 8192).unwrap(),
             );
             let (s, _) = c.one_pass(&stream).unwrap();
             s.len()

@@ -129,6 +129,28 @@ COMMANDS:
                 decode per-partition summaries, verify fingerprints,
                 fold through the merge tree, and print the sample
                   --out <merged.worp>    also write the merged state
+    serve       run the long-lived multi-tenant engine over TCP
+                  --addr <host:port>     listen address (default from the
+                                         [server] config section)
+                  --workers <n> --batch <n>
+                                         per-instance shards / block size
+                  --checkpoint-dir <dir> --checkpoint-every <ingests>
+                                         periodically snapshot every
+                                         instance; restored on startup
+    client <action>
+                talk to a running `worp serve` (--addr <host:port>):
+                  ping | list
+                  create   --name <ns/x>  plus `sample` sampler options
+                  ingest   --name <ns/x>  stream the generated workload
+                  flush    --name <ns/x>
+                  advance  --name <ns/x>  (multi-pass methods)
+                  sample   --name <ns/x>
+                  moment   --name <ns/x> --pprime <f64>
+                  rankfreq --name <ns/x> --max <n>
+                  stats    --name <ns/x>
+                  snapshot --name <ns/x> --out <file.worp>
+                  restore  --in <file.worp>
+                  drop     --name <ns/x>
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
     bench       scalar vs batch vs SoA-block ingestion throughput per
@@ -153,6 +175,11 @@ pub fn dispatch(args: &Args) -> Result<()> {
             cmd_shard(args)
         }
         "merge-files" => cmd_merge_files(args),
+        "serve" => {
+            args.no_positionals()?;
+            cmd_serve(args)
+        }
+        "client" => cmd_client(args),
         "psi" => {
             args.no_positionals()?;
             cmd_psi(args)
@@ -189,6 +216,7 @@ pub fn load_config(args: &Args) -> Result<PipelineConfig> {
     cfg.eps = args.parse_or("eps", cfg.eps)?;
     cfg.seed = args.parse_or("seed", cfg.seed)?;
     cfg.workers = args.parse_or("workers", cfg.workers)?;
+    cfg.batch = args.parse_or("batch", cfg.batch)?;
     cfg.n = args.parse_or("n", cfg.n)?;
     cfg.alpha = args.parse_or("alpha", cfg.alpha)?;
     cfg.stream_len = args.parse_or("stream-len", cfg.stream_len)?;
@@ -279,7 +307,8 @@ fn print_sample(sample: &crate::sampler::Sample) {
         &["key", "freq", "transformed"],
     );
     for e in sample.entries.iter().take(15) {
-        t.row(&[e.key.to_string(), sci(e.freq), sci(e.transformed)]);
+        // string-keyed samples carry a dictionary — print the original key
+        t.row(&[sample.label_of(e.key), sci(e.freq), sci(e.transformed)]);
     }
     t.print();
     println!("tau = {}", sci(sample.tau));
@@ -414,6 +443,201 @@ fn cmd_merge_files(args: &Args) -> Result<()> {
         // a mid-pass multi-pass state merges fine but cannot sample yet
         Err(Error::State(m)) => println!("no sample yet: {m}"),
         Err(e) => return Err(e),
+    }
+    Ok(())
+}
+
+/// `worp serve`: run the long-lived engine over TCP until killed. The
+/// engine shards every instance `--workers` ways with `--batch`-element
+/// blocks (matching an offline `worp sample` run with the same flags, so
+/// served and offline outputs diff clean). With `--checkpoint-dir`, every
+/// instance is snapshotted there periodically and restored on startup.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::engine::server::{ServeOpts, Server};
+    use crate::engine::{Engine, EngineOpts};
+    let cfg = load_config(args)?;
+    let addr = args.str_or("addr", &cfg.server_addr);
+    let engine = std::sync::Arc::new(Engine::new(EngineOpts::new(cfg.workers, cfg.batch)?));
+    let mut opts = ServeOpts {
+        max_frame: cfg.server_max_frame_mib << 20,
+        checkpoint: None,
+    };
+    if !cfg.checkpoint_dir.is_empty() {
+        let policy =
+            crate::pipeline::CheckpointPolicy::new(cfg.checkpoint_every, cfg.checkpoint_dir.clone())?;
+        if policy.dir().is_dir() {
+            let restored = engine.restore_dir(policy.dir())?;
+            if !restored.is_empty() {
+                println!("restored {} instance(s): {}", restored.len(), restored.join(", "));
+            }
+        }
+        opts.checkpoint = Some(policy);
+    }
+    let srv = Server::start(std::sync::Arc::clone(&engine), &addr, opts)?;
+    println!(
+        "worp serve: listening on {} (shards={} batch={})",
+        srv.local_addr(),
+        cfg.workers,
+        cfg.batch
+    );
+    // serve until the process is killed; connections run on their own
+    // threads inside the server
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `worp client <action>`: drive a running `worp serve`. The `create`
+/// and `ingest` actions reuse the full `sample` option surface (method,
+/// p, k, workload, ...), so a served session can be set up with the very
+/// flags an offline run would use — that is what lets CI diff a served
+/// sample against `worp sample` byte-for-byte.
+fn cmd_client(args: &Args) -> Result<()> {
+    use crate::engine::client::Client;
+    use crate::engine::proto::InstanceSpec;
+    let action = args
+        .positionals
+        .first()
+        .ok_or_else(|| Error::Config("client needs an action; see `worp help`".into()))?
+        .clone();
+    if let Some(extra) = args.positionals.get(1) {
+        return Err(Error::Config(format!("unexpected positional arg {extra:?}")));
+    }
+    let cfg = load_config(args)?;
+    let addr = args.str_or("addr", &cfg.server_addr);
+    let mut client = Client::connect(&addr)?
+        .with_timeout(std::time::Duration::from_secs(120))?;
+    let name = || -> Result<String> {
+        args.get("name")
+            .map(str::to_string)
+            .ok_or_else(|| Error::Config(format!("client {action} requires --name <ns/x>")))
+    };
+    match action.as_str() {
+        "ping" => {
+            client.ping()?;
+            println!("pong ({addr})");
+        }
+        "create" => {
+            let n = name()?;
+            client.create(&n, &InstanceSpec::from_config(&cfg))?;
+            println!("created {n}: method={} k={} p={}", cfg.method, cfg.k, cfg.p);
+        }
+        "drop" => {
+            let n = name()?;
+            client.drop_instance(&n)?;
+            println!("dropped {n}");
+        }
+        "list" => {
+            let infos = client.list()?;
+            let mut t = Table::new(
+                &format!("instances ({})", infos.len()),
+                &["name", "method", "shards", "pass", "processed", "pending", "words"],
+            );
+            for i in &infos {
+                t.row(&[
+                    i.name.clone(),
+                    i.method.clone(),
+                    i.shards.to_string(),
+                    format!("{}/{}", i.pass + 1, i.passes),
+                    i.processed.to_string(),
+                    i.pending.to_string(),
+                    i.size_words.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        "ingest" => {
+            let n = name()?;
+            // stream the configured workload in blocks; frame chunking
+            // does not affect the engine's per-shard block boundaries
+            let chunk = cfg.batch.max(1);
+            let mut block = crate::data::ElementBlock::with_capacity(chunk);
+            let mut sent = 0u64;
+            let mut accepted = 0u64;
+            for e in make_stream(&cfg) {
+                block.push(e.key, e.val);
+                if block.len() == chunk {
+                    accepted = client.ingest(&n, &block)?;
+                    sent += block.len() as u64;
+                    block.clear();
+                }
+            }
+            if !block.is_empty() {
+                sent += block.len() as u64;
+                accepted = client.ingest(&n, &block)?;
+            }
+            println!("ingested {sent} elements into {n} (lifetime accepted={accepted})");
+        }
+        "flush" => {
+            let n = name()?;
+            println!("flushed {} pending elements from {n}", client.flush(&n)?);
+        }
+        "advance" => {
+            let n = name()?;
+            println!("{n} advanced to pass {}", client.advance(&n)? + 1);
+        }
+        "sample" => {
+            let n = name()?;
+            print_sample(&client.sample(&n)?);
+        }
+        "moment" => {
+            let n = name()?;
+            let p_prime: f64 = args.parse_or("pprime", 2.0)?;
+            println!(
+                "estimated ||nu||_{p_prime}^{p_prime} = {}",
+                sci(client.moment(&n, p_prime)?)
+            );
+        }
+        "rankfreq" => {
+            let n = name()?;
+            let max: u64 = args.parse_or("max", 20)?;
+            let mut t = Table::new("estimated rank-frequency", &["rank", "freq"]);
+            for p in client.rank_frequency(&n, max)? {
+                t.row(&[format!("{:.2}", p.rank), sci(p.freq)]);
+            }
+            t.print();
+        }
+        "stats" => {
+            let n = name()?;
+            let i = client.stats(&n)?;
+            println!(
+                "{}: method={} shards={} batch={} pass={}/{} processed={} pending={} \
+                 accepted={} size_words={} fingerprint={:#018x}",
+                i.name,
+                i.method,
+                i.shards,
+                i.batch,
+                i.pass + 1,
+                i.passes,
+                i.processed,
+                i.pending,
+                i.accepted,
+                i.size_words,
+                i.fingerprint
+            );
+        }
+        "snapshot" => {
+            let n = name()?;
+            let out = args
+                .get("out")
+                .ok_or_else(|| Error::Config("client snapshot requires --out <file.worp>".into()))?;
+            let bytes = client.snapshot(&n)?;
+            std::fs::write(out, &bytes)?;
+            println!("snapshot of {n} -> {out} ({} bytes)", bytes.len());
+        }
+        "restore" => {
+            let path = args
+                .get("in")
+                .ok_or_else(|| Error::Config("client restore requires --in <file.worp>".into()))?;
+            let bytes = std::fs::read(path)
+                .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+            println!("restored instance {}", client.restore(&bytes)?);
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown client action {other:?}; see `worp help`"
+            )))
+        }
     }
     Ok(())
 }
@@ -626,6 +850,16 @@ mod tests {
     }
 
     #[test]
+    fn client_requires_an_action_and_serve_takes_no_positionals() {
+        let err = dispatch(&parse(&["client"])).unwrap_err();
+        assert!(err.to_string().contains("action"), "{err}");
+        let err = dispatch(&parse(&["client", "sample", "extra"])).unwrap_err();
+        assert!(err.to_string().contains("unexpected"), "{err}");
+        let err = dispatch(&parse(&["serve", "oops"])).unwrap_err();
+        assert!(err.to_string().contains("unexpected"), "{err}");
+    }
+
+    #[test]
     fn flag_before_option_parses() {
         let a = parse(&["sample", "--fast", "--k", "5"]);
         assert!(a.has_flag("fast"));
@@ -639,6 +873,12 @@ mod tests {
         assert_eq!(cfg.method, "exact");
         assert_eq!(cfg.dist, "priority");
         assert_eq!(cfg.k, 7);
+        // topology flags reach the pipeline/engine config (the serve
+        // determinism contract depends on --batch being honored)
+        let a = parse(&["serve", "--workers", "3", "--batch", "512"]);
+        let cfg = load_config(&a).unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.batch, 512);
         // bad method spelling surfaces as a config error
         let a = parse(&["sample", "--method", "zeropass"]);
         assert!(load_config(&a).is_err());

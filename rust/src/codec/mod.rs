@@ -96,6 +96,9 @@ pub mod tag {
     pub const ORACLE_LP: u16 = 14;
     /// [`crate::sampler::perfect_lp::PrecisionSampler`]
     pub const PRECISION_LP: u16 = 15;
+    /// [`crate::engine::Engine`] instance snapshot (per-shard sampler
+    /// envelopes plus their pending SoA blocks).
+    pub const ENGINE_SNAPSHOT: u16 = 16;
 }
 
 /// Human-readable name of a type tag (for diagnostics).
@@ -116,6 +119,7 @@ pub fn tag_name(t: u16) -> &'static str {
         tag::WINDOWED_WORP => "windowed",
         tag::ORACLE_LP => "oracle-lp",
         tag::PRECISION_LP => "precision-lp",
+        tag::ENGINE_SNAPSHOT => "engine-snapshot",
         _ => "unknown",
     }
 }
@@ -362,6 +366,94 @@ pub fn read_rhh_table(r: &mut wire::Reader<'_>) -> Result<(SketchParams, u64, Ve
     ))
 }
 
+// ---------------------------------------------------------------------------
+// Strings and samples (shared by the engine wire protocol and snapshots)
+
+/// Append a length-prefixed UTF-8 string (`u64` length, then the bytes).
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    wire::put_usize(out, s.len());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Read a length-prefixed UTF-8 string written by [`put_str`]. The
+/// length is validated against the remaining bytes before allocation and
+/// the bytes must be valid UTF-8 — anything else is [`Error::Codec`].
+pub fn read_str(r: &mut wire::Reader<'_>) -> Result<String> {
+    let n = r.seq_len(1)?;
+    let bytes = r.take(n)?;
+    String::from_utf8(bytes.to_vec())
+        .map_err(|_| Error::Codec("string field is not valid UTF-8".into()))
+}
+
+/// Append the canonical encoding of a [`Sample`] — what the engine wire
+/// protocol ships for `sample` queries: entry count, per entry
+/// `key u64, freq f64, transformed f64`, then `tau f64, p f64, dist u8`,
+/// then the key dictionary (count, then key-sorted `id u64, string`
+/// pairs; count 0 ⇔ no dictionary). Canonical because entries keep their
+/// rank order and the dictionary iterates a `BTreeMap`.
+pub fn put_sample(out: &mut Vec<u8>, s: &crate::sampler::Sample) {
+    wire::put_usize(out, s.entries.len());
+    for e in &s.entries {
+        wire::put_u64(out, e.key);
+        wire::put_f64(out, e.freq);
+        wire::put_f64(out, e.transformed);
+    }
+    wire::put_f64(out, s.tau);
+    wire::put_f64(out, s.p);
+    put_u8_dist(out, s.dist);
+    match &s.names {
+        Some(names) => {
+            wire::put_usize(out, names.len());
+            for (id, name) in names {
+                wire::put_u64(out, *id);
+                put_str(out, name);
+            }
+        }
+        None => wire::put_usize(out, 0),
+    }
+}
+
+#[inline]
+fn put_u8_dist(out: &mut Vec<u8>, d: BottomKDist) {
+    wire::put_u8(out, dist_to_byte(d));
+}
+
+/// Decode a [`Sample`] written by [`put_sample`]. Never panics on
+/// hostile bytes: lengths are bounded before allocation, `p` must be in
+/// `(0, 2]` and `tau` finite and non-negative (both flow straight into
+/// [`crate::sampler::Sample::inclusion_prob`]). An empty dictionary
+/// decodes as `None`.
+pub fn read_sample(r: &mut wire::Reader<'_>) -> Result<crate::sampler::Sample> {
+    let n = r.seq_len(24)?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let key = r.u64()?;
+        let freq = r.f64()?;
+        let transformed = r.f64()?;
+        entries.push(crate::sampler::SampleEntry { key, freq, transformed });
+    }
+    let tau = r.finite_f64("sample tau")?;
+    if tau < 0.0 {
+        return Err(Error::Codec(format!("sample tau must be >= 0: {tau}")));
+    }
+    let p = r.finite_f64("sample p")?;
+    validate_p(p, "sample")?;
+    let dist = dist_from_byte(r.u8()?)?;
+    let dn = r.seq_len(16)?;
+    let names = if dn == 0 {
+        None
+    } else {
+        let mut names = crate::sampler::KeyDict::new();
+        for _ in 0..dn {
+            let id = r.u64()?;
+            let name = read_str(r)?;
+            names.insert(id, name);
+        }
+        Some(names)
+    };
+    Ok(crate::sampler::Sample { entries, tau, p, dist, names })
+}
+
 /// Validate a decoded power `p ∈ (0, 2]` — the single source of truth
 /// for every decoder (the transform constructor asserts this range, so
 /// an unchecked hostile `p` would panic one call after decode).
@@ -508,6 +600,72 @@ mod tests {
         assert_eq!(back.rows, cfg.rows);
         assert_eq!(back.width, cfg.width);
         assert_eq!(back.dist, cfg.dist);
+    }
+
+    #[test]
+    fn sample_encoding_roundtrips_with_and_without_names() {
+        use crate::sampler::{KeyDict, Sample, SampleEntry};
+        use crate::util::hashing::BottomKDist;
+        let mut names = KeyDict::new();
+        names.insert(7, "seven".to_string());
+        names.insert(1, "one".to_string());
+        for names in [None, Some(names)] {
+            let s = Sample {
+                entries: vec![
+                    SampleEntry { key: 7, freq: 3.5, transformed: 9.25 },
+                    SampleEntry { key: 1, freq: 1.0, transformed: 2.0 },
+                ],
+                tau: 1.5,
+                p: 1.0,
+                dist: BottomKDist::Exp,
+                names,
+            };
+            let mut buf = Vec::new();
+            put_sample(&mut buf, &s);
+            let mut r = wire::Reader::new(&buf);
+            let back = read_sample(&mut r).unwrap();
+            r.finish("sample").unwrap();
+            assert_eq!(back.entries, s.entries);
+            assert_eq!(back.tau, s.tau);
+            assert_eq!(back.p, s.p);
+            assert_eq!(back.dist, s.dist);
+            assert_eq!(back.names, s.names);
+            // canonical: re-encoding the decoded sample is byte-identical
+            let mut buf2 = Vec::new();
+            put_sample(&mut buf2, &back);
+            assert_eq!(buf, buf2);
+        }
+    }
+
+    #[test]
+    fn sample_decoding_rejects_hostile_values() {
+        use crate::sampler::{Sample, SampleEntry};
+        use crate::util::hashing::BottomKDist;
+        let s = Sample {
+            entries: vec![SampleEntry { key: 1, freq: 1.0, transformed: 1.0 }],
+            tau: 1.0,
+            p: 1.0,
+            dist: BottomKDist::Exp,
+            names: None,
+        };
+        let mut buf = Vec::new();
+        put_sample(&mut buf, &s);
+        // truncation at every prefix errors, never panics
+        for cut in 0..buf.len() {
+            assert!(read_sample(&mut wire::Reader::new(&buf[..cut])).is_err());
+        }
+        // entry-count lie
+        let mut bad = buf.clone();
+        bad[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(read_sample(&mut wire::Reader::new(&bad)).is_err());
+        // p out of range (tau at offset 8+24, p follows)
+        let mut bad = buf.clone();
+        bad[40..48].copy_from_slice(&3.5f64.to_bits().to_le_bytes());
+        assert!(read_sample(&mut wire::Reader::new(&bad)).is_err());
+        // negative tau
+        let mut bad = buf;
+        bad[32..40].copy_from_slice(&(-1.0f64).to_bits().to_le_bytes());
+        assert!(read_sample(&mut wire::Reader::new(&bad)).is_err());
     }
 
     #[test]

@@ -227,10 +227,6 @@ pub struct PipelineConfig {
     pub workers: usize,
     /// Elements per worker SoA block (and the checkpoint alignment unit).
     pub batch: usize,
-    /// Legacy knob of the retired channel-based router (its backpressure
-    /// window). Accepted and validated for config compatibility; the
-    /// scan-partitioning pipeline has no channels and ignores it.
-    pub channel_cap: usize,
     /// Checkpoint directory ("" = checkpointing off). When set, sharded
     /// runs snapshot worker states there and resume from existing
     /// snapshots (crash recovery).
@@ -255,6 +251,11 @@ pub struct PipelineConfig {
     pub alpha: f64,
     /// Stream length (elements).
     pub stream_len: u64,
+    /// `worp serve` listen address (the `[server]` section).
+    pub server_addr: String,
+    /// Maximum accepted wire-protocol frame payload, in MiB (oversized
+    /// frames are answered with a typed error and the connection closed).
+    pub server_max_frame_mib: usize,
 }
 
 impl Default for PipelineConfig {
@@ -271,7 +272,6 @@ impl Default for PipelineConfig {
             seed: 42,
             workers: 4,
             batch: 4096,
-            channel_cap: 16,
             checkpoint_dir: String::new(),
             checkpoint_every: 64,
             rows: 31,
@@ -283,6 +283,8 @@ impl Default for PipelineConfig {
             workload: "zipf".into(),
             alpha: 1.0,
             stream_len: 1_000_000,
+            server_addr: "127.0.0.1:7070".into(),
+            server_max_frame_mib: 32,
         }
     }
 }
@@ -291,6 +293,15 @@ impl PipelineConfig {
     /// Read from a parsed document (missing keys keep defaults).
     pub fn from_document(doc: &Document) -> Result<PipelineConfig> {
         let d = PipelineConfig::default();
+        // the channel-based router (and its backpressure window) is gone;
+        // old config files still carry the key, so note-and-ignore instead
+        // of erroring a previously-valid file
+        if doc.get("pipeline", "channel_cap").is_some() {
+            eprintln!(
+                "note: pipeline.channel_cap is deprecated and ignored (the channel-based \
+                 router was removed; the scan pipeline has no backpressure window)"
+            );
+        }
         let cfg = PipelineConfig {
             p: doc.f64_or("sampler", "p", d.p),
             k: doc.usize_or("sampler", "k", d.k),
@@ -303,7 +314,6 @@ impl PipelineConfig {
             seed: doc.i64_or("sampler", "seed", d.seed as i64) as u64,
             workers: doc.usize_or("pipeline", "workers", d.workers),
             batch: doc.usize_or("pipeline", "batch", d.batch),
-            channel_cap: doc.usize_or("pipeline", "channel_cap", d.channel_cap),
             checkpoint_dir: doc.str_or("pipeline", "checkpoint_dir", &d.checkpoint_dir),
             checkpoint_every: doc
                 .i64_or("pipeline", "checkpoint_every", d.checkpoint_every as i64)
@@ -317,6 +327,8 @@ impl PipelineConfig {
             workload: doc.str_or("workload", "kind", &d.workload),
             alpha: doc.f64_or("workload", "alpha", d.alpha),
             stream_len: doc.i64_or("workload", "stream_len", d.stream_len as i64) as u64,
+            server_addr: doc.str_or("server", "addr", &d.server_addr),
+            server_max_frame_mib: doc.usize_or("server", "max_frame_mib", d.server_max_frame_mib),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -350,8 +362,14 @@ impl PipelineConfig {
                 self.rows
             )));
         }
-        if self.workers == 0 || self.batch == 0 || self.channel_cap == 0 {
-            return Err(Error::Config("workers/batch/channel_cap must be positive".into()));
+        if self.workers == 0 || self.batch == 0 {
+            return Err(Error::Config("workers/batch must be positive".into()));
+        }
+        if self.server_addr.is_empty() {
+            return Err(Error::Config("server.addr must not be empty".into()));
+        }
+        if self.server_max_frame_mib == 0 {
+            return Err(Error::Config("server.max_frame_mib must be positive".into()));
         }
         if !self.checkpoint_dir.is_empty() && self.checkpoint_every == 0 {
             return Err(Error::Config(
@@ -494,6 +512,35 @@ stream_len = 50000
         let mut c = PipelineConfig::default();
         c.checkpoint_every = 0;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn channel_cap_is_deprecated_but_not_an_error() {
+        // old config files still carry the retired router knob: parsing
+        // must succeed (a stderr note, not an error) and ignore the value
+        let doc = Document::parse("[pipeline]\nchannel_cap = 16\nworkers = 2\n").unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.workers, 2);
+        let doc = Document::parse("[pipeline]\nchannel_cap = 0\n").unwrap();
+        assert!(PipelineConfig::from_document(&doc).is_ok(), "even 0 is ignored");
+    }
+
+    #[test]
+    fn server_section_parses_and_validates() {
+        let doc = Document::parse("[server]\naddr = \"0.0.0.0:9999\"\nmax_frame_mib = 8\n")
+            .unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.server_addr, "0.0.0.0:9999");
+        assert_eq!(cfg.server_max_frame_mib, 8);
+        // defaults apply when the section is absent
+        let cfg = PipelineConfig::default();
+        assert_eq!(cfg.server_addr, "127.0.0.1:7070");
+        let mut c = PipelineConfig::default();
+        c.server_addr = String::new();
+        assert!(c.validate().is_err());
+        let mut c = PipelineConfig::default();
+        c.server_max_frame_mib = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

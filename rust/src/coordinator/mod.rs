@@ -15,6 +15,7 @@
 use crate::api::{Finalize, Mergeable, MultiPass, Persist, WorSampler};
 use crate::config::PipelineConfig;
 use crate::data::Element;
+use crate::engine::{Engine, EngineOpts};
 use crate::error::{Error, Result};
 use crate::pipeline::merge::{merge_all, tree_merge};
 use crate::pipeline::metrics::Metrics;
@@ -113,7 +114,7 @@ impl Coordinator {
         } else {
             scfg.rows = cfg.rows;
         }
-        let opts = PipelineOpts::new(cfg.workers, cfg.batch, cfg.channel_cap)?;
+        let opts = PipelineOpts::new(cfg.workers, cfg.batch)?;
         let mut c = Coordinator { sampler_cfg: scfg, opts, checkpoint: None };
         if !cfg.checkpoint_dir.is_empty() {
             c.checkpoint = Some(CheckpointPolicy::new(
@@ -193,44 +194,68 @@ impl Coordinator {
     /// across the workers, and extract the final sample. The multi-pass
     /// handoff, sharding and merging are method-agnostic — this is the
     /// single driver behind the CLI.
+    ///
+    /// This is a thin offline front-end over the
+    /// [`crate::engine::Engine`] ingest path: the coordinator registers
+    /// one anonymous instance (`workers` shards, the pipeline batch
+    /// size), drives each pass through
+    /// [`crate::engine::Instance::ingest_source`] (the same per-shard
+    /// scan / block-boundary discipline a live served instance keeps),
+    /// and uses the engine's merge + advance handoff between passes — so
+    /// a batch run and a served run of the same stream are bit-identical
+    /// (`tests/engine_contract.rs` holds both paths to that).
+    ///
+    /// With a checkpoint policy the passes run on the checkpointed
+    /// pipeline instead (per-pass crash-recovery snapshots; same
+    /// boundaries, same outputs).
     pub fn run_dyn(
         &self,
         source: &dyn StreamSource,
         proto: Box<dyn WorSampler>,
     ) -> Result<(Sample, Arc<Metrics>)> {
         let passes = proto.passes().max(1);
-        // clock-dependent samplers (see WorSampler::parallel_safe) are
-        // serialized onto one worker instead of merging skewed clocks
-        let opts = if proto.parallel_safe() {
-            self.opts
-        } else {
-            PipelineOpts { workers: 1, ..self.opts }
-        };
-        let mut current = proto;
-        let mut metrics = Arc::new(Metrics::default());
-        for pass in 0..passes {
-            if pass > 0 {
-                current.advance()?;
-            }
-            let template = current;
-            // with a checkpoint policy, every pass snapshots (and
-            // resumes) its shard states in its own pass-<i>/ subdirectory
-            // — the Box<dyn WorSampler> persists through the codec's
-            // type-tagged envelope
-            let (states, m) = match &self.checkpoint {
-                Some(policy) => run_sharded_checkpointed(
+        if let Some(policy) = &self.checkpoint {
+            // crash recovery stays on the checkpointed pipeline: every
+            // pass snapshots (and resumes) its shard states in its own
+            // pass-<i>/ subdirectory — the Box<dyn WorSampler> persists
+            // through the codec's type-tagged envelope
+            let opts = if proto.parallel_safe() {
+                self.opts
+            } else {
+                PipelineOpts { workers: 1, ..self.opts }
+            };
+            let mut current = proto;
+            let mut metrics = Arc::new(Metrics::default());
+            for pass in 0..passes {
+                if pass > 0 {
+                    current.advance()?;
+                }
+                let template = current;
+                let (states, m) = run_sharded_checkpointed(
                     &SourceScan(source),
                     opts,
                     &policy.for_pass(pass),
                     move |_| template.clone(),
-                )?,
-                None => run_sharded(&SourceScan(source), opts, move |_| template.clone())?,
-            };
-            current = tree_merge(states, &m, |a, b| a.merge_dyn(&**b))?
-                .ok_or_else(|| Error::Pipeline("no workers".into()))?;
-            metrics = m;
+                )?;
+                current = tree_merge(states, &m, |a, b| a.merge_dyn(&**b))?
+                    .ok_or_else(|| Error::Pipeline("no workers".into()))?;
+                metrics = m;
+            }
+            let sample = current.sample()?;
+            return Ok((sample, metrics));
         }
-        let sample = current.sample()?;
+        let engine = Engine::new(EngineOpts::from_pipeline(self.opts));
+        const NAME: &str = "coordinator/run";
+        engine.create_from_proto(NAME, proto)?;
+        let instance = engine.instance(NAME)?;
+        let mut metrics = Arc::new(Metrics::default());
+        for pass in 0..passes {
+            if pass > 0 {
+                instance.advance()?;
+            }
+            metrics = instance.ingest_source(&SourceScan(source))?;
+        }
+        let sample = instance.merged_with(&metrics)?.sample()?;
         Ok((sample, metrics))
     }
 
@@ -327,7 +352,7 @@ impl Coordinator {
             })
             .collect();
         Ok((
-            Sample { entries, tau, p: cfg.p, dist: transform.dist() },
+            Sample { entries, tau, p: cfg.p, dist: transform.dist(), names: None },
             metrics,
         ))
     }
@@ -351,7 +376,7 @@ mod tests {
     fn sharded_one_pass_matches_perfect_on_skew() {
         let n = 800;
         let k = 16;
-        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(4, 256, 4).unwrap());
+        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(4, 256).unwrap());
         let elems = zipf_exact_stream(n, 1.5, 1e4, 3, 7);
         let (sample, metrics) = c.one_pass(&elems).unwrap();
         assert_eq!(metrics.elements() as usize, elems.len());
@@ -369,7 +394,7 @@ mod tests {
     fn sharded_two_pass_equals_perfect_sample() {
         let n = 600;
         let k = 12;
-        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(3, 128, 4).unwrap());
+        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(3, 128).unwrap());
         let elems = zipf_exact_stream(n, 1.2, 1e4, 2, 9);
         let (sample, _) = c.two_pass(&VecSource(elems)).unwrap();
         let want = perfect_ppswor(&zipf_frequencies(n, 1.2, 1e4), 1.0, k, 77);
@@ -387,7 +412,7 @@ mod tests {
         let src = VecSource(elems);
         let mut outputs = Vec::new();
         for workers in [1usize, 2, 5] {
-            let c = Coordinator::new(cfg(n, k), PipelineOpts::new(workers, 64, 4).unwrap());
+            let c = Coordinator::new(cfg(n, k), PipelineOpts::new(workers, 64).unwrap());
             let (s, _) = c.two_pass(&src).unwrap();
             outputs.push(s.keys());
         }
@@ -403,7 +428,7 @@ mod tests {
         let k = 10;
         let elems = zipf_exact_stream(n, 1.2, 1e4, 2, 5);
         let src = VecSource(elems.clone());
-        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(3, 128, 4).unwrap());
+        let c = Coordinator::new(cfg(n, k), PipelineOpts::new(3, 128).unwrap());
 
         let builder = Worp::p(1.0)
             .k(k)
@@ -448,11 +473,11 @@ mod tests {
             .windowed(100, 10); // small window: sharded clocks would skew it
         let c1 = Coordinator::new(
             b.sampler_config().unwrap(),
-            PipelineOpts::new(1, 64, 4).unwrap(),
+            PipelineOpts::new(1, 64).unwrap(),
         );
         let c4 = Coordinator::new(
             b.sampler_config().unwrap(),
-            PipelineOpts::new(4, 64, 4).unwrap(),
+            PipelineOpts::new(4, 64).unwrap(),
         );
         let (s1, _) = c1.run_dyn(&src, b.build().unwrap()).unwrap();
         let (s4, _) = c4.run_dyn(&src, b.build().unwrap()).unwrap();
@@ -465,10 +490,10 @@ mod tests {
         // loudly in the merge tree, not silently corrupt the sample
         use crate::sketch::countsketch::CountSketch;
         use crate::sketch::SketchParams;
-        let c = Coordinator::new(cfg(100, 5), PipelineOpts::new(2, 64, 4).unwrap());
+        let c = Coordinator::new(cfg(100, 5), PipelineOpts::new(2, 64).unwrap());
         let stream: Vec<Element> = ZipfStream::new(100, 1.0, 1000, 3).collect();
         let (states, metrics) =
-            run_sharded(&stream, PipelineOpts::new(2, 64, 4).unwrap(), |shard| {
+            run_sharded(&stream, PipelineOpts::new(2, 64).unwrap(), |shard| {
                 CountSketch::new(SketchParams::new(3, 64, shard as u64))
             })
             .unwrap();

@@ -1,0 +1,207 @@
+//! `worp client`: a blocking TCP client for the [`super::server`]
+//! protocol — one request frame out, one response frame in.
+//!
+//! ```no_run
+//! use worp::engine::client::Client;
+//! use worp::engine::proto::InstanceSpec;
+//! use worp::config::PipelineConfig;
+//! use worp::data::ElementBlock;
+//!
+//! let mut c = Client::connect("127.0.0.1:7070").unwrap();
+//! c.create("ns/clicks", &InstanceSpec::from_config(&PipelineConfig::default())).unwrap();
+//! let mut block = ElementBlock::new();
+//! block.push(42, 1.0);
+//! c.ingest("ns/clicks", &block).unwrap();
+//! c.flush("ns/clicks").unwrap();
+//! let sample = c.sample("ns/clicks").unwrap();
+//! # let _ = sample;
+//! ```
+
+use super::proto::{self, op, InstanceSpec};
+use super::InstanceInfo;
+use crate::codec::{self, wire};
+use crate::data::ElementBlock;
+use crate::error::{Error, Result};
+use crate::estimate::rankfreq::RankFreqPoint;
+use crate::sampler::Sample;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// A connected protocol client.
+pub struct Client {
+    stream: TcpStream,
+    max_frame: usize,
+}
+
+impl Client {
+    /// Connect to a `worp serve` address (e.g. `"127.0.0.1:7070"`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Config(format!("cannot connect to {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, max_frame: proto::DEFAULT_MAX_FRAME })
+    }
+
+    /// Cap the response payloads this client accepts.
+    pub fn with_max_frame(mut self, max_frame: usize) -> Client {
+        self.max_frame = max_frame;
+        self
+    }
+
+    /// Set a read timeout so a dead server cannot hang the client.
+    pub fn with_timeout(self, t: Duration) -> Result<Client> {
+        self.stream.set_read_timeout(Some(t))?;
+        self.stream.set_write_timeout(Some(t))?;
+        Ok(self)
+    }
+
+    /// One request/response round-trip; server-side errors come back as
+    /// their typed [`Error`] variants.
+    fn call(&mut self, opcode: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        proto::write_frame(&mut self.stream, opcode, payload)?;
+        let frame = proto::read_frame(&mut self.stream, self.max_frame)?
+            .ok_or_else(|| Error::Pipeline("server closed the connection mid-request".into()))?;
+        if frame.opcode == proto::RESP_ERR {
+            return Err(proto::decode_error(&frame.payload));
+        }
+        if frame.opcode != proto::resp_ok(opcode) {
+            return Err(Error::Codec(format!(
+                "response opcode {:#06x} does not answer request {:#06x}",
+                frame.opcode, opcode
+            )));
+        }
+        Ok(frame.payload)
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<()> {
+        let resp = self.call(op::PING, &[])?;
+        wire::Reader::new(&resp).finish("ping response")
+    }
+
+    /// Create a named instance.
+    pub fn create(&mut self, name: &str, spec: &InstanceSpec) -> Result<()> {
+        let mut p = Vec::new();
+        codec::put_str(&mut p, name);
+        spec.encode(&mut p);
+        let resp = self.call(op::CREATE, &p)?;
+        wire::Reader::new(&resp).finish("create response")
+    }
+
+    /// Drop a named instance.
+    pub fn drop_instance(&mut self, name: &str) -> Result<()> {
+        let resp = self.call(op::DROP, &name_payload(name))?;
+        wire::Reader::new(&resp).finish("drop response")
+    }
+
+    /// List all instances.
+    pub fn list(&mut self) -> Result<Vec<InstanceInfo>> {
+        let resp = self.call(op::LIST, &[])?;
+        let mut r = wire::Reader::new(&resp);
+        let n = r.seq_len(16)?;
+        let mut infos = Vec::with_capacity(n);
+        for _ in 0..n {
+            infos.push(proto::read_info(&mut r)?);
+        }
+        r.finish("list response")?;
+        Ok(infos)
+    }
+
+    /// Ingest a block of updates; returns the instance's lifetime
+    /// accepted-element count.
+    pub fn ingest(&mut self, name: &str, block: &ElementBlock) -> Result<u64> {
+        let mut p = name_payload(name);
+        wire::put_usize(&mut p, block.len());
+        wire::put_block(&mut p, block);
+        let resp = self.call(op::INGEST, &p)?;
+        read_u64(&resp, "ingest response")
+    }
+
+    /// Flush pending blocks; returns the flushed element count.
+    pub fn flush(&mut self, name: &str) -> Result<u64> {
+        let resp = self.call(op::FLUSH, &name_payload(name))?;
+        read_u64(&resp, "flush response")
+    }
+
+    /// Advance a multi-pass instance; returns the new 0-based pass.
+    pub fn advance(&mut self, name: &str) -> Result<u64> {
+        let resp = self.call(op::ADVANCE, &name_payload(name))?;
+        read_u64(&resp, "advance response")
+    }
+
+    /// Extract the current WOR sample.
+    pub fn sample(&mut self, name: &str) -> Result<Sample> {
+        let resp = self.call(op::SAMPLE, &name_payload(name))?;
+        let mut r = wire::Reader::new(&resp);
+        let s = codec::read_sample(&mut r)?;
+        r.finish("sample response")?;
+        Ok(s)
+    }
+
+    /// Frequency-moment estimate `‖ν‖_{p'}^{p'}`.
+    pub fn moment(&mut self, name: &str, p_prime: f64) -> Result<f64> {
+        let mut p = name_payload(name);
+        wire::put_f64(&mut p, p_prime);
+        let resp = self.call(op::MOMENT, &p)?;
+        let mut r = wire::Reader::new(&resp);
+        let x = r.f64()?;
+        r.finish("moment response")?;
+        Ok(x)
+    }
+
+    /// Rank-frequency curve estimate (`max_points` 0 = all).
+    pub fn rank_frequency(&mut self, name: &str, max_points: u64) -> Result<Vec<RankFreqPoint>> {
+        let mut p = name_payload(name);
+        wire::put_u64(&mut p, max_points);
+        let resp = self.call(op::RANK_FREQ, &p)?;
+        let mut r = wire::Reader::new(&resp);
+        let pts = proto::read_rank_points(&mut r)?;
+        r.finish("rank-freq response")?;
+        Ok(pts)
+    }
+
+    /// Per-instance stats.
+    pub fn stats(&mut self, name: &str) -> Result<InstanceInfo> {
+        let resp = self.call(op::STATS, &name_payload(name))?;
+        let mut r = wire::Reader::new(&resp);
+        let info = proto::read_info(&mut r)?;
+        r.finish("stats response")?;
+        Ok(info)
+    }
+
+    /// Serialize an instance (summaries + pending blocks) — feed the
+    /// bytes back through [`Client::restore`] (possibly on another
+    /// server) to clone it.
+    pub fn snapshot(&mut self, name: &str) -> Result<Vec<u8>> {
+        let resp = self.call(op::SNAPSHOT, &name_payload(name))?;
+        let mut r = wire::Reader::new(&resp);
+        let bytes = codec::take_nested(&mut r)?.to_vec();
+        r.finish("snapshot response")?;
+        Ok(bytes)
+    }
+
+    /// Register an instance from snapshot bytes; returns its name.
+    pub fn restore(&mut self, snapshot: &[u8]) -> Result<String> {
+        let mut p = Vec::new();
+        wire::put_usize(&mut p, snapshot.len());
+        p.extend_from_slice(snapshot);
+        let resp = self.call(op::RESTORE, &p)?;
+        let mut r = wire::Reader::new(&resp);
+        let name = codec::read_str(&mut r)?;
+        r.finish("restore response")?;
+        Ok(name)
+    }
+}
+
+fn name_payload(name: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + name.len());
+    codec::put_str(&mut p, name);
+    p
+}
+
+fn read_u64(resp: &[u8], what: &str) -> Result<u64> {
+    let mut r = wire::Reader::new(resp);
+    let x = r.u64()?;
+    r.finish(what)?;
+    Ok(x)
+}

@@ -1,0 +1,924 @@
+//! The serving engine: a long-lived, multi-tenant registry of **named
+//! summary instances** — the service-shaped face of the paper's
+//! composability story, and the crate's primary public API.
+//!
+//! Where [`crate::coordinator::Coordinator`] runs one summary over one
+//! finite source to completion, an [`Engine`] keeps many summaries alive
+//! at once, continuously ingesting updates and answering sample /
+//! estimate queries on demand:
+//!
+//! ```text
+//!  clients ──┬─ ingest blocks ─▶ ┌───────────────── Engine ─────────────────┐
+//!            │                   │  "ns/name" ─▶ Instance                   │
+//!            ├─ sample/est ────▶ │    router ▸ shard 0: pending ▸ summary   │
+//!            │                   │           ▸ shard 1: pending ▸ summary   │
+//!            └─ snapshot ──────▶ │           ▸ ...       (merge on query)   │
+//!                                └──────────────────────────────────────────┘
+//! ```
+//!
+//! Each instance shards its stream by the same stable key [`Router`] the
+//! offline pipeline uses; every shard owns a sibling summary (same seed ⇒
+//! mergeable) plus one reusable pending [`ElementBlock`] that flushes
+//! into the summary's columnar
+//! [`crate::api::StreamSummary::process_block`] path whenever it reaches
+//! the configured batch size. Queries clone the shard summaries and fold
+//! them through the fingerprint-checked merge tree — the same
+//! composability property that makes the offline pipeline correct makes
+//! the live engine correct.
+//!
+//! **Determinism contract.** A shard's summary sees its shard's elements
+//! in arrival order, chunked every `batch` elements — exactly the
+//! subsequence and block boundaries an offline
+//! [`crate::pipeline::run_sharded`] worker would deliver. A single
+//! connection streaming a source in order therefore produces summaries
+//! (and encodes) **bit-identical** to a
+//! [`crate::coordinator::Coordinator`] run over the same source with
+//! `workers = shards`; with concurrent connections the per-shard
+//! interleaving is arrival-order, so the merge law still holds and
+//! order-insensitive summaries (the exact baseline, the hashed-array
+//! sketches) remain bit-identical while the rest agree up to ingest
+//! order (`tests/engine_contract.rs` proves both).
+//!
+//! **Staleness contract.** Queries observe flushed state only; up to
+//! `shards × batch` most-recently-ingested elements may sit in pending
+//! blocks until the next flush ([`Engine::flush`] forces one — do that
+//! before end-of-stream queries). Flushing mid-stream inserts a block
+//! boundary an uninterrupted offline run would not have, which matters
+//! only to block-boundary-sensitive summaries (worp1's deferred
+//! candidate maintenance).
+//!
+//! Snapshots ([`Engine::encode_snapshot`]) capture the per-shard
+//! summaries **and** their pending blocks in one codec envelope, so
+//! snapshot → restore → continue is bit-identical to never stopping.
+//!
+//! The engine is exposed over TCP by [`server`] (`worp serve`), spoken by
+//! [`client`] (`worp client`) and `python/worp_client.py`, with the frame
+//! layout defined in [`proto`].
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+use crate::api::builder::Worp;
+use crate::api::{MultiPass, StreamSummary, WorSampler};
+use crate::codec::{self, wire};
+use crate::data::{Element, ElementBlock};
+use crate::error::{Error, Result};
+use crate::estimate::rankfreq::{rank_frequency_wor, RankFreqPoint};
+use crate::estimate::{moment_estimate, sum_statistic};
+use crate::pipeline::merge::tree_merge;
+use crate::pipeline::metrics::Metrics;
+use crate::pipeline::shard::Router;
+use crate::pipeline::{ParallelSource, PipelineOpts};
+use crate::sampler::Sample;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+
+/// Engine topology: how every instance shards and batches its ingest.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOpts {
+    /// Summary shards per instance (clock-dependent samplers are forced
+    /// to 1, mirroring the coordinator's serialization).
+    pub shards: usize,
+    /// Elements per shard pending block (the flush / block-boundary
+    /// unit — align it with the offline `pipeline.batch` for
+    /// bit-identical replays).
+    pub batch: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { shards: 4, batch: 4096 }
+    }
+}
+
+impl EngineOpts {
+    /// Validated constructor.
+    pub fn new(shards: usize, batch: usize) -> Result<Self> {
+        if shards == 0 || batch == 0 {
+            return Err(Error::Config("engine shards and batch must be positive".into()));
+        }
+        Ok(EngineOpts { shards, batch })
+    }
+
+    /// The engine shape matching a pipeline topology (`workers → shards`).
+    pub fn from_pipeline(opts: PipelineOpts) -> Self {
+        EngineOpts { shards: opts.workers, batch: opts.batch }
+    }
+}
+
+/// A point-in-time description of one instance (what `list` / `stats`
+/// report and the wire protocol ships).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InstanceInfo {
+    /// Registry name (`namespace/name` by convention).
+    pub name: String,
+    /// Sampler method ("1pass", "2pass", "exact", ...).
+    pub method: String,
+    /// Summary shards.
+    pub shards: u64,
+    /// Elements per pending block.
+    pub batch: u64,
+    /// Elements already flushed into the shard summaries (current pass).
+    pub processed: u64,
+    /// Elements sitting in pending blocks (ingested, not yet flushed).
+    pub pending: u64,
+    /// Elements accepted over the instance's lifetime.
+    pub accepted: u64,
+    /// Summary memory footprint in words, summed over shards.
+    pub size_words: u64,
+    /// Total passes of the method.
+    pub passes: u64,
+    /// Current 0-based pass.
+    pub pass: u64,
+    /// Merge-compatibility fingerprint of the shard summaries.
+    pub fingerprint: u64,
+}
+
+struct ShardSlot {
+    state: Box<dyn WorSampler>,
+    pending: ElementBlock,
+}
+
+/// One named, long-lived summary: sharded sibling samplers plus their
+/// pending ingest blocks. Shared behind `Arc` so ingest connections,
+/// queries and lifecycle ops proceed without holding the registry lock.
+pub struct Instance {
+    name: String,
+    method: &'static str,
+    batch: usize,
+    router: Router,
+    shards: Vec<Mutex<ShardSlot>>,
+    accepted: AtomicU64,
+}
+
+/// Lock a shard slot, converting a poisoned mutex (a panic inside a
+/// previous operation) into a typed error instead of cascading panics.
+fn lock_slot(m: &Mutex<ShardSlot>) -> Result<MutexGuard<'_, ShardSlot>> {
+    m.lock().map_err(|_| {
+        Error::Pipeline(
+            "instance shard is poisoned — a previous operation panicked; drop and \
+             recreate (or restore) the instance"
+                .into(),
+        )
+    })
+}
+
+impl Instance {
+    fn from_proto(name: String, proto: Box<dyn WorSampler>, opts: EngineOpts) -> Instance {
+        // clock-dependent samplers must not be sharded (their implicit
+        // per-element clocks would skew) — same rule as the coordinator
+        let shards = if proto.parallel_safe() { opts.shards } else { 1 };
+        let method = proto.name();
+        let slots = (0..shards)
+            .map(|_| {
+                Mutex::new(ShardSlot {
+                    state: proto.clone_box(),
+                    pending: ElementBlock::with_capacity(opts.batch),
+                })
+            })
+            .collect();
+        Instance {
+            name,
+            method,
+            batch: opts.batch,
+            router: Router::new(shards),
+            shards: slots,
+            accepted: AtomicU64::new(0),
+        }
+    }
+
+    /// Registry name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Route-and-buffer one block of updates. Each shard's pending block
+    /// flushes into its summary whenever it reaches `batch` elements, so
+    /// per-shard block boundaries are identical to the offline pipeline's.
+    pub fn ingest(&self, block: &ElementBlock) -> Result<u64> {
+        // one filtered sweep per shard (ascending lock order — the same
+        // order every other multi-slot operation uses), mirroring the
+        // offline workers' scan-and-filter: zero per-call allocation and
+        // per-shard arrival order preserved
+        for s in 0..self.shards.len() {
+            let mut slot = lock_slot(&self.shards[s])?;
+            let ShardSlot { state, pending } = &mut *slot;
+            for i in 0..block.len() {
+                let key = block.keys[i];
+                if self.router.route(key) != s {
+                    continue;
+                }
+                pending.push(key, block.vals[i]);
+                if pending.len() == self.batch {
+                    state.process_block(pending);
+                    pending.clear();
+                }
+            }
+        }
+        let n = block.len() as u64;
+        Ok(self.accepted.fetch_add(n, Ordering::Relaxed) + n)
+    }
+
+    /// Flush every pending partial block into its shard summary (insert
+    /// an explicit block boundary — do this before end-of-stream queries
+    /// or snapshots meant to match an offline run). Returns the number of
+    /// elements flushed.
+    pub fn flush(&self) -> Result<u64> {
+        let mut flushed = 0;
+        for s in &self.shards {
+            let mut slot = lock_slot(s)?;
+            let ShardSlot { state, pending } = &mut *slot;
+            if !pending.is_empty() {
+                flushed += pending.len() as u64;
+                state.process_block(pending);
+                pending.clear();
+            }
+        }
+        Ok(flushed)
+    }
+
+    /// Seal the current pass and arm the next (multi-pass methods):
+    /// flush, fold the shard summaries through the merge tree, advance
+    /// the merged state, and redistribute clones of it to every shard —
+    /// exactly the coordinator's inter-pass handoff, so a served
+    /// multi-pass run matches an offline one bit-for-bit. Returns the new
+    /// 0-based pass index.
+    pub fn advance(&self) -> Result<usize> {
+        // hold every slot for the whole transition (ascending order) so
+        // concurrent ingest cannot slip elements between merge and
+        // redistribute
+        let mut guards = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            guards.push(lock_slot(s)?);
+        }
+        for g in guards.iter_mut() {
+            let ShardSlot { state, pending } = &mut **g;
+            if !pending.is_empty() {
+                state.process_block(pending);
+                pending.clear();
+            }
+        }
+        let states: Vec<Box<dyn WorSampler>> =
+            guards.iter().map(|g| g.state.clone_box()).collect();
+        let scratch = Metrics::default();
+        let mut merged = tree_merge(states, &scratch, |a, b| a.merge_dyn(&**b))?
+            .ok_or_else(|| Error::Pipeline("instance has no shards".into()))?;
+        merged.advance()?;
+        let pass = merged.pass();
+        for g in guards.iter_mut() {
+            g.state = merged.clone_box();
+        }
+        Ok(pass)
+    }
+
+    /// Fold clones of the shard summaries into one (fingerprint-checked
+    /// merge tree, merges counted into `metrics`). Pending elements are
+    /// *not* included — see the staleness contract in the module docs.
+    pub fn merged_with(&self, metrics: &Metrics) -> Result<Box<dyn WorSampler>> {
+        let mut states = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            states.push(lock_slot(s)?.state.clone_box());
+        }
+        tree_merge(states, metrics, |a, b| a.merge_dyn(&**b))?
+            .ok_or_else(|| Error::Pipeline("instance has no shards".into()))
+    }
+
+    /// [`Instance::merged_with`] without metrics.
+    pub fn merged(&self) -> Result<Box<dyn WorSampler>> {
+        self.merged_with(&Metrics::default())
+    }
+
+    /// Current stats (see [`InstanceInfo`]).
+    pub fn info(&self) -> Result<InstanceInfo> {
+        let mut processed = 0u64;
+        let mut pending = 0u64;
+        let mut size_words = 0u64;
+        let mut passes = 1u64;
+        let mut pass = 0u64;
+        let mut fingerprint = 0u64;
+        for (i, s) in self.shards.iter().enumerate() {
+            let slot = lock_slot(s)?;
+            processed += slot.state.processed();
+            pending += slot.pending.len() as u64;
+            size_words += slot.state.size_words() as u64;
+            if i == 0 {
+                passes = slot.state.passes() as u64;
+                pass = slot.state.pass() as u64;
+                fingerprint = WorSampler::fingerprint(&*slot.state).value();
+            }
+        }
+        Ok(InstanceInfo {
+            name: self.name.clone(),
+            method: self.method.to_string(),
+            shards: self.shards.len() as u64,
+            batch: self.batch as u64,
+            processed,
+            pending,
+            accepted: self.accepted.load(Ordering::Relaxed),
+            size_words,
+            passes,
+            pass,
+            fingerprint,
+        })
+    }
+
+    /// Offline fast path: every shard scans a replayable `source` in
+    /// parallel (the coordinator's pass executor — identical loop to
+    /// [`crate::pipeline::run_sharded`], but writing into this instance's
+    /// shard summaries). Pending blocks are flushed first so boundaries
+    /// stay aligned; trailing partial blocks are flushed at end of scan,
+    /// exactly like the offline pipeline.
+    pub fn ingest_source<Src>(&self, source: &Src) -> Result<Arc<Metrics>>
+    where
+        Src: ParallelSource + ?Sized,
+    {
+        self.flush()?;
+        let metrics = Arc::new(Metrics::default());
+        let mut failed: Vec<Result<()>> = Vec::with_capacity(self.shards.len());
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.shards.len());
+            for w in 0..self.shards.len() {
+                let m = Arc::clone(&metrics);
+                handles.push(scope.spawn(move || -> Result<()> {
+                    // hold this shard's lock for the whole pass — the
+                    // scan is the hot loop and the slot is uncontended
+                    let mut slot = lock_slot(&self.shards[w])?;
+                    let mut block = ElementBlock::with_capacity(self.batch);
+                    let mut fills = 0u64;
+                    for e in source.scan() {
+                        if self.router.route(e.key) != w {
+                            continue;
+                        }
+                        block.push(e.key, e.val);
+                        if block.len() == self.batch {
+                            slot.state.process_block(&block);
+                            m.note_batch(block.len() as u64);
+                            fills += 1;
+                            if fills > 1 {
+                                m.note_buffer_reuse();
+                            }
+                            block.clear();
+                        }
+                    }
+                    if !block.is_empty() {
+                        slot.state.process_block(&block);
+                        m.note_batch(block.len() as u64);
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                failed.push(
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::Pipeline("engine worker panicked".into()))),
+                );
+            }
+        });
+        let scanned: u64 = metrics.elements();
+        for r in failed {
+            r?;
+        }
+        self.accepted.fetch_add(scanned, Ordering::Relaxed);
+        Ok(metrics)
+    }
+
+    /// Serialize the whole instance — per-shard summaries *and* their
+    /// pending blocks — as one [`crate::codec`] envelope (tag
+    /// `ENGINE_SNAPSHOT`), taken under all shard locks so the cut is
+    /// consistent. Restoring and continuing is bit-identical to never
+    /// stopping.
+    pub fn encode_snapshot(&self) -> Result<Vec<u8>> {
+        let mut guards = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            guards.push(lock_slot(s)?);
+        }
+        let mut payload = Vec::new();
+        codec::put_str(&mut payload, &self.name);
+        codec::put_str(&mut payload, self.method);
+        wire::put_usize(&mut payload, self.batch);
+        wire::put_u64(&mut payload, self.accepted.load(Ordering::Relaxed));
+        wire::put_usize(&mut payload, guards.len());
+        for g in &guards {
+            let mut state = Vec::new();
+            g.state.encode_state(&mut state);
+            wire::put_usize(&mut payload, state.len());
+            payload.extend_from_slice(&state);
+            wire::put_usize(&mut payload, g.pending.len());
+            wire::put_block(&mut payload, &g.pending);
+        }
+        let fp = WorSampler::fingerprint(&*guards[0].state).value();
+        let mut out = Vec::new();
+        codec::write_envelope(codec::tag::ENGINE_SNAPSHOT, fp, &payload, &mut out);
+        Ok(out)
+    }
+
+    /// Decode a snapshot written by [`Instance::encode_snapshot`]. Never
+    /// panics on hostile bytes; shard summaries must share one
+    /// fingerprint (a spliced snapshot fails with
+    /// [`Error::Incompatible`]).
+    pub fn decode_snapshot(bytes: &[u8]) -> Result<Instance> {
+        let env = codec::read_envelope(bytes, Some(codec::tag::ENGINE_SNAPSHOT))?;
+        let mut r = wire::Reader::new(env.payload);
+        let name = codec::read_str(&mut r)?;
+        validate_name(&name)?;
+        let _method = codec::read_str(&mut r)?;
+        let batch = r.u64()?;
+        if batch == 0 || batch > u32::MAX as u64 {
+            return Err(Error::Codec(format!("snapshot batch out of range: {batch}")));
+        }
+        let accepted = r.u64()?;
+        let shards = r.seq_len(16)?;
+        if shards == 0 {
+            return Err(Error::Codec("snapshot holds zero shards".into()));
+        }
+        let mut slots = Vec::with_capacity(shards);
+        let mut fingerprint = None;
+        let mut method = "";
+        for _ in 0..shards {
+            let state_bytes = codec::take_nested(&mut r)?;
+            let state = codec::decode_sampler(state_bytes)?;
+            let fp = WorSampler::fingerprint(&*state).value();
+            match fingerprint {
+                None => {
+                    fingerprint = Some(fp);
+                    method = state.name();
+                }
+                Some(first) if first != fp => {
+                    return Err(Error::Incompatible(format!(
+                        "snapshot shards disagree: fingerprint {first:#018x} vs {fp:#018x} — \
+                         spliced snapshot?"
+                    )));
+                }
+                Some(_) => {}
+            }
+            let n = r.seq_len(16)?;
+            let rec = r.take(n * 16)?;
+            let mut pending = ElementBlock::with_capacity((batch as usize).max(n));
+            wire::read_block_into(rec, &mut pending)?;
+            if pending.len() > batch as usize {
+                return Err(Error::Codec(format!(
+                    "snapshot pending block of {} elements exceeds the batch size {batch}",
+                    pending.len()
+                )));
+            }
+            slots.push(Mutex::new(ShardSlot { state, pending }));
+        }
+        r.finish("engine snapshot")?;
+        codec::check_fingerprint(env.fingerprint, fingerprint.unwrap_or(0))?;
+        Ok(Instance {
+            name,
+            method,
+            batch: batch as usize,
+            router: Router::new(slots.len()),
+            shards: slots,
+            accepted: AtomicU64::new(accepted),
+        })
+    }
+}
+
+/// Validate an instance name: non-empty, ≤ 200 bytes, printable ASCII
+/// from the `[A-Za-z0-9._/-]` set (so names survive file systems, shell
+/// commands and log lines unquoted; use `namespace/name` by convention).
+pub fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > 200 {
+        return Err(Error::Config(format!(
+            "instance name must be 1..=200 bytes, got {} bytes",
+            name.len()
+        )));
+    }
+    if !name
+        .bytes()
+        .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'/' | b'-'))
+    {
+        return Err(Error::Config(format!(
+            "instance name {name:?} may only contain [A-Za-z0-9._/-]"
+        )));
+    }
+    Ok(())
+}
+
+/// The long-lived multi-tenant engine: named instances, concurrent
+/// ingest, a unified query surface, lifecycle ops, snapshot/restore.
+/// Share it behind `Arc` (the TCP [`server`] does).
+pub struct Engine {
+    opts: EngineOpts,
+    instances: RwLock<BTreeMap<String, Arc<Instance>>>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new(EngineOpts::default())
+    }
+}
+
+impl Engine {
+    /// An engine whose instances shard and batch per `opts` (zeros are
+    /// clamped to 1 — prefer the validating [`EngineOpts::new`]).
+    pub fn new(opts: EngineOpts) -> Engine {
+        let opts = EngineOpts { shards: opts.shards.max(1), batch: opts.batch.max(1) };
+        Engine { opts, instances: RwLock::new(BTreeMap::new()) }
+    }
+
+    /// The engine topology.
+    pub fn opts(&self) -> EngineOpts {
+        self.opts
+    }
+
+    fn registry(&self) -> Result<std::sync::RwLockReadGuard<'_, BTreeMap<String, Arc<Instance>>>> {
+        self.instances
+            .read()
+            .map_err(|_| Error::Pipeline("engine registry poisoned".into()))
+    }
+
+    fn registry_mut(
+        &self,
+    ) -> Result<std::sync::RwLockWriteGuard<'_, BTreeMap<String, Arc<Instance>>>> {
+        self.instances
+            .write()
+            .map_err(|_| Error::Pipeline("engine registry poisoned".into()))
+    }
+
+    /// Look up an instance by name.
+    pub fn instance(&self, name: &str) -> Result<Arc<Instance>> {
+        self.registry()?
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Config(format!("no such instance {name:?}")))
+    }
+
+    /// Create a named instance from a [`Worp`] spec. Fails if the name is
+    /// taken or invalid.
+    pub fn create(&self, name: &str, spec: &Worp) -> Result<()> {
+        self.create_from_proto(name, spec.build()?)
+    }
+
+    /// Create a named instance from an already-built sampler prototype
+    /// (each shard gets a clone).
+    pub fn create_from_proto(&self, name: &str, proto: Box<dyn WorSampler>) -> Result<()> {
+        validate_name(name)?;
+        let mut reg = self.registry_mut()?;
+        if reg.contains_key(name) {
+            return Err(Error::Config(format!("instance {name:?} already exists")));
+        }
+        let inst = Instance::from_proto(name.to_string(), proto, self.opts);
+        reg.insert(name.to_string(), Arc::new(inst));
+        Ok(())
+    }
+
+    /// Remove an instance. In-flight operations holding the `Arc` finish
+    /// against the detached instance.
+    pub fn drop_instance(&self, name: &str) -> Result<()> {
+        self.registry_mut()?
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| Error::Config(format!("no such instance {name:?}")))
+    }
+
+    /// Stats for every instance, name-sorted.
+    pub fn list(&self) -> Result<Vec<InstanceInfo>> {
+        let reg = self.registry()?;
+        let mut out = Vec::with_capacity(reg.len());
+        for inst in reg.values() {
+            out.push(inst.info()?);
+        }
+        Ok(out)
+    }
+
+    /// Stats for one instance.
+    pub fn stats(&self, name: &str) -> Result<InstanceInfo> {
+        self.instance(name)?.info()
+    }
+
+    /// Ingest one SoA block of updates. Returns the instance's lifetime
+    /// accepted-element count after this call.
+    pub fn ingest(&self, name: &str, block: &ElementBlock) -> Result<u64> {
+        self.instance(name)?.ingest(block)
+    }
+
+    /// Ingest an AoS element slice (convenience — bridges into one block).
+    pub fn ingest_elements(&self, name: &str, elems: &[Element]) -> Result<u64> {
+        self.ingest(name, &ElementBlock::from_elements(elems))
+    }
+
+    /// Drive a whole replayable source through an instance (the offline /
+    /// coordinator path: parallel per-shard scans). Returns the pass
+    /// metrics.
+    pub fn ingest_source<Src>(&self, name: &str, source: &Src) -> Result<Arc<Metrics>>
+    where
+        Src: ParallelSource + ?Sized,
+    {
+        self.instance(name)?.ingest_source(source)
+    }
+
+    /// Flush pending partial blocks. Returns the flushed element count.
+    pub fn flush(&self, name: &str) -> Result<u64> {
+        self.instance(name)?.flush()
+    }
+
+    /// Advance a multi-pass instance to its next pass (see
+    /// [`Instance::advance`]). Returns the new 0-based pass index.
+    pub fn advance(&self, name: &str) -> Result<usize> {
+        self.instance(name)?.advance()
+    }
+
+    /// Extract the instance's current WOR sample (merging shard
+    /// summaries on the fly; the instance keeps streaming afterwards).
+    pub fn sample(&self, name: &str) -> Result<Sample> {
+        self.instance(name)?.merged()?.sample()
+    }
+
+    /// Estimate the frequency moment `‖ν‖_{p'}^{p'}` from the current
+    /// sample (paper Eq. 2 / Table 3).
+    pub fn moment(&self, name: &str, p_prime: f64) -> Result<f64> {
+        Ok(moment_estimate(&self.sample(name)?, p_prime))
+    }
+
+    /// Estimate the sum statistic `Σ_x f(ν_x)·L(x)` from the current
+    /// sample (library-side only — closures do not cross the wire).
+    pub fn sum_statistic<F, L>(&self, name: &str, f: &F, l: &L) -> Result<f64>
+    where
+        F: Fn(f64) -> f64,
+        L: Fn(u64) -> f64,
+    {
+        Ok(sum_statistic(&self.sample(name)?, f, l))
+    }
+
+    /// Estimate the rank-frequency curve from the current sample,
+    /// truncated to `max_points` points (0 = all).
+    pub fn rank_frequency(&self, name: &str, max_points: usize) -> Result<Vec<RankFreqPoint>> {
+        let mut pts = rank_frequency_wor(&self.sample(name)?);
+        if max_points > 0 {
+            pts.truncate(max_points);
+        }
+        Ok(pts)
+    }
+
+    /// Serialize one instance (summaries + pending) as a single envelope.
+    pub fn encode_snapshot(&self, name: &str) -> Result<Vec<u8>> {
+        self.instance(name)?.encode_snapshot()
+    }
+
+    /// Register an instance from snapshot bytes; returns its name. Fails
+    /// if the name is already taken.
+    pub fn restore_snapshot(&self, bytes: &[u8]) -> Result<String> {
+        let inst = Instance::decode_snapshot(bytes)?;
+        let name = inst.name().to_string();
+        let mut reg = self.registry_mut()?;
+        if reg.contains_key(&name) {
+            return Err(Error::Config(format!(
+                "cannot restore: instance {name:?} already exists"
+            )));
+        }
+        reg.insert(name.clone(), Arc::new(inst));
+        Ok(name)
+    }
+
+    /// Snapshot every instance into `dir` (one `*.worp` file each,
+    /// written atomically via temp-file + rename — the
+    /// [`crate::pipeline::CheckpointPolicy`] discipline). Returns the
+    /// number of snapshots written.
+    pub fn snapshot_all(&self, dir: &Path) -> Result<usize> {
+        std::fs::create_dir_all(dir)?;
+        let instances: Vec<Arc<Instance>> = self.registry()?.values().cloned().collect();
+        for inst in &instances {
+            let bytes = inst.encode_snapshot()?;
+            let file = dir.join(format!("{}.worp", sanitize_file_stem(inst.name())));
+            let tmp = file.with_extension("worp.tmp");
+            {
+                use std::io::Write;
+                let mut f = std::fs::File::create(&tmp)?;
+                f.write_all(&bytes)?;
+                f.sync_all()?;
+            }
+            std::fs::rename(&tmp, &file)?;
+        }
+        Ok(instances.len())
+    }
+
+    /// Restore every `*.worp` snapshot found in `dir` (instance names
+    /// come from inside the envelopes, not the filenames). Names already
+    /// registered are an error — restore into a fresh engine. Returns the
+    /// restored names, sorted.
+    pub fn restore_dir(&self, dir: &Path) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        let mut entries: Vec<std::path::PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("worp"))
+            .collect();
+        entries.sort();
+        for path in entries {
+            let bytes = std::fs::read(&path)?;
+            names.push(self.restore_snapshot(&bytes).map_err(|e| {
+                Error::Config(format!("cannot restore {}: {e}", path.display()))
+            })?);
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+/// Instance name → stable filename stem: keep `[A-Za-z0-9._-]`, map `/`
+/// (the namespace separator) and anything else to `-`, and append a hash
+/// of the full name so distinct names can never collide on disk.
+fn sanitize_file_stem(name: &str) -> String {
+    let safe: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect();
+    format!(
+        "{safe}-{:016x}",
+        crate::util::hashing::hash_bytes(0x1457, name.as_bytes())
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zipf::zipf_exact_stream;
+
+    fn spec(seed: u64) -> Worp {
+        Worp::p(1.0).k(16).seed(seed).domain(500).sketch_shape(7, 1024)
+    }
+
+    fn blocks_of(elems: &[Element], chunk: usize) -> Vec<ElementBlock> {
+        elems.chunks(chunk).map(ElementBlock::from_elements).collect()
+    }
+
+    #[test]
+    fn create_list_drop_lifecycle() {
+        let eng = Engine::new(EngineOpts::new(3, 64).unwrap());
+        eng.create("ns/a", &spec(1)).unwrap();
+        eng.create("ns/b", &spec(2).exact()).unwrap();
+        // duplicate and invalid names fail loudly
+        assert!(eng.create("ns/a", &spec(1)).is_err());
+        assert!(eng.create("", &spec(1)).is_err());
+        assert!(eng.create("bad name", &spec(1)).is_err());
+        let infos = eng.list().unwrap();
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].name, "ns/a");
+        assert_eq!(infos[0].method, "1pass");
+        assert_eq!(infos[0].shards, 3);
+        assert_eq!(infos[1].method, "exact");
+        eng.drop_instance("ns/a").unwrap();
+        assert!(eng.drop_instance("ns/a").is_err());
+        assert_eq!(eng.list().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn streamed_ingest_equals_source_ingest_bit_for_bit() {
+        // chunked `ingest` calls (the service path) and a parallel
+        // `ingest_source` scan (the offline path) must produce identical
+        // summaries: same per-shard subsequences, same block boundaries
+        let elems = zipf_exact_stream(500, 1.2, 1e4, 2, 42);
+        let eng = Engine::new(EngineOpts::new(3, 128).unwrap());
+        eng.create("svc", &spec(9)).unwrap();
+        eng.create("off", &spec(9)).unwrap();
+        for b in blocks_of(&elems, 333) {
+            eng.ingest("svc", &b).unwrap();
+        }
+        eng.flush("svc").unwrap();
+        let m = eng.ingest_source("off", &elems).unwrap();
+        assert_eq!(m.elements() as usize, elems.len());
+        let mut a = Vec::new();
+        eng.instance("svc").unwrap().merged().unwrap().encode_state(&mut a);
+        let mut b = Vec::new();
+        eng.instance("off").unwrap().merged().unwrap().encode_state(&mut b);
+        assert_eq!(a, b, "service ingest and offline scan must agree bit-for-bit");
+        let sa = eng.sample("svc").unwrap();
+        let sb = eng.sample("off").unwrap();
+        assert_eq!(sa.keys(), sb.keys());
+        assert_eq!(sa.tau.to_bits(), sb.tau.to_bits());
+    }
+
+    #[test]
+    fn queries_ignore_pending_until_flush() {
+        let eng = Engine::new(EngineOpts::new(2, 1024).unwrap());
+        eng.create("q", &spec(3).exact()).unwrap();
+        let elems: Vec<Element> = (0..10).map(|i| Element::new(i, 1.0 + i as f64)).collect();
+        eng.ingest_elements("q", &elems).unwrap();
+        let info = eng.stats("q").unwrap();
+        assert_eq!(info.pending, 10);
+        assert_eq!(info.processed, 0);
+        assert_eq!(info.accepted, 10);
+        assert!(eng.sample("q").unwrap().is_empty());
+        assert_eq!(eng.flush("q").unwrap(), 10);
+        let info = eng.stats("q").unwrap();
+        assert_eq!(info.pending, 0);
+        assert_eq!(info.processed, 10);
+        let s = eng.sample("q").unwrap();
+        assert_eq!(s.len(), 10); // k=16 > 10 distinct keys, tau degenerate
+        // the unified estimate surface answers over the engine
+        let truth: f64 = elems.iter().map(|e| e.val).sum();
+        assert!((eng.moment("q", 1.0).unwrap() - truth).abs() < 1e-9);
+        assert!(!eng.rank_frequency("q", 5).unwrap().is_empty());
+    }
+
+    #[test]
+    fn multi_pass_instances_advance_like_the_coordinator() {
+        use crate::coordinator::{Coordinator, VecSource};
+        let elems = zipf_exact_stream(400, 1.2, 1e4, 2, 5);
+        let w = spec(77).two_pass();
+        let eng = Engine::new(EngineOpts::new(3, 128).unwrap());
+        eng.create("tp", &w).unwrap();
+        for b in blocks_of(&elems, 500) {
+            eng.ingest("tp", &b).unwrap();
+        }
+        // sampling mid-run is a typed state error, not a wrong answer
+        eng.flush("tp").unwrap();
+        assert!(matches!(eng.sample("tp"), Err(Error::State(_))));
+        assert_eq!(eng.advance("tp").unwrap(), 1);
+        for b in blocks_of(&elems, 500) {
+            eng.ingest("tp", &b).unwrap();
+        }
+        eng.flush("tp").unwrap();
+        let served = eng.sample("tp").unwrap();
+        let coord = Coordinator::new(
+            w.sampler_config().unwrap(),
+            PipelineOpts::new(3, 128).unwrap(),
+        );
+        let (offline, _) = coord.run_dyn(&VecSource(elems), w.build().unwrap()).unwrap();
+        assert_eq!(served.keys(), offline.keys());
+        assert_eq!(served.tau.to_bits(), offline.tau.to_bits());
+    }
+
+    #[test]
+    fn snapshot_restore_continue_is_bit_identical() {
+        let elems = zipf_exact_stream(500, 1.0, 1e4, 3, 8); // 1500 elements
+        let (head, tail) = elems.split_at(777); // mid-block split: pending non-empty
+        let eng = Engine::new(EngineOpts::new(2, 256).unwrap());
+        eng.create("ck", &spec(4)).unwrap();
+        for b in blocks_of(head, 100) {
+            eng.ingest("ck", &b).unwrap();
+        }
+        let snap = eng.encode_snapshot("ck").unwrap();
+        // restore into a fresh engine and continue; reference never stops
+        let eng2 = Engine::new(EngineOpts::new(2, 256).unwrap());
+        let name = eng2.restore_snapshot(&snap).unwrap();
+        assert_eq!(name, "ck");
+        for b in blocks_of(tail, 100) {
+            eng2.ingest("ck", &b).unwrap();
+        }
+        let eng3 = Engine::new(EngineOpts::new(2, 256).unwrap());
+        eng3.create("ref", &spec(4)).unwrap();
+        for b in blocks_of(&elems, 100) {
+            eng3.ingest("ref", &b).unwrap();
+        }
+        eng2.flush("ck").unwrap();
+        eng3.flush("ref").unwrap();
+        let mut a = Vec::new();
+        eng2.instance("ck").unwrap().merged().unwrap().encode_state(&mut a);
+        let mut b = Vec::new();
+        eng3.instance("ref").unwrap().merged().unwrap().encode_state(&mut b);
+        assert_eq!(a, b, "snapshot -> restore -> continue must equal never stopping");
+        // restoring over a taken name is refused
+        assert!(eng2.restore_snapshot(&snap).is_err());
+    }
+
+    #[test]
+    fn snapshot_survives_disk_roundtrip_via_dir_helpers() {
+        let dir = std::env::temp_dir().join("worp_engine_snap_dir_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let eng = Engine::new(EngineOpts::new(2, 64).unwrap());
+        eng.create("ns/a", &spec(1).exact()).unwrap();
+        eng.create("ns/b", &spec(2)).unwrap();
+        eng.ingest_elements("ns/a", &[Element::new(5, 2.0)]).unwrap();
+        assert_eq!(eng.snapshot_all(&dir).unwrap(), 2);
+        let eng2 = Engine::new(EngineOpts::new(2, 64).unwrap());
+        let names = eng2.restore_dir(&dir).unwrap();
+        assert_eq!(names, vec!["ns/a".to_string(), "ns/b".to_string()]);
+        assert_eq!(eng2.stats("ns/a").unwrap().pending, 1);
+    }
+
+    #[test]
+    fn corrupt_snapshots_are_typed_errors() {
+        let eng = Engine::new(EngineOpts::new(2, 64).unwrap());
+        eng.create("c", &spec(1).exact()).unwrap();
+        let snap = eng.encode_snapshot("c").unwrap();
+        // truncation at every prefix
+        for cut in 0..snap.len().min(64) {
+            assert!(Instance::decode_snapshot(&snap[..cut]).is_err());
+        }
+        // bit flips are caught by the envelope checksum (or deeper checks)
+        for i in (0..snap.len()).step_by(7) {
+            let mut bad = snap.clone();
+            bad[i] ^= 0x10;
+            assert!(Instance::decode_snapshot(&bad).is_err(), "flip at byte {i} decoded");
+        }
+    }
+
+    #[test]
+    fn clock_dependent_samplers_get_one_shard() {
+        let eng = Engine::new(EngineOpts::new(4, 64).unwrap());
+        eng.create("w", &spec(1).windowed(100, 10)).unwrap();
+        assert_eq!(eng.stats("w").unwrap().shards, 1);
+    }
+}

@@ -1,0 +1,592 @@
+//! The `worp serve` wire protocol: length-prefixed, checksummed frames
+//! over TCP, built from the same [`wire`] primitives as every on-disk
+//! format in the crate (std-only — no tokio, no serde).
+//!
+//! # Frame layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic           "WRPC"
+//!      4     2  version         wire::VERSION (currently 1)
+//!      6     2  opcode          see [`op`]; responses set bit 15
+//!      8     8  payload length  must not exceed the receiver's cap
+//!     16     8  checksum        hash_bytes2(FRAME_CHECKSUM_SEED,
+//!                               header[0..16] ++ payload)
+//!     24     …  payload         per-opcode layout (below)
+//! ```
+//!
+//! Every request is answered with exactly one response frame: opcode
+//! `0x8000 | request_opcode` on success, [`RESP_ERR`] on failure (payload
+//! = error code `u16` + display string — the typed [`Error`] variants
+//! round-trip). A receiver that cannot trust its stream position any
+//! more (bad magic/version/checksum, oversized or truncated frame) sends
+//! one best-effort error frame and closes the connection; it never
+//! panics and never hangs on malformed input.
+//!
+//! # Request payloads
+//!
+//! | op | request payload | ok-response payload |
+//! |---|---|---|
+//! | `PING` | empty | empty |
+//! | `CREATE` | name, [`InstanceSpec`] | empty |
+//! | `DROP` | name | empty |
+//! | `LIST` | empty | count, [`InstanceInfo`]× |
+//! | `INGEST` | name, count, 16-byte element records | accepted `u64` |
+//! | `FLUSH` | name | flushed `u64` |
+//! | `ADVANCE` | name | new pass `u64` |
+//! | `SAMPLE` | name | canonical sample ([`codec::put_sample`]) |
+//! | `MOMENT` | name, `p' f64` | estimate `f64` |
+//! | `RANK_FREQ` | name, max `u64` | count, (rank `f64`, freq `f64`)× |
+//! | `STATS` | name | [`InstanceInfo`] |
+//! | `SNAPSHOT` | name | snapshot bytes (length-prefixed) |
+//! | `RESTORE` | snapshot bytes (length-prefixed) | name |
+//!
+//! Strings are `u64` length + UTF-8 bytes ([`codec::put_str`]); names
+//! obey [`crate::engine::validate_name`]. `python/worp_client.py` speaks
+//! the identical layout (including the checksum) from Python.
+
+use crate::codec::{self, wire};
+use crate::config::PipelineConfig;
+use crate::engine::InstanceInfo;
+use crate::error::{Error, Result};
+use crate::estimate::rankfreq::RankFreqPoint;
+use crate::Worp;
+use std::io::{Read, Write};
+
+/// Magic prefix of a protocol frame.
+pub const FRAME_MAGIC: [u8; 4] = *b"WRPC";
+
+/// Fixed frame header length in bytes.
+pub const FRAME_HEADER_LEN: usize = 24;
+
+/// Seed of the frame checksum (keyed FNV/SplitMix via
+/// [`crate::util::hashing::hash_bytes2`] — corruption detection, not
+/// cryptographic integrity). `python/worp_client.py` mirrors it.
+pub const FRAME_CHECKSUM_SEED: u64 = 0xC0DE_C0DE_5EED_0002;
+
+/// Default cap on accepted frame payloads (bytes); the server reads its
+/// own from `[server] max_frame_mib`.
+pub const DEFAULT_MAX_FRAME: usize = 32 << 20;
+
+/// Request opcodes (responses set bit 15: `0x8000 | op`).
+pub mod op {
+    /// Liveness check.
+    pub const PING: u16 = 1;
+    /// Create a named instance from an [`super::InstanceSpec`].
+    pub const CREATE: u16 = 2;
+    /// Drop a named instance.
+    pub const DROP: u16 = 3;
+    /// List all instances.
+    pub const LIST: u16 = 4;
+    /// Ingest an element block into an instance.
+    pub const INGEST: u16 = 5;
+    /// Flush an instance's pending blocks.
+    pub const FLUSH: u16 = 6;
+    /// Advance a multi-pass instance to its next pass.
+    pub const ADVANCE: u16 = 7;
+    /// Extract the current WOR sample.
+    pub const SAMPLE: u16 = 8;
+    /// Frequency-moment estimate.
+    pub const MOMENT: u16 = 9;
+    /// Rank-frequency curve estimate.
+    pub const RANK_FREQ: u16 = 10;
+    /// Per-instance stats.
+    pub const STATS: u16 = 11;
+    /// Serialize an instance (summaries + pending).
+    pub const SNAPSHOT: u16 = 12;
+    /// Register an instance from snapshot bytes.
+    pub const RESTORE: u16 = 13;
+}
+
+/// Response opcode for a failed request (any opcode).
+pub const RESP_ERR: u16 = 0x7FFF;
+
+/// The ok-response opcode of a request opcode.
+#[inline]
+pub fn resp_ok(request_op: u16) -> u16 {
+    0x8000 | request_op
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    /// Opcode (request, ok-response or [`RESP_ERR`]).
+    pub opcode: u16,
+    /// Payload bytes (checksum already verified).
+    pub payload: Vec<u8>,
+}
+
+/// Append a complete frame (header + payload) to `out`.
+pub fn put_frame(out: &mut Vec<u8>, opcode: u16, payload: &[u8]) {
+    let start = out.len();
+    out.extend_from_slice(&FRAME_MAGIC);
+    wire::put_u16(out, wire::VERSION);
+    wire::put_u16(out, opcode);
+    wire::put_u64(out, payload.len() as u64);
+    let checksum =
+        crate::util::hashing::hash_bytes2(FRAME_CHECKSUM_SEED, &out[start..start + 16], payload);
+    wire::put_u64(out, checksum);
+    out.extend_from_slice(payload);
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, opcode: u16, payload: &[u8]) -> Result<()> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    put_frame(&mut buf, opcode, payload);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from a stream. `Ok(None)` on a clean end-of-stream
+/// (the peer closed between frames); [`Error::Codec`] on malformed bytes
+/// (bad magic/version, checksum mismatch, payload over `max_payload`,
+/// truncation inside a frame); [`Error::Io`] on transport errors. Never
+/// panics, and never allocates more than `max_payload` from untrusted
+/// lengths.
+pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<Option<Frame>> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    // distinguish clean EOF (no bytes at a frame boundary) from a frame
+    // truncated mid-header
+    let mut got = 0;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::Codec(format!(
+                    "truncated frame: {got} of {FRAME_HEADER_LEN} header bytes"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if header[..4] != FRAME_MAGIC {
+        return Err(Error::Codec(format!(
+            "bad frame magic {:02x?} (expected {:02x?})",
+            &header[..4],
+            FRAME_MAGIC
+        )));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != wire::VERSION {
+        return Err(Error::Codec(format!(
+            "unsupported protocol version {version} (this build speaks {})",
+            wire::VERSION
+        )));
+    }
+    let opcode = u16::from_le_bytes([header[6], header[7]]);
+    let mut lb = [0u8; 8];
+    lb.copy_from_slice(&header[8..16]);
+    let len = u64::from_le_bytes(lb);
+    if len > max_payload as u64 {
+        return Err(Error::Codec(format!(
+            "frame payload of {len} bytes exceeds the {max_payload}-byte cap"
+        )));
+    }
+    let mut cb = [0u8; 8];
+    cb.copy_from_slice(&header[16..24]);
+    let checksum = u64::from_le_bytes(cb);
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                Error::Codec("truncated frame: stream ended inside the payload".into())
+            }
+            _ => Error::Io(e),
+        })?;
+    if crate::util::hashing::hash_bytes2(FRAME_CHECKSUM_SEED, &header[..16], &payload) != checksum
+    {
+        return Err(Error::Codec(
+            "frame checksum mismatch — the bytes were corrupted in transit".into(),
+        ));
+    }
+    Ok(Some(Frame { opcode, payload }))
+}
+
+// ---------------------------------------------------------------------------
+// Error transport
+
+/// Wire code of an [`Error`] variant (see [`decode_error`]).
+pub fn error_code(e: &Error) -> u16 {
+    match e {
+        Error::Config(_) => 1,
+        Error::Incompatible(_) => 2,
+        Error::State(_) => 3,
+        Error::RhhFailure(_) => 4,
+        Error::Runtime(_) => 5,
+        Error::Pipeline(_) => 6,
+        Error::Codec(_) => 7,
+        Error::Io(_) => 8,
+    }
+}
+
+/// Encode an error as a [`RESP_ERR`] payload: code + display string.
+pub fn encode_error(e: &Error) -> Vec<u8> {
+    let mut out = Vec::new();
+    wire::put_u16(&mut out, error_code(e));
+    codec::put_str(&mut out, &e.to_string());
+    out
+}
+
+/// Rebuild a typed [`Error`] from a [`RESP_ERR`] payload. Unknown codes
+/// map to [`Error::Codec`] (a newer server speaking a newer taxonomy).
+pub fn decode_error(payload: &[u8]) -> Error {
+    let mut r = wire::Reader::new(payload);
+    let (code, msg) = match (|| -> Result<(u16, String)> {
+        let code = r.u16()?;
+        let msg = codec::read_str(&mut r)?;
+        Ok((code, msg))
+    })() {
+        Ok(x) => x,
+        Err(_) => return Error::Codec("malformed error response payload".into()),
+    };
+    match code {
+        1 => Error::Config(msg),
+        2 => Error::Incompatible(msg),
+        3 => Error::State(msg),
+        4 => Error::RhhFailure(msg),
+        5 => Error::Runtime(msg),
+        6 => Error::Pipeline(msg),
+        7 => Error::Codec(msg),
+        8 => Error::Io(std::io::Error::other(msg)),
+        _ => Error::Codec(format!("remote error (unknown code {code}): {msg}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instance specs
+
+/// The sampler specification a `CREATE` request carries — the scalar
+/// image of a [`Worp`] builder (method + dist spellings as in config
+/// files). Validation happens in [`InstanceSpec::to_worp`] via the same
+/// path the CLI and config files use, so a hostile spec yields a typed
+/// error, never a panic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InstanceSpec {
+    /// Method spelling ("1pass", "2pass", "tv", "windowed", "exact").
+    pub method: String,
+    /// Randomization spelling ("ppswor" or "priority").
+    pub dist: String,
+    /// ℓp power `p ∈ (0, 2]`.
+    pub p: f64,
+    /// Sample size `k`.
+    pub k: usize,
+    /// rHH norm `q ∈ {1, 2}`.
+    pub q: f64,
+    /// Shared randomization seed.
+    pub seed: u64,
+    /// Key-domain size for Ψ calibration.
+    pub n: usize,
+    /// Target failure probability δ.
+    pub delta: f64,
+    /// 1-pass accuracy parameter ε.
+    pub eps: f64,
+    /// Sketch rows (odd; 0 = default).
+    pub rows: usize,
+    /// Sketch width (0 = derive from Ψ).
+    pub width: usize,
+    /// Sliding-window length (0 = unwindowed).
+    pub window: u64,
+    /// Window sub-sketch buckets.
+    pub buckets: usize,
+}
+
+impl InstanceSpec {
+    /// The spec a launcher config prescribes.
+    pub fn from_config(cfg: &PipelineConfig) -> InstanceSpec {
+        InstanceSpec {
+            method: cfg.method.clone(),
+            dist: cfg.dist.clone(),
+            p: cfg.p,
+            k: cfg.k,
+            q: cfg.q,
+            seed: cfg.seed,
+            n: cfg.n,
+            delta: cfg.delta,
+            eps: cfg.eps,
+            rows: cfg.rows,
+            width: cfg.width,
+            window: cfg.window,
+            buckets: cfg.buckets,
+        }
+    }
+
+    /// Materialize the [`Worp`] builder this spec describes, through the
+    /// exact validation path config files use.
+    pub fn to_worp(&self) -> Result<Worp> {
+        let mut cfg = PipelineConfig::default();
+        cfg.method = self.method.clone();
+        cfg.dist = self.dist.clone();
+        cfg.p = self.p;
+        cfg.k = self.k;
+        cfg.q = self.q;
+        cfg.seed = self.seed;
+        cfg.n = self.n;
+        cfg.delta = self.delta;
+        cfg.eps = self.eps;
+        // rows 0 means "paper default" on the wire; the config layer has
+        // no such spelling (it always carries a concrete odd row count)
+        cfg.rows = if self.rows == 0 { PipelineConfig::default().rows } else { self.rows };
+        cfg.width = self.width;
+        cfg.window = self.window;
+        cfg.buckets = self.buckets;
+        Worp::from_config(&cfg)
+    }
+
+    /// Append the wire form.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        codec::put_str(out, &self.method);
+        codec::put_str(out, &self.dist);
+        wire::put_f64(out, self.p);
+        wire::put_usize(out, self.k);
+        wire::put_f64(out, self.q);
+        wire::put_u64(out, self.seed);
+        wire::put_usize(out, self.n);
+        wire::put_f64(out, self.delta);
+        wire::put_f64(out, self.eps);
+        wire::put_usize(out, self.rows);
+        wire::put_usize(out, self.width);
+        wire::put_u64(out, self.window);
+        wire::put_usize(out, self.buckets);
+    }
+
+    /// Read the wire form (sizes capped at 2^32 so absurd values cannot
+    /// drive huge allocations downstream; semantic validation happens in
+    /// [`InstanceSpec::to_worp`]).
+    pub fn decode(r: &mut wire::Reader<'_>) -> Result<InstanceSpec> {
+        const SIZE_CAP: u64 = u32::MAX as u64;
+        let method = codec::read_str(r)?;
+        let dist = codec::read_str(r)?;
+        let p = r.f64()?;
+        let k = r.u64()?;
+        let q = r.f64()?;
+        let seed = r.u64()?;
+        let n = r.u64()?;
+        let delta = r.f64()?;
+        let eps = r.f64()?;
+        let rows = r.u64()?;
+        let width = r.u64()?;
+        let window = r.u64()?;
+        let buckets = r.u64()?;
+        for (what, v) in [("k", k), ("n", n), ("rows", rows), ("width", width), ("buckets", buckets)]
+        {
+            if v > SIZE_CAP {
+                return Err(Error::Codec(format!("spec {what} exceeds the 2^32 cap: {v}")));
+            }
+        }
+        Ok(InstanceSpec {
+            method,
+            dist,
+            p,
+            k: k as usize,
+            q,
+            seed,
+            n: n as usize,
+            delta,
+            eps,
+            rows: rows as usize,
+            width: width as usize,
+            window,
+            buckets: buckets as usize,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instance info
+
+/// Append the wire form of an [`InstanceInfo`].
+pub fn put_info(out: &mut Vec<u8>, i: &InstanceInfo) {
+    codec::put_str(out, &i.name);
+    codec::put_str(out, &i.method);
+    for v in [
+        i.shards,
+        i.batch,
+        i.processed,
+        i.pending,
+        i.accepted,
+        i.size_words,
+        i.passes,
+        i.pass,
+        i.fingerprint,
+    ] {
+        wire::put_u64(out, v);
+    }
+}
+
+/// Read the wire form of an [`InstanceInfo`].
+pub fn read_info(r: &mut wire::Reader<'_>) -> Result<InstanceInfo> {
+    let name = codec::read_str(r)?;
+    let method = codec::read_str(r)?;
+    Ok(InstanceInfo {
+        name,
+        method,
+        shards: r.u64()?,
+        batch: r.u64()?,
+        processed: r.u64()?,
+        pending: r.u64()?,
+        accepted: r.u64()?,
+        size_words: r.u64()?,
+        passes: r.u64()?,
+        pass: r.u64()?,
+        fingerprint: r.u64()?,
+    })
+}
+
+/// Append a rank-frequency curve.
+pub fn put_rank_points(out: &mut Vec<u8>, pts: &[RankFreqPoint]) {
+    wire::put_usize(out, pts.len());
+    for p in pts {
+        wire::put_f64(out, p.rank);
+        wire::put_f64(out, p.freq);
+    }
+}
+
+/// Read a rank-frequency curve.
+pub fn read_rank_points(r: &mut wire::Reader<'_>) -> Result<Vec<RankFreqPoint>> {
+    let n = r.seq_len(16)?;
+    let mut pts = Vec::with_capacity(n);
+    for _ in 0..n {
+        pts.push(RankFreqPoint { rank: r.f64()?, freq: r.f64()? });
+    }
+    Ok(pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let mut buf = Vec::new();
+        put_frame(&mut buf, op::PING, b"");
+        put_frame(&mut buf, op::INGEST, b"payload bytes");
+        let mut cur = std::io::Cursor::new(buf);
+        let f1 = read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!(f1.opcode, op::PING);
+        assert!(f1.payload.is_empty());
+        let f2 = read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!(f2.opcode, op::INGEST);
+        assert_eq!(f2.payload, b"payload bytes");
+        // clean EOF at a frame boundary is None, not an error
+        assert!(read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_errors_never_panics() {
+        let mut good = Vec::new();
+        put_frame(&mut good, op::SAMPLE, b"abcdef");
+        // truncation at every prefix length
+        for cut in 1..good.len() {
+            let mut cur = std::io::Cursor::new(good[..cut].to_vec());
+            assert!(
+                matches!(read_frame(&mut cur, DEFAULT_MAX_FRAME), Err(Error::Codec(_))),
+                "prefix {cut} did not error"
+            );
+        }
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let mut cur = std::io::Cursor::new(bad);
+        assert!(matches!(read_frame(&mut cur, DEFAULT_MAX_FRAME), Err(Error::Codec(_))));
+        // bad version
+        let mut bad = good.clone();
+        bad[4] = 0xEE;
+        let mut cur = std::io::Cursor::new(bad);
+        assert!(matches!(read_frame(&mut cur, DEFAULT_MAX_FRAME), Err(Error::Codec(_))));
+        // payload bit flip -> checksum
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        let mut cur = std::io::Cursor::new(bad);
+        assert!(matches!(read_frame(&mut cur, DEFAULT_MAX_FRAME), Err(Error::Codec(_))));
+        // oversized length field: rejected BEFORE allocating
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut cur = std::io::Cursor::new(bad);
+        assert!(matches!(read_frame(&mut cur, DEFAULT_MAX_FRAME), Err(Error::Codec(_))));
+        // a frame over the receiver's cap is refused even if honest
+        let mut cur = std::io::Cursor::new(good);
+        assert!(matches!(read_frame(&mut cur, 3), Err(Error::Codec(_))));
+    }
+
+    #[test]
+    fn errors_roundtrip_with_their_types() {
+        for e in [
+            Error::Config("bad k".into()),
+            Error::Incompatible("fp".into()),
+            Error::State("pass I".into()),
+            Error::Codec("bytes".into()),
+            Error::Pipeline("worker".into()),
+        ] {
+            let payload = encode_error(&e);
+            let back = decode_error(&payload);
+            assert_eq!(error_code(&back), error_code(&e));
+            assert_eq!(back.to_string(), e.to_string());
+        }
+        // malformed error payloads degrade to Codec, not a panic
+        assert!(matches!(decode_error(&[1]), Error::Codec(_)));
+    }
+
+    #[test]
+    fn spec_roundtrips_and_builds() {
+        let mut cfg = PipelineConfig::default();
+        cfg.method = "2pass".into();
+        cfg.dist = "priority".into();
+        cfg.k = 12;
+        let spec = InstanceSpec::from_config(&cfg);
+        let mut buf = Vec::new();
+        spec.encode(&mut buf);
+        let mut r = wire::Reader::new(&buf);
+        let back = InstanceSpec::decode(&mut r).unwrap();
+        r.finish("spec").unwrap();
+        assert_eq!(back, spec);
+        let w = back.to_worp().unwrap();
+        assert_eq!(w.selected_method(), crate::api::builder::Method::TwoPass);
+        // rows 0 spells "paper default" and must build
+        let mut z = spec.clone();
+        z.rows = 0;
+        assert!(z.to_worp().is_ok());
+        // hostile spec: typed error from the shared validation path
+        let mut bad = spec.clone();
+        bad.method = "3pass".into();
+        assert!(bad.to_worp().is_err());
+        bad.method = "1pass".into();
+        bad.p = 9.0;
+        assert!(bad.to_worp().is_err());
+    }
+
+    #[test]
+    fn info_and_rank_points_roundtrip() {
+        let info = InstanceInfo {
+            name: "ns/x".into(),
+            method: "1pass".into(),
+            shards: 4,
+            batch: 4096,
+            processed: 100,
+            pending: 3,
+            accepted: 103,
+            size_words: 555,
+            passes: 1,
+            pass: 0,
+            fingerprint: 0xFEED,
+        };
+        let mut buf = Vec::new();
+        put_info(&mut buf, &info);
+        let mut r = wire::Reader::new(&buf);
+        assert_eq!(read_info(&mut r).unwrap(), info);
+        r.finish("info").unwrap();
+
+        let pts = vec![
+            RankFreqPoint { rank: 1.0, freq: 10.0 },
+            RankFreqPoint { rank: 2.5, freq: 3.0 },
+        ];
+        let mut buf = Vec::new();
+        put_rank_points(&mut buf, &pts);
+        let mut r = wire::Reader::new(&buf);
+        assert_eq!(read_rank_points(&mut r).unwrap(), pts);
+        r.finish("points").unwrap();
+    }
+}

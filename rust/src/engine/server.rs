@@ -1,0 +1,288 @@
+//! `worp serve`: the TCP face of the [`Engine`] — std-only
+//! (`std::net::TcpListener` + a thread per connection, no async
+//! runtime), speaking the [`proto`] frame protocol.
+//!
+//! Dispatch discipline: every request frame gets exactly one response
+//! frame. Engine errors travel back as typed [`proto::RESP_ERR`]
+//! payloads and the connection stays open; *framing* errors (bad magic,
+//! version, checksum, oversized or truncated frames) mean the byte
+//! stream can no longer be trusted, so the handler sends one best-effort
+//! error frame and closes that connection. A panic inside a request is
+//! caught and answered as a pipeline error — the server never crashes,
+//! hangs, or leaks a poisoned connection loop on malformed input
+//! (`tests/engine_contract.rs` drives all of these cases over a real
+//! socket).
+
+use super::proto::{self, op, Frame, InstanceSpec};
+use super::Engine;
+use crate::codec::{self, wire};
+use crate::data::ElementBlock;
+use crate::error::{Error, Result};
+use crate::pipeline::CheckpointPolicy;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Server tuning.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Largest accepted frame payload, in bytes.
+    pub max_frame: usize,
+    /// Snapshot every instance to `policy.dir()` after every
+    /// `policy.every_batches()` ingest requests (crash recovery for the
+    /// served registry; `None` = no periodic snapshots).
+    pub checkpoint: Option<CheckpointPolicy>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { max_frame: proto::DEFAULT_MAX_FRAME, checkpoint: None }
+    }
+}
+
+/// A running server: owns the accept loop (on a background thread) and
+/// serves `engine` until [`Server::stop`] or drop.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:7070"`; port 0 picks a free port —
+    /// read it back from [`Server::local_addr`]) and start accepting.
+    pub fn start(engine: Arc<Engine>, addr: &str, opts: ServeOpts) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Config(format!("cannot bind {addr}: {e}")))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::spawn(move || {
+            accept_loop(listener, engine, opts, stop2);
+        });
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting new connections and join the accept loop.
+    /// Connections already being served finish their current request and
+    /// drain on their own threads.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept loop only observes the flag when accept() returns,
+        // so poke it with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, engine: Arc<Engine>, opts: ServeOpts, stop: Arc<AtomicBool>) {
+    let ingests = Arc::new(AtomicU64::new(0));
+    loop {
+        let conn = listener.accept();
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn {
+            Ok((stream, _peer)) => {
+                let engine = Arc::clone(&engine);
+                let opts = opts.clone();
+                let ingests = Arc::clone(&ingests);
+                std::thread::spawn(move || {
+                    serve_connection(stream, &engine, &opts, &ingests);
+                });
+            }
+            Err(e) => {
+                // transient accept errors (EMFILE, resets) must not kill
+                // the server; back off briefly and keep accepting
+                eprintln!("worp serve: accept error: {e}");
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Serve one connection until it closes or its framing breaks.
+fn serve_connection(
+    mut stream: TcpStream,
+    engine: &Engine,
+    opts: &ServeOpts,
+    ingests: &AtomicU64,
+) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let frame = match proto::read_frame(&mut stream, opts.max_frame) {
+            Ok(Some(f)) => f,
+            // clean close between frames
+            Ok(None) => return,
+            Err(e) => {
+                // framing broke: answer once (best-effort), then drop the
+                // connection — stream sync cannot be recovered
+                let _ = proto::write_frame(&mut stream, proto::RESP_ERR, &proto::encode_error(&e));
+                let _ = stream.flush();
+                return;
+            }
+        };
+        let opcode = frame.opcode;
+        // a panic inside a handler must neither kill the server nor
+        // leave the client hanging without a response
+        let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_request(engine, opts, ingests, &frame)
+        }))
+        .unwrap_or_else(|_| {
+            Err(Error::Pipeline(
+                "request handler panicked; the instance may be poisoned".into(),
+            ))
+        });
+        let write_ok = match reply {
+            Ok(payload) => proto::write_frame(&mut stream, proto::resp_ok(opcode), &payload),
+            Err(e) => proto::write_frame(&mut stream, proto::RESP_ERR, &proto::encode_error(&e)),
+        };
+        if write_ok.is_err() {
+            return; // peer went away mid-response
+        }
+    }
+}
+
+/// Decode + dispatch one request; the returned bytes are the ok-response
+/// payload. Every failure path is a typed [`Error`].
+fn handle_request(
+    engine: &Engine,
+    opts: &ServeOpts,
+    ingests: &AtomicU64,
+    frame: &Frame,
+) -> Result<Vec<u8>> {
+    let mut r = wire::Reader::new(&frame.payload);
+    let mut out = Vec::new();
+    match frame.opcode {
+        op::PING => {
+            r.finish("ping request")?;
+        }
+        op::CREATE => {
+            let name = codec::read_str(&mut r)?;
+            let spec = InstanceSpec::decode(&mut r)?;
+            r.finish("create request")?;
+            engine.create(&name, &spec.to_worp()?)?;
+        }
+        op::DROP => {
+            let name = codec::read_str(&mut r)?;
+            r.finish("drop request")?;
+            engine.drop_instance(&name)?;
+        }
+        op::LIST => {
+            r.finish("list request")?;
+            let infos = engine.list()?;
+            wire::put_usize(&mut out, infos.len());
+            for i in &infos {
+                proto::put_info(&mut out, i);
+            }
+        }
+        op::INGEST => {
+            let name = codec::read_str(&mut r)?;
+            let n = r.seq_len(16)?;
+            let rec = r.take(n * 16)?;
+            r.finish("ingest request")?;
+            let mut block = ElementBlock::with_capacity(n);
+            wire::read_block_into(rec, &mut block)?;
+            let accepted = engine.ingest(&name, &block)?;
+            wire::put_u64(&mut out, accepted);
+            maybe_snapshot(engine, opts, ingests);
+        }
+        op::FLUSH => {
+            let name = codec::read_str(&mut r)?;
+            r.finish("flush request")?;
+            wire::put_u64(&mut out, engine.flush(&name)?);
+        }
+        op::ADVANCE => {
+            let name = codec::read_str(&mut r)?;
+            r.finish("advance request")?;
+            wire::put_u64(&mut out, engine.advance(&name)? as u64);
+        }
+        op::SAMPLE => {
+            let name = codec::read_str(&mut r)?;
+            r.finish("sample request")?;
+            codec::put_sample(&mut out, &engine.sample(&name)?);
+        }
+        op::MOMENT => {
+            let name = codec::read_str(&mut r)?;
+            let p_prime = r.finite_f64("moment p'")?;
+            r.finish("moment request")?;
+            wire::put_f64(&mut out, engine.moment(&name, p_prime)?);
+        }
+        op::RANK_FREQ => {
+            let name = codec::read_str(&mut r)?;
+            let max = r.u64()?;
+            r.finish("rank-freq request")?;
+            let pts = engine.rank_frequency(&name, max.min(u32::MAX as u64) as usize)?;
+            proto::put_rank_points(&mut out, &pts);
+        }
+        op::STATS => {
+            let name = codec::read_str(&mut r)?;
+            r.finish("stats request")?;
+            proto::put_info(&mut out, &engine.stats(&name)?);
+        }
+        op::SNAPSHOT => {
+            let name = codec::read_str(&mut r)?;
+            r.finish("snapshot request")?;
+            let bytes = engine.encode_snapshot(&name)?;
+            wire::put_usize(&mut out, bytes.len());
+            out.extend_from_slice(&bytes);
+        }
+        op::RESTORE => {
+            let bytes = codec::take_nested(&mut r)?.to_vec();
+            r.finish("restore request")?;
+            let name = engine.restore_snapshot(&bytes)?;
+            codec::put_str(&mut out, &name);
+        }
+        other => {
+            return Err(Error::Codec(format!(
+                "unknown request opcode {other:#06x}"
+            )));
+        }
+    }
+    Ok(out)
+}
+
+/// Periodic registry snapshots: every `every_batches` ingest requests,
+/// write every instance to the checkpoint directory (atomic per file).
+fn maybe_snapshot(engine: &Engine, opts: &ServeOpts, ingests: &AtomicU64) {
+    let Some(policy) = &opts.checkpoint else { return };
+    let n = ingests.fetch_add(1, Ordering::Relaxed) + 1;
+    if n % policy.every_batches() == 0 {
+        if let Err(e) = engine.snapshot_all(policy.dir()) {
+            eprintln!("worp serve: periodic snapshot failed: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineOpts;
+
+    #[test]
+    fn server_starts_stops_and_reports_its_port() {
+        let engine = Arc::new(Engine::new(EngineOpts::new(2, 64).unwrap()));
+        let mut srv = Server::start(engine, "127.0.0.1:0", ServeOpts::default()).unwrap();
+        let addr = srv.local_addr();
+        assert_ne!(addr.port(), 0);
+        // a raw connect + clean close is not an error
+        drop(TcpStream::connect(addr).unwrap());
+        srv.stop();
+        // stop is idempotent
+        srv.stop();
+    }
+}

@@ -4,12 +4,15 @@
 //! ℓp-Sampling Without Replacement"* (2020), as a three-layer
 //! Rust + JAX + Pallas system:
 //!
-//! - **Layer 3 (this crate)**: a streaming-pipeline coordinator — workers
-//!   that partition unaggregated element streams in parallel (each scans
-//!   the replayable source and keeps its own hash-shard, packed into
-//!   structure-of-arrays blocks), composable sketch merging, multi-pass
-//!   orchestration — plus native implementations of every sketch and
-//!   sampler the paper uses.
+//! - **Layer 3 (this crate)**: a long-lived serving [`engine`] — a
+//!   multi-tenant registry of named summary instances with concurrent
+//!   ingest, a unified query surface, and a std-only TCP wire protocol
+//!   (`worp serve` / `worp client`) — over a streaming pipeline whose
+//!   workers partition unaggregated element streams in parallel (each
+//!   scans the replayable source and keeps its own hash-shard, packed
+//!   into structure-of-arrays blocks), composable sketch merging,
+//!   multi-pass orchestration, and native implementations of every
+//!   sketch and sampler the paper uses.
 //! - **Layer 2/1 (build time, `python/compile`)**: the CountSketch update /
 //!   estimate hot paths authored as Pallas kernels inside a JAX graph,
 //!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT
@@ -30,7 +33,27 @@
 //! | [`api::Persist`] | versioned binary `encode_into` / `decode` (the [`codec`] wire format) |
 //! | [`api::WorSampler`] | object-safe bundle of the above for `Box<dyn WorSampler>` |
 //!
-//! ## Quick start
+//! ## Quick start: the Engine (primary entry point)
+//!
+//! The service-shaped API — named instances, continuous ingest, queries
+//! on demand (what `worp serve` exposes over TCP):
+//!
+//! ```no_run
+//! use worp::data::ElementBlock;
+//! use worp::{Engine, EngineOpts, Worp};
+//!
+//! let engine = Engine::new(EngineOpts::new(4, 4096).unwrap());
+//! engine.create("prod/clicks", &Worp::p(1.0).k(64).seed(7)).unwrap();
+//! let mut block = ElementBlock::new();
+//! block.push(42, 1.0); // (key, update) — signed updates welcome
+//! engine.ingest("prod/clicks", &block).unwrap();
+//! engine.flush("prod/clicks").unwrap();
+//! let sample = engine.sample("prod/clicks").unwrap();
+//! let f2 = engine.moment("prod/clicks", 2.0).unwrap(); // ‖ν‖₂² estimate
+//! # let _ = (sample, f2);
+//! ```
+//!
+//! One-shot streaming without an engine:
 //!
 //! ```no_run
 //! use worp::api::{StreamSummary, WorSampler};
@@ -46,7 +69,8 @@
 //! assert_eq!(sample.entries.len(), 64);
 //! ```
 //!
-//! Sharded execution goes through the coordinator — any method, one
+//! Offline batch runs go through the coordinator — a thin front-end over
+//! the same engine ingest path (bit-identical outputs) — any method, one
 //! driver:
 //!
 //! ```no_run
@@ -61,9 +85,12 @@
 //! # let _ = (sample, metrics);
 //! ```
 //!
-//! See `examples/` for end-to-end drivers, `benches/` for the
-//! reproduction of every table and figure in the paper, and the README
-//! for the old-API → new-API migration table.
+//! See the README "Serving" section for the wire protocol and the
+//! `worp serve` / `worp client` / Python session, `examples/` for
+//! end-to-end drivers (`serve_session.rs` runs the protocol over
+//! localhost), `benches/` for the reproduction of every table and
+//! figure in the paper, and the README for the old-API → new-API
+//! migration table.
 
 pub mod api;
 pub mod cli;
@@ -71,6 +98,7 @@ pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod estimate;
 pub mod perf;
@@ -84,4 +112,5 @@ pub mod util;
 
 pub use api::builder::{Method, Worp};
 pub use api::{Finalize, Mergeable, MultiPass, Persist, StreamSummary, WorSampler};
+pub use engine::{Engine, EngineOpts};
 pub use error::{Error, Result};

@@ -222,28 +222,26 @@ pub struct PipelineOpts {
     /// Elements per SoA block a worker processes at a time (and the
     /// checkpoint alignment unit).
     pub batch: usize,
-    /// Retained for configuration compatibility with the old
-    /// channel-based router (which used it as its backpressure window).
-    /// The scan pipeline has no channels, so this is validated but
-    /// otherwise unused.
-    pub channel_cap: usize,
 }
 
 impl Default for PipelineOpts {
     fn default() -> Self {
-        PipelineOpts { workers: 4, batch: 4096, channel_cap: 16 }
+        PipelineOpts { workers: 4, batch: 4096 }
     }
 }
 
 impl PipelineOpts {
-    /// Validated constructor.
-    pub fn new(workers: usize, batch: usize, channel_cap: usize) -> Result<Self> {
-        if workers == 0 || batch == 0 || channel_cap == 0 {
+    /// Validated constructor. (The retired channel-based router's
+    /// `channel_cap` knob is gone — the scan pipeline has no channels;
+    /// config files that still set `pipeline.channel_cap` get a
+    /// deprecation note on stderr instead of an error.)
+    pub fn new(workers: usize, batch: usize) -> Result<Self> {
+        if workers == 0 || batch == 0 {
             return Err(Error::Pipeline(
-                "workers, batch and channel_cap must be positive".into(),
+                "workers and batch must be positive".into(),
             ));
         }
-        Ok(PipelineOpts { workers, batch, channel_cap })
+        Ok(PipelineOpts { workers, batch })
     }
 }
 
@@ -659,7 +657,7 @@ mod tests {
         // a generator source: every worker regenerates (replays) the
         // stream instead of sharing a materialized copy
         let source = ScanFn(move || ZipfStream::new(1000, 1.0, n, 3));
-        let opts = PipelineOpts::new(4, 512, 4).unwrap();
+        let opts = PipelineOpts::new(4, 512).unwrap();
         let counted = Arc::new(Mutex::new(0u64));
         let c2 = Arc::clone(&counted);
         let (states, metrics) = run_sharded(&source, opts, move |_| {
@@ -700,7 +698,7 @@ mod tests {
     fn key_routing_is_consistent_and_partitioned() {
         let stream: Vec<Element> = ZipfStream::new(200, 1.0, 20_000, 7).collect();
         let truth = crate::data::aggregate(stream.clone());
-        let opts = PipelineOpts::new(3, 128, 4).unwrap();
+        let opts = PipelineOpts::new(3, 128).unwrap();
         let (states, _) = run_sharded(&stream, opts, |_| MapSink { sums: HashMap::new() })
             .unwrap();
         // every key appears on exactly one shard, with its exact total
@@ -725,7 +723,7 @@ mod tests {
         // router would have seen backpressure stalls here; now there is
         // no shared channel to stall on)
         let stream: Vec<Element> = (0..20_000).map(|i| Element::new(i % 16, 1.0)).collect();
-        let opts = PipelineOpts::new(2, 64, 1).unwrap();
+        let opts = PipelineOpts::new(2, 64).unwrap();
         let (states, metrics) = run_sharded(&stream, opts, |w| {
             let mut slept = false;
             FnSink::new(move |_e: &Element| {
@@ -743,9 +741,9 @@ mod tests {
 
     #[test]
     fn invalid_opts_rejected() {
-        assert!(PipelineOpts::new(0, 1, 1).is_err());
-        assert!(PipelineOpts::new(1, 0, 1).is_err());
-        assert!(PipelineOpts::new(1, 1, 0).is_err());
+        assert!(PipelineOpts::new(0, 1).is_err());
+        assert!(PipelineOpts::new(1, 0).is_err());
+        assert!(PipelineOpts::new(1, 1).is_ok());
     }
 
     #[test]
@@ -753,7 +751,7 @@ mod tests {
         // long stream, small blocks: after each worker's first fill, the
         // same SoA allocation must be recycled for every later block
         let stream: Vec<Element> = (0..100_000u64).map(|i| Element::new(i % 8, 1.0)).collect();
-        let opts = PipelineOpts::new(2, 128, 2).unwrap();
+        let opts = PipelineOpts::new(2, 128).unwrap();
         let (_, metrics) = run_sharded(&stream, opts, |_| {
             FnSink::new(|_e: &Element| {})
         })

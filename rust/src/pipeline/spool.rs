@@ -268,7 +268,7 @@ mod tests {
             .with_seed(5)
             .with_domain(300)
             .with_sketch_shape(7, 1024);
-        let c = Coordinator::new(cfg, PipelineOpts::new(2, 128, 4).unwrap());
+        let c = Coordinator::new(cfg, PipelineOpts::new(2, 128).unwrap());
         let (a, _) = c.two_pass(&spool).unwrap();
         let (b, _) = c.two_pass(&VecSource(elems)).unwrap();
         assert_eq!(a.keys(), b.keys());

@@ -97,7 +97,7 @@ impl ExactWor {
             0.0
         };
         scored.truncate(k);
-        Sample { entries: scored, tau, p: self.cfg.p, dist: t.dist() }
+        Sample { entries: scored, tau, p: self.cfg.p, dist: t.dist(), names: None }
     }
 }
 

@@ -19,6 +19,14 @@ pub mod worp_strings;
 pub mod wr;
 
 use crate::util::hashing::BottomKDist;
+use std::collections::BTreeMap;
+
+/// Key dictionary: hashed key id → original string key. String-keyed
+/// samplers ([`worp_strings`]) carry one alongside their entries so
+/// string results flow through the same [`Sample`] query / estimate /
+/// encode surface as numeric ones. A `BTreeMap` so iteration (and hence
+/// the canonical wire encoding) is key-sorted.
+pub type KeyDict = BTreeMap<u64, String>;
 
 /// One sampled key.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -43,6 +51,10 @@ pub struct Sample {
     pub p: f64,
     /// The bottom-k distribution (`Exp` = ppswor, `Uniform` = priority).
     pub dist: BottomKDist,
+    /// Optional key dictionary mapping hashed key ids back to their
+    /// original string form (populated by string-keyed samplers; `None`
+    /// for numeric streams).
+    pub names: Option<KeyDict>,
 }
 
 impl Sample {
@@ -59,6 +71,21 @@ impl Sample {
     /// The sampled key set.
     pub fn keys(&self) -> Vec<u64> {
         self.entries.iter().map(|e| e.key).collect()
+    }
+
+    /// The original string form of a sampled key id, when this sample
+    /// carries a key dictionary (see [`KeyDict`]).
+    pub fn name_of(&self, key: u64) -> Option<&str> {
+        self.names.as_ref()?.get(&key).map(String::as_str)
+    }
+
+    /// Display label of a sampled key: the dictionary string when
+    /// present, the numeric id otherwise (what the CLI tables print).
+    pub fn label_of(&self, key: u64) -> String {
+        match self.name_of(key) {
+            Some(s) => s.to_string(),
+            None => key.to_string(),
+        }
     }
 
     /// Inclusion probability of a key with frequency `freq`, conditioned
@@ -227,6 +254,7 @@ mod tests {
             tau: 2.0,
             p: 1.0,
             dist: BottomKDist::Exp,
+            names: None,
         };
         let want = 1.0 - (-0.5f64).exp();
         assert!((s.inclusion_prob(1.0) - want).abs() < 1e-12);

@@ -41,7 +41,7 @@ pub fn sample_with_transform(freqs: &[f64], k: usize, t: &BottomKTransform) -> S
         0.0
     };
     scored.truncate(k);
-    Sample { entries: scored, tau, p: t.p(), dist: t.dist() }
+    Sample { entries: scored, tau, p: t.p(), dist: t.dist(), names: None }
 }
 
 #[cfg(test)]

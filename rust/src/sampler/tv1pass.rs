@@ -361,6 +361,7 @@ impl WorSampler for TvSampler {
             tau: 0.0,
             p: self.cfg.p,
             dist: BottomKDist::Exp,
+            names: None,
         })
     }
 

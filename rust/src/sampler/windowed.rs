@@ -135,7 +135,7 @@ impl WindowedWorp {
                 transformed: est,
             })
             .collect();
-        Sample { entries, tau, p: self.cfg.p, dist: self.transform.dist() }
+        Sample { entries, tau, p: self.cfg.p, dist: self.transform.dist(), names: None }
     }
 }
 

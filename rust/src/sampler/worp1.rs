@@ -233,7 +233,7 @@ impl OnePassWorp {
                 transformed: est,
             })
             .collect();
-        Sample { entries, tau, p: self.cfg.p, dist: self.transform.dist() }
+        Sample { entries, tau, p: self.cfg.p, dist: self.transform.dist(), names: None }
     }
 }
 

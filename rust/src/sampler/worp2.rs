@@ -213,7 +213,7 @@ impl TwoPassWorpPass2 {
                 transformed: e.value * t.scale(e.key),
             })
             .collect();
-        Sample { entries, tau, p: self.cfg.p, dist: t.dist() }
+        Sample { entries, tau, p: self.cfg.p, dist: t.dist(), names: None }
     }
 
     /// The §4.1 "larger effective sample" extraction: every stored key
@@ -250,7 +250,7 @@ impl TwoPassWorpPass2 {
             .into_iter()
             .map(|(e, s)| SampleEntry { key: e.key, freq: e.value, transformed: s })
             .collect();
-        Sample { entries, tau, p: self.cfg.p, dist: t.dist() }
+        Sample { entries, tau, p: self.cfg.p, dist: t.dist(), names: None }
     }
 }
 

@@ -7,32 +7,29 @@
 //! pass II collects exact frequencies for the tracked strings; output
 //! re-ranks by exact `ν*` and cuts at k — exactly Algorithm 2 with the
 //! deterministic ℓ1 sketch.
+//!
+//! The result is the crate-wide [`Sample`] type: entries are keyed by the
+//! stable [`hash_str`] id of each string, and the sample carries a
+//! [`KeyDict`] (`u64 → String`) so the original strings survive — the
+//! same estimate ([`crate::estimate`]), query and wire-encode surface as
+//! every numeric sampler, instead of a parallel string-sample struct.
 
-use crate::transform::BottomKTransform;
+use crate::sampler::{KeyDict, Sample, SampleEntry};
 use crate::sketch::spacesaving::SpaceSaving;
+use crate::transform::BottomKTransform;
 use crate::util::hashing::hash_str;
 use std::collections::HashMap;
 
-/// One sampled string key.
-#[derive(Clone, Debug, PartialEq)]
-pub struct StringSampleEntry {
-    /// The key, in its original string form.
-    pub key: String,
-    /// Exact frequency `ν_x` (collected in pass II).
-    pub freq: f64,
-    /// Exact transformed frequency `ν*_x`.
-    pub transformed: f64,
-}
+/// Seed of the string → u64 key-id mapping (the randomizer and the
+/// sample's entry keys both derive from it, so an id in the sample and
+/// its dictionary entry always agree).
+pub const STRING_KEY_SEED: u64 = 0x57A6;
 
-/// A WOR sample of string keys with threshold.
-#[derive(Clone, Debug)]
-pub struct StringSample {
-    /// Entries sorted by decreasing `transformed`.
-    pub entries: Vec<StringSampleEntry>,
-    /// Threshold `τ` (the (k+1)-st `ν*` among candidates; 0 if degenerate).
-    pub tau: f64,
-    /// The power p.
-    pub p: f64,
+/// The numeric key id of a string key — what a string-keyed [`Sample`]
+/// stores in its entries and its [`KeyDict`].
+#[inline]
+pub fn string_key_id(key: &str) -> u64 {
+    hash_str(STRING_KEY_SEED, key)
 }
 
 /// Pass-I state: SpaceSaving over the transformed stream.
@@ -59,7 +56,7 @@ impl StringWorpPass1 {
 
     /// The per-key randomizer value for a string key.
     fn scale_of(&self, key: &str) -> f64 {
-        self.transform.scale(hash_str(0x57A6, key))
+        self.transform.scale(string_key_id(key))
     }
 
     /// Process a positive element.
@@ -124,50 +121,58 @@ impl StringWorpPass2 {
         self.exact.len()
     }
 
-    /// Produce the sample: re-rank by exact `ν*`, cut at k.
-    pub fn sample(self) -> StringSample {
+    /// Produce the sample: re-rank by exact `ν*`, cut at k. The returned
+    /// [`Sample`] is keyed by [`string_key_id`] and carries the
+    /// [`KeyDict`] for the surviving entries, so it flows through the
+    /// same estimators and codecs as any numeric sample.
+    pub fn sample(self) -> Sample {
         let t = &self.transform;
-        let mut ranked: Vec<StringSampleEntry> = self
+        let mut ranked: Vec<(String, SampleEntry)> = self
             .exact
             .into_iter()
             .filter(|(_, v)| *v > 0.0)
             .map(|(key, freq)| {
-                let transformed = freq * t.scale(hash_str(0x57A6, &key));
-                StringSampleEntry { key, freq, transformed }
+                let id = string_key_id(&key);
+                let transformed = freq * t.scale(id);
+                (key, SampleEntry { key: id, freq, transformed })
             })
             .collect();
-        ranked.sort_by(|a, b| b.transformed.partial_cmp(&a.transformed).unwrap());
+        // deterministic ranking: (transformed, id) ties like the numeric
+        // samplers' rank_desc ordering
+        ranked.sort_by(|a, b| {
+            b.1.transformed
+                .partial_cmp(&a.1.transformed)
+                .unwrap()
+                .then(a.1.key.cmp(&b.1.key))
+        });
         let tau = if ranked.len() > self.k {
-            ranked[self.k].transformed
+            ranked[self.k].1.transformed
         } else {
             0.0
         };
         ranked.truncate(self.k);
-        StringSample { entries: ranked, tau, p: self.p }
-    }
-}
-
-impl StringSample {
-    /// Inverse-probability estimate of `Σ f(ν_x)` over the dataset.
-    pub fn sum_estimate<F: Fn(f64) -> f64>(&self, f: F) -> f64 {
-        if self.tau <= 0.0 {
-            return self.entries.iter().map(|e| f(e.freq)).sum();
-        }
-        // ppswor inclusion: x ∈ S ⇔ ν_x r_x^{-1/p} ≥ τ ⇔ r_x ≤ (ν_x/τ)^p,
-        // so Pr = 1 − exp(−(ν_x/τ)^p) with τ on the transformed scale
-        self.entries
-            .iter()
-            .map(|e| {
-                let ratio = (e.freq / self.tau).powf(self.p);
-                f(e.freq) / (1.0 - (-ratio).exp())
+        let mut names = KeyDict::new();
+        let entries = ranked
+            .into_iter()
+            .map(|(key, entry)| {
+                names.insert(entry.key, key);
+                entry
             })
-            .sum()
+            .collect();
+        Sample {
+            entries,
+            tau,
+            p: self.p,
+            dist: crate::util::hashing::BottomKDist::Exp,
+            names: Some(names),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::estimate::sum_statistic;
 
     fn corpus() -> Vec<(String, f64)> {
         // 60 words with zipfian counts
@@ -176,7 +181,7 @@ mod tests {
             .collect()
     }
 
-    fn run_two_pass(k: usize, seed: u64) -> StringSample {
+    fn run_two_pass(k: usize, seed: u64) -> Sample {
         let data = corpus();
         let mut p1 = StringWorpPass1::new(1.0, k, 8 * k, seed);
         for (w, c) in &data {
@@ -200,9 +205,11 @@ mod tests {
         assert_eq!(s.entries.len(), 10);
         assert!(s.tau > 0.0);
         for e in &s.entries {
-            let i: usize = e.key[4..].parse().unwrap();
+            let word = s.name_of(e.key).expect("dictionary entry for every key");
+            assert_eq!(string_key_id(word), e.key);
+            let i: usize = word[4..].parse().unwrap();
             let want = 1000.0 / (i + 1) as f64;
-            assert!((e.freq - want).abs() < 1e-9, "{}: {} vs {want}", e.key, e.freq);
+            assert!((e.freq - want).abs() < 1e-9, "{word}: {} vs {want}", e.freq);
         }
     }
 
@@ -217,20 +224,28 @@ mod tests {
         let t = BottomKTransform::ppswor(seed, 1.0);
         let mut want: Vec<(String, f64)> = data
             .iter()
-            .map(|(w, c)| (w.clone(), c * t.scale(hash_str(0x57A6, w))))
+            .map(|(w, c)| (w.clone(), c * t.scale(string_key_id(w))))
             .collect();
         want.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         let want_keys: Vec<String> = want.into_iter().take(k).map(|(w, _)| w).collect();
-        let got_keys: Vec<String> = s.entries.iter().map(|e| e.key.clone()).collect();
+        let got_keys: Vec<String> = s
+            .entries
+            .iter()
+            .map(|e| s.name_of(e.key).unwrap().to_string())
+            .collect();
         assert_eq!(got_keys, want_keys);
     }
 
     #[test]
-    fn sum_estimates_reasonable() {
+    fn sum_estimates_reasonable_through_the_unified_surface() {
+        // string samples use the SAME estimator path as numeric ones
         let data = corpus();
         let truth: f64 = data.iter().map(|(_, c)| c).sum();
         let ests: Vec<f64> = (0..200)
-            .map(|seed| run_two_pass(20, seed).sum_estimate(|v| v))
+            .map(|seed| {
+                let s = run_two_pass(20, seed);
+                sum_statistic(&s, &|v| v, &|_| 1.0)
+            })
             .collect();
         let m = crate::util::stats::mean(&ests);
         assert!((m - truth).abs() / truth < 0.1, "mean {m} truth {truth}");
@@ -260,9 +275,17 @@ mod tests {
         }
         let sa = p2a.sample();
         let sw = p2w.sample();
-        let ka: Vec<&String> = sa.entries.iter().map(|e| &e.key).collect();
-        let kw: Vec<&String> = sw.entries.iter().map(|e| &e.key).collect();
-        assert_eq!(ka, kw);
+        assert_eq!(sa.keys(), sw.keys());
+        assert_eq!(sa.names, sw.names);
+    }
+
+    #[test]
+    fn labels_fall_back_to_numeric_ids() {
+        let s = run_two_pass(5, 11);
+        let e = &s.entries[0];
+        assert_eq!(s.label_of(e.key), s.name_of(e.key).unwrap());
+        // an id outside the dictionary prints numerically
+        assert_eq!(s.label_of(12345), "12345");
     }
 
     #[test]

@@ -36,7 +36,7 @@ fn cfg(seed: u64) -> SamplerConfig {
 #[test]
 fn killed_run_resumes_bit_identical_for_exact_summary() {
     let elems = zipf_exact_stream(300, 1.2, 1e4, 3, 11);
-    let opts = PipelineOpts::new(3, 64, 4).unwrap();
+    let opts = PipelineOpts::new(3, 64).unwrap();
     let policy = CheckpointPolicy::new(2, tmp("exact")).unwrap();
     let proto = |_w: usize| ExactWor::new(cfg(7));
 
@@ -70,7 +70,7 @@ fn killed_run_resumes_bit_identical_for_exact_summary() {
 #[test]
 fn killed_run_resumes_bit_identical_for_sketch_and_worp1() {
     let elems = zipf_exact_stream(300, 1.0, 1e4, 3, 13);
-    let opts = PipelineOpts::new(2, 32, 4).unwrap();
+    let opts = PipelineOpts::new(2, 32).unwrap();
 
     // linear sketch
     let policy = CheckpointPolicy::new(3, tmp("sketch")).unwrap();
@@ -103,7 +103,7 @@ fn repeated_crashes_still_converge() {
     // crash after every few batches, many times over — each resume picks
     // up from the latest snapshot and the final state is still exact
     let elems: Vec<Element> = (0..4000u64).map(|i| Element::new(i % 97, 1.0)).collect();
-    let opts = PipelineOpts::new(2, 16, 2).unwrap();
+    let opts = PipelineOpts::new(2, 16).unwrap();
     let policy = CheckpointPolicy::new(1, tmp("repeated")).unwrap();
     let proto = |_w: usize| ExactWor::new(cfg(23));
     for frac in [2usize, 3, 5, 7] {
@@ -134,11 +134,11 @@ fn coordinator_run_dyn_with_checkpoints_matches_plain_run() {
         let dir = tmp(&format!("dyn_{}", method.name()));
         let plain = Coordinator::new(
             builder.sampler_config().unwrap(),
-            PipelineOpts::new(3, 64, 4).unwrap(),
+            PipelineOpts::new(3, 64).unwrap(),
         );
         let ck = Coordinator::new(
             builder.sampler_config().unwrap(),
-            PipelineOpts::new(3, 64, 4).unwrap(),
+            PipelineOpts::new(3, 64).unwrap(),
         )
         .with_checkpoints(CheckpointPolicy::new(2, &dir).unwrap());
         let proto = builder.clone().method(method).build().unwrap();
@@ -170,7 +170,7 @@ fn topology_invariance_holds_with_checkpointing_on() {
             .unwrap()
     };
     let reference: Vec<u64> = {
-        let c = Coordinator::new(cfg(0xABC), PipelineOpts::new(1, 64, 2).unwrap());
+        let c = Coordinator::new(cfg(0xABC), PipelineOpts::new(1, 64).unwrap());
         c.run_dyn(&VecSource(elems.clone()), proto()).unwrap().0.keys()
     };
     // batch sizes kept well under the per-shard element count: snapshots
@@ -178,7 +178,7 @@ fn topology_invariance_holds_with_checkpointing_on() {
     // output is invariant *while* checkpointing is actually active
     for (workers, batch) in [(2usize, 32usize), (3, 61), (4, 32)] {
         let dir = tmp(&format!("topo_{workers}_{batch}"));
-        let c = Coordinator::new(cfg(0xABC), PipelineOpts::new(workers, batch, 4).unwrap())
+        let c = Coordinator::new(cfg(0xABC), PipelineOpts::new(workers, batch).unwrap())
             .with_checkpoints(CheckpointPolicy::new(2, &dir).unwrap());
         let (s, m) = c.run_dyn(&VecSource(elems.clone()), proto()).unwrap();
         assert_eq!(s.keys(), reference, "workers={workers} batch={batch}");
@@ -191,7 +191,7 @@ fn run_summary_checkpointed_resumes_through_the_coordinator() {
     let elems = zipf_exact_stream(300, 1.2, 1e4, 2, 29);
     let dir = tmp("run_summary");
     let make_coord = || {
-        Coordinator::new(cfg(5), PipelineOpts::new(2, 32, 4).unwrap())
+        Coordinator::new(cfg(5), PipelineOpts::new(2, 32).unwrap())
             .with_checkpoints(CheckpointPolicy::new(2, &dir).unwrap())
     };
     let cut = elems.len() / 2;
@@ -202,7 +202,7 @@ fn run_summary_checkpointed_resumes_through_the_coordinator() {
         .run_summary_checkpointed(&elems, ExactWor::new(cfg(5)))
         .unwrap();
     assert!(m.restores() > 0);
-    let plain = Coordinator::new(cfg(5), PipelineOpts::new(2, 32, 4).unwrap());
+    let plain = Coordinator::new(cfg(5), PipelineOpts::new(2, 32).unwrap());
     let (reference, _) = plain.run_summary(&elems, ExactWor::new(cfg(5))).unwrap();
     assert_eq!(resumed.encode(), reference.encode());
     assert_eq!(

@@ -38,7 +38,7 @@ fn moment_estimates_from_pipeline_are_consistent() {
     let src = VecSource(elems);
     let ests: Vec<f64> = (0..40)
         .map(|seed| {
-            let c = Coordinator::new(cfg(1.0, 60, n, seed), PipelineOpts::new(3, 256, 8).unwrap());
+            let c = Coordinator::new(cfg(1.0, 60, n, seed), PipelineOpts::new(3, 256).unwrap());
             let (s, _) = c.two_pass(&src).unwrap();
             moment_estimate(&s, 1.0)
         })
@@ -52,7 +52,7 @@ fn generator_source_streams_without_materializing() {
     // FnSource feeds the two-pass pipeline twice from a generator
     let n = 500;
     let src = FnSource(move || ZipfStream::new(n, 1.5, 200_000, 11));
-    let c = Coordinator::new(cfg(1.0, 20, n, 5), PipelineOpts::new(2, 1024, 8).unwrap());
+    let c = Coordinator::new(cfg(1.0, 20, n, 5), PipelineOpts::new(2, 1024).unwrap());
     let (sample, metrics) = c.two_pass(&src).unwrap();
     assert_eq!(sample.len(), 20);
     assert_eq!(metrics.elements(), 200_000); // pass-II element count
@@ -60,8 +60,8 @@ fn generator_source_streams_without_materializing() {
 
 #[test]
 fn property_two_pass_invariant_to_topology() {
-    // coordinator invariant: worker count, batch size and channel depth
-    // never change the 2-pass output (composability end-to-end)
+    // coordinator invariant: worker count and batch size never change
+    // the 2-pass output (composability end-to-end)
     run("two-pass topology invariance", 6, |g: &mut Gen| {
         let n = 300;
         let k = 8;
@@ -69,18 +69,17 @@ fn property_two_pass_invariant_to_topology() {
         let elems = zipf_exact_stream(n, 1.2, 1e4, 2, seed ^ 1);
         let src = VecSource(elems);
         let reference: Vec<u64> = {
-            let c = Coordinator::new(cfg(1.0, k, n, seed), PipelineOpts::new(1, 64, 2).unwrap());
+            let c = Coordinator::new(cfg(1.0, k, n, seed), PipelineOpts::new(1, 64).unwrap());
             c.two_pass(&src).unwrap().0.keys()
         };
         let workers = g.usize_range(2, 6);
         let batch = *g.choose(&[16usize, 128, 1024]);
-        let cap = g.usize_range(1, 8);
         let c = Coordinator::new(
             cfg(1.0, k, n, seed),
-            PipelineOpts::new(workers, batch, cap).unwrap(),
+            PipelineOpts::new(workers, batch).unwrap(),
         );
         let got = c.two_pass(&src).unwrap().0.keys();
-        assert_eq!(got, reference, "workers={workers} batch={batch} cap={cap}");
+        assert_eq!(got, reference, "workers={workers} batch={batch}");
     });
 }
 
@@ -92,10 +91,10 @@ fn property_one_pass_merge_associative_across_shardings() {
         let n = 200;
         let seed = g.u64_below(1 << 40);
         let elems = zipf_exact_stream(n, 1.0, 1e3, 2, seed ^ 9);
-        let c1 = Coordinator::new(cfg(1.0, 10, n, seed), PipelineOpts::new(1, 32, 2).unwrap());
+        let c1 = Coordinator::new(cfg(1.0, 10, n, seed), PipelineOpts::new(1, 32).unwrap());
         let cn = Coordinator::new(
             cfg(1.0, 10, n, seed),
-            PipelineOpts::new(g.usize_range(2, 8), 32, 2).unwrap(),
+            PipelineOpts::new(g.usize_range(2, 8), 32).unwrap(),
         );
         let (s1, _) = c1.one_pass(&elems).unwrap();
         let (sn, _) = cn.one_pass(&elems).unwrap();
@@ -120,7 +119,7 @@ fn topology_and_batching_never_change_output() {
     for (workers, batch) in [(1usize, 32usize), (3, 32), (3, 257), (2, 4096), (3, 32)] {
         let c = Coordinator::new(
             cfg(1.0, k, n, 0xABC),
-            PipelineOpts::new(workers, batch, 4).unwrap(),
+            PipelineOpts::new(workers, batch).unwrap(),
         );
         let (s, metrics) = c.two_pass(&src).unwrap();
         assert_eq!(metrics.elements() as usize, src.0.len());
@@ -136,7 +135,7 @@ fn signed_gradient_pipeline_end_to_end() {
     // turnstile workload through the full sharded path, l2 sampling
     let n = 5_000;
     let elems: Vec<Element> = GradientStream::new(n, 1.0, 300_000, 7).collect();
-    let c = Coordinator::new(cfg(2.0, 50, n, 13), PipelineOpts::new(4, 2048, 8).unwrap());
+    let c = Coordinator::new(cfg(2.0, 50, n, 13), PipelineOpts::new(4, 2048).unwrap());
     let (sample, metrics) = c.one_pass(&elems).unwrap();
     assert_eq!(metrics.elements(), 300_000);
     assert_eq!(sample.len(), 50);
@@ -165,7 +164,7 @@ fn failure_injection_worker_panic_is_reported() {
         }
     }
     let elems: Vec<Element> = (0..1000u64).map(|i| Element::new(i % 50, 1.0)).collect();
-    let r = worp::pipeline::run_sharded(&elems, PipelineOpts::new(2, 64, 2).unwrap(), |_| Bomb);
+    let r = worp::pipeline::run_sharded(&elems, PipelineOpts::new(2, 64).unwrap(), |_| Bomb);
     match r {
         Err(e) => assert!(e.to_string().contains("pipeline")),
         Ok(_) => panic!("worker panic must surface as a pipeline error"),
@@ -175,7 +174,7 @@ fn failure_injection_worker_panic_is_reported() {
 #[test]
 fn degenerate_streams_handled() {
     // empty stream
-    let c = Coordinator::new(cfg(1.0, 5, 100, 1), PipelineOpts::new(2, 16, 2).unwrap());
+    let c = Coordinator::new(cfg(1.0, 5, 100, 1), PipelineOpts::new(2, 16).unwrap());
     let (s, m) = c.one_pass(&Vec::<Element>::new()).unwrap();
     assert_eq!(m.elements(), 0);
     assert!(s.is_empty());

@@ -1,0 +1,382 @@
+//! Engine contract suite (ISSUE 5 acceptance):
+//!
+//! 1. **Concurrent ingest ≡ offline run** — N connections feeding one
+//!    instance produce the same merged summary as a single offline
+//!    `Coordinator` run over the same stream: merge-law for every path,
+//!    *bit-identical encodes* for order-insensitive summaries, both at
+//!    the library level and through real TCP connections.
+//! 2. **Snapshot → restore → continue ≡ uninterrupted** — including
+//!    pending (unflushed) elements, over the wire.
+//! 3. **Malformed / truncated protocol frames** are answered with typed
+//!    errors and a closed connection — never a panic, never a hang, and
+//!    the server keeps serving fresh connections afterwards.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+use worp::coordinator::{Coordinator, VecSource};
+use worp::data::zipf::zipf_exact_stream;
+use worp::data::{Element, ElementBlock};
+use worp::engine::client::Client;
+use worp::engine::proto::{self, op};
+use worp::engine::server::{ServeOpts, Server};
+use worp::engine::{Engine, EngineOpts};
+use worp::pipeline::PipelineOpts;
+use worp::{Error, WorSampler, Worp};
+
+const SHARDS: usize = 3;
+const BATCH: usize = 128;
+
+fn spec(seed: u64) -> Worp {
+    Worp::p(1.0).k(16).seed(seed).domain(600).sketch_shape(7, 1024)
+}
+
+fn proto_spec(method: &str, seed: u64) -> proto::InstanceSpec {
+    let mut cfg = worp::config::PipelineConfig::default();
+    cfg.method = method.into();
+    cfg.k = 16;
+    cfg.seed = seed;
+    cfg.n = 600;
+    cfg.rows = 7;
+    cfg.width = 1024;
+    proto::InstanceSpec::from_config(&cfg)
+}
+
+fn stream() -> Vec<Element> {
+    zipf_exact_stream(600, 1.2, 1e4, 3, 21) // 1800 elements
+}
+
+fn blocks_of(elems: &[Element], chunk: usize) -> Vec<ElementBlock> {
+    elems.chunks(chunk).map(ElementBlock::from_elements).collect()
+}
+
+fn merged_encode(engine: &Engine, name: &str) -> Vec<u8> {
+    let mut out = Vec::new();
+    engine
+        .instance(name)
+        .unwrap()
+        .merged()
+        .unwrap()
+        .encode_state(&mut out);
+    out
+}
+
+fn start_server(engine: Arc<Engine>) -> Server {
+    Server::start(engine, "127.0.0.1:0", ServeOpts::default()).unwrap()
+}
+
+fn connect(srv: &Server) -> Client {
+    Client::connect(&srv.local_addr().to_string())
+        .unwrap()
+        .with_timeout(Duration::from_secs(20))
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// 1. concurrent ingest ≡ offline run
+
+#[test]
+fn concurrent_ingest_equals_offline_run_bit_identical() {
+    // the exact baseline is ingest-order-insensitive per key, so with
+    // key-disjoint connections the merged state must be BIT-identical to
+    // one offline pass — the merge law with no tolerance at all
+    let elems = stream();
+    let conns = 4;
+    let w = spec(5).exact();
+    let engine = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    engine.create("live", &w).unwrap();
+    engine.create("offline", &w).unwrap();
+    std::thread::scope(|scope| {
+        for c in 0..conns {
+            let engine = Arc::clone(&engine);
+            let part: Vec<Element> = elems
+                .iter()
+                .filter(|e| e.key % conns as u64 == c as u64)
+                .copied()
+                .collect();
+            scope.spawn(move || {
+                for b in blocks_of(&part, 97) {
+                    engine.ingest("live", &b).unwrap();
+                }
+            });
+        }
+    });
+    engine.flush("live").unwrap();
+    let m = engine.ingest_source("offline", &elems).unwrap();
+    assert_eq!(m.elements() as usize, elems.len());
+    assert_eq!(
+        merged_encode(&engine, "live"),
+        merged_encode(&engine, "offline"),
+        "4 concurrent connections must merge to the offline summary bit-for-bit"
+    );
+    // ... and the offline engine path is the coordinator path
+    let coord = Coordinator::new(
+        w.sampler_config().unwrap(),
+        PipelineOpts::new(SHARDS, BATCH).unwrap(),
+    );
+    let (coord_sample, _) = coord
+        .run_dyn(&VecSource(elems), w.build().unwrap())
+        .unwrap();
+    let live = engine.sample("live").unwrap();
+    assert_eq!(live.entries, coord_sample.entries);
+    assert_eq!(live.tau.to_bits(), coord_sample.tau.to_bits());
+}
+
+#[test]
+fn concurrent_wire_ingest_equals_offline_run() {
+    // the same law through real TCP connections
+    let elems = stream();
+    let conns = 3;
+    let engine = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    let srv = start_server(Arc::clone(&engine));
+    connect(&srv).create("wire", &proto_spec("exact", 5)).unwrap();
+    std::thread::scope(|scope| {
+        for c in 0..conns {
+            let part: Vec<Element> = elems
+                .iter()
+                .filter(|e| e.key % conns as u64 == c as u64)
+                .copied()
+                .collect();
+            let mut client = connect(&srv);
+            scope.spawn(move || {
+                for b in blocks_of(&part, 211) {
+                    client.ingest("wire", &b).unwrap();
+                }
+            });
+        }
+    });
+    let mut client = connect(&srv);
+    client.flush("wire").unwrap();
+    assert_eq!(client.stats("wire").unwrap().processed as usize, elems.len());
+
+    let w = spec(5).exact();
+    let coord = Coordinator::new(
+        w.sampler_config().unwrap(),
+        PipelineOpts::new(SHARDS, BATCH).unwrap(),
+    );
+    let (offline, _) = coord.run_dyn(&VecSource(elems), w.build().unwrap()).unwrap();
+    let served = client.sample("wire").unwrap();
+    assert_eq!(served.entries, offline.entries);
+    assert_eq!(served.tau.to_bits(), offline.tau.to_bits());
+}
+
+#[test]
+fn sequential_served_one_pass_is_bit_identical_to_offline() {
+    // worp1 is block-boundary sensitive, so this holds only because the
+    // engine reproduces the offline per-shard boundaries exactly —
+    // through the whole network stack, with frame chunking (1000) that
+    // is deliberately unaligned with the engine batch (128)
+    let elems = stream();
+    let engine = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    let srv = start_server(Arc::clone(&engine));
+    let mut client = connect(&srv);
+    client.create("seq", &proto_spec("1pass", 5)).unwrap();
+    for b in blocks_of(&elems, 1000) {
+        client.ingest("seq", &b).unwrap();
+    }
+    client.flush("seq").unwrap();
+    let served = client.sample("seq").unwrap();
+
+    let w = spec(5);
+    let coord = Coordinator::new(
+        w.sampler_config().unwrap(),
+        PipelineOpts::new(SHARDS, BATCH).unwrap(),
+    );
+    let (offline, _) = coord.run_dyn(&VecSource(elems), w.build().unwrap()).unwrap();
+    assert_eq!(served.entries, offline.entries);
+    assert_eq!(served.tau.to_bits(), offline.tau.to_bits());
+}
+
+#[test]
+fn served_two_pass_advances_like_the_coordinator() {
+    let elems = stream();
+    let engine = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    let srv = start_server(Arc::clone(&engine));
+    let mut client = connect(&srv);
+    client.create("tp", &proto_spec("2pass", 7)).unwrap();
+    for b in blocks_of(&elems, 500) {
+        client.ingest("tp", &b).unwrap();
+    }
+    client.flush("tp").unwrap();
+    // mid-run sampling is a typed state error over the wire
+    assert!(matches!(client.sample("tp"), Err(Error::State(_))));
+    assert_eq!(client.advance("tp").unwrap(), 1);
+    for b in blocks_of(&elems, 500) {
+        client.ingest("tp", &b).unwrap();
+    }
+    client.flush("tp").unwrap();
+    let served = client.sample("tp").unwrap();
+
+    let w = spec(7).two_pass();
+    let coord = Coordinator::new(
+        w.sampler_config().unwrap(),
+        PipelineOpts::new(SHARDS, BATCH).unwrap(),
+    );
+    let (offline, _) = coord.run_dyn(&VecSource(elems), w.build().unwrap()).unwrap();
+    assert_eq!(served.entries, offline.entries);
+    assert_eq!(served.tau.to_bits(), offline.tau.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// 2. snapshot → restore → continue ≡ uninterrupted
+
+#[test]
+fn wire_snapshot_restore_continue_equals_uninterrupted() {
+    let elems = stream();
+    let (head, tail) = elems.split_at(777); // mid-block: pending travels too
+    let engine_a = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    let srv_a = start_server(Arc::clone(&engine_a));
+    let mut ca = connect(&srv_a);
+    ca.create("mv", &proto_spec("1pass", 11)).unwrap();
+    for b in blocks_of(head, 250) {
+        ca.ingest("mv", &b).unwrap();
+    }
+    let snap = ca.snapshot("mv").unwrap();
+
+    // move the instance to a second server and finish the stream there
+    let engine_b = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    let srv_b = start_server(Arc::clone(&engine_b));
+    let mut cb = connect(&srv_b);
+    assert_eq!(cb.restore(&snap).unwrap(), "mv");
+    for b in blocks_of(tail, 250) {
+        cb.ingest("mv", &b).unwrap();
+    }
+    cb.flush("mv").unwrap();
+
+    // the reference never stopped
+    engine_b.create_from_proto("ref", spec(11).build().unwrap()).unwrap();
+    for b in blocks_of(&elems, 250) {
+        engine_b.ingest("ref", &b).unwrap();
+    }
+    engine_b.flush("ref").unwrap();
+    assert_eq!(
+        merged_encode(&engine_b, "mv"),
+        merged_encode(&engine_b, "ref"),
+        "snapshot -> restore -> continue must be bit-identical to never stopping"
+    );
+    // restoring over a live name is refused with a typed error
+    assert!(matches!(cb.restore(&snap), Err(Error::Config(_))));
+}
+
+// ---------------------------------------------------------------------------
+// 3. malformed frames: typed errors, no panic, no hang
+
+/// Read one response frame off a raw socket (20 s cap so a hung server
+/// fails the test instead of wedging it).
+fn read_resp(stream: &mut TcpStream) -> worp::Result<Option<proto::Frame>> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    proto::read_frame(stream, proto::DEFAULT_MAX_FRAME)
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_never_a_panic_or_hang() {
+    let engine = Arc::new(Engine::new(EngineOpts::new(2, 64).unwrap()));
+    let srv = start_server(Arc::clone(&engine));
+    let addr = srv.local_addr().to_string();
+
+    // (a) garbage magic: one typed error frame, then the connection closes
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"NOPE-not-a-frame-at-all-xxxxxxxx").unwrap();
+        let f = read_resp(&mut s).unwrap().expect("an error frame");
+        assert_eq!(f.opcode, proto::RESP_ERR);
+        assert!(matches!(proto::decode_error(&f.payload), Error::Codec(_)));
+        assert!(matches!(read_resp(&mut s), Ok(None) | Err(_)), "connection must close");
+    }
+
+    // (b) frame truncated mid-header: error frame (or clean close), no hang
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, op::PING, b"");
+        s.write_all(&buf[..10]).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let f = read_resp(&mut s).unwrap().expect("an error frame");
+        assert_eq!(f.opcode, proto::RESP_ERR);
+        assert!(matches!(proto::decode_error(&f.payload), Error::Codec(_)));
+    }
+
+    // (c) checksum flip: typed error
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, op::LIST, b"");
+        buf[20] ^= 0xFF; // inside the checksum field
+        s.write_all(&buf).unwrap();
+        let f = read_resp(&mut s).unwrap().expect("an error frame");
+        assert_eq!(f.opcode, proto::RESP_ERR);
+        assert!(matches!(proto::decode_error(&f.payload), Error::Codec(_)));
+    }
+
+    // (d) absurd length field: refused before any allocation
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, op::PING, b"");
+        buf[8..16].copy_from_slice(&(u64::MAX).to_le_bytes());
+        s.write_all(&buf).unwrap();
+        let f = read_resp(&mut s).unwrap().expect("an error frame");
+        assert_eq!(f.opcode, proto::RESP_ERR);
+    }
+
+    // (e) a well-framed but unknown opcode errors AND keeps the
+    // connection usable (framing was fine)
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, 0x0666, b"");
+        s.write_all(&buf).unwrap();
+        let f = read_resp(&mut s).unwrap().expect("an error frame");
+        assert_eq!(f.opcode, proto::RESP_ERR);
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, op::PING, b"");
+        s.write_all(&buf).unwrap();
+        let f = read_resp(&mut s).unwrap().expect("ping still answered");
+        assert_eq!(f.opcode, proto::resp_ok(op::PING));
+    }
+
+    // (f) a malformed *payload* in a valid frame is a typed error, and
+    // the connection survives
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, op::SAMPLE, &[0xFF; 3]); // truncated name
+        s.write_all(&buf).unwrap();
+        let f = read_resp(&mut s).unwrap().expect("an error frame");
+        assert_eq!(f.opcode, proto::RESP_ERR);
+        assert!(matches!(proto::decode_error(&f.payload), Error::Codec(_)));
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, op::PING, b"");
+        s.write_all(&buf).unwrap();
+        assert_eq!(read_resp(&mut s).unwrap().unwrap().opcode, proto::resp_ok(op::PING));
+    }
+
+    // after all that abuse, the server still serves fresh clients
+    let mut c = connect(&srv);
+    c.ping().unwrap();
+    assert!(c.list().unwrap().is_empty());
+}
+
+#[test]
+fn engine_errors_cross_the_wire_typed() {
+    let engine = Arc::new(Engine::new(EngineOpts::new(2, 64).unwrap()));
+    let srv = start_server(Arc::clone(&engine));
+    let mut c = connect(&srv);
+    // unknown instance
+    assert!(matches!(c.sample("nope"), Err(Error::Config(_))));
+    assert!(matches!(c.flush("nope"), Err(Error::Config(_))));
+    // duplicate create
+    c.create("dup", &proto_spec("exact", 1)).unwrap();
+    assert!(matches!(c.create("dup", &proto_spec("exact", 1)), Err(Error::Config(_))));
+    // invalid spec (p out of range) — rejected by the shared validation
+    let mut bad = proto_spec("1pass", 1);
+    bad.p = 9.0;
+    assert!(matches!(c.create("badp", &bad), Err(Error::Config(_))));
+    // advancing a single-pass summary is a state error
+    assert!(matches!(c.advance("dup"), Err(Error::State(_))));
+    // bad name
+    assert!(matches!(c.create("bad name", &proto_spec("exact", 1)), Err(Error::Config(_))));
+}

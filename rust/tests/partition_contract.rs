@@ -90,7 +90,7 @@ fn topology_grid() -> Vec<PipelineOpts> {
     let mut grid = Vec::new();
     for workers in [1usize, 2, 3, 5] {
         for batch in [1usize, 7, 64, 1000, 100_000] {
-            grid.push(PipelineOpts::new(workers, batch, 4).unwrap());
+            grid.push(PipelineOpts::new(workers, batch).unwrap());
         }
     }
     grid
@@ -169,7 +169,7 @@ fn generator_and_vec_sources_agree() {
     // the same stream through a materialized Vec and through a per-worker
     // regenerating ScanFn must land in identical shard states
     let n = 20_000u64;
-    let opts = PipelineOpts::new(3, 256, 4).unwrap();
+    let opts = PipelineOpts::new(3, 256).unwrap();
     let make = |_w: usize| CountSketch::new(SketchParams::new(5, 64, 21));
     let vec_stream: Vec<Element> = ZipfStream::new(400, 1.0, n, 17).collect();
     let (from_vec, _) = run_sharded(&vec_stream, opts, make).unwrap();
@@ -185,14 +185,14 @@ fn generator_and_vec_sources_agree() {
 fn degenerate_topologies() {
     // empty stream: every worker returns its pristine state
     let empty: Vec<Element> = Vec::new();
-    let opts = PipelineOpts::new(4, 16, 2).unwrap();
+    let opts = PipelineOpts::new(4, 16).unwrap();
     let (states, metrics) = run_sharded(&empty, opts, |_| TraceSink::default()).unwrap();
     assert_eq!(metrics.elements(), 0);
     assert!(states.iter().all(|s| s.elems.is_empty()));
 
     // more workers than distinct keys: idle shards stay empty, totals add
     let stream: Vec<Element> = (0..100u64).map(|_| Element::new(1, 1.0)).collect();
-    let opts = PipelineOpts::new(8, 7, 2).unwrap();
+    let opts = PipelineOpts::new(8, 7).unwrap();
     let reference = reference_router(&stream, opts, |_| TraceSink::default());
     let (parallel, _) = run_sharded(&stream, opts, |_| TraceSink::default()).unwrap();
     for (r, p) in reference.iter().zip(&parallel) {

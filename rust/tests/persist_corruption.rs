@@ -289,7 +289,7 @@ fn checkpoint_file_corruption_is_rejected() {
     let dir = std::env::temp_dir().join("worp_corrupt_ckpt_test");
     let _ = std::fs::remove_dir_all(&dir);
     let policy = CheckpointPolicy::new(2, &dir).unwrap();
-    let opts = PipelineOpts::new(2, 16, 4).unwrap();
+    let opts = PipelineOpts::new(2, 16).unwrap();
     let elems: Vec<Element> = (0..500u64).map(|i| Element::new(i % 40, 1.0)).collect();
     let proto = |_w: usize| CountSketch::with_shape(3, 32, 9);
     let (_, metrics) =
@@ -316,7 +316,7 @@ fn checkpoint_file_corruption_is_rejected() {
     // a snapshot from a different topology is Incompatible, not silent
     let _ = std::fs::remove_dir_all(&dir);
     let (_, _) = run_sharded_checkpointed(&elems, opts, &policy, proto).unwrap();
-    let other_opts = PipelineOpts::new(2, 32, 4).unwrap(); // different batch
+    let other_opts = PipelineOpts::new(2, 32).unwrap(); // different batch
     let err =
         run_sharded_checkpointed(&elems, other_opts, &policy, proto).unwrap_err();
     assert!(matches!(err, worp::Error::Incompatible(_)), "{err}");
