@@ -1,14 +1,14 @@
 #!/usr/bin/env python3
 """Render the worp perf artifact (BENCH_PR*.json) as a markdown table.
 
-The artifact is emitted by `worp bench [--smoke] --out BENCH_PR4.json`
+The artifact is emitted by `worp bench [--smoke] --out BENCH_PR6.json`
 (or `cargo bench --bench throughput`); each summary carries a record per
 ingestion mode — "scalar" (per-element `process`), "batch" (AoS
 `process_batch`) and, from PR 4 on, "block" (SoA `process_block`). This
 script pivots the records into one row per summary with speedup columns,
 ready to paste into the README's Performance section.
 
-Usage: python3 python/bench_table.py rust/BENCH_PR4.json [more.json ...]
+Usage: python3 python/bench_table.py rust/BENCH_PR6.json [more.json ...]
 """
 
 import json

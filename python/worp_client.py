@@ -57,6 +57,17 @@ OP_RANK_FREQ = 10
 OP_STATS = 11
 OP_SNAPSHOT = 12
 OP_RESTORE = 13
+OP_QUERY_RAW = 14
+OP_STATS_ALL = 15
+OP_SLICE_SNAPSHOT = 16
+OP_SLICE_INSTALL = 17
+OP_SLICE_DROP = 18
+
+# cluster placement constants (mirror rust/src/cluster/spec.rs and
+# rust/src/pipeline/shard.rs — any client must compute the same routing)
+ROUTER_SEED = 0x5A4D0C95
+CLUSTER_HRW_SEED = 0xC1A57E2511CE5EED
+CLUSTER_STAMP_SEED = 0xC1A57E2557A39B0D
 
 ERROR_KINDS = {
     1: "config",
@@ -94,6 +105,40 @@ def hash_bytes2(seed, a, b=b""):
             h ^= byte
             h = (h * 0x00000100000001B3) & MASK64
     return _mix64(h ^ _rotl(seed, 17))
+
+
+def hash64(seed, key):
+    """Two SplitMix64 finalizer rounds — bit-identical to
+    util::hashing::hash64 (the u64-key shard-routing hash)."""
+    h = (seed ^ 0x9E3779B97F4A7C15) & MASK64
+    h = _mix64(h ^ key)
+    return _mix64((h + 0x6A09E667F3BCC909) & MASK64 ^ _rotl(key, 32))
+
+
+# --- cluster placement (mirror cluster/spec.rs + pipeline/shard.rs) ---------
+
+
+def route(key, slices):
+    """The hash slice a u64 key belongs to — identical to
+    pipeline::shard::Router::route, so any client routes rows to the
+    same slice the serving engines partition by."""
+    return (hash64(ROUTER_SEED, key) * slices) >> 64
+
+
+def hrw_owner(slice_index, member_names):
+    """The member owning a slice: highest rendezvous score, ties broken
+    toward the lexicographically smaller name — identical to
+    cluster::ClusterSpec::owner_of."""
+    seed = (CLUSTER_HRW_SEED ^ (slice_index * 0x9E3779B97F4A7C15)) & MASK64
+    # max score wins; on a tie the smaller name wins — max() returns the
+    # first maximal element, so scan the names in ascending order
+    return max(sorted(member_names), key=lambda n: hash_bytes2(seed, n.encode()))
+
+
+def cluster_stamp(name, slices):
+    """The cluster identity stamp (name + slice count, NOT membership) —
+    identical to cluster::ClusterSpec::stamp."""
+    return hash_bytes2(CLUSTER_STAMP_SEED, name.encode(), struct.pack("<Q", slices))
 
 
 # --- framing ----------------------------------------------------------------
@@ -184,6 +229,7 @@ def _read_info(r):
     name, method = r.string(), r.string()
     keys = (
         "shards",
+        "total_slices",
         "batch",
         "processed",
         "pending",
@@ -197,6 +243,21 @@ def _read_info(r):
     for k in keys:
         info[k] = r.u64()
     return info
+
+
+def _read_server_stats(r):
+    keys = (
+        "elements",
+        "batches",
+        "merges",
+        "snapshots",
+        "restores",
+        "active_connections",
+        "total_connections",
+    )
+    stats = {k: r.u64() for k in keys}
+    stats["instances"] = [_read_info(r) for _ in range(r.u64())]
+    return stats
 
 
 # --- the client -------------------------------------------------------------
@@ -329,6 +390,25 @@ class Client:
         r.finish()
         return name
 
+    def query_raw(self, name):
+        """The cluster scatter query: (total_slices, [(slice, envelope)])
+        — every slice this node owns, as raw sampler envelopes."""
+        r = self._call(OP_QUERY_RAW, _put_str(name))
+        total = r.u64()
+        slices = []
+        for _ in range(r.u64()):
+            s = r.u64()
+            slices.append((s, r.take(r.u64())))
+        r.finish()
+        return total, slices
+
+    def stats_all(self):
+        """Whole-server counters plus every instance's stats."""
+        r = self._call(OP_STATS_ALL)
+        stats = _read_server_stats(r)
+        r.finish()
+        return stats
+
 
 # --- CLI / self-test --------------------------------------------------------
 
@@ -370,15 +450,99 @@ def selftest(client):
     )
 
 
+def _parse_nodes(nodes_arg):
+    """Parse "a=host:port,b=host:port" into an ordered {name: (host, port)}."""
+    members = {}
+    for part in nodes_arg.split(","):
+        name, _, addr = part.strip().partition("=")
+        host, _, port = addr.rpartition(":")
+        if not name or not port:
+            raise SystemExit(f"bad --nodes entry {part!r} (want name=host:port)")
+        members[name] = (host or "127.0.0.1", int(port))
+    return members
+
+
+def cluster_selftest(nodes_arg, slices):
+    """Deterministic cluster session against N running cluster members:
+    route a known stream client-side by the shared hash placement, ingest
+    each row on its owner, and verify that (a) every member accepted
+    exactly the rows predicted for its slices, (b) the scattered raw
+    query covers every slice exactly once with consistent totals — i.e.
+    the Python client computes the same placement as the Rust engines."""
+    members = _parse_nodes(nodes_arg)
+    names = list(members)
+    name = "smoke/py-cluster"
+    elems = [(k * 2654435761 % 100_000, float(k % 9) + 0.25) for k in range(600)]
+    routed = {n: [] for n in names}
+    for key, val in elems:
+        owner = hrw_owner(route(key, slices), names)
+        routed[owner].append((key, val))
+
+    clients = {n: Client(*members[n]) for n in names}
+    try:
+        for c in clients.values():
+            try:
+                c.drop(name)
+            except WorpError:
+                pass
+        for c in clients.values():
+            c.create(name, method="exact", k=32, seed=11)
+        for n, c in clients.items():
+            if routed[n]:
+                accepted = c.ingest(name, routed[n])
+                assert accepted == len(routed[n]), (n, accepted, len(routed[n]))
+            c.flush(name)
+
+        covered = {}
+        for n, c in clients.items():
+            total, parts = c.query_raw(name)
+            assert total == slices, (n, total, slices)
+            stats = c.stats_all()
+            inst = next(i for i in stats["instances"] if i["name"] == name)
+            assert inst["total_slices"] == slices, inst
+            assert inst["accepted"] == len(routed[n]), (n, inst["accepted"])
+            for s, env in parts:
+                assert env[:4] == b"WORP", env[:4]
+                assert s not in covered, f"slice {s} on both {covered.get(s)} and {n}"
+                covered[s] = n
+        assert set(covered) == set(range(slices)), sorted(set(range(slices)) - set(covered))
+        for c in clients.values():
+            c.drop(name)
+    finally:
+        for c in clients.values():
+            c.close()
+    print(
+        f"cluster selftest ok: {len(elems)} rows over {len(names)} members, "
+        f"{slices} slices all covered, per-node accepted counts match the "
+        f"client-side placement"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description="worp serve protocol client")
     ap.add_argument("--addr", default="127.0.0.1:7070", help="host:port of worp serve")
     ap.add_argument(
+        "--nodes",
+        default="",
+        help="cluster members as name=host:port,... (cluster-selftest only)",
+    )
+    ap.add_argument(
+        "--slices", type=int, default=16, help="cluster slice count (cluster-selftest only)"
+    )
+    ap.add_argument(
         "action",
-        choices=["ping", "list", "selftest"],
-        help="ping | list | selftest (deterministic end-to-end session)",
+        choices=["ping", "list", "stats-all", "selftest", "cluster-selftest"],
+        help=(
+            "ping | list | stats-all | selftest (deterministic end-to-end session) "
+            "| cluster-selftest (verify shared placement against N members)"
+        ),
     )
     args = ap.parse_args()
+    if args.action == "cluster-selftest":
+        if not args.nodes:
+            raise SystemExit("cluster-selftest needs --nodes name=host:port,...")
+        cluster_selftest(args.nodes, args.slices)
+        return 0
     host, _, port = args.addr.rpartition(":")
     with Client(host or "127.0.0.1", int(port)) as client:
         if args.action == "ping":
@@ -387,9 +551,25 @@ def main():
         elif args.action == "list":
             for i in client.list():
                 print(
-                    f"{i['name']}: method={i['method']} shards={i['shards']} "
+                    f"{i['name']}: method={i['method']} "
+                    f"slices={i['shards']}/{i['total_slices']} "
                     f"pass={i['pass'] + 1}/{i['passes']} processed={i['processed']} "
                     f"pending={i['pending']}"
+                )
+        elif args.action == "stats-all":
+            s = client.stats_all()
+            print(
+                f"server: elements={s['elements']} batches={s['batches']} "
+                f"merges={s['merges']} snapshots={s['snapshots']} "
+                f"restores={s['restores']} connections={s['active_connections']} "
+                f"(lifetime {s['total_connections']})"
+            )
+            for i in s["instances"]:
+                print(
+                    f"  {i['name']}: method={i['method']} "
+                    f"slices={i['shards']}/{i['total_slices']} "
+                    f"processed={i['processed']} pending={i['pending']} "
+                    f"accepted={i['accepted']}"
                 )
         else:
             selftest(client)

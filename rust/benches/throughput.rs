@@ -128,12 +128,12 @@ fn main() {
     // ---- machine-readable scalar/batch/block suite (perf trajectory)
     // runs before the XLA section, which early-returns when the PJRT
     // runtime is unavailable
-    println!("\n§Perf — scalar/batch/block suite (BENCH_PR4.json)\n");
+    println!("\n§Perf — scalar/batch/block suite (BENCH_PR6.json)\n");
     let opts = worp::perf::PerfOpts::full();
     let records = worp::perf::run_suite(&opts);
-    match worp::perf::write_json("BENCH_PR4.json", &opts, &records) {
-        Ok(()) => println!("\nwrote {} records to BENCH_PR4.json\n", records.len()),
-        Err(e) => println!("\n(could not write BENCH_PR4.json: {e})\n"),
+    match worp::perf::write_json("BENCH_PR6.json", &opts, &records) {
+        Ok(()) => println!("\nwrote {} records to BENCH_PR6.json\n", records.len()),
+        Err(e) => println!("\n(could not write BENCH_PR6.json: {e})\n"),
     }
 
     // ---- XLA offload (if artifacts exist)

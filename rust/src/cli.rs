@@ -129,14 +129,22 @@ COMMANDS:
                 decode per-partition summaries, verify fingerprints,
                 fold through the merge tree, and print the sample
                   --out <merged.worp>    also write the merged state
-    serve       run the long-lived multi-tenant engine over TCP
+    serve       run the long-lived multi-tenant engine over TCP;
+                SIGTERM/SIGINT drain gracefully (stop accepting, flush,
+                final snapshot, exit 0)
                   --addr <host:port>     listen address (default from the
                                          [server] config section)
                   --workers <n> --batch <n>
                                          per-instance shards / block size
+                  --max-connections <n>  concurrent connection cap (1024)
                   --checkpoint-dir <dir> --checkpoint-every <ingests>
                                          periodically snapshot every
                                          instance; restored on startup
+                  --cluster <worp.toml> --node <name>
+                                         serve as the named member of the
+                                         [cluster] section: own only the
+                                         rendezvous-assigned hash slices,
+                                         bind the member's address
     client <action>
                 talk to a running `worp serve` (--addr <host:port>):
                   ping | list
@@ -147,16 +155,28 @@ COMMANDS:
                   sample   --name <ns/x>
                   moment   --name <ns/x> --pprime <f64>
                   rankfreq --name <ns/x> --max <n>
-                  stats    --name <ns/x>
+                  stats    --name <ns/x> | stats --all (whole server)
                   snapshot --name <ns/x> --out <file.worp>
                   restore  --in <file.worp>
                   drop     --name <ns/x>
+    cluster <action>
+                drive a sharded cluster (--cluster <worp.toml> with a
+                [cluster] section; every member already serving):
+                  status                  per-member stats + placement
+                  create   --name <ns/x>  on every member (sampler opts)
+                  ingest   --name <ns/x>  route the workload by key hash
+                  flush | sample | moment | rankfreq | drop  --name <ns/x>
+                  snapshot --name <ns/x> --out <dir>   per-member files
+                  rebalance --to <new-worp.toml>
+                                          move slices onto the new member
+                                          set (install-before-drop; the
+                                          merged sample is unchanged)
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
     bench       scalar vs batch vs SoA-block ingestion throughput per
                 summary, written as machine-readable JSON
                   --smoke                 small CI profile (default: full)
-                  --out <path>            output file (default BENCH_PR4.json)
+                  --out <path>            output file (default BENCH_PR6.json)
                   --stream-len <n> --n <keys> --batch <n> --iters <n> --k <n>
     info        print runtime / artifact status
     help        show this text
@@ -180,6 +200,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
             cmd_serve(args)
         }
         "client" => cmd_client(args),
+        "cluster" => cmd_cluster(args),
         "psi" => {
             args.no_positionals()?;
             cmd_psi(args)
@@ -447,21 +468,106 @@ fn cmd_merge_files(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `worp serve`: run the long-lived engine over TCP until killed. The
-/// engine shards every instance `--workers` ways with `--batch`-element
-/// blocks (matching an offline `worp sample` run with the same flags, so
-/// served and offline outputs diff clean). With `--checkpoint-dir`, every
-/// instance is snapshotted there periodically and restored on startup.
+/// The process-wide termination flag, flipped by SIGTERM / SIGINT.
+///
+/// std-only: `signal(2)` is declared directly rather than through a
+/// binding crate. The handler body is async-signal-safe — one atomic
+/// store, nothing that allocates or locks.
+#[cfg(unix)]
+fn term_flag() -> &'static std::sync::atomic::AtomicBool {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static TERM: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+    }
+    &TERM
+}
+
+/// Off unix there is no std-only signal story; serve parks until killed.
+#[cfg(not(unix))]
+fn term_flag() -> &'static std::sync::atomic::AtomicBool {
+    static TERM: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+    &TERM
+}
+
+/// `worp serve`: run the long-lived engine over TCP until terminated.
+/// The engine shards every instance `--workers` ways with
+/// `--batch`-element blocks (matching an offline `worp sample` run with
+/// the same flags, so served and offline outputs diff clean). With
+/// `--checkpoint-dir`, every instance is snapshotted there periodically
+/// and restored on startup.
+///
+/// With `--cluster <worp.toml> --node <name>` the process serves as one
+/// member of a sharded cluster: it owns only its rendezvous-assigned
+/// hash slices, refuses misrouted rows, and answers the slice-granular
+/// cluster queries (`QUERY_RAW`, slice transfer) a
+/// [`crate::cluster::ClusterClient`] drives.
+///
+/// SIGTERM / SIGINT trigger a graceful drain: stop accepting
+/// connections, flush every pending block, write a final snapshot of
+/// every instance (if checkpointing is on), then exit 0.
 fn cmd_serve(args: &Args) -> Result<()> {
     use crate::engine::server::{ServeOpts, Server};
     use crate::engine::{Engine, EngineOpts};
+    use std::sync::atomic::Ordering;
     let cfg = load_config(args)?;
-    let addr = args.str_or("addr", &cfg.server_addr);
-    let engine = std::sync::Arc::new(Engine::new(EngineOpts::new(cfg.workers, cfg.batch)?));
+    let cluster = match args.get("cluster") {
+        Some(path) => {
+            let spec = crate::cluster::ClusterSpec::load(path)?;
+            let node = args
+                .get("node")
+                .ok_or_else(|| Error::Config("serve --cluster also needs --node <member-name>".into()))?;
+            Some((spec, node.to_string()))
+        }
+        None if args.get("node").is_some() => {
+            return Err(Error::Config(
+                "serve --node means nothing without --cluster <worp.toml>".into(),
+            ));
+        }
+        None => None,
+    };
+    let engine_opts = EngineOpts::new(cfg.workers, cfg.batch)?;
+    let (engine, addr, banner) = match &cluster {
+        Some((spec, node)) => {
+            let owned = spec.owned_slices(node)?;
+            let member = spec.member(node)?;
+            let engine = Engine::with_ownership(engine_opts, spec.slices, &owned, spec.stamp())?;
+            // the member's spec address is the default bind; --addr still
+            // wins (e.g. bind 0.0.0.0 behind NAT while peers dial the
+            // public address)
+            let addr = args.str_or("addr", &member.addr);
+            let banner = format!(
+                "cluster={} node={} slices={}/{} batch={}",
+                spec.name,
+                node,
+                owned.len(),
+                spec.slices,
+                cfg.batch
+            );
+            (engine, addr, banner)
+        }
+        None => (
+            Engine::new(engine_opts),
+            args.str_or("addr", &cfg.server_addr),
+            format!("shards={} batch={}", cfg.workers, cfg.batch),
+        ),
+    };
+    let engine = std::sync::Arc::new(engine);
     let mut opts = ServeOpts {
         max_frame: cfg.server_max_frame_mib << 20,
         checkpoint: None,
+        max_connections: args.parse_or("max-connections", 1024)?,
     };
+    let mut checkpoint_dir = None;
     if !cfg.checkpoint_dir.is_empty() {
         let policy =
             crate::pipeline::CheckpointPolicy::new(cfg.checkpoint_every, cfg.checkpoint_dir.clone())?;
@@ -471,20 +577,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 println!("restored {} instance(s): {}", restored.len(), restored.join(", "));
             }
         }
+        checkpoint_dir = Some(policy.dir().to_path_buf());
         opts.checkpoint = Some(policy);
     }
-    let srv = Server::start(std::sync::Arc::clone(&engine), &addr, opts)?;
-    println!(
-        "worp serve: listening on {} (shards={} batch={})",
-        srv.local_addr(),
-        cfg.workers,
-        cfg.batch
-    );
-    // serve until the process is killed; connections run on their own
-    // threads inside the server
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    let mut srv = Server::start(std::sync::Arc::clone(&engine), &addr, opts)?;
+    println!("worp serve: listening on {} ({banner})", srv.local_addr());
+    // park until the signal handler flips the flag; connections run on
+    // their own threads inside the server
+    let term = term_flag();
+    while !term.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
+    println!("worp serve: termination signal — draining");
+    // drain order matters: refuse new connections first, then flush
+    // pending blocks into the summaries, then write the final snapshots
+    srv.stop();
+    let flushed = engine.flush_all()?;
+    match checkpoint_dir {
+        Some(dir) => {
+            let written = engine.snapshot_all(&dir)?;
+            println!(
+                "worp serve: flushed {flushed} pending element(s), snapshotted {written} \
+                 instance(s) to {}",
+                dir.display()
+            );
+        }
+        None => println!("worp serve: flushed {flushed} pending element(s)"),
+    }
+    Ok(())
 }
 
 /// `worp client <action>`: drive a running `worp serve`. The `create`
@@ -597,6 +717,36 @@ fn cmd_client(args: &Args) -> Result<()> {
             }
             t.print();
         }
+        "stats" if args.has_flag("all") => {
+            let s = client.stats_all()?;
+            println!(
+                "server: elements={} batches={} merges={} snapshots={} restores={} \
+                 connections={} (lifetime {})",
+                s.elements,
+                s.batches,
+                s.merges,
+                s.snapshots,
+                s.restores,
+                s.active_connections,
+                s.total_connections
+            );
+            let mut t = Table::new(
+                &format!("instances ({})", s.instances.len()),
+                &["name", "method", "slices", "pass", "processed", "pending", "accepted"],
+            );
+            for i in &s.instances {
+                t.row(&[
+                    i.name.clone(),
+                    i.method.clone(),
+                    format!("{}/{}", i.shards, i.total_slices),
+                    format!("{}/{}", i.pass + 1, i.passes),
+                    i.processed.to_string(),
+                    i.pending.to_string(),
+                    i.accepted.to_string(),
+                ]);
+            }
+            t.print();
+        }
         "stats" => {
             let n = name()?;
             let i = client.stats(&n)?;
@@ -642,6 +792,162 @@ fn cmd_client(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `worp cluster <action>`: drive a whole sharded cluster through one
+/// [`crate::cluster::ClusterClient`] — the spec comes from the
+/// `[cluster]` section of `--cluster <worp.toml>` (or `--config`), and
+/// every member must be a running `worp serve --cluster ... --node ...`.
+/// `create`/`ingest` reuse the full `sample` option surface, so a
+/// 3-node cluster session can be set up with the very flags an offline
+/// run would use — the CI cluster smoke diffs the two byte-for-byte.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use crate::cluster::{ClusterClient, ClusterSpec};
+    use crate::engine::proto::InstanceSpec;
+    let action = args
+        .positionals
+        .first()
+        .ok_or_else(|| Error::Config("cluster needs an action; see `worp help`".into()))?
+        .clone();
+    if let Some(extra) = args.positionals.get(1) {
+        return Err(Error::Config(format!("unexpected positional arg {extra:?}")));
+    }
+    let cfg = load_config(args)?;
+    let spec_path = args.get("cluster").or_else(|| args.get("config")).ok_or_else(|| {
+        Error::Config(
+            "cluster commands need --cluster <worp.toml> (a file with a [cluster] section)".into(),
+        )
+    })?;
+    let spec = ClusterSpec::load(spec_path)?;
+    let mut cc = ClusterClient::connect(spec)?;
+    let name = || -> Result<String> {
+        args.get("name")
+            .map(str::to_string)
+            .ok_or_else(|| Error::Config(format!("cluster {action} requires --name <ns/x>")))
+    };
+    match action.as_str() {
+        "status" => {
+            let spec = cc.spec().clone();
+            println!(
+                "cluster {}: {} slices over {} member(s), stamp={:#018x}",
+                spec.name,
+                spec.slices,
+                spec.members.len(),
+                spec.stamp()
+            );
+            for (member, s) in cc.status()? {
+                let m = spec.member(&member)?;
+                println!(
+                    "{member} ({}): owns {} slice(s) | elements={} batches={} merges={} \
+                     snapshots={} restores={} connections={} (lifetime {})",
+                    m.addr,
+                    spec.owned_slices(&member)?.len(),
+                    s.elements,
+                    s.batches,
+                    s.merges,
+                    s.snapshots,
+                    s.restores,
+                    s.active_connections,
+                    s.total_connections
+                );
+                for i in &s.instances {
+                    println!(
+                        "  {}: method={} slices={}/{} processed={} pending={} accepted={}",
+                        i.name, i.method, i.shards, i.total_slices, i.processed, i.pending,
+                        i.accepted
+                    );
+                }
+            }
+        }
+        "create" => {
+            let n = name()?;
+            cc.create(&n, &InstanceSpec::from_config(&cfg))?;
+            println!(
+                "created {n} on {} member(s): method={} k={} p={}",
+                cc.spec().members.len(),
+                cfg.method,
+                cfg.k,
+                cfg.p
+            );
+        }
+        "drop" => {
+            let n = name()?;
+            cc.drop_instance(&n)?;
+            println!("dropped {n} from every member");
+        }
+        "flush" => {
+            let n = name()?;
+            println!("flushed {} pending elements from {n}", cc.flush(&n)?);
+        }
+        "ingest" => {
+            let n = name()?;
+            let chunk = cfg.batch.max(1);
+            let mut block = crate::data::ElementBlock::with_capacity(chunk);
+            let mut sent = 0u64;
+            for e in make_stream(&cfg) {
+                block.push(e.key, e.val);
+                if block.len() == chunk {
+                    sent += cc.ingest(&n, &block)?;
+                    block.clear();
+                }
+            }
+            if !block.is_empty() {
+                sent += cc.ingest(&n, &block)?;
+            }
+            println!("ingested {sent} elements into {n} across the cluster");
+        }
+        "sample" => {
+            let n = name()?;
+            print_sample(&cc.sample(&n)?);
+        }
+        "moment" => {
+            let n = name()?;
+            let p_prime: f64 = args.parse_or("pprime", 2.0)?;
+            println!(
+                "estimated ||nu||_{p_prime}^{p_prime} = {}",
+                sci(cc.moment(&n, p_prime)?)
+            );
+        }
+        "rankfreq" => {
+            let n = name()?;
+            let max: usize = args.parse_or("max", 20)?;
+            let mut t = Table::new("estimated rank-frequency", &["rank", "freq"]);
+            for p in cc.rank_frequency(&n, max)? {
+                t.row(&[format!("{:.2}", p.rank), sci(p.freq)]);
+            }
+            t.print();
+        }
+        "snapshot" => {
+            let n = name()?;
+            let out = args
+                .get("out")
+                .ok_or_else(|| Error::Config("cluster snapshot requires --out <dir>".into()))?;
+            std::fs::create_dir_all(out)?;
+            for (member, bytes) in cc.snapshot(&n)? {
+                let path =
+                    std::path::Path::new(out).join(format!("{}.worp", member.replace('/', "_")));
+                std::fs::write(&path, &bytes)?;
+                println!("snapshot of {n} on {member} -> {} ({} bytes)", path.display(), bytes.len());
+            }
+        }
+        "rebalance" => {
+            let to = args.get("to").ok_or_else(|| {
+                Error::Config("cluster rebalance requires --to <new-worp.toml>".into())
+            })?;
+            let new_spec = ClusterSpec::load(to)?;
+            let moves = cc.rebalance_to(new_spec)?;
+            println!(
+                "rebalanced onto {} member(s): {moves} slice move(s)",
+                cc.spec().members.len()
+            );
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown cluster action {other:?}; see `worp help`"
+            )))
+        }
+    }
+    Ok(())
+}
+
 fn cmd_psi(args: &Args) -> Result<()> {
     let n = args.parse_or("n", 10_000usize)?;
     let k = args.parse_or("k", 100usize)?;
@@ -679,7 +985,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     opts.batch = args.parse_or("batch", opts.batch)?;
     opts.iters = args.parse_or("iters", opts.iters)?;
     opts.k = args.parse_or("k", opts.k)?;
-    let out = args.str_or("out", "BENCH_PR4.json");
+    let out = args.str_or("out", "BENCH_PR6.json");
     println!(
         "bench: stream_len={} n_keys={} batch={} iters={} k={} smoke={}\n",
         opts.stream_len, opts.n_keys, opts.batch, opts.iters, opts.k, opts.smoke
@@ -857,6 +1163,19 @@ mod tests {
         assert!(err.to_string().contains("unexpected"), "{err}");
         let err = dispatch(&parse(&["serve", "oops"])).unwrap_err();
         assert!(err.to_string().contains("unexpected"), "{err}");
+    }
+
+    #[test]
+    fn cluster_requires_an_action_and_a_spec_file() {
+        let err = dispatch(&parse(&["cluster"])).unwrap_err();
+        assert!(err.to_string().contains("action"), "{err}");
+        let err = dispatch(&parse(&["cluster", "status"])).unwrap_err();
+        assert!(err.to_string().contains("--cluster"), "{err}");
+        let err = dispatch(&parse(&["cluster", "status", "extra"])).unwrap_err();
+        assert!(err.to_string().contains("unexpected"), "{err}");
+        // serve --node without --cluster is refused before binding anything
+        let err = dispatch(&parse(&["serve", "--node", "a"])).unwrap_err();
+        assert!(err.to_string().contains("--cluster"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,366 @@
+//! The cluster client: N WRPC connections, one logical engine.
+//!
+//! Everything distributed happens on the client — the serving nodes
+//! never talk to each other:
+//!
+//! - **ingest** partitions each block's rows by the stable key router
+//!   and ships every row to the member that owns its hash slice;
+//! - **queries** scatter `QUERY_RAW` to every member, order the
+//!   returned per-slice sampler envelopes by slice index, and fold them
+//!   through the same fingerprint-checked merge tree a single-process
+//!   engine uses — the association order is identical, so the answer is
+//!   bit-for-bit the single-process answer (the merge law, across
+//!   machines);
+//! - **rebalancing** drains each moved slice from its old owner as a
+//!   `SLICE_SNAPSHOT` envelope and installs it on the new owner
+//!   (install-before-drop, so every slice stays queryable throughout).
+//!
+//! Failure semantics: ingest into a node that no longer owns a slice is
+//! refused whole by that node (stale-spec protection); a query that
+//! cannot assemble every slice — a member is down mid-rebalance — is a
+//! typed [`Error::State`], never a silently partial answer.
+
+use super::spec::ClusterSpec;
+use crate::api::{MultiPass, WorSampler};
+use crate::codec;
+use crate::data::ElementBlock;
+use crate::engine::client::Client;
+use crate::engine::proto::{InstanceSpec, ServerStats};
+use crate::error::{Error, Result};
+use crate::estimate::moment_estimate;
+use crate::estimate::rankfreq::{rank_frequency_wor, RankFreqPoint};
+use crate::pipeline::merge::tree_merge;
+use crate::pipeline::metrics::Metrics;
+use crate::pipeline::shard::Router;
+use crate::sampler::Sample;
+
+/// A connected cluster: one [`Client`] per member, placement computed
+/// locally from the spec.
+pub struct ClusterClient {
+    spec: ClusterSpec,
+    /// Connections, parallel to `spec.members`.
+    conns: Vec<Client>,
+    /// slice → index into `conns` (precomputed HRW assignment).
+    assignment: Vec<usize>,
+    router: Router,
+}
+
+/// Two distinct mutable elements of one slice (rebalance moves read one
+/// connection and write another).
+fn two_muts<T>(v: &mut [T], i: usize, j: usize) -> (&mut T, &mut T) {
+    assert_ne!(i, j);
+    if i < j {
+        let (l, r) = v.split_at_mut(j);
+        (&mut l[i], &mut r[0])
+    } else {
+        let (l, r) = v.split_at_mut(i);
+        (&mut r[0], &mut l[j])
+    }
+}
+
+impl ClusterClient {
+    /// Connect to every member of `spec`.
+    pub fn connect(spec: ClusterSpec) -> Result<ClusterClient> {
+        spec.validate()?;
+        let mut conns = Vec::with_capacity(spec.members.len());
+        for m in &spec.members {
+            conns.push(Client::connect(&m.addr).map_err(|e| {
+                Error::Config(format!("cluster member {:?}: {e}", m.name))
+            })?);
+        }
+        let assignment = (0..spec.slices)
+            .map(|s| spec.owner_index(s))
+            .collect::<Result<Vec<usize>>>()?;
+        let router = Router::new(spec.slices);
+        Ok(ClusterClient { spec, conns, assignment, router })
+    }
+
+    /// The spec this client routes by.
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Liveness-check every member.
+    pub fn ping(&mut self) -> Result<()> {
+        for c in &mut self.conns {
+            c.ping()?;
+        }
+        Ok(())
+    }
+
+    /// Create `name` on every member (all-or-error: a failure rolls the
+    /// already-created instances back best-effort and returns the
+    /// error). Multi-pass and clock-dependent methods are refused here —
+    /// the inter-pass handoff and the stream-global clock both need
+    /// every slice in one process.
+    pub fn create(&mut self, name: &str, spec: &InstanceSpec) -> Result<()> {
+        let proto = spec.to_worp()?.build()?;
+        if proto.passes() > 1 {
+            return Err(Error::Config(format!(
+                "method {} needs {} passes; the inter-pass handoff folds every hash \
+                 slice in one process, so multi-pass methods cannot be served by a \
+                 cluster — use a single-process engine",
+                proto.name(),
+                proto.passes()
+            )));
+        }
+        if !proto.parallel_safe() {
+            return Err(Error::Config(format!(
+                "method {} depends on a stream-global clock and cannot be sliced \
+                 across cluster nodes",
+                proto.name()
+            )));
+        }
+        let mut created = 0;
+        for i in 0..self.conns.len() {
+            if let Err(e) = self.conns[i].create(name, spec) {
+                for c in &mut self.conns[..created] {
+                    let _ = c.drop_instance(name);
+                }
+                return Err(Error::Config(format!(
+                    "create on member {:?} failed (created instances rolled back): {e}",
+                    self.spec.members[i].name
+                )));
+            }
+            created = i + 1;
+        }
+        Ok(())
+    }
+
+    /// Drop `name` from every member. Every member is attempted; the
+    /// first error (if any) is returned after the sweep.
+    pub fn drop_instance(&mut self, name: &str) -> Result<()> {
+        let mut first_err = None;
+        for c in &mut self.conns {
+            if let Err(e) = c.drop_instance(name) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Route every row of `block` to the member owning its hash slice
+    /// and ship the per-member sub-blocks. Returns the rows ingested by
+    /// this call. Not atomic across members: if a member fails mid-way,
+    /// rows already shipped to earlier members stay ingested (each
+    /// member's own block is still all-or-nothing).
+    pub fn ingest(&mut self, name: &str, block: &ElementBlock) -> Result<u64> {
+        let mut parts: Vec<ElementBlock> = Vec::new();
+        parts.resize_with(self.conns.len(), ElementBlock::new);
+        for i in 0..block.len() {
+            let key = block.keys[i];
+            let m = self.assignment[self.router.route(key)];
+            parts[m].push(key, block.vals[i]);
+        }
+        for (m, part) in parts.iter().enumerate() {
+            if !part.is_empty() {
+                self.conns[m].ingest(name, part)?;
+            }
+        }
+        Ok(block.len() as u64)
+    }
+
+    /// Flush every member's pending blocks for `name`; returns the total
+    /// elements flushed.
+    pub fn flush(&mut self, name: &str) -> Result<u64> {
+        let mut flushed = 0;
+        for c in &mut self.conns {
+            flushed += c.flush(name)?;
+        }
+        Ok(flushed)
+    }
+
+    /// Scatter the raw per-slice query, assemble full coverage, and fold
+    /// the slice summaries in ascending slice order — the association a
+    /// single-process engine uses, so the merged summary is bit-identical
+    /// to one process having seen the whole stream. During a rebalance a
+    /// slice can briefly exist on two members (install-before-drop);
+    /// the spec-assigned owner wins the dedupe. A slice no member
+    /// returned — node down, or drained mid-query — is a typed error,
+    /// never a silently partial answer.
+    pub fn merged(&mut self, name: &str) -> Result<Box<dyn WorSampler>> {
+        let total = self.spec.slices;
+        let mut by_slice: Vec<Option<Vec<u8>>> = vec![None; total];
+        for m in 0..self.conns.len() {
+            let (node_total, parts) = self.conns[m].query_raw(name)?;
+            if node_total as usize != total {
+                return Err(Error::Incompatible(format!(
+                    "member {:?} partitions {name:?} into {node_total} slices, the \
+                     cluster spec says {total}",
+                    self.spec.members[m].name
+                )));
+            }
+            for (s, bytes) in parts {
+                let s = s as usize;
+                if s >= total {
+                    return Err(Error::Codec(format!(
+                        "member {:?} returned slice {s} of {total}",
+                        self.spec.members[m].name
+                    )));
+                }
+                if by_slice[s].is_none() || self.assignment[s] == m {
+                    by_slice[s] = Some(bytes);
+                }
+            }
+        }
+        let mut states: Vec<Box<dyn WorSampler>> = Vec::with_capacity(total);
+        for (s, bytes) in by_slice.iter().enumerate() {
+            let Some(bytes) = bytes else {
+                return Err(Error::State(format!(
+                    "slice {s} of {name:?} is missing from every member — owner down or \
+                     mid-rebalance; retry with a current cluster spec"
+                )));
+            };
+            states.push(codec::decode_sampler(bytes)?);
+        }
+        tree_merge(states, &Metrics::default(), |a, b| a.merge_dyn(&**b))?
+            .ok_or_else(|| Error::Pipeline("cluster query folded zero slices".into()))
+    }
+
+    /// The cluster-wide WOR sample (merge locally, then finalize).
+    pub fn sample(&mut self, name: &str) -> Result<Sample> {
+        self.merged(name)?.sample()
+    }
+
+    /// Frequency-moment estimate `‖ν‖_{p'}^{p'}` over the whole cluster.
+    pub fn moment(&mut self, name: &str, p_prime: f64) -> Result<f64> {
+        Ok(moment_estimate(&self.sample(name)?, p_prime))
+    }
+
+    /// Rank-frequency curve over the whole cluster (`max_points` 0 = all).
+    pub fn rank_frequency(&mut self, name: &str, max_points: usize) -> Result<Vec<RankFreqPoint>> {
+        let mut pts = rank_frequency_wor(&self.sample(name)?);
+        if max_points > 0 {
+            pts.truncate(max_points);
+        }
+        Ok(pts)
+    }
+
+    /// Per-member server stats, in spec member order.
+    pub fn status(&mut self) -> Result<Vec<(String, ServerStats)>> {
+        let mut out = Vec::with_capacity(self.conns.len());
+        for (m, c) in self.conns.iter_mut().enumerate() {
+            out.push((self.spec.members[m].name.clone(), c.stats_all()?));
+        }
+        Ok(out)
+    }
+
+    /// Every instance name known to any member, sorted and deduplicated.
+    pub fn instances(&mut self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for c in &mut self.conns {
+            names.extend(c.list()?.into_iter().map(|i| i.name));
+        }
+        names.sort();
+        names.dedup();
+        Ok(names)
+    }
+
+    /// Snapshot `name` on every member that holds part of it; returns
+    /// `(member, snapshot bytes)` pairs. Members holding no slice of the
+    /// instance are skipped.
+    pub fn snapshot(&mut self, name: &str) -> Result<Vec<(String, Vec<u8>)>> {
+        let mut out = Vec::new();
+        for (m, c) in self.conns.iter_mut().enumerate() {
+            match c.snapshot(name) {
+                Ok(bytes) => out.push((self.spec.members[m].name.clone(), bytes)),
+                // a member owning no slices of the instance has nothing
+                // to snapshot; anything else is a real failure
+                Err(Error::State(_)) | Err(Error::Config(_)) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Flush every member's pending blocks for every instance.
+    pub fn flush_all(&mut self) -> Result<u64> {
+        let names = self.instances()?;
+        let mut flushed = 0;
+        for name in &names {
+            for c in &mut self.conns {
+                match c.flush(name) {
+                    Ok(n) => flushed += n,
+                    Err(Error::Config(_)) => continue, // member never saw it
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        Ok(flushed)
+    }
+
+    /// Rebalance the live cluster onto `new_spec` (same cluster name and
+    /// slice count; members may be added, removed or re-addressed). For
+    /// every slice whose owner changes, every instance's slice state is
+    /// drained from the old owner (`SLICE_SNAPSHOT`), installed on the
+    /// new owner under the cluster stamp, and only then dropped from the
+    /// old owner — coverage never dips, so queries keep answering during
+    /// the move. On success the client itself re-routes by `new_spec`.
+    /// Returns the number of (instance × slice) moves performed.
+    pub fn rebalance_to(&mut self, new_spec: ClusterSpec) -> Result<usize> {
+        new_spec.validate()?;
+        if new_spec.name != self.spec.name || new_spec.slices != self.spec.slices {
+            return Err(Error::Config(
+                "a rebalance cannot change the cluster name or slice count — those are \
+                 the cluster's identity (and the merge association order)"
+                    .into(),
+            ));
+        }
+        let names = self.instances()?;
+        let stamp = self.spec.stamp();
+        // pool every connection (old members + newly joined) by name
+        let mut pool: Vec<(String, Client)> = Vec::new();
+        for (m, c) in std::mem::take(&mut self.conns).into_iter().enumerate() {
+            pool.push((self.spec.members[m].name.clone(), c));
+        }
+        for m in &new_spec.members {
+            if !pool.iter().any(|(n, _)| n == &m.name) {
+                let c = Client::connect(&m.addr).map_err(|e| {
+                    Error::Config(format!("new cluster member {:?}: {e}", m.name))
+                })?;
+                pool.push((m.name.clone(), c));
+            }
+        }
+        let idx_of = |pool: &[(String, Client)], name: &str| {
+            pool.iter().position(|(n, _)| n == name).expect("pooled member")
+        };
+        let mut moves = 0;
+        for s in 0..self.spec.slices {
+            let old_name = self.spec.owner_of(s)?.name.clone();
+            let new_name = new_spec.owner_of(s)?.name.clone();
+            if old_name == new_name {
+                continue;
+            }
+            let (src_i, dst_i) = (idx_of(&pool, &old_name), idx_of(&pool, &new_name));
+            let (src, dst) = two_muts(&mut pool, src_i, dst_i);
+            for name in &names {
+                let bytes = match src.1.slice_snapshot(name, s as u64) {
+                    Ok(b) => b,
+                    // the old owner holds no such slice of this instance
+                    // (created mid-epoch, or already moved) — nothing to do
+                    Err(Error::Config(_)) => continue,
+                    Err(e) => return Err(e),
+                };
+                dst.1.slice_install(stamp, &bytes)?;
+                src.1.slice_drop(name, s as u64)?;
+                moves += 1;
+            }
+        }
+        // adopt the new spec: connections of departed members drop here
+        let mut conns = Vec::with_capacity(new_spec.members.len());
+        for m in &new_spec.members {
+            let i = idx_of(&pool, &m.name);
+            conns.push(pool.remove(i).1);
+        }
+        self.assignment = (0..new_spec.slices)
+            .map(|s| new_spec.owner_index(s))
+            .collect::<Result<Vec<usize>>>()?;
+        self.router = Router::new(new_spec.slices);
+        self.conns = conns;
+        self.spec = new_spec;
+        Ok(moves)
+    }
+}

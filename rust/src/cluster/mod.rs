@@ -1,0 +1,53 @@
+//! Cluster mode: multi-node sharded serving on the merge law.
+//!
+//! The paper's composability theorem says a WOR sketch may be fed any
+//! partition of the stream and merged back with no loss — the merged
+//! summary is distributed identically to one sketch that saw
+//! everything. A single `worp serve` process already exploits this
+//! *inside* one machine: the engine partitions each instance into hash
+//! slices and folds them at query time. Cluster mode stretches the same
+//! partition *across* machines:
+//!
+//! ```text
+//!             ClusterSpec (worp.toml [cluster])
+//!    name = "worp", slices = 64, nodes = ["a=...", "b=...", "c=..."]
+//!                           │
+//!      slice s is owned by the member maximizing the rendezvous
+//!      score hash(HRW_SEED ⊕ mix(s), member_name) — any client
+//!      computes the same placement with no coordinator
+//!                           │
+//!        ┌──────────────────┼──────────────────┐
+//!   worp serve --node a  worp serve --node b  worp serve --node c
+//!   (slices {0,5,9,…})   (slices {1,2,8,…})   (slices {3,4,6,…})
+//!        └──────────────────┼──────────────────┘
+//!                           │
+//!                    ClusterClient
+//!     ingest: route rows by key hash → owner   (scatter)
+//!     query:  QUERY_RAW per node → order slices ascending →
+//!             fingerprint-checked merge fold   (gather)
+//! ```
+//!
+//! Because every member partitions by the *same* router over the
+//! *same* `slices` count, and the client folds slice summaries in
+//! ascending slice order — the association order a single-process
+//! engine uses over its own slots — a 3-node cluster's sampler state is
+//! **bit-for-bit identical** to one process that ingested the whole
+//! stream. The f64 merge is not associative, so this ordering contract
+//! is what turns "statistically the same" into "byte-for-byte the
+//! same"; `tests/cluster_contract.rs` pins it.
+//!
+//! Membership changes are snapshot moves, not re-hashes: rendezvous
+//! hashing means adding a member only moves the slices it wins, and
+//! [`ClusterClient::rebalance_to`] drains exactly those as
+//! `SLICE_SNAPSHOT` envelopes, installing on the new owner *before*
+//! dropping from the old one so coverage never dips. Installs are
+//! guarded twice — the cluster stamp (name + slice count) refuses
+//! envelopes from a different cluster, and the sketch fingerprint
+//! refuses slices of an incompatible instance — so a mis-aimed
+//! rebalance fails loudly instead of corrupting state.
+
+pub mod client;
+pub mod spec;
+
+pub use client::ClusterClient;
+pub use spec::{ClusterSpec, Member, CLUSTER_HRW_SEED, CLUSTER_STAMP_SEED};

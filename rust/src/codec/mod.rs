@@ -99,6 +99,21 @@ pub mod tag {
     /// [`crate::engine::Engine`] instance snapshot (per-shard sampler
     /// envelopes plus their pending SoA blocks).
     pub const ENGINE_SNAPSHOT: u16 = 16;
+    /// Partially-owned [`crate::engine::Engine`] instance snapshot: a
+    /// cluster node owns a subset of an instance's hash slices, so the
+    /// payload carries the total slice count plus an explicit slice
+    /// index per stored slot. Fully-owned instances keep encoding as
+    /// [`ENGINE_SNAPSHOT`] byte-for-byte (golden fixtures stay valid).
+    pub const ENGINE_SNAPSHOT_SLICED: u16 = 17;
+    /// One hash slice of an engine instance in transit (sampler state +
+    /// pending block + placement metadata) — the unit cluster
+    /// rebalancing drains from an old owner and installs on a new one.
+    pub const SLICE_SNAPSHOT: u16 = 18;
+    /// A [`crate::cluster::ClusterSpec`]: named members with addresses
+    /// plus the slice count; the envelope fingerprint is the cluster
+    /// membership stamp (name + slice count — membership excluded so
+    /// cross-epoch rebalance installs are not refused).
+    pub const CLUSTER_SPEC: u16 = 19;
 }
 
 /// Human-readable name of a type tag (for diagnostics).
@@ -120,6 +135,9 @@ pub fn tag_name(t: u16) -> &'static str {
         tag::ORACLE_LP => "oracle-lp",
         tag::PRECISION_LP => "precision-lp",
         tag::ENGINE_SNAPSHOT => "engine-snapshot",
+        tag::ENGINE_SNAPSHOT_SLICED => "engine-snapshot-sliced",
+        tag::SLICE_SNAPSHOT => "slice-snapshot",
+        tag::CLUSTER_SPEC => "cluster-spec",
         _ => "unknown",
     }
 }

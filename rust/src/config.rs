@@ -132,6 +132,28 @@ impl Document {
             .unwrap_or(default)
             .to_string()
     }
+
+    /// Flat array of strings (`key = ["a", "b"]`). An absent key is an
+    /// empty list; a present key with any non-string item is a loud
+    /// config error (used by `[cluster] nodes`).
+    pub fn str_array(&self, section: &str, key: &str) -> Result<Vec<String>> {
+        match self.get(section, key) {
+            None => Ok(Vec::new()),
+            Some(Value::Array(items)) => items
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        Error::Config(format!(
+                            "{section}.{key} must be an array of quoted strings"
+                        ))
+                    })
+                })
+                .collect(),
+            Some(_) => Err(Error::Config(format!(
+                "{section}.{key} must be an array of quoted strings"
+            ))),
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -541,6 +563,17 @@ stream_len = 50000
         let mut c = PipelineConfig::default();
         c.server_max_frame_mib = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn str_array_parses_and_rejects_mixed_types() {
+        let doc = Document::parse("[cluster]\nnodes = [\"a=1:1\", \"b=2:2\"]\n").unwrap();
+        assert_eq!(doc.str_array("cluster", "nodes").unwrap(), vec!["a=1:1", "b=2:2"]);
+        assert!(doc.str_array("cluster", "absent").unwrap().is_empty());
+        let doc = Document::parse("[cluster]\nnodes = [1, 2]\n").unwrap();
+        assert!(doc.str_array("cluster", "nodes").is_err());
+        let doc = Document::parse("[cluster]\nnodes = \"a=1:1\"\n").unwrap();
+        assert!(doc.str_array("cluster", "nodes").is_err());
     }
 
     #[test]

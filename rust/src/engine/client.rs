@@ -191,6 +191,71 @@ impl Client {
         r.finish("restore response")?;
         Ok(name)
     }
+
+    /// The cluster scatter query: every slice the node owns as a raw
+    /// `(slice, sampler envelope)` pair, plus the cluster-wide slice
+    /// count. Decode with [`crate::codec::decode_sampler`] and fold in
+    /// ascending slice order (what
+    /// [`crate::cluster::ClusterClient`] does).
+    pub fn query_raw(&mut self, name: &str) -> Result<(u64, Vec<(u64, Vec<u8>)>)> {
+        let resp = self.call(op::QUERY_RAW, &name_payload(name))?;
+        let mut r = wire::Reader::new(&resp);
+        let total = r.u64()?;
+        let n = r.seq_len(16)?;
+        let mut slices = Vec::with_capacity(n);
+        for _ in 0..n {
+            let slice = r.u64()?;
+            let bytes = codec::take_nested(&mut r)?.to_vec();
+            slices.push((slice, bytes));
+        }
+        r.finish("query-raw response")?;
+        Ok((total, slices))
+    }
+
+    /// Whole-server counters plus every instance's stats in one frame.
+    pub fn stats_all(&mut self) -> Result<proto::ServerStats> {
+        let resp = self.call(op::STATS_ALL, &[])?;
+        let mut r = wire::Reader::new(&resp);
+        let stats = proto::read_server_stats(&mut r)?;
+        r.finish("stats-all response")?;
+        Ok(stats)
+    }
+
+    /// Serialize one owned slice of an instance (rebalance drain) — feed
+    /// the bytes to [`Client::slice_install`] on the new owner.
+    pub fn slice_snapshot(&mut self, name: &str, slice: u64) -> Result<Vec<u8>> {
+        let mut p = name_payload(name);
+        wire::put_u64(&mut p, slice);
+        let resp = self.call(op::SLICE_SNAPSHOT, &p)?;
+        let mut r = wire::Reader::new(&resp);
+        let bytes = codec::take_nested(&mut r)?.to_vec();
+        r.finish("slice-snapshot response")?;
+        Ok(bytes)
+    }
+
+    /// Install a transferred slice under the cluster `stamp`; returns
+    /// the node's owned-slice count for the instance after the install.
+    pub fn slice_install(&mut self, stamp: u64, slice_bytes: &[u8]) -> Result<u64> {
+        let mut p = Vec::with_capacity(16 + slice_bytes.len());
+        wire::put_u64(&mut p, stamp);
+        wire::put_usize(&mut p, slice_bytes.len());
+        p.extend_from_slice(slice_bytes);
+        let resp = self.call(op::SLICE_INSTALL, &p)?;
+        let mut r = wire::Reader::new(&resp);
+        let _name = codec::read_str(&mut r)?;
+        let owned = r.u64()?;
+        r.finish("slice-install response")?;
+        Ok(owned)
+    }
+
+    /// Release an owned slice (after the new owner confirmed its
+    /// install); returns the slices the node still owns.
+    pub fn slice_drop(&mut self, name: &str, slice: u64) -> Result<u64> {
+        let mut p = name_payload(name);
+        wire::put_u64(&mut p, slice);
+        let resp = self.call(op::SLICE_DROP, &p)?;
+        read_u64(&resp, "slice-drop response")
+    }
 }
 
 fn name_payload(name: &str) -> Vec<u8> {

@@ -117,8 +117,12 @@ pub struct InstanceInfo {
     pub name: String,
     /// Sampler method ("1pass", "2pass", "exact", ...).
     pub method: String,
-    /// Summary shards.
+    /// Summary shards this process holds (the instance's *owned* hash
+    /// slices; equals `total_slices` outside cluster mode).
     pub shards: u64,
+    /// Hash slices the instance's router partitions keys into across
+    /// the whole cluster (single-process instances own all of them).
+    pub total_slices: u64,
     /// Elements per pending block.
     pub batch: u64,
     /// Elements already flushed into the shard summaries (current pass).
@@ -145,18 +149,34 @@ struct ShardSlot {
 /// One named, long-lived summary: sharded sibling samplers plus their
 /// pending ingest blocks. Shared behind `Arc` so ingest connections,
 /// queries and lifecycle ops proceed without holding the registry lock.
+///
+/// The shard slots double as the cluster's placement unit: the router
+/// always partitions keys into `total_slices` *hash slices*, and this
+/// process holds a slot for every slice it **owns** (`Some`) while
+/// unowned slices stay `None`. A single-process instance owns every
+/// slice, so the cluster generalization costs the classic path nothing;
+/// a cluster of nodes whose owned sets partition `0..total_slices` is,
+/// slice for slice, the same `Vec` a single process with
+/// `shards = total_slices` would hold — which is exactly why merging the
+/// per-slice summaries in slice order reproduces the single-process
+/// result bit-for-bit (`tests/cluster_contract.rs`).
 pub struct Instance {
     name: String,
     method: &'static str,
     batch: usize,
     router: Router,
-    shards: Vec<Mutex<ShardSlot>>,
+    slots: Vec<Mutex<Option<ShardSlot>>>,
+    /// Lock-free mirror of `slots[i].is_some()` so the ingest hot path
+    /// can pre-check routing without taking every slot lock. Updated
+    /// under the slot lock by install/remove, read relaxed-acquire.
+    owned_mask: Vec<std::sync::atomic::AtomicBool>,
+    owned_count: std::sync::atomic::AtomicUsize,
     accepted: AtomicU64,
 }
 
 /// Lock a shard slot, converting a poisoned mutex (a panic inside a
 /// previous operation) into a typed error instead of cascading panics.
-fn lock_slot(m: &Mutex<ShardSlot>) -> Result<MutexGuard<'_, ShardSlot>> {
+fn lock_slot(m: &Mutex<Option<ShardSlot>>) -> Result<MutexGuard<'_, Option<ShardSlot>>> {
     m.lock().map_err(|_| {
         Error::Pipeline(
             "instance shard is poisoned — a previous operation panicked; drop and \
@@ -166,28 +186,77 @@ fn lock_slot(m: &Mutex<ShardSlot>) -> Result<MutexGuard<'_, ShardSlot>> {
     })
 }
 
+fn new_slot(proto: &dyn WorSampler, batch: usize) -> ShardSlot {
+    ShardSlot { state: proto.clone_box(), pending: ElementBlock::with_capacity(batch) }
+}
+
 impl Instance {
+    /// Assemble an instance from per-slice slots (`None` = unowned).
+    fn assemble(
+        name: String,
+        method: &'static str,
+        batch: usize,
+        slots: Vec<Option<ShardSlot>>,
+        accepted: u64,
+    ) -> Instance {
+        let owned = slots.iter().filter(|s| s.is_some()).count();
+        let owned_mask = slots
+            .iter()
+            .map(|s| std::sync::atomic::AtomicBool::new(s.is_some()))
+            .collect();
+        let total = slots.len();
+        Instance {
+            name,
+            method,
+            batch,
+            router: Router::new(total),
+            slots: slots.into_iter().map(Mutex::new).collect(),
+            owned_mask,
+            owned_count: std::sync::atomic::AtomicUsize::new(owned),
+            accepted: AtomicU64::new(accepted),
+        }
+    }
+
     fn from_proto(name: String, proto: Box<dyn WorSampler>, opts: EngineOpts) -> Instance {
         // clock-dependent samplers must not be sharded (their implicit
         // per-element clocks would skew) — same rule as the coordinator
         let shards = if proto.parallel_safe() { opts.shards } else { 1 };
-        let method = proto.name();
-        let slots = (0..shards)
-            .map(|_| {
-                Mutex::new(ShardSlot {
-                    state: proto.clone_box(),
-                    pending: ElementBlock::with_capacity(opts.batch),
-                })
-            })
-            .collect();
-        Instance {
-            name,
-            method,
-            batch: opts.batch,
-            router: Router::new(shards),
-            shards: slots,
-            accepted: AtomicU64::new(0),
+        let slots = (0..shards).map(|_| Some(new_slot(&*proto, opts.batch))).collect();
+        Instance::assemble(name, proto.name(), opts.batch, slots, 0)
+    }
+
+    /// A cluster-sharded instance: the router runs over `total_slices`
+    /// hash slices and this node materializes summaries only for the
+    /// `owned` subset. Clock-dependent samplers cannot be sliced across
+    /// nodes (their implicit clocks would tick per-node), so they are
+    /// refused here rather than silently mis-sampled.
+    fn from_proto_owned(
+        name: String,
+        proto: Box<dyn WorSampler>,
+        batch: usize,
+        total_slices: usize,
+        owned: &[usize],
+    ) -> Result<Instance> {
+        if total_slices == 0 {
+            return Err(Error::Config("cluster slice count must be positive".into()));
         }
+        if !proto.parallel_safe() && total_slices > 1 {
+            return Err(Error::Config(format!(
+                "method {} depends on a stream-global clock and cannot be sliced across \
+                 cluster nodes; serve it from a single process",
+                proto.name()
+            )));
+        }
+        let mut slots: Vec<Option<ShardSlot>> = (0..total_slices).map(|_| None).collect();
+        for &s in owned {
+            if s >= total_slices {
+                return Err(Error::Config(format!(
+                    "owned slice {s} out of range for {total_slices} slices"
+                )));
+            }
+            slots[s] = Some(new_slot(&*proto, batch));
+        }
+        Ok(Instance::assemble(name, proto.name(), batch, slots, 0))
     }
 
     /// Registry name.
@@ -195,31 +264,81 @@ impl Instance {
         &self.name
     }
 
+    /// Hash slices the router partitions keys into (cluster-wide).
+    pub fn total_slices(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slice indices this process currently owns, ascending.
+    pub fn owned_slices(&self) -> Vec<usize> {
+        (0..self.slots.len())
+            .filter(|&s| self.owned_mask[s].load(Ordering::Acquire))
+            .collect()
+    }
+
+    fn owned(&self, s: usize) -> bool {
+        self.owned_mask[s].load(Ordering::Acquire)
+    }
+
+    fn fully_owned(&self) -> bool {
+        self.owned_count.load(Ordering::Acquire) == self.slots.len()
+    }
+
     /// Route-and-buffer one block of updates. Each shard's pending block
     /// flushes into its summary whenever it reaches `batch` elements, so
     /// per-shard block boundaries are identical to the offline pipeline's.
+    ///
+    /// Under partial (cluster) ownership every row must route to an
+    /// owned slice; a block carrying even one misrouted row — a client
+    /// holding a stale cluster spec — is rejected whole *before* any
+    /// slot is touched, so nothing is half-applied.
     pub fn ingest(&self, block: &ElementBlock) -> Result<u64> {
-        // one filtered sweep per shard (ascending lock order — the same
-        // order every other multi-slot operation uses), mirroring the
-        // offline workers' scan-and-filter: zero per-call allocation and
-        // per-shard arrival order preserved
-        for s in 0..self.shards.len() {
-            let mut slot = lock_slot(&self.shards[s])?;
-            let ShardSlot { state, pending } = &mut *slot;
+        if !self.fully_owned() {
+            for i in 0..block.len() {
+                let s = self.router.route(block.keys[i]);
+                if !self.owned(s) {
+                    return Err(Error::State(format!(
+                        "key {} routes to slice {s}/{}, which this node does not own — \
+                         stale cluster spec or mid-rebalance client?",
+                        block.keys[i],
+                        self.slots.len()
+                    )));
+                }
+            }
+        }
+        // one filtered sweep per owned shard (ascending lock order — the
+        // same order every other multi-slot operation uses), mirroring
+        // the offline workers' scan-and-filter: zero per-call allocation
+        // and per-shard arrival order preserved
+        let mut matched = 0u64;
+        for s in 0..self.slots.len() {
+            if !self.owned(s) {
+                continue;
+            }
+            let mut guard = lock_slot(&self.slots[s])?;
+            // the slice may have been drained between the mask check and
+            // the lock; the pre-scan above makes that a stale-spec error
+            // path, but a fully-owned instance can never hit it
+            let Some(ShardSlot { state, pending }) = guard.as_mut() else {
+                return Err(Error::State(format!(
+                    "slice {s} was drained from this node mid-ingest — retry against the \
+                     new owner"
+                )));
+            };
             for i in 0..block.len() {
                 let key = block.keys[i];
                 if self.router.route(key) != s {
                     continue;
                 }
                 pending.push(key, block.vals[i]);
+                matched += 1;
                 if pending.len() == self.batch {
                     state.process_block(pending);
                     pending.clear();
                 }
             }
         }
-        let n = block.len() as u64;
-        Ok(self.accepted.fetch_add(n, Ordering::Relaxed) + n)
+        Ok(self.accepted.fetch_add(matched, Ordering::Relaxed) + matched)
     }
 
     /// Flush every pending partial block into its shard summary (insert
@@ -228,9 +347,9 @@ impl Instance {
     /// elements flushed.
     pub fn flush(&self) -> Result<u64> {
         let mut flushed = 0;
-        for s in &self.shards {
-            let mut slot = lock_slot(s)?;
-            let ShardSlot { state, pending } = &mut *slot;
+        for s in &self.slots {
+            let mut guard = lock_slot(s)?;
+            let Some(ShardSlot { state, pending }) = guard.as_mut() else { continue };
             if !pending.is_empty() {
                 flushed += pending.len() as u64;
                 state.process_block(pending);
@@ -247,29 +366,45 @@ impl Instance {
     /// multi-pass run matches an offline one bit-for-bit. Returns the new
     /// 0-based pass index.
     pub fn advance(&self) -> Result<usize> {
+        // pass handoff folds *every* slice of the stream into the merged
+        // state it redistributes; a node holding only some slices would
+        // hand shard summaries a partial pass-1 view, so cluster-sharded
+        // instances must advance through a single-process engine instead
+        if !self.fully_owned() {
+            return Err(Error::State(
+                "a cluster-sharded instance cannot advance passes node-locally — the \
+                 inter-pass handoff needs every hash slice; run multi-pass methods on a \
+                 single-process engine"
+                    .into(),
+            ));
+        }
         // hold every slot for the whole transition (ascending order) so
         // concurrent ingest cannot slip elements between merge and
         // redistribute
-        let mut guards = Vec::with_capacity(self.shards.len());
-        for s in &self.shards {
+        let mut guards = Vec::with_capacity(self.slots.len());
+        for s in &self.slots {
             guards.push(lock_slot(s)?);
         }
         for g in guards.iter_mut() {
-            let ShardSlot { state, pending } = &mut **g;
+            let Some(ShardSlot { state, pending }) = g.as_mut() else { continue };
             if !pending.is_empty() {
                 state.process_block(pending);
                 pending.clear();
             }
         }
-        let states: Vec<Box<dyn WorSampler>> =
-            guards.iter().map(|g| g.state.clone_box()).collect();
+        let states: Vec<Box<dyn WorSampler>> = guards
+            .iter()
+            .filter_map(|g| g.as_ref().map(|slot| slot.state.clone_box()))
+            .collect();
         let scratch = Metrics::default();
         let mut merged = tree_merge(states, &scratch, |a, b| a.merge_dyn(&**b))?
             .ok_or_else(|| Error::Pipeline("instance has no shards".into()))?;
         merged.advance()?;
         let pass = merged.pass();
         for g in guards.iter_mut() {
-            g.state = merged.clone_box();
+            if let Some(slot) = g.as_mut() {
+                slot.state = merged.clone_box();
+            }
         }
         Ok(pass)
     }
@@ -277,13 +412,20 @@ impl Instance {
     /// Fold clones of the shard summaries into one (fingerprint-checked
     /// merge tree, merges counted into `metrics`). Pending elements are
     /// *not* included — see the staleness contract in the module docs.
+    /// Slices fold in ascending slice order, the association a cluster
+    /// client reproduces when it merges per-slice summaries from many
+    /// nodes (f64 merges are not associative, so the order is the
+    /// bit-identity contract).
     pub fn merged_with(&self, metrics: &Metrics) -> Result<Box<dyn WorSampler>> {
-        let mut states = Vec::with_capacity(self.shards.len());
-        for s in &self.shards {
-            states.push(lock_slot(s)?.state.clone_box());
+        let mut states = Vec::with_capacity(self.slots.len());
+        for s in &self.slots {
+            if let Some(slot) = lock_slot(s)?.as_ref() {
+                states.push(slot.state.clone_box());
+            }
         }
-        tree_merge(states, metrics, |a, b| a.merge_dyn(&**b))?
-            .ok_or_else(|| Error::Pipeline("instance has no shards".into()))
+        tree_merge(states, metrics, |a, b| a.merge_dyn(&**b))?.ok_or_else(|| {
+            Error::Pipeline("this node owns no slices of the instance".into())
+        })
     }
 
     /// [`Instance::merged_with`] without metrics.
@@ -293,27 +435,31 @@ impl Instance {
 
     /// Current stats (see [`InstanceInfo`]).
     pub fn info(&self) -> Result<InstanceInfo> {
+        let mut owned = 0u64;
         let mut processed = 0u64;
         let mut pending = 0u64;
         let mut size_words = 0u64;
         let mut passes = 1u64;
         let mut pass = 0u64;
         let mut fingerprint = 0u64;
-        for (i, s) in self.shards.iter().enumerate() {
-            let slot = lock_slot(s)?;
-            processed += slot.state.processed();
-            pending += slot.pending.len() as u64;
-            size_words += slot.state.size_words() as u64;
-            if i == 0 {
+        for s in &self.slots {
+            let guard = lock_slot(s)?;
+            let Some(slot) = guard.as_ref() else { continue };
+            if owned == 0 {
                 passes = slot.state.passes() as u64;
                 pass = slot.state.pass() as u64;
                 fingerprint = WorSampler::fingerprint(&*slot.state).value();
             }
+            owned += 1;
+            processed += slot.state.processed();
+            pending += slot.pending.len() as u64;
+            size_words += slot.state.size_words() as u64;
         }
         Ok(InstanceInfo {
             name: self.name.clone(),
             method: self.method.to_string(),
-            shards: self.shards.len() as u64,
+            shards: owned,
+            total_slices: self.slots.len() as u64,
             batch: self.batch as u64,
             processed,
             pending,
@@ -337,15 +483,21 @@ impl Instance {
     {
         self.flush()?;
         let metrics = Arc::new(Metrics::default());
-        let mut failed: Vec<Result<()>> = Vec::with_capacity(self.shards.len());
+        let owned = self.owned_slices();
+        let mut failed: Vec<Result<()>> = Vec::with_capacity(owned.len());
         std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(self.shards.len());
-            for w in 0..self.shards.len() {
+            let mut handles = Vec::with_capacity(owned.len());
+            for &w in &owned {
                 let m = Arc::clone(&metrics);
                 handles.push(scope.spawn(move || -> Result<()> {
                     // hold this shard's lock for the whole pass — the
                     // scan is the hot loop and the slot is uncontended
-                    let mut slot = lock_slot(&self.shards[w])?;
+                    let mut guard = lock_slot(&self.slots[w])?;
+                    let Some(slot) = guard.as_mut() else {
+                        // drained between the owned_slices scan and the
+                        // lock; the new owner scans these rows instead
+                        return Ok(());
+                    };
                     let mut block = ElementBlock::with_capacity(self.batch);
                     let mut fills = 0u64;
                     for e in source.scan() {
@@ -386,41 +538,78 @@ impl Instance {
     }
 
     /// Serialize the whole instance — per-shard summaries *and* their
-    /// pending blocks — as one [`crate::codec`] envelope (tag
-    /// `ENGINE_SNAPSHOT`), taken under all shard locks so the cut is
-    /// consistent. Restoring and continuing is bit-identical to never
-    /// stopping.
+    /// pending blocks — as one [`crate::codec`] envelope, taken under all
+    /// shard locks so the cut is consistent. Restoring and continuing is
+    /// bit-identical to never stopping.
+    ///
+    /// A fully-owned instance encodes exactly the legacy
+    /// `ENGINE_SNAPSHOT` layout (tag 16) byte-for-byte, so snapshots
+    /// written before cluster mode existed keep their golden encodings;
+    /// a partially-owned (cluster) instance uses the append-only
+    /// `ENGINE_SNAPSHOT_SLICED` tag, which additionally records the
+    /// cluster-wide slice count and each stored slot's slice index.
     pub fn encode_snapshot(&self) -> Result<Vec<u8>> {
-        let mut guards = Vec::with_capacity(self.shards.len());
-        for s in &self.shards {
+        let mut guards = Vec::with_capacity(self.slots.len());
+        for s in &self.slots {
             guards.push(lock_slot(s)?);
         }
+        let owned: Vec<usize> =
+            (0..guards.len()).filter(|&i| guards[i].is_some()).collect();
+        let Some(&first) = owned.first() else {
+            return Err(Error::State(
+                "this node owns no slices of the instance — nothing to snapshot".into(),
+            ));
+        };
         let mut payload = Vec::new();
         codec::put_str(&mut payload, &self.name);
         codec::put_str(&mut payload, self.method);
         wire::put_usize(&mut payload, self.batch);
         wire::put_u64(&mut payload, self.accepted.load(Ordering::Relaxed));
+        let fully = owned.len() == guards.len();
         wire::put_usize(&mut payload, guards.len());
-        for g in &guards {
+        if !fully {
+            wire::put_usize(&mut payload, owned.len());
+        }
+        for &i in &owned {
+            let slot = guards[i].as_ref().expect("owned index");
+            if !fully {
+                wire::put_usize(&mut payload, i);
+            }
             let mut state = Vec::new();
-            g.state.encode_state(&mut state);
+            slot.state.encode_state(&mut state);
             wire::put_usize(&mut payload, state.len());
             payload.extend_from_slice(&state);
-            wire::put_usize(&mut payload, g.pending.len());
-            wire::put_block(&mut payload, &g.pending);
+            wire::put_usize(&mut payload, slot.pending.len());
+            wire::put_block(&mut payload, &slot.pending);
         }
-        let fp = WorSampler::fingerprint(&*guards[0].state).value();
+        let fp =
+            WorSampler::fingerprint(&*guards[first].as_ref().expect("owned index").state).value();
+        let tag = if fully {
+            codec::tag::ENGINE_SNAPSHOT
+        } else {
+            codec::tag::ENGINE_SNAPSHOT_SLICED
+        };
         let mut out = Vec::new();
-        codec::write_envelope(codec::tag::ENGINE_SNAPSHOT, fp, &payload, &mut out);
+        codec::write_envelope(tag, fp, &payload, &mut out);
         Ok(out)
     }
 
-    /// Decode a snapshot written by [`Instance::encode_snapshot`]. Never
-    /// panics on hostile bytes; shard summaries must share one
-    /// fingerprint (a spliced snapshot fails with
-    /// [`Error::Incompatible`]).
+    /// Decode a snapshot written by [`Instance::encode_snapshot`] (the
+    /// legacy full tag or the sliced cluster tag). Never panics on
+    /// hostile bytes; shard summaries must share one fingerprint (a
+    /// spliced snapshot fails with [`Error::Incompatible`]).
     pub fn decode_snapshot(bytes: &[u8]) -> Result<Instance> {
-        let env = codec::read_envelope(bytes, Some(codec::tag::ENGINE_SNAPSHOT))?;
+        let env = codec::read_envelope(bytes, None)?;
+        let sliced = match env.type_tag {
+            codec::tag::ENGINE_SNAPSHOT => false,
+            codec::tag::ENGINE_SNAPSHOT_SLICED => true,
+            t => {
+                return Err(Error::Codec(format!(
+                    "type tag mismatch: file holds a {} (tag {t}), expected an engine snapshot",
+                    codec::tag_name(t)
+                )))
+            }
+        };
         let mut r = wire::Reader::new(env.payload);
         let name = codec::read_str(&mut r)?;
         validate_name(&name)?;
@@ -430,14 +619,45 @@ impl Instance {
             return Err(Error::Codec(format!("snapshot batch out of range: {batch}")));
         }
         let accepted = r.u64()?;
-        let shards = r.seq_len(16)?;
-        if shards == 0 {
+        let total = r.seq_len(16)?;
+        if total == 0 {
             return Err(Error::Codec("snapshot holds zero shards".into()));
         }
-        let mut slots = Vec::with_capacity(shards);
+        let stored = if sliced {
+            let stored = r.seq_len(16)?;
+            if stored == 0 || stored > total {
+                return Err(Error::Codec(format!(
+                    "sliced snapshot stores {stored} of {total} slices"
+                )));
+            }
+            stored
+        } else {
+            total
+        };
+        let mut slots: Vec<Option<ShardSlot>> = (0..total).map(|_| None).collect();
         let mut fingerprint = None;
         let mut method = "";
-        for _ in 0..shards {
+        let mut prev_slice: Option<usize> = None;
+        for i in 0..stored {
+            let slice = if sliced {
+                let s = r.u64()?;
+                if s >= total as u64 {
+                    return Err(Error::Codec(format!(
+                        "snapshot slice index {s} out of range for {total} slices"
+                    )));
+                }
+                // canonical encoding: strictly ascending slice indices
+                // (also rules out duplicates)
+                if prev_slice.is_some_and(|p| p >= s as usize) {
+                    return Err(Error::Codec(
+                        "snapshot slice indices are not strictly ascending".into(),
+                    ));
+                }
+                prev_slice = Some(s as usize);
+                s as usize
+            } else {
+                i
+            };
             let state_bytes = codec::take_nested(&mut r)?;
             let state = codec::decode_sampler(state_bytes)?;
             let fp = WorSampler::fingerprint(&*state).value();
@@ -464,18 +684,174 @@ impl Instance {
                     pending.len()
                 )));
             }
-            slots.push(Mutex::new(ShardSlot { state, pending }));
+            slots[slice] = Some(ShardSlot { state, pending });
         }
         r.finish("engine snapshot")?;
         codec::check_fingerprint(env.fingerprint, fingerprint.unwrap_or(0))?;
-        Ok(Instance {
-            name,
-            method,
-            batch: batch as usize,
-            router: Router::new(slots.len()),
-            shards: slots,
-            accepted: AtomicU64::new(accepted),
-        })
+        Ok(Instance::assemble(name, method, batch as usize, slots, accepted))
+    }
+
+    // -----------------------------------------------------------------
+    // Slice-level transfer (cluster rebalancing)
+
+    /// Serialize one owned hash slice — its sampler state, pending block
+    /// and placement metadata — as a `SLICE_SNAPSHOT` envelope, the unit
+    /// a cluster rebalance drains from an old owner and installs on the
+    /// new one.
+    pub fn encode_slice(&self, slice: usize) -> Result<Vec<u8>> {
+        if slice >= self.slots.len() {
+            return Err(Error::Config(format!(
+                "slice {slice} out of range for {} slices",
+                self.slots.len()
+            )));
+        }
+        let guard = lock_slot(&self.slots[slice])?;
+        let Some(slot) = guard.as_ref() else {
+            return Err(Error::Config(format!(
+                "this node does not own slice {slice} of instance {:?}",
+                self.name
+            )));
+        };
+        let mut payload = Vec::new();
+        codec::put_str(&mut payload, &self.name);
+        codec::put_str(&mut payload, self.method);
+        wire::put_usize(&mut payload, self.batch);
+        wire::put_usize(&mut payload, self.slots.len());
+        wire::put_usize(&mut payload, slice);
+        let mut state = Vec::new();
+        slot.state.encode_state(&mut state);
+        wire::put_usize(&mut payload, state.len());
+        payload.extend_from_slice(&state);
+        wire::put_usize(&mut payload, slot.pending.len());
+        wire::put_block(&mut payload, &slot.pending);
+        let fp = WorSampler::fingerprint(&*slot.state).value();
+        let mut out = Vec::new();
+        codec::write_envelope(codec::tag::SLICE_SNAPSHOT, fp, &payload, &mut out);
+        Ok(out)
+    }
+
+    /// Decode a slice envelope written by [`Instance::encode_slice`]:
+    /// `(name, batch, total_slices, slice, slot)`.
+    fn decode_slice(bytes: &[u8]) -> Result<(String, usize, usize, usize, ShardSlot)> {
+        let env = codec::read_envelope(bytes, Some(codec::tag::SLICE_SNAPSHOT))?;
+        let mut r = wire::Reader::new(env.payload);
+        let name = codec::read_str(&mut r)?;
+        validate_name(&name)?;
+        let _method = codec::read_str(&mut r)?;
+        let batch = r.u64()?;
+        if batch == 0 || batch > u32::MAX as u64 {
+            return Err(Error::Codec(format!("slice batch out of range: {batch}")));
+        }
+        let total = r.u64()?;
+        if total == 0 || total > u32::MAX as u64 {
+            return Err(Error::Codec(format!("slice count out of range: {total}")));
+        }
+        let slice = r.u64()?;
+        if slice >= total {
+            return Err(Error::Codec(format!(
+                "slice index {slice} out of range for {total} slices"
+            )));
+        }
+        let state_bytes = codec::take_nested(&mut r)?;
+        let state = codec::decode_sampler(state_bytes)?;
+        let n = r.seq_len(16)?;
+        let rec = r.take(n * 16)?;
+        let mut pending = ElementBlock::with_capacity((batch as usize).max(n));
+        wire::read_block_into(rec, &mut pending)?;
+        if pending.len() > batch as usize {
+            return Err(Error::Codec(format!(
+                "slice pending block of {} elements exceeds the batch size {batch}",
+                pending.len()
+            )));
+        }
+        r.finish("slice snapshot")?;
+        codec::check_fingerprint(env.fingerprint, WorSampler::fingerprint(&*state).value())?;
+        Ok((name, batch as usize, total as usize, slice as usize, ShardSlot { state, pending }))
+    }
+
+    /// Take ownership of `slice`, installing the transferred slot.
+    /// Returns the owned-slice count after the install. Installing a
+    /// slice this node already owns is refused — the rebalance protocol
+    /// installs on the *new* owner before dropping from the old one, and
+    /// the two are never the same node.
+    fn install_slot(&self, slice: usize, slot: ShardSlot) -> Result<usize> {
+        if slice >= self.slots.len() {
+            return Err(Error::Config(format!(
+                "slice {slice} out of range for {} slices",
+                self.slots.len()
+            )));
+        }
+        let mut guard = lock_slot(&self.slots[slice])?;
+        if guard.is_some() {
+            return Err(Error::Config(format!(
+                "this node already owns slice {slice} of instance {:?}",
+                self.name
+            )));
+        }
+        *guard = Some(slot);
+        self.owned_mask[slice].store(true, Ordering::Release);
+        Ok(self.owned_count.fetch_add(1, Ordering::AcqRel) + 1)
+    }
+
+    /// Release ownership of `slice` (the drop half of a rebalance move).
+    /// Returns the number of slices still owned; at zero the caller
+    /// should drop the whole instance.
+    fn remove_slot(&self, slice: usize) -> Result<usize> {
+        if slice >= self.slots.len() {
+            return Err(Error::Config(format!(
+                "slice {slice} out of range for {} slices",
+                self.slots.len()
+            )));
+        }
+        let mut guard = lock_slot(&self.slots[slice])?;
+        if guard.is_none() {
+            return Err(Error::Config(format!(
+                "this node does not own slice {slice} of instance {:?}",
+                self.name
+            )));
+        }
+        // clear the mask before the slot so a concurrent ingest pre-scan
+        // sees the slice as gone no later than the slot itself
+        self.owned_mask[slice].store(false, Ordering::Release);
+        *guard = None;
+        Ok(self.owned_count.fetch_sub(1, Ordering::AcqRel) - 1)
+    }
+
+    /// Encode every owned slice's (flushed) sampler state as a raw codec
+    /// envelope, tagged with its slice index — the scatter half of a
+    /// cluster query. The caller (a [`crate::cluster::ClusterClient`])
+    /// collects these from every node, orders them by slice index, and
+    /// folds them through the same merge tree [`Instance::merged_with`]
+    /// uses, reproducing the single-process result bit-for-bit. Pending
+    /// elements are *not* included (the staleness contract).
+    pub fn encode_slices(&self) -> Result<(usize, Vec<(usize, Vec<u8>)>)> {
+        let mut out = Vec::new();
+        for s in 0..self.slots.len() {
+            let guard = lock_slot(&self.slots[s])?;
+            if let Some(slot) = guard.as_ref() {
+                let mut bytes = Vec::new();
+                slot.state.encode_state(&mut bytes);
+                out.push((s, bytes));
+            }
+        }
+        Ok((self.slots.len(), out))
+    }
+
+    /// Fingerprint of the first owned slot (`None` when the node owns no
+    /// slices yet — an install target shell).
+    fn first_fingerprint(&self) -> Result<Option<u64>> {
+        for s in &self.slots {
+            if let Some(slot) = lock_slot(s)?.as_ref() {
+                return Ok(Some(WorSampler::fingerprint(&*slot.state).value()));
+            }
+        }
+        Ok(None)
+    }
+
+    /// A slot-less shell of an instance (the install target a rebalance
+    /// creates on a node that has never seen the instance before).
+    fn shell(name: String, method: &'static str, batch: usize, total: usize) -> Instance {
+        Instance::assemble(name, method, batch, (0..total).map(|_| None).collect(), 0)
     }
 }
 
@@ -500,11 +876,33 @@ pub fn validate_name(name: &str) -> Result<()> {
     Ok(())
 }
 
+/// Cluster-mode placement: the hash slices of every instance this
+/// process materializes. `owned` starts as the cluster spec's assignment
+/// and tracks live rebalance moves (installs add, drops remove) so
+/// instances created mid-epoch follow the current placement.
+struct Ownership {
+    total: usize,
+    owned: Mutex<Vec<usize>>,
+    stamp: u64,
+}
+
+impl Ownership {
+    fn owned(&self) -> Result<MutexGuard<'_, Vec<usize>>> {
+        self.owned
+            .lock()
+            .map_err(|_| Error::Pipeline("engine ownership table poisoned".into()))
+    }
+}
+
 /// The long-lived multi-tenant engine: named instances, concurrent
 /// ingest, a unified query surface, lifecycle ops, snapshot/restore.
 /// Share it behind `Arc` (the TCP [`server`] does).
 pub struct Engine {
     opts: EngineOpts,
+    /// `Some` when this process serves one member's share of a cluster
+    /// ([`Engine::with_ownership`]); `None` is the classic single-process
+    /// engine that owns every slice of every instance.
+    ownership: Option<Ownership>,
     instances: RwLock<BTreeMap<String, Arc<Instance>>>,
 }
 
@@ -519,12 +917,58 @@ impl Engine {
     /// clamped to 1 — prefer the validating [`EngineOpts::new`]).
     pub fn new(opts: EngineOpts) -> Engine {
         let opts = EngineOpts { shards: opts.shards.max(1), batch: opts.batch.max(1) };
-        Engine { opts, instances: RwLock::new(BTreeMap::new()) }
+        Engine { opts, ownership: None, instances: RwLock::new(BTreeMap::new()) }
+    }
+
+    /// A cluster-member engine: every instance it creates runs its
+    /// router over `total_slices` hash slices but materializes summaries
+    /// only for the `owned` subset (this node's share under the cluster
+    /// spec). `stamp` is the spec's identity fingerprint; slice installs
+    /// carrying a different stamp are refused as [`Error::Incompatible`].
+    /// `owned` may be empty — a fresh node joining an existing cluster
+    /// receives its slices via rebalancing.
+    pub fn with_ownership(
+        opts: EngineOpts,
+        total_slices: usize,
+        owned: &[usize],
+        stamp: u64,
+    ) -> Result<Engine> {
+        if total_slices == 0 {
+            return Err(Error::Config("cluster slice count must be positive".into()));
+        }
+        let mut sorted = owned.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != owned.len() {
+            return Err(Error::Config("owned slice list holds duplicates".into()));
+        }
+        if sorted.last().is_some_and(|&s| s >= total_slices) {
+            return Err(Error::Config(format!(
+                "owned slice {} out of range for {total_slices} slices",
+                sorted.last().unwrap()
+            )));
+        }
+        let opts = EngineOpts { shards: opts.shards.max(1), batch: opts.batch.max(1) };
+        Ok(Engine {
+            opts,
+            ownership: Some(Ownership {
+                total: total_slices,
+                owned: Mutex::new(sorted),
+                stamp,
+            }),
+            instances: RwLock::new(BTreeMap::new()),
+        })
     }
 
     /// The engine topology.
     pub fn opts(&self) -> EngineOpts {
         self.opts
+    }
+
+    /// The cluster spec stamp this member was started under (`None`
+    /// outside cluster mode).
+    pub fn cluster_stamp(&self) -> Option<u64> {
+        self.ownership.as_ref().map(|o| o.stamp)
     }
 
     fn registry(&self) -> Result<std::sync::RwLockReadGuard<'_, BTreeMap<String, Arc<Instance>>>> {
@@ -556,14 +1000,27 @@ impl Engine {
     }
 
     /// Create a named instance from an already-built sampler prototype
-    /// (each shard gets a clone).
+    /// (each shard gets a clone). A cluster-member engine materializes
+    /// only its owned slices.
     pub fn create_from_proto(&self, name: &str, proto: Box<dyn WorSampler>) -> Result<()> {
         validate_name(name)?;
         let mut reg = self.registry_mut()?;
         if reg.contains_key(name) {
             return Err(Error::Config(format!("instance {name:?} already exists")));
         }
-        let inst = Instance::from_proto(name.to_string(), proto, self.opts);
+        let inst = match &self.ownership {
+            None => Instance::from_proto(name.to_string(), proto, self.opts),
+            Some(own) => {
+                let owned = own.owned()?.clone();
+                Instance::from_proto_owned(
+                    name.to_string(),
+                    proto,
+                    self.opts.batch,
+                    own.total,
+                    &owned,
+                )?
+            }
+        };
         reg.insert(name.to_string(), Arc::new(inst));
         Ok(())
     }
@@ -676,14 +1133,143 @@ impl Engine {
         Ok(name)
     }
 
+    /// The raw per-slice query a cluster client scatters: every owned
+    /// slice's flushed sampler state as `(slice, envelope)` pairs plus
+    /// the cluster-wide slice count (see [`Instance::encode_slices`]).
+    pub fn query_raw(&self, name: &str) -> Result<(usize, Vec<(usize, Vec<u8>)>)> {
+        self.instance(name)?.encode_slices()
+    }
+
+    /// Serialize one owned slice of an instance for transfer (the drain
+    /// half of a rebalance move).
+    pub fn encode_slice(&self, name: &str, slice: usize) -> Result<Vec<u8>> {
+        self.instance(name)?.encode_slice(slice)
+    }
+
+    /// Install a transferred slice (the other half of a rebalance move),
+    /// creating the instance if this node has never seen it. `stamp` is
+    /// the installing client's cluster stamp and must match this node's;
+    /// a mismatched stamp, slice count, batch size or sampler fingerprint
+    /// is refused as [`Error::Incompatible`] — incompatible state is
+    /// never silently mixed. Returns the instance name and its owned
+    /// slice count after the install.
+    pub fn install_slice(&self, stamp: u64, bytes: &[u8]) -> Result<(String, u64)> {
+        let Some(own) = &self.ownership else {
+            return Err(Error::State(
+                "this node is not in cluster mode — slice installs need \
+                 `worp serve --cluster`"
+                    .into(),
+            ));
+        };
+        if stamp != own.stamp {
+            return Err(Error::Incompatible(format!(
+                "cluster stamp mismatch: install carries {stamp:#018x}, this node runs \
+                 {:#018x} — different cluster name or slice count",
+                own.stamp
+            )));
+        }
+        let (name, batch, total, slice, slot) = Instance::decode_slice(bytes)?;
+        if total != own.total {
+            return Err(Error::Incompatible(format!(
+                "slice count mismatch: envelope was cut over {total} slices, this \
+                 cluster runs {}",
+                own.total
+            )));
+        }
+        let inst = {
+            let mut reg = self.registry_mut()?;
+            match reg.get(&name) {
+                Some(i) => Arc::clone(i),
+                None => {
+                    let shell =
+                        Arc::new(Instance::shell(name.clone(), slot.state.name(), batch, total));
+                    reg.insert(name.clone(), Arc::clone(&shell));
+                    shell
+                }
+            }
+        };
+        if inst.batch != batch {
+            return Err(Error::Incompatible(format!(
+                "batch mismatch: slice was cut under batch {batch}, instance {name:?} \
+                 here runs batch {}",
+                inst.batch
+            )));
+        }
+        if let Some(fp) = inst.first_fingerprint()? {
+            let new_fp = WorSampler::fingerprint(&*slot.state).value();
+            if fp != new_fp {
+                return Err(Error::Incompatible(format!(
+                    "fingerprint mismatch: instance {name:?} here holds {fp:#018x}, the \
+                     transferred slice is {new_fp:#018x} — refusing to splice \
+                     incompatible summaries"
+                )));
+            }
+        }
+        let owned_now = inst.install_slot(slice, slot)?;
+        let mut owned = own.owned()?;
+        if let Err(pos) = owned.binary_search(&slice) {
+            owned.insert(pos, slice);
+        }
+        Ok((name, owned_now as u64))
+    }
+
+    /// Release one slice of an instance (the drop half of a rebalance
+    /// move, issued only after the new owner confirmed its install).
+    /// Returns the slices still owned; the instance is dropped from the
+    /// registry when that reaches zero.
+    pub fn drop_slice(&self, name: &str, slice: usize) -> Result<u64> {
+        let Some(own) = &self.ownership else {
+            return Err(Error::State(
+                "this node is not in cluster mode — slice drops need `worp serve --cluster`"
+                    .into(),
+            ));
+        };
+        let inst = self.instance(name)?;
+        let remaining = inst.remove_slot(slice)?;
+        {
+            let mut owned = own.owned()?;
+            if let Ok(pos) = owned.binary_search(&slice) {
+                owned.remove(pos);
+            }
+        }
+        if remaining == 0 {
+            let mut reg = self.registry_mut()?;
+            // re-check under the write lock: a racing install may have
+            // re-granted a slice between remove_slot and here
+            if let Some(cur) = reg.get(name) {
+                if cur.owned_count.load(Ordering::Acquire) == 0 {
+                    reg.remove(name);
+                }
+            }
+        }
+        Ok(remaining as u64)
+    }
+
+    /// Flush every instance's pending blocks (the graceful-drain path).
+    /// Returns the total elements flushed.
+    pub fn flush_all(&self) -> Result<u64> {
+        let instances: Vec<Arc<Instance>> = self.registry()?.values().cloned().collect();
+        let mut flushed = 0;
+        for inst in &instances {
+            flushed += inst.flush()?;
+        }
+        Ok(flushed)
+    }
+
     /// Snapshot every instance into `dir` (one `*.worp` file each,
     /// written atomically via temp-file + rename — the
     /// [`crate::pipeline::CheckpointPolicy`] discipline). Returns the
-    /// number of snapshots written.
+    /// number of snapshots written. Instances that currently own no
+    /// slices (install-target shells mid-rebalance) are skipped — there
+    /// is nothing of theirs to save.
     pub fn snapshot_all(&self, dir: &Path) -> Result<usize> {
         std::fs::create_dir_all(dir)?;
         let instances: Vec<Arc<Instance>> = self.registry()?.values().cloned().collect();
+        let mut written = 0;
         for inst in &instances {
+            if inst.owned_count.load(Ordering::Acquire) == 0 {
+                continue;
+            }
             let bytes = inst.encode_snapshot()?;
             let file = dir.join(format!("{}.worp", sanitize_file_stem(inst.name())));
             let tmp = file.with_extension("worp.tmp");
@@ -694,8 +1280,9 @@ impl Engine {
                 f.sync_all()?;
             }
             std::fs::rename(&tmp, &file)?;
+            written += 1;
         }
-        Ok(instances.len())
+        Ok(written)
     }
 
     /// Restore every `*.worp` snapshot found in `dir` (instance names
@@ -920,5 +1507,217 @@ mod tests {
         let eng = Engine::new(EngineOpts::new(4, 64).unwrap());
         eng.create("w", &spec(1).windowed(100, 10)).unwrap();
         assert_eq!(eng.stats("w").unwrap().shards, 1);
+        assert_eq!(eng.stats("w").unwrap().total_slices, 1);
+    }
+
+    /// A cluster-member engine over `total` slices owning `owned`.
+    fn member(total: usize, owned: &[usize], stamp: u64) -> Engine {
+        Engine::with_ownership(EngineOpts::new(1, 64).unwrap(), total, owned, stamp).unwrap()
+    }
+
+    /// Ingest the rows of `part` that route (over `total` slices) into
+    /// `owned` — what a cluster client's partitioner would send this node.
+    fn feed(eng: &Engine, name: &str, part: &[Element], total: usize, owned: &[usize]) {
+        let r = Router::new(total);
+        let rows: Vec<Element> =
+            part.iter().copied().filter(|e| owned.contains(&r.route(e.key))).collect();
+        for b in blocks_of(&rows, 50) {
+            eng.ingest(name, &b).unwrap();
+        }
+    }
+
+    /// Scatter `query_raw` across members, order by slice, fold through
+    /// the merge tree — exactly what a ClusterClient does.
+    fn scatter_merge(members: &[&Engine], name: &str, total: usize) -> Vec<u8> {
+        let mut slices = Vec::new();
+        for m in members {
+            let (t, part) = m.query_raw(name).unwrap();
+            assert_eq!(t, total);
+            slices.extend(part);
+        }
+        slices.sort_by_key(|&(s, _)| s);
+        assert_eq!(
+            slices.iter().map(|&(s, _)| s).collect::<Vec<_>>(),
+            (0..total).collect::<Vec<_>>(),
+            "members must cover every slice exactly once"
+        );
+        let states: Vec<Box<dyn WorSampler>> =
+            slices.iter().map(|(_, b)| codec::decode_sampler(b).unwrap()).collect();
+        let merged = tree_merge(states, &Metrics::default(), |a, b| a.merge_dyn(&**b))
+            .unwrap()
+            .unwrap();
+        let mut out = Vec::new();
+        merged.encode_state(&mut out);
+        out
+    }
+
+    #[test]
+    fn partitioned_members_merge_equals_single_process() {
+        // two members own interleaved slices; routing each row to its
+        // owner and merging the scattered per-slice summaries in slice
+        // order must equal one process that owns all four slices
+        let elems = zipf_exact_stream(500, 1.1, 1e4, 2, 13);
+        let total = 4;
+        let ea = member(total, &[0, 2], 99);
+        let eb = member(total, &[1, 3], 99);
+        ea.create("x", &spec(7)).unwrap();
+        eb.create("x", &spec(7)).unwrap();
+        feed(&ea, "x", &elems, total, &[0, 2]);
+        feed(&eb, "x", &elems, total, &[1, 3]);
+        ea.flush("x").unwrap();
+        eb.flush("x").unwrap();
+        assert_eq!(
+            ea.stats("x").unwrap().accepted + eb.stats("x").unwrap().accepted,
+            elems.len() as u64
+        );
+        let eng = Engine::new(EngineOpts::new(total, 64).unwrap());
+        eng.create("x", &spec(7)).unwrap();
+        for b in blocks_of(&elems, 50) {
+            eng.ingest("x", &b).unwrap();
+        }
+        eng.flush("x").unwrap();
+        let mut want = Vec::new();
+        eng.instance("x").unwrap().merged().unwrap().encode_state(&mut want);
+        let got = scatter_merge(&[&ea, &eb], "x", total);
+        assert_eq!(got, want, "cluster scatter-merge must equal the single process bit-for-bit");
+    }
+
+    #[test]
+    fn misrouted_rows_are_rejected_whole() {
+        let total = 4;
+        let ea = member(total, &[0], 7);
+        ea.create("x", &spec(1).exact()).unwrap();
+        let r = Router::new(total);
+        let owned_key = (0u64..).find(|&k| r.route(k) == 0).unwrap();
+        let bad_key = (0u64..).find(|&k| r.route(k) != 0).unwrap();
+        // one owned row + one misrouted row: the whole block is refused
+        // before anything is applied
+        let block = ElementBlock::from_elements(&[
+            Element::new(owned_key, 1.0),
+            Element::new(bad_key, 1.0),
+        ]);
+        assert!(matches!(ea.ingest("x", &block), Err(Error::State(_))));
+        assert_eq!(ea.stats("x").unwrap().accepted, 0);
+        let ok = ElementBlock::from_elements(&[Element::new(owned_key, 1.0)]);
+        assert_eq!(ea.ingest("x", &ok).unwrap(), 1);
+    }
+
+    #[test]
+    fn slice_move_preserves_the_merge_and_updates_ownership() {
+        // drain slice 1 (with its pending block) from a, install on b,
+        // continue the stream under the new placement: the merged result
+        // must equal a single uninterrupted process
+        let elems = zipf_exact_stream(400, 1.0, 5e3, 2, 21);
+        let total = 3;
+        let ea = member(total, &[0, 1], 5);
+        let eb = member(total, &[2], 5);
+        ea.create("m", &spec(3)).unwrap();
+        eb.create("m", &spec(3)).unwrap();
+        let (head, tail) = elems.split_at(200);
+        feed(&ea, "m", head, total, &[0, 1]);
+        feed(&eb, "m", head, total, &[2]);
+        let bytes = ea.encode_slice("m", 1).unwrap();
+        // a stale stamp (different cluster identity) is refused
+        assert!(matches!(eb.install_slice(999, &bytes), Err(Error::Incompatible(_))));
+        let (name, owned_now) = eb.install_slice(5, &bytes).unwrap();
+        assert_eq!(name, "m");
+        assert_eq!(owned_now, 2);
+        // double-install is refused; then the old owner releases
+        assert!(eb.install_slice(5, &bytes).is_err());
+        assert_eq!(ea.drop_slice("m", 1).unwrap(), 1);
+        assert!(matches!(ea.encode_slice("m", 1), Err(Error::Config(_))));
+        feed(&ea, "m", tail, total, &[0]);
+        feed(&eb, "m", tail, total, &[1, 2]);
+        ea.flush("m").unwrap();
+        eb.flush("m").unwrap();
+        let eng = Engine::new(EngineOpts::new(total, 64).unwrap());
+        eng.create("m", &spec(3)).unwrap();
+        for b in blocks_of(&elems, 50) {
+            eng.ingest("m", &b).unwrap();
+        }
+        eng.flush("m").unwrap();
+        let mut want = Vec::new();
+        eng.instance("m").unwrap().merged().unwrap().encode_state(&mut want);
+        let got = scatter_merge(&[&ea, &eb], "m", total);
+        assert_eq!(got, want, "rebalanced cluster must still equal the single process");
+        // instances created after the move follow the live placement
+        ea.create("late", &spec(9).exact()).unwrap();
+        eb.create("late", &spec(9).exact()).unwrap();
+        assert_eq!(ea.stats("late").unwrap().shards, 1);
+        assert_eq!(eb.stats("late").unwrap().shards, 2);
+    }
+
+    #[test]
+    fn dropping_the_last_slice_drops_the_instance() {
+        let ea = member(2, &[0], 3);
+        let eb = member(2, &[1], 3);
+        ea.create("d", &spec(2).exact()).unwrap();
+        eb.create("d", &spec(2).exact()).unwrap();
+        let bytes = ea.encode_slice("d", 0).unwrap();
+        eb.install_slice(3, &bytes).unwrap();
+        assert_eq!(ea.drop_slice("d", 0).unwrap(), 0);
+        assert!(ea.instance("d").is_err(), "zero-owned instance must leave the registry");
+        assert_eq!(eb.stats("d").unwrap().shards, 2);
+    }
+
+    #[test]
+    fn incompatible_slice_installs_are_refused() {
+        let ea = member(2, &[0], 3);
+        let eb = member(2, &[1], 3);
+        ea.create("f", &spec(2)).unwrap();
+        eb.create("f", &spec(4)).unwrap(); // different seed → different fingerprint
+        let bytes = ea.encode_slice("f", 0).unwrap();
+        assert!(matches!(eb.install_slice(3, &bytes), Err(Error::Incompatible(_))));
+        // a non-cluster engine refuses installs outright
+        let plain = Engine::new(EngineOpts::new(2, 64).unwrap());
+        assert!(matches!(plain.install_slice(3, &bytes), Err(Error::State(_))));
+    }
+
+    #[test]
+    fn cluster_members_refuse_pass_advance_and_clock_methods() {
+        let ea = member(4, &[0, 1], 1);
+        ea.create("tp", &spec(2).two_pass()).unwrap();
+        assert!(matches!(ea.advance("tp"), Err(Error::State(_))));
+        // clock-dependent samplers cannot be sliced across nodes
+        assert!(ea.create("w", &spec(1).windowed(100, 10)).is_err());
+    }
+
+    #[test]
+    fn sliced_snapshots_roundtrip_and_full_ownership_keeps_the_legacy_tag() {
+        let ea = member(4, &[1, 3], 9);
+        ea.create("s", &spec(6)).unwrap();
+        feed(&ea, "s", &zipf_exact_stream(500, 1.0, 5e3, 1, 2), 4, &[1, 3]);
+        let accepted = ea.stats("s").unwrap().accepted;
+        assert!(accepted > 0);
+        let snap = ea.encode_snapshot("s").unwrap();
+        let env = codec::read_envelope(&snap, None).unwrap();
+        assert_eq!(env.type_tag, codec::tag::ENGINE_SNAPSHOT_SLICED);
+        let inst = Instance::decode_snapshot(&snap).unwrap();
+        assert_eq!(inst.total_slices(), 4);
+        assert_eq!(inst.owned_slices(), vec![1, 3]);
+        assert_eq!(inst.info().unwrap().accepted, accepted);
+        // corruption stays a typed error on the sliced tag too
+        for i in (0..snap.len()).step_by(11) {
+            let mut bad = snap.clone();
+            bad[i] ^= 0x08;
+            assert!(Instance::decode_snapshot(&bad).is_err(), "flip at byte {i} decoded");
+        }
+        // fully-owned instances keep the legacy byte layout
+        let eng = Engine::new(EngineOpts::new(2, 64).unwrap());
+        eng.create("s", &spec(6)).unwrap();
+        let env2 = codec::read_envelope(&eng.encode_snapshot("s").unwrap(), None).unwrap();
+        assert_eq!(env2.type_tag, codec::tag::ENGINE_SNAPSHOT);
+    }
+
+    #[test]
+    fn flush_all_flushes_every_instance() {
+        let eng = Engine::new(EngineOpts::new(2, 1024).unwrap());
+        eng.create("a", &spec(1).exact()).unwrap();
+        eng.create("b", &spec(2).exact()).unwrap();
+        eng.ingest_elements("a", &[Element::new(1, 1.0)]).unwrap();
+        eng.ingest_elements("b", &[Element::new(2, 1.0), Element::new(3, 1.0)]).unwrap();
+        assert_eq!(eng.flush_all().unwrap(), 3);
+        assert_eq!(eng.stats("a").unwrap().pending, 0);
+        assert_eq!(eng.stats("b").unwrap().pending, 0);
     }
 }

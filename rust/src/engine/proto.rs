@@ -40,6 +40,11 @@
 //! | `STATS` | name | [`InstanceInfo`] |
 //! | `SNAPSHOT` | name | snapshot bytes (length-prefixed) |
 //! | `RESTORE` | snapshot bytes (length-prefixed) | name |
+//! | `QUERY_RAW` | name | total `u64`, count, (slice `u64`, envelope)× |
+//! | `STATS_ALL` | empty | [`ServerStats`] |
+//! | `SLICE_SNAPSHOT` | name, slice `u64` | slice envelope (length-prefixed) |
+//! | `SLICE_INSTALL` | stamp `u64`, slice envelope (length-prefixed) | name, owned `u64` |
+//! | `SLICE_DROP` | name, slice `u64` | remaining `u64` |
 //!
 //! Strings are `u64` length + UTF-8 bytes ([`codec::put_str`]); names
 //! obey [`crate::engine::validate_name`]. `python/worp_client.py` speaks
@@ -96,6 +101,17 @@ pub mod op {
     pub const SNAPSHOT: u16 = 12;
     /// Register an instance from snapshot bytes.
     pub const RESTORE: u16 = 13;
+    /// Per-slice flushed sampler envelopes (the cluster scatter query:
+    /// the client merges them locally in slice order).
+    pub const QUERY_RAW: u16 = 14;
+    /// Whole-server counters + per-instance stats in one frame.
+    pub const STATS_ALL: u16 = 15;
+    /// Serialize one owned slice of an instance (rebalance drain).
+    pub const SLICE_SNAPSHOT: u16 = 16;
+    /// Install a transferred slice under a cluster stamp (rebalance).
+    pub const SLICE_INSTALL: u16 = 17;
+    /// Release an owned slice after its new owner confirmed (rebalance).
+    pub const SLICE_DROP: u16 = 18;
 }
 
 /// Response opcode for a failed request (any opcode).
@@ -403,6 +419,7 @@ pub fn put_info(out: &mut Vec<u8>, i: &InstanceInfo) {
     codec::put_str(out, &i.method);
     for v in [
         i.shards,
+        i.total_slices,
         i.batch,
         i.processed,
         i.pending,
@@ -424,6 +441,7 @@ pub fn read_info(r: &mut wire::Reader<'_>) -> Result<InstanceInfo> {
         name,
         method,
         shards: r.u64()?,
+        total_slices: r.u64()?,
         batch: r.u64()?,
         processed: r.u64()?,
         pending: r.u64()?,
@@ -432,6 +450,78 @@ pub fn read_info(r: &mut wire::Reader<'_>) -> Result<InstanceInfo> {
         passes: r.u64()?,
         pass: r.u64()?,
         fingerprint: r.u64()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Server stats
+
+/// Whole-server counters (`STATS_ALL`): the serving loop's
+/// [`crate::pipeline::Metrics`] snapshot, connection gauges, and every
+/// instance's [`InstanceInfo`] — what `worp client stats --all` and
+/// `worp cluster status` render per node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerStats {
+    /// Elements ingested over the wire since the server started.
+    pub elements: u64,
+    /// Ingest frames (batches) handled.
+    pub batches: u64,
+    /// Sketch merges performed by queries.
+    pub merges: u64,
+    /// Checkpoint snapshots written.
+    pub snapshots: u64,
+    /// Snapshots restored into the engine.
+    pub restores: u64,
+    /// Connections currently open.
+    pub active_connections: u64,
+    /// Connections accepted over the server's lifetime.
+    pub total_connections: u64,
+    /// Per-instance stats, name-sorted.
+    pub instances: Vec<InstanceInfo>,
+}
+
+/// Append the wire form of a [`ServerStats`].
+pub fn put_server_stats(out: &mut Vec<u8>, s: &ServerStats) {
+    for v in [
+        s.elements,
+        s.batches,
+        s.merges,
+        s.snapshots,
+        s.restores,
+        s.active_connections,
+        s.total_connections,
+    ] {
+        wire::put_u64(out, v);
+    }
+    wire::put_usize(out, s.instances.len());
+    for i in &s.instances {
+        put_info(out, i);
+    }
+}
+
+/// Read the wire form of a [`ServerStats`].
+pub fn read_server_stats(r: &mut wire::Reader<'_>) -> Result<ServerStats> {
+    let elements = r.u64()?;
+    let batches = r.u64()?;
+    let merges = r.u64()?;
+    let snapshots = r.u64()?;
+    let restores = r.u64()?;
+    let active_connections = r.u64()?;
+    let total_connections = r.u64()?;
+    let n = r.seq_len(16)?;
+    let mut instances = Vec::with_capacity(n);
+    for _ in 0..n {
+        instances.push(read_info(r)?);
+    }
+    Ok(ServerStats {
+        elements,
+        batches,
+        merges,
+        snapshots,
+        restores,
+        active_connections,
+        total_connections,
+        instances,
     })
 }
 
@@ -564,6 +654,7 @@ mod tests {
             name: "ns/x".into(),
             method: "1pass".into(),
             shards: 4,
+            total_slices: 12,
             batch: 4096,
             processed: 100,
             pending: 3,
@@ -578,6 +669,22 @@ mod tests {
         let mut r = wire::Reader::new(&buf);
         assert_eq!(read_info(&mut r).unwrap(), info);
         r.finish("info").unwrap();
+
+        let stats = ServerStats {
+            elements: 1000,
+            batches: 10,
+            merges: 4,
+            snapshots: 2,
+            restores: 1,
+            active_connections: 3,
+            total_connections: 17,
+            instances: vec![info.clone()],
+        };
+        let mut buf = Vec::new();
+        put_server_stats(&mut buf, &stats);
+        let mut r = wire::Reader::new(&buf);
+        assert_eq!(read_server_stats(&mut r).unwrap(), stats);
+        r.finish("stats").unwrap();
 
         let pts = vec![
             RankFreqPoint { rank: 1.0, freq: 10.0 },

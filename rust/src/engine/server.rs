@@ -18,6 +18,7 @@ use super::Engine;
 use crate::codec::{self, wire};
 use crate::data::ElementBlock;
 use crate::error::{Error, Result};
+use crate::pipeline::metrics::Metrics;
 use crate::pipeline::CheckpointPolicy;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
@@ -33,11 +34,34 @@ pub struct ServeOpts {
     /// `policy.every_batches()` ingest requests (crash recovery for the
     /// served registry; `None` = no periodic snapshots).
     pub checkpoint: Option<CheckpointPolicy>,
+    /// Cap on concurrently served connections; an accept over the cap is
+    /// answered with one best-effort error frame and closed.
+    pub max_connections: usize,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { max_frame: proto::DEFAULT_MAX_FRAME, checkpoint: None }
+        ServeOpts {
+            max_frame: proto::DEFAULT_MAX_FRAME,
+            checkpoint: None,
+            max_connections: 1024,
+        }
+    }
+}
+
+/// Connection gauges served back by `STATS_ALL`.
+struct ConnGauge {
+    active: AtomicU64,
+    total: AtomicU64,
+}
+
+/// Decrements the active-connection gauge when a handler thread exits,
+/// however it exits.
+struct ActiveGuard(Arc<ConnGauge>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -91,19 +115,45 @@ impl Drop for Server {
 
 fn accept_loop(listener: TcpListener, engine: Arc<Engine>, opts: ServeOpts, stop: Arc<AtomicBool>) {
     let ingests = Arc::new(AtomicU64::new(0));
+    let metrics = Arc::new(Metrics::default());
+    let conns = Arc::new(ConnGauge { active: AtomicU64::new(0), total: AtomicU64::new(0) });
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
         let conn = listener.accept();
         if stop.load(Ordering::SeqCst) {
+            // handler threads drain on their own; dropping the handles
+            // detaches them, matching Server::stop's contract
             return;
         }
+        // reap finished handler threads — without this the handle list
+        // (and each thread's exit bookkeeping) grows for the life of the
+        // process
+        handles.retain(|h| !h.is_finished());
         match conn {
-            Ok((stream, _peer)) => {
+            Ok((mut stream, _peer)) => {
+                if conns.active.load(Ordering::Acquire) >= opts.max_connections as u64 {
+                    // over the cap: one best-effort refusal frame, then
+                    // close — never silently hang the client
+                    let e = Error::State(format!(
+                        "server is at its cap of {} concurrent connections — retry later",
+                        opts.max_connections
+                    ));
+                    let _ =
+                        proto::write_frame(&mut stream, proto::RESP_ERR, &proto::encode_error(&e));
+                    continue;
+                }
+                conns.active.fetch_add(1, Ordering::AcqRel);
+                conns.total.fetch_add(1, Ordering::Relaxed);
+                let guard = ActiveGuard(Arc::clone(&conns));
                 let engine = Arc::clone(&engine);
                 let opts = opts.clone();
                 let ingests = Arc::clone(&ingests);
-                std::thread::spawn(move || {
-                    serve_connection(stream, &engine, &opts, &ingests);
-                });
+                let metrics = Arc::clone(&metrics);
+                let conns = Arc::clone(&conns);
+                handles.push(std::thread::spawn(move || {
+                    let _guard = guard;
+                    serve_connection(stream, &engine, &opts, &ingests, &metrics, &conns);
+                }));
             }
             Err(e) => {
                 // transient accept errors (EMFILE, resets) must not kill
@@ -121,6 +171,8 @@ fn serve_connection(
     engine: &Engine,
     opts: &ServeOpts,
     ingests: &AtomicU64,
+    metrics: &Metrics,
+    conns: &ConnGauge,
 ) {
     let _ = stream.set_nodelay(true);
     loop {
@@ -140,7 +192,7 @@ fn serve_connection(
         // a panic inside a handler must neither kill the server nor
         // leave the client hanging without a response
         let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            handle_request(engine, opts, ingests, &frame)
+            handle_request(engine, opts, ingests, metrics, conns, &frame)
         }))
         .unwrap_or_else(|_| {
             Err(Error::Pipeline(
@@ -163,6 +215,8 @@ fn handle_request(
     engine: &Engine,
     opts: &ServeOpts,
     ingests: &AtomicU64,
+    metrics: &Metrics,
+    conns: &ConnGauge,
     frame: &Frame,
 ) -> Result<Vec<u8>> {
     let mut r = wire::Reader::new(&frame.payload);
@@ -197,9 +251,11 @@ fn handle_request(
             r.finish("ingest request")?;
             let mut block = ElementBlock::with_capacity(n);
             wire::read_block_into(rec, &mut block)?;
+            let len = block.len() as u64;
             let accepted = engine.ingest(&name, &block)?;
+            metrics.note_batch(len);
             wire::put_u64(&mut out, accepted);
-            maybe_snapshot(engine, opts, ingests);
+            maybe_snapshot(engine, opts, ingests, metrics);
         }
         op::FLUSH => {
             let name = codec::read_str(&mut r)?;
@@ -215,6 +271,7 @@ fn handle_request(
             let name = codec::read_str(&mut r)?;
             r.finish("sample request")?;
             codec::put_sample(&mut out, &engine.sample(&name)?);
+            metrics.note_merge(); // one merge fold per served query
         }
         op::MOMENT => {
             let name = codec::read_str(&mut r)?;
@@ -240,12 +297,64 @@ fn handle_request(
             let bytes = engine.encode_snapshot(&name)?;
             wire::put_usize(&mut out, bytes.len());
             out.extend_from_slice(&bytes);
+            metrics.note_snapshot();
         }
         op::RESTORE => {
             let bytes = codec::take_nested(&mut r)?.to_vec();
             r.finish("restore request")?;
             let name = engine.restore_snapshot(&bytes)?;
             codec::put_str(&mut out, &name);
+            metrics.note_restore();
+        }
+        op::QUERY_RAW => {
+            let name = codec::read_str(&mut r)?;
+            r.finish("query-raw request")?;
+            let (total, slices) = engine.query_raw(&name)?;
+            wire::put_usize(&mut out, total);
+            wire::put_usize(&mut out, slices.len());
+            for (s, bytes) in &slices {
+                wire::put_usize(&mut out, *s);
+                wire::put_usize(&mut out, bytes.len());
+                out.extend_from_slice(bytes);
+            }
+        }
+        op::STATS_ALL => {
+            r.finish("stats-all request")?;
+            let stats = proto::ServerStats {
+                elements: metrics.elements(),
+                batches: metrics.batches(),
+                merges: metrics.merges(),
+                snapshots: metrics.snapshots(),
+                restores: metrics.restores(),
+                active_connections: conns.active.load(Ordering::Acquire),
+                total_connections: conns.total.load(Ordering::Relaxed),
+                instances: engine.list()?,
+            };
+            proto::put_server_stats(&mut out, &stats);
+        }
+        op::SLICE_SNAPSHOT => {
+            let name = codec::read_str(&mut r)?;
+            let slice = read_slice_index(&mut r)?;
+            r.finish("slice-snapshot request")?;
+            let bytes = engine.encode_slice(&name, slice)?;
+            wire::put_usize(&mut out, bytes.len());
+            out.extend_from_slice(&bytes);
+            metrics.note_snapshot();
+        }
+        op::SLICE_INSTALL => {
+            let stamp = r.u64()?;
+            let bytes = codec::take_nested(&mut r)?.to_vec();
+            r.finish("slice-install request")?;
+            let (name, owned) = engine.install_slice(stamp, &bytes)?;
+            codec::put_str(&mut out, &name);
+            wire::put_u64(&mut out, owned);
+            metrics.note_restore();
+        }
+        op::SLICE_DROP => {
+            let name = codec::read_str(&mut r)?;
+            let slice = read_slice_index(&mut r)?;
+            r.finish("slice-drop request")?;
+            wire::put_u64(&mut out, engine.drop_slice(&name, slice)?);
         }
         other => {
             return Err(Error::Codec(format!(
@@ -256,14 +365,29 @@ fn handle_request(
     Ok(out)
 }
 
+/// Read a wire slice index, capped so the cast to `usize` is lossless on
+/// every platform (range against the instance happens in the engine).
+fn read_slice_index(r: &mut wire::Reader<'_>) -> Result<usize> {
+    let slice = r.u64()?;
+    if slice > u32::MAX as u64 {
+        return Err(Error::Codec(format!("slice index out of range: {slice}")));
+    }
+    Ok(slice as usize)
+}
+
 /// Periodic registry snapshots: every `every_batches` ingest requests,
 /// write every instance to the checkpoint directory (atomic per file).
-fn maybe_snapshot(engine: &Engine, opts: &ServeOpts, ingests: &AtomicU64) {
+fn maybe_snapshot(engine: &Engine, opts: &ServeOpts, ingests: &AtomicU64, metrics: &Metrics) {
     let Some(policy) = &opts.checkpoint else { return };
     let n = ingests.fetch_add(1, Ordering::Relaxed) + 1;
     if n % policy.every_batches() == 0 {
-        if let Err(e) = engine.snapshot_all(policy.dir()) {
-            eprintln!("worp serve: periodic snapshot failed: {e}");
+        match engine.snapshot_all(policy.dir()) {
+            Ok(written) => {
+                for _ in 0..written {
+                    metrics.note_snapshot();
+                }
+            }
+            Err(e) => eprintln!("worp serve: periodic snapshot failed: {e}"),
         }
     }
 }

@@ -94,6 +94,7 @@
 
 pub mod api;
 pub mod cli;
+pub mod cluster;
 pub mod codec;
 pub mod config;
 pub mod coordinator;
@@ -112,5 +113,6 @@ pub mod util;
 
 pub use api::builder::{Method, Worp};
 pub use api::{Finalize, Mergeable, MultiPass, Persist, StreamSummary, WorSampler};
+pub use cluster::{ClusterClient, ClusterSpec};
 pub use engine::{Engine, EngineOpts};
 pub use error::{Error, Result};
