@@ -5,15 +5,23 @@ Speaks the exact frame layout of rust/src/engine/proto.rs — including
 the keyed FNV/SplitMix frame checksum — over a plain TCP socket, with no
 dependencies beyond the standard library.
 
-Frame layout (little-endian):
+Frame layout (little-endian). Two header versions share a 16-byte
+prefix; version 2 inserts a client-assigned request id so requests can
+be pipelined (the server answers in arrival order and echoes the id):
 
-    offset  size  field
-         0     4  magic "WRPC"
-         4     2  version (1)
+    offset  size  v1 field                v2 field
+         0     4  magic "WRPC"            magic "WRPC"
+         4     2  version (1)             version (2)
          6     2  opcode (responses set bit 15; 0x7FFF = error)
-         8     8  payload length
-        16     8  checksum = fnv(seed, header[0..16] ++ payload)
-        24     -  payload
+         8     8  payload length          payload length
+        16     8  checksum over [0..16)   request id
+        24     -  payload                 checksum over [0..24)
+        32     -                          payload
+
+This client always sends v2 frames and decodes both versions. Any
+transport or framing error poisons the connection: further calls raise
+a typed "state" error until a new `Client` is connected (mirrors
+rust/src/engine/client.rs).
 
 Usage as a library:
 
@@ -21,16 +29,20 @@ Usage as a library:
     with Client("127.0.0.1", 7070) as c:
         c.create("ns/clicks", method="exact", k=64)
         c.ingest("ns/clicks", [(42, 1.0), (7, 2.5)])
+        c.ingest_stream("ns/clicks", rows, chunk=1024, window=32)
         c.flush("ns/clicks")
         sample = c.sample("ns/clicks")
         print(sample["entries"], c.moment("ns/clicks", 2.0))
 
-Usage as a script (the CI smoke drives `selftest`):
+Usage as a script (the CI smoke drives `selftest` and
+`pipelined-selftest`):
 
     python3 worp_client.py --addr 127.0.0.1:7070 selftest
+    python3 worp_client.py --addr 127.0.0.1:7070 pipelined-selftest
 """
 
 import argparse
+import collections
 import socket
 import struct
 import sys
@@ -39,7 +51,9 @@ MASK64 = (1 << 64) - 1
 
 MAGIC = b"WRPC"
 VERSION = 1
+VERSION_PIPELINED = 2
 HEADER_LEN = 24
+HEADER_LEN_V2 = 32
 FRAME_CHECKSUM_SEED = 0xC0DEC0DE5EED0002
 RESP_ERR = 0x7FFF
 MAX_FRAME = 32 << 20
@@ -153,8 +167,14 @@ class WorpError(Exception):
         self.message = message
 
 
-def _pack_frame(opcode, payload):
-    head = MAGIC + struct.pack("<HHQ", VERSION, opcode, len(payload))
+def _pack_frame(opcode, payload, req_id=None):
+    """A wire frame: v1 when `req_id` is None, else v2 with the id
+    checksummed alongside the header prefix."""
+    if req_id is None:
+        head = MAGIC + struct.pack("<HHQ", VERSION, opcode, len(payload))
+        checksum = hash_bytes2(FRAME_CHECKSUM_SEED, head, payload)
+        return head + struct.pack("<Q", checksum) + payload
+    head = MAGIC + struct.pack("<HHQQ", VERSION_PIPELINED, opcode, len(payload), req_id)
     checksum = hash_bytes2(FRAME_CHECKSUM_SEED, head, payload)
     return head + struct.pack("<Q", checksum) + payload
 
@@ -170,19 +190,29 @@ def _read_exact(sock, n):
 
 
 def _read_frame(sock):
-    head = _read_exact(sock, HEADER_LEN)
-    if head[:4] != MAGIC:
-        raise WorpError("codec", f"bad frame magic {head[:4]!r}")
-    version, opcode, length = struct.unpack("<HHQ", head[4:16])
-    if version != VERSION:
+    """Decode one frame of either header version; returns
+    (opcode, request id, payload) with id 0 for v1 frames."""
+    prefix = _read_exact(sock, 16)
+    if prefix[:4] != MAGIC:
+        raise WorpError("codec", f"bad frame magic {prefix[:4]!r}")
+    version, opcode, length = struct.unpack("<HHQ", prefix[4:16])
+    if version not in (VERSION, VERSION_PIPELINED):
         raise WorpError("codec", f"unsupported protocol version {version}")
     if length > MAX_FRAME:
         raise WorpError("codec", f"oversized frame payload ({length} bytes)")
-    (checksum,) = struct.unpack("<Q", head[16:24])
+    if version == VERSION_PIPELINED:
+        tail = _read_exact(sock, 16)
+        req_id, checksum = struct.unpack("<QQ", tail)
+        summed = prefix + tail[:8]
+    else:
+        tail = _read_exact(sock, 8)
+        (checksum,) = struct.unpack("<Q", tail)
+        req_id = 0
+        summed = prefix
     payload = _read_exact(sock, length)
-    if hash_bytes2(FRAME_CHECKSUM_SEED, head[:16], payload) != checksum:
+    if hash_bytes2(FRAME_CHECKSUM_SEED, summed, payload) != checksum:
         raise WorpError("codec", "frame checksum mismatch")
-    return opcode, payload
+    return opcode, req_id, payload
 
 
 # --- payload primitives (mirror codec::wire) --------------------------------
@@ -264,11 +294,16 @@ def _read_server_stats(r):
 
 
 class Client:
-    """One connection to a `worp serve` process."""
+    """One connection to a `worp serve` process. Requests go out as v2
+    frames with a client-assigned id; any transport or framing error
+    poisons the connection (`broken` set, further calls raise a typed
+    "state" error) — a typed engine error does not."""
 
     def __init__(self, host="127.0.0.1", port=7070, timeout=60.0):
         self.sock = socket.create_connection((host, port), timeout=timeout)
         self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._next_req = 0
+        self.broken = None
 
     def close(self):
         self.sock.close()
@@ -279,15 +314,43 @@ class Client:
     def __exit__(self, *_exc):
         self.close()
 
+    def _check_usable(self):
+        if self.broken is not None:
+            raise WorpError(
+                "state",
+                f"connection is poisoned after a transport error ({self.broken}) "
+                "— reconnect",
+            )
+
+    def _poison(self, err):
+        if self.broken is None:
+            self.broken = str(err)
+        return err if isinstance(err, WorpError) else WorpError("io", str(err))
+
+    def _next_id(self):
+        self._next_req = (self._next_req + 1) & MASK64
+        return self._next_req
+
     def _call(self, opcode, payload=b""):
-        self.sock.sendall(_pack_frame(opcode, payload))
-        resp_op, resp = _read_frame(self.sock)
+        self._check_usable()
+        req_id = self._next_id()
+        try:
+            self.sock.sendall(_pack_frame(opcode, payload, req_id))
+            resp_op, got, resp = _read_frame(self.sock)
+        except (OSError, WorpError) as e:
+            raise self._poison(e)
+        if got != req_id:
+            raise self._poison(
+                WorpError("codec", f"response for request {got}, expected {req_id}")
+            )
         if resp_op == RESP_ERR:
             r = _Reader(resp)
             code = r.u16()
             raise WorpError(ERROR_KINDS.get(code, f"unknown({code})"), r.string())
         if resp_op != (0x8000 | opcode):
-            raise WorpError("codec", f"response opcode {resp_op:#06x} mismatch")
+            raise self._poison(
+                WorpError("codec", f"response opcode {resp_op:#06x} mismatch")
+            )
         return _Reader(resp)
 
     def ping(self):
@@ -334,6 +397,77 @@ class Client:
         r = self._call(OP_INGEST, payload)
         accepted = r.u64()
         r.finish()
+        return accepted
+
+    def ingest_stream(self, name, elements, chunk=1024, window=32):
+        """Pipelined ingest: stream (key, value) pairs as INGEST frames
+        of `chunk` rows with up to `window` frames in flight before the
+        oldest ack is reconciled. Acks are FIFO (the server answers in
+        arrival order), the first error is surfaced, and frame chunking
+        never moves the engine's per-shard batch boundaries — so the
+        result is bit-identical to lockstep `ingest`. Returns the
+        lifetime accepted count from the final ack. Aborting mid-stream
+        leaves acks unreconciled and poisons the connection."""
+        self._check_usable()
+        chunk = max(1, int(chunk))
+        window = max(1, int(window))
+        in_flight = collections.deque()
+        accepted = 0
+
+        def reap_one():
+            nonlocal accepted
+            want = in_flight.popleft()
+            try:
+                resp_op, got, resp = _read_frame(self.sock)
+            except (OSError, WorpError) as e:
+                raise self._poison(e)
+            if got != want:
+                raise self._poison(
+                    WorpError("codec", f"response for request {got}, expected {want}")
+                )
+            if resp_op == RESP_ERR:
+                r = _Reader(resp)
+                code = r.u16()
+                raise WorpError(ERROR_KINDS.get(code, f"unknown({code})"), r.string())
+            if resp_op != (0x8000 | OP_INGEST):
+                raise self._poison(
+                    WorpError("codec", f"response opcode {resp_op:#06x} mismatch")
+                )
+            r = _Reader(resp)
+            accepted = r.u64()
+            r.finish()
+
+        def send_chunk(batch):
+            if len(in_flight) >= window:
+                reap_one()
+            payload = _put_str(name) + struct.pack("<Q", len(batch))
+            for key, val in batch:
+                payload += struct.pack("<Qd", key, val)
+            req_id = self._next_id()
+            try:
+                self.sock.sendall(_pack_frame(OP_INGEST, payload, req_id))
+            except OSError as e:
+                raise self._poison(e)
+            in_flight.append(req_id)
+
+        try:
+            batch = []
+            for key, val in elements:
+                batch.append((key, val))
+                if len(batch) == chunk:
+                    send_chunk(batch)
+                    batch = []
+            if batch:
+                send_chunk(batch)
+            while in_flight:
+                reap_one()
+        except BaseException:
+            # unreconciled acks leave the stream desynced — refuse reuse
+            if in_flight and self.broken is None:
+                self.broken = (
+                    f"ingest stream aborted with {len(in_flight)} acks outstanding"
+                )
+            raise
         return accepted
 
     def flush(self, name):
@@ -450,6 +584,68 @@ def selftest(client):
     )
 
 
+def pipelined_selftest(host, port):
+    """Pipelined ≡ lockstep, over the real wire: load the same stream
+    into the same instance name twice — once with lockstep per-chunk
+    `ingest`, once pipelined through `ingest_stream` — and require the
+    two snapshots byte-identical. Then verify the poisoning discipline:
+    a connection desynced by garbage bytes must refuse reuse with a
+    typed "state" error."""
+    name = "smoke/py-pipelined"
+    elems = [((k * 2654435761) % 50_000, float(k % 11) + 0.5) for k in range(4000)]
+
+    def load(ingest):
+        with Client(host, port) as c:
+            try:
+                c.drop(name)
+            except WorpError:
+                pass  # fresh server
+            c.create(name, method="exact", k=64, seed=13)
+            accepted = ingest(c)
+            assert accepted == len(elems), f"accepted {accepted} of {len(elems)}"
+            c.flush(name)
+            snap = c.snapshot(name)
+            c.drop(name)
+            return snap
+
+    def lockstep(c):
+        accepted = 0
+        for i in range(0, len(elems), 256):
+            accepted = c.ingest(name, elems[i : i + 256])
+        return accepted
+
+    snap_lockstep = load(lockstep)
+    snap_pipelined = load(lambda c: c.ingest_stream(name, elems, chunk=256, window=8))
+    assert snap_pipelined == snap_lockstep, (
+        f"pipelined snapshot ({len(snap_pipelined)} bytes) differs from "
+        f"lockstep ({len(snap_lockstep)} bytes)"
+    )
+
+    bad = Client(host, port)
+    try:
+        bad.sock.sendall(b"this is not a WRPC frame, the stream is desynced")
+        try:
+            bad.ping()
+        except WorpError as e:
+            assert e.kind in ("codec", "io"), e
+        else:
+            raise AssertionError("garbage on the stream did not surface an error")
+        assert bad.broken is not None, "transport error did not poison the client"
+        try:
+            bad.ping()
+        except WorpError as e:
+            assert e.kind == "state", e
+        else:
+            raise AssertionError("poisoned client accepted reuse")
+    finally:
+        bad.close()
+    print(
+        f"pipelined selftest ok: {len(elems)} rows, pipelined snapshot "
+        f"({len(snap_pipelined)} bytes) byte-identical to lockstep; poisoned "
+        f"connection refused reuse"
+    )
+
+
 def _parse_nodes(nodes_arg):
     """Parse "a=host:port,b=host:port" into an ordered {name: (host, port)}."""
     members = {}
@@ -531,9 +727,17 @@ def main():
     )
     ap.add_argument(
         "action",
-        choices=["ping", "list", "stats-all", "selftest", "cluster-selftest"],
+        choices=[
+            "ping",
+            "list",
+            "stats-all",
+            "selftest",
+            "pipelined-selftest",
+            "cluster-selftest",
+        ],
         help=(
             "ping | list | stats-all | selftest (deterministic end-to-end session) "
+            "| pipelined-selftest (pipelined == lockstep byte-identity + poisoning) "
             "| cluster-selftest (verify shared placement against N members)"
         ),
     )
@@ -544,6 +748,9 @@ def main():
         cluster_selftest(args.nodes, args.slices)
         return 0
     host, _, port = args.addr.rpartition(":")
+    if args.action == "pipelined-selftest":
+        pipelined_selftest(host or "127.0.0.1", int(port))
+        return 0
     with Client(host or "127.0.0.1", int(port)) as client:
         if args.action == "ping":
             client.ping()

@@ -128,12 +128,13 @@ fn main() {
     // ---- machine-readable scalar/batch/block suite (perf trajectory)
     // runs before the XLA section, which early-returns when the PJRT
     // runtime is unavailable
-    println!("\n§Perf — scalar/batch/block suite (BENCH_PR6.json)\n");
+    println!("\n§Perf — scalar/batch/block + served-ingest suite (BENCH_PR7.json)\n");
     let opts = worp::perf::PerfOpts::full();
-    let records = worp::perf::run_suite(&opts);
-    match worp::perf::write_json("BENCH_PR6.json", &opts, &records) {
-        Ok(()) => println!("\nwrote {} records to BENCH_PR6.json\n", records.len()),
-        Err(e) => println!("\n(could not write BENCH_PR6.json: {e})\n"),
+    let mut records = worp::perf::run_suite(&opts);
+    records.extend(worp::perf::run_served_suite(&opts));
+    match worp::perf::write_json("BENCH_PR7.json", &opts, &records) {
+        Ok(()) => println!("\nwrote {} records to BENCH_PR7.json\n", records.len()),
+        Err(e) => println!("\n(could not write BENCH_PR7.json: {e})\n"),
     }
 
     // ---- XLA offload (if artifacts exist)

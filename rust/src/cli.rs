@@ -137,6 +137,11 @@ COMMANDS:
                   --workers <n> --batch <n>
                                          per-instance shards / block size
                   --max-connections <n>  concurrent connection cap (1024)
+                  --io-threads <n>       reactor worker threads serving
+                                         connections (default 4)
+                  --idle-timeout <secs>  evict connections idle this long
+                                         with a typed error frame
+                                         (default 60; 0 disables)
                   --checkpoint-dir <dir> --checkpoint-every <ingests>
                                          periodically snapshot every
                                          instance; restored on startup
@@ -150,6 +155,9 @@ COMMANDS:
                   ping | list
                   create   --name <ns/x>  plus `sample` sampler options
                   ingest   --name <ns/x>  stream the generated workload
+                           --pipeline <n> in-flight frame window (default
+                                          from [server] pipeline_window;
+                                          1 = lockstep)
                   flush    --name <ns/x>
                   advance  --name <ns/x>  (multi-pass methods)
                   sample   --name <ns/x>
@@ -176,7 +184,7 @@ COMMANDS:
     bench       scalar vs batch vs SoA-block ingestion throughput per
                 summary, written as machine-readable JSON
                   --smoke                 small CI profile (default: full)
-                  --out <path>            output file (default BENCH_PR6.json)
+                  --out <path>            output file (default BENCH_PR7.json)
                   --stream-len <n> --n <keys> --batch <n> --iters <n> --k <n>
     info        print runtime / artifact status
     help        show this text
@@ -562,10 +570,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
     };
     let engine = std::sync::Arc::new(engine);
+    let idle_secs: u64 = args.parse_or("idle-timeout", cfg.server_idle_timeout_secs)?;
     let mut opts = ServeOpts {
         max_frame: cfg.server_max_frame_mib << 20,
         checkpoint: None,
         max_connections: args.parse_or("max-connections", 1024)?,
+        io_threads: args.parse_or("io-threads", crate::engine::server::DEFAULT_IO_THREADS)?,
+        idle_timeout: (idle_secs > 0).then(|| std::time::Duration::from_secs(idle_secs)),
     };
     let mut checkpoint_dir = None;
     if !cfg.checkpoint_dir.is_empty() {
@@ -668,25 +679,33 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
         "ingest" => {
             let n = name()?;
-            // stream the configured workload in blocks; frame chunking
-            // does not affect the engine's per-shard block boundaries
+            // stream the configured workload in pipelined blocks; frame
+            // chunking does not affect the engine's per-shard block
+            // boundaries, and acks are reconciled asynchronously inside
+            // the in-flight window
             let chunk = cfg.batch.max(1);
+            let window: usize = args.parse_or("pipeline", cfg.server_pipeline_window)?;
+            let mut client = client.with_pipeline_window(window);
+            let mut pipe = client.ingest_pipe(&n)?;
             let mut block = crate::data::ElementBlock::with_capacity(chunk);
             let mut sent = 0u64;
-            let mut accepted = 0u64;
             for e in make_stream(&cfg) {
                 block.push(e.key, e.val);
                 if block.len() == chunk {
-                    accepted = client.ingest(&n, &block)?;
+                    pipe.send(&block)?;
                     sent += block.len() as u64;
                     block.clear();
                 }
             }
             if !block.is_empty() {
                 sent += block.len() as u64;
-                accepted = client.ingest(&n, &block)?;
+                pipe.send(&block)?;
             }
-            println!("ingested {sent} elements into {n} (lifetime accepted={accepted})");
+            let accepted = pipe.finish()?;
+            println!(
+                "ingested {sent} elements into {n} (pipeline window {window}, \
+                 lifetime accepted={accepted})"
+            );
         }
         "flush" => {
             let n = name()?;
@@ -879,19 +898,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         }
         "ingest" => {
             let n = name()?;
+            // one session for the whole workload: every member's pipe
+            // streams chunks concurrently, acks reconciled in the window
             let chunk = cfg.batch.max(1);
-            let mut block = crate::data::ElementBlock::with_capacity(chunk);
-            let mut sent = 0u64;
+            let mut session = cc.ingest_session(&n, chunk)?;
             for e in make_stream(&cfg) {
-                block.push(e.key, e.val);
-                if block.len() == chunk {
-                    sent += cc.ingest(&n, &block)?;
-                    block.clear();
-                }
+                session.push(e.key, e.val)?;
             }
-            if !block.is_empty() {
-                sent += cc.ingest(&n, &block)?;
-            }
+            let sent = session.finish()?;
             println!("ingested {sent} elements into {n} across the cluster");
         }
         "sample" => {
@@ -970,10 +984,11 @@ fn cmd_psi(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `worp bench`: run the scalar/batch/block ingestion suite and emit the
-/// machine-readable perf artifact (`BENCH_PR4.json` by default). Smoke
-/// mode is the CI profile — it exists to catch panics and keep the
-/// artifact schema alive, not to produce stable numbers.
+/// `worp bench`: run the scalar/batch/block ingestion suite plus the
+/// served-ingest (pipelined TCP) suite and emit the machine-readable
+/// perf artifact (`BENCH_PR7.json` by default). Smoke mode is the CI
+/// profile — it exists to catch panics and keep the artifact schema
+/// alive, not to produce stable numbers.
 fn cmd_bench(args: &Args) -> Result<()> {
     let mut opts = if args.has_flag("smoke") {
         crate::perf::PerfOpts::smoke()
@@ -985,12 +1000,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     opts.batch = args.parse_or("batch", opts.batch)?;
     opts.iters = args.parse_or("iters", opts.iters)?;
     opts.k = args.parse_or("k", opts.k)?;
-    let out = args.str_or("out", "BENCH_PR6.json");
+    let out = args.str_or("out", "BENCH_PR7.json");
     println!(
         "bench: stream_len={} n_keys={} batch={} iters={} k={} smoke={}\n",
         opts.stream_len, opts.n_keys, opts.batch, opts.iters, opts.k, opts.smoke
     );
-    let records = crate::perf::run_suite(&opts);
+    let mut records = crate::perf::run_suite(&opts);
+    records.extend(crate::perf::run_served_suite(&opts));
     crate::perf::write_json(&out, &opts, &records)?;
     println!("\nwrote {} records to {out}", records.len());
     Ok(())

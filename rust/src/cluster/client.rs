@@ -24,7 +24,7 @@ use super::spec::ClusterSpec;
 use crate::api::{MultiPass, WorSampler};
 use crate::codec;
 use crate::data::ElementBlock;
-use crate::engine::client::Client;
+use crate::engine::client::{Client, IngestPipe};
 use crate::engine::proto::{InstanceSpec, ServerStats};
 use crate::error::{Error, Result};
 use crate::estimate::moment_estimate;
@@ -143,24 +143,36 @@ impl ClusterClient {
     }
 
     /// Route every row of `block` to the member owning its hash slice
-    /// and ship the per-member sub-blocks. Returns the rows ingested by
-    /// this call. Not atomic across members: if a member fails mid-way,
-    /// rows already shipped to earlier members stay ingested (each
-    /// member's own block is still all-or-nothing).
+    /// and ship the per-member sub-blocks (one pipelined frame per
+    /// member). Returns the rows ingested by this call. Not atomic
+    /// across members: if a member fails mid-way, rows already shipped
+    /// to earlier members stay ingested (each member's own block is
+    /// still all-or-nothing). For bulk loads prefer one
+    /// [`ClusterClient::ingest_session`] over many `ingest` calls — the
+    /// session keeps every member's pipe streaming across blocks.
     pub fn ingest(&mut self, name: &str, block: &ElementBlock) -> Result<u64> {
-        let mut parts: Vec<ElementBlock> = Vec::new();
-        parts.resize_with(self.conns.len(), ElementBlock::new);
-        for i in 0..block.len() {
-            let key = block.keys[i];
-            let m = self.assignment[self.router.route(key)];
-            parts[m].push(key, block.vals[i]);
+        let mut session = self.ingest_session(name, block.len().max(1))?;
+        session.push_block(block)?;
+        session.finish()
+    }
+
+    /// Open a pipelined ingest session across the whole cluster: rows
+    /// pushed in are routed client-side, staged into per-member chunks
+    /// of `chunk` rows, and streamed down every member's own pipelined
+    /// connection without awaiting each ack. Per-member row order is
+    /// exactly arrival order and frame chunking never moves a
+    /// `batch`-boundary (those are per-shard, server-side), so a
+    /// session ingest is bit-identical to lockstep per-block ingest.
+    pub fn ingest_session(&mut self, name: &str, chunk: usize) -> Result<ClusterIngest<'_>> {
+        let chunk = chunk.max(1);
+        let assignment = &self.assignment;
+        let router = &self.router;
+        let mut pipes = Vec::with_capacity(self.conns.len());
+        for c in self.conns.iter_mut() {
+            pipes.push(c.ingest_pipe(name)?);
         }
-        for (m, part) in parts.iter().enumerate() {
-            if !part.is_empty() {
-                self.conns[m].ingest(name, part)?;
-            }
-        }
-        Ok(block.len() as u64)
+        let staged = (0..pipes.len()).map(|_| ElementBlock::with_capacity(chunk)).collect();
+        Ok(ClusterIngest { pipes, staged, assignment, router, chunk, rows: 0 })
     }
 
     /// Flush every member's pending blocks for `name`; returns the total
@@ -362,5 +374,76 @@ impl ClusterClient {
         self.conns = conns;
         self.spec = new_spec;
         Ok(moves)
+    }
+}
+
+/// A pipelined ingest session over every cluster member at once (from
+/// [`ClusterClient::ingest_session`]). Rows are staged per member and
+/// each member's chunks stream down its own [`IngestPipe`]; call
+/// [`ClusterIngest::finish`] to flush remainders and reconcile every
+/// outstanding ack. Dropping a session mid-flight poisons the affected
+/// member connections (their pipes still hold unreconciled acks), so a
+/// half-shipped load can never be silently resumed on a desynced stream.
+pub struct ClusterIngest<'a> {
+    /// One pipelined ingest stream per member, parallel to `staged`.
+    pipes: Vec<IngestPipe<'a>>,
+    staged: Vec<ElementBlock>,
+    /// slice → member index (borrowed from the client; routing here must
+    /// match the routing the members enforce server-side).
+    assignment: &'a [usize],
+    router: &'a Router,
+    chunk: usize,
+    rows: u64,
+}
+
+impl ClusterIngest<'_> {
+    /// Route one row to its owning member's staged chunk, shipping the
+    /// chunk down that member's pipe when it fills.
+    pub fn push(&mut self, key: u64, val: f64) -> Result<()> {
+        let m = self.assignment[self.router.route(key)];
+        self.staged[m].push(key, val);
+        self.rows += 1;
+        if self.staged[m].len() >= self.chunk {
+            self.pipes[m].send(&self.staged[m])?;
+            self.staged[m].clear();
+        }
+        Ok(())
+    }
+
+    /// Push every row of `block` through the session, in order.
+    pub fn push_block(&mut self, block: &ElementBlock) -> Result<()> {
+        for i in 0..block.len() {
+            self.push(block.keys[i], block.vals[i])?;
+        }
+        Ok(())
+    }
+
+    /// Rows pushed into the session so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Acks not yet reconciled, summed over every member's pipe.
+    pub fn in_flight(&self) -> usize {
+        self.pipes.iter().map(|p| p.in_flight()).sum()
+    }
+
+    /// Ship every partially-filled chunk, then drain every member's
+    /// outstanding acks. Returns the rows ingested by this session; the
+    /// first error from any member is surfaced (and poisons that
+    /// member's connection if it was a transport error).
+    pub fn finish(mut self) -> Result<u64> {
+        for m in 0..self.pipes.len() {
+            if self.staged[m].is_empty() {
+                continue;
+            }
+            let part = std::mem::replace(&mut self.staged[m], ElementBlock::new());
+            self.pipes[m].send(&part)?;
+        }
+        let rows = self.rows;
+        for pipe in self.pipes {
+            pipe.finish()?;
+        }
+        Ok(rows)
     }
 }

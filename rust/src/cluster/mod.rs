@@ -49,5 +49,5 @@
 pub mod client;
 pub mod spec;
 
-pub use client::ClusterClient;
+pub use client::{ClusterClient, ClusterIngest};
 pub use spec::{ClusterSpec, Member, CLUSTER_HRW_SEED, CLUSTER_STAMP_SEED};

@@ -278,6 +278,14 @@ pub struct PipelineConfig {
     /// Maximum accepted wire-protocol frame payload, in MiB (oversized
     /// frames are answered with a typed error and the connection closed).
     pub server_max_frame_mib: usize,
+    /// Seconds a served connection may sit idle (no complete frame)
+    /// before the server evicts it with a typed error frame. 0 disables
+    /// eviction (a slow peer still cannot stall others — reads are
+    /// deadlined per frame at the default budget).
+    pub server_idle_timeout_secs: u64,
+    /// Default in-flight window for pipelined client ingest (frames sent
+    /// before the oldest ack is reconciled). Must be ≥ 1.
+    pub server_pipeline_window: usize,
 }
 
 impl Default for PipelineConfig {
@@ -307,6 +315,8 @@ impl Default for PipelineConfig {
             stream_len: 1_000_000,
             server_addr: "127.0.0.1:7070".into(),
             server_max_frame_mib: 32,
+            server_idle_timeout_secs: crate::engine::server::DEFAULT_IDLE_TIMEOUT_SECS,
+            server_pipeline_window: crate::engine::client::DEFAULT_PIPELINE_WINDOW,
         }
     }
 }
@@ -351,6 +361,11 @@ impl PipelineConfig {
             stream_len: doc.i64_or("workload", "stream_len", d.stream_len as i64) as u64,
             server_addr: doc.str_or("server", "addr", &d.server_addr),
             server_max_frame_mib: doc.usize_or("server", "max_frame_mib", d.server_max_frame_mib),
+            server_idle_timeout_secs: doc
+                .i64_or("server", "idle_timeout_secs", d.server_idle_timeout_secs as i64)
+                .max(0) as u64,
+            server_pipeline_window: doc
+                .usize_or("server", "pipeline_window", d.server_pipeline_window),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -392,6 +407,11 @@ impl PipelineConfig {
         }
         if self.server_max_frame_mib == 0 {
             return Err(Error::Config("server.max_frame_mib must be positive".into()));
+        }
+        if self.server_pipeline_window == 0 {
+            return Err(Error::Config(
+                "server.pipeline_window must be at least 1 (1 = lockstep)".into(),
+            ));
         }
         if !self.checkpoint_dir.is_empty() && self.checkpoint_every == 0 {
             return Err(Error::Config(
@@ -549,19 +569,33 @@ stream_len = 50000
 
     #[test]
     fn server_section_parses_and_validates() {
-        let doc = Document::parse("[server]\naddr = \"0.0.0.0:9999\"\nmax_frame_mib = 8\n")
-            .unwrap();
+        let doc = Document::parse(
+            "[server]\naddr = \"0.0.0.0:9999\"\nmax_frame_mib = 8\n\
+             idle_timeout_secs = 5\npipeline_window = 16\n",
+        )
+        .unwrap();
         let cfg = PipelineConfig::from_document(&doc).unwrap();
         assert_eq!(cfg.server_addr, "0.0.0.0:9999");
         assert_eq!(cfg.server_max_frame_mib, 8);
+        assert_eq!(cfg.server_idle_timeout_secs, 5);
+        assert_eq!(cfg.server_pipeline_window, 16);
         // defaults apply when the section is absent
         let cfg = PipelineConfig::default();
         assert_eq!(cfg.server_addr, "127.0.0.1:7070");
+        assert_eq!(cfg.server_idle_timeout_secs, 60);
+        assert_eq!(cfg.server_pipeline_window, 32);
+        // idle_timeout_secs = 0 means "eviction off" and is valid
+        let doc = Document::parse("[server]\nidle_timeout_secs = 0\n").unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.server_idle_timeout_secs, 0);
         let mut c = PipelineConfig::default();
         c.server_addr = String::new();
         assert!(c.validate().is_err());
         let mut c = PipelineConfig::default();
         c.server_max_frame_mib = 0;
+        assert!(c.validate().is_err());
+        let mut c = PipelineConfig::default();
+        c.server_pipeline_window = 0;
         assert!(c.validate().is_err());
     }
 

@@ -1,5 +1,17 @@
 //! `worp client`: a blocking TCP client for the [`super::server`]
-//! protocol — one request frame out, one response frame in.
+//! protocol. Query and lifecycle calls are strict request/response;
+//! ingest can additionally run **pipelined** through
+//! [`Client::ingest_pipe`] — INGEST frames stream out without awaiting
+//! each ack (bounded in-flight window), the FIFO acks are reconciled
+//! asynchronously against their request ids, and the first server
+//! error surfaces on the next `send`/`finish`.
+//!
+//! Transport discipline: after any I/O or framing error the stream
+//! position can no longer be trusted, so the client marks itself
+//! **poisoned** and every later call fails fast with a typed
+//! [`Error::State`] instead of reading desynced bytes as garbage
+//! frames — reconnect to recover. Typed engine errors (e.g. "no such
+//! instance") leave the connection healthy.
 //!
 //! ```no_run
 //! use worp::engine::client::Client;
@@ -11,7 +23,11 @@
 //! c.create("ns/clicks", &InstanceSpec::from_config(&PipelineConfig::default())).unwrap();
 //! let mut block = ElementBlock::new();
 //! block.push(42, 1.0);
-//! c.ingest("ns/clicks", &block).unwrap();
+//! // pipelined: stream blocks without awaiting each ack
+//! let mut pipe = c.ingest_pipe("ns/clicks").unwrap();
+//! pipe.send(&block).unwrap();
+//! let accepted = pipe.finish().unwrap();
+//! # let _ = accepted;
 //! c.flush("ns/clicks").unwrap();
 //! let sample = c.sample("ns/clicks").unwrap();
 //! # let _ = sample;
@@ -24,13 +40,24 @@ use crate::data::ElementBlock;
 use crate::error::{Error, Result};
 use crate::estimate::rankfreq::RankFreqPoint;
 use crate::sampler::Sample;
+use std::collections::VecDeque;
 use std::net::TcpStream;
 use std::time::Duration;
+
+/// Default bound on in-flight pipelined INGEST frames
+/// (`[server] pipeline_window`).
+pub const DEFAULT_PIPELINE_WINDOW: usize = 32;
 
 /// A connected protocol client.
 pub struct Client {
     stream: TcpStream,
     max_frame: usize,
+    /// Monotonic request-id source (v2 frames).
+    next_req: u64,
+    /// Why the transport is poisoned (`None` = healthy).
+    broken: Option<String>,
+    /// In-flight cap for [`Client::ingest_pipe`] sessions.
+    window: usize,
 }
 
 impl Client {
@@ -39,12 +66,24 @@ impl Client {
         let stream = TcpStream::connect(addr)
             .map_err(|e| Error::Config(format!("cannot connect to {addr}: {e}")))?;
         let _ = stream.set_nodelay(true);
-        Ok(Client { stream, max_frame: proto::DEFAULT_MAX_FRAME })
+        Ok(Client {
+            stream,
+            max_frame: proto::DEFAULT_MAX_FRAME,
+            next_req: 0,
+            broken: None,
+            window: DEFAULT_PIPELINE_WINDOW,
+        })
     }
 
     /// Cap the response payloads this client accepts.
     pub fn with_max_frame(mut self, max_frame: usize) -> Client {
         self.max_frame = max_frame;
+        self
+    }
+
+    /// Bound the in-flight window of pipelined ingest sessions.
+    pub fn with_pipeline_window(mut self, window: usize) -> Client {
+        self.window = window.max(1);
         self
     }
 
@@ -55,20 +94,67 @@ impl Client {
         Ok(self)
     }
 
+    /// Whether the transport is poisoned (see module docs).
+    pub fn is_broken(&self) -> bool {
+        self.broken.is_some()
+    }
+
+    /// Fail fast on a poisoned transport.
+    fn check_usable(&self) -> Result<()> {
+        match &self.broken {
+            Some(why) => Err(Error::State(format!(
+                "connection is poisoned after a transport error ({why}) — reconnect"
+            ))),
+            None => Ok(()),
+        }
+    }
+
+    /// Record a transport/framing failure and hand the error back: the
+    /// stream position is untrusted from here on.
+    fn poison(&mut self, e: Error) -> Error {
+        if self.broken.is_none() {
+            self.broken = Some(e.to_string());
+        }
+        e
+    }
+
+    fn next_id(&mut self) -> u64 {
+        self.next_req = self.next_req.wrapping_add(1);
+        self.next_req
+    }
+
     /// One request/response round-trip; server-side errors come back as
     /// their typed [`Error`] variants.
     fn call(&mut self, opcode: u16, payload: &[u8]) -> Result<Vec<u8>> {
-        proto::write_frame(&mut self.stream, opcode, payload)?;
-        let frame = proto::read_frame(&mut self.stream, self.max_frame)?
-            .ok_or_else(|| Error::Pipeline("server closed the connection mid-request".into()))?;
+        self.check_usable()?;
+        let req_id = self.next_id();
+        if let Err(e) = proto::write_frame_v2(&mut self.stream, opcode, req_id, payload) {
+            return Err(self.poison(e));
+        }
+        let frame = match proto::read_frame(&mut self.stream, self.max_frame) {
+            Ok(Some(f)) => f,
+            Ok(None) => {
+                return Err(self.poison(Error::Pipeline(
+                    "server closed the connection mid-request".into(),
+                )))
+            }
+            Err(e) => return Err(self.poison(e)),
+        };
+        if frame.req_id != req_id {
+            return Err(self.poison(Error::Codec(format!(
+                "response carries request id {} but {} is outstanding",
+                frame.req_id, req_id
+            ))));
+        }
         if frame.opcode == proto::RESP_ERR {
+            // a typed engine error: the stream is still frame-aligned
             return Err(proto::decode_error(&frame.payload));
         }
         if frame.opcode != proto::resp_ok(opcode) {
-            return Err(Error::Codec(format!(
+            return Err(self.poison(Error::Codec(format!(
                 "response opcode {:#06x} does not answer request {:#06x}",
                 frame.opcode, opcode
-            )));
+            ))));
         }
         Ok(frame.payload)
     }
@@ -107,14 +193,33 @@ impl Client {
         Ok(infos)
     }
 
-    /// Ingest a block of updates; returns the instance's lifetime
-    /// accepted-element count.
+    /// Ingest a block of updates in strict lockstep; returns the
+    /// instance's lifetime accepted-element count. For bulk loads,
+    /// [`Client::ingest_pipe`] streams blocks without awaiting each ack.
     pub fn ingest(&mut self, name: &str, block: &ElementBlock) -> Result<u64> {
         let mut p = name_payload(name);
         wire::put_usize(&mut p, block.len());
         wire::put_block(&mut p, block);
         let resp = self.call(op::INGEST, &p)?;
         read_u64(&resp, "ingest response")
+    }
+
+    /// Open a pipelined ingest session: [`IngestPipe::send`] streams
+    /// INGEST frames without awaiting each ack (at most the configured
+    /// window in flight — see [`Client::with_pipeline_window`]), and
+    /// [`IngestPipe::finish`] reconciles the remaining acks. Because the
+    /// server handles frames in arrival order, a pipelined session is
+    /// bit-identical to the same blocks sent in lockstep.
+    pub fn ingest_pipe(&mut self, name: &str) -> Result<IngestPipe<'_>> {
+        self.check_usable()?;
+        let window = self.window;
+        Ok(IngestPipe {
+            client: self,
+            name: name.to_string(),
+            window,
+            in_flight: VecDeque::with_capacity(window),
+            accepted: 0,
+        })
     }
 
     /// Flush pending blocks; returns the flushed element count.
@@ -255,6 +360,103 @@ impl Client {
         wire::put_u64(&mut p, slice);
         let resp = self.call(op::SLICE_DROP, &p)?;
         read_u64(&resp, "slice-drop response")
+    }
+}
+
+/// A pipelined INGEST session (see [`Client::ingest_pipe`]).
+///
+/// Error discipline: the first server error — typed engine refusal or
+/// transport failure — surfaces from the next `send`/`finish`. A
+/// session dropped with acks still outstanding poisons the client
+/// (those unread response frames would desync any later call), so
+/// always run a session to `finish` on the happy path.
+pub struct IngestPipe<'a> {
+    client: &'a mut Client,
+    name: String,
+    window: usize,
+    /// Request ids awaiting their acks, send order (acks arrive FIFO).
+    in_flight: VecDeque<u64>,
+    /// Lifetime accepted count from the most recent ack.
+    accepted: u64,
+}
+
+impl IngestPipe<'_> {
+    /// Stream one block. Blocks only when the in-flight window is full,
+    /// in which case the oldest ack is reconciled first.
+    pub fn send(&mut self, block: &ElementBlock) -> Result<()> {
+        if self.in_flight.len() >= self.window {
+            self.reap_one()?;
+        }
+        let req_id = self.client.next_id();
+        let mut p = name_payload(&self.name);
+        wire::put_usize(&mut p, block.len());
+        wire::put_block(&mut p, block);
+        if let Err(e) = proto::write_frame_v2(&mut self.client.stream, op::INGEST, req_id, &p) {
+            return Err(self.client.poison(e));
+        }
+        self.in_flight.push_back(req_id);
+        Ok(())
+    }
+
+    /// Blocks in flight (unreconciled acks).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Reconcile the oldest outstanding ack.
+    fn reap_one(&mut self) -> Result<()> {
+        let expect = self
+            .in_flight
+            .pop_front()
+            .expect("reap_one called with nothing in flight");
+        let frame = match proto::read_frame(&mut self.client.stream, self.client.max_frame) {
+            Ok(Some(f)) => f,
+            Ok(None) => {
+                return Err(self.client.poison(Error::Pipeline(
+                    "server closed the connection with ingest acks outstanding".into(),
+                )))
+            }
+            Err(e) => return Err(self.client.poison(e)),
+        };
+        if frame.req_id != expect {
+            return Err(self.client.poison(Error::Codec(format!(
+                "ingest ack carries request id {} but {expect} is the oldest in flight",
+                frame.req_id
+            ))));
+        }
+        if frame.opcode == proto::RESP_ERR {
+            return Err(proto::decode_error(&frame.payload));
+        }
+        if frame.opcode != proto::resp_ok(op::INGEST) {
+            return Err(self.client.poison(Error::Codec(format!(
+                "response opcode {:#06x} does not answer a pipelined ingest",
+                frame.opcode
+            ))));
+        }
+        self.accepted = read_u64(&frame.payload, "ingest response")?;
+        Ok(())
+    }
+
+    /// Reconcile every outstanding ack; returns the instance's lifetime
+    /// accepted-element count after the last one.
+    pub fn finish(mut self) -> Result<u64> {
+        while !self.in_flight.is_empty() {
+            self.reap_one()?;
+        }
+        Ok(self.accepted)
+    }
+}
+
+impl Drop for IngestPipe<'_> {
+    fn drop(&mut self) {
+        // unread acks would answer the *next* call on this client with
+        // the wrong frames — that connection state is unrecoverable
+        if !self.in_flight.is_empty() {
+            let n = self.in_flight.len();
+            let _ = self.client.poison(Error::State(format!(
+                "ingest pipe dropped with {n} acks outstanding"
+            )));
+        }
     }
 }
 

@@ -341,6 +341,68 @@ impl Instance {
         Ok(self.accepted.fetch_add(matched, Ordering::Relaxed) + matched)
     }
 
+    /// Route-and-buffer a run of raw 16-byte wire element records
+    /// (key `u64` ‖ value `f64`, little-endian — the INGEST frame
+    /// payload layout) straight into the per-shard pending blocks,
+    /// skipping the intermediate [`ElementBlock`] a decode step would
+    /// allocate. Same ownership pre-scan, same ascending lock order,
+    /// same `batch`-boundary flushes as [`Instance::ingest`], so the
+    /// result is bit-identical to decoding first and ingesting after.
+    pub fn ingest_records(&self, records: &[u8]) -> Result<u64> {
+        if records.len() % 16 != 0 {
+            return Err(Error::Codec(format!(
+                "element-record run of {} bytes is not a multiple of the 16-byte record size",
+                records.len()
+            )));
+        }
+        let key_of = |rec: &[u8]| {
+            let mut kb = [0u8; 8];
+            kb.copy_from_slice(&rec[..8]);
+            u64::from_le_bytes(kb)
+        };
+        if !self.fully_owned() {
+            for rec in records.chunks_exact(16) {
+                let key = key_of(rec);
+                let s = self.router.route(key);
+                if !self.owned(s) {
+                    return Err(Error::State(format!(
+                        "key {key} routes to slice {s}/{}, which this node does not own — \
+                         stale cluster spec or mid-rebalance client?",
+                        self.slots.len()
+                    )));
+                }
+            }
+        }
+        let mut matched = 0u64;
+        for s in 0..self.slots.len() {
+            if !self.owned(s) {
+                continue;
+            }
+            let mut guard = lock_slot(&self.slots[s])?;
+            let Some(ShardSlot { state, pending }) = guard.as_mut() else {
+                return Err(Error::State(format!(
+                    "slice {s} was drained from this node mid-ingest — retry against the \
+                     new owner"
+                )));
+            };
+            for rec in records.chunks_exact(16) {
+                let key = key_of(rec);
+                if self.router.route(key) != s {
+                    continue;
+                }
+                let mut vb = [0u8; 8];
+                vb.copy_from_slice(&rec[8..16]);
+                pending.push(key, f64::from_le_bytes(vb));
+                matched += 1;
+                if pending.len() == self.batch {
+                    state.process_block(pending);
+                    pending.clear();
+                }
+            }
+        }
+        Ok(self.accepted.fetch_add(matched, Ordering::Relaxed) + matched)
+    }
+
     /// Flush every pending partial block into its shard summary (insert
     /// an explicit block boundary — do this before end-of-stream queries
     /// or snapshots meant to match an offline run). Returns the number of
@@ -1060,6 +1122,13 @@ impl Engine {
         self.ingest(name, &ElementBlock::from_elements(elems))
     }
 
+    /// Zero-copy wire ingest: route raw 16-byte element records (the
+    /// INGEST frame payload) straight into the per-shard pending blocks
+    /// (see [`Instance::ingest_records`]).
+    pub fn ingest_records(&self, name: &str, records: &[u8]) -> Result<u64> {
+        self.instance(name)?.ingest_records(records)
+    }
+
     /// Drive a whole replayable source through an instance (the offline /
     /// coordinator path: parallel per-shard scans). Returns the pass
     /// metrics.
@@ -1384,6 +1453,33 @@ mod tests {
         let sb = eng.sample("off").unwrap();
         assert_eq!(sa.keys(), sb.keys());
         assert_eq!(sa.tau.to_bits(), sb.tau.to_bits());
+    }
+
+    #[test]
+    fn record_ingest_equals_block_ingest_bit_for_bit() {
+        // the zero-copy wire path (raw 16-byte records straight into the
+        // pending blocks) must be indistinguishable from decoding into an
+        // ElementBlock first — same boundaries, same per-shard order
+        let elems = zipf_exact_stream(500, 1.2, 1e4, 2, 21);
+        let eng = Engine::new(EngineOpts::new(3, 128).unwrap());
+        eng.create("blk", &spec(6)).unwrap();
+        eng.create("rec", &spec(6)).unwrap();
+        for b in blocks_of(&elems, 333) {
+            let a = eng.ingest("blk", &b).unwrap();
+            let mut raw = Vec::with_capacity(b.len() * 16);
+            crate::codec::wire::put_block(&mut raw, &b);
+            let r = eng.ingest_records("rec", &raw).unwrap();
+            assert_eq!(a, r, "accepted counts must track exactly");
+        }
+        eng.flush("blk").unwrap();
+        eng.flush("rec").unwrap();
+        let mut a = Vec::new();
+        eng.instance("blk").unwrap().merged().unwrap().encode_state(&mut a);
+        let mut b = Vec::new();
+        eng.instance("rec").unwrap().merged().unwrap().encode_state(&mut b);
+        assert_eq!(a, b, "record ingest and block ingest must agree bit-for-bit");
+        // a ragged record run is a typed codec error, not a partial apply
+        assert!(matches!(eng.ingest_records("rec", &[0u8; 15]), Err(Error::Codec(_))));
     }
 
     #[test]

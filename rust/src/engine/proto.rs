@@ -4,24 +4,38 @@
 //!
 //! # Frame layout (all integers little-endian)
 //!
+//! Two frame versions are spoken on the same socket. Version 1 is the
+//! original lockstep layout; version 2 ([`VERSION_PIPELINED`]) inserts a
+//! client-assigned **request id** between the length and the checksum,
+//! which is what makes pipelining safe: a client may stream many request
+//! frames without awaiting each ack and reconcile the acks
+//! asynchronously, because every response echoes the id (and the
+//! version) of the request it answers. Decoders accept both versions —
+//! old v1 clients keep working against a v2 server.
+//!
 //! ```text
-//! offset  size  field
-//!      0     4  magic           "WRPC"
-//!      4     2  version         wire::VERSION (currently 1)
-//!      6     2  opcode          see [`op`]; responses set bit 15
-//!      8     8  payload length  must not exceed the receiver's cap
-//!     16     8  checksum        hash_bytes2(FRAME_CHECKSUM_SEED,
-//!                               header[0..16] ++ payload)
-//!     24     …  payload         per-opcode layout (below)
+//! version 1 (24-byte header)          version 2 (32-byte header)
+//! offset  size  field                 offset  size  field
+//!      0     4  magic "WRPC"               0     4  magic "WRPC"
+//!      4     2  version = 1                4     2  version = 2
+//!      6     2  opcode                     6     2  opcode
+//!      8     8  payload length             8     8  payload length
+//!     16     8  checksum over             16     8  request id
+//!               header[0..16]++payload    24     8  checksum over
+//!     24     …  payload                             header[0..24]++payload
+//!                                         32     …  payload
 //! ```
 //!
 //! Every request is answered with exactly one response frame: opcode
 //! `0x8000 | request_opcode` on success, [`RESP_ERR`] on failure (payload
 //! = error code `u16` + display string — the typed [`Error`] variants
-//! round-trip). A receiver that cannot trust its stream position any
-//! more (bad magic/version/checksum, oversized or truncated frame) sends
-//! one best-effort error frame and closes the connection; it never
-//! panics and never hangs on malformed input.
+//! round-trip), always in the version of the request and echoing its
+//! request id (v1 requests are answered v1; their implicit id is 0). The
+//! server handles frames in arrival order and answers in that order, so
+//! pipelined acks arrive FIFO. A receiver that cannot trust its stream
+//! position any more (bad magic/version/checksum, oversized or truncated
+//! frame) sends one best-effort error frame and closes the connection;
+//! it never panics and never hangs on malformed input.
 //!
 //! # Request payloads
 //!
@@ -61,8 +75,18 @@ use std::io::{Read, Write};
 /// Magic prefix of a protocol frame.
 pub const FRAME_MAGIC: [u8; 4] = *b"WRPC";
 
-/// Fixed frame header length in bytes.
+/// Frame header length of a version-1 frame in bytes.
 pub const FRAME_HEADER_LEN: usize = 24;
+
+/// Frame header length of a version-2 frame (the request id adds 8).
+pub const FRAME_HEADER_LEN_V2: usize = 32;
+
+/// The pipelined frame version: carries a client-assigned request id so
+/// acks can be reconciled asynchronously. Distinct from
+/// [`wire::VERSION`], which versions the crate's *on-disk* formats
+/// (envelopes, checkpoints) — version-1 frames happen to share that
+/// number, but the two version spaces evolve independently.
+pub const VERSION_PIPELINED: u16 = 2;
 
 /// Seed of the frame checksum (keyed FNV/SplitMix via
 /// [`crate::util::hashing::hash_bytes2`] — corruption detection, not
@@ -128,11 +152,17 @@ pub fn resp_ok(request_op: u16) -> u16 {
 pub struct Frame {
     /// Opcode (request, ok-response or [`RESP_ERR`]).
     pub opcode: u16,
+    /// Frame version it arrived in (1 or [`VERSION_PIPELINED`]) — a
+    /// server answers in the same version.
+    pub version: u16,
+    /// Client-assigned request id (0 for version-1 frames, which cannot
+    /// carry one). Responses echo the id of the request they answer.
+    pub req_id: u64,
     /// Payload bytes (checksum already verified).
     pub payload: Vec<u8>,
 }
 
-/// Append a complete frame (header + payload) to `out`.
+/// Append a complete version-1 frame (header + payload) to `out`.
 pub fn put_frame(out: &mut Vec<u8>, opcode: u16, payload: &[u8]) {
     let start = out.len();
     out.extend_from_slice(&FRAME_MAGIC);
@@ -145,7 +175,34 @@ pub fn put_frame(out: &mut Vec<u8>, opcode: u16, payload: &[u8]) {
     out.extend_from_slice(payload);
 }
 
-/// Write one frame to a stream.
+/// Append a complete version-2 frame carrying a request id. The
+/// checksum covers the whole 24-byte checksummed prefix (magic through
+/// request id), so a corrupted id is caught like any other header bit.
+pub fn put_frame_v2(out: &mut Vec<u8>, opcode: u16, req_id: u64, payload: &[u8]) {
+    let start = out.len();
+    out.extend_from_slice(&FRAME_MAGIC);
+    wire::put_u16(out, VERSION_PIPELINED);
+    wire::put_u16(out, opcode);
+    wire::put_u64(out, payload.len() as u64);
+    wire::put_u64(out, req_id);
+    let checksum =
+        crate::util::hashing::hash_bytes2(FRAME_CHECKSUM_SEED, &out[start..start + 24], payload);
+    wire::put_u64(out, checksum);
+    out.extend_from_slice(payload);
+}
+
+/// Append a frame in the given version (v1 frames drop the request id —
+/// they have nowhere to carry it). This is what response paths use to
+/// answer in the version the request arrived in.
+pub fn put_frame_versioned(out: &mut Vec<u8>, version: u16, opcode: u16, req_id: u64, payload: &[u8]) {
+    if version == VERSION_PIPELINED {
+        put_frame_v2(out, opcode, req_id, payload);
+    } else {
+        put_frame(out, opcode, payload);
+    }
+}
+
+/// Write one version-1 frame to a stream.
 pub fn write_frame(w: &mut impl Write, opcode: u16, payload: &[u8]) -> Result<()> {
     let mut buf = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
     put_frame(&mut buf, opcode, payload);
@@ -154,23 +211,48 @@ pub fn write_frame(w: &mut impl Write, opcode: u16, payload: &[u8]) -> Result<()
     Ok(())
 }
 
-/// Read one frame from a stream. `Ok(None)` on a clean end-of-stream
-/// (the peer closed between frames); [`Error::Codec`] on malformed bytes
-/// (bad magic/version, checksum mismatch, payload over `max_payload`,
-/// truncation inside a frame); [`Error::Io`] on transport errors. Never
-/// panics, and never allocates more than `max_payload` from untrusted
-/// lengths.
+/// Write one version-2 frame (request id included) to a stream.
+pub fn write_frame_v2(w: &mut impl Write, opcode: u16, req_id: u64, payload: &[u8]) -> Result<()> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER_LEN_V2 + payload.len());
+    put_frame_v2(&mut buf, opcode, req_id, payload);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one frame in the given version (see [`put_frame_versioned`]).
+pub fn write_frame_versioned(
+    w: &mut impl Write,
+    version: u16,
+    opcode: u16,
+    req_id: u64,
+    payload: &[u8],
+) -> Result<()> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER_LEN_V2 + payload.len());
+    put_frame_versioned(&mut buf, version, opcode, req_id, payload);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from a stream, accepting both frame versions.
+/// `Ok(None)` on a clean end-of-stream (the peer closed between frames);
+/// [`Error::Codec`] on malformed bytes (bad magic/version, checksum
+/// mismatch, payload over `max_payload`, truncation inside a frame);
+/// [`Error::Io`] on transport errors. Never panics, and never allocates
+/// more than `max_payload` from untrusted lengths.
 pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<Option<Frame>> {
-    let mut header = [0u8; FRAME_HEADER_LEN];
+    // the version-independent prefix: magic, version, opcode, length
+    let mut prefix = [0u8; 16];
     // distinguish clean EOF (no bytes at a frame boundary) from a frame
     // truncated mid-header
     let mut got = 0;
-    while got < header.len() {
-        match r.read(&mut header[got..]) {
+    while got < prefix.len() {
+        match r.read(&mut prefix[got..]) {
             Ok(0) if got == 0 => return Ok(None),
             Ok(0) => {
                 return Err(Error::Codec(format!(
-                    "truncated frame: {got} of {FRAME_HEADER_LEN} header bytes"
+                    "truncated frame: {got} of 16 header-prefix bytes"
                 )))
             }
             Ok(n) => got += n,
@@ -178,32 +260,53 @@ pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<Option<Frame>
             Err(e) => return Err(e.into()),
         }
     }
-    if header[..4] != FRAME_MAGIC {
+    if prefix[..4] != FRAME_MAGIC {
         return Err(Error::Codec(format!(
             "bad frame magic {:02x?} (expected {:02x?})",
-            &header[..4],
+            &prefix[..4],
             FRAME_MAGIC
         )));
     }
-    let version = u16::from_le_bytes([header[4], header[5]]);
-    if version != wire::VERSION {
+    let version = u16::from_le_bytes([prefix[4], prefix[5]]);
+    if version != wire::VERSION && version != VERSION_PIPELINED {
         return Err(Error::Codec(format!(
-            "unsupported protocol version {version} (this build speaks {})",
-            wire::VERSION
+            "unsupported protocol version {version} (this build speaks 1 and {VERSION_PIPELINED})"
         )));
     }
-    let opcode = u16::from_le_bytes([header[6], header[7]]);
+    let opcode = u16::from_le_bytes([prefix[6], prefix[7]]);
     let mut lb = [0u8; 8];
-    lb.copy_from_slice(&header[8..16]);
+    lb.copy_from_slice(&prefix[8..16]);
     let len = u64::from_le_bytes(lb);
     if len > max_payload as u64 {
         return Err(Error::Codec(format!(
             "frame payload of {len} bytes exceeds the {max_payload}-byte cap"
         )));
     }
-    let mut cb = [0u8; 8];
-    cb.copy_from_slice(&header[16..24]);
-    let checksum = u64::from_le_bytes(cb);
+    // header tail: v1 = checksum; v2 = request id + checksum
+    let truncated =
+        |e: std::io::Error| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                Error::Codec("truncated frame: stream ended inside the header".into())
+            }
+            _ => Error::Io(e),
+        };
+    let (req_id, checksum, checksummed_prefix) = if version == VERSION_PIPELINED {
+        let mut tail = [0u8; 16];
+        r.read_exact(&mut tail).map_err(truncated)?;
+        let mut ib = [0u8; 8];
+        ib.copy_from_slice(&tail[..8]);
+        let mut cb = [0u8; 8];
+        cb.copy_from_slice(&tail[8..16]);
+        // the checksummed region is the 24-byte prefix incl. request id
+        let mut hdr = [0u8; 24];
+        hdr[..16].copy_from_slice(&prefix);
+        hdr[16..24].copy_from_slice(&tail[..8]);
+        (u64::from_le_bytes(ib), u64::from_le_bytes(cb), hdr.to_vec())
+    } else {
+        let mut cb = [0u8; 8];
+        r.read_exact(&mut cb).map_err(truncated)?;
+        (0u64, u64::from_le_bytes(cb), prefix.to_vec())
+    };
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)
         .map_err(|e| match e.kind() {
@@ -212,13 +315,14 @@ pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<Option<Frame>
             }
             _ => Error::Io(e),
         })?;
-    if crate::util::hashing::hash_bytes2(FRAME_CHECKSUM_SEED, &header[..16], &payload) != checksum
+    if crate::util::hashing::hash_bytes2(FRAME_CHECKSUM_SEED, &checksummed_prefix, &payload)
+        != checksum
     {
         return Err(Error::Codec(
             "frame checksum mismatch — the bytes were corrupted in transit".into(),
         ));
     }
-    Ok(Some(Frame { opcode, payload }))
+    Ok(Some(Frame { opcode, version, req_id, payload }))
 }
 
 // ---------------------------------------------------------------------------
@@ -562,6 +666,51 @@ mod tests {
         assert_eq!(f2.payload, b"payload bytes");
         // clean EOF at a frame boundary is None, not an error
         assert!(read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn v2_frames_roundtrip_with_request_ids_and_v1_still_decodes() {
+        let mut buf = Vec::new();
+        put_frame_v2(&mut buf, op::INGEST, 0xDEAD_BEEF_0001, b"pipelined");
+        put_frame(&mut buf, op::PING, b"");
+        put_frame_versioned(&mut buf, VERSION_PIPELINED, resp_ok(op::INGEST), 7, b"ack");
+        put_frame_versioned(&mut buf, wire::VERSION, resp_ok(op::PING), 99, b"");
+        let mut cur = std::io::Cursor::new(buf);
+        let f = read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!((f.opcode, f.version, f.req_id), (op::INGEST, VERSION_PIPELINED, 0xDEAD_BEEF_0001));
+        assert_eq!(f.payload, b"pipelined");
+        // a v1 frame interleaved on the same stream still decodes,
+        // with the implicit request id 0
+        let f = read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!((f.opcode, f.version, f.req_id), (op::PING, wire::VERSION, 0));
+        let f = read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!((f.opcode, f.version, f.req_id), (resp_ok(op::INGEST), VERSION_PIPELINED, 7));
+        // versioned writer downgrades to v1 (and drops the id) for v1
+        let f = read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!((f.opcode, f.version, f.req_id), (resp_ok(op::PING), wire::VERSION, 0));
+        assert!(read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn v2_request_id_is_checksummed_and_truncation_is_typed() {
+        let mut good = Vec::new();
+        put_frame_v2(&mut good, op::SAMPLE, 0x0123_4567_89AB_CDEF, b"abcdef");
+        // flipping a request-id bit must fail the checksum
+        let mut bad = good.clone();
+        bad[16] ^= 1;
+        let mut cur = std::io::Cursor::new(bad);
+        assert!(matches!(read_frame(&mut cur, DEFAULT_MAX_FRAME), Err(Error::Codec(_))));
+        // truncation at every prefix length of a v2 frame
+        for cut in 1..good.len() {
+            let mut cur = std::io::Cursor::new(good[..cut].to_vec());
+            assert!(
+                matches!(read_frame(&mut cur, DEFAULT_MAX_FRAME), Err(Error::Codec(_))),
+                "v2 prefix {cut} did not error"
+            );
+        }
+        let mut cur = std::io::Cursor::new(good);
+        let f = read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!(f.req_id, 0x0123_4567_89AB_CDEF);
     }
 
     #[test]

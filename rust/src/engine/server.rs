@@ -1,29 +1,73 @@
-//! `worp serve`: the TCP face of the [`Engine`] — std-only
-//! (`std::net::TcpListener` + a thread per connection, no async
-//! runtime), speaking the [`proto`] frame protocol.
+//! `worp serve`: the TCP face of the [`Engine`] — std-only, speaking
+//! the [`proto`] frame protocol from a **poll-based reactor**: a small
+//! sharded pool of I/O workers (`ServeOpts::io_threads`), each running
+//! a `poll(2)` readiness loop over its share of the connections (via
+//! the same direct-FFI style as the CLI's `signal(2)` shim — no libc
+//! crate). Ten thousand idle connections cost ten thousand file
+//! descriptors and `pollfd` entries, not ten thousand thread stacks.
 //!
 //! Dispatch discipline: every request frame gets exactly one response
-//! frame. Engine errors travel back as typed [`proto::RESP_ERR`]
-//! payloads and the connection stays open; *framing* errors (bad magic,
-//! version, checksum, oversized or truncated frames) mean the byte
-//! stream can no longer be trusted, so the handler sends one best-effort
-//! error frame and closes that connection. A panic inside a request is
-//! caught and answered as a pipeline error — the server never crashes,
-//! hangs, or leaks a poisoned connection loop on malformed input
+//! frame, written in the frame version the request arrived in and
+//! echoing its request id — which is what lets clients pipeline INGEST
+//! frames (stream many requests, reconcile the FIFO acks
+//! asynchronously). Engine errors travel back as typed
+//! [`proto::RESP_ERR`] payloads and the connection stays open;
+//! *framing* errors (bad magic, version, checksum, oversized or
+//! truncated frames) mean the byte stream can no longer be trusted, so
+//! the worker sends one best-effort error frame and closes that
+//! connection. A panic inside a request is caught and answered as a
+//! pipeline error — the server never crashes, hangs, or leaks a
+//! poisoned connection loop on malformed input
 //! (`tests/engine_contract.rs` drives all of these cases over a real
 //! socket).
+//!
+//! Liveness guarantees (each contract-tested):
+//! - the accept path never blocks on a peer: the over-cap refusal frame
+//!   is written with a short write timeout, so a client that connects
+//!   and never reads cannot stall accepts;
+//! - idle connections are evicted after `ServeOpts::idle_timeout` with
+//!   a typed error frame (and a peer that dribbles bytes mid-frame is
+//!   held to the same deadline — slow-loris is eviction, not a pinned
+//!   worker);
+//! - response writes carry a write timeout, so a pipelining peer that
+//!   stops reading acks is disconnected instead of wedging its worker.
+//!
+//! INGEST payloads are decoded zero-copy: the 16-byte element records
+//! route straight from the frame buffer into the instance's per-shard
+//! pending blocks ([`Engine::ingest_records`]) with the same block
+//! boundaries as the decode-then-ingest path, so a served stream stays
+//! bit-identical to an offline run.
 
 use super::proto::{self, op, Frame, InstanceSpec};
 use super::Engine;
 use crate::codec::{self, wire};
-use crate::data::ElementBlock;
 use crate::error::{Error, Result};
 use crate::pipeline::metrics::Metrics;
 use crate::pipeline::CheckpointPolicy;
-use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+#[cfg(unix)]
+use std::time::Instant;
+
+/// Default idle eviction budget (`[server] idle_timeout_secs`).
+pub const DEFAULT_IDLE_TIMEOUT_SECS: u64 = 60;
+
+const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(DEFAULT_IDLE_TIMEOUT_SECS);
+
+/// Default reactor worker count (`worp serve --io-threads`).
+pub const DEFAULT_IO_THREADS: usize = 4;
+
+/// Write budget for best-effort frames to peers that may never read
+/// (over-cap refusals, eviction goodbyes).
+const BRUSH_OFF_WRITE_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// How long a worker sleeps in `poll` when nothing is ready; bounds how
+/// late an idle sweep can run. New connections and stop requests wake
+/// the worker instantly through its self-pipe.
+#[cfg(unix)]
+const POLL_TICK_MS: i32 = 250;
 
 /// Server tuning.
 #[derive(Clone, Debug)]
@@ -37,6 +81,13 @@ pub struct ServeOpts {
     /// Cap on concurrently served connections; an accept over the cap is
     /// answered with one best-effort error frame and closed.
     pub max_connections: usize,
+    /// Reactor worker threads; connections are sharded round-robin
+    /// across them.
+    pub io_threads: usize,
+    /// Evict connections idle this long with a typed error frame
+    /// (`None` = never; a 60s frame-completion deadline still protects
+    /// workers from peers stalled mid-frame).
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for ServeOpts {
@@ -45,6 +96,8 @@ impl Default for ServeOpts {
             max_frame: proto::DEFAULT_MAX_FRAME,
             checkpoint: None,
             max_connections: 1024,
+            io_threads: DEFAULT_IO_THREADS,
+            idle_timeout: Some(Duration::from_secs(DEFAULT_IDLE_TIMEOUT_SECS)),
         }
     }
 }
@@ -55,22 +108,131 @@ struct ConnGauge {
     total: AtomicU64,
 }
 
-/// Decrements the active-connection gauge when a handler thread exits,
-/// however it exits.
-struct ActiveGuard(Arc<ConnGauge>);
+/// Everything the accept loop and every worker share.
+struct Shared {
+    engine: Arc<Engine>,
+    opts: ServeOpts,
+    ingests: AtomicU64,
+    metrics: Metrics,
+    conns: ConnGauge,
+    stop: AtomicBool,
+}
+
+/// Decrements the active-connection gauge when its connection closes,
+/// however it closes.
+struct ActiveGuard(Arc<Shared>);
 
 impl Drop for ActiveGuard {
     fn drop(&mut self) {
-        self.0.active.fetch_sub(1, Ordering::AcqRel);
+        self.0.conns.active.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
-/// A running server: owns the accept loop (on a background thread) and
+/// Minimal FFI shims for `poll(2)` and `pipe(2)`, declared directly in
+/// the `signal(2)`-shim style the CLI already uses (std-only, no libc
+/// crate).
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_ulong};
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    /// `struct pollfd` from `poll(2)`.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+        fn pipe(fds: *mut c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    /// Block until some fd is ready or `timeout_ms` elapses; returns the
+    /// ready count (negative = error, e.g. EINTR — callers just retry).
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> i32 {
+        if fds.is_empty() {
+            return 0;
+        }
+        unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) }
+    }
+
+    /// The classic self-pipe: lets the accept thread (and `stop`) wake a
+    /// worker out of `poll` instantly instead of waiting out the tick.
+    pub struct WakePipe {
+        r: c_int,
+        w: c_int,
+    }
+
+    impl WakePipe {
+        pub fn new() -> std::io::Result<WakePipe> {
+            let mut fds: [c_int; 2] = [0; 2];
+            if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(WakePipe { r: fds[0], w: fds[1] })
+        }
+
+        pub fn read_fd(&self) -> c_int {
+            self.r
+        }
+
+        pub fn wake(&self) {
+            let b = [1u8];
+            let _ = unsafe { write(self.w, b.as_ptr(), 1) };
+        }
+
+        /// Swallow pending wake bytes (called only after `poll` reported
+        /// the read end readable, so this never blocks).
+        pub fn drain(&self) {
+            let mut buf = [0u8; 64];
+            let _ = unsafe { read(self.r, buf.as_mut_ptr(), buf.len()) };
+        }
+    }
+
+    impl Drop for WakePipe {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.r);
+                close(self.w);
+            }
+        }
+    }
+}
+
+/// One reactor worker's mailbox: the accept loop pushes freshly
+/// accepted connections here and pokes the self-pipe.
+#[cfg(unix)]
+struct Worker {
+    queue: std::sync::Mutex<std::collections::VecDeque<Conn>>,
+    wake: sys::WakePipe,
+}
+
+/// One served connection, owned by exactly one worker.
+#[cfg(unix)]
+struct Conn {
+    stream: TcpStream,
+    last_active: Instant,
+    _guard: ActiveGuard,
+}
+
+/// A running server: owns the accept loop and the reactor workers, and
 /// serves `engine` until [`Server::stop`] or drop.
 pub struct Server {
     addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    #[cfg(unix)]
+    workers: Vec<Arc<Worker>>,
+    worker_threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -80,12 +242,54 @@ impl Server {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::Config(format!("cannot bind {addr}: {e}")))?;
         let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let accept_thread = std::thread::spawn(move || {
-            accept_loop(listener, engine, opts, stop2);
+        let shared = Arc::new(Shared {
+            engine,
+            opts,
+            ingests: AtomicU64::new(0),
+            metrics: Metrics::default(),
+            conns: ConnGauge { active: AtomicU64::new(0), total: AtomicU64::new(0) },
+            stop: AtomicBool::new(false),
         });
-        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+        #[cfg(unix)]
+        {
+            let n = shared.opts.io_threads.max(1);
+            let mut workers = Vec::with_capacity(n);
+            let mut worker_threads = Vec::with_capacity(n);
+            for _ in 0..n {
+                let wake = sys::WakePipe::new().map_err(|e| {
+                    Error::Config(format!("cannot create reactor wake pipe: {e}"))
+                })?;
+                let w = Arc::new(Worker {
+                    queue: std::sync::Mutex::new(std::collections::VecDeque::new()),
+                    wake,
+                });
+                let w2 = Arc::clone(&w);
+                let sh = Arc::clone(&shared);
+                worker_threads.push(std::thread::spawn(move || worker_loop(sh, w2)));
+                workers.push(w);
+            }
+            let ws = workers.clone();
+            let sh = Arc::clone(&shared);
+            let accept_thread = std::thread::spawn(move || accept_loop(listener, sh, ws));
+            Ok(Server {
+                addr: local,
+                shared,
+                accept_thread: Some(accept_thread),
+                workers,
+                worker_threads,
+            })
+        }
+        #[cfg(not(unix))]
+        {
+            let sh = Arc::clone(&shared);
+            let accept_thread = std::thread::spawn(move || fallback::accept_loop(listener, sh));
+            Ok(Server {
+                addr: local,
+                shared,
+                accept_thread: Some(accept_thread),
+                worker_threads: Vec::new(),
+            })
+        }
     }
 
     /// The bound address (resolves port 0).
@@ -93,15 +297,22 @@ impl Server {
         self.addr
     }
 
-    /// Stop accepting new connections and join the accept loop.
-    /// Connections already being served finish their current request and
-    /// drain on their own threads.
+    /// Stop accepting, wake every worker, and join them. A request
+    /// already being handled finishes and its response is written;
+    /// everything still connected after that is closed.
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.shared.stop.store(true, Ordering::SeqCst);
         // the accept loop only observes the flag when accept() returns,
         // so poke it with a throwaway connection
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        #[cfg(unix)]
+        for w in &self.workers {
+            w.wake.wake();
+        }
+        for h in self.worker_threads.drain(..) {
             let _ = h.join();
         }
     }
@@ -113,112 +324,322 @@ impl Drop for Server {
     }
 }
 
-fn accept_loop(listener: TcpListener, engine: Arc<Engine>, opts: ServeOpts, stop: Arc<AtomicBool>) {
-    let ingests = Arc::new(AtomicU64::new(0));
-    let metrics = Arc::new(Metrics::default());
-    let conns = Arc::new(ConnGauge { active: AtomicU64::new(0), total: AtomicU64::new(0) });
-    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+/// Prepare an accepted stream for serving: latency + a write budget so a
+/// peer that stops reading responses gets disconnected, not a wedged
+/// worker.
+fn prep_stream(stream: &TcpStream, opts: &ServeOpts) {
+    let _ = stream.set_nodelay(true);
+    let budget = opts.idle_timeout.unwrap_or(DEFAULT_IDLE_TIMEOUT);
+    let _ = stream.set_write_timeout(Some(budget));
+}
+
+/// Refuse an over-cap connection without ever blocking the accept loop:
+/// the refusal frame is written under a short timeout, so a peer that
+/// connects and never reads strands only its own frame.
+fn refuse_over_cap(mut stream: TcpStream, cap: usize) {
+    let _ = stream.set_write_timeout(Some(BRUSH_OFF_WRITE_TIMEOUT));
+    let e = Error::State(format!(
+        "server is at its cap of {cap} concurrent connections — retry later"
+    ));
+    let _ = proto::write_frame(&mut stream, proto::RESP_ERR, &proto::encode_error(&e));
+}
+
+#[cfg(unix)]
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, workers: Vec<Arc<Worker>>) {
+    let mut next = 0usize;
     loop {
         let conn = listener.accept();
-        if stop.load(Ordering::SeqCst) {
-            // handler threads drain on their own; dropping the handles
-            // detaches them, matching Server::stop's contract
+        if shared.stop.load(Ordering::SeqCst) {
             return;
         }
-        // reap finished handler threads — without this the handle list
-        // (and each thread's exit bookkeeping) grows for the life of the
-        // process
-        handles.retain(|h| !h.is_finished());
         match conn {
-            Ok((mut stream, _peer)) => {
-                if conns.active.load(Ordering::Acquire) >= opts.max_connections as u64 {
-                    // over the cap: one best-effort refusal frame, then
-                    // close — never silently hang the client
-                    let e = Error::State(format!(
-                        "server is at its cap of {} concurrent connections — retry later",
-                        opts.max_connections
-                    ));
-                    let _ =
-                        proto::write_frame(&mut stream, proto::RESP_ERR, &proto::encode_error(&e));
+            Ok((stream, _peer)) => {
+                if shared.conns.active.load(Ordering::Acquire)
+                    >= shared.opts.max_connections as u64
+                {
+                    refuse_over_cap(stream, shared.opts.max_connections);
                     continue;
                 }
-                conns.active.fetch_add(1, Ordering::AcqRel);
-                conns.total.fetch_add(1, Ordering::Relaxed);
-                let guard = ActiveGuard(Arc::clone(&conns));
-                let engine = Arc::clone(&engine);
-                let opts = opts.clone();
-                let ingests = Arc::clone(&ingests);
-                let metrics = Arc::clone(&metrics);
-                let conns = Arc::clone(&conns);
-                handles.push(std::thread::spawn(move || {
-                    let _guard = guard;
-                    serve_connection(stream, &engine, &opts, &ingests, &metrics, &conns);
-                }));
+                shared.conns.active.fetch_add(1, Ordering::AcqRel);
+                shared.conns.total.fetch_add(1, Ordering::Relaxed);
+                prep_stream(&stream, &shared.opts);
+                let conn = Conn {
+                    stream,
+                    last_active: Instant::now(),
+                    _guard: ActiveGuard(Arc::clone(&shared)),
+                };
+                let w = &workers[next % workers.len()];
+                next = next.wrapping_add(1);
+                if let Ok(mut q) = w.queue.lock() {
+                    q.push_back(conn);
+                }
+                w.wake.wake();
             }
             Err(e) => {
                 // transient accept errors (EMFILE, resets) must not kill
                 // the server; back off briefly and keep accepting
                 eprintln!("worp serve: accept error: {e}");
-                std::thread::sleep(std::time::Duration::from_millis(50));
+                std::thread::sleep(Duration::from_millis(50));
             }
         }
     }
 }
 
-/// Serve one connection until it closes or its framing breaks.
-fn serve_connection(
-    mut stream: TcpStream,
-    engine: &Engine,
-    opts: &ServeOpts,
-    ingests: &AtomicU64,
-    metrics: &Metrics,
-    conns: &ConnGauge,
-) {
-    let _ = stream.set_nodelay(true);
+/// One reactor worker: adopt new connections, `poll` the set for
+/// readiness, serve one frame per ready connection per tick, and sweep
+/// idle peers.
+#[cfg(unix)]
+fn worker_loop(shared: Arc<Shared>, worker: Arc<Worker>) {
+    use std::os::unix::io::AsRawFd;
+    let mut conns: Vec<Conn> = Vec::new();
     loop {
-        let frame = match proto::read_frame(&mut stream, opts.max_frame) {
-            Ok(Some(f)) => f,
-            // clean close between frames
-            Ok(None) => return,
-            Err(e) => {
-                // framing broke: answer once (best-effort), then drop the
-                // connection — stream sync cannot be recovered
-                let _ = proto::write_frame(&mut stream, proto::RESP_ERR, &proto::encode_error(&e));
-                let _ = stream.flush();
-                return;
+        if let Ok(mut q) = worker.queue.lock() {
+            while let Some(c) = q.pop_front() {
+                conns.push(c);
             }
-        };
-        let opcode = frame.opcode;
-        // a panic inside a handler must neither kill the server nor
-        // leave the client hanging without a response
-        let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            handle_request(engine, opts, ingests, metrics, conns, &frame)
-        }))
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return; // drops (closes) every adopted connection
+        }
+        let mut fds = Vec::with_capacity(conns.len() + 1);
+        fds.push(sys::PollFd { fd: worker.wake.read_fd(), events: sys::POLLIN, revents: 0 });
+        for c in &conns {
+            fds.push(sys::PollFd {
+                fd: c.stream.as_raw_fd(),
+                events: sys::POLLIN,
+                revents: 0,
+            });
+        }
+        if sys::poll_fds(&mut fds, POLL_TICK_MS) < 0 {
+            // EINTR and friends: nothing is lost, state is still valid
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        if fds[0].revents != 0 {
+            worker.wake.drain();
+        }
+        let now = Instant::now();
+        let mut close = vec![false; conns.len()];
+        for (i, c) in conns.iter_mut().enumerate() {
+            let ready = (fds[i + 1].revents
+                & (sys::POLLIN | sys::POLLERR | sys::POLLHUP | sys::POLLNVAL))
+                != 0;
+            if ready {
+                close[i] = !serve_ready(c, &shared);
+            } else if let Some(limit) = shared.opts.idle_timeout {
+                if now.duration_since(c.last_active) >= limit {
+                    evict_idle(c, limit);
+                    close[i] = true;
+                }
+            }
+        }
+        let mut keep = close.iter();
+        conns.retain(|_| !*keep.next().unwrap());
+    }
+}
+
+/// Bound on how long a single frame may take to arrive once its first
+/// byte is readable. Equal to the idle budget when idle eviction is on;
+/// even with eviction off, workers are never pinned forever by a peer
+/// stalled mid-frame.
+fn frame_deadline(opts: &ServeOpts) -> Duration {
+    opts.idle_timeout.unwrap_or(DEFAULT_IDLE_TIMEOUT)
+}
+
+/// A `Read` adapter that holds the whole multi-`read` frame decode to
+/// one wall-clock deadline by shrinking the socket read timeout before
+/// every call — a peer dribbling one byte per timeout can therefore
+/// stall a worker for at most the deadline, not per-byte.
+#[cfg(unix)]
+struct DeadlineReader<'a> {
+    stream: &'a TcpStream,
+    deadline: Instant,
+}
+
+#[cfg(unix)]
+impl std::io::Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let remaining = self.deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "frame deadline elapsed",
+            ));
+        }
+        self.stream.set_read_timeout(Some(remaining))?;
+        std::io::Read::read(&mut &*self.stream, buf)
+    }
+}
+
+/// Serve one frame from a connection `poll` reported ready. Returns
+/// whether the connection stays open.
+#[cfg(unix)]
+fn serve_ready(conn: &mut Conn, shared: &Shared) -> bool {
+    let mut dr = DeadlineReader {
+        stream: &conn.stream,
+        deadline: Instant::now() + frame_deadline(&shared.opts),
+    };
+    match proto::read_frame(&mut dr, shared.opts.max_frame) {
+        Ok(Some(frame)) => {
+            conn.last_active = Instant::now();
+            let reply = dispatch(shared, &frame);
+            respond(&conn.stream, &frame, reply).is_ok()
+        }
+        // clean close between frames
+        Ok(None) => false,
+        Err(Error::Io(e))
+            if e.kind() == std::io::ErrorKind::TimedOut
+                || e.kind() == std::io::ErrorKind::WouldBlock =>
+        {
+            // stalled mid-frame: same goodbye as idleness
+            evict_idle(conn, frame_deadline(&shared.opts));
+            false
+        }
+        Err(e) => {
+            // framing broke: answer once (best-effort), then drop the
+            // connection — stream sync cannot be recovered
+            let mut s = &conn.stream;
+            let _ = proto::write_frame(&mut s, proto::RESP_ERR, &proto::encode_error(&e));
+            false
+        }
+    }
+}
+
+/// Evict a connection with a typed goodbye frame (best-effort, short
+/// write budget — the peer may be long gone).
+#[cfg(unix)]
+fn evict_idle(conn: &mut Conn, limit: Duration) {
+    let _ = conn.stream.set_write_timeout(Some(BRUSH_OFF_WRITE_TIMEOUT));
+    let e = Error::State(format!(
+        "connection idle for over {}s — evicted (server idle_timeout)",
+        limit.as_secs()
+    ));
+    let mut s = &conn.stream;
+    let _ = proto::write_frame(&mut s, proto::RESP_ERR, &proto::encode_error(&e));
+    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Run one request through the panic guard.
+fn dispatch(shared: &Shared, frame: &Frame) -> Result<Vec<u8>> {
+    // a panic inside a handler must neither kill the server nor leave
+    // the client hanging without a response
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle_request(shared, frame)))
         .unwrap_or_else(|_| {
             Err(Error::Pipeline(
                 "request handler panicked; the instance may be poisoned".into(),
             ))
-        });
-        let write_ok = match reply {
-            Ok(payload) => proto::write_frame(&mut stream, proto::resp_ok(opcode), &payload),
-            Err(e) => proto::write_frame(&mut stream, proto::RESP_ERR, &proto::encode_error(&e)),
-        };
-        if write_ok.is_err() {
-            return; // peer went away mid-response
+        })
+}
+
+/// Answer a request in the frame version it arrived in, echoing its
+/// request id (that echo is what pipelined clients reconcile on).
+fn respond(stream: &TcpStream, request: &Frame, reply: Result<Vec<u8>>) -> Result<()> {
+    let mut s = stream;
+    match reply {
+        Ok(payload) => proto::write_frame_versioned(
+            &mut s,
+            request.version,
+            proto::resp_ok(request.opcode),
+            request.req_id,
+            &payload,
+        ),
+        Err(e) => proto::write_frame_versioned(
+            &mut s,
+            request.version,
+            proto::RESP_ERR,
+            request.req_id,
+            &proto::encode_error(&e),
+        ),
+    }
+}
+
+/// Thread-per-connection fallback for non-unix targets (no `poll(2)`):
+/// same dispatch, write budgets and idle eviction, with the idle clock
+/// enforced through per-read socket timeouts.
+#[cfg(not(unix))]
+mod fallback {
+    use super::*;
+
+    pub fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+        loop {
+            let conn = listener.accept();
+            if shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match conn {
+                Ok((stream, _peer)) => {
+                    if shared.conns.active.load(Ordering::Acquire)
+                        >= shared.opts.max_connections as u64
+                    {
+                        refuse_over_cap(stream, shared.opts.max_connections);
+                        continue;
+                    }
+                    shared.conns.active.fetch_add(1, Ordering::AcqRel);
+                    shared.conns.total.fetch_add(1, Ordering::Relaxed);
+                    let guard = ActiveGuard(Arc::clone(&shared));
+                    let sh = Arc::clone(&shared);
+                    std::thread::spawn(move || {
+                        let _guard = guard;
+                        serve_connection(stream, &sh);
+                    });
+                }
+                Err(e) => {
+                    eprintln!("worp serve: accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    fn serve_connection(mut stream: TcpStream, shared: &Shared) {
+        prep_stream(&stream, &shared.opts);
+        let _ = stream.set_read_timeout(Some(frame_deadline(&shared.opts)));
+        loop {
+            if shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match proto::read_frame(&mut stream, shared.opts.max_frame) {
+                Ok(Some(frame)) => {
+                    let reply = dispatch(shared, &frame);
+                    if respond(&stream, &frame, reply).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) => return,
+                Err(Error::Io(e))
+                    if e.kind() == std::io::ErrorKind::TimedOut
+                        || e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    if shared.opts.idle_timeout.is_some() {
+                        let _ = stream.set_write_timeout(Some(BRUSH_OFF_WRITE_TIMEOUT));
+                        let e = Error::State(format!(
+                            "connection idle for over {}s — evicted (server idle_timeout)",
+                            frame_deadline(&shared.opts).as_secs()
+                        ));
+                        let _ = proto::write_frame(
+                            &mut stream,
+                            proto::RESP_ERR,
+                            &proto::encode_error(&e),
+                        );
+                        return;
+                    }
+                    // idle eviction off: keep waiting for the next frame
+                }
+                Err(e) => {
+                    let _ =
+                        proto::write_frame(&mut stream, proto::RESP_ERR, &proto::encode_error(&e));
+                    return;
+                }
+            }
         }
     }
 }
 
 /// Decode + dispatch one request; the returned bytes are the ok-response
 /// payload. Every failure path is a typed [`Error`].
-fn handle_request(
-    engine: &Engine,
-    opts: &ServeOpts,
-    ingests: &AtomicU64,
-    metrics: &Metrics,
-    conns: &ConnGauge,
-    frame: &Frame,
-) -> Result<Vec<u8>> {
+fn handle_request(shared: &Shared, frame: &Frame) -> Result<Vec<u8>> {
+    let engine = &*shared.engine;
+    let metrics = &shared.metrics;
     let mut r = wire::Reader::new(&frame.payload);
     let mut out = Vec::new();
     match frame.opcode {
@@ -249,13 +670,12 @@ fn handle_request(
             let n = r.seq_len(16)?;
             let rec = r.take(n * 16)?;
             r.finish("ingest request")?;
-            let mut block = ElementBlock::with_capacity(n);
-            wire::read_block_into(rec, &mut block)?;
-            let len = block.len() as u64;
-            let accepted = engine.ingest(&name, &block)?;
-            metrics.note_batch(len);
+            // zero-copy: the raw record bytes route straight into the
+            // per-shard pending blocks — no intermediate ElementBlock
+            let accepted = engine.ingest_records(&name, rec)?;
+            metrics.note_batch(n as u64);
             wire::put_u64(&mut out, accepted);
-            maybe_snapshot(engine, opts, ingests, metrics);
+            maybe_snapshot(shared);
         }
         op::FLUSH => {
             let name = codec::read_str(&mut r)?;
@@ -326,8 +746,8 @@ fn handle_request(
                 merges: metrics.merges(),
                 snapshots: metrics.snapshots(),
                 restores: metrics.restores(),
-                active_connections: conns.active.load(Ordering::Acquire),
-                total_connections: conns.total.load(Ordering::Relaxed),
+                active_connections: shared.conns.active.load(Ordering::Acquire),
+                total_connections: shared.conns.total.load(Ordering::Relaxed),
                 instances: engine.list()?,
             };
             proto::put_server_stats(&mut out, &stats);
@@ -377,14 +797,14 @@ fn read_slice_index(r: &mut wire::Reader<'_>) -> Result<usize> {
 
 /// Periodic registry snapshots: every `every_batches` ingest requests,
 /// write every instance to the checkpoint directory (atomic per file).
-fn maybe_snapshot(engine: &Engine, opts: &ServeOpts, ingests: &AtomicU64, metrics: &Metrics) {
-    let Some(policy) = &opts.checkpoint else { return };
-    let n = ingests.fetch_add(1, Ordering::Relaxed) + 1;
+fn maybe_snapshot(shared: &Shared) {
+    let Some(policy) = &shared.opts.checkpoint else { return };
+    let n = shared.ingests.fetch_add(1, Ordering::Relaxed) + 1;
     if n % policy.every_batches() == 0 {
-        match engine.snapshot_all(policy.dir()) {
+        match shared.engine.snapshot_all(policy.dir()) {
             Ok(written) => {
                 for _ in 0..written {
-                    metrics.note_snapshot();
+                    shared.metrics.note_snapshot();
                 }
             }
             Err(e) => eprintln!("worp serve: periodic snapshot failed: {e}"),
@@ -407,6 +827,25 @@ mod tests {
         drop(TcpStream::connect(addr).unwrap());
         srv.stop();
         // stop is idempotent
+        srv.stop();
+    }
+
+    #[test]
+    fn single_worker_reactor_serves_interleaved_connections() {
+        use crate::engine::client::Client;
+        let engine = Arc::new(Engine::new(EngineOpts::new(2, 64).unwrap()));
+        let opts = ServeOpts { io_threads: 1, ..ServeOpts::default() };
+        let mut srv = Server::start(engine, "127.0.0.1:0", opts).unwrap();
+        let addr = srv.local_addr().to_string();
+        // one worker multiplexes both connections — neither starves
+        let mut a = Client::connect(&addr).unwrap();
+        let mut b = Client::connect(&addr).unwrap();
+        for _ in 0..5 {
+            a.ping().unwrap();
+            b.ping().unwrap();
+        }
+        drop(a);
+        drop(b);
         srv.stop();
     }
 }

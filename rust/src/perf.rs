@@ -1,5 +1,5 @@
 //! Machine-readable performance suite — the data source for the perf
-//! trajectory (`BENCH_PR2.json` → `BENCH_PR4.json`).
+//! trajectory (`BENCH_PR2.json` → `BENCH_PR7.json`).
 //!
 //! One suite, two drivers: the `worp bench` CLI subcommand (smoke mode in
 //! CI — fails on panics, never on numbers) and `cargo bench --bench
@@ -197,6 +197,62 @@ pub fn run_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
     out
 }
 
+/// Served-ingest suite: the same Zipf stream pushed through the engine's
+/// in-process block path ("offline_block") and through a real pipelined
+/// TCP session against a loopback reactor server ("served_ingest") — the
+/// pair quantifies what the wire adds on top of raw ingestion. Both
+/// paths drive the very same engine topology, so the numbers are
+/// apples-to-apples.
+pub fn run_served_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
+    use crate::api::builder::Worp;
+    use crate::engine::client::Client;
+    use crate::engine::server::{ServeOpts, Server};
+    use crate::engine::{Engine, EngineOpts};
+    use std::sync::Arc;
+
+    let stream: Vec<Element> = ZipfStream::new(opts.n_keys, 1.2, opts.stream_len, 1).collect();
+    let blocks = blocks_of(&stream, opts.batch);
+    let m = stream.len() as u64;
+
+    let engine_opts = EngineOpts::new(4, opts.batch.max(1)).expect("bench engine opts");
+    let engine = Arc::new(Engine::new(engine_opts));
+    let spec = Worp::p(1.0).k(opts.k).seed(3).exact();
+    engine.create("bench/offline", &spec).expect("create bench/offline");
+    engine.create("bench/served", &spec).expect("create bench/served");
+    let server_opts = ServeOpts { max_frame: 256 << 20, ..ServeOpts::default() };
+    let mut srv =
+        Server::start(Arc::clone(&engine), "127.0.0.1:0", server_opts).expect("bench server");
+    let addr = srv.local_addr().to_string();
+
+    let mut b = Bencher::new().with_iters(opts.warmup, opts.iters);
+    let mut out = Vec::new();
+
+    let offline = b.bench_throughput("engine offline block", m, || {
+        let mut accepted = 0;
+        for blk in &blocks {
+            accepted = engine.ingest("bench/offline", blk).expect("offline ingest");
+        }
+        engine.flush("bench/offline").expect("offline flush");
+        accepted
+    });
+    out.push(record("engine", "offline_block", offline));
+
+    let mut client = Client::connect(&addr).expect("bench client");
+    let served = b.bench_throughput("engine served ingest (pipelined)", m, || {
+        let mut pipe = client.ingest_pipe("bench/served").expect("ingest pipe");
+        for blk in &blocks {
+            pipe.send(blk).expect("pipelined send");
+        }
+        let accepted = pipe.finish().expect("pipelined finish");
+        client.flush("bench/served").expect("served flush");
+        accepted
+    });
+    out.push(record("engine", "served_ingest", served));
+
+    srv.stop();
+    out
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -284,5 +340,32 @@ mod tests {
     #[test]
     fn json_escaping_handles_quotes() {
         assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+    }
+
+    #[test]
+    fn served_suite_emits_offline_and_served_records() {
+        // loopback smoke of the wire bench: shape test, not a measurement
+        let opts = PerfOpts {
+            stream_len: 400,
+            n_keys: 100,
+            batch: 64,
+            iters: 1,
+            warmup: 0,
+            k: 4,
+            smoke: true,
+        };
+        let records = run_served_suite(&opts);
+        assert_eq!(records.len(), 2);
+        for mode in ["offline_block", "served_ingest"] {
+            assert!(
+                records
+                    .iter()
+                    .any(|r| r.summary == "engine" && r.mode == mode && r.items_per_sec > 0.0),
+                "missing engine/{mode}"
+            );
+        }
+        // both suites render into one artifact downstream
+        let json = to_json(&opts, &records);
+        assert!(json.contains("\"served_ingest\""));
     }
 }

@@ -10,6 +10,14 @@
 //! 3. **Malformed / truncated protocol frames** are answered with typed
 //!    errors and a closed connection — never a panic, never a hang, and
 //!    the server keeps serving fresh connections afterwards.
+//!
+//! Plus the wire-speed serving contract (ISSUE 7):
+//!
+//! 4. **Pipelined ≡ lockstep ≡ offline**, bit-identical, over real TCP.
+//! 5. **Accept-path liveness** against never-reading over-cap peers.
+//! 6. **Idle eviction** with a typed error frame, server keeps serving.
+//! 7. **Client poisoning** after a transport error; typed engine errors
+//!    do not poison.
 
 use std::io::Write as _;
 use std::net::TcpStream;
@@ -358,6 +366,174 @@ fn malformed_frames_get_typed_errors_never_a_panic_or_hang() {
     let mut c = connect(&srv);
     c.ping().unwrap();
     assert!(c.list().unwrap().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// 4–7. wire-speed serving: pipelining, liveness, eviction, poisoning
+
+#[test]
+fn pipelined_equals_lockstep_equals_offline_bit_identical() {
+    // pipelining changes only ack scheduling: the server handles frames
+    // in arrival order, so a windowed pipelined session must be
+    // BIT-identical to lockstep calls and to an offline sharded run —
+    // even for the block-boundary-sensitive 1pass method, and with
+    // deliberately different frame chunkings (97 vs 250 vs whole-stream)
+    let elems = stream();
+    let engine = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    let srv = start_server(Arc::clone(&engine));
+
+    let mut lock = connect(&srv);
+    lock.create("lock", &proto_spec("1pass", 5)).unwrap();
+    for b in blocks_of(&elems, 250) {
+        lock.ingest("lock", &b).unwrap();
+    }
+    lock.flush("lock").unwrap();
+
+    let mut piped = connect(&srv).with_pipeline_window(5);
+    piped.create("pipe", &proto_spec("1pass", 5)).unwrap();
+    let mut pipe = piped.ingest_pipe("pipe").unwrap();
+    let mut sent = 0u64;
+    for b in blocks_of(&elems, 97) {
+        sent += b.len() as u64;
+        pipe.send(&b).unwrap();
+    }
+    assert!(pipe.in_flight() > 0, "the window must actually pipeline");
+    assert_eq!(pipe.finish().unwrap(), sent);
+    assert!(!piped.is_broken());
+    piped.flush("pipe").unwrap();
+
+    engine.create_from_proto("offline", spec(5).build().unwrap()).unwrap();
+    engine.ingest_source("offline", &elems).unwrap();
+
+    let lock_bytes = merged_encode(&engine, "lock");
+    assert_eq!(
+        lock_bytes,
+        merged_encode(&engine, "pipe"),
+        "pipelined ingest must merge to the lockstep summary bit-for-bit"
+    );
+    assert_eq!(
+        lock_bytes,
+        merged_encode(&engine, "offline"),
+        "served ingest must merge to the offline sharded run bit-for-bit"
+    );
+
+    // ... and the served sample is the coordinator's offline sample
+    let w = spec(5);
+    let coord = Coordinator::new(
+        w.sampler_config().unwrap(),
+        PipelineOpts::new(SHARDS, BATCH).unwrap(),
+    );
+    let (offline, _) = coord.run_dyn(&VecSource(elems), w.build().unwrap()).unwrap();
+    let served = piped.sample("pipe").unwrap();
+    assert_eq!(served.entries, offline.entries);
+    assert_eq!(served.tau.to_bits(), offline.tau.to_bits());
+}
+
+#[test]
+fn accept_path_survives_never_reading_over_cap_peers() {
+    let engine = Arc::new(Engine::new(EngineOpts::new(2, 64).unwrap()));
+    let opts = ServeOpts { max_connections: 1, ..ServeOpts::default() };
+    let srv = Server::start(Arc::clone(&engine), "127.0.0.1:0", opts).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let mut held = connect(&srv);
+    held.ping().unwrap();
+
+    // over-cap peers that never read their refusal frame: the refusal is
+    // written under a short budget, so the accept thread must not stall
+    let peers: Vec<TcpStream> =
+        (0..8).map(|_| TcpStream::connect(&addr).unwrap()).collect();
+
+    // free the slot; a fresh client must get in promptly, proving the
+    // accept loop outlived the hostile peers
+    drop(held);
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let admitted = loop {
+        if let Ok(c) = Client::connect(&addr) {
+            if let Ok(mut c) = c.with_timeout(Duration::from_secs(5)) {
+                if c.ping().is_ok() {
+                    break true;
+                }
+            }
+        }
+        if std::time::Instant::now() > deadline {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(admitted, "accept path stalled behind never-reading over-cap peers");
+    drop(peers);
+}
+
+#[test]
+fn idle_connections_are_evicted_with_a_typed_error() {
+    let engine = Arc::new(Engine::new(EngineOpts::new(2, 64).unwrap()));
+    let opts = ServeOpts {
+        idle_timeout: Some(Duration::from_millis(300)),
+        ..ServeOpts::default()
+    };
+    let srv = Server::start(Arc::clone(&engine), "127.0.0.1:0", opts).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let mut buf = Vec::new();
+    proto::put_frame(&mut buf, op::PING, b"");
+    s.write_all(&buf).unwrap();
+    let f = read_resp(&mut s).unwrap().expect("ping answered");
+    assert_eq!(f.opcode, proto::resp_ok(op::PING));
+
+    // go idle: the server must evict with a typed state error frame,
+    // then close — never hold the fd forever
+    let f = read_resp(&mut s).unwrap().expect("an eviction frame");
+    assert_eq!(f.opcode, proto::RESP_ERR);
+    let e = proto::decode_error(&f.payload);
+    assert!(matches!(e, Error::State(_)), "eviction must be typed state, got {e:?}");
+    assert!(e.to_string().contains("idle"), "{e}");
+    assert!(
+        matches!(read_resp(&mut s), Ok(None) | Err(_)),
+        "connection must close after eviction"
+    );
+
+    // eviction is per-connection: the server keeps serving fresh clients
+    let mut c = connect(&srv);
+    c.ping().unwrap();
+}
+
+#[test]
+fn poisoned_client_refuses_reuse_after_transport_error() {
+    // a fake server answering the first frame with garbage: the client
+    // must surface a codec error, mark itself broken, and fail every
+    // further call fast with a typed state error — a desynced stream is
+    // never silently reused
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut buf = [0u8; 256];
+        let _ = std::io::Read::read(&mut s, &mut buf);
+        s.write_all(b"garbage-garbage-garbage-garbage!").unwrap();
+        s // keep the socket open until the test is done asserting
+    });
+    let mut c = Client::connect(&addr)
+        .unwrap()
+        .with_timeout(Duration::from_secs(20))
+        .unwrap();
+    let err = c.ping().unwrap_err();
+    assert!(matches!(err, Error::Codec(_)), "got {err:?}");
+    assert!(c.is_broken());
+    let err = c.ping().unwrap_err();
+    assert!(matches!(err, Error::State(_)), "got {err:?}");
+    let err = c.flush("x").unwrap_err();
+    assert!(matches!(err, Error::State(_)), "got {err:?}");
+    drop(fake.join().unwrap());
+
+    // typed engine errors must NOT poison — the transport is intact
+    let engine = Arc::new(Engine::new(EngineOpts::new(2, 64).unwrap()));
+    let srv = start_server(Arc::clone(&engine));
+    let mut c = connect(&srv);
+    assert!(matches!(c.sample("nope"), Err(Error::Config(_))));
+    assert!(!c.is_broken());
+    c.ping().unwrap();
 }
 
 #[test]
