@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Compare two worp perf artifacts and fail on throughput regressions.
+
+CI runs this as the `bench-gate` job: a fresh smoke-mode artifact from
+the just-built binary is compared against the committed baseline
+(`BENCH_PR8.json` at the repo root). A (summary, mode) pair regresses
+when its fresh `items_per_sec` falls more than `--threshold` (default
+15%) below the baseline's.
+
+Smoke-mode numbers are noisy, so the verdict is two-tier:
+
+* **hard-fail** pairs — the `countsketch` summary (every mode: its
+  kernels are the shared code under the lane-unrolled rewrite) and the
+  `served_ingest` mode (the end-to-end wire path) — exit nonzero on
+  regression;
+* every other pair only **warns** (printed, exit stays zero) — sampler
+  throughput on a shared CI runner jitters far beyond 15%.
+
+Pairs present in only one artifact are reported but never fail: the
+baseline may predate a newly added mode (or a mode may be gated off).
+
+Usage:
+    python3 python/bench_check.py NEW.json --baseline BASE.json \
+        [--threshold 0.15]
+
+Exit status: 0 = no hard regressions, 1 = at least one hard regression,
+2 = usage / unreadable artifact.
+"""
+
+import argparse
+import json
+import sys
+
+# (summary, mode) pairs that hard-fail on regression. A None component
+# matches anything, so ("countsketch", None) covers every countsketch
+# mode and (None, "served_ingest") covers the wire path.
+HARD = [
+    ("countsketch", None),
+    (None, "served_ingest"),
+]
+
+
+def is_hard(summary, mode):
+    return any(
+        (s is None or s == summary) and (m is None or m == mode) for s, m in HARD
+    )
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench-check: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    out = {}
+    for r in doc.get("results", []):
+        out[(r["summary"], r["mode"])] = float(r["items_per_sec"])
+    if not out:
+        print(f"bench-check: no records in {path}", file=sys.stderr)
+        sys.exit(2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="fresh artifact (the run under test)")
+    ap.add_argument("--baseline", required=True, help="committed baseline artifact")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="max allowed fractional throughput drop (default 0.15)",
+    )
+    args = ap.parse_args()
+
+    new = load(args.new)
+    base = load(args.baseline)
+
+    hard_failures = []
+    warnings = []
+    checked = 0
+    for key in sorted(base):
+        summary, mode = key
+        if key not in new:
+            print(f"  skip  {summary}/{mode}: absent from {args.new}")
+            continue
+        b, n = base[key], new[key]
+        if b <= 0.0:
+            print(f"  skip  {summary}/{mode}: baseline throughput is zero")
+            continue
+        checked += 1
+        drop = (b - n) / b
+        verdict = "ok"
+        if drop > args.threshold:
+            if is_hard(summary, mode):
+                verdict = "FAIL"
+                hard_failures.append(key)
+            else:
+                verdict = "warn"
+                warnings.append(key)
+        print(
+            f"  {verdict:<5} {summary}/{mode}: "
+            f"{n:,.0f} vs baseline {b:,.0f} items/s ({-drop:+.1%})"
+        )
+    for key in sorted(set(new) - set(base)):
+        print(f"  new   {key[0]}/{key[1]}: no baseline record")
+
+    print(
+        f"\nbench-check: {checked} pairs checked, "
+        f"{len(hard_failures)} hard regression(s), {len(warnings)} warning(s) "
+        f"(threshold {args.threshold:.0%})"
+    )
+    if hard_failures:
+        for summary, mode in hard_failures:
+            print(f"bench-check: HARD REGRESSION in {summary}/{mode}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

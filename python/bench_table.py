@@ -1,23 +1,35 @@
 #!/usr/bin/env python3
 """Render the worp perf artifact (BENCH_PR*.json) as a markdown table.
 
-The artifact is emitted by `worp bench [--smoke] --out BENCH_PR7.json`
+The artifact is emitted by `worp bench [--smoke] --out BENCH_PR8.json`
 (or `cargo bench --bench throughput`); each summary carries a record per
 ingestion mode — "scalar" (per-element `process`), "batch" (AoS
-`process_batch`), from PR 4 on "block" (SoA `process_block`), and from
-PR 7 on an "engine" summary comparing "offline_block" (in-process
+`process_batch`), from PR 4 on "block" (SoA `process_block`), from PR 7
+on an "engine" summary comparing "offline_block" (in-process
 `Engine::ingest`) with "served_ingest" (pipelined frames over loopback
-TCP into the reactor server). This script pivots the records into one
-row per summary with speedup columns, ready to paste into the README's
-Performance section.
+TCP into the reactor server), and from PR 8 on the read side
+("est_many" — batched point-query throughput) plus a
+"countsketch_layout" summary ablating the row-major table against a
+d-interleaved one ("row_major" / "interleaved"). This script pivots the
+records into one row per summary with speedup columns, ready to paste
+into the README's Performance section.
 
-Usage: python3 python/bench_table.py rust/BENCH_PR7.json [more.json ...]
+Usage: python3 python/bench_table.py rust/BENCH_PR8.json [more.json ...]
 """
 
 import json
 import sys
 
-MODES = ["scalar", "batch", "block", "offline_block", "served_ingest"]
+MODES = [
+    "scalar",
+    "batch",
+    "block",
+    "est_many",
+    "row_major",
+    "interleaved",
+    "offline_block",
+    "served_ingest",
+]
 
 
 def human(n):

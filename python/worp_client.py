@@ -43,6 +43,7 @@ Usage as a script (the CI smoke drives `selftest` and
 
 import argparse
 import collections
+import math
 import socket
 import struct
 import sys
@@ -389,8 +390,19 @@ class Client:
         return infos
 
     def ingest(self, name, elements):
-        """elements: iterable of (key, value). Returns lifetime accepted."""
+        """elements: iterable of (key, value). Returns lifetime accepted.
+
+        Values must be finite: the server rejects NaN/±inf rows with a
+        whole-frame codec error, so well-behaved clients fail here,
+        before anything touches the wire."""
         elems = list(elements)
+        for key, val in elems:
+            if not math.isfinite(val):
+                raise WorpError(
+                    "codec",
+                    f"non-finite value {val!r} for key {key} — "
+                    "ingest accepts finite floats only",
+                )
         payload = _put_str(name) + struct.pack("<Q", len(elems))
         for key, val in elems:
             payload += struct.pack("<Qd", key, val)
@@ -453,6 +465,17 @@ class Client:
         try:
             batch = []
             for key, val in elements:
+                if not math.isfinite(val):
+                    # drain outstanding acks so the stream stays synced
+                    # (connection remains usable), then refuse the row —
+                    # mirroring the server's whole-frame rejection
+                    while in_flight:
+                        reap_one()
+                    raise WorpError(
+                        "codec",
+                        f"non-finite value {val!r} for key {key} — "
+                        "ingest accepts finite floats only",
+                    )
                 batch.append((key, val))
                 if len(batch) == chunk:
                     send_chunk(batch)

@@ -182,9 +182,11 @@ COMMANDS:
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
     bench       scalar vs batch vs SoA-block ingestion throughput per
-                summary, written as machine-readable JSON
+                summary, plus est_many query throughput, the row-major
+                vs interleaved table-layout ablation and the served
+                (TCP) ingest pair, written as machine-readable JSON
                   --smoke                 small CI profile (default: full)
-                  --out <path>            output file (default BENCH_PR7.json)
+                  --out <path>            output file (default BENCH_PR8.json)
                   --stream-len <n> --n <keys> --batch <n> --iters <n> --k <n>
     info        print runtime / artifact status
     help        show this text
@@ -984,11 +986,13 @@ fn cmd_psi(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `worp bench`: run the scalar/batch/block ingestion suite plus the
-/// served-ingest (pipelined TCP) suite and emit the machine-readable
-/// perf artifact (`BENCH_PR7.json` by default). Smoke mode is the CI
-/// profile — it exists to catch panics and keep the artifact schema
-/// alive, not to produce stable numbers.
+/// `worp bench`: run the scalar/batch/block ingestion suite, the
+/// est_many query suite, the table-layout ablation and the served-ingest
+/// (pipelined TCP) suite, and emit the machine-readable perf artifact
+/// (`BENCH_PR8.json` by default). Smoke mode is the CI profile — it
+/// exists to catch panics and keep the artifact schema alive, not to
+/// produce stable numbers; the regression gate compares a fresh smoke
+/// artifact against the committed baseline via `python/bench_check.py`.
 fn cmd_bench(args: &Args) -> Result<()> {
     let mut opts = if args.has_flag("smoke") {
         crate::perf::PerfOpts::smoke()
@@ -1000,12 +1004,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
     opts.batch = args.parse_or("batch", opts.batch)?;
     opts.iters = args.parse_or("iters", opts.iters)?;
     opts.k = args.parse_or("k", opts.k)?;
-    let out = args.str_or("out", "BENCH_PR7.json");
+    let out = args.str_or("out", "BENCH_PR8.json");
     println!(
         "bench: stream_len={} n_keys={} batch={} iters={} k={} smoke={}\n",
         opts.stream_len, opts.n_keys, opts.batch, opts.iters, opts.k, opts.smoke
     );
     let mut records = crate::perf::run_suite(&opts);
+    records.extend(crate::perf::run_query_suite(&opts));
+    records.extend(crate::perf::run_layout_suite(&opts));
     records.extend(crate::perf::run_served_suite(&opts));
     crate::perf::write_json(&out, &opts, &records)?;
     println!("\nwrote {} records to {out}", records.len());

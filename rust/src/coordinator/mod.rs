@@ -339,7 +339,10 @@ impl Coordinator {
             .map(|&k| (k, xs.est(k)))
             .filter(|(_, v)| *v != 0.0)
             .collect();
-        scored.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+        // total_cmp: a NaN that slips past the ingest boundary ranks
+        // deterministically instead of panicking the coordinator
+        // mid-query (identical order on finite estimates)
+        scored.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()));
         let k = cfg.k;
         let tau = if scored.len() > k { scored[k].1.abs() } else { 0.0 };
         let entries = scored

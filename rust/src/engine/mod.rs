@@ -190,6 +190,24 @@ fn new_slot(proto: &dyn WorSampler, batch: usize) -> ShardSlot {
     ShardSlot { state: proto.clone_box(), pending: ElementBlock::with_capacity(batch) }
 }
 
+/// Reject non-finite update values at the live ingest boundary. The
+/// codec already refuses NaN/∞ in *decoded* tables
+/// ([`crate::codec::read_rhh_table`]); without this mirror on the
+/// *update* side, one crafted 16-byte INGEST record carrying NaN bits
+/// would poison a live table — every later estimate medians over NaN —
+/// so ingest rejects the whole block before any shard slot is touched,
+/// with the same typed [`Error::Codec`] the codec uses.
+#[inline]
+fn reject_non_finite(key: u64, val: f64, at: usize) -> Result<()> {
+    if val.is_finite() {
+        return Ok(());
+    }
+    Err(Error::Codec(format!(
+        "non-finite update value {val} for key {key} at element {at} — ingest accepts \
+         finite f64 values only"
+    )))
+}
+
 impl Instance {
     /// Assemble an instance from per-slice slots (`None` = unowned).
     fn assemble(
@@ -291,8 +309,13 @@ impl Instance {
     /// Under partial (cluster) ownership every row must route to an
     /// owned slice; a block carrying even one misrouted row — a client
     /// holding a stale cluster spec — is rejected whole *before* any
-    /// slot is touched, so nothing is half-applied.
+    /// slot is touched, so nothing is half-applied. Non-finite values
+    /// are rejected the same way (whole block, typed `Error::Codec`,
+    /// nothing half-applied) — see [`reject_non_finite`].
     pub fn ingest(&self, block: &ElementBlock) -> Result<u64> {
+        for i in 0..block.len() {
+            reject_non_finite(block.keys[i], block.vals[i], i)?;
+        }
         if !self.fully_owned() {
             for i in 0..block.len() {
                 let s = self.router.route(block.keys[i]);
@@ -360,6 +383,16 @@ impl Instance {
             kb.copy_from_slice(&rec[..8]);
             u64::from_le_bytes(kb)
         };
+        let val_of = |rec: &[u8]| {
+            let mut vb = [0u8; 8];
+            vb.copy_from_slice(&rec[8..16]);
+            f64::from_le_bytes(vb)
+        };
+        // validation sweep before any slot is touched: a crafted frame
+        // carrying NaN/∞ bits rejects whole, never half-applies
+        for (i, rec) in records.chunks_exact(16).enumerate() {
+            reject_non_finite(key_of(rec), val_of(rec), i)?;
+        }
         if !self.fully_owned() {
             for rec in records.chunks_exact(16) {
                 let key = key_of(rec);
@@ -390,9 +423,7 @@ impl Instance {
                 if self.router.route(key) != s {
                     continue;
                 }
-                let mut vb = [0u8; 8];
-                vb.copy_from_slice(&rec[8..16]);
-                pending.push(key, f64::from_le_bytes(vb));
+                pending.push(key, val_of(rec));
                 matched += 1;
                 if pending.len() == self.batch {
                     state.process_block(pending);
@@ -562,7 +593,13 @@ impl Instance {
                     };
                     let mut block = ElementBlock::with_capacity(self.batch);
                     let mut fills = 0u64;
+                    let mut at = 0usize;
                     for e in source.scan() {
+                        // checked before the route filter so a
+                        // non-finite row errors even when its slice
+                        // lives on another node
+                        reject_non_finite(e.key, e.val, at)?;
+                        at += 1;
                         if self.router.route(e.key) != w {
                             continue;
                         }

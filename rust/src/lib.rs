@@ -92,6 +92,11 @@
 //! figure in the paper, and the README for the old-API → new-API
 //! migration table.
 
+// the optional `simd` feature uses nightly portable SIMD for the sketch
+// lane kernels (util::hashing::simd); the default build stays stable
+// and leans on the autovectorizer over the same lane-unrolled shape
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod api;
 pub mod cli;
 pub mod cluster;

@@ -1,5 +1,5 @@
 //! Machine-readable performance suite — the data source for the perf
-//! trajectory (`BENCH_PR2.json` → `BENCH_PR7.json`).
+//! trajectory (`BENCH_PR2.json` → `BENCH_PR8.json`).
 //!
 //! One suite, two drivers: the `worp bench` CLI subcommand (smoke mode in
 //! CI — fails on panics, never on numbers) and `cargo bench --bench
@@ -8,7 +8,11 @@
 //! loop, the AoS micro-batched [`StreamSummary::process_batch`] path, and
 //! the SoA [`StreamSummary::process_block`] path (§Perf L3-7) — so every
 //! record triple quantifies first what columnar sweeps buy over scalar,
-//! then what the structure-of-arrays layout buys on top.
+//! then what the structure-of-arrays layout buys on top. PR 8 adds the
+//! read side ([`run_query_suite`] — batched `est_many` throughput) and a
+//! row-major vs d-interleaved table-layout ablation
+//! ([`run_layout_suite`]); `python/bench_check.py` turns any two of these
+//! artifacts into a regression verdict, and CI runs it as a gate.
 
 use crate::api::StreamSummary;
 use crate::data::zipf::ZipfStream;
@@ -253,6 +257,119 @@ pub fn run_served_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
     out
 }
 
+/// Query-side suite: batched point queries ([`CountSketch::est_many`] /
+/// [`CountMin::est_many`]) against a sketch built once from the stream.
+/// The probe set is the stream's own key column (hot-key-skewed, so the
+/// mix matches what the serving read path actually sees); throughput is
+/// estimates per second. These records make read-path regressions
+/// first-class in the trajectory — PR 8's lane-batched gather lands here.
+pub fn run_query_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
+    let stream: Vec<Element> = ZipfStream::new(opts.n_keys, 1.2, opts.stream_len, 1).collect();
+    let blocks = blocks_of(&stream, opts.batch);
+    let probe: Vec<u64> = stream.iter().map(|e| e.key).collect();
+    let m = probe.len() as u64;
+
+    let mut cs = CountSketch::with_shape(5, 1024, 7);
+    let mut cm = CountMin::with_shape(5, 1024, 7);
+    for blk in &blocks {
+        cs.process_cols(&blk.keys, &blk.vals);
+        cm.process_cols(&blk.keys, &blk.vals);
+    }
+
+    let mut b = Bencher::new().with_iters(opts.warmup, opts.iters);
+    let mut out = Vec::new();
+    let mut ests = vec![0.0f64; probe.len()];
+
+    let r = b.bench_throughput("countsketch est_many", m, || {
+        cs.est_many(&probe, &mut ests);
+        ests[0]
+    });
+    out.push(record("countsketch", "est_many", r));
+    let r = b.bench_throughput("countmin est_many", m, || {
+        cm.est_many(&probe, &mut ests);
+        ests[0]
+    });
+    out.push(record("countmin", "est_many", r));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table-layout ablation
+
+/// Bench-only CountSketch variant with a **d-interleaved** table layout:
+/// cell `(r, b)` lives at `b * rows + r` (row-major puts it at
+/// `r * width + b`). Interleaving clusters the `rows` counters of one
+/// bucket *column*, which looks attractive for element-major updates —
+/// but a key's per-row buckets differ, so its counters still straddle
+/// `rows` distinct cache neighborhoods, and the layout forfeits the
+/// contiguous row slices the lane-unrolled row sweeps and the batched
+/// est_many gather stride through. The ablation records quantify that
+/// trade; the shipped sketches stay row-major.
+struct InterleavedCountSketch {
+    hasher: crate::util::hashing::SketchHasher,
+    rows: usize,
+    table: Vec<f64>,
+    coords: Vec<crate::util::hashing::KeyCoords>,
+}
+
+impl InterleavedCountSketch {
+    fn with_shape(rows: usize, width: usize, seed: u64) -> Self {
+        InterleavedCountSketch {
+            hasher: crate::util::hashing::SketchHasher::new(seed, width),
+            rows,
+            table: vec![0.0; rows * width],
+            coords: Vec::new(),
+        }
+    }
+
+    /// Element-major columnar update (the natural sweep for this layout:
+    /// per element, its `rows` cells are walked at stride 1 in `r`
+    /// *within* each bucket column).
+    fn process_cols(&mut self, keys: &[u64], vals: &[f64]) {
+        let mut coords = std::mem::take(&mut self.coords);
+        self.hasher.fill_coords_slice(keys, &mut coords);
+        let rows = self.rows;
+        for (c, &v) in coords.iter().zip(vals) {
+            for r in 0..rows {
+                let (b, s) = self.hasher.bucket_sign_from(c, r);
+                self.table[b * rows + r] += s * v;
+            }
+        }
+        self.coords = coords;
+    }
+}
+
+/// Layout ablation: the identical Zipf block sweep through the shipped
+/// row-major [`CountSketch`] and the d-interleaved variant above. Both
+/// records carry summary `countsketch_layout` so the regression gate and
+/// the trajectory table keep them side by side.
+pub fn run_layout_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
+    let stream: Vec<Element> = ZipfStream::new(opts.n_keys, 1.2, opts.stream_len, 1).collect();
+    let blocks = blocks_of(&stream, opts.batch);
+    let m = stream.len() as u64;
+
+    let mut b = Bencher::new().with_iters(opts.warmup, opts.iters);
+    let mut out = Vec::new();
+
+    let r = b.bench_throughput("countsketch_layout row_major", m, || {
+        let mut s = CountSketch::with_shape(5, 1024, 7);
+        for blk in &blocks {
+            s.process_cols(&blk.keys, &blk.vals);
+        }
+        crate::sketch::RhhSketch::est(&s, blocks[0].keys[0])
+    });
+    out.push(record("countsketch_layout", "row_major", r));
+    let r = b.bench_throughput("countsketch_layout interleaved", m, || {
+        let mut s = InterleavedCountSketch::with_shape(5, 1024, 7);
+        for blk in &blocks {
+            s.process_cols(&blk.keys, &blk.vals);
+        }
+        s.table[0]
+    });
+    out.push(record("countsketch_layout", "interleaved", r));
+    out
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -335,6 +452,77 @@ mod tests {
             json.matches('{').count(),
             json.matches('}').count()
         );
+    }
+
+    #[test]
+    fn query_suite_emits_est_many_records() {
+        let opts = PerfOpts {
+            stream_len: 500,
+            n_keys: 100,
+            batch: 64,
+            iters: 1,
+            warmup: 0,
+            k: 4,
+            smoke: true,
+        };
+        let records = run_query_suite(&opts);
+        assert_eq!(records.len(), 2);
+        for name in ["countsketch", "countmin"] {
+            assert!(
+                records
+                    .iter()
+                    .any(|r| r.summary == name && r.mode == "est_many" && r.items_per_sec > 0.0),
+                "missing {name}/est_many"
+            );
+        }
+    }
+
+    #[test]
+    fn layout_suite_emits_both_layout_records() {
+        let opts = PerfOpts {
+            stream_len: 500,
+            n_keys: 100,
+            batch: 64,
+            iters: 1,
+            warmup: 0,
+            k: 4,
+            smoke: true,
+        };
+        let records = run_layout_suite(&opts);
+        assert_eq!(records.len(), 2);
+        for mode in ["row_major", "interleaved"] {
+            assert!(
+                records.iter().any(|r| r.summary == "countsketch_layout"
+                    && r.mode == mode
+                    && r.items_per_sec > 0.0),
+                "missing countsketch_layout/{mode}"
+            );
+        }
+    }
+
+    #[test]
+    fn interleaved_layout_estimates_match_row_major() {
+        // the ablation variant must be a faithful CountSketch: same
+        // hasher, same updates, only the cell addressing differs — so a
+        // direct cell-by-cell transpose comparison must hold
+        let stream: Vec<Element> = ZipfStream::new(50, 1.2, 2_000, 9).collect();
+        let blocks = blocks_of(&stream, 128);
+        let (rows, width) = (5usize, 256usize);
+        let mut rm = CountSketch::with_shape(rows, width, 7);
+        let mut il = InterleavedCountSketch::with_shape(rows, width, 7);
+        for blk in &blocks {
+            rm.process_cols(&blk.keys, &blk.vals);
+            il.process_cols(&blk.keys, &blk.vals);
+        }
+        for r in 0..rows {
+            for bkt in 0..width {
+                assert_eq!(
+                    rm.table()[r * width + bkt].to_bits(),
+                    il.table[bkt * rows + r].to_bits(),
+                    "cell ({r},{bkt}) differs between layouts"
+                );
+            }
+        }
     }
 
     #[test]

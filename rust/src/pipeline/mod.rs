@@ -213,6 +213,22 @@ impl<F: FnMut(&Element)> StreamSummary for FnSink<F> {
     }
 }
 
+/// Ingest-boundary guard (mirrors the serving engine's): every worker
+/// scan rejects non-finite element values before any summary state is
+/// touched. One NaN inside a sketch table would otherwise poison every
+/// bucket it lands in and spread through merges — fail the run with a
+/// typed error at the boundary instead.
+#[inline]
+fn reject_non_finite(key: u64, val: f64, at: u64) -> Result<()> {
+    if val.is_finite() {
+        return Ok(());
+    }
+    Err(Error::Codec(format!(
+        "non-finite element value {val} for key {key} at stream position {at} — the \
+         pipeline accepts finite f64 values only"
+    )))
+}
+
 /// Pipeline configuration (subset of [`crate::config::PipelineConfig`]
 /// relevant to the execution topology).
 #[derive(Clone, Copy, Debug)]
@@ -276,12 +292,17 @@ where
         for w in 0..opts.workers {
             let mut state = make(w);
             let m = Arc::clone(&metrics);
-            handles.push(scope.spawn(move || {
+            handles.push(scope.spawn(move || -> Result<S> {
                 // ONE block per worker, reused for the whole run: fill,
                 // process, clear — steady state allocates nothing
                 let mut block = ElementBlock::with_capacity(opts.batch);
                 let mut fills = 0u64;
+                let mut at = 0u64;
                 for e in source.scan() {
+                    // checked before the route filter so every worker
+                    // rejects the same element at the same position
+                    reject_non_finite(e.key, e.val, at)?;
+                    at += 1;
                     if router.route(e.key) != w {
                         continue;
                     }
@@ -300,16 +321,16 @@ where
                     state.process_block(&block);
                     m.note_batch(block.len() as u64);
                 }
-                state
+                Ok(state)
             }));
         }
         // join every handle (even after a failure) so a panicking worker
         // can never poison the scope exit
         for h in handles {
-            joined.push(
-                h.join()
-                    .map_err(|_| Error::Pipeline("worker panicked".into())),
-            );
+            joined.push(match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(Error::Pipeline("worker panicked".into())),
+            });
         }
     });
     let mut states = Vec::with_capacity(opts.workers);
@@ -579,7 +600,10 @@ where
                 let mut skip = done;
                 let mut elements = done;
                 let mut batches = 0u64;
+                let mut at = 0u64;
                 for e in source.scan() {
+                    reject_non_finite(e.key, e.val, at)?;
+                    at += 1;
                     if router.route(e.key) != w {
                         continue;
                     }

@@ -155,7 +155,9 @@ impl XlaCountSketch {
             })
             .collect();
         let mid = vals.len() / 2;
-        vals.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        // total_cmp mirrors the native CountSketch median: a NaN in a
+        // device-written table degrades deterministically, never panics
+        vals.select_nth_unstable_by(mid, f32::total_cmp);
         vals[mid] as f64
     }
 

@@ -9,7 +9,7 @@
 use super::{RhhSketch, SketchParams};
 use crate::data::Element;
 use crate::error::{Error, Result};
-use crate::util::hashing::{KeyCoords, SketchHasher};
+use crate::util::hashing::{KeyCoords, SketchHasher, LANE};
 
 /// CountMin with min-of-rows estimation.
 #[derive(Clone, Debug)]
@@ -50,13 +50,37 @@ impl CountMin {
         self.processed
     }
 
-    /// Estimate a whole column of keys into `out` (§Perf L3-7), matching
+    /// Estimate a whole column of keys into `out` (§Perf L3-7/L3-8),
+    /// matching
     /// [`CountSketch::est_many`](crate::sketch::countsketch::CountSketch::est_many)'s
-    /// contract: each entry is bit-identical to [`RhhSketch::est`]. The
-    /// min-of-rows fold needs no scratch at all.
+    /// contract: each entry is bit-identical to [`RhhSketch::est`].
+    ///
+    /// Keys go `LANE` at a time with the table-gather phase batched
+    /// row-major — per row, the lane's reads all land in one contiguous
+    /// row slice — and the min fold accumulated per key in the same row
+    /// order as the scalar fold (`f64::min` is NaN-ignoring and
+    /// branch-predictable, so no comparator can panic here either).
     pub fn est_many(&self, keys: &[u64], out: &mut [f64]) {
         assert_eq!(keys.len(), out.len(), "est_many requires out.len() == keys.len()");
-        for (&k, slot) in keys.iter().zip(out.iter_mut()) {
+        let rows = self.params.rows;
+        let w = self.params.width;
+        let mut kchunks = keys.chunks_exact(LANE);
+        let mut ochunks = out.chunks_exact_mut(LANE);
+        for (ks, os) in (&mut kchunks).zip(&mut ochunks) {
+            let mut cs = [KeyCoords::default(); LANE];
+            for i in 0..LANE {
+                cs[i] = self.hasher.coords_of(ks[i]);
+            }
+            let mut acc = [f64::INFINITY; LANE];
+            for r in 0..rows {
+                let row = &self.table[r * w..(r + 1) * w];
+                for i in 0..LANE {
+                    acc[i] = acc[i].min(row[self.hasher.bucket_from(&cs[i], r)]);
+                }
+            }
+            os.copy_from_slice(&acc);
+        }
+        for (&k, slot) in kchunks.remainder().iter().zip(ochunks.into_remainder()) {
             *slot = RhhSketch::est(self, k);
         }
     }
@@ -76,7 +100,20 @@ impl CountMin {
         let w = self.params.width;
         for r in 0..self.params.rows {
             let row = &mut self.table[r * w..(r + 1) * w];
-            for (c, &v) in coords.iter().zip(vals) {
+            // lane-unrolled bucket derivation, element-order scatter
+            // (§Perf L3-8) — same shape as CountSketch minus the sign
+            let mut cchunks = coords.chunks_exact(LANE);
+            let mut vchunks = vals.chunks_exact(LANE);
+            for (cs, vs) in (&mut cchunks).zip(&mut vchunks) {
+                let mut bs = [0usize; LANE];
+                for i in 0..LANE {
+                    bs[i] = self.hasher.bucket_from(&cs[i], r);
+                }
+                for i in 0..LANE {
+                    row[bs[i]] += vs[i];
+                }
+            }
+            for (c, &v) in cchunks.remainder().iter().zip(vchunks.remainder()) {
                 row[self.hasher.bucket_from(c, r)] += v;
             }
         }
@@ -98,7 +135,18 @@ impl CountMin {
         let w = self.params.width;
         for r in 0..self.params.rows {
             let row = &mut self.table[r * w..(r + 1) * w];
-            for (c, e) in coords.iter().zip(batch) {
+            let mut cchunks = coords.chunks_exact(LANE);
+            let mut echunks = batch.chunks_exact(LANE);
+            for (cs, es) in (&mut cchunks).zip(&mut echunks) {
+                let mut bs = [0usize; LANE];
+                for i in 0..LANE {
+                    bs[i] = self.hasher.bucket_from(&cs[i], r);
+                }
+                for i in 0..LANE {
+                    row[bs[i]] += es[i].val;
+                }
+            }
+            for (c, e) in cchunks.remainder().iter().zip(echunks.remainder()) {
                 row[self.hasher.bucket_from(c, r)] += e.val;
             }
         }

@@ -16,7 +16,7 @@
 use super::{RhhSketch, SketchParams};
 use crate::data::Element;
 use crate::error::{Error, Result};
-use crate::util::hashing::{KeyCoords, SketchHasher};
+use crate::util::hashing::{KeyCoords, SketchHasher, LANE};
 
 /// CountSketch with median-of-rows estimation.
 #[derive(Clone, Debug)]
@@ -88,9 +88,17 @@ impl CountSketch {
     /// Fill `buf` (len = rows) with the per-row signed bucket reads of
     /// `key` and select the median in place — the shared estimation
     /// kernel behind [`RhhSketch::est`] and [`CountSketch::est_many`].
-    /// `select_nth_unstable_by` (not a full sort) with the usual
-    /// `partial_cmp` order; the median *value* is deterministic because
-    /// selection only permutes equal-valued candidates.
+    ///
+    /// The sweep is split into a **derive phase** (straight-line hash →
+    /// signed read per row) and a median select over `f64::total_cmp` —
+    /// total order, no `unwrap`, and branch-predictable (it compiles to
+    /// an integer compare on the sign-flipped bit patterns). On the
+    /// finite tables the ingest boundary now guarantees, `total_cmp`
+    /// ranks exactly like the old `partial_cmp().unwrap()`; if a
+    /// non-finite cell ever appears anyway (a hand-built table), the
+    /// median degrades deterministically instead of panicking. The
+    /// median *value* is deterministic because selection only permutes
+    /// equal-valued candidates.
     #[inline]
     fn est_into(&self, key: u64, buf: &mut [f64]) -> f64 {
         let c = self.hasher.coords_of(key);
@@ -100,21 +108,50 @@ impl CountSketch {
             *slot = s * self.table[r * w + b];
         }
         let mid = buf.len() / 2;
-        buf.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        buf.select_nth_unstable_by(mid, f64::total_cmp);
         buf[mid]
     }
 
-    /// Estimate a whole column of keys into `out` (§Perf L3-7): one
-    /// reusable rows-sized scratch is shared across the entire key slice,
-    /// so candidate-scoring loops (worp1 shrink/sample, worp2 finalize)
-    /// pay zero allocations per key instead of one scratch per `est`
-    /// call. Each entry is bit-identical to [`RhhSketch::est`].
+    /// Estimate a whole column of keys into `out` (§Perf L3-7/L3-8).
+    ///
+    /// Keys are processed `LANE` at a time with the table-gather phase
+    /// batched **row-major**: per row, the lane's reads all land in the
+    /// same contiguous `width`-sized row slice (cache-resident across
+    /// the lane) instead of striding the full table once per key. One
+    /// stack scratch is shared across the entire key column, so
+    /// candidate-scoring loops (worp1 shrink/sample, worp2 finalize,
+    /// the cluster query fold) pay zero allocations per key. Each entry
+    /// is bit-identical to [`RhhSketch::est`]: the per-key gathered
+    /// values and the `total_cmp` median select are exactly
+    /// [`CountSketch::est_into`]'s.
     pub fn est_many(&self, keys: &[u64], out: &mut [f64]) {
         assert_eq!(keys.len(), out.len(), "est_many requires out.len() == keys.len()");
         let rows = self.params.rows;
+        let w = self.params.width;
         if rows <= 63 {
+            let mut lane_buf = [0.0f64; 63 * LANE];
+            let mut kchunks = keys.chunks_exact(LANE);
+            let mut ochunks = out.chunks_exact_mut(LANE);
+            for (ks, os) in (&mut kchunks).zip(&mut ochunks) {
+                let mut cs = [KeyCoords::default(); LANE];
+                for i in 0..LANE {
+                    cs[i] = self.hasher.coords_of(ks[i]);
+                }
+                for r in 0..rows {
+                    let row = &self.table[r * w..(r + 1) * w];
+                    for i in 0..LANE {
+                        let (b, s) = self.hasher.bucket_sign_from(&cs[i], r);
+                        lane_buf[i * rows + r] = s * row[b];
+                    }
+                }
+                for (i, slot) in os.iter_mut().enumerate() {
+                    let buf = &mut lane_buf[i * rows..(i + 1) * rows];
+                    buf.select_nth_unstable_by(rows / 2, f64::total_cmp);
+                    *slot = buf[rows / 2];
+                }
+            }
             let mut buf = [0.0f64; 63];
-            for (&k, slot) in keys.iter().zip(out.iter_mut()) {
+            for (&k, slot) in kchunks.remainder().iter().zip(ochunks.into_remainder()) {
                 *slot = self.est_into(k, &mut buf[..rows]);
             }
         } else {
@@ -138,7 +175,29 @@ impl CountSketch {
         let w = self.params.width;
         for r in 0..self.params.rows {
             let row = &mut self.table[r * w..(r + 1) * w];
-            for (c, &v) in coords.iter().zip(vals) {
+            // §Perf L3-8: lane-unrolled, branch-free sweep. Per LANE
+            // chunk, the bucket/signed-value derivation is a fixed-width
+            // straight-line loop (autovectorizable: one mix, one
+            // multiply-shift, one sign-bit move, one multiply per
+            // element); only the scatter stays serial, applied in
+            // element order so the row cells stay bit-identical to the
+            // scalar loop (`row[b] += s * v` computes the very same
+            // product before the add).
+            let mut cchunks = coords.chunks_exact(LANE);
+            let mut vchunks = vals.chunks_exact(LANE);
+            for (cs, vs) in (&mut cchunks).zip(&mut vchunks) {
+                let mut bs = [0usize; LANE];
+                let mut sv = [0.0f64; LANE];
+                for i in 0..LANE {
+                    let (b, s) = self.hasher.bucket_sign_from(&cs[i], r);
+                    bs[i] = b;
+                    sv[i] = s * vs[i];
+                }
+                for i in 0..LANE {
+                    row[bs[i]] += sv[i];
+                }
+            }
+            for (c, &v) in cchunks.remainder().iter().zip(vchunks.remainder()) {
                 let (b, s) = self.hasher.bucket_sign_from(c, r);
                 row[b] += s * v;
             }
@@ -162,7 +221,23 @@ impl CountSketch {
         let w = self.params.width;
         for r in 0..self.params.rows {
             let row = &mut self.table[r * w..(r + 1) * w];
-            for (c, e) in coords.iter().zip(batch) {
+            // same lane-unrolled sweep as process_cols, with the value
+            // loads off the AoS element slice (§Perf L3-8)
+            let mut cchunks = coords.chunks_exact(LANE);
+            let mut echunks = batch.chunks_exact(LANE);
+            for (cs, es) in (&mut cchunks).zip(&mut echunks) {
+                let mut bs = [0usize; LANE];
+                let mut sv = [0.0f64; LANE];
+                for i in 0..LANE {
+                    let (b, s) = self.hasher.bucket_sign_from(&cs[i], r);
+                    bs[i] = b;
+                    sv[i] = s * es[i].val;
+                }
+                for i in 0..LANE {
+                    row[bs[i]] += sv[i];
+                }
+            }
+            for (c, e) in cchunks.remainder().iter().zip(echunks.remainder()) {
                 let (b, s) = self.hasher.bucket_sign_from(c, r);
                 row[b] += s * e.val;
             }

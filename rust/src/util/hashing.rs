@@ -16,6 +16,30 @@
 
 use super::rng::mix64;
 
+/// Fixed unroll width of the lane-structured sketch kernels (§Perf
+/// L3-8): [`SketchHasher::fill_coords_slice`] and the
+/// CountSketch/CountMin row sweeps process `LANE` keys per straight-line
+/// iteration — a shape the autovectorizer reliably turns into SIMD
+/// (AVX2: 4×u64 per register, two registers per lane half). Exposed so
+/// the lane-edge bit-identity tests (`tests/batch_contract.rs`) can pin
+/// their block-length grid to the real boundary.
+pub const LANE: usize = 8;
+
+/// Seed-xor tag deriving the second base hash of [`KeyCoords`] — shared
+/// by the scalar [`SketchHasher::coords_of`] and the `simd` lane kernel
+/// so the two derivations can never drift apart.
+const H2_SEED_XOR: u64 = 0x5851_F42D_4C95_7F2D;
+
+/// Branch-free ±1.0 from a row word: the word's low bit moves straight
+/// into the f64 sign-bit position over the bit pattern of `+1.0`.
+/// Bit-identical to `if m & 1 == 0 { 1.0 } else { -1.0 }` for every
+/// input, without the data-dependent branch the unrolled sweeps would
+/// otherwise mispredict half the time.
+#[inline(always)]
+fn sign_of_word(m: u64) -> f64 {
+    f64::from_bits(1.0f64.to_bits() | ((m & 1) << 63))
+}
+
 /// Strong stateless 64-bit hash of `(seed, key)`.
 #[inline]
 pub fn hash64(seed: u64, key: u64) -> u64 {
@@ -195,7 +219,7 @@ pub struct SketchHasher {
 }
 
 /// Per-key derived state: compute once, then O(1) per row.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct KeyCoords {
     h1: u64,
     h2: u64,
@@ -225,7 +249,7 @@ impl SketchHasher {
         KeyCoords {
             h1: hash64(self.seed, key),
             // force h2 odd so rows never collapse
-            h2: hash64(self.seed ^ 0x5851_F42D_4C95_7F2D, key) | 1,
+            h2: hash64(self.seed ^ H2_SEED_XOR, key) | 1,
         }
     }
 
@@ -253,11 +277,7 @@ impl SketchHasher {
     #[inline(always)]
     pub fn sign_from(&self, c: &KeyCoords, row: usize) -> f64 {
         // use a bit not consumed by the bucket reduction's high bits
-        if c.row_word(row) & 1 == 0 {
-            1.0
-        } else {
-            -1.0
-        }
+        sign_of_word(c.row_word(row))
     }
 
     /// Bucket *and* sign from precomputed key state with a single mix.
@@ -271,8 +291,7 @@ impl SketchHasher {
     pub fn bucket_sign_from(&self, c: &KeyCoords, row: usize) -> (usize, f64) {
         let m = c.row_word(row);
         let b = (((m as u128) * (self.width as u128)) >> 64) as usize;
-        let s = if m & 1 == 0 { 1.0 } else { -1.0 };
-        (b, s)
+        (b, sign_of_word(m))
     }
 
     /// Columnar block hashing (§Perf L3-6): derive the per-key state for a
@@ -287,12 +306,38 @@ impl SketchHasher {
     }
 
     /// [`SketchHasher::fill_coords`] over a dense key column (§Perf
-    /// L3-7): the SoA block path hands the hasher the `&[u64]` key slice
-    /// of an [`crate::data::ElementBlock`] — a straight-line sweep over
-    /// contiguous keys with no per-element struct loads.
+    /// L3-7/L3-8): the SoA block path hands the hasher the `&[u64]` key
+    /// slice of an [`crate::data::ElementBlock`].
+    ///
+    /// The sweep is **lane-unrolled**: `chunks_exact(LANE)` produces
+    /// fixed-width straight-line iterations with no data-dependent
+    /// branches, so the whole h1/h2 derivation (xor, splitmix rounds,
+    /// rotate, or-with-1) autovectorizes. The scalar tail handles the
+    /// `len % LANE` remainder. Each `KeyCoords` is exactly
+    /// [`SketchHasher::coords_of`] of its key, so the output is
+    /// bit-identical to the iterator path for every length.
     #[inline]
     pub fn fill_coords_slice(&self, keys: &[u64], out: &mut Vec<KeyCoords>) {
-        self.fill_coords(keys.iter().copied(), out);
+        out.clear();
+        out.reserve(keys.len());
+        #[cfg(feature = "simd")]
+        {
+            simd::fill_coords_lanes(self.seed, keys, out);
+        }
+        #[cfg(not(feature = "simd"))]
+        {
+            let mut chunks = keys.chunks_exact(LANE);
+            for c in &mut chunks {
+                let mut lane = [KeyCoords::default(); LANE];
+                for i in 0..LANE {
+                    lane[i] = self.coords_of(c[i]);
+                }
+                out.extend_from_slice(&lane);
+            }
+            for &k in chunks.remainder() {
+                out.push(self.coords_of(k));
+            }
+        }
     }
 
     /// Sketch width (buckets per row).
@@ -303,6 +348,77 @@ impl SketchHasher {
     /// Seed.
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+}
+
+/// Explicit `std::simd` lane kernel behind the off-by-default `simd`
+/// feature (`portable_simd` is nightly-only, hence the gate). The whole
+/// `hash64` chain — splitmix finalizer rounds, the add/xor/rotate glue,
+/// the or-with-1 of `h2` — runs per 8-wide `u64` vector with the exact
+/// wrapping semantics of the scalar ops, so the derived [`KeyCoords`]
+/// are **bit-identical** to [`SketchHasher::coords_of`]
+/// (`simd_matches_scalar_derivation` below pins it). The default build
+/// relies on the autovectorizer over the same lane-unrolled shape.
+#[cfg(feature = "simd")]
+mod simd {
+    use super::{hash64, KeyCoords, H2_SEED_XOR, LANE};
+    use std::simd::Simd;
+
+    type V = Simd<u64, LANE>;
+
+    /// Vector splitmix64 finalizer — `super::mix64` per lane.
+    #[inline(always)]
+    fn mix64v(x: V) -> V {
+        // portable-SIMD integer `+`/`*` wrap by definition, matching the
+        // scalar wrapping_add / wrapping_mul
+        let s = x + V::splat(0x9E37_79B9_7F4A_7C15);
+        let z = (s ^ (s >> V::splat(30))) * V::splat(0xBF58_476D_1CE4_E5B9);
+        let z = (z ^ (z >> V::splat(27))) * V::splat(0x94D0_49BB_1331_11EB);
+        z ^ (z >> V::splat(31))
+    }
+
+    /// Vector [`hash64`] over a lane of keys.
+    #[inline(always)]
+    fn hash64v(seed: u64, key: V) -> V {
+        let h = mix64v(V::splat(seed ^ 0x9E37_79B9_7F4A_7C15) ^ key);
+        // rotate_left(32) spelled as shifts (no vector rotate in std::simd)
+        let rot = (key << V::splat(32)) | (key >> V::splat(32));
+        mix64v((h + V::splat(0x6A09_E667_F3BC_C909)) ^ rot)
+    }
+
+    /// Fill `out` with the per-key coords of `keys`, SIMD lanes plus a
+    /// scalar tail. Caller has already cleared and reserved `out`.
+    pub(super) fn fill_coords_lanes(seed: u64, keys: &[u64], out: &mut Vec<KeyCoords>) {
+        let seed2 = seed ^ H2_SEED_XOR;
+        let mut chunks = keys.chunks_exact(LANE);
+        for c in &mut chunks {
+            let k = V::from_slice(c);
+            let h1 = hash64v(seed, k).to_array();
+            let h2 = (hash64v(seed2, k) | V::splat(1)).to_array();
+            for i in 0..LANE {
+                out.push(KeyCoords { h1: h1[i], h2: h2[i] });
+            }
+        }
+        for &k in chunks.remainder() {
+            out.push(KeyCoords { h1: hash64(seed, k), h2: hash64(seed2, k) | 1 });
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::super::SketchHasher;
+
+        #[test]
+        fn simd_matches_scalar_derivation() {
+            let sh = SketchHasher::new(0xDEAD_BEEF, 64);
+            let keys: Vec<u64> = (0..100).map(|i| i * 0x9E37_79B9 + 3).collect();
+            let mut out = Vec::new();
+            sh.fill_coords_slice(&keys, &mut out);
+            for (k, c) in keys.iter().zip(&out) {
+                let want = sh.coords_of(*k);
+                assert_eq!((c.h1, c.h2), (want.h1, want.h2));
+            }
+        }
     }
 }
 
@@ -475,6 +591,31 @@ mod tests {
         // refills clear first — no stale coords survive
         sh.fill_coords([1u64, 2].into_iter(), &mut out);
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn sign_of_word_is_branch_bit_identical() {
+        for m in [0u64, 1, 2, 3, u64::MAX, u64::MAX - 1, 0x8000_0000_0000_0001] {
+            let branchy = if m & 1 == 0 { 1.0f64 } else { -1.0f64 };
+            assert_eq!(sign_of_word(m).to_bits(), branchy.to_bits(), "word {m:#x}");
+        }
+    }
+
+    #[test]
+    fn fill_coords_slice_lane_edges_match_scalar() {
+        // every length class around the unroll boundary: empty, single,
+        // lane-1, lane, lane+1, a few full lanes plus tail
+        let sh = SketchHasher::new(41, 97);
+        for len in [0, 1, LANE - 1, LANE, LANE + 1, 3 * LANE + 2] {
+            let keys: Vec<u64> = (0..len as u64).map(|i| i * 7919 + 13).collect();
+            let mut out = Vec::new();
+            sh.fill_coords_slice(&keys, &mut out);
+            assert_eq!(out.len(), len);
+            for (k, c) in keys.iter().zip(&out) {
+                let want = sh.coords_of(*k);
+                assert_eq!((c.h1, c.h2), (want.h1, want.h2), "len {len} key {k}");
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ use worp::sketch::countmin::CountMin;
 use worp::sketch::countsketch::CountSketch;
 use worp::sketch::spacesaving::SpaceSaving;
 use worp::sketch::{AnyRhh, RhhSketch, SketchParams};
+use worp::util::hashing::LANE;
 use worp::util::proptest::{run, Gen};
 
 /// Drive a clone per path: per-element vs chunked AoS batches vs chunked
@@ -303,6 +304,132 @@ fn merge_after_batch_equals_whole_scalar() {
             WorSampler::sample(&whole).unwrap().keys()
         );
     });
+}
+
+// ---------------------------------------------------------------------------
+// Lane-edge grid (PR 8): the unrolled kernels process LANE elements per
+// straight-line chunk with a scalar remainder tail; every seam between
+// the two paths is pinned here, bit-for-bit.
+
+/// Block lengths that straddle every unroll seam: empty, single, one
+/// short of a lane, exactly a lane, one past, and a multi-lane block
+/// with a ragged tail.
+fn lane_edge_lengths() -> [usize; 6] {
+    [0, 1, LANE - 1, LANE, LANE + 1, 3 * LANE + 2]
+}
+
+#[test]
+fn countsketch_lane_edges_bit_identical_across_shape_grid() {
+    // rows odd/even (incl. the degenerate 1-row sketch), width both a
+    // multiple of LANE and deliberately not (17), signed updates
+    let mut g = Gen::new(0xC0FFEE);
+    for &rows in &[1usize, 2, 5, 6] {
+        for &width in &[17usize, 64] {
+            for &len in &lane_edge_lengths() {
+                let proto = CountSketch::with_shape(rows, width, 0xA5A5);
+                let elems = signed_stream(&mut g, len, 500);
+                // chunk == len: one block of exactly the edge length
+                // drives a single process_cols/process_batch sweep
+                let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, len.max(1));
+                let bits = |t: &[f64]| t.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(
+                    bits(s.table()),
+                    bits(b.table()),
+                    "rows={rows} width={width} len={len} (batch)"
+                );
+                assert_eq!(
+                    bits(s.table()),
+                    bits(blk.table()),
+                    "rows={rows} width={width} len={len} (block)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn countmin_lane_edges_bit_identical_across_shape_grid() {
+    let mut g = Gen::new(0xBEEF);
+    for &rows in &[1usize, 2, 5] {
+        for &width in &[17usize, 64] {
+            for &len in &lane_edge_lengths() {
+                let proto = CountMin::with_shape(rows, width, 0xA5A5);
+                let elems: Vec<Element> = (0..len)
+                    .map(|_| Element::new(g.u64_below(500), g.f64_range(0.0, 10.0)))
+                    .collect();
+                let (s, b, blk) = scalar_vs_batch_vs_block(&proto, &elems, len.max(1));
+                for key in 0..500u64 {
+                    assert_eq!(
+                        s.est(key).to_bits(),
+                        b.est(key).to_bits(),
+                        "rows={rows} width={width} len={len} key={key}"
+                    );
+                    assert_eq!(s.est(key).to_bits(), blk.est(key).to_bits());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn est_many_matches_est_bitwise_at_lane_edges() {
+    // the lane-batched table-gather in est_many must reproduce the
+    // per-key est exactly, for every query-column length seam and for
+    // both the shared row-sweep sketches
+    let mut g = Gen::new(0xF00D);
+    let elems = signed_stream(&mut g, 2_000, 700);
+    let mut cs = CountSketch::with_shape(5, 17, 31);
+    let mut cm = CountMin::with_shape(4, 17, 31);
+    for e in &elems {
+        RhhSketch::process(&mut cs, e);
+    }
+    let pos: Vec<Element> = elems.iter().map(|e| Element::new(e.key, e.val.abs())).collect();
+    for e in &pos {
+        RhhSketch::process(&mut cm, e);
+    }
+    let all_keys: Vec<u64> = (0..700u64).collect();
+    for &len in &lane_edge_lengths() {
+        let keys = &all_keys[..len];
+        let mut out = vec![0.0f64; len];
+        cs.est_many(keys, &mut out);
+        for (k, o) in keys.iter().zip(&out) {
+            assert_eq!(o.to_bits(), cs.est(*k).to_bits(), "countsketch len={len} key={k}");
+        }
+        cm.est_many(keys, &mut out);
+        for (k, o) in keys.iter().zip(&out) {
+            assert_eq!(o.to_bits(), cm.est(*k).to_bits(), "countmin len={len} key={k}");
+        }
+    }
+}
+
+#[test]
+fn boxed_dyn_sampler_signed_updates_at_lane_edge_chunks() {
+    // the builder → Box<dyn WorSampler> route with turnstile (signed)
+    // updates, chunked exactly on the unroll seams — the full CLI path
+    // over the rewritten kernels
+    let mut g = Gen::new(0xDEAD);
+    let n = 120u64;
+    let elems = signed_stream(&mut g, 400, n);
+    let b = worp::Worp::p(2.0)
+        .k(8)
+        .seed(9)
+        .domain(n as usize)
+        .sketch_shape(5, 512);
+    for chunk in [1usize, LANE - 1, LANE, LANE + 1, 3 * LANE + 2] {
+        for method in [worp::Method::OnePass, worp::Method::Exact] {
+            let mut chunked = b.clone().method(method).build().unwrap();
+            let mut scalar = b.clone().method(method).build().unwrap();
+            for c in elems.chunks(chunk) {
+                chunked.process_block(&ElementBlock::from_elements(c));
+            }
+            for e in &elems {
+                scalar.process(e);
+            }
+            let (cs, ss) = (chunked.sample().unwrap(), scalar.sample().unwrap());
+            assert_eq!(cs.entries, ss.entries, "{method:?} chunk={chunk}");
+            assert_eq!(cs.tau, ss.tau, "{method:?} chunk={chunk}");
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,238 @@
+//! Adversarial non-finite ingest suite (ISSUE 8 acceptance):
+//!
+//! Before PR 8, `Engine::ingest_records` accepted raw f64 bits straight
+//! off the wire — one crafted NaN poisoned a sketch table (NaN
+//! propagates through every `+=` it touches) and, pre-`total_cmp`, made
+//! every later median panic. The contract now is **whole-block
+//! rejection at the boundary**:
+//!
+//! 1. a block containing any NaN/±inf value is refused with a typed
+//!    [`Error::Codec`] before *any* shard state is touched;
+//! 2. over TCP, a crafted non-finite INGEST frame is answered with a
+//!    typed error frame and the connection stays usable — no panic, no
+//!    poisoned sketch, no close;
+//! 3. the instance remains fully serviceable afterwards: good ingest,
+//!    flush, sample and snapshot → restore all still round-trip;
+//! 4. the offline pipeline entry ([`run_sharded`]) rejects non-finite
+//!    stream elements the same way.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+use worp::codec::{self, wire};
+use worp::data::{Element, ElementBlock};
+use worp::engine::client::Client;
+use worp::engine::proto::{self, op};
+use worp::engine::server::{ServeOpts, Server};
+use worp::engine::{Engine, EngineOpts};
+use worp::pipeline::{run_sharded, FnSink, PipelineOpts};
+use worp::{Error, Worp};
+
+const SHARDS: usize = 3;
+const BATCH: usize = 64;
+
+fn spec(seed: u64) -> Worp {
+    Worp::p(1.0).k(16).seed(seed).domain(600).sketch_shape(5, 256)
+}
+
+fn proto_spec(seed: u64) -> proto::InstanceSpec {
+    let mut cfg = worp::config::PipelineConfig::default();
+    cfg.method = "1pass".into();
+    cfg.k = 16;
+    cfg.seed = seed;
+    cfg.n = 600;
+    cfg.rows = 5;
+    cfg.width = 256;
+    proto::InstanceSpec::from_config(&cfg)
+}
+
+fn good_block(lo: u64, n: u64) -> ElementBlock {
+    let elems: Vec<Element> =
+        (lo..lo + n).map(|i| Element::new(i % 97, (i % 7) as f64 + 0.5)).collect();
+    ElementBlock::from_elements(&elems)
+}
+
+fn merged_encode(engine: &Engine, name: &str) -> Vec<u8> {
+    let mut out = Vec::new();
+    engine.instance(name).unwrap().merged().unwrap().encode_state(&mut out);
+    out
+}
+
+/// Every non-finite f64 the wire can carry, including a payload NaN
+/// whose bit pattern a naive `!= f64::NAN` style check would miss.
+fn nonfinite_values() -> Vec<f64> {
+    vec![
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::from_bits(0x7FF0_0000_0000_0001), // signaling-style NaN
+        f64::from_bits(0xFFF8_DEAD_BEEF_0001), // negative quiet NaN, junk payload
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// 1. library boundary: whole-block rejection, state untouched
+
+#[test]
+fn nonfinite_block_rejected_with_typed_error_and_state_intact() {
+    let engine = Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap());
+    engine.create("t", &spec(5).exact()).unwrap();
+    engine.ingest("t", &good_block(0, 500)).unwrap();
+    engine.flush("t").unwrap();
+    let before = merged_encode(&engine, "t");
+
+    for bad in nonfinite_values() {
+        let mut block = good_block(500, 3);
+        block.push(11, bad); // poison row *after* valid rows
+        block.push(12, 1.0); // and a valid row after the poison
+        let err = engine.ingest("t", &block).unwrap_err();
+        assert!(matches!(err, Error::Codec(_)), "value {bad:?}: got {err:?}");
+        assert!(
+            err.to_string().contains("non-finite"),
+            "error must name the contract, got: {err}"
+        );
+    }
+
+    // whole-block rejection: not even the valid rows before the poison
+    // may have landed — the merged state is bit-identical to before
+    engine.flush("t").unwrap();
+    assert_eq!(
+        before,
+        merged_encode(&engine, "t"),
+        "rejected blocks must leave no trace in any shard"
+    );
+
+    // and the instance still works
+    engine.ingest("t", &good_block(500, 100)).unwrap();
+    engine.flush("t").unwrap();
+    assert_ne!(before, merged_encode(&engine, "t"));
+}
+
+#[test]
+fn nonfinite_raw_records_rejected_before_any_shard_state() {
+    let engine = Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap());
+    engine.create("t", &spec(7).exact()).unwrap();
+    engine.ingest("t", &good_block(0, 200)).unwrap();
+    engine.flush("t").unwrap();
+    let before = merged_encode(&engine, "t");
+
+    // the zero-copy wire path: raw little-endian (key u64, val f64)
+    // records, poisoned via raw bit patterns — exactly what a hostile
+    // client would put in an INGEST payload
+    for bits in [
+        f64::NAN.to_bits(),
+        f64::INFINITY.to_bits(),
+        0x7FF0_0000_0000_0001u64,
+    ] {
+        let mut recs = Vec::new();
+        wire::put_u64(&mut recs, 1);
+        wire::put_f64(&mut recs, 2.0);
+        wire::put_u64(&mut recs, 2);
+        recs.extend_from_slice(&bits.to_le_bytes());
+        wire::put_u64(&mut recs, 3);
+        wire::put_f64(&mut recs, 3.0);
+        let err = engine.ingest_records("t", &recs).unwrap_err();
+        assert!(matches!(err, Error::Codec(_)), "bits {bits:#x}: got {err:?}");
+    }
+
+    engine.flush("t").unwrap();
+    assert_eq!(before, merged_encode(&engine, "t"));
+}
+
+// ---------------------------------------------------------------------------
+// 2+3. wire boundary: crafted frame, surviving connection, full recovery
+
+fn read_resp(stream: &mut TcpStream) -> worp::Result<Option<proto::Frame>> {
+    stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    proto::read_frame(stream, proto::DEFAULT_MAX_FRAME)
+}
+
+#[test]
+fn crafted_nan_frame_gets_typed_error_and_connection_survives() {
+    let engine = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    let srv = Server::start(Arc::clone(&engine), "127.0.0.1:0", ServeOpts::default()).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let mut c = Client::connect(&addr)
+        .unwrap()
+        .with_timeout(Duration::from_secs(20))
+        .unwrap();
+    c.create("wire/t", &proto_spec(5)).unwrap();
+    c.ingest("wire/t", &good_block(0, 300)).unwrap();
+
+    // hand-crafted v1 INGEST frame: well-formed framing, NaN payload —
+    // the framing layer cannot catch this, only the engine boundary can
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut payload = Vec::new();
+        codec::put_str(&mut payload, "wire/t");
+        wire::put_usize(&mut payload, 2);
+        wire::put_u64(&mut payload, 40);
+        wire::put_f64(&mut payload, 1.0);
+        wire::put_u64(&mut payload, 41);
+        payload.extend_from_slice(&f64::NAN.to_bits().to_le_bytes());
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, op::INGEST, &payload);
+        s.write_all(&buf).unwrap();
+        let f = read_resp(&mut s).unwrap().expect("a typed error frame, not a close");
+        assert_eq!(f.opcode, proto::RESP_ERR);
+        assert!(matches!(proto::decode_error(&f.payload), Error::Codec(_)));
+        // the framing was valid, so the connection MUST stay open
+        let mut buf = Vec::new();
+        proto::put_frame(&mut buf, op::PING, b"");
+        s.write_all(&buf).unwrap();
+        let f = read_resp(&mut s).unwrap().expect("ping still answered");
+        assert_eq!(f.opcode, proto::resp_ok(op::PING));
+    }
+
+    // the rust client path: a typed engine error must surface as
+    // Error::Codec and must NOT poison the connection
+    let mut bad = good_block(300, 2);
+    bad.push(42, f64::INFINITY);
+    let err = c.ingest("wire/t", &bad).unwrap_err();
+    assert!(matches!(err, Error::Codec(_)), "got {err:?}");
+    c.ping().expect("typed engine errors must not poison the client");
+
+    // full recovery: good ingest, flush, sample, snapshot -> restore
+    c.ingest("wire/t", &good_block(300, 100)).unwrap();
+    c.flush("wire/t").unwrap();
+    let sample = c.sample("wire/t").unwrap();
+    assert!(!sample.entries.is_empty());
+    for e in &sample.entries {
+        assert!(e.freq.is_finite(), "a NaN leaked into the sample: {e:?}");
+    }
+    let snap = c.snapshot("wire/t").unwrap();
+
+    let engine_b = Arc::new(Engine::new(EngineOpts::new(SHARDS, BATCH).unwrap()));
+    let srv_b = Server::start(Arc::clone(&engine_b), "127.0.0.1:0", ServeOpts::default()).unwrap();
+    let mut cb = Client::connect(&srv_b.local_addr().to_string()).unwrap();
+    assert_eq!(cb.restore(&snap).unwrap(), "wire/t");
+    assert_eq!(
+        merged_encode(&engine, "wire/t"),
+        merged_encode(&engine_b, "wire/t"),
+        "snapshot -> restore must still round-trip bit-identically after the attack"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. offline pipeline entry
+
+#[test]
+fn offline_pipeline_rejects_nonfinite_stream_elements() {
+    let mut stream: Vec<Element> = (0..1_000u64).map(|i| Element::new(i % 50, 1.0)).collect();
+    stream[617] = Element::new(9, f64::NAN);
+    let opts = PipelineOpts::new(4, 128).unwrap();
+    let err = run_sharded(&stream, opts, |_| FnSink::new(|_e: &Element| {})).unwrap_err();
+    assert!(matches!(err, Error::Codec(_)), "got {err:?}");
+    assert!(
+        err.to_string().contains("617"),
+        "error should name the offending stream position, got: {err}"
+    );
+
+    // a finite stream still runs clean through the same call
+    stream[617] = Element::new(9, 1.0);
+    let (states, metrics) = run_sharded(&stream, opts, |_| FnSink::new(|_e: &Element| {})).unwrap();
+    assert_eq!(states.len(), 4);
+    assert_eq!(metrics.elements(), 1_000);
+}
