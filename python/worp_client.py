@@ -93,6 +93,7 @@ ERROR_KINDS = {
     6: "pipeline",
     7: "codec",
     8: "io",
+    9: "unavailable",
 }
 
 
@@ -332,14 +333,28 @@ class Client:
         self._next_req = (self._next_req + 1) & MASK64
         return self._next_req
 
-    def _call(self, opcode, payload=b""):
+    def _call(self, opcode, payload=b"", timeout=None):
+        """One request/response round-trip. `timeout` (seconds, or 0 to
+        disable) overrides the connection's socket timeout for just this
+        op — a blackholed server raises a typed "io" timeout instead of
+        hanging, and the connection is poisoned (the response could
+        still arrive later, desynchronizing the stream)."""
         self._check_usable()
         req_id = self._next_id()
+        saved = self.sock.gettimeout()
         try:
+            if timeout is not None:
+                self.sock.settimeout(timeout if timeout > 0 else None)
             self.sock.sendall(_pack_frame(opcode, payload, req_id))
             resp_op, got, resp = _read_frame(self.sock)
         except (OSError, WorpError) as e:
             raise self._poison(e)
+        finally:
+            if timeout is not None:
+                try:
+                    self.sock.settimeout(saved)
+                except OSError:
+                    pass
         if got != req_id:
             raise self._poison(
                 WorpError("codec", f"response for request {got}, expected {req_id}")
@@ -354,8 +369,8 @@ class Client:
             )
         return _Reader(resp)
 
-    def ping(self):
-        self._call(OP_PING).finish()
+    def ping(self, timeout=None):
+        self._call(OP_PING, timeout=timeout).finish()
 
     def create(
         self,
@@ -383,8 +398,8 @@ class Client:
     def drop(self, name):
         self._call(OP_DROP, _put_str(name)).finish()
 
-    def list(self):
-        r = self._call(OP_LIST)
+    def list(self, timeout=None):
+        r = self._call(OP_LIST, timeout=timeout)
         infos = [_read_info(r) for _ in range(r.u64())]
         r.finish()
         return infos
@@ -493,8 +508,8 @@ class Client:
             raise
         return accepted
 
-    def flush(self, name):
-        r = self._call(OP_FLUSH, _put_str(name))
+    def flush(self, name, timeout=None):
+        r = self._call(OP_FLUSH, _put_str(name), timeout=timeout)
         flushed = r.u64()
         r.finish()
         return flushed
@@ -505,10 +520,10 @@ class Client:
         r.finish()
         return new_pass
 
-    def sample(self, name):
+    def sample(self, name, timeout=None):
         """Returns {"entries": [(key, freq, transformed)], "tau", "p",
         "dist", "names": {key: str} or None}."""
-        r = self._call(OP_SAMPLE, _put_str(name))
+        r = self._call(OP_SAMPLE, _put_str(name), timeout=timeout)
         entries = [(r.u64(), r.f64(), r.f64()) for _ in range(r.u64())]
         tau, p = r.f64(), r.f64()
         dist = {1: "ppswor", 2: "priority"}.get(r.u8(), "?")
@@ -517,26 +532,30 @@ class Client:
         r.finish()
         return {"entries": entries, "tau": tau, "p": p, "dist": dist, "names": names}
 
-    def moment(self, name, p_prime):
-        r = self._call(OP_MOMENT, _put_str(name) + struct.pack("<d", p_prime))
+    def moment(self, name, p_prime, timeout=None):
+        r = self._call(
+            OP_MOMENT, _put_str(name) + struct.pack("<d", p_prime), timeout=timeout
+        )
         est = r.f64()
         r.finish()
         return est
 
-    def rank_frequency(self, name, max_points=0):
-        r = self._call(OP_RANK_FREQ, _put_str(name) + struct.pack("<Q", max_points))
+    def rank_frequency(self, name, max_points=0, timeout=None):
+        r = self._call(
+            OP_RANK_FREQ, _put_str(name) + struct.pack("<Q", max_points), timeout=timeout
+        )
         pts = [(r.f64(), r.f64()) for _ in range(r.u64())]
         r.finish()
         return pts
 
-    def stats(self, name):
-        r = self._call(OP_STATS, _put_str(name))
+    def stats(self, name, timeout=None):
+        r = self._call(OP_STATS, _put_str(name), timeout=timeout)
         info = _read_info(r)
         r.finish()
         return info
 
-    def snapshot(self, name):
-        r = self._call(OP_SNAPSHOT, _put_str(name))
+    def snapshot(self, name, timeout=None):
+        r = self._call(OP_SNAPSHOT, _put_str(name), timeout=timeout)
         raw = r.take(r.u64())
         r.finish()
         return raw
@@ -547,10 +566,10 @@ class Client:
         r.finish()
         return name
 
-    def query_raw(self, name):
+    def query_raw(self, name, timeout=None):
         """The cluster scatter query: (total_slices, [(slice, envelope)])
         — every slice this node owns, as raw sampler envelopes."""
-        r = self._call(OP_QUERY_RAW, _put_str(name))
+        r = self._call(OP_QUERY_RAW, _put_str(name), timeout=timeout)
         total = r.u64()
         slices = []
         for _ in range(r.u64()):
@@ -559,9 +578,9 @@ class Client:
         r.finish()
         return total, slices
 
-    def stats_all(self):
+    def stats_all(self, timeout=None):
         """Whole-server counters plus every instance's stats."""
-        r = self._call(OP_STATS_ALL)
+        r = self._call(OP_STATS_ALL, timeout=timeout)
         stats = _read_server_stats(r)
         r.finish()
         return stats

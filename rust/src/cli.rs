@@ -152,6 +152,8 @@ COMMANDS:
                                          bind the member's address
     client <action>
                 talk to a running `worp serve` (--addr <host:port>):
+                  --timeout <secs>        per-op read/write + connect
+                                          deadline (default 120; 0 = none)
                   ping | list
                   create   --name <ns/x>  plus `sample` sampler options
                   ingest   --name <ns/x>  stream the generated workload
@@ -174,11 +176,28 @@ COMMANDS:
                   create   --name <ns/x>  on every member (sampler opts)
                   ingest   --name <ns/x>  route the workload by key hash
                   flush | sample | moment | rankfreq | drop  --name <ns/x>
+                  sample   --name <ns/x> --partial
+                                          answer from the reachable slices
+                                          and print the typed coverage gap
+                                          instead of failing on a down node
                   snapshot --name <ns/x> --out <dir>   per-member files
                   rebalance --to <new-worp.toml>
                                           move slices onto the new member
                                           set (install-before-drop; the
                                           merged sample is unchanged)
+                  failover --to <new-worp.toml>
+                                          rebalance that tolerates dead old
+                                          owners: their slices are reported
+                                          lost instead of aborting
+                  watch    [--interval <secs>] [--grace <n>] [--once]
+                           [--out <surviving.toml>]
+                                          probe members; after --grace
+                                          consecutive failures, synthesize
+                                          the surviving topology, fail over
+                                          onto it, and (--out) persist it
+                retries/backoff/deadlines read the [cluster.retry] section
+                of the --cluster file (attempts, base_ms, cap_ms,
+                op_deadline_ms, probe_secs, seed)
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
     bench       scalar vs batch vs SoA-block ingestion throughput per
@@ -638,8 +657,12 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
     let cfg = load_config(args)?;
     let addr = args.str_or("addr", &cfg.server_addr);
-    let mut client = Client::connect(&addr)?
-        .with_timeout(std::time::Duration::from_secs(120))?;
+    // --timeout <secs> bounds connect AND every op's read/write (0 = none)
+    let timeout_secs: u64 =
+        args.parse_or("timeout", crate::engine::client::DEFAULT_OP_TIMEOUT_SECS)?;
+    let deadline =
+        (timeout_secs > 0).then(|| std::time::Duration::from_secs(timeout_secs));
+    let mut client = Client::connect_with_deadline(&addr, deadline)?;
     let name = || -> Result<String> {
         args.get("name")
             .map(str::to_string)
@@ -817,11 +840,25 @@ fn cmd_client(args: &Args) -> Result<()> {
 /// [`crate::cluster::ClusterClient`] — the spec comes from the
 /// `[cluster]` section of `--cluster <worp.toml>` (or `--config`), and
 /// every member must be a running `worp serve --cluster ... --node ...`.
+/// Print what a failover/tolerant rebalance actually did.
+fn print_failover(report: &crate::cluster::FailoverReport, members: usize) {
+    println!(
+        "failover complete onto {members} member(s): {} slice move(s), {} slice(s) lost{}",
+        report.moves,
+        report.lost_slices.len(),
+        if report.lost_slices.is_empty() {
+            String::new()
+        } else {
+            format!(" {:?} — restore from snapshots to recover their rows", report.lost_slices)
+        }
+    );
+}
+
 /// `create`/`ingest` reuse the full `sample` option surface, so a
 /// 3-node cluster session can be set up with the very flags an offline
 /// run would use — the CI cluster smoke diffs the two byte-for-byte.
 fn cmd_cluster(args: &Args) -> Result<()> {
-    use crate::cluster::{ClusterClient, ClusterSpec};
+    use crate::cluster::{ClusterClient, ClusterSpec, Health, RetryPolicy};
     use crate::engine::proto::InstanceSpec;
     let action = args
         .positionals
@@ -837,8 +874,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             "cluster commands need --cluster <worp.toml> (a file with a [cluster] section)".into(),
         )
     })?;
-    let spec = ClusterSpec::load(spec_path)?;
-    let mut cc = ClusterClient::connect(spec)?;
+    // the retry policy rides in the same file ([cluster.retry] section)
+    let doc = crate::config::Document::load(spec_path)?;
+    let spec = ClusterSpec::from_document(&doc)?;
+    let policy = RetryPolicy::from_document(&doc);
+    let mut cc = ClusterClient::connect_with(spec, policy)?;
     let name = || -> Result<String> {
         args.get("name")
             .map(str::to_string)
@@ -912,7 +952,30 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         }
         "sample" => {
             let n = name()?;
-            print_sample(&cc.sample(&n)?);
+            if args.has_flag("partial") {
+                // opt-in degraded query: answer from the reachable
+                // slices and say exactly what is missing
+                let (merged, cov) = cc.query_partial(&n)?;
+                println!(
+                    "coverage: {}/{} slice(s) answered{}",
+                    cov.answered,
+                    cov.owned,
+                    if cov.unreachable_members.is_empty() {
+                        String::new()
+                    } else {
+                        format!(" (unreachable: {})", cov.unreachable_members.join(", "))
+                    }
+                );
+                if !cov.missing_slices.is_empty() {
+                    println!("missing slices: {:?}", cov.missing_slices);
+                }
+                match merged {
+                    Some(s) => print_sample(&s.sample()?),
+                    None => println!("no slice answered — nothing to sample"),
+                }
+            } else {
+                print_sample(&cc.sample(&n)?);
+            }
         }
         "moment" => {
             let n = name()?;
@@ -954,6 +1017,77 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                 "rebalanced onto {} member(s): {moves} slice move(s)",
                 cc.spec().members.len()
             );
+        }
+        "failover" => {
+            // like rebalance, but an unreachable old owner loses its
+            // slices instead of aborting the move
+            let to = args.get("to").ok_or_else(|| {
+                Error::Config("cluster failover requires --to <new-worp.toml>".into())
+            })?;
+            let new_spec = ClusterSpec::load(to)?;
+            let report = cc.failover_to(new_spec)?;
+            print_failover(&report, cc.spec().members.len());
+        }
+        "watch" => {
+            let interval: f64 = args.parse_or("interval", 5.0f64)?;
+            let grace: u32 = args.parse_or("grace", 2u32)?;
+            let grace = grace.max(1);
+            let once = args.has_flag("once");
+            let out = args.get("out").map(str::to_string);
+            cc.set_down_after(grace);
+            let term = term_flag();
+            println!(
+                "watching cluster {}: {} member(s), probe every {interval}s, failover \
+                 after {grace} consecutive failure(s){}",
+                cc.spec().name,
+                cc.spec().members.len(),
+                if once { " (single pass)" } else { "" }
+            );
+            let mut round = 0u32;
+            loop {
+                round += 1;
+                let health = cc.probe();
+                let down: Vec<String> = health
+                    .iter()
+                    .filter(|(_, h)| *h == Health::Down)
+                    .map(|(n, _)| n.clone())
+                    .collect();
+                let states: Vec<String> =
+                    health.iter().map(|(n, h)| format!("{n}={h:?}")).collect();
+                println!("probe {round}: {}", states.join(" "));
+                if down.len() == cc.spec().members.len() {
+                    if once {
+                        return Err(Error::Unavailable(
+                            "every cluster member is down — nothing to fail over to".into(),
+                        ));
+                    }
+                    println!("every member is down — waiting for any to recover");
+                } else if !down.is_empty() {
+                    let surviving = cc.spec().surviving(&down)?;
+                    println!(
+                        "failing over: dropping {} → {} surviving member(s)",
+                        down.join(", "),
+                        surviving.members.len()
+                    );
+                    let report = cc.failover_to(surviving)?;
+                    print_failover(&report, cc.spec().members.len());
+                    if let Some(out) = &out {
+                        std::fs::write(out, cc.spec().to_toml())?;
+                        println!("surviving topology -> {out}");
+                    }
+                    if once {
+                        return Ok(());
+                    }
+                } else if once && round >= grace {
+                    println!("all members healthy — no failover needed");
+                    return Ok(());
+                }
+                if term.load(std::sync::atomic::Ordering::SeqCst) {
+                    println!("terminating watch");
+                    return Ok(());
+                }
+                std::thread::sleep(std::time::Duration::from_secs_f64(interval.max(0.05)));
+            }
         }
         other => {
             return Err(Error::Config(format!(

@@ -1,0 +1,334 @@
+//! A deterministic fault-injecting TCP proxy for cluster tests.
+//!
+//! `ChaosProxy` sits between a WRPC client and one serving node and
+//! executes a scripted [`FaultPlan`]: the `i`-th *accepted connection*
+//! gets the plan's `i`-th [`ConnFault`] (pass-through once the script
+//! runs out). Because the cluster client dials connections in a fixed
+//! order and reconnects serially, a script like "cut the first
+//! connection after 4 KiB, pass every later one" reproduces the exact
+//! same byte-level failure on every run — no timing races, no real
+//! network flakiness. Everything is `std`-only (threads + blocking
+//! sockets with short read timeouts), matching the repo's no-deps rule.
+//!
+//! Frame-aware faults ([`ConnFault::CloseOnOp`],
+//! [`ConnFault::TruncateFrame`]) parse the client→server stream with
+//! the same version-independent 16-byte prefix the real server uses
+//! (magic at 0, version u16 at 4, opcode u16 at 6, payload length u64
+//! at 8, all little-endian; v2 frames carry 16 further header bytes),
+//! so they cut on *protocol* boundaries, not byte offsets.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// What the proxy does to one accepted connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnFault {
+    /// Forward both directions untouched.
+    Pass,
+    /// Forward exactly `c2s_bytes` client→server bytes, then sever the
+    /// connection (both directions). Simulates a peer dying mid-write.
+    CutAfter {
+        /// Client→server bytes forwarded before the cut.
+        c2s_bytes: u64,
+    },
+    /// Forward the first `frame` client→server frames whole, then send
+    /// only the first half of frame number `frame` (0-based) and sever.
+    /// Simulates a crash mid-frame — the server sees a torn request.
+    TruncateFrame {
+        /// 0-based index of the frame to tear.
+        frame: usize,
+    },
+    /// Sever the connection the moment a client→server frame with this
+    /// opcode arrives, *without* forwarding it. Simulates losing the
+    /// connection right before a specific op lands.
+    CloseOnOp {
+        /// The WRPC opcode to kill on (e.g. `OP_FLUSH`).
+        op: u16,
+    },
+    /// Accept the connection and never forward (or answer) anything.
+    /// The client's only way out is its own deadline.
+    Blackhole,
+    /// Hold the first client bytes for `ms` milliseconds, then forward
+    /// everything untouched. Simulates a slow network or a GC'd peer.
+    Delay {
+        /// Delay before the first forwarded chunk, in milliseconds.
+        ms: u64,
+    },
+}
+
+/// The scripted fault sequence: accepted connection `i` suffers
+/// `rules[i]`; connections past the script pass through.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Per-connection faults, in accept order.
+    pub rules: Vec<ConnFault>,
+}
+
+impl FaultPlan {
+    /// A plan that forwards every connection untouched.
+    pub fn pass_through() -> FaultPlan {
+        FaultPlan { rules: Vec::new() }
+    }
+
+    /// A plan from the scripted per-connection faults.
+    pub fn scripted(rules: Vec<ConnFault>) -> FaultPlan {
+        FaultPlan { rules }
+    }
+
+    /// The fault for accepted connection `conn` (0-based).
+    pub fn rule_for(&self, conn: usize) -> ConnFault {
+        self.rules.get(conn).copied().unwrap_or(ConnFault::Pass)
+    }
+}
+
+/// How long a proxy pump sleeps between liveness checks; also the read
+/// timeout on proxied sockets, so every thread notices `stop()` fast.
+const TICK: Duration = Duration::from_millis(25);
+
+/// A fault-injecting TCP proxy in front of one upstream address. Binds
+/// an ephemeral localhost port ([`ChaosProxy::addr`]); connect the
+/// client there instead of at the real member.
+pub struct ChaosProxy {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicUsize>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Start proxying `127.0.0.1:<ephemeral>` → `upstream` under `plan`.
+    pub fn start(upstream: &str, plan: FaultPlan) -> std::io::Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let upstream = upstream.to_string();
+        let acceptor = {
+            let stop = Arc::clone(&stop);
+            let accepted = Arc::clone(&accepted);
+            thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((client, _)) => {
+                            let i = accepted.fetch_add(1, Ordering::Relaxed);
+                            let fault = plan.rule_for(i);
+                            let upstream = upstream.clone();
+                            let stop = Arc::clone(&stop);
+                            thread::spawn(move || serve_conn(client, &upstream, fault, stop));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(TICK);
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+        };
+        Ok(ChaosProxy { local, stop, accepted, acceptor: Some(acceptor) })
+    }
+
+    /// The address clients should dial (`127.0.0.1:<port>`).
+    pub fn addr(&self) -> String {
+        format!("127.0.0.1:{}", self.local.port())
+    }
+
+    /// Connections accepted so far (= how far into the script we are).
+    pub fn connections(&self) -> usize {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and tear every live proxied connection down.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Sever both directions of a proxied pair.
+fn sever(a: &TcpStream, b: &TcpStream) {
+    let _ = a.shutdown(Shutdown::Both);
+    let _ = b.shutdown(Shutdown::Both);
+}
+
+/// Fill `buf` from `s`, riding out read timeouts. `Ok(true)` = filled;
+/// `Ok(false)` = clean EOF (or stop) before the first byte; mid-buffer
+/// EOF is an error (a torn stream the caller should sever on).
+fn read_full(s: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> std::io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(false);
+        }
+        match s.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(false)
+                } else {
+                    Err(std::io::ErrorKind::UnexpectedEof.into())
+                }
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Copy `from` → `to` until EOF/error/stop, forwarding at most `cap`
+/// bytes when given (reaching the cap severs both streams — that is
+/// [`ConnFault::CutAfter`]).
+fn pump(mut from: TcpStream, mut to: TcpStream, cap: Option<u64>, stop: &AtomicBool) {
+    let mut buf = [0u8; 8192];
+    let mut total: u64 = 0;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match from.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                let mut n = n as u64;
+                let cut = match cap {
+                    Some(cap) if total + n >= cap => {
+                        n = cap - total;
+                        true
+                    }
+                    _ => false,
+                };
+                if to.write_all(&buf[..n as usize]).is_err() {
+                    break;
+                }
+                total += n;
+                if cut {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+    }
+    sever(&from, &to);
+}
+
+/// Client→server pump that understands WRPC frame boundaries, for the
+/// frame-aware faults. Forwards whole frames until the scripted one.
+fn pump_frames(mut from: TcpStream, mut to: TcpStream, fault: ConnFault, stop: &AtomicBool) {
+    let mut idx = 0usize;
+    loop {
+        let mut prefix = [0u8; 16];
+        match read_full(&mut from, &mut prefix, stop) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => break,
+        }
+        let version = u16::from_le_bytes([prefix[4], prefix[5]]);
+        let opcode = u16::from_le_bytes([prefix[6], prefix[7]]);
+        let len = u64::from_le_bytes([
+            prefix[8], prefix[9], prefix[10], prefix[11], prefix[12], prefix[13], prefix[14],
+            prefix[15],
+        ]) as usize;
+        let extra = if version >= 2 { 16 } else { 0 };
+        let mut rest = vec![0u8; extra + len];
+        if !rest.is_empty() {
+            match read_full(&mut from, &mut rest, stop) {
+                Ok(true) => {}
+                Ok(false) | Err(_) => break,
+            }
+        }
+        match fault {
+            ConnFault::CloseOnOp { op } if opcode == op => break,
+            ConnFault::TruncateFrame { frame } if idx == frame => {
+                // half the frame: a torn prefix when it carries no body
+                let torn = if rest.is_empty() {
+                    prefix[..8].to_vec()
+                } else {
+                    let mut t = prefix.to_vec();
+                    t.extend_from_slice(&rest[..rest.len() / 2]);
+                    t
+                };
+                let _ = to.write_all(&torn);
+                break;
+            }
+            _ => {
+                if to.write_all(&prefix).is_err() || to.write_all(&rest).is_err() {
+                    break;
+                }
+            }
+        }
+        idx += 1;
+    }
+    sever(&from, &to);
+}
+
+/// Run one proxied connection to completion under its scripted fault.
+fn serve_conn(client: TcpStream, upstream: &str, fault: ConnFault, stop: Arc<AtomicBool>) {
+    if let ConnFault::Blackhole = fault {
+        // hold the socket open, forward nothing, answer nothing — the
+        // client's own deadline is its only way out
+        while !stop.load(Ordering::Relaxed) {
+            thread::sleep(TICK);
+        }
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    }
+    if let ConnFault::Delay { ms } = fault {
+        let mut left = ms;
+        while left > 0 && !stop.load(Ordering::Relaxed) {
+            let step = left.min(TICK.as_millis() as u64);
+            thread::sleep(Duration::from_millis(step));
+            left -= step;
+        }
+    }
+    let Ok(server) = TcpStream::connect(upstream) else {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    };
+    let _ = client.set_read_timeout(Some(TICK));
+    let _ = server.set_read_timeout(Some(TICK));
+    let _ = client.set_nodelay(true);
+    let _ = server.set_nodelay(true);
+    let (client_r, server_r) = match (client.try_clone(), server.try_clone()) {
+        (Ok(c), Ok(s)) => (c, s),
+        _ => {
+            sever(&client, &server);
+            return;
+        }
+    };
+    // server→client runs on its own thread; a sever by either pump
+    // (shutdown hits both clones of the pair) stops the other
+    let s2c = thread::spawn({
+        let stop = Arc::clone(&stop);
+        move || pump(server_r, client, None, &stop)
+    });
+    match fault {
+        ConnFault::CutAfter { c2s_bytes } => pump(client_r, server, Some(c2s_bytes), &stop),
+        ConnFault::TruncateFrame { .. } | ConnFault::CloseOnOp { .. } => {
+            pump_frames(client_r, server, fault, &stop)
+        }
+        _ => pump(client_r, server, None, &stop),
+    }
+    let _ = s2c.join();
+}

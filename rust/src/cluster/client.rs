@@ -15,16 +15,28 @@
 //!   `SLICE_SNAPSHOT` envelope and installs it on the new owner
 //!   (install-before-drop, so every slice stays queryable throughout).
 //!
+//! Fault tolerance (see [`super::retry`]): every idempotent op retries
+//! transparently through reconnect under a deterministic backoff
+//! schedule, per-member health is tracked Healthy → Suspect → Down
+//! (Down members are only touched by spaced probes), and pipelined
+//! ingest keeps every unacked block until its ack reconciles, so a
+//! dropped connection replays exactly the unconfirmed suffix —
+//! exactly-once is *proven* per session by accepted-count
+//! reconciliation, not assumed.
+//!
 //! Failure semantics: ingest into a node that no longer owns a slice is
-//! refused whole by that node (stale-spec protection); a query that
-//! cannot assemble every slice — a member is down mid-rebalance — is a
-//! typed [`Error::State`], never a silently partial answer.
+//! refused whole by that node (stale-spec protection); a strict query
+//! ([`ClusterClient::merged`]) that cannot assemble every slice is a
+//! typed [`Error::Unavailable`], never a silently partial answer; the
+//! opt-in [`ClusterClient::query_partial`] answers from the reachable
+//! slices and reports exactly what is missing as a typed [`Coverage`].
 
+use super::retry::{Health, MemberHealth, RetryPolicy, DEFAULT_DOWN_AFTER};
 use super::spec::ClusterSpec;
 use crate::api::{MultiPass, WorSampler};
 use crate::codec;
 use crate::data::ElementBlock;
-use crate::engine::client::{Client, IngestPipe};
+use crate::engine::client::{Client, PipeState, DEFAULT_PIPELINE_WINDOW};
 use crate::engine::proto::{InstanceSpec, ServerStats};
 use crate::error::{Error, Result};
 use crate::estimate::moment_estimate;
@@ -33,16 +45,67 @@ use crate::pipeline::merge::tree_merge;
 use crate::pipeline::metrics::Metrics;
 use crate::pipeline::shard::Router;
 use crate::sampler::Sample;
+use std::collections::VecDeque;
+use std::time::Duration;
 
-/// A connected cluster: one [`Client`] per member, placement computed
-/// locally from the spec.
+/// What a degraded (partial-coverage) query actually answered — the
+/// typed contract of [`ClusterClient::query_partial`]. `owned` is the
+/// cluster-wide slice count the spec promises; `answered` is how many
+/// slices the merged answer folded; `missing_slices` names the gap.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Coverage {
+    /// Slices the cluster spec partitions the instance into.
+    pub owned: usize,
+    /// Slices the reachable members actually answered.
+    pub answered: usize,
+    /// The slices no reachable member returned, ascending.
+    pub missing_slices: Vec<usize>,
+    /// Members that could not be reached for this query, in spec order.
+    pub unreachable_members: Vec<String>,
+}
+
+impl Coverage {
+    /// Whether every slice was answered (the degraded query happened to
+    /// see full coverage — its answer equals the strict one).
+    pub fn is_full(&self) -> bool {
+        self.answered == self.owned && self.missing_slices.is_empty()
+    }
+}
+
+/// What a tolerant rebalance ([`ClusterClient::failover_to`]) actually
+/// moved, and what it had to give up on.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FailoverReport {
+    /// (instance × slice) states drained from a reachable old owner and
+    /// installed on the new one.
+    pub moves: usize,
+    /// Slices whose old owner was unreachable: their state is lost
+    /// (fully, or partially if the owner died mid-drain) until an
+    /// operator restores a snapshot. Ascending, deduplicated.
+    pub lost_slices: Vec<usize>,
+}
+
+/// A connected cluster: one [`Client`] per member (lazily re-dialed),
+/// placement computed locally from the spec, health + retry state per
+/// member.
 pub struct ClusterClient {
     spec: ClusterSpec,
-    /// Connections, parallel to `spec.members`.
-    conns: Vec<Client>,
+    /// Connections, parallel to `spec.members`; `None` = not currently
+    /// connected (never reached, or dropped after a transport error).
+    conns: Vec<Option<Client>>,
     /// slice → index into `conns` (precomputed HRW assignment).
     assignment: Vec<usize>,
     router: Router,
+    policy: RetryPolicy,
+    /// Per-member liveness state machine, parallel to `conns`.
+    health: Vec<MemberHealth>,
+    down_after: u32,
+    /// Op attempts beyond the first (0 on an undisturbed run).
+    retries: u64,
+    /// Connections dialed after construction (0 on an undisturbed run).
+    reconnects: u64,
+    /// Ingest replay recoveries performed (0 on an undisturbed run).
+    replays: u64,
 }
 
 /// Two distinct mutable elements of one slice (rebalance moves read one
@@ -58,21 +121,61 @@ fn two_muts<T>(v: &mut [T], i: usize, j: usize) -> (&mut T, &mut T) {
     }
 }
 
+/// Whether a per-member error means "this member never saw the
+/// instance" (nothing to snapshot/flush there) rather than a real
+/// failure. The two spellings are the engine's own: `Error::Config("no
+/// such instance ...")` from the registry and `Error::State("... owns
+/// no slices ...")` from a snapshot of an instance the member holds no
+/// part of.
+fn never_saw_instance(e: &Error) -> bool {
+    match e {
+        Error::Config(m) => m.contains("no such instance"),
+        Error::State(m) => m.contains("owns no slices"),
+        _ => false,
+    }
+}
+
 impl ClusterClient {
-    /// Connect to every member of `spec`.
+    /// Connect to the cluster with the default [`RetryPolicy`].
+    /// Tolerant: an unreachable member is marked unhealthy and its
+    /// connection retried lazily on first use, instead of failing the
+    /// whole client. (The spec itself must still validate.)
     pub fn connect(spec: ClusterSpec) -> Result<ClusterClient> {
+        ClusterClient::connect_with(spec, RetryPolicy::default())
+    }
+
+    /// [`ClusterClient::connect`] with an explicit retry policy (e.g.
+    /// [`RetryPolicy::from_document`] over the cluster spec file).
+    pub fn connect_with(spec: ClusterSpec, policy: RetryPolicy) -> Result<ClusterClient> {
         spec.validate()?;
-        let mut conns = Vec::with_capacity(spec.members.len());
-        for m in &spec.members {
-            conns.push(Client::connect(&m.addr).map_err(|e| {
-                Error::Config(format!("cluster member {:?}: {e}", m.name))
-            })?);
-        }
         let assignment = (0..spec.slices)
             .map(|s| spec.owner_index(s))
             .collect::<Result<Vec<usize>>>()?;
         let router = Router::new(spec.slices);
-        Ok(ClusterClient { spec, conns, assignment, router })
+        let mut conns = Vec::with_capacity(spec.members.len());
+        let mut health: Vec<MemberHealth> =
+            (0..spec.members.len()).map(|_| MemberHealth::new(DEFAULT_DOWN_AFTER)).collect();
+        for (m, member) in spec.members.iter().enumerate() {
+            match Client::connect_with_deadline(&member.addr, policy.op_deadline()) {
+                Ok(c) => conns.push(Some(c)),
+                Err(_) => {
+                    conns.push(None);
+                    health[m].on_failure();
+                }
+            }
+        }
+        Ok(ClusterClient {
+            spec,
+            conns,
+            assignment,
+            router,
+            policy,
+            health,
+            down_after: DEFAULT_DOWN_AFTER,
+            retries: 0,
+            reconnects: 0,
+            replays: 0,
+        })
     }
 
     /// The spec this client routes by.
@@ -80,10 +183,154 @@ impl ClusterClient {
         &self.spec
     }
 
-    /// Liveness-check every member.
+    /// The retry policy governing this client's I/O.
+    pub fn policy(&self) -> &RetryPolicy {
+        &self.policy
+    }
+
+    /// Per-member health classification, in spec member order (a
+    /// passive snapshot — [`ClusterClient::probe`] actively refreshes).
+    pub fn health(&self) -> Vec<(String, Health)> {
+        self.spec
+            .members
+            .iter()
+            .zip(&self.health)
+            .map(|(m, h)| (m.name.clone(), h.state()))
+            .collect()
+    }
+
+    /// Op attempts beyond the first since construction. Stays 0 on an
+    /// undisturbed run — the contract that the retry layer costs the
+    /// happy path nothing.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Connections dialed after construction (reconnects + lazy first
+    /// dials). Stays 0 on an undisturbed run.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Ingest replay recoveries performed. Stays 0 on an undisturbed run.
+    pub fn replays(&self) -> u64 {
+        self.replays
+    }
+
+    /// Reset every member's health machine with a new Down threshold
+    /// (consecutive transport failures before a member is Down).
+    pub fn set_down_after(&mut self, down_after: u32) {
+        self.down_after = down_after.max(1);
+        for h in &mut self.health {
+            *h = MemberHealth::new(self.down_after);
+        }
+    }
+
+    /// Make `conns[m]` a live, unpoisoned connection (dialing with the
+    /// policy's deadline if needed).
+    fn ensure_conn(&mut self, m: usize) -> Result<()> {
+        let usable = self.conns[m].as_ref().map_or(false, |c| !c.is_broken());
+        if usable {
+            return Ok(());
+        }
+        self.conns[m] = None;
+        let c = Client::connect_with_deadline(&self.spec.members[m].addr, self.policy.op_deadline())?;
+        self.reconnects += 1;
+        self.conns[m] = Some(c);
+        Ok(())
+    }
+
+    /// Run an **idempotent** op against member `m`, retrying through
+    /// reconnect on transport failures under the policy's deterministic
+    /// backoff. Typed engine answers (the transport worked, the engine
+    /// said no) return immediately and count as member health. A Down
+    /// member inside its probe window fails fast with
+    /// [`Error::Unavailable`] without touching the socket; retries
+    /// exhausted is also `Unavailable`, naming the member.
+    fn with_retry<T>(
+        &mut self,
+        m: usize,
+        what: &str,
+        mut op: impl FnMut(&mut Client, u32) -> Result<T>,
+    ) -> Result<T> {
+        let attempts = self.policy.attempts.max(1);
+        let probe_every = Duration::from_secs(self.policy.probe_secs);
+        if !self.health[m].should_attempt(probe_every) {
+            return Err(Error::Unavailable(format!(
+                "member {:?} ({}) is down; {what} not attempted (next probe in ≤{}s)",
+                self.spec.members[m].name, self.spec.members[m].addr, self.policy.probe_secs
+            )));
+        }
+        let mut last = String::new();
+        for attempt in 1..=attempts {
+            if attempt > 1 {
+                self.retries += 1;
+                std::thread::sleep(self.policy.backoff(m as u64, attempt - 1));
+            }
+            if let Err(e) = self.ensure_conn(m) {
+                self.health[m].on_failure();
+                last = e.to_string();
+                continue;
+            }
+            let (res, broken) = {
+                let c = self.conns[m].as_mut().expect("ensure_conn populated the slot");
+                let res = op(c, attempt);
+                (res, c.is_broken())
+            };
+            match res {
+                Ok(v) => {
+                    self.health[m].on_success();
+                    return Ok(v);
+                }
+                Err(e) if broken => {
+                    // transport failure: the stream is untrusted — drop
+                    // it and try again over a fresh connection
+                    self.conns[m] = None;
+                    self.health[m].on_failure();
+                    last = e.to_string();
+                }
+                Err(e) => {
+                    // a typed engine answer rode a working transport
+                    self.health[m].on_success();
+                    return Err(e);
+                }
+            }
+        }
+        Err(Error::Unavailable(format!(
+            "member {:?} ({}) unreachable after {attempts} attempt(s) for {what}: {last}",
+            self.spec.members[m].name, self.spec.members[m].addr
+        )))
+    }
+
+    /// Actively ping every member (Down members only within their probe
+    /// window) and return the refreshed per-member health, in spec
+    /// order. Never fails — unreachable members are the *result*.
+    pub fn probe(&mut self) -> Vec<(String, Health)> {
+        let probe_every = Duration::from_secs(self.policy.probe_secs);
+        for m in 0..self.spec.members.len() {
+            if !self.health[m].should_attempt(probe_every) {
+                continue;
+            }
+            let mut ok = false;
+            if self.ensure_conn(m).is_ok() {
+                let c = self.conns[m].as_mut().expect("ensure_conn populated the slot");
+                ok = c.ping().is_ok() && !c.is_broken();
+            }
+            if ok {
+                self.health[m].on_success();
+            } else {
+                self.conns[m] = None;
+                self.health[m].on_failure();
+            }
+        }
+        self.health()
+    }
+
+    /// Liveness-check every member (strict: the first unreachable
+    /// member is a typed error).
     pub fn ping(&mut self) -> Result<()> {
-        for c in &mut self.conns {
-            c.ping()?;
+        for m in 0..self.spec.members.len() {
+            self.with_retry(m, "ping", |c, _| c.ping())?;
         }
         Ok(())
     }
@@ -92,7 +339,9 @@ impl ClusterClient {
     /// already-created instances back best-effort and returns the
     /// error). Multi-pass and clock-dependent methods are refused here —
     /// the inter-pass handoff and the stream-global clock both need
-    /// every slice in one process.
+    /// every slice in one process. A retried create that finds its own
+    /// earlier attempt applied ("already exists" after a lost ack)
+    /// counts as success.
     pub fn create(&mut self, name: &str, spec: &InstanceSpec) -> Result<()> {
         let proto = spec.to_worp()?.build()?;
         if proto.passes() > 1 {
@@ -112,17 +361,31 @@ impl ClusterClient {
             )));
         }
         let mut created = 0;
-        for i in 0..self.conns.len() {
-            if let Err(e) = self.conns[i].create(name, spec) {
-                for c in &mut self.conns[..created] {
-                    let _ = c.drop_instance(name);
+        for m in 0..self.spec.members.len() {
+            let res = self.with_retry(m, "create", |c, attempt| match c.create(name, spec) {
+                // our own first attempt landed but its ack was lost
+                Err(Error::Config(msg)) if attempt > 1 && msg.contains("already exists") => Ok(()),
+                other => other,
+            });
+            if let Err(e) = res {
+                for r in 0..created {
+                    let _ = self.with_retry(r, "drop (create rollback)", |c, _| {
+                        c.drop_instance(name)
+                    });
                 }
-                return Err(Error::Config(format!(
-                    "create on member {:?} failed (created instances rolled back): {e}",
-                    self.spec.members[i].name
-                )));
+                let member = &self.spec.members[m].name;
+                return Err(match e {
+                    Error::Unavailable(msg) => Error::Unavailable(format!(
+                        "create on member {member:?} failed (created instances rolled \
+                         back): {msg}"
+                    )),
+                    e => Error::Config(format!(
+                        "create on member {member:?} failed (created instances rolled \
+                         back): {e}"
+                    )),
+                });
             }
-            created = i + 1;
+            created = m + 1;
         }
         Ok(())
     }
@@ -131,8 +394,8 @@ impl ClusterClient {
     /// first error (if any) is returned after the sweep.
     pub fn drop_instance(&mut self, name: &str) -> Result<()> {
         let mut first_err = None;
-        for c in &mut self.conns {
-            if let Err(e) = c.drop_instance(name) {
+        for m in 0..self.spec.members.len() {
+            if let Err(e) = self.with_retry(m, "drop", |c, _| c.drop_instance(name)) {
                 first_err.get_or_insert(e);
             }
         }
@@ -163,41 +426,75 @@ impl ClusterClient {
     /// exactly arrival order and frame chunking never moves a
     /// `batch`-boundary (those are per-shard, server-side), so a
     /// session ingest is bit-identical to lockstep per-block ingest.
+    ///
+    /// The session keeps every shipped block until its ack reconciles;
+    /// a dropped connection reconnects, re-derives how much the server
+    /// actually applied from the instance's lifetime accepted count,
+    /// and replays exactly the unconfirmed suffix — see
+    /// [`ClusterIngest`]. Assumes this session is the instance's only
+    /// writer (the accepted-count reconciliation detects a concurrent
+    /// writer and fails typed rather than guess).
     pub fn ingest_session(&mut self, name: &str, chunk: usize) -> Result<ClusterIngest<'_>> {
         let chunk = chunk.max(1);
-        let assignment = &self.assignment;
-        let router = &self.router;
-        let mut pipes = Vec::with_capacity(self.conns.len());
-        for c in self.conns.iter_mut() {
-            pipes.push(c.ingest_pipe(name)?);
+        let members = self.spec.members.len();
+        let mut baseline = Vec::with_capacity(members);
+        for m in 0..members {
+            let info = self.with_retry(m, "stats (ingest baseline)", |c, _| c.stats(name))?;
+            baseline.push(info.accepted);
         }
-        let staged = (0..pipes.len()).map(|_| ElementBlock::with_capacity(chunk)).collect();
-        Ok(ClusterIngest { pipes, staged, assignment, router, chunk, rows: 0 })
+        let pipes = (0..members).map(|_| PipeState::new(name, DEFAULT_PIPELINE_WINDOW)).collect();
+        let staged = (0..members).map(|_| ElementBlock::with_capacity(chunk)).collect();
+        let unacked = (0..members).map(|_| VecDeque::new()).collect();
+        Ok(ClusterIngest {
+            cc: self,
+            name: name.to_string(),
+            pipes,
+            staged,
+            unacked,
+            confirmed: baseline.clone(),
+            baseline,
+            routed: vec![0; members],
+            chunk,
+            rows: 0,
+        })
     }
 
     /// Flush every member's pending blocks for `name`; returns the total
     /// elements flushed.
     pub fn flush(&mut self, name: &str) -> Result<u64> {
         let mut flushed = 0;
-        for c in &mut self.conns {
-            flushed += c.flush(name)?;
+        for m in 0..self.spec.members.len() {
+            flushed += self.with_retry(m, "flush", |c, _| c.flush(name))?;
         }
         Ok(flushed)
     }
 
-    /// Scatter the raw per-slice query, assemble full coverage, and fold
-    /// the slice summaries in ascending slice order — the association a
-    /// single-process engine uses, so the merged summary is bit-identical
-    /// to one process having seen the whole stream. During a rebalance a
-    /// slice can briefly exist on two members (install-before-drop);
-    /// the spec-assigned owner wins the dedupe. A slice no member
-    /// returned — node down, or drained mid-query — is a typed error,
-    /// never a silently partial answer.
-    pub fn merged(&mut self, name: &str) -> Result<Box<dyn WorSampler>> {
+    /// Scatter `QUERY_RAW` to every member and return the per-slice
+    /// envelopes plus the members that could not be reached. With
+    /// `tolerate_down`, an unreachable member leaves its slices `None`;
+    /// otherwise it is an error. Protocol violations (slice count
+    /// mismatch, out-of-range slice) are hard errors in both modes.
+    fn gather(
+        &mut self,
+        name: &str,
+        tolerate_down: bool,
+    ) -> Result<(Vec<Option<Vec<u8>>>, Vec<String>)> {
         let total = self.spec.slices;
         let mut by_slice: Vec<Option<Vec<u8>>> = vec![None; total];
-        for m in 0..self.conns.len() {
-            let (node_total, parts) = self.conns[m].query_raw(name)?;
+        let mut unreachable = Vec::new();
+        for m in 0..self.spec.members.len() {
+            let (node_total, parts) =
+                match self.with_retry(m, "query-raw", |c, _| c.query_raw(name)) {
+                    Ok(x) => x,
+                    Err(e @ Error::Unavailable(_)) => {
+                        if tolerate_down {
+                            unreachable.push(self.spec.members[m].name.clone());
+                            continue;
+                        }
+                        return Err(e);
+                    }
+                    Err(e) => return Err(e),
+                };
             if node_total as usize != total {
                 return Err(Error::Incompatible(format!(
                     "member {:?} partitions {name:?} into {node_total} slices, the \
@@ -218,18 +515,64 @@ impl ClusterClient {
                 }
             }
         }
+        Ok((by_slice, unreachable))
+    }
+
+    /// Scatter the raw per-slice query, assemble full coverage, and fold
+    /// the slice summaries in ascending slice order — the association a
+    /// single-process engine uses, so the merged summary is bit-identical
+    /// to one process having seen the whole stream. During a rebalance a
+    /// slice can briefly exist on two members (install-before-drop);
+    /// the spec-assigned owner wins the dedupe. A slice no member
+    /// returned — node down, or drained mid-query — is a typed
+    /// [`Error::Unavailable`], never a silently partial answer; accept
+    /// partial coverage explicitly with [`ClusterClient::query_partial`].
+    pub fn merged(&mut self, name: &str) -> Result<Box<dyn WorSampler>> {
+        let (by_slice, _) = self.gather(name, false)?;
+        let total = by_slice.len();
         let mut states: Vec<Box<dyn WorSampler>> = Vec::with_capacity(total);
         for (s, bytes) in by_slice.iter().enumerate() {
             let Some(bytes) = bytes else {
-                return Err(Error::State(format!(
+                return Err(Error::Unavailable(format!(
                     "slice {s} of {name:?} is missing from every member — owner down or \
-                     mid-rebalance; retry with a current cluster spec"
+                     mid-rebalance; retry with a current cluster spec, or accept partial \
+                     coverage explicitly via query_partial"
                 )));
             };
             states.push(codec::decode_sampler(bytes)?);
         }
         tree_merge(states, &Metrics::default(), |a, b| a.merge_dyn(&**b))?
             .ok_or_else(|| Error::Pipeline("cluster query folded zero slices".into()))
+    }
+
+    /// The opt-in degraded query: answer from every slice a reachable
+    /// member holds and report exactly what is missing, instead of
+    /// all-or-error. Returns the merged sampler over the answered
+    /// slices (`None` if nothing answered) plus the typed [`Coverage`].
+    /// The answer is still deterministic — the answered slices fold in
+    /// the same ascending order the strict query uses.
+    pub fn query_partial(
+        &mut self,
+        name: &str,
+    ) -> Result<(Option<Box<dyn WorSampler>>, Coverage)> {
+        let (by_slice, unreachable_members) = self.gather(name, true)?;
+        let total = by_slice.len();
+        let mut states: Vec<Box<dyn WorSampler>> = Vec::new();
+        let mut missing = Vec::new();
+        for (s, bytes) in by_slice.iter().enumerate() {
+            match bytes {
+                Some(b) => states.push(codec::decode_sampler(b)?),
+                None => missing.push(s),
+            }
+        }
+        let coverage = Coverage {
+            owned: total,
+            answered: total - missing.len(),
+            missing_slices: missing,
+            unreachable_members,
+        };
+        let merged = tree_merge(states, &Metrics::default(), |a, b| a.merge_dyn(&**b))?;
+        Ok((merged, coverage))
     }
 
     /// The cluster-wide WOR sample (merge locally, then finalize).
@@ -251,20 +594,38 @@ impl ClusterClient {
         Ok(pts)
     }
 
-    /// Per-member server stats, in spec member order.
+    /// Per-member server stats, in spec member order (strict: every
+    /// member must answer).
     pub fn status(&mut self) -> Result<Vec<(String, ServerStats)>> {
-        let mut out = Vec::with_capacity(self.conns.len());
-        for (m, c) in self.conns.iter_mut().enumerate() {
-            out.push((self.spec.members[m].name.clone(), c.stats_all()?));
+        let mut out = Vec::with_capacity(self.spec.members.len());
+        for m in 0..self.spec.members.len() {
+            let stats = self.with_retry(m, "stats-all", |c, _| c.stats_all())?;
+            out.push((self.spec.members[m].name.clone(), stats));
         }
         Ok(out)
     }
 
-    /// Every instance name known to any member, sorted and deduplicated.
+    /// Every instance name known to any *reachable* member, sorted and
+    /// deduplicated. Tolerates down members (instances are created on
+    /// every member, so any reachable one knows the name); errors only
+    /// when no member answers at all.
     pub fn instances(&mut self) -> Result<Vec<String>> {
         let mut names = Vec::new();
-        for c in &mut self.conns {
-            names.extend(c.list()?.into_iter().map(|i| i.name));
+        let mut reached = 0usize;
+        let mut last = None;
+        for m in 0..self.spec.members.len() {
+            match self.with_retry(m, "list", |c, _| c.list()) {
+                Ok(infos) => {
+                    reached += 1;
+                    names.extend(infos.into_iter().map(|i| i.name));
+                }
+                Err(e @ Error::Unavailable(_)) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        if reached == 0 {
+            return Err(last
+                .unwrap_or_else(|| Error::Unavailable("no cluster members reachable".into())));
         }
         names.sort();
         names.dedup();
@@ -272,31 +633,33 @@ impl ClusterClient {
     }
 
     /// Snapshot `name` on every member that holds part of it; returns
-    /// `(member, snapshot bytes)` pairs. Members holding no slice of the
-    /// instance are skipped.
+    /// `(member, snapshot bytes)` pairs. Members that never saw the
+    /// instance (no such instance / no owned slices) are skipped; any
+    /// other failure — including an unreachable member — surfaces, so a
+    /// caller can never mistake a partial backup for a complete one.
     pub fn snapshot(&mut self, name: &str) -> Result<Vec<(String, Vec<u8>)>> {
         let mut out = Vec::new();
-        for (m, c) in self.conns.iter_mut().enumerate() {
-            match c.snapshot(name) {
+        for m in 0..self.spec.members.len() {
+            match self.with_retry(m, "snapshot", |c, _| c.snapshot(name)) {
                 Ok(bytes) => out.push((self.spec.members[m].name.clone(), bytes)),
-                // a member owning no slices of the instance has nothing
-                // to snapshot; anything else is a real failure
-                Err(Error::State(_)) | Err(Error::Config(_)) => continue,
+                Err(e) if never_saw_instance(&e) => continue,
                 Err(e) => return Err(e),
             }
         }
         Ok(out)
     }
 
-    /// Flush every member's pending blocks for every instance.
+    /// Flush every member's pending blocks for every instance. Members
+    /// that never saw an instance are skipped for that instance; any
+    /// other failure surfaces.
     pub fn flush_all(&mut self) -> Result<u64> {
         let names = self.instances()?;
         let mut flushed = 0;
         for name in &names {
-            for c in &mut self.conns {
-                match c.flush(name) {
+            for m in 0..self.spec.members.len() {
+                match self.with_retry(m, "flush", |c, _| c.flush(name)) {
                     Ok(n) => flushed += n,
-                    Err(Error::Config(_)) => continue, // member never saw it
+                    Err(e) if never_saw_instance(&e) => continue,
                     Err(e) => return Err(e),
                 }
             }
@@ -311,8 +674,28 @@ impl ClusterClient {
     /// new owner under the cluster stamp, and only then dropped from the
     /// old owner — coverage never dips, so queries keep answering during
     /// the move. On success the client itself re-routes by `new_spec`.
+    /// Strict: an unreachable old owner aborts (its data is still the
+    /// truth — use [`ClusterClient::failover_to`] to accept the loss).
     /// Returns the number of (instance × slice) moves performed.
     pub fn rebalance_to(&mut self, new_spec: ClusterSpec) -> Result<usize> {
+        self.rebalance_inner(new_spec, false).map(|r| r.moves)
+    }
+
+    /// The tolerant rebalance behind failover: like
+    /// [`ClusterClient::rebalance_to`], but a slice whose old owner is
+    /// unreachable is *recorded as lost* instead of aborting the whole
+    /// move — the surviving members adopt ownership of an empty slice
+    /// and the report says exactly which slices need a snapshot
+    /// restore. New owners must still be reachable.
+    pub fn failover_to(&mut self, new_spec: ClusterSpec) -> Result<FailoverReport> {
+        self.rebalance_inner(new_spec, true)
+    }
+
+    fn rebalance_inner(
+        &mut self,
+        new_spec: ClusterSpec,
+        tolerate_lost_sources: bool,
+    ) -> Result<FailoverReport> {
         new_spec.validate()?;
         if new_spec.name != self.spec.name || new_spec.slices != self.spec.slices {
             return Err(Error::Config(
@@ -323,75 +706,220 @@ impl ClusterClient {
         }
         let names = self.instances()?;
         let stamp = self.spec.stamp();
+        let deadline = self.policy.op_deadline();
         // pool every connection (old members + newly joined) by name
-        let mut pool: Vec<(String, Client)> = Vec::new();
+        let mut pool: Vec<(String, Option<Client>)> = Vec::new();
         for (m, c) in std::mem::take(&mut self.conns).into_iter().enumerate() {
             pool.push((self.spec.members[m].name.clone(), c));
         }
+        let mut pool_err = None;
         for m in &new_spec.members {
             if !pool.iter().any(|(n, _)| n == &m.name) {
-                let c = Client::connect(&m.addr).map_err(|e| {
-                    Error::Config(format!("new cluster member {:?}: {e}", m.name))
-                })?;
-                pool.push((m.name.clone(), c));
+                match Client::connect_with_deadline(&m.addr, deadline) {
+                    Ok(c) => pool.push((m.name.clone(), Some(c))),
+                    Err(e) => {
+                        pool_err = Some(Error::Unavailable(format!(
+                            "new cluster member {:?}: {e}",
+                            m.name
+                        )));
+                        break;
+                    }
+                }
             }
         }
-        let idx_of = |pool: &[(String, Client)], name: &str| {
-            pool.iter().position(|(n, _)| n == name).expect("pooled member")
+        let result = match pool_err {
+            Some(e) => Err(e),
+            None => Self::run_moves(
+                &mut pool,
+                &self.spec,
+                &new_spec,
+                &names,
+                stamp,
+                deadline,
+                tolerate_lost_sources,
+            ),
         };
-        let mut moves = 0;
-        for s in 0..self.spec.slices {
-            let old_name = self.spec.owner_of(s)?.name.clone();
+        match result {
+            Ok(report) => {
+                // adopt the new spec: connections of departed members
+                // drop with the rest of the pool
+                let mut conns = Vec::with_capacity(new_spec.members.len());
+                for m in &new_spec.members {
+                    let i = pool
+                        .iter()
+                        .position(|(n, _)| n == &m.name)
+                        .expect("every new member was pooled");
+                    conns.push(pool.remove(i).1);
+                }
+                self.assignment = (0..new_spec.slices)
+                    .map(|s| new_spec.owner_index(s))
+                    .collect::<Result<Vec<usize>>>()?;
+                self.router = Router::new(new_spec.slices);
+                self.conns = conns;
+                self.health = (0..new_spec.members.len())
+                    .map(|_| MemberHealth::new(self.down_after))
+                    .collect();
+                self.spec = new_spec;
+                Ok(report)
+            }
+            Err(e) => {
+                // restitch the original connection set so the client
+                // stays usable on the old spec
+                let mut conns = Vec::with_capacity(self.spec.members.len());
+                for m in &self.spec.members {
+                    let i = pool
+                        .iter()
+                        .position(|(n, _)| n == &m.name)
+                        .expect("original members stay pooled");
+                    conns.push(pool.remove(i).1);
+                }
+                self.conns = conns;
+                Err(e)
+            }
+        }
+    }
+
+    /// The move loop of a rebalance, over the pooled connections. Kept
+    /// free of `self` so the caller can restitch its connection set
+    /// whether this succeeds or fails.
+    #[allow(clippy::too_many_arguments)]
+    fn run_moves(
+        pool: &mut Vec<(String, Option<Client>)>,
+        old_spec: &ClusterSpec,
+        new_spec: &ClusterSpec,
+        names: &[String],
+        stamp: u64,
+        deadline: Option<Duration>,
+        tolerate_lost_sources: bool,
+    ) -> Result<FailoverReport> {
+        fn idx_of(pool: &[(String, Option<Client>)], name: &str) -> usize {
+            pool.iter().position(|(n, _)| n == name).expect("pooled member")
+        }
+        let addr_of = |name: &str| {
+            old_spec
+                .members
+                .iter()
+                .chain(&new_spec.members)
+                .find(|m| m.name == name)
+                .map(|m| m.addr.clone())
+        };
+        // a live, unpoisoned connection for a pooled member, re-dialing
+        // once if needed; `None` = unreachable right now
+        fn live<'p>(
+            entry: &'p mut (String, Option<Client>),
+            addr: Option<String>,
+            deadline: Option<Duration>,
+        ) -> Option<&'p mut Client> {
+            let usable = entry.1.as_ref().map_or(false, |c| !c.is_broken());
+            if !usable {
+                entry.1 = None;
+                let addr = addr?;
+                entry.1 = Client::connect_with_deadline(&addr, deadline).ok();
+            }
+            entry.1.as_mut()
+        }
+        let mut moves = 0usize;
+        let mut lost: Vec<usize> = Vec::new();
+        for s in 0..old_spec.slices {
+            let old_name = old_spec.owner_of(s)?.name.clone();
             let new_name = new_spec.owner_of(s)?.name.clone();
             if old_name == new_name {
                 continue;
             }
-            let (src_i, dst_i) = (idx_of(&pool, &old_name), idx_of(&pool, &new_name));
-            let (src, dst) = two_muts(&mut pool, src_i, dst_i);
-            for name in &names {
-                let bytes = match src.1.slice_snapshot(name, s as u64) {
+            let (src_i, dst_i) = (idx_of(pool, &old_name), idx_of(pool, &new_name));
+            let (src, dst) = two_muts(pool, src_i, dst_i);
+            let dst_c = live(dst, addr_of(&new_name), deadline).ok_or_else(|| {
+                Error::Unavailable(format!(
+                    "new owner {new_name:?} of slice {s} is unreachable — a rebalance \
+                     cannot install onto a down member"
+                ))
+            })?;
+            let src_c = match live(src, addr_of(&old_name), deadline) {
+                Some(c) => c,
+                None if tolerate_lost_sources => {
+                    lost.push(s);
+                    continue;
+                }
+                None => {
+                    return Err(Error::Unavailable(format!(
+                        "old owner {old_name:?} of slice {s} is unreachable — rerun the \
+                         rebalance when it recovers, or accept the loss with failover"
+                    )))
+                }
+            };
+            for name in names {
+                let bytes = match src_c.slice_snapshot(name, s as u64) {
                     Ok(b) => b,
                     // the old owner holds no such slice of this instance
                     // (created mid-epoch, or already moved) — nothing to do
                     Err(Error::Config(_)) => continue,
-                    Err(e) => return Err(e),
+                    Err(e) => {
+                        if src_c.is_broken() && tolerate_lost_sources {
+                            // source died mid-drain: whatever instances
+                            // remain unmoved on this slice are lost
+                            lost.push(s);
+                            break;
+                        }
+                        return Err(e);
+                    }
                 };
-                dst.1.slice_install(stamp, &bytes)?;
-                src.1.slice_drop(name, s as u64)?;
+                dst_c.slice_install(stamp, &bytes)?;
+                match src_c.slice_drop(name, s as u64) {
+                    Ok(_) => {}
+                    Err(e) => {
+                        if src_c.is_broken() && tolerate_lost_sources {
+                            // the install landed; the dying source keeps a
+                            // stale copy it is leaving the cluster with —
+                            // the remaining instances on this slice are lost
+                            moves += 1;
+                            lost.push(s);
+                            break;
+                        }
+                        return Err(e);
+                    }
+                }
                 moves += 1;
             }
         }
-        // adopt the new spec: connections of departed members drop here
-        let mut conns = Vec::with_capacity(new_spec.members.len());
-        for m in &new_spec.members {
-            let i = idx_of(&pool, &m.name);
-            conns.push(pool.remove(i).1);
-        }
-        self.assignment = (0..new_spec.slices)
-            .map(|s| new_spec.owner_index(s))
-            .collect::<Result<Vec<usize>>>()?;
-        self.router = Router::new(new_spec.slices);
-        self.conns = conns;
-        self.spec = new_spec;
-        Ok(moves)
+        lost.sort_unstable();
+        lost.dedup();
+        Ok(FailoverReport { moves, lost_slices: lost })
     }
 }
 
 /// A pipelined ingest session over every cluster member at once (from
 /// [`ClusterClient::ingest_session`]). Rows are staged per member and
-/// each member's chunks stream down its own [`IngestPipe`]; call
-/// [`ClusterIngest::finish`] to flush remainders and reconcile every
-/// outstanding ack. Dropping a session mid-flight poisons the affected
-/// member connections (their pipes still hold unreconciled acks), so a
-/// half-shipped load can never be silently resumed on a desynced stream.
+/// each member's chunks stream down its own pipelined connection.
+///
+/// **Replay contract.** Every shipped block is retained until its ack
+/// reconciles. When a member's connection drops, the session (bounded
+/// by the client's [`RetryPolicy`]) reconnects, asks the instance for
+/// its lifetime accepted count, pops exactly the unacked blocks the
+/// server proves it applied (a partial-block delta or a regressed count
+/// is a typed error — it means a restore or a concurrent writer, and
+/// exactly-once can no longer be proven), opens a fresh pipe, and
+/// replays the rest in order. [`ClusterIngest::finish`] additionally
+/// proves the end state: each member's accepted count must have
+/// advanced by exactly the rows this session routed to it.
+///
+/// Dropping a session with acks still outstanding kills the affected
+/// member connections (their streams hold unread ack frames) — the
+/// next op on the cluster client reconnects cleanly.
 pub struct ClusterIngest<'a> {
-    /// One pipelined ingest stream per member, parallel to `staged`.
-    pipes: Vec<IngestPipe<'a>>,
+    cc: &'a mut ClusterClient,
+    name: String,
+    /// One pipelined ingest window per member, parallel to `staged`.
+    pipes: Vec<PipeState>,
     staged: Vec<ElementBlock>,
-    /// slice → member index (borrowed from the client; routing here must
-    /// match the routing the members enforce server-side).
-    assignment: &'a [usize],
-    router: &'a Router,
+    /// Shipped-but-unacked blocks per member, oldest first.
+    unacked: Vec<VecDeque<ElementBlock>>,
+    /// Lifetime accepted count per member at session open.
+    baseline: Vec<u64>,
+    /// Lifetime accepted count per member confirmed by the newest ack
+    /// (or reconnect reconciliation).
+    confirmed: Vec<u64>,
+    /// Rows this session routed to each member.
+    routed: Vec<u64>,
     chunk: usize,
     rows: u64,
 }
@@ -400,12 +928,12 @@ impl ClusterIngest<'_> {
     /// Route one row to its owning member's staged chunk, shipping the
     /// chunk down that member's pipe when it fills.
     pub fn push(&mut self, key: u64, val: f64) -> Result<()> {
-        let m = self.assignment[self.router.route(key)];
+        let m = self.cc.assignment[self.cc.router.route(key)];
         self.staged[m].push(key, val);
+        self.routed[m] += 1;
         self.rows += 1;
         if self.staged[m].len() >= self.chunk {
-            self.pipes[m].send(&self.staged[m])?;
-            self.staged[m].clear();
+            self.ship_staged(m)?;
         }
         Ok(())
     }
@@ -428,22 +956,237 @@ impl ClusterIngest<'_> {
         self.pipes.iter().map(|p| p.in_flight()).sum()
     }
 
-    /// Ship every partially-filled chunk, then drain every member's
-    /// outstanding acks. Returns the rows ingested by this session; the
-    /// first error from any member is surfaced (and poisons that
-    /// member's connection if it was a transport error).
-    pub fn finish(mut self) -> Result<u64> {
-        for m in 0..self.pipes.len() {
-            if self.staged[m].is_empty() {
+    /// Move member `m`'s staged chunk into the unacked queue and send it.
+    fn ship_staged(&mut self, m: usize) -> Result<()> {
+        let block = std::mem::replace(&mut self.staged[m], ElementBlock::with_capacity(self.chunk));
+        self.unacked[m].push_back(block);
+        self.send_newest(m)
+    }
+
+    /// Send the newest unacked block down member `m`'s pipe, recovering
+    /// through reconnect + replay on a transport failure.
+    fn send_newest(&mut self, m: usize) -> Result<()> {
+        let prev = self.pipes[m].acked();
+        if self.cc.conns[m].is_none() {
+            let e = Error::Unavailable(format!(
+                "member {:?} has no live connection",
+                self.cc.spec.members[m].name
+            ));
+            return self.recover(m, e);
+        }
+        let res = {
+            let c = self.cc.conns[m].as_mut().expect("checked above");
+            let block = self.unacked[m].back().expect("block was just queued");
+            self.pipes[m].send(c, block)
+        };
+        match res {
+            Ok(()) => {
+                self.settle(m, prev);
+                Ok(())
+            }
+            Err(e) => {
+                let transport = self.cc.conns[m].as_ref().map_or(true, |c| c.is_broken());
+                if transport {
+                    self.recover(m, e)
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    /// Account for acks reconciled since `prev_acked`: pop that many
+    /// blocks off the unacked queue and adopt the newest lifetime
+    /// accepted count.
+    fn settle(&mut self, m: usize, prev_acked: u64) {
+        let newly = self.pipes[m].acked() - prev_acked;
+        for _ in 0..newly {
+            self.unacked[m].pop_front();
+        }
+        if newly > 0 {
+            self.confirmed[m] = self.pipes[m].accepted();
+        }
+    }
+
+    /// Reconnect to member `m`, reconcile what the server actually
+    /// applied against the unacked queue, and replay the rest — bounded
+    /// by the client's retry policy.
+    fn recover(&mut self, m: usize, cause: Error) -> Result<()> {
+        let attempts = self.cc.policy.attempts.max(1);
+        let mut last = cause.to_string();
+        self.cc.replays += 1;
+        'attempt: for attempt in 1..=attempts {
+            // the old stream is dead: drop it, back off, re-dial
+            self.cc.conns[m] = None;
+            self.cc.health[m].on_failure();
+            if attempt > 1 {
+                self.cc.retries += 1;
+            }
+            std::thread::sleep(self.cc.policy.backoff(m as u64 ^ 0x1D6E57, attempt));
+            if let Err(e) = self.cc.ensure_conn(m) {
+                last = e.to_string();
                 continue;
             }
-            let part = std::mem::replace(&mut self.staged[m], ElementBlock::new());
-            self.pipes[m].send(&part)?;
+            // reconcile: how many unacked rows did the server apply? The
+            // severed connection's already-buffered frames may still be
+            // draining inside the server, so read until the count is
+            // quiescent (two consecutive agreeing reads) — reconciling
+            // against a still-moving count would replay a block the
+            // server is about to apply anyway (a double-apply `finish`
+            // would then catch, but better to not create it).
+            let mut applied = u64::MAX;
+            for _ in 0..200 {
+                let read = {
+                    let c =
+                        self.cc.conns[m].as_mut().expect("ensure_conn populated the slot");
+                    c.stats(&self.name)
+                };
+                match read {
+                    Ok(i) if i.accepted == applied => break,
+                    Ok(i) => {
+                        applied = i.accepted;
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(e) => {
+                        if self.cc.conns[m].as_ref().map_or(true, |c| c.is_broken()) {
+                            last = e.to_string();
+                            continue 'attempt;
+                        }
+                        return Err(e); // typed engine answer (e.g. instance dropped)
+                    }
+                }
+            }
+            let Some(mut remaining) = applied.checked_sub(self.confirmed[m]) else {
+                return Err(Error::State(format!(
+                    "member {:?} reports {applied} accepted elements for {:?} but {} \
+                     were already confirmed — the instance was restored or replaced \
+                     mid-ingest; exactly-once replay cannot be proven",
+                    self.cc.spec.members[m].name, self.name, self.confirmed[m]
+                )));
+            };
+            while remaining > 0 {
+                match self.unacked[m].front().map(|b| b.len() as u64) {
+                    Some(len) if len <= remaining => {
+                        self.unacked[m].pop_front();
+                        remaining -= len;
+                    }
+                    _ => {
+                        return Err(Error::State(format!(
+                            "member {:?} applied {remaining} more rows of {:?} than \
+                             whole unacked blocks account for — another writer is \
+                             ingesting into the same instance; exactly-once replay \
+                             cannot be proven",
+                            self.cc.spec.members[m].name, self.name
+                        )))
+                    }
+                }
+            }
+            self.confirmed[m] = applied;
+            // fresh pipe over the fresh connection, then replay in order
+            self.pipes[m] = PipeState::new(&self.name, DEFAULT_PIPELINE_WINDOW);
+            let mut pending = std::mem::take(&mut self.unacked[m]);
+            while let Some(block) = pending.pop_front() {
+                self.unacked[m].push_back(block);
+                let prev = self.pipes[m].acked();
+                let res = {
+                    let c = self.cc.conns[m].as_mut().expect("connected above");
+                    let b = self.unacked[m].back().expect("block was just queued");
+                    self.pipes[m].send(c, b)
+                };
+                match res {
+                    Ok(()) => self.settle(m, prev),
+                    Err(e) => {
+                        let broken =
+                            self.cc.conns[m].as_ref().map_or(true, |c| c.is_broken());
+                        // put the not-yet-resent remainder back in order
+                        while let Some(b) = pending.pop_front() {
+                            self.unacked[m].push_back(b);
+                        }
+                        if broken {
+                            last = e.to_string();
+                            continue 'attempt;
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            self.cc.health[m].on_success();
+            return Ok(());
         }
-        let rows = self.rows;
-        for pipe in self.pipes {
-            pipe.finish()?;
+        Err(Error::Unavailable(format!(
+            "member {:?} ({}) unreachable after {attempts} replay attempt(s): {last}",
+            self.cc.spec.members[m].name, self.cc.spec.members[m].addr
+        )))
+    }
+
+    /// Reap member `m`'s outstanding acks to empty, recovering through
+    /// reconnect + replay on transport failures.
+    fn drain_member(&mut self, m: usize) -> Result<()> {
+        while self.pipes[m].in_flight() > 0 {
+            let prev = self.pipes[m].acked();
+            if self.cc.conns[m].is_none() {
+                let e = Error::Unavailable(format!(
+                    "member {:?} has no live connection",
+                    self.cc.spec.members[m].name
+                ));
+                self.recover(m, e)?;
+                continue;
+            }
+            let res = {
+                let c = self.cc.conns[m].as_mut().expect("checked above");
+                self.pipes[m].reap_one(c)
+            };
+            match res {
+                Ok(()) => self.settle(m, prev),
+                Err(e) => {
+                    let transport = self.cc.conns[m].as_ref().map_or(true, |c| c.is_broken());
+                    if transport {
+                        self.recover(m, e)?;
+                    } else {
+                        return Err(e);
+                    }
+                }
+            }
         }
-        Ok(rows)
+        Ok(())
+    }
+
+    /// Ship every partially-filled chunk, drain every member's
+    /// outstanding acks, and prove exactly-once: each member's lifetime
+    /// accepted count must have advanced by exactly the rows this
+    /// session routed to it. Returns the rows ingested by this session.
+    pub fn finish(mut self) -> Result<u64> {
+        for m in 0..self.pipes.len() {
+            if !self.staged[m].is_empty() {
+                self.ship_staged(m)?;
+            }
+        }
+        for m in 0..self.pipes.len() {
+            self.drain_member(m)?;
+        }
+        for m in 0..self.pipes.len() {
+            let got = self.confirmed[m].saturating_sub(self.baseline[m]);
+            if got != self.routed[m] {
+                return Err(Error::State(format!(
+                    "member {:?} accepted {got} rows of {:?} this session but {} were \
+                     routed to it — rows were lost or double-applied (is another \
+                     writer ingesting into the same instance?)",
+                    self.cc.spec.members[m].name, self.name, self.routed[m]
+                )));
+            }
+        }
+        Ok(self.rows)
+    }
+}
+
+impl Drop for ClusterIngest<'_> {
+    fn drop(&mut self) {
+        for m in 0..self.pipes.len() {
+            if self.pipes[m].in_flight() > 0 {
+                // unread ack frames would desync the next call on this
+                // connection — kill it; the next op re-dials cleanly
+                self.cc.conns[m] = None;
+            }
+        }
     }
 }

@@ -45,9 +45,21 @@
 //! envelopes from a different cluster, and the sketch fingerprint
 //! refuses slices of an incompatible instance — so a mis-aimed
 //! rebalance fails loudly instead of corrupting state.
+//!
+//! Cluster I/O is fault-tolerant: [`retry`] defines the deterministic
+//! backoff policy and the per-member Healthy → Suspect → Down health
+//! machine; [`client`] retries idempotent ops through reconnect,
+//! replays unacked ingest frames exactly-once, and offers typed
+//! partial-coverage queries ([`Coverage`]) plus failover rebalancing
+//! ([`FailoverReport`]). [`chaos`] is the deterministic fault-injecting
+//! proxy the contract tests drive all of it with.
 
+pub mod chaos;
 pub mod client;
+pub mod retry;
 pub mod spec;
 
-pub use client::{ClusterClient, ClusterIngest};
+pub use chaos::{ChaosProxy, ConnFault, FaultPlan};
+pub use client::{ClusterClient, ClusterIngest, Coverage, FailoverReport};
+pub use retry::{Health, MemberHealth, RetryPolicy};
 pub use spec::{ClusterSpec, Member, CLUSTER_HRW_SEED, CLUSTER_STAMP_SEED};

@@ -1,0 +1,326 @@
+//! Retry policy, deterministic backoff, and per-member health tracking
+//! for the fault-tolerant cluster client.
+//!
+//! Design notes:
+//!
+//! - **Backoff is deterministic.** The jitter stream is seeded from
+//!   `policy.seed ^ mix64(salt)` where the salt identifies the member
+//!   and attempt, so the same `(seed, member, attempt)` always yields
+//!   the same delay. This keeps fault-injection tests reproducible and
+//!   lets an operator replay a schedule from a log line.
+//! - **Health is a tiny three-state machine** (Healthy → Suspect →
+//!   Down, with probed recovery). It carries no clocks of its own —
+//!   callers pass an `Instant` so tests can drive transitions without
+//!   sleeping.
+//! - The policy is read from the same hand-rolled TOML subset the rest
+//!   of the system uses: a `[cluster.retry]` section in the cluster
+//!   spec file (the parser treats dotted headers as plain section
+//!   names, so no new syntax is involved).
+
+use crate::config::Document;
+use crate::util::rng::{mix64, Rng};
+use std::time::{Duration, Instant};
+
+/// How many consecutive transport failures move a member from Suspect
+/// to Down (the first failure always lands on Suspect).
+pub const DEFAULT_DOWN_AFTER: u32 = 2;
+
+/// Retry/backoff/deadline knobs for cluster I/O. All durations are in
+/// milliseconds except `probe_secs` (operator-scale recovery probing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Maximum attempts per idempotent op (1 = no retry).
+    pub attempts: u32,
+    /// First backoff delay; doubles each attempt.
+    pub base_ms: u64,
+    /// Backoff ceiling.
+    pub cap_ms: u64,
+    /// Per-op socket deadline (read/write/connect); 0 disables.
+    pub op_deadline_ms: u64,
+    /// Minimum gap between recovery probes of a Down member.
+    pub probe_secs: u64,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 3,
+            base_ms: 50,
+            cap_ms: 2_000,
+            op_deadline_ms: 30_000,
+            probe_secs: 5,
+            seed: 0x5EED_0F_BACC0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Read a policy from the `[cluster.retry]` section of a parsed
+    /// config document, falling back to defaults key by key.
+    pub fn from_document(doc: &Document) -> RetryPolicy {
+        let d = RetryPolicy::default();
+        let sec = "cluster.retry";
+        RetryPolicy {
+            attempts: doc.i64_or(sec, "attempts", d.attempts as i64).max(1) as u32,
+            base_ms: doc.i64_or(sec, "base_ms", d.base_ms as i64).max(0) as u64,
+            cap_ms: doc.i64_or(sec, "cap_ms", d.cap_ms as i64).max(0) as u64,
+            op_deadline_ms: doc.i64_or(sec, "op_deadline_ms", d.op_deadline_ms as i64).max(0)
+                as u64,
+            probe_secs: doc.i64_or(sec, "probe_secs", d.probe_secs as i64).max(0) as u64,
+            seed: doc.i64_or(sec, "seed", d.seed as i64) as u64,
+        }
+    }
+
+    /// The per-op socket deadline, or `None` when disabled.
+    pub fn op_deadline(&self) -> Option<Duration> {
+        if self.op_deadline_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(self.op_deadline_ms))
+        }
+    }
+
+    /// Deterministic jittered backoff before retry `attempt` (1-based:
+    /// the delay slept after the `attempt`-th failure). The raw value
+    /// is `min(cap, base << (attempt-1))`; jitter draws uniformly from
+    /// `[raw/2, raw]` so concurrent retriers de-synchronise without
+    /// ever collapsing the delay to zero.
+    pub fn backoff(&self, salt: u64, attempt: u32) -> Duration {
+        if self.base_ms == 0 || self.cap_ms == 0 {
+            return Duration::ZERO;
+        }
+        let shift = attempt.saturating_sub(1).min(20);
+        let raw = self.base_ms.saturating_mul(1u64 << shift).min(self.cap_ms);
+        let lo = raw / 2;
+        let span = raw - lo;
+        let mut rng = Rng::new(
+            self.seed ^ mix64(salt ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        );
+        let jittered = if span == 0 { raw } else { lo + rng.below(span + 1) };
+        Duration::from_millis(jittered)
+    }
+
+    /// The full backoff schedule for one op against `salt` — the delays
+    /// slept between the `attempts` tries. Exposed for tests and for
+    /// logging a reproducible schedule.
+    pub fn schedule(&self, salt: u64) -> Vec<Duration> {
+        (1..self.attempts).map(|a| self.backoff(salt, a)).collect()
+    }
+}
+
+/// Liveness classification of one cluster member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Last op succeeded; use freely.
+    Healthy,
+    /// Recent failure(s); still tried on every op.
+    Suspect,
+    /// Exceeded the failure budget; only touched by spaced probes.
+    Down,
+}
+
+/// Per-member health state machine. Healthy → Suspect on the first
+/// failure, Suspect → Down after `down_after` consecutive failures,
+/// any success snaps back to Healthy. Down members are only attempted
+/// when a probe window has elapsed (`should_attempt_at`).
+#[derive(Clone, Debug)]
+pub struct MemberHealth {
+    state: Health,
+    consecutive_failures: u32,
+    down_after: u32,
+    last_probe: Option<Instant>,
+}
+
+impl MemberHealth {
+    /// New Healthy member; `down_after` consecutive failures mark Down.
+    pub fn new(down_after: u32) -> Self {
+        MemberHealth {
+            state: Health::Healthy,
+            consecutive_failures: 0,
+            down_after: down_after.max(1),
+            last_probe: None,
+        }
+    }
+
+    /// Current classification.
+    pub fn state(&self) -> Health {
+        self.state
+    }
+
+    /// Consecutive transport failures since the last success.
+    pub fn failures(&self) -> u32 {
+        self.consecutive_failures
+    }
+
+    /// Record a successful op: any state snaps back to Healthy.
+    pub fn on_success(&mut self) {
+        self.state = Health::Healthy;
+        self.consecutive_failures = 0;
+        self.last_probe = None;
+    }
+
+    /// Record a transport failure; returns the new state.
+    pub fn on_failure(&mut self) -> Health {
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        self.state = if self.consecutive_failures >= self.down_after {
+            Health::Down
+        } else {
+            Health::Suspect
+        };
+        self.state
+    }
+
+    /// Whether an op should touch this member at time `now`. Healthy
+    /// and Suspect members are always attempted; Down members only when
+    /// `probe_every` has elapsed since the last probe (the call marks
+    /// the probe, so a `true` answer reserves the slot).
+    pub fn should_attempt_at(&mut self, now: Instant, probe_every: Duration) -> bool {
+        match self.state {
+            Health::Healthy | Health::Suspect => true,
+            Health::Down => match self.last_probe {
+                Some(t) if now.duration_since(t) < probe_every => false,
+                _ => {
+                    self.last_probe = Some(now);
+                    true
+                }
+            },
+        }
+    }
+
+    /// Convenience wrapper over [`MemberHealth::should_attempt_at`]
+    /// with the real clock.
+    pub fn should_attempt(&mut self, probe_every: Duration) -> bool {
+        self.should_attempt_at(Instant::now(), probe_every)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_deterministic_per_seed() {
+        let p = RetryPolicy { attempts: 6, ..RetryPolicy::default() };
+        let a = p.schedule(42);
+        let b = p.schedule(42);
+        assert_eq!(a, b, "same (seed, salt) must give the same schedule");
+        assert_eq!(a.len(), 5);
+
+        // a different salt (member/op identity) de-synchronises
+        let c = p.schedule(43);
+        assert_ne!(a, c, "different salts should not share a schedule");
+
+        // and a different seed gives a different stream for the same salt
+        let p2 = RetryPolicy { seed: p.seed ^ 1, ..p.clone() };
+        assert_ne!(a, p2.schedule(42));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_within_jitter_bounds_and_caps() {
+        let p = RetryPolicy {
+            attempts: 16,
+            base_ms: 50,
+            cap_ms: 2_000,
+            ..RetryPolicy::default()
+        };
+        for attempt in 1..16u32 {
+            let raw = 50u64.saturating_mul(1 << (attempt - 1).min(20)).min(2_000);
+            let d = p.backoff(7, attempt).as_millis() as u64;
+            assert!(
+                d >= raw / 2 && d <= raw,
+                "attempt {attempt}: delay {d}ms outside [{}, {raw}]",
+                raw / 2
+            );
+        }
+        // deep attempts saturate at the cap's jitter window
+        let deep = p.backoff(7, 40).as_millis() as u64;
+        assert!((1_000..=2_000).contains(&deep));
+    }
+
+    #[test]
+    fn zero_base_or_cap_disables_backoff() {
+        let p = RetryPolicy { base_ms: 0, ..RetryPolicy::default() };
+        assert_eq!(p.backoff(1, 1), Duration::ZERO);
+        let p = RetryPolicy { cap_ms: 0, ..RetryPolicy::default() };
+        assert_eq!(p.backoff(1, 3), Duration::ZERO);
+    }
+
+    #[test]
+    fn policy_reads_the_cluster_retry_section_with_defaults() {
+        let doc = Document::parse(
+            "[cluster]\nname = \"x\"\n\n[cluster.retry]\nattempts = 5\nbase_ms = 10\nseed = 99\n",
+        )
+        .unwrap();
+        let p = RetryPolicy::from_document(&doc);
+        assert_eq!(p.attempts, 5);
+        assert_eq!(p.base_ms, 10);
+        assert_eq!(p.seed, 99);
+        // unset keys fall back to defaults
+        assert_eq!(p.cap_ms, RetryPolicy::default().cap_ms);
+        assert_eq!(p.probe_secs, RetryPolicy::default().probe_secs);
+
+        // no section at all → pure defaults
+        let empty = Document::parse("[cluster]\nname = \"x\"\n").unwrap();
+        assert_eq!(RetryPolicy::from_document(&empty), RetryPolicy::default());
+    }
+
+    #[test]
+    fn health_transition_table() {
+        // (events, expected state) — S=success, F=failure, with down_after=2
+        let table: &[(&str, Health)] = &[
+            ("", Health::Healthy),
+            ("S", Health::Healthy),
+            ("F", Health::Suspect),
+            ("FS", Health::Healthy),
+            ("FF", Health::Down),
+            ("FFF", Health::Down),
+            ("FFS", Health::Healthy),
+            ("FFSF", Health::Suspect),
+            ("FSFSF", Health::Suspect),
+        ];
+        for (events, want) in table {
+            let mut h = MemberHealth::new(2);
+            for ev in events.chars() {
+                match ev {
+                    'S' => h.on_success(),
+                    'F' => {
+                        h.on_failure();
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            assert_eq!(h.state(), *want, "after events {events:?}");
+        }
+    }
+
+    #[test]
+    fn down_members_are_probed_no_more_than_once_per_window() {
+        let mut h = MemberHealth::new(1);
+        h.on_failure();
+        assert_eq!(h.state(), Health::Down);
+
+        let t0 = Instant::now();
+        let window = Duration::from_secs(5);
+        assert!(h.should_attempt_at(t0, window), "first probe goes through");
+        assert!(!h.should_attempt_at(t0 + Duration::from_secs(1), window));
+        assert!(h.should_attempt_at(t0 + Duration::from_secs(6), window));
+
+        // recovery resets probing entirely
+        h.on_success();
+        assert_eq!(h.state(), Health::Healthy);
+        assert!(h.should_attempt_at(t0 + Duration::from_secs(6), window));
+        assert!(h.should_attempt_at(t0 + Duration::from_secs(6), window));
+    }
+
+    #[test]
+    fn suspect_members_are_always_attempted() {
+        let mut h = MemberHealth::new(3);
+        h.on_failure();
+        assert_eq!(h.state(), Health::Suspect);
+        for _ in 0..4 {
+            assert!(h.should_attempt(Duration::from_secs(3600)));
+        }
+    }
+}

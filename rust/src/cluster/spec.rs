@@ -77,6 +77,46 @@ impl ClusterSpec {
         ClusterSpec::from_document(&crate::config::Document::load(path)?)
     }
 
+    /// Render the spec back as the `[cluster]` TOML section
+    /// [`ClusterSpec::from_document`] reads — the round-trip the `watch`
+    /// supervisor uses to persist a synthesized surviving topology.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        out.push_str("[cluster]\n");
+        out.push_str(&format!("name = {:?}\n", self.name));
+        out.push_str(&format!("slices = {}\n", self.slices));
+        out.push_str("nodes = [");
+        for (i, m) in self.members.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}={}\"", m.name, m.addr));
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// The spec minus the named members (same name and slice count, so
+    /// the survivors adopt the dropped members' slices under the same
+    /// stamp). Errors if a name is unknown or nobody would remain.
+    pub fn surviving(&self, dropped: &[String]) -> Result<ClusterSpec> {
+        for d in dropped {
+            self.member(d)?;
+        }
+        let members: Vec<Member> =
+            self.members.iter().filter(|m| !dropped.contains(&m.name)).cloned().collect();
+        if members.is_empty() {
+            return Err(Error::Config(
+                "every cluster member would be dropped — refusing to synthesize an \
+                 empty topology"
+                    .into(),
+            ));
+        }
+        let spec = ClusterSpec { name: self.name.clone(), slices: self.slices, members };
+        spec.validate()?;
+        Ok(spec)
+    }
+
     /// Validate names, addresses and the slice count.
     pub fn validate(&self) -> Result<()> {
         if self.name.is_empty() || self.name.len() > 200 {
@@ -263,6 +303,23 @@ mod tests {
         assert!(ClusterSpec::from_document(&doc).is_err());
         let doc = Document::parse("[cluster]\nslices = 0\nnodes = [\"a=h:1\"]\n").unwrap();
         assert!(ClusterSpec::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn to_toml_roundtrips_through_the_parser() {
+        let spec = spec3();
+        let doc = Document::parse(&spec.to_toml()).unwrap();
+        assert_eq!(ClusterSpec::from_document(&doc).unwrap(), spec);
+        // and the synthesized surviving spec roundtrips too
+        let surviving = spec.surviving(&["beta".to_string()]).unwrap();
+        assert_eq!(surviving.members.len(), 2);
+        assert_eq!(surviving.stamp(), spec.stamp(), "survivors keep the stamp");
+        let doc = Document::parse(&surviving.to_toml()).unwrap();
+        assert_eq!(ClusterSpec::from_document(&doc).unwrap(), surviving);
+        // unknown members and total loss are loud errors
+        assert!(spec.surviving(&["nope".to_string()]).is_err());
+        let all: Vec<String> = spec.members.iter().map(|m| m.name.clone()).collect();
+        assert!(spec.surviving(&all).is_err());
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //!
 //! Supported syntax: `[section]` headers, `key = value` with values of
 //! type integer, float, bool, quoted string, or flat arrays of those;
-//! `#` comments. That covers every config this project ships.
+//! `#` comments. A dotted header like `[cluster.retry]` is kept
+//! verbatim as the section name (no TOML nesting), so sub-sections are
+//! addressed as `doc.get("cluster.retry", key)`. That covers every
+//! config this project ships.
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
@@ -481,6 +484,23 @@ stream_len = 50000
             doc.get("pipeline", "caps"),
             Some(&Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
         );
+    }
+
+    #[test]
+    fn dotted_section_headers_are_plain_section_names() {
+        // `[cluster.retry]` is not TOML nesting here — the parser keeps
+        // the dotted header verbatim as the section name, which is what
+        // RetryPolicy::from_document addresses it by
+        let doc = Document::parse(
+            "[cluster]\nname = \"x\"\n[cluster.retry]\nattempts = 7\nbase_ms = 5\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("cluster", "name"), Some(&Value::Str("x".into())));
+        assert_eq!(doc.get("cluster.retry", "attempts"), Some(&Value::Int(7)));
+        assert_eq!(doc.i64_or("cluster.retry", "base_ms", 0), 5);
+        // the dotted section does not shadow or leak into its parent
+        assert_eq!(doc.get("cluster", "attempts"), None);
+        assert_eq!(doc.get("cluster.retry", "name"), None);
     }
 
     #[test]

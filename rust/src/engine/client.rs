@@ -41,12 +41,18 @@ use crate::error::{Error, Result};
 use crate::estimate::rankfreq::RankFreqPoint;
 use crate::sampler::Sample;
 use std::collections::VecDeque;
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 /// Default bound on in-flight pipelined INGEST frames
 /// (`[server] pipeline_window`).
 pub const DEFAULT_PIPELINE_WINDOW: usize = 32;
+
+/// Default per-op socket deadline applied by [`Client::connect`]. A
+/// stalled or wedged server answers with `Error::Io(TimedOut)` instead
+/// of hanging the client forever; override (or disable) with
+/// [`Client::with_timeout_opt`] or [`Client::connect_with_deadline`].
+pub const DEFAULT_OP_TIMEOUT_SECS: u64 = 120;
 
 /// A connected protocol client.
 pub struct Client {
@@ -61,18 +67,55 @@ pub struct Client {
 }
 
 impl Client {
-    /// Connect to a `worp serve` address (e.g. `"127.0.0.1:7070"`).
+    /// Connect to a `worp serve` address (e.g. `"127.0.0.1:7070"`)
+    /// with the default per-op deadline
+    /// ([`DEFAULT_OP_TIMEOUT_SECS`]) on connect/read/write.
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)
-            .map_err(|e| Error::Config(format!("cannot connect to {addr}: {e}")))?;
+        Client::connect_with_deadline(addr, Some(Duration::from_secs(DEFAULT_OP_TIMEOUT_SECS)))
+    }
+
+    /// Connect with an explicit per-op deadline — `None` means fully
+    /// blocking I/O (the pre-deadline behavior). The deadline bounds
+    /// the TCP connect itself and every subsequent read/write.
+    pub fn connect_with_deadline(addr: &str, deadline: Option<Duration>) -> Result<Client> {
+        let stream = match deadline {
+            None => TcpStream::connect(addr)
+                .map_err(|e| Error::Config(format!("cannot connect to {addr}: {e}")))?,
+            Some(t) => {
+                let mut last: Option<std::io::Error> = None;
+                let addrs = addr
+                    .to_socket_addrs()
+                    .map_err(|e| Error::Config(format!("cannot resolve {addr}: {e}")))?;
+                let mut stream = None;
+                for sa in addrs {
+                    match TcpStream::connect_timeout(&sa, t) {
+                        Ok(s) => {
+                            stream = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                match stream {
+                    Some(s) => s,
+                    None => {
+                        let why = last
+                            .map(|e| e.to_string())
+                            .unwrap_or_else(|| "no addresses resolved".into());
+                        return Err(Error::Config(format!("cannot connect to {addr}: {why}")));
+                    }
+                }
+            }
+        };
         let _ = stream.set_nodelay(true);
-        Ok(Client {
+        let client = Client {
             stream,
             max_frame: proto::DEFAULT_MAX_FRAME,
             next_req: 0,
             broken: None,
             window: DEFAULT_PIPELINE_WINDOW,
-        })
+        };
+        client.with_timeout_opt(deadline)
     }
 
     /// Cap the response payloads this client accepts.
@@ -87,10 +130,15 @@ impl Client {
         self
     }
 
-    /// Set a read timeout so a dead server cannot hang the client.
+    /// Set a read/write timeout so a dead server cannot hang the client.
     pub fn with_timeout(self, t: Duration) -> Result<Client> {
-        self.stream.set_read_timeout(Some(t))?;
-        self.stream.set_write_timeout(Some(t))?;
+        self.with_timeout_opt(Some(t))
+    }
+
+    /// Set or clear the per-op socket deadline (`None` = block forever).
+    pub fn with_timeout_opt(self, t: Option<Duration>) -> Result<Client> {
+        self.stream.set_read_timeout(t)?;
+        self.stream.set_write_timeout(t)?;
         Ok(self)
     }
 
@@ -212,14 +260,8 @@ impl Client {
     /// bit-identical to the same blocks sent in lockstep.
     pub fn ingest_pipe(&mut self, name: &str) -> Result<IngestPipe<'_>> {
         self.check_usable()?;
-        let window = self.window;
-        Ok(IngestPipe {
-            client: self,
-            name: name.to_string(),
-            window,
-            in_flight: VecDeque::with_capacity(window),
-            accepted: 0,
-        })
+        let state = PipeState::new(name, self.window);
+        Ok(IngestPipe { client: self, state })
     }
 
     /// Flush pending blocks; returns the flushed element count.
@@ -363,6 +405,112 @@ impl Client {
     }
 }
 
+/// The connection-independent half of a pipelined INGEST session: the
+/// in-flight request-id window and ack counters, with every method
+/// borrowing the [`Client`] it currently runs over. Separating this
+/// from the borrow lets [`crate::cluster::ClusterIngest`] survive a
+/// reconnect — the old state is discarded with the dead connection and
+/// a fresh one replays the unacked blocks over the new `Client`.
+pub(crate) struct PipeState {
+    name: String,
+    window: usize,
+    /// Request ids awaiting their acks, send order (acks arrive FIFO).
+    in_flight: VecDeque<u64>,
+    /// Lifetime accepted count from the most recent ack.
+    accepted: u64,
+    /// Total acks reconciled this session (callers diff this across a
+    /// `send` to learn how many of their oldest blocks were confirmed).
+    acked: u64,
+}
+
+impl PipeState {
+    pub(crate) fn new(name: &str, window: usize) -> PipeState {
+        PipeState {
+            name: name.to_string(),
+            window: window.max(1),
+            in_flight: VecDeque::with_capacity(window.max(1)),
+            accepted: 0,
+            acked: 0,
+        }
+    }
+
+    /// Stream one block over `client`. Blocks only when the in-flight
+    /// window is full, in which case the oldest ack is reconciled first.
+    pub(crate) fn send(&mut self, client: &mut Client, block: &ElementBlock) -> Result<()> {
+        if self.in_flight.len() >= self.window {
+            self.reap_one(client)?;
+        }
+        let req_id = client.next_id();
+        let mut p = name_payload(&self.name);
+        wire::put_usize(&mut p, block.len());
+        wire::put_block(&mut p, block);
+        if let Err(e) = proto::write_frame_v2(&mut client.stream, op::INGEST, req_id, &p) {
+            return Err(client.poison(e));
+        }
+        self.in_flight.push_back(req_id);
+        Ok(())
+    }
+
+    /// Blocks in flight (unreconciled acks).
+    pub(crate) fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Total acks reconciled this session.
+    pub(crate) fn acked(&self) -> u64 {
+        self.acked
+    }
+
+    /// Lifetime accepted count carried by the most recent ack.
+    pub(crate) fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Reconcile the oldest outstanding ack.
+    pub(crate) fn reap_one(&mut self, client: &mut Client) -> Result<()> {
+        let expect = self
+            .in_flight
+            .pop_front()
+            .expect("reap_one called with nothing in flight");
+        let frame = match proto::read_frame(&mut client.stream, client.max_frame) {
+            Ok(Some(f)) => f,
+            Ok(None) => {
+                return Err(client.poison(Error::Pipeline(
+                    "server closed the connection with ingest acks outstanding".into(),
+                )))
+            }
+            Err(e) => return Err(client.poison(e)),
+        };
+        if frame.req_id != expect {
+            return Err(client.poison(Error::Codec(format!(
+                "ingest ack carries request id {} but {expect} is the oldest in flight",
+                frame.req_id
+            ))));
+        }
+        if frame.opcode == proto::RESP_ERR {
+            return Err(proto::decode_error(&frame.payload));
+        }
+        if frame.opcode != proto::resp_ok(op::INGEST) {
+            return Err(client.poison(Error::Codec(format!(
+                "response opcode {:#06x} does not answer a pipelined ingest",
+                frame.opcode
+            ))));
+        }
+        self.accepted = read_u64(&frame.payload, "ingest response")?;
+        self.acked += 1;
+        Ok(())
+    }
+
+    /// Reconcile every outstanding ack; returns the instance's lifetime
+    /// accepted-element count after the last one.
+    pub(crate) fn drain(&mut self, client: &mut Client) -> Result<u64> {
+        while !self.in_flight.is_empty() {
+            self.reap_one(client)?;
+        }
+        Ok(self.accepted)
+    }
+}
+
 /// A pipelined INGEST session (see [`Client::ingest_pipe`]).
 ///
 /// Error discipline: the first server error — typed engine refusal or
@@ -372,78 +520,25 @@ impl Client {
 /// always run a session to `finish` on the happy path.
 pub struct IngestPipe<'a> {
     client: &'a mut Client,
-    name: String,
-    window: usize,
-    /// Request ids awaiting their acks, send order (acks arrive FIFO).
-    in_flight: VecDeque<u64>,
-    /// Lifetime accepted count from the most recent ack.
-    accepted: u64,
+    state: PipeState,
 }
 
 impl IngestPipe<'_> {
     /// Stream one block. Blocks only when the in-flight window is full,
     /// in which case the oldest ack is reconciled first.
     pub fn send(&mut self, block: &ElementBlock) -> Result<()> {
-        if self.in_flight.len() >= self.window {
-            self.reap_one()?;
-        }
-        let req_id = self.client.next_id();
-        let mut p = name_payload(&self.name);
-        wire::put_usize(&mut p, block.len());
-        wire::put_block(&mut p, block);
-        if let Err(e) = proto::write_frame_v2(&mut self.client.stream, op::INGEST, req_id, &p) {
-            return Err(self.client.poison(e));
-        }
-        self.in_flight.push_back(req_id);
-        Ok(())
+        self.state.send(self.client, block)
     }
 
     /// Blocks in flight (unreconciled acks).
     pub fn in_flight(&self) -> usize {
-        self.in_flight.len()
-    }
-
-    /// Reconcile the oldest outstanding ack.
-    fn reap_one(&mut self) -> Result<()> {
-        let expect = self
-            .in_flight
-            .pop_front()
-            .expect("reap_one called with nothing in flight");
-        let frame = match proto::read_frame(&mut self.client.stream, self.client.max_frame) {
-            Ok(Some(f)) => f,
-            Ok(None) => {
-                return Err(self.client.poison(Error::Pipeline(
-                    "server closed the connection with ingest acks outstanding".into(),
-                )))
-            }
-            Err(e) => return Err(self.client.poison(e)),
-        };
-        if frame.req_id != expect {
-            return Err(self.client.poison(Error::Codec(format!(
-                "ingest ack carries request id {} but {expect} is the oldest in flight",
-                frame.req_id
-            ))));
-        }
-        if frame.opcode == proto::RESP_ERR {
-            return Err(proto::decode_error(&frame.payload));
-        }
-        if frame.opcode != proto::resp_ok(op::INGEST) {
-            return Err(self.client.poison(Error::Codec(format!(
-                "response opcode {:#06x} does not answer a pipelined ingest",
-                frame.opcode
-            ))));
-        }
-        self.accepted = read_u64(&frame.payload, "ingest response")?;
-        Ok(())
+        self.state.in_flight()
     }
 
     /// Reconcile every outstanding ack; returns the instance's lifetime
     /// accepted-element count after the last one.
     pub fn finish(mut self) -> Result<u64> {
-        while !self.in_flight.is_empty() {
-            self.reap_one()?;
-        }
-        Ok(self.accepted)
+        self.state.drain(self.client)
     }
 }
 
@@ -451,8 +546,8 @@ impl Drop for IngestPipe<'_> {
     fn drop(&mut self) {
         // unread acks would answer the *next* call on this client with
         // the wrong frames — that connection state is unrecoverable
-        if !self.in_flight.is_empty() {
-            let n = self.in_flight.len();
+        if !self.state.in_flight.is_empty() {
+            let n = self.state.in_flight.len();
             let _ = self.client.poison(Error::State(format!(
                 "ingest pipe dropped with {n} acks outstanding"
             )));

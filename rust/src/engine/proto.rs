@@ -339,6 +339,7 @@ pub fn error_code(e: &Error) -> u16 {
         Error::Pipeline(_) => 6,
         Error::Codec(_) => 7,
         Error::Io(_) => 8,
+        Error::Unavailable(_) => 9,
     }
 }
 
@@ -371,6 +372,7 @@ pub fn decode_error(payload: &[u8]) -> Error {
         6 => Error::Pipeline(msg),
         7 => Error::Codec(msg),
         8 => Error::Io(std::io::Error::other(msg)),
+        9 => Error::Unavailable(msg),
         _ => Error::Codec(format!("remote error (unknown code {code}): {msg}")),
     }
 }
@@ -759,6 +761,7 @@ mod tests {
             Error::State("pass I".into()),
             Error::Codec("bytes".into()),
             Error::Pipeline("worker".into()),
+            Error::Unavailable("member \"b\" down".into()),
         ] {
             let payload = encode_error(&e);
             let back = decode_error(&payload);

@@ -35,6 +35,11 @@ pub enum Error {
 
     /// I/O errors.
     Io(std::io::Error),
+
+    /// A cluster member (or served endpoint) could not be reached after
+    /// the retry budget was exhausted, or is currently marked Down. The
+    /// operation may succeed later; the cluster state itself is intact.
+    Unavailable(String),
 }
 
 impl fmt::Display for Error {
@@ -48,6 +53,7 @@ impl fmt::Display for Error {
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
             Error::Codec(m) => write!(f, "codec error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Unavailable(m) => write!(f, "unavailable: {m}"),
         }
     }
 }
@@ -90,6 +96,8 @@ mod tests {
         assert!(e.to_string().contains("invalid state"));
         let e = Error::Codec("bad magic".into());
         assert!(e.to_string().contains("codec error: bad magic"));
+        let e = Error::Unavailable("member \"beta\" down after 3 attempts".into());
+        assert!(e.to_string().contains("unavailable: member"));
     }
 
     #[test]

@@ -332,6 +332,7 @@ fn connection_cap_answers_with_a_typed_error() {
         max_frame: proto::DEFAULT_MAX_FRAME,
         checkpoint: None,
         max_connections: 1,
+        ..ServeOpts::default()
     };
     let mut srv = Server::start(Arc::clone(&engine), "127.0.0.1:0", opts).unwrap();
     let addr = srv.local_addr().to_string();

@@ -1,0 +1,419 @@
+//! Fault-tolerance contract suite (ISSUE 9 acceptance), driven by the
+//! deterministic chaos proxy (`worp::cluster::chaos`):
+//!
+//! 1. **Backoff is deterministic** — same (seed, salt) ⇒ same schedule,
+//!    exponential within jitter bounds, capped.
+//! 2. **Kill an owner mid-ingest** — the connection to one member is
+//!    severed after a scripted byte count; the session reconnects,
+//!    reconciles against the instance's lifetime accepted count, replays
+//!    exactly the unconfirmed suffix, and the final merged state is
+//!    **bit-for-bit** the uninterrupted single-process reference (no row
+//!    lost, none double-applied).
+//! 3. **A dead member degrades queries, typed** — strict `merged` is
+//!    `Error::Unavailable`; `query_partial` answers from the surviving
+//!    slices and reports exactly the missing ones as a typed `Coverage`.
+//! 4. **A blackholed member deadlines** instead of hanging forever.
+//! 5. **A torn frame recovers** — the proxy forwards half a frame and
+//!    severs; replay reproduces the reference bit-for-bit.
+//! 6. **Op-targeted kills retry transparently** — severing exactly when
+//!    FLUSH arrives makes the retry layer reconnect and re-issue it.
+//! 7. **Zero cost on the happy path** — an undisturbed cluster run
+//!    performs zero retries, reconnects, or replays.
+//! 8. **Probe → failover → degraded-but-typed queries** — killing a
+//!    member, probing it Down, and failing over onto the survivors
+//!    reports exactly the dead member's slices as lost, after which
+//!    partial queries answer with full knowledge of the gap.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use worp::cluster::chaos::{ChaosProxy, ConnFault, FaultPlan};
+use worp::cluster::{ClusterClient, ClusterSpec, Health, Member, RetryPolicy};
+use worp::data::zipf::zipf_exact_stream;
+use worp::data::{Element, ElementBlock};
+use worp::engine::proto::{op, InstanceSpec};
+use worp::engine::server::{ServeOpts, Server};
+use worp::engine::{Engine, EngineOpts};
+use worp::{Error, WorSampler};
+
+const SLICES: usize = 24;
+const BATCH: usize = 128;
+const CHUNK: usize = 97;
+
+fn proto_spec(method: &str, seed: u64) -> InstanceSpec {
+    let mut cfg = worp::config::PipelineConfig::default();
+    cfg.method = method.into();
+    cfg.k = 16;
+    cfg.seed = seed;
+    cfg.n = 600;
+    cfg.rows = 7;
+    cfg.width = 1024;
+    InstanceSpec::from_config(&cfg)
+}
+
+fn stream() -> Vec<Element> {
+    zipf_exact_stream(600, 1.2, 1e4, 3, 21) // 1800 elements
+}
+
+fn blocks_of(elems: &[Element], chunk: usize) -> Vec<ElementBlock> {
+    elems.chunks(chunk).map(ElementBlock::from_elements).collect()
+}
+
+fn spec_of(names: &[&str]) -> ClusterSpec {
+    ClusterSpec {
+        name: "ct".into(),
+        slices: SLICES,
+        members: names
+            .iter()
+            .map(|n| Member { name: n.to_string(), addr: String::new() })
+            .collect(),
+    }
+}
+
+struct Node {
+    #[allow(dead_code)]
+    engine: Arc<Engine>,
+    server: Server,
+}
+
+fn start_member(spec: &ClusterSpec, name: &str) -> Node {
+    let owned = spec.owned_slices(name).unwrap();
+    let engine = Arc::new(
+        Engine::with_ownership(EngineOpts::new(1, BATCH).unwrap(), SLICES, &owned, spec.stamp())
+            .unwrap(),
+    );
+    let server = Server::start(Arc::clone(&engine), "127.0.0.1:0", ServeOpts::default()).unwrap();
+    Node { engine, server }
+}
+
+fn start_cluster(names: &[&str]) -> (ClusterSpec, Vec<Node>) {
+    let mut spec = spec_of(names);
+    let mut nodes = Vec::new();
+    for i in 0..names.len() {
+        let node = start_member(&spec, names[i]);
+        spec.members[i].addr = node.server.local_addr().to_string();
+        nodes.push(node);
+    }
+    (spec, nodes)
+}
+
+fn single_process_reference(method: &str, seed: u64, elems: &[Element]) -> Vec<u8> {
+    let engine = Engine::new(EngineOpts::new(SLICES, BATCH).unwrap());
+    let proto = proto_spec(method, seed).to_worp().unwrap().build().unwrap();
+    engine.create_from_proto("ref", proto).unwrap();
+    for b in blocks_of(elems, CHUNK) {
+        engine.ingest("ref", &b).unwrap();
+    }
+    engine.flush("ref").unwrap();
+    let mut out = Vec::new();
+    engine.instance("ref").unwrap().merged().unwrap().encode_state(&mut out);
+    out
+}
+
+fn cluster_merged_encode(cc: &mut ClusterClient, name: &str) -> Vec<u8> {
+    let merged = cc.merged(name).unwrap();
+    let mut out = Vec::new();
+    merged.encode_state(&mut out);
+    out
+}
+
+/// A fast-failing policy for tests that talk to dead or blackholed
+/// members: tight deadline, millisecond backoff, always probe.
+fn test_policy(attempts: u32) -> RetryPolicy {
+    RetryPolicy {
+        attempts,
+        base_ms: 1,
+        cap_ms: 4,
+        op_deadline_ms: 2_000,
+        probe_secs: 0,
+        seed: 0xFA17,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. the backoff schedule is a pure function of (seed, salt, attempt)
+
+#[test]
+fn backoff_schedule_is_deterministic_exponential_and_capped() {
+    let p = RetryPolicy { attempts: 8, ..RetryPolicy::default() };
+    assert_eq!(p.schedule(3), p.schedule(3), "same salt must replay identically");
+    assert_ne!(p.schedule(3), p.schedule(4), "different members must de-synchronise");
+    let other = RetryPolicy { seed: p.seed ^ 0xDEAD, ..p.clone() };
+    assert_ne!(p.schedule(3), other.schedule(3), "the seed keys the stream");
+    for attempt in 1..=12u32 {
+        let raw = p.base_ms.saturating_mul(1 << (attempt - 1).min(20)).min(p.cap_ms);
+        let d = p.backoff(3, attempt).as_millis() as u64;
+        assert!(
+            d >= raw / 2 && d <= raw,
+            "attempt {attempt}: {d}ms outside the [{}, {raw}] jitter window",
+            raw / 2
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. sever an owner's connection mid-ingest: reconnect + replay ≡ never failed
+
+#[test]
+fn killed_owner_mid_ingest_replays_unacked_blocks_bit_identically() {
+    let elems = stream();
+    let (mut spec, nodes) = start_cluster(&["alpha", "beta", "gamma"]);
+
+    // proxy the member owning the most slices, so enough rows route to
+    // it that the byte-counted cut is guaranteed to land mid-ingest
+    let victim = (0..spec.members.len())
+        .max_by_key(|&m| spec.owned_slices(&spec.members[m].name).unwrap().len())
+        .unwrap();
+
+    // the victim sits behind the chaos proxy: the first connection
+    // (which carries create, the ingest baseline, and the first ingest
+    // frames) is severed after 2000 client→server bytes — mid-stream,
+    // past the first full ingest frame (one CHUNK-row frame is ~1.6 KiB
+    // and create + the baseline stats are ~0.3 KiB); every later
+    // connection passes through untouched
+    let proxy = ChaosProxy::start(
+        &spec.members[victim].addr,
+        FaultPlan::scripted(vec![ConnFault::CutAfter { c2s_bytes: 2_000 }]),
+    )
+    .unwrap();
+    spec.members[victim].addr = proxy.addr();
+
+    let mut cc = ClusterClient::connect_with(spec.clone(), test_policy(4)).unwrap();
+    cc.create("t/keys", &proto_spec("1pass", 7)).unwrap();
+    let mut session = cc.ingest_session("t/keys", CHUNK).unwrap();
+    for e in &elems {
+        session.push(e.key, e.val).unwrap();
+    }
+    let sent = session.finish().unwrap();
+    assert_eq!(sent as usize, elems.len(), "every row must be accepted exactly once");
+    assert!(
+        cc.replays() >= 1,
+        "the cut must have forced at least one reconnect+replay recovery"
+    );
+    assert!(proxy.connections() >= 2, "recovery must have re-dialed through the proxy");
+
+    cc.flush("t/keys").unwrap();
+    assert_eq!(
+        cluster_merged_encode(&mut cc, "t/keys"),
+        single_process_reference("1pass", 7, &elems),
+        "kill-owner-mid-ingest + replay must equal the uninterrupted run bit-for-bit"
+    );
+    drop(nodes);
+}
+
+// ---------------------------------------------------------------------------
+// 3. a dead member: strict query is typed Unavailable, partial query answers
+
+#[test]
+fn query_with_a_dead_member_returns_typed_partial_coverage() {
+    let elems = stream();
+    let (spec, mut nodes) = start_cluster(&["alpha", "beta", "gamma"]);
+    let mut cc = ClusterClient::connect_with(spec.clone(), test_policy(2)).unwrap();
+    cc.create("t/keys", &proto_spec("1pass", 7)).unwrap();
+    for b in blocks_of(&elems, CHUNK) {
+        cc.ingest("t/keys", &b).unwrap();
+    }
+    cc.flush("t/keys").unwrap();
+    // full coverage first: the degraded query agrees with the strict one
+    let (full, cov) = cc.query_partial("t/keys").unwrap();
+    assert!(cov.is_full(), "all members up ⇒ full coverage, got {cov:?}");
+    let mut full_bytes = Vec::new();
+    full.unwrap().encode_state(&mut full_bytes);
+    assert_eq!(full_bytes, cluster_merged_encode(&mut cc, "t/keys"));
+
+    // kill gamma for real
+    let mut gamma = nodes.remove(2);
+    gamma.server.stop();
+    drop(gamma);
+    let gamma_owned = spec.owned_slices("gamma").unwrap();
+
+    // strict queries refuse, typed — never a silently partial answer
+    let err = cc.merged("t/keys").unwrap_err();
+    assert!(
+        matches!(err, Error::Unavailable(_)),
+        "merged with a dead member must be Unavailable, got {err}"
+    );
+
+    // the opt-in partial query answers and names the gap exactly
+    let (merged, cov) = cc.query_partial("t/keys").unwrap();
+    assert_eq!(cov.owned, SLICES);
+    assert_eq!(cov.missing_slices, gamma_owned, "exactly gamma's slices are missing");
+    assert_eq!(cov.answered, SLICES - gamma_owned.len());
+    assert_eq!(cov.unreachable_members, vec!["gamma".to_string()]);
+    assert!(!cov.is_full());
+    let sample = merged.expect("surviving slices still answer").sample().unwrap();
+    assert!(!sample.keys().is_empty(), "the degraded sample is still usable");
+    drop(nodes);
+}
+
+// ---------------------------------------------------------------------------
+// 4. a blackholed member hits the op deadline instead of hanging
+
+#[test]
+fn blackholed_member_deadlines_instead_of_hanging() {
+    let (mut spec, nodes) = start_cluster(&["solo"]);
+    let proxy = ChaosProxy::start(
+        &spec.members[0].addr,
+        FaultPlan::scripted(vec![ConnFault::Blackhole, ConnFault::Blackhole]),
+    )
+    .unwrap();
+    spec.members[0].addr = proxy.addr();
+
+    let policy = RetryPolicy { op_deadline_ms: 300, ..test_policy(2) };
+    let started = Instant::now();
+    let mut cc = ClusterClient::connect_with(spec, policy).unwrap();
+    let err = cc.ping().unwrap_err();
+    assert!(
+        matches!(err, Error::Unavailable(_)),
+        "a blackholed member must exhaust retries into Unavailable, got {err}"
+    );
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "the deadline must bound a blackhole ({:?} elapsed)",
+        started.elapsed()
+    );
+    drop(nodes);
+}
+
+// ---------------------------------------------------------------------------
+// 5. a frame torn in half mid-pipeline recovers by replay, bit-identically
+
+#[test]
+fn truncated_frame_recovers_by_replay_bit_identically() {
+    let elems = stream();
+    let (mut spec, nodes) = start_cluster(&["solo"]);
+    // connection 0 carries: frame 0 = create, frame 1 = the ingest
+    // baseline stats, frames 2.. = ingest — tear the second ingest frame
+    let proxy = ChaosProxy::start(
+        &spec.members[0].addr,
+        FaultPlan::scripted(vec![ConnFault::TruncateFrame { frame: 3 }]),
+    )
+    .unwrap();
+    spec.members[0].addr = proxy.addr();
+
+    let mut cc = ClusterClient::connect_with(spec.clone(), test_policy(4)).unwrap();
+    cc.create("t/keys", &proto_spec("1pass", 7)).unwrap();
+    let mut session = cc.ingest_session("t/keys", CHUNK).unwrap();
+    for e in &elems {
+        session.push(e.key, e.val).unwrap();
+    }
+    assert_eq!(session.finish().unwrap() as usize, elems.len());
+    assert!(cc.replays() >= 1, "the torn frame must have forced a replay");
+
+    cc.flush("t/keys").unwrap();
+    assert_eq!(
+        cluster_merged_encode(&mut cc, "t/keys"),
+        single_process_reference("1pass", 7, &elems),
+        "a torn ingest frame + replay must equal the uninterrupted run bit-for-bit"
+    );
+    drop(nodes);
+}
+
+// ---------------------------------------------------------------------------
+// 6. severing exactly on FLUSH: the idempotent retry re-issues it unseen
+
+#[test]
+fn close_on_flush_op_retries_transparently() {
+    let elems = stream();
+    let (mut spec, nodes) = start_cluster(&["solo"]);
+    let proxy = ChaosProxy::start(
+        &spec.members[0].addr,
+        FaultPlan::scripted(vec![ConnFault::CloseOnOp { op: op::FLUSH }]),
+    )
+    .unwrap();
+    spec.members[0].addr = proxy.addr();
+
+    let mut cc = ClusterClient::connect_with(spec.clone(), test_policy(3)).unwrap();
+    cc.create("t/keys", &proto_spec("1pass", 7)).unwrap();
+    let mut session = cc.ingest_session("t/keys", CHUNK).unwrap();
+    for e in &elems {
+        session.push(e.key, e.val).unwrap();
+    }
+    session.finish().unwrap();
+
+    // the proxy kills connection 0 the moment FLUSH arrives (the frame
+    // is never forwarded); the retry layer reconnects and re-issues
+    cc.flush("t/keys").unwrap();
+    assert!(cc.retries() >= 1, "the killed FLUSH must have been retried");
+    assert!(cc.reconnects() >= 1, "the retry must have re-dialed");
+    assert_eq!(
+        cluster_merged_encode(&mut cc, "t/keys"),
+        single_process_reference("1pass", 7, &elems),
+        "a retried flush must be invisible in the merged state"
+    );
+    drop(nodes);
+}
+
+// ---------------------------------------------------------------------------
+// 7. the retry layer costs the happy path nothing
+
+#[test]
+fn retry_layer_is_zero_cost_on_the_happy_path() {
+    let elems = stream();
+    let (spec, nodes) = start_cluster(&["alpha", "beta", "gamma"]);
+    let mut cc = ClusterClient::connect(spec.clone()).unwrap();
+    cc.create("t/keys", &proto_spec("1pass", 7)).unwrap();
+    let mut session = cc.ingest_session("t/keys", CHUNK).unwrap();
+    for e in &elems {
+        session.push(e.key, e.val).unwrap();
+    }
+    assert_eq!(session.finish().unwrap() as usize, elems.len());
+    cc.flush("t/keys").unwrap();
+    assert_eq!(
+        cluster_merged_encode(&mut cc, "t/keys"),
+        single_process_reference("1pass", 7, &elems)
+    );
+    assert_eq!(cc.retries(), 0, "an undisturbed run must never retry");
+    assert_eq!(cc.reconnects(), 0, "an undisturbed run must never re-dial");
+    assert_eq!(cc.replays(), 0, "an undisturbed run must never replay");
+    for (member, h) in cc.health() {
+        assert_eq!(h, Health::Healthy, "{member} should be healthy");
+    }
+    drop(nodes);
+}
+
+// ---------------------------------------------------------------------------
+// 8. probe a killed member Down, fail over, and query the survivors typed
+
+#[test]
+fn probe_then_failover_reports_lost_slices_and_recovers_partial_queries() {
+    let elems = stream();
+    let (spec, mut nodes) = start_cluster(&["alpha", "beta", "gamma"]);
+    let mut cc = ClusterClient::connect_with(spec.clone(), test_policy(2)).unwrap();
+    cc.create("t/keys", &proto_spec("1pass", 7)).unwrap();
+    for b in blocks_of(&elems, CHUNK) {
+        cc.ingest("t/keys", &b).unwrap();
+    }
+    cc.flush("t/keys").unwrap();
+
+    let mut gamma = nodes.remove(2);
+    gamma.server.stop();
+    drop(gamma);
+    let gamma_owned = spec.owned_slices("gamma").unwrap();
+
+    // two probe rounds march gamma Healthy → Suspect → Down
+    cc.set_down_after(2);
+    cc.probe();
+    let health = cc.probe();
+    assert_eq!(health[2], ("gamma".to_string(), Health::Down));
+    assert_eq!(health[0].1, Health::Healthy);
+    assert_eq!(health[1].1, Health::Healthy);
+
+    // failover onto the survivors: nothing movable (the only changed
+    // slices belonged to the dead member), so every one is reported lost
+    let surviving = spec.surviving(&["gamma".to_string()]).unwrap();
+    let report = cc.failover_to(surviving.clone()).unwrap();
+    assert_eq!(report.moves, 0);
+    assert_eq!(report.lost_slices, gamma_owned, "exactly the dead member's slices");
+    assert_eq!(cc.spec(), &surviving, "the client re-routes by the surviving spec");
+
+    // the surviving members answer with exact knowledge of the gap
+    let (merged, cov) = cc.query_partial("t/keys").unwrap();
+    assert_eq!(cov.missing_slices, gamma_owned);
+    assert!(cov.unreachable_members.is_empty(), "every surviving member answered");
+    assert_eq!(cov.answered, SLICES - gamma_owned.len());
+    assert!(merged.is_some());
+    // and the strict query names the gap, typed
+    let err = cc.merged("t/keys").unwrap_err();
+    assert!(matches!(err, Error::Unavailable(_)), "got {err}");
+    drop(nodes);
+}
