@@ -1,88 +1,22 @@
-//! Coordinated samples across datasets: estimate weighted Jaccard
-//! similarity between two (or more) streams from their WOR samples alone —
-//! the multi-set application the paper's conclusion highlights.
+//! Coordinated sampling across two drifted daily streams — a thin
+//! wrapper over the scenario engine, so this example, the CLI
+//! (`worp scenario coordinated`), and the CI smoke job all drive the
+//! exact same gated workload.
 //!
-//! Two days of a query log are sampled with the *same* randomization
-//! `r_x`; the samples are coordinated, so min/max-sum statistics and
-//! weighted Jaccard are estimable from 2×k keys instead of the full logs.
+//! Two instances are created on a live engine; the second passes
+//! `coordinate = <first>` and the engine resolves a *shared* seed,
+//! making their bottom-k samples comparable — the multi-set application
+//! the paper's conclusion highlights. The weighted-Jaccard estimate off
+//! the coordinated samples is gated against the exact value, and
+//! querying similarity across *uncoordinated* instances must be refused
+//! with a typed error.
 //!
 //! Run: `cargo run --release --example coordinated_similarity`
 
-use worp::data::zipf::zipf_frequencies;
-use worp::estimate::similarity::{key_overlap, min_sum, weighted_jaccard};
-use worp::sampler::ppswor::perfect_ppswor;
-use worp::sampler::worp2::two_pass_sample;
-use worp::sampler::SamplerConfig;
-use worp::util::fmt::Table;
-use worp::util::rng::Rng;
+use worp::scenario::{self, ScenarioOpts};
 
-fn main() {
-    let n = 10_000;
-    let k = 200;
-    let seed = 1234; // the SHARED randomization — this is the whole trick
-    println!("== coordinated WOR samples: cross-day query-log similarity ==\n");
-
-    // day 1: Zipf[1.1]; day 2: same distribution with 30% of keys drifted
-    let day1 = zipf_frequencies(n, 1.1, 1e6);
-    let mut rng = Rng::new(9);
-    let day2: Vec<f64> = day1
-        .iter()
-        .map(|&f| {
-            if rng.uniform() < 0.3 {
-                f * rng.range_f64(0.2, 1.8)
-            } else {
-                f
-            }
-        })
-        .collect();
-
-    // ground truth
-    let (mut tmin, mut tmax) = (0.0, 0.0);
-    for i in 0..n {
-        tmin += day1[i].min(day2[i]);
-        tmax += day1[i].max(day2[i]);
-    }
-    let true_j = tmin / tmax;
-
-    // streaming path: 2-pass WORp over unaggregated streams, same seed
-    let cfg = SamplerConfig::new(1.0, k).with_seed(seed).with_domain(n);
-    let e1 = worp::data::stream::unaggregate(&day1, 2, false, 1);
-    let e2 = worp::data::stream::unaggregate(&day2, 2, false, 2);
-    let s1 = two_pass_sample(&e1, cfg.clone());
-    let s2 = two_pass_sample(&e2, cfg.clone());
-
-    // baselines: perfect coordinated + perfect UNcoordinated samples
-    let p1 = perfect_ppswor(&day1, 1.0, k, seed);
-    let p2 = perfect_ppswor(&day2, 1.0, k, seed);
-    let u2 = perfect_ppswor(&day2, 1.0, k, seed + 1);
-
-    let mut t = Table::new(
-        &format!("weighted Jaccard from k = {k} samples (truth = {true_j:.4})"),
-        &["method", "est J", "min-sum rel err", "sample overlap"],
-    );
-    let tminr = |s: f64| format!("{:+.2}%", 100.0 * (s - tmin) / tmin);
-    t.row(&[
-        "2-pass WORp, coordinated".into(),
-        format!("{:.4}", weighted_jaccard(&s1, &s2)),
-        tminr(min_sum(&s1, &s2)),
-        format!("{:.2}", key_overlap(&s1, &s2)),
-    ]);
-    t.row(&[
-        "perfect ppswor, coordinated".into(),
-        format!("{:.4}", weighted_jaccard(&p1, &p2)),
-        tminr(min_sum(&p1, &p2)),
-        format!("{:.2}", key_overlap(&p1, &p2)),
-    ]);
-    t.row(&[
-        "perfect ppswor, independent seeds".into(),
-        format!("{:.4}", weighted_jaccard(&p1, &u2)),
-        tminr(min_sum(&p1, &u2)),
-        format!("{:.2}", key_overlap(&p1, &u2)),
-    ]);
-    t.print();
-
-    let j_coord = weighted_jaccard(&p1, &p2);
-    let j_indep = weighted_jaccard(&p1, &u2);
-    println!("coordination buys accuracy: |{j_coord:.3} − {true_j:.3}| < |{j_indep:.3} − {true_j:.3}|");
-    assert!((j_coord - true_j).abs() < (j_indep - true_j).abs() + 0.02);
+fn main() -> worp::Result<()> {
+    let report = scenario::run("coordinated", &ScenarioOpts::default())?;
+    println!("{report}");
+    report.check()
 }

@@ -1,69 +1,20 @@
 //! Sliding-window WOR sampling: "trending keys" over the last W events —
-//! the time-decay variant the paper's conclusion sketches, built on the
-//! windowed CountSketch.
+//! a thin wrapper over the scenario engine, so this example, the CLI
+//! (`worp scenario sliding-window`), and the CI smoke job all drive the
+//! exact same gated workload.
 //!
-//! Scenario: a query stream whose hot set shifts over time; the windowed
-//! ℓ1 WORp sample tracks the *current* hot set, while the unwindowed
-//! sampler stays dominated by stale mass.
+//! The stream's hot set shifts every era; a window covering only the
+//! final era's tail must surface that era's hot keys, while the
+//! unwindowed 1-pass sampler stays dominated by stale mass. The gate
+//! requires the windowed sample to contain strictly more final-era hot
+//! keys than the unwindowed one.
 //!
 //! Run: `cargo run --release --example sliding_window`
 
-use worp::data::Element;
-use worp::sampler::windowed::WindowedWorp;
-use worp::sampler::worp1::OnePassWorp;
-use worp::sampler::SamplerConfig;
-use worp::util::fmt::Table;
-use worp::util::rng::Rng;
+use worp::scenario::{self, ScenarioOpts};
 
-fn main() {
-    let n = 10_000u64;
-    let k = 20;
-    let window = 50_000u64; // events
-    println!("== windowed WOR ℓ1 sampling: tracking a shifting hot set ==\n");
-
-    let cfg = SamplerConfig::new(1.0, k)
-        .with_seed(7)
-        .with_domain(n as usize)
-        .with_sketch_shape(7, 2048);
-    let mut windowed = WindowedWorp::new(cfg.clone(), window, 10);
-    let mut unwindowed = OnePassWorp::new(cfg);
-
-    let mut rng = Rng::new(3);
-    let eras = 4u64;
-    let era_len = 100_000u64;
-    for t in 0..eras * era_len {
-        let era = t / era_len;
-        // hot set of this era: keys [era*100, era*100+50), zipf-ish tail
-        let key = if rng.uniform() < 0.6 {
-            era * 100 + rng.below(50)
-        } else {
-            rng.below(n)
-        };
-        let e = Element::new(key, 1.0);
-        windowed.process_at(&e, t);
-        unwindowed.process(&e);
-    }
-
-    let final_era = eras - 1;
-    let hot = |key: u64| (final_era * 100..final_era * 100 + 50).contains(&key);
-
-    let ws = windowed.sample();
-    let us = unwindowed.sample();
-    let w_hot = ws.keys().iter().filter(|&&x| hot(x)).count();
-    let u_hot = us.keys().iter().filter(|&&x| hot(x)).count();
-
-    let mut t = Table::new(
-        &format!("sample composition after era {final_era} (k = {k})"),
-        &["sampler", "keys from current hot set", "stale/global keys"],
-    );
-    t.row(&["windowed WORp (last 50k events)".into(), w_hot.to_string(), (ws.len() - w_hot).to_string()]);
-    t.row(&["unwindowed WORp (full stream)".into(), u_hot.to_string(), (us.len() - u_hot).to_string()]);
-    t.print();
-
-    println!("top windowed keys: {:?}", &ws.keys()[..8.min(ws.len())]);
-    assert!(
-        w_hot > u_hot,
-        "the windowed sample must favor the current hot set ({w_hot} vs {u_hot})"
-    );
-    println!("\nok: windowed sample tracks the current era; unwindowed drags stale mass");
+fn main() -> worp::Result<()> {
+    let report = scenario::run("sliding-window", &ScenarioOpts::default())?;
+    println!("{report}");
+    report.check()
 }

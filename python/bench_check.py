@@ -3,16 +3,17 @@
 
 CI runs this as the `bench-gate` job: a fresh smoke-mode artifact from
 the just-built binary is compared against the committed baseline
-(`BENCH_PR8.json` at the repo root). A (summary, mode) pair regresses
+(`BENCH_PR10.json` at the repo root). A (summary, mode) pair regresses
 when its fresh `items_per_sec` falls more than `--threshold` (default
 15%) below the baseline's.
 
 Smoke-mode numbers are noisy, so the verdict is two-tier:
 
 * **hard-fail** pairs — the `countsketch` summary (every mode: its
-  kernels are the shared code under the lane-unrolled rewrite) and the
-  `served_ingest` mode (the end-to-end wire path) — exit nonzero on
-  regression;
+  kernels are the shared code under the lane-unrolled rewrite), the
+  `served_ingest` mode (the end-to-end wire path), and the `wr`
+  reservoir (the scenario engine's WR-vs-WOR baseline) — exit nonzero
+  on regression;
 * every other pair only **warns** (printed, exit stays zero) — sampler
   throughput on a shared CI runner jitters far beyond 15%.
 
@@ -37,6 +38,7 @@ import sys
 HARD = [
     ("countsketch", None),
     (None, "served_ingest"),
+    ("wr", None),
 ]
 
 

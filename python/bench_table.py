@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Render the worp perf artifact (BENCH_PR*.json) as a markdown table.
 
-The artifact is emitted by `worp bench [--smoke] --out BENCH_PR8.json`
+The artifact is emitted by `worp bench [--smoke] --out BENCH_PR10.json`
 (or `cargo bench --bench throughput`); each summary carries a record per
 ingestion mode — "scalar" (per-element `process`), "batch" (AoS
 `process_batch`), from PR 4 on "block" (SoA `process_block`), from PR 7
@@ -14,7 +14,7 @@ d-interleaved one ("row_major" / "interleaved"). This script pivots the
 records into one row per summary with speedup columns, ready to paste
 into the README's Performance section.
 
-Usage: python3 python/bench_table.py rust/BENCH_PR8.json [more.json ...]
+Usage: python3 python/bench_table.py rust/BENCH_PR10.json [more.json ...]
 """
 
 import json

@@ -39,6 +39,7 @@ Usage as a script (the CI smoke drives `selftest` and
 
     python3 worp_client.py --addr 127.0.0.1:7070 selftest
     python3 worp_client.py --addr 127.0.0.1:7070 pipelined-selftest
+    python3 worp_client.py --addr 127.0.0.1:7070 similarity-selftest
 """
 
 import argparse
@@ -77,6 +78,7 @@ OP_STATS_ALL = 15
 OP_SLICE_SNAPSHOT = 16
 OP_SLICE_INSTALL = 17
 OP_SLICE_DROP = 18
+OP_SIMILARITY = 19
 
 # cluster placement constants (mirror rust/src/cluster/spec.rs and
 # rust/src/pipeline/shard.rs — any client must compute the same routing)
@@ -388,11 +390,22 @@ class Client:
         width=0,
         window=0,
         buckets=8,
+        decay="",
+        decay_rate=0.0,
+        coordinate="",
     ):
+        """`decay`/`decay_rate` select time-decayed sampling ("exp" or
+        "poly" with a positive rate). `coordinate` names an existing
+        instance whose creation seed this instance should share — the
+        server resolves the seed, so the pair's samples are coordinated
+        and SIMILARITY queries between them are meaningful."""
         payload = _put_str(name) + _put_str(method) + _put_str(dist)
         payload += struct.pack(
             "<dQdQQddQQQQ", p, k, q, seed, n, delta, eps, rows, width, window, buckets
         )
+        # optional tail (mirrors InstanceSpec::encode) — always sent;
+        # the Rust decoder defaults it when absent for old clients
+        payload += _put_str(decay) + struct.pack("<d", decay_rate) + _put_str(coordinate)
         self._call(OP_CREATE, payload).finish()
 
     def drop(self, name):
@@ -539,6 +552,20 @@ class Client:
         est = r.f64()
         r.finish()
         return est
+
+    def similarity(self, a, b, timeout=None):
+        """Coordinated-sample similarity between two instances. Returns
+        {"min_sum", "max_sum", "jaccard", "overlap"} — meaningful when
+        the pair shares a creation seed (create(..., coordinate=a))."""
+        r = self._call(OP_SIMILARITY, _put_str(a) + _put_str(b), timeout=timeout)
+        report = {
+            "min_sum": r.f64(),
+            "max_sum": r.f64(),
+            "jaccard": r.f64(),
+            "overlap": r.f64(),
+        }
+        r.finish()
+        return report
 
     def rank_frequency(self, name, max_points=0, timeout=None):
         r = self._call(
@@ -688,6 +715,69 @@ def pipelined_selftest(host, port):
     )
 
 
+def similarity_selftest(client):
+    """Coordinated-create + SIMILARITY over the wire: two instances, the
+    second created with coordinate= the first so the server forces a
+    shared seed, loaded with overlapping streams. Identical data must
+    give jaccard == overlap == 1; a perturbed copy must land within a
+    loose tolerance of the exact weighted Jaccard."""
+    a, b = "smoke/py-sim-a", "smoke/py-sim-b"
+    for name in (a, b):
+        try:
+            client.drop(name)
+        except WorpError:
+            pass  # fresh server
+    client.create(a, method="1pass", k=64, seed=21, n=4000)
+    client.create(b, method="1pass", k=64, seed=999, coordinate=a, n=4000)
+
+    elems_a = [(k, float(k % 13) + 1.0) for k in range(600)]
+    # half the keys doubled: exact weighted Jaccard is sum(min)/sum(max)
+    elems_b = [(k, v * (2.0 if k % 2 == 0 else 1.0)) for k, v in elems_a]
+    true_min = sum(v for _, v in elems_a)
+    true_max = sum(v for _, v in elems_b)
+    true_j = true_min / true_max
+
+    client.ingest(a, elems_a)
+    client.ingest(b, elems_b)
+    client.flush(a)
+    client.flush(b)
+
+    # identical instance vs itself: every statistic is exact
+    self_report = client.similarity(a, a)
+    assert abs(self_report["jaccard"] - 1.0) < 1e-9, self_report
+    assert self_report["overlap"] == 1.0, self_report
+
+    report = client.similarity(a, b)
+    assert 0.0 <= report["jaccard"] <= 1.0, report
+    assert abs(report["jaccard"] - true_j) < 0.15, (report, true_j)
+    assert report["overlap"] > 0.5, report
+    assert report["min_sum"] > 0.0 and report["max_sum"] >= report["min_sum"], report
+
+    # an uncoordinated third instance must be refused as incompatible
+    c = "smoke/py-sim-c"
+    try:
+        client.drop(c)
+    except WorpError:
+        pass
+    client.create(c, method="1pass", k=64, seed=77, n=4000)
+    client.ingest(c, elems_a)
+    client.flush(c)
+    try:
+        client.similarity(a, c)
+    except WorpError as e:
+        assert e.kind == "incompatible", e
+    else:
+        raise AssertionError("uncoordinated similarity was not refused")
+
+    for name in (a, b, c):
+        client.drop(name)
+    print(
+        f"similarity selftest ok: coordinated J={report['jaccard']:.3f} "
+        f"(truth {true_j:.3f}), overlap={report['overlap']:.2f}, "
+        f"uncoordinated pair refused as incompatible"
+    )
+
+
 def _parse_nodes(nodes_arg):
     """Parse "a=host:port,b=host:port" into an ordered {name: (host, port)}."""
     members = {}
@@ -776,11 +866,13 @@ def main():
             "selftest",
             "pipelined-selftest",
             "cluster-selftest",
+            "similarity-selftest",
         ],
         help=(
             "ping | list | stats-all | selftest (deterministic end-to-end session) "
             "| pipelined-selftest (pipelined == lockstep byte-identity + poisoning) "
-            "| cluster-selftest (verify shared placement against N members)"
+            "| cluster-selftest (verify shared placement against N members) "
+            "| similarity-selftest (coordinated create + SIMILARITY accuracy)"
         ),
     )
     args = ap.parse_args()
@@ -820,6 +912,8 @@ def main():
                     f"processed={i['processed']} pending={i['pending']} "
                     f"accepted={i['accepted']}"
                 )
+        elif args.action == "similarity-selftest":
+            similarity_selftest(client)
         else:
             selftest(client)
     return 0

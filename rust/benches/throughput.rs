@@ -128,15 +128,15 @@ fn main() {
     // ---- machine-readable scalar/batch/block suite (perf trajectory)
     // runs before the XLA section, which early-returns when the PJRT
     // runtime is unavailable
-    println!("\n§Perf — scalar/batch/block + est_many + layout + served suite (BENCH_PR8.json)\n");
+    println!("\n§Perf — scalar/batch/block + est_many + layout + served suite (BENCH_PR10.json)\n");
     let opts = worp::perf::PerfOpts::full();
     let mut records = worp::perf::run_suite(&opts);
     records.extend(worp::perf::run_query_suite(&opts));
     records.extend(worp::perf::run_layout_suite(&opts));
     records.extend(worp::perf::run_served_suite(&opts));
-    match worp::perf::write_json("BENCH_PR8.json", &opts, &records) {
-        Ok(()) => println!("\nwrote {} records to BENCH_PR8.json\n", records.len()),
-        Err(e) => println!("\n(could not write BENCH_PR8.json: {e})\n"),
+    match worp::perf::write_json("BENCH_PR10.json", &opts, &records) {
+        Ok(()) => println!("\nwrote {} records to BENCH_PR10.json\n", records.len()),
+        Err(e) => println!("\n(could not write BENCH_PR10.json: {e})\n"),
     }
 
     // ---- XLA offload (if artifacts exist)

@@ -17,12 +17,15 @@
 use super::WorSampler;
 use crate::config::PipelineConfig;
 use crate::error::{Error, Result};
+use crate::sampler::decayed::DecayedWorp;
 use crate::sampler::exact::ExactWor;
 use crate::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
 use crate::sampler::windowed::WindowedWorp;
 use crate::sampler::worp1::OnePassWorp;
 use crate::sampler::worp2::TwoPassWorp;
+use crate::sampler::wr_reservoir::WrReservoir;
 use crate::sampler::SamplerConfig;
+use crate::transform::DecaySpec;
 use crate::util::hashing::BottomKDist;
 
 /// The sampling method a [`Worp`] builder constructs.
@@ -39,6 +42,13 @@ pub enum Method {
     /// Exact streaming baseline: aggregates frequencies, perfect bottom-k
     /// sample (linear memory — the "perfect WOR" of Figs 1–2).
     Exact,
+    /// Streaming with-replacement reservoir (exponential-jump E–S with
+    /// the with-replacement extension) — the honest WR baseline the
+    /// scenario gates compare WOR against.
+    Wr,
+    /// Exact bottom-k over time-decayed frequencies (exponential /
+    /// polynomial forward decay, run-chunked ticks).
+    Decayed,
 }
 
 impl Method {
@@ -50,8 +60,10 @@ impl Method {
             "tv" => Ok(Method::Tv),
             "windowed" | "window" => Ok(Method::Windowed),
             "exact" | "perfect" => Ok(Method::Exact),
+            "wr" | "wr-reservoir" | "reservoir" => Ok(Method::Wr),
+            "decayed" | "decay" => Ok(Method::Decayed),
             other => Err(Error::Config(format!(
-                "unknown method {other:?} (expected 1pass|2pass|tv|windowed|exact)"
+                "unknown method {other:?} (expected 1pass|2pass|tv|windowed|exact|wr|decayed)"
             ))),
         }
     }
@@ -64,6 +76,8 @@ impl Method {
             Method::Tv => "tv",
             Method::Windowed => "windowed",
             Method::Exact => "exact",
+            Method::Wr => "wr",
+            Method::Decayed => "decayed",
         }
     }
 }
@@ -87,6 +101,7 @@ pub struct Worp {
     buckets: usize,
     tv_kind: SamplerKind,
     tv_r: usize,
+    decay: Option<DecaySpec>,
 }
 
 impl Worp {
@@ -108,6 +123,7 @@ impl Worp {
             buckets: 8,
             tv_kind: SamplerKind::Oracle,
             tv_r: 0,
+            decay: None,
         }
     }
 
@@ -216,6 +232,20 @@ impl Worp {
         self
     }
 
+    /// Select the streaming with-replacement reservoir baseline.
+    pub fn wr(mut self) -> Worp {
+        self.method = Method::Wr;
+        self
+    }
+
+    /// Select the time-decayed exact sampler with the given decay spec
+    /// (see [`DecaySpec::exponential`] / [`DecaySpec::polynomial`]).
+    pub fn decayed(mut self, spec: DecaySpec) -> Worp {
+        self.method = Method::Decayed;
+        self.decay = Some(spec);
+        self
+    }
+
     /// Select a method by enum (CLI / config path).
     pub fn method(mut self, m: Method) -> Worp {
         self.method = m;
@@ -243,12 +273,21 @@ impl Worp {
             w.window = cfg.window;
             w.buckets = cfg.buckets.max(1);
         }
+        if !cfg.decay.is_empty() {
+            w.decay = Some(DecaySpec::parse(&cfg.decay, cfg.decay_rate)?);
+        }
         Ok(w)
     }
 
     /// The chosen method.
     pub fn selected_method(&self) -> Method {
         self.method
+    }
+
+    /// The shared randomization seed this builder prescribes (what the
+    /// engine records for coordinated instance creation).
+    pub fn seed_value(&self) -> u64 {
+        self.seed
     }
 
     /// Validate and materialize the [`SamplerConfig`] this builder
@@ -308,6 +347,17 @@ impl Worp {
             Method::OnePass => Box::new(OnePassWorp::new(cfg)),
             Method::TwoPass => Box::new(TwoPassWorp::new(cfg)),
             Method::Exact => Box::new(ExactWor::new(cfg)),
+            Method::Wr => Box::new(WrReservoir::new(cfg)),
+            Method::Decayed => {
+                let spec = self.decay.ok_or_else(|| {
+                    Error::Config(
+                        "decayed method requires a decay spec (.decayed(spec) / decay = \
+                         \"exp\"|\"poly\" + decay_rate in config)"
+                            .into(),
+                    )
+                })?;
+                Box::new(DecayedWorp::new(cfg, spec))
+            }
             Method::Windowed => {
                 if self.window == 0 || self.buckets == 0 {
                     return Err(Error::Config(
@@ -376,6 +426,8 @@ mod tests {
             Method::Tv,
             Method::Windowed,
             Method::Exact,
+            Method::Wr,
+            Method::Decayed,
         ] {
             assert_eq!(Method::parse(m.name()).unwrap(), m);
         }
@@ -420,6 +472,17 @@ mod tests {
             Worp::p(1.0).windowed(100, 10).build().unwrap().name(),
             "windowed"
         );
+        assert_eq!(Worp::p(1.0).wr().build().unwrap().name(), "wr");
+        assert_eq!(
+            Worp::p(1.0)
+                .decayed(DecaySpec::exponential(0.01).unwrap())
+                .build()
+                .unwrap()
+                .name(),
+            "decayed"
+        );
+        // decayed without a decay spec is a config error
+        assert!(Worp::p(1.0).method(Method::Decayed).build().is_err());
         // windowed without a window is a config error
         assert!(Worp::p(1.0).method(Method::Windowed).build().is_err());
         // windowed on the counter path is a config error

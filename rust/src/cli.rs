@@ -200,12 +200,21 @@ COMMANDS:
                 op_deadline_ms, probe_secs, seed)
     psi         calibrate Ψ_{n,k,ρ}(δ) by simulation (Appendix B.1)
                   --n <n> --k <n> --rho <f64> --delta <f64> --trials <n>
+    scenario <decay|coordinated|wr-vs-wor|sliding-window>
+                drive a whole workload through a live engine, check the
+                answers against exact ground truth, and exit non-zero if
+                any accuracy gate fails (the CI scenario-smoke job)
+                  --serve                 drive over a loopback TCP server
+                  --cluster               drive a 3-node loopback cluster
+                                          (parallel-safe scenarios only)
+                  --mode <local|serve|cluster>  explicit spelling
+                  --k <n> --seed <n> --runs <n>  scenario overrides
     bench       scalar vs batch vs SoA-block ingestion throughput per
                 summary, plus est_many query throughput, the row-major
                 vs interleaved table-layout ablation and the served
                 (TCP) ingest pair, written as machine-readable JSON
                   --smoke                 small CI profile (default: full)
-                  --out <path>            output file (default BENCH_PR8.json)
+                  --out <path>            output file (default BENCH_PR10.json)
                   --stream-len <n> --n <keys> --batch <n> --iters <n> --k <n>
     info        print runtime / artifact status
     help        show this text
@@ -234,6 +243,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
             args.no_positionals()?;
             cmd_psi(args)
         }
+        "scenario" => cmd_scenario(args),
         "bench" => {
             args.no_positionals()?;
             cmd_bench(args)
@@ -1072,7 +1082,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                     let report = cc.failover_to(surviving)?;
                     print_failover(&report, cc.spec().members.len());
                     if let Some(out) = &out {
-                        std::fs::write(out, cc.spec().to_toml())?;
+                        // persist the retry section too — a tuned policy
+                        // must survive the failover round-trip, not reset
+                        // to defaults when the file is loaded back
+                        std::fs::write(out, cc.spec().to_toml_with_retry(cc.policy()))?;
                         println!("surviving topology -> {out}");
                     }
                     if once {
@@ -1120,10 +1133,49 @@ fn cmd_psi(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `worp scenario <name>`: run one end-to-end workload with hard
+/// accuracy gates (see [`crate::scenario`]). Prints every gate and
+/// propagates the failures, so the process exits non-zero on an
+/// accuracy regression — CI runs these like tests.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use crate::scenario::{Mode, ScenarioOpts, SCENARIOS};
+    let name = match args.positionals.as_slice() {
+        [one] => one.clone(),
+        [] => {
+            return Err(Error::Config(format!(
+                "scenario name required (one of {})",
+                SCENARIOS.join("|")
+            )))
+        }
+        more => {
+            return Err(Error::Config(format!(
+                "scenario takes exactly one name, got {more:?}"
+            )))
+        }
+    };
+    let mode = if args.has_flag("cluster") {
+        Mode::Cluster
+    } else if args.has_flag("serve") {
+        Mode::Served
+    } else {
+        Mode::parse(&args.str_or("mode", "local"))?
+    };
+    let defaults = ScenarioOpts::default();
+    let opts = ScenarioOpts {
+        mode,
+        k: args.parse_or("k", 0usize)?,
+        seed: args.parse_or("seed", defaults.seed)?,
+        runs: args.parse_or("runs", 0usize)?,
+    };
+    let report = crate::scenario::run(&name, &opts)?;
+    println!("{report}");
+    report.check()
+}
+
 /// `worp bench`: run the scalar/batch/block ingestion suite, the
 /// est_many query suite, the table-layout ablation and the served-ingest
 /// (pipelined TCP) suite, and emit the machine-readable perf artifact
-/// (`BENCH_PR8.json` by default). Smoke mode is the CI profile — it
+/// (`BENCH_PR10.json` by default). Smoke mode is the CI profile — it
 /// exists to catch panics and keep the artifact schema alive, not to
 /// produce stable numbers; the regression gate compares a fresh smoke
 /// artifact against the committed baseline via `python/bench_check.py`.
@@ -1138,7 +1190,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     opts.batch = args.parse_or("batch", opts.batch)?;
     opts.iters = args.parse_or("iters", opts.iters)?;
     opts.k = args.parse_or("k", opts.k)?;
-    let out = args.str_or("out", "BENCH_PR8.json");
+    let out = args.str_or("out", "BENCH_PR10.json");
     println!(
         "bench: stream_len={} n_keys={} batch={} iters={} k={} smoke={}\n",
         opts.stream_len, opts.n_keys, opts.batch, opts.iters, opts.k, opts.smoke

@@ -96,6 +96,25 @@ impl ClusterSpec {
         out
     }
 
+    /// Like [`ClusterSpec::to_toml`], but also persists the retry policy
+    /// as the `[cluster.retry]` section. The `watch` supervisor writes
+    /// its synthesized surviving topology with this form — a config that
+    /// tuned its retry knobs must not silently fall back to defaults
+    /// after a failover round-trips through `--out`.
+    pub fn to_toml_with_retry(&self, policy: &crate::cluster::RetryPolicy) -> String {
+        let mut out = self.to_toml();
+        out.push_str("\n[cluster.retry]\n");
+        out.push_str(&format!("attempts = {}\n", policy.attempts));
+        out.push_str(&format!("base_ms = {}\n", policy.base_ms));
+        out.push_str(&format!("cap_ms = {}\n", policy.cap_ms));
+        out.push_str(&format!("op_deadline_ms = {}\n", policy.op_deadline_ms));
+        out.push_str(&format!("probe_secs = {}\n", policy.probe_secs));
+        // printed through i64 (the parser's integer type) so seeds with
+        // the high bit set still round-trip bit-for-bit
+        out.push_str(&format!("seed = {}\n", policy.seed as i64));
+        out
+    }
+
     /// The spec minus the named members (same name and slice count, so
     /// the survivors adopt the dropped members' slices under the same
     /// stamp). Errors if a name is unknown or nobody would remain.
@@ -320,6 +339,28 @@ mod tests {
         assert!(spec.surviving(&["nope".to_string()]).is_err());
         let all: Vec<String> = spec.members.iter().map(|m| m.name.clone()).collect();
         assert!(spec.surviving(&all).is_err());
+    }
+
+    #[test]
+    fn to_toml_with_retry_roundtrips_the_policy() {
+        use crate::cluster::RetryPolicy;
+        let spec = spec3();
+        // a non-default policy, including a seed with the high bit set
+        let policy = RetryPolicy {
+            attempts: 7,
+            base_ms: 125,
+            cap_ms: 9_000,
+            op_deadline_ms: 1_234,
+            probe_secs: 11,
+            seed: 0xD00D_F00D_0000_0001,
+        };
+        let toml = spec.to_toml_with_retry(&policy);
+        let doc = Document::parse(&toml).unwrap();
+        assert_eq!(ClusterSpec::from_document(&doc).unwrap(), spec);
+        assert_eq!(RetryPolicy::from_document(&doc), policy);
+        // the plain form keeps parsing to the default policy
+        let doc = Document::parse(&spec.to_toml()).unwrap();
+        assert_eq!(RetryPolicy::from_document(&doc), RetryPolicy::default());
     }
 
     #[test]

@@ -114,6 +114,13 @@ pub mod tag {
     /// membership stamp (name + slice count — membership excluded so
     /// cross-epoch rebalance installs are not refused).
     pub const CLUSTER_SPEC: u16 = 19;
+    /// [`crate::sampler::wr_reservoir::WrReservoir`] — streaming
+    /// with-replacement reservoir (exponential-jump slots + RNG state,
+    /// nested CountSketch).
+    pub const WR_RESERVOIR: u16 = 20;
+    /// [`crate::sampler::decayed::DecayedWorp`] — exact bottom-k over
+    /// time-decayed frequencies (per-key lazy-carry entries + clock).
+    pub const DECAYED_WORP: u16 = 21;
 }
 
 /// Human-readable name of a type tag (for diagnostics).
@@ -138,6 +145,8 @@ pub fn tag_name(t: u16) -> &'static str {
         tag::ENGINE_SNAPSHOT_SLICED => "engine-snapshot-sliced",
         tag::SLICE_SNAPSHOT => "slice-snapshot",
         tag::CLUSTER_SPEC => "cluster-spec",
+        tag::WR_RESERVOIR => "wr",
+        tag::DECAYED_WORP => "decayed",
         _ => "unknown",
     }
 }
@@ -472,6 +481,29 @@ pub fn read_sample(r: &mut wire::Reader<'_>) -> Result<crate::sampler::Sample> {
     Ok(crate::sampler::Sample { entries, tau, p, dist, names })
 }
 
+/// Append a [`SimilarityReport`](crate::estimate::similarity::SimilarityReport)
+/// (the WRPC `SIMILARITY` ok-response payload): four `f64`s in field
+/// order.
+pub fn put_similarity(out: &mut Vec<u8>, r: &crate::estimate::similarity::SimilarityReport) {
+    wire::put_f64(out, r.min_sum);
+    wire::put_f64(out, r.max_sum);
+    wire::put_f64(out, r.jaccard);
+    wire::put_f64(out, r.overlap);
+}
+
+/// Decode a similarity report written by [`put_similarity`] (finite
+/// fields only — every one flows into accuracy-gate arithmetic).
+pub fn read_similarity(
+    r: &mut wire::Reader<'_>,
+) -> Result<crate::estimate::similarity::SimilarityReport> {
+    Ok(crate::estimate::similarity::SimilarityReport {
+        min_sum: r.finite_f64("similarity min_sum")?,
+        max_sum: r.finite_f64("similarity max_sum")?,
+        jaccard: r.finite_f64("similarity jaccard")?,
+        overlap: r.finite_f64("similarity overlap")?,
+    })
+}
+
 /// Validate a decoded power `p ∈ (0, 2]` — the single source of truth
 /// for every decoder (the transform constructor asserts this range, so
 /// an unchecked hostile `p` would panic one call after decode).
@@ -527,6 +559,10 @@ pub fn decode_sampler(bytes: &[u8]) -> Result<Box<dyn WorSampler>> {
         tag::TV => Box::new(crate::sampler::tv1pass::TvSampler::decode(bytes)?),
         tag::WINDOWED_WORP => Box::new(crate::sampler::windowed::WindowedWorp::decode(bytes)?),
         tag::EXACT_WOR => Box::new(crate::sampler::exact::ExactWor::decode(bytes)?),
+        tag::WR_RESERVOIR => {
+            Box::new(crate::sampler::wr_reservoir::WrReservoir::decode(bytes)?)
+        }
+        tag::DECAYED_WORP => Box::new(crate::sampler::decayed::DecayedWorp::decode(bytes)?),
         t => {
             return Err(Error::Codec(format!(
                 "type tag {t} ({}) is not a WOR sampler",

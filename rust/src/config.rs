@@ -235,7 +235,8 @@ pub struct PipelineConfig {
     pub k: usize,
     /// rHH moment `q ∈ {1, 2}` (2 = CountSketch, 1 = CountMin/counters).
     pub q: f64,
-    /// Sampling method: "1pass", "2pass", "tv", "windowed" or "exact".
+    /// Sampling method: "1pass", "2pass", "tv", "windowed", "exact",
+    /// "wr" (streaming with-replacement reservoir) or "decayed".
     pub method: String,
     /// Bottom-k randomization: "ppswor" (Exp[1]) or "priority" (U[0,1]).
     pub dist: String,
@@ -246,6 +247,12 @@ pub struct PipelineConfig {
     pub window: u64,
     /// Sub-sketch buckets covering the window.
     pub buckets: usize,
+    /// Time-decay family for `method = "decayed"`: "exp" or "poly"
+    /// ("" = no decay configured).
+    pub decay: String,
+    /// Decay rate (λ per tick for "exp", exponent β for "poly"); must be
+    /// a positive finite number when `decay` is set.
+    pub decay_rate: f64,
     /// Shared randomization seed (defines `r_x` and sketch hashes).
     pub seed: u64,
     /// Number of shard workers.
@@ -302,6 +309,8 @@ impl Default for PipelineConfig {
             eps: 1.0 / 3.0,
             window: 0,
             buckets: 10,
+            decay: String::new(),
+            decay_rate: 0.0,
             seed: 42,
             workers: 4,
             batch: 4096,
@@ -346,6 +355,8 @@ impl PipelineConfig {
             eps: doc.f64_or("sampler", "eps", d.eps),
             window: doc.i64_or("sampler", "window", d.window as i64).max(0) as u64,
             buckets: doc.usize_or("sampler", "buckets", d.buckets),
+            decay: doc.str_or("sampler", "decay", &d.decay),
+            decay_rate: doc.f64_or("sampler", "decay_rate", d.decay_rate),
             seed: doc.i64_or("sampler", "seed", d.seed as i64) as u64,
             workers: doc.usize_or("pipeline", "workers", d.workers),
             batch: doc.usize_or("pipeline", "batch", d.batch),
@@ -421,7 +432,16 @@ impl PipelineConfig {
                 "checkpoint_every must be positive when checkpoint_dir is set".into(),
             ));
         }
-        crate::api::builder::Method::parse(&self.method)?;
+        let method = crate::api::builder::Method::parse(&self.method)?;
+        if !self.decay.is_empty() {
+            crate::transform::DecaySpec::parse(&self.decay, self.decay_rate)?;
+        } else if method == crate::api::builder::Method::Decayed {
+            return Err(Error::Config(
+                "method = \"decayed\" requires sampler.decay (\"exp\"|\"poly\") and a \
+                 positive sampler.decay_rate"
+                    .into(),
+            ));
+        }
         match self.dist.as_str() {
             "ppswor" | "priority" => {}
             d => {
@@ -524,6 +544,34 @@ stream_len = 50000
         // defaults preserved
         assert_eq!(cfg.batch, PipelineConfig::default().batch);
         assert_eq!(cfg.eps, PipelineConfig::default().eps);
+    }
+
+    #[test]
+    fn decay_keys_parse_and_validate() {
+        let doc = Document::parse(
+            "[sampler]\nmethod = \"decayed\"\ndecay = \"exp\"\ndecay_rate = 0.01\n",
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.decay, "exp");
+        assert_eq!(cfg.decay_rate, 0.01);
+        // decayed without a decay spec is rejected loudly
+        let mut c = PipelineConfig::default();
+        c.method = "decayed".into();
+        assert!(c.validate().is_err());
+        // bad family / rate are rejected
+        let mut c = PipelineConfig::default();
+        c.decay = "linear".into();
+        c.decay_rate = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = PipelineConfig::default();
+        c.decay = "poly".into();
+        c.decay_rate = 0.0;
+        assert!(c.validate().is_err());
+        // the wr method needs no extra keys
+        let mut c = PipelineConfig::default();
+        c.method = "wr".into();
+        assert!(c.validate().is_ok());
     }
 
     #[test]

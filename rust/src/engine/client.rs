@@ -296,6 +296,22 @@ impl Client {
         Ok(x)
     }
 
+    /// Similarity report over two coordinated instances' samples
+    /// (weighted Jaccard / min-max sums / key overlap).
+    pub fn similarity(
+        &mut self,
+        a: &str,
+        b: &str,
+    ) -> Result<crate::estimate::similarity::SimilarityReport> {
+        let mut p = name_payload(a);
+        codec::put_str(&mut p, b);
+        let resp = self.call(op::SIMILARITY, &p)?;
+        let mut r = wire::Reader::new(&resp);
+        let report = codec::read_similarity(&mut r)?;
+        r.finish("similarity response")?;
+        Ok(report)
+    }
+
     /// Rank-frequency curve estimate (`max_points` 0 = all).
     pub fn rank_frequency(&mut self, name: &str, max_points: u64) -> Result<Vec<RankFreqPoint>> {
         let mut p = name_payload(name);

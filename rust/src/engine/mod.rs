@@ -1003,6 +1003,11 @@ pub struct Engine {
     /// engine that owns every slice of every instance.
     ownership: Option<Ownership>,
     instances: RwLock<BTreeMap<String, Arc<Instance>>>,
+    /// Randomization seed each instance was *created* with — what
+    /// coordinated creation (`InstanceSpec.coordinate`) resolves against.
+    /// Instances registered from snapshot bytes are absent (their seed is
+    /// inside the sampler state, not the registry).
+    seeds: Mutex<BTreeMap<String, u64>>,
 }
 
 impl Default for Engine {
@@ -1016,7 +1021,12 @@ impl Engine {
     /// clamped to 1 — prefer the validating [`EngineOpts::new`]).
     pub fn new(opts: EngineOpts) -> Engine {
         let opts = EngineOpts { shards: opts.shards.max(1), batch: opts.batch.max(1) };
-        Engine { opts, ownership: None, instances: RwLock::new(BTreeMap::new()) }
+        Engine {
+            opts,
+            ownership: None,
+            instances: RwLock::new(BTreeMap::new()),
+            seeds: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// A cluster-member engine: every instance it creates runs its
@@ -1056,6 +1066,7 @@ impl Engine {
                 stamp,
             }),
             instances: RwLock::new(BTreeMap::new()),
+            seeds: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -1093,9 +1104,33 @@ impl Engine {
     }
 
     /// Create a named instance from a [`Worp`] spec. Fails if the name is
-    /// taken or invalid.
+    /// taken or invalid. The spec's seed is recorded so a later creation
+    /// can coordinate with this instance ([`Engine::seed_of`]).
     pub fn create(&self, name: &str, spec: &Worp) -> Result<()> {
-        self.create_from_proto(name, spec.build()?)
+        self.create_from_proto(name, spec.build()?)?;
+        self.seeds_mut()?.insert(name.to_string(), spec.seed_value());
+        Ok(())
+    }
+
+    fn seeds_mut(&self) -> Result<std::sync::MutexGuard<'_, BTreeMap<String, u64>>> {
+        self.seeds
+            .lock()
+            .map_err(|_| Error::Pipeline("engine seed registry poisoned".into()))
+    }
+
+    /// The randomization seed `name` was created with — what a
+    /// coordinated `CREATE` resolves its `coordinate` reference to.
+    /// Errors for unknown names, and for instances registered from
+    /// snapshot bytes (restore carries sampler state, not a builder; the
+    /// peer to coordinate with must have been created on this engine).
+    pub fn seed_of(&self, name: &str) -> Result<u64> {
+        self.instance(name)?; // surface "no such instance" first
+        self.seeds_mut()?.get(name).copied().ok_or_else(|| {
+            Error::State(format!(
+                "instance {name:?} was restored from a snapshot, so its creation seed is \
+                 unknown — coordinate with an instance created on this engine"
+            ))
+        })
     }
 
     /// Create a named instance from an already-built sampler prototype
@@ -1130,7 +1165,9 @@ impl Engine {
         self.registry_mut()?
             .remove(name)
             .map(|_| ())
-            .ok_or_else(|| Error::Config(format!("no such instance {name:?}")))
+            .ok_or_else(|| Error::Config(format!("no such instance {name:?}")))?;
+        self.seeds_mut()?.remove(name);
+        Ok(())
     }
 
     /// Stats for every instance, name-sorted.
@@ -1197,6 +1234,33 @@ impl Engine {
     /// sample (paper Eq. 2 / Table 3).
     pub fn moment(&self, name: &str, p_prime: f64) -> Result<f64> {
         Ok(moment_estimate(&self.sample(name)?, p_prime))
+    }
+
+    /// Similarity report over two instances' current samples (weighted
+    /// Jaccard, min/max sums, key overlap — the `SIMILARITY` query).
+    /// When both creation seeds are known they must match: similarity
+    /// estimators are only rigorous over *coordinated* samples, and
+    /// silently comparing uncoordinated ones would report near-zero
+    /// overlap as if it were a property of the data.
+    pub fn similarity(
+        &self,
+        a: &str,
+        b: &str,
+    ) -> Result<crate::estimate::similarity::SimilarityReport> {
+        let sa = self.sample(a)?;
+        let sb = self.sample(b)?;
+        {
+            let seeds = self.seeds_mut()?;
+            if let (Some(&x), Some(&y)) = (seeds.get(a), seeds.get(b)) {
+                if x != y {
+                    return Err(Error::Incompatible(format!(
+                        "instances {a:?} and {b:?} were created with different seeds \
+                         ({x} vs {y}) — create one with coordinate = the other's name"
+                    )));
+                }
+            }
+        }
+        crate::estimate::similarity::report(&sa, &sb)
     }
 
     /// Estimate the sum statistic `Σ_x f(ν_x)·L(x)` from the current

@@ -59,6 +59,7 @@
 //! | `SLICE_SNAPSHOT` | name, slice `u64` | slice envelope (length-prefixed) |
 //! | `SLICE_INSTALL` | stamp `u64`, slice envelope (length-prefixed) | name, owned `u64` |
 //! | `SLICE_DROP` | name, slice `u64` | remaining `u64` |
+//! | `SIMILARITY` | name a, name b | [`codec::put_similarity`] report |
 //!
 //! Strings are `u64` length + UTF-8 bytes ([`codec::put_str`]); names
 //! obey [`crate::engine::validate_name`]. `python/worp_client.py` speaks
@@ -136,6 +137,9 @@ pub mod op {
     pub const SLICE_INSTALL: u16 = 17;
     /// Release an owned slice after its new owner confirmed (rebalance).
     pub const SLICE_DROP: u16 = 18;
+    /// Sketch-space similarity of two coordinated instances' samples
+    /// (weighted Jaccard / overlap — the coordinated-sampling query).
+    pub const SIMILARITY: u16 = 19;
 }
 
 /// Response opcode for a failed request (any opcode).
@@ -413,6 +417,14 @@ pub struct InstanceSpec {
     pub window: u64,
     /// Window sub-sketch buckets.
     pub buckets: usize,
+    /// Time-decay family for `method = "decayed"` ("" = none).
+    pub decay: String,
+    /// Decay rate (λ / β), meaningful when `decay` is set.
+    pub decay_rate: f64,
+    /// Coordinate with the named existing instance: the server resolves
+    /// that instance's seed and creates this one sharing it, so the two
+    /// draw coordinated samples ("" = independent seed).
+    pub coordinate: String,
 }
 
 impl InstanceSpec {
@@ -432,6 +444,9 @@ impl InstanceSpec {
             width: cfg.width,
             window: cfg.window,
             buckets: cfg.buckets,
+            decay: cfg.decay.clone(),
+            decay_rate: cfg.decay_rate,
+            coordinate: String::new(),
         }
     }
 
@@ -454,6 +469,8 @@ impl InstanceSpec {
         cfg.width = self.width;
         cfg.window = self.window;
         cfg.buckets = self.buckets;
+        cfg.decay = self.decay.clone();
+        cfg.decay_rate = self.decay_rate;
         Worp::from_config(&cfg)
     }
 
@@ -472,6 +489,11 @@ impl InstanceSpec {
         wire::put_usize(out, self.width);
         wire::put_u64(out, self.window);
         wire::put_usize(out, self.buckets);
+        // optional tail (older decoders stopped at `buckets`; older
+        // encoders simply omit it and decode fills the defaults)
+        codec::put_str(out, &self.decay);
+        wire::put_f64(out, self.decay_rate);
+        codec::put_str(out, &self.coordinate);
     }
 
     /// Read the wire form (sizes capped at 2^32 so absurd values cannot
@@ -498,6 +520,13 @@ impl InstanceSpec {
                 return Err(Error::Codec(format!("spec {what} exceeds the 2^32 cap: {v}")));
             }
         }
+        // optional tail appended by newer encoders (decay + coordination);
+        // a pre-decay CREATE payload ends exactly at `buckets`
+        let (decay, decay_rate, coordinate) = if r.remaining() > 0 {
+            (codec::read_str(r)?, r.f64()?, codec::read_str(r)?)
+        } else {
+            (String::new(), 0.0, String::new())
+        };
         Ok(InstanceSpec {
             method,
             dist,
@@ -512,6 +541,9 @@ impl InstanceSpec {
             width: width as usize,
             window,
             buckets: buckets as usize,
+            decay,
+            decay_rate,
+            coordinate,
         })
     }
 }
@@ -798,6 +830,43 @@ mod tests {
         bad.method = "1pass".into();
         bad.p = 9.0;
         assert!(bad.to_worp().is_err());
+    }
+
+    #[test]
+    fn spec_decodes_pre_decay_payloads_with_defaults() {
+        // a CREATE payload from an encoder that predates the decay /
+        // coordinate tail ends exactly at `buckets` — it must decode
+        // with the tail defaulted, not error
+        let spec = InstanceSpec::from_config(&PipelineConfig::default());
+        let mut buf = Vec::new();
+        codec::put_str(&mut buf, &spec.method);
+        codec::put_str(&mut buf, &spec.dist);
+        wire::put_f64(&mut buf, spec.p);
+        wire::put_usize(&mut buf, spec.k);
+        wire::put_f64(&mut buf, spec.q);
+        wire::put_u64(&mut buf, spec.seed);
+        wire::put_usize(&mut buf, spec.n);
+        wire::put_f64(&mut buf, spec.delta);
+        wire::put_f64(&mut buf, spec.eps);
+        wire::put_usize(&mut buf, spec.rows);
+        wire::put_usize(&mut buf, spec.width);
+        wire::put_u64(&mut buf, spec.window);
+        wire::put_usize(&mut buf, spec.buckets);
+        let mut r = wire::Reader::new(&buf);
+        let back = InstanceSpec::decode(&mut r).unwrap();
+        r.finish("old spec").unwrap();
+        assert_eq!(back, spec);
+        assert!(back.decay.is_empty() && back.coordinate.is_empty());
+        // and a new-layout payload round-trips the tail
+        let mut full = spec.clone();
+        full.decay = "exp".into();
+        full.decay_rate = 0.25;
+        full.coordinate = "ns/base".into();
+        let mut buf = Vec::new();
+        full.encode(&mut buf);
+        let mut r = wire::Reader::new(&buf);
+        assert_eq!(InstanceSpec::decode(&mut r).unwrap(), full);
+        r.finish("new spec").unwrap();
     }
 
     #[test]

@@ -648,8 +648,13 @@ fn handle_request(shared: &Shared, frame: &Frame) -> Result<Vec<u8>> {
         }
         op::CREATE => {
             let name = codec::read_str(&mut r)?;
-            let spec = InstanceSpec::decode(&mut r)?;
+            let mut spec = InstanceSpec::decode(&mut r)?;
             r.finish("create request")?;
+            if !spec.coordinate.is_empty() {
+                // shared-seed (coordinated) creation: inherit the seed the
+                // referenced instance was created with
+                spec.seed = engine.seed_of(&spec.coordinate)?;
+            }
             engine.create(&name, &spec.to_worp()?)?;
         }
         op::DROP => {
@@ -775,6 +780,14 @@ fn handle_request(shared: &Shared, frame: &Frame) -> Result<Vec<u8>> {
             let slice = read_slice_index(&mut r)?;
             r.finish("slice-drop request")?;
             wire::put_u64(&mut out, engine.drop_slice(&name, slice)?);
+        }
+        op::SIMILARITY => {
+            let a = codec::read_str(&mut r)?;
+            let b = codec::read_str(&mut r)?;
+            r.finish("similarity request")?;
+            codec::put_similarity(&mut out, &engine.similarity(&a, &b)?);
+            metrics.note_merge();
+            metrics.note_merge(); // one merge fold per queried instance
         }
         other => {
             return Err(Error::Codec(format!(

@@ -12,6 +12,7 @@
 //! which yields rigorous inverse-probability estimators for min-sums over
 //! the intersection, and plug-in ratio estimators for weighted Jaccard.
 
+use crate::error::{Error, Result};
 use crate::sampler::Sample;
 use crate::util::hashing::BottomKDist;
 use std::collections::HashMap;
@@ -28,6 +29,48 @@ fn incl_prob(dist: BottomKDist, ratio_p: f64) -> f64 {
 fn check_pair(a: &Sample, b: &Sample) {
     assert_eq!(a.p, b.p, "coordinated samples need equal p");
     assert_eq!(a.dist, b.dist, "coordinated samples need equal D");
+}
+
+/// The fallible twin of the internal pair check — what served query
+/// paths use, so a mismatched pair is a typed [`Error::Incompatible`]
+/// over the wire rather than a panic in the server.
+pub fn check_compatible(a: &Sample, b: &Sample) -> Result<()> {
+    if a.p != b.p {
+        return Err(Error::Incompatible(format!(
+            "coordinated samples need equal p (got {} and {})",
+            a.p, b.p
+        )));
+    }
+    if a.dist != b.dist {
+        return Err(Error::Incompatible(
+            "coordinated samples need the same bottom-k distribution".into(),
+        ));
+    }
+    Ok(())
+}
+
+/// Every similarity statistic the coordinated estimators produce for one
+/// pair of samples — what the WRPC `SIMILARITY` query returns.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimilarityReport {
+    /// Estimated `Σ_x min(ν_x^{(1)}, ν_x^{(2)})` (see [`min_sum`]).
+    pub min_sum: f64,
+    /// Estimated `Σ_x max(ν_x^{(1)}, ν_x^{(2)})` (see [`max_sum`]).
+    pub max_sum: f64,
+    /// Estimated weighted Jaccard `Σmin / Σmax ∈ [0, 1]`.
+    pub jaccard: f64,
+    /// Key-overlap diagnostic `|S₁ ∩ S₂| / min(|S₁|, |S₂|)`.
+    pub overlap: f64,
+}
+
+/// Compute the full [`SimilarityReport`] for two coordinated samples
+/// (typed error on a mismatched pair, never a panic).
+pub fn report(a: &Sample, b: &Sample) -> Result<SimilarityReport> {
+    check_compatible(a, b)?;
+    let mn = min_sum(a, b);
+    let mx = max_sum(a, b);
+    let jaccard = if mx > 0.0 { (mn / mx).clamp(0.0, 1.0) } else { 0.0 };
+    Ok(SimilarityReport { min_sum: mn, max_sum: mx, jaccard, overlap: key_overlap(a, b) })
 }
 
 /// Unbiased estimate of the min-sum `Σ_x min(ν_x^{(1)}, ν_x^{(2)})` from
@@ -183,6 +226,25 @@ mod tests {
         let a = perfect_ppswor(&f, 1.0, 10, 3);
         let b = perfect_ppswor(&f, 2.0, 10, 3);
         min_sum(&a, &b);
+    }
+
+    #[test]
+    fn report_bundles_the_estimators_and_types_mismatches() {
+        let f = zipf_frequencies(400, 1.2, 1e4);
+        let f2 = perturbed(&f, 0.5, 2);
+        let a = perfect_ppswor(&f, 1.0, 60, 5);
+        let b = perfect_ppswor(&f2, 1.0, 60, 5);
+        let r = report(&a, &b).unwrap();
+        assert_eq!(r.min_sum, min_sum(&a, &b));
+        assert_eq!(r.max_sum, max_sum(&a, &b));
+        assert!((r.jaccard - weighted_jaccard(&a, &b)).abs() < 1e-12);
+        assert_eq!(r.overlap, key_overlap(&a, &b));
+        // mismatched p is a typed error on the fallible path
+        let c = perfect_ppswor(&f, 2.0, 60, 5);
+        assert!(matches!(
+            report(&a, &c),
+            Err(crate::error::Error::Incompatible(_))
+        ));
     }
 
     #[test]

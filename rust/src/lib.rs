@@ -112,6 +112,7 @@ pub mod pipeline;
 pub mod psi;
 pub mod runtime;
 pub mod sampler;
+pub mod scenario;
 pub mod sketch;
 pub mod transform;
 pub mod util;

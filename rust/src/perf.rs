@@ -1,5 +1,5 @@
 //! Machine-readable performance suite — the data source for the perf
-//! trajectory (`BENCH_PR2.json` → `BENCH_PR8.json`).
+//! trajectory (`BENCH_PR2.json` → `BENCH_PR8.json` → `BENCH_PR10.json`).
 //!
 //! One suite, two drivers: the `worp bench` CLI subcommand (smoke mode in
 //! CI — fails on panics, never on numbers) and `cargo bench --bench
@@ -22,6 +22,7 @@ use crate::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
 use crate::sampler::windowed::WindowedWorp;
 use crate::sampler::worp1::OnePassWorp;
 use crate::sampler::worp2::TwoPassWorp;
+use crate::sampler::wr_reservoir::WrReservoir;
 use crate::sampler::SamplerConfig;
 use crate::sketch::countmin::CountMin;
 use crate::sketch::countsketch::CountSketch;
@@ -183,6 +184,12 @@ pub fn run_suite(opts: &PerfOpts) -> Vec<PerfRecord> {
     bench_triple(&mut b, &mut out, "ppswor", &stream, &blocks, opts.batch, {
         let cfg = cfg.clone();
         move || ExactWor::new(cfg.clone())
+    });
+    // "wr": the with-replacement reservoir the scenario gate compares
+    // against — k exponential-jump single-item reservoirs + sketch
+    bench_triple(&mut b, &mut out, "wr", &stream, &blocks, opts.batch, {
+        let cfg = cfg.clone();
+        move || WrReservoir::new(cfg.clone())
     });
     bench_triple(&mut b, &mut out, "windowed", &stream, &blocks, opts.batch, {
         let cfg = cfg.clone();
@@ -431,6 +438,7 @@ mod tests {
             "worp1",
             "worp2-pass1",
             "ppswor",
+            "wr",
             "windowed",
             "tv1pass",
         ];

@@ -1,0 +1,463 @@
+//! `DecayedWorp` — exact bottom-k WOR sampling over *time-decayed*
+//! frequencies, served as a first-class method (the scenario subsystem's
+//! decay workload).
+//!
+//! The decayed frequency of key `x` at query tick `T` is
+//! `ν_x(T) = Σ_i v_i · decay(t_i, T)` over the key's updates, with
+//! `decay` from [`crate::transform::decay::DecaySpec`] (exponential or
+//! polynomial-forward). Because both families satisfy the carry law
+//! `carry(a, b)·carry(b, c) = carry(a, c)`, each key needs only one
+//! `(last_tick, acc)` pair, where `acc` is the decayed sum *as of* the
+//! key's last update — every stored multiplier is in `[0, 1]`, so the
+//! state never overflows regardless of stream length or rate.
+//!
+//! Ticks mirror the windowed sampler's run-chunked clock: the implicit
+//! `process` stamps `now + 1`, and the batch/block paths stamp
+//! `t0 + 1 + i` arithmetically — so served runs (any batch slicing) are
+//! bit-identical to offline runs, which `tests/scenario_contract.rs`
+//! locks in. [`DecayedWorp::process_at`] is the explicit-tick surface.
+//!
+//! Sampling is the exact bottom-k transform over the decayed
+//! frequencies (same hash-defined randomization as [`super::exact`],
+//! so equal seeds give coordinated decayed samples). Like every
+//! clock-driven sampler, `parallel_safe()` is `false`.
+
+use super::{Sample, SampleEntry, SamplerConfig};
+use crate::api::{self, config_fingerprint, Fingerprint};
+use crate::data::Element;
+use crate::error::{Error, Result};
+use crate::transform::decay::{DecayKind, DecaySpec};
+use crate::transform::BottomKTransform;
+use std::collections::HashMap;
+
+/// Exact streaming WOR sampler over exponentially / polynomially decayed
+/// frequencies (linear memory in live distinct keys).
+#[derive(Clone, Debug)]
+pub struct DecayedWorp {
+    cfg: SamplerConfig,
+    decay: DecaySpec,
+    transform: BottomKTransform,
+    /// key → (tick of last update, decayed sum as of that tick).
+    entries: HashMap<u64, (u64, f64)>,
+    now: u64,
+    processed: u64,
+}
+
+impl DecayedWorp {
+    /// Build from a sampler config plus a decay spec (only `p`, `k`,
+    /// `seed`, `dist` of the config matter; sketch parameters are
+    /// ignored).
+    pub fn new(cfg: SamplerConfig, decay: DecaySpec) -> Self {
+        let transform = cfg.transform();
+        DecayedWorp {
+            cfg,
+            decay,
+            transform,
+            entries: HashMap::new(),
+            now: 0,
+            processed: 0,
+        }
+    }
+
+    /// Sampler configuration.
+    pub fn config(&self) -> &SamplerConfig {
+        &self.cfg
+    }
+
+    /// The decay specification.
+    pub fn decay(&self) -> DecaySpec {
+        self.decay
+    }
+
+    /// Current tick.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Number of distinct keys currently tracked.
+    pub fn distinct_keys(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Process one element at explicit tick `t` (the clock never runs
+    /// backwards: `now` is the max tick seen).
+    #[inline]
+    pub fn process_at(&mut self, e: &Element, t: u64) {
+        self.touch(e.key, e.val, t);
+        if t > self.now {
+            self.now = t;
+        }
+        self.processed += 1;
+    }
+
+    #[inline]
+    fn touch(&mut self, key: u64, val: f64, t: u64) {
+        let slot = self.entries.entry(key).or_insert((t, 0.0));
+        if t >= slot.0 {
+            // bring the stored sum forward, then add this update
+            slot.1 = slot.1 * self.decay.carry(slot.0, t) + val;
+            slot.0 = t;
+        } else {
+            // out-of-order tick: decay the *contribution* forward to the
+            // stored coordinate instead (exact, and never > 1 factors)
+            slot.1 += val * self.decay.carry(t, slot.0);
+        }
+    }
+
+    /// Decayed frequency of one key at the current tick (0 if untracked).
+    pub fn decayed_freq(&self, key: u64) -> f64 {
+        match self.entries.get(&key) {
+            Some(&(last, acc)) => acc * self.decay.carry(last, self.now),
+            None => 0.0,
+        }
+    }
+
+    /// Elements processed.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Merge a sibling summary: clocks take the max, and each key's two
+    /// decayed sums are aligned to the later of the two last-update
+    /// ticks before adding (addition of f64 is commutative, so merge
+    /// order cannot change the bits of a two-way combine).
+    pub fn merge(&mut self, other: &Self) -> Result<()> {
+        for (&key, &(lo, vo)) in &other.entries {
+            match self.entries.get_mut(&key) {
+                None => {
+                    self.entries.insert(key, (lo, vo));
+                }
+                Some(slot) => {
+                    let m = slot.0.max(lo);
+                    let mine = slot.1 * self.decay.carry(slot.0, m);
+                    let theirs = vo * self.decay.carry(lo, m);
+                    *slot = (m, mine + theirs);
+                }
+            }
+        }
+        self.entries.retain(|_, &mut (_, v)| v != 0.0);
+        self.now = self.now.max(other.now);
+        self.processed += other.processed;
+        Ok(())
+    }
+
+    /// The exact bottom-k sample of the decayed frequencies at the
+    /// current tick.
+    pub fn sample(&self) -> Sample {
+        let t = &self.transform;
+        let mut scored: Vec<SampleEntry> = self
+            .entries
+            .iter()
+            .map(|(&key, &(last, acc))| {
+                let freq = acc * self.decay.carry(last, self.now);
+                SampleEntry { key, freq, transformed: freq * t.scale(key) }
+            })
+            .filter(|e| e.freq.abs() > 1e-12)
+            .collect();
+        scored.sort_by(|a, b| {
+            b.transformed
+                .abs()
+                .total_cmp(&a.transformed.abs())
+                .then_with(|| a.key.cmp(&b.key))
+        });
+        let k = self.cfg.k;
+        let tau = if scored.len() > k {
+            scored[k].transformed.abs()
+        } else {
+            0.0
+        };
+        scored.truncate(k);
+        Sample { entries: scored, tau, p: self.cfg.p, dist: t.dist(), names: None }
+    }
+}
+
+impl api::StreamSummary for DecayedWorp {
+    /// Implicit clock: each element advances the tick by one (the same
+    /// run-chunked convention as the windowed sampler).
+    fn process(&mut self, e: &Element) {
+        let t = self.now + 1;
+        self.process_at(e, t);
+    }
+
+    /// Micro-batch path: ticks are stamped arithmetically (`t0 + 1 + i`),
+    /// exactly what the scalar loop would have produced.
+    fn process_batch(&mut self, batch: &[Element]) {
+        let t0 = self.now;
+        self.entries.reserve(batch.len().min(4096));
+        for (i, e) in batch.iter().enumerate() {
+            self.touch(e.key, e.val, t0 + 1 + i as u64);
+        }
+        self.now = t0 + batch.len() as u64;
+        self.processed += batch.len() as u64;
+    }
+
+    /// SoA block path: same arithmetic ticks off the dense columns.
+    fn process_block(&mut self, block: &crate::data::ElementBlock) {
+        let t0 = self.now;
+        self.entries.reserve(block.len().min(4096));
+        for (i, (&k, &v)) in block.keys.iter().zip(&block.vals).enumerate() {
+            self.touch(k, v, t0 + 1 + i as u64);
+        }
+        self.now = t0 + block.len() as u64;
+        self.processed += block.len() as u64;
+    }
+
+    fn size_words(&self) -> usize {
+        3 * self.entries.len() + 4
+    }
+
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+impl api::Mergeable for DecayedWorp {
+    fn fingerprint(&self) -> Fingerprint {
+        config_fingerprint("decayed", &self.cfg)
+            .with(self.decay.kind().to_byte() as u64)
+            .with_f64(self.decay.rate())
+    }
+
+    fn merge_unchecked(&mut self, other: &Self) -> Result<()> {
+        DecayedWorp::merge(self, other)
+    }
+}
+
+impl api::Finalize for DecayedWorp {
+    type Output = Sample;
+
+    fn finalize(&self) -> Sample {
+        self.sample()
+    }
+}
+
+impl api::MultiPass for DecayedWorp {}
+
+impl api::WorSampler for DecayedWorp {
+    fn sample(&self) -> Result<Sample> {
+        Ok(DecayedWorp::sample(self))
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        api::Mergeable::fingerprint(self)
+    }
+
+    fn merge_dyn(&mut self, other: &dyn api::WorSampler) -> Result<()> {
+        match other.as_any().downcast_ref::<Self>() {
+            Some(o) => api::Mergeable::merge(self, o),
+            None => Err(Error::Incompatible(format!(
+                "cannot merge decayed sampler with {}",
+                other.name()
+            ))),
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn api::WorSampler> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn name(&self) -> &'static str {
+        "decayed"
+    }
+
+    fn encode_state(&self, out: &mut Vec<u8>) {
+        crate::api::Persist::encode_into(self, out)
+    }
+
+    /// The implicit per-element clock must tick over the whole stream in
+    /// order — sharding would skew per-shard clocks (the windowed rule).
+    fn parallel_safe(&self) -> bool {
+        false
+    }
+}
+
+/// Wire payload (canonical — entries sorted by key): the shared
+/// [`SamplerConfig`] fragment, `kind u8, rate f64, now u64,
+/// processed u64, n u64, n × (key u64, last_tick u64, acc f64)`.
+impl crate::api::Persist for DecayedWorp {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut p = Vec::with_capacity(104 + 24 * self.entries.len());
+        crate::codec::put_sampler_config(&mut p, &self.cfg);
+        crate::codec::wire::put_u8(&mut p, self.decay.kind().to_byte());
+        crate::codec::wire::put_f64(&mut p, self.decay.rate());
+        crate::codec::wire::put_u64(&mut p, self.now);
+        crate::codec::wire::put_u64(&mut p, self.processed);
+        let mut keys: Vec<u64> = self.entries.keys().copied().collect();
+        keys.sort_unstable();
+        crate::codec::wire::put_usize(&mut p, keys.len());
+        for k in keys {
+            let (last, acc) = self.entries[&k];
+            crate::codec::wire::put_u64(&mut p, k);
+            crate::codec::wire::put_u64(&mut p, last);
+            crate::codec::wire::put_f64(&mut p, acc);
+        }
+        crate::codec::write_envelope(
+            crate::codec::tag::DECAYED_WORP,
+            crate::api::Mergeable::fingerprint(self).value(),
+            &p,
+            out,
+        );
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        let env = crate::codec::read_envelope(bytes, Some(crate::codec::tag::DECAYED_WORP))?;
+        let mut r = crate::codec::wire::Reader::new(env.payload);
+        let cfg = crate::codec::read_sampler_config(&mut r)?;
+        let kind = DecayKind::from_byte(r.u8()?)?;
+        let rate = r.finite_f64("decay rate")?;
+        let decay = match kind {
+            DecayKind::Exponential => DecaySpec::exponential(rate),
+            DecayKind::Polynomial => DecaySpec::polynomial(rate),
+        }
+        .map_err(|e| crate::error::Error::Codec(format!("decayed sampler: {e}")))?;
+        let now = r.u64()?;
+        let processed = r.u64()?;
+        let n = r.seq_len(24)?;
+        let mut entries = HashMap::with_capacity(n);
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let key = r.u64()?;
+            if prev.is_some_and(|p| p >= key) {
+                return Err(Error::Codec(
+                    "DecayedWorp entries are not sorted by strictly increasing key".into(),
+                ));
+            }
+            prev = Some(key);
+            let last = r.u64()?;
+            if last > now {
+                return Err(Error::Codec(format!(
+                    "DecayedWorp entry tick {last} is ahead of the clock {now}"
+                )));
+            }
+            entries.insert(key, (last, r.finite_f64("DecayedWorp decayed sum")?));
+        }
+        r.finish("decayed")?;
+        let transform = cfg.transform();
+        let s = DecayedWorp { cfg, decay, transform, entries, now, processed };
+        crate::codec::check_fingerprint(
+            env.fingerprint,
+            crate::api::Mergeable::fingerprint(&s).value(),
+        )?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Persist, StreamSummary};
+
+    fn spec() -> DecaySpec {
+        DecaySpec::exponential(0.01).unwrap()
+    }
+
+    fn cfg(k: usize) -> SamplerConfig {
+        SamplerConfig::new(1.0, k).with_seed(5)
+    }
+
+    #[test]
+    fn decayed_freq_matches_closed_form() {
+        let mut s = DecayedWorp::new(cfg(4), spec());
+        s.process_at(&Element::new(1, 10.0), 1);
+        s.process_at(&Element::new(1, 5.0), 11);
+        s.process_at(&Element::new(2, 1.0), 21);
+        let d = spec();
+        let want = 10.0 * d.weight(1, 21) + 5.0 * d.weight(11, 21);
+        assert!((s.decayed_freq(1) - want).abs() < 1e-12 * want);
+        assert_eq!(s.decayed_freq(2), 1.0);
+        assert_eq!(s.decayed_freq(99), 0.0);
+    }
+
+    #[test]
+    fn batch_and_block_tick_like_the_scalar_loop() {
+        let elems: Vec<Element> = (0..257u64)
+            .map(|i| Element::new(i % 19, 1.0 + (i % 3) as f64))
+            .collect();
+        let mut scalar = DecayedWorp::new(cfg(8), spec());
+        for e in &elems {
+            StreamSummary::process(&mut scalar, e);
+        }
+        let mut batched = DecayedWorp::new(cfg(8), spec());
+        for chunk in elems.chunks(64) {
+            batched.process_batch(chunk);
+        }
+        let mut blocked = DecayedWorp::new(cfg(8), spec());
+        for chunk in elems.chunks(50) {
+            blocked.process_block(&crate::data::ElementBlock::from_elements(chunk));
+        }
+        assert_eq!(scalar.encode(), batched.encode());
+        assert_eq!(scalar.encode(), blocked.encode());
+    }
+
+    #[test]
+    fn recent_keys_dominate_the_sample() {
+        // era shift: keys 0..10 hot early, keys 100..110 hot late, with a
+        // strong decay rate — the sample must be the late era
+        let mut s = DecayedWorp::new(cfg(10), DecaySpec::exponential(0.05).unwrap());
+        for round in 0..200u64 {
+            for k in 0..10u64 {
+                StreamSummary::process(&mut s, &Element::new(k, 1.0));
+            }
+            let _ = round;
+        }
+        for _ in 0..200u64 {
+            for k in 100..110u64 {
+                StreamSummary::process(&mut s, &Element::new(k, 1.0));
+            }
+        }
+        let sample = s.sample();
+        assert!(!sample.is_empty());
+        for key in sample.keys() {
+            assert!(key >= 100, "stale key {key} survived the decay");
+        }
+    }
+
+    #[test]
+    fn merge_aligns_clocks_and_matches_closed_form() {
+        let d = spec();
+        let mut a = DecayedWorp::new(cfg(4), d);
+        let mut b = DecayedWorp::new(cfg(4), d);
+        a.process_at(&Element::new(1, 4.0), 10);
+        b.process_at(&Element::new(1, 2.0), 30);
+        b.process_at(&Element::new(2, 1.0), 5);
+        a.merge(&b).unwrap();
+        assert_eq!(a.now(), 30);
+        let want1 = 4.0 * d.weight(10, 30) + 2.0;
+        assert!((a.decayed_freq(1) - want1).abs() < 1e-12 * want1);
+        let want2 = 1.0 * d.weight(5, 30);
+        assert!((a.decayed_freq(2) - want2).abs() < 1e-12 * want2);
+    }
+
+    #[test]
+    fn persist_roundtrip_is_canonical() {
+        let mut s = DecayedWorp::new(cfg(6), DecaySpec::polynomial(1.25).unwrap());
+        for i in 0..300u64 {
+            StreamSummary::process(&mut s, &Element::new(i % 41, (i % 7) as f64 - 2.0));
+        }
+        let buf = s.encode();
+        let back = DecayedWorp::decode(&buf).unwrap();
+        assert_eq!(back.encode(), buf);
+        assert_eq!(back.now(), s.now());
+        for cut in 0..buf.len() {
+            assert!(DecayedWorp::decode(&buf[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn same_seed_decayed_samplers_are_coordinated() {
+        // equal seeds => identical hash randomization => identical key
+        // sets when fed the same stream
+        let mut a = DecayedWorp::new(cfg(5), spec());
+        let mut b = DecayedWorp::new(cfg(5), spec());
+        for i in 0..500u64 {
+            let e = Element::new(i % 67, 1.0);
+            StreamSummary::process(&mut a, &e);
+            StreamSummary::process(&mut b, &e);
+        }
+        assert_eq!(a.sample().keys(), b.sample().keys());
+    }
+}

@@ -7,6 +7,7 @@
 //! ranking, and the threshold `τ` — everything the inverse-probability
 //! estimators of [`crate::estimate`] need.
 
+pub mod decayed;
 pub mod exact;
 pub mod perfect_lp;
 pub mod ppswor;
@@ -17,6 +18,7 @@ pub mod worp1;
 pub mod worp2;
 pub mod worp_strings;
 pub mod wr;
+pub mod wr_reservoir;
 
 use crate::util::hashing::BottomKDist;
 use std::collections::BTreeMap;

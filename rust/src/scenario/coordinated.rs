@@ -1,0 +1,141 @@
+//! `coordinated` — shared-seed sampling of two drifted daily streams,
+//! with the similarity estimate gated against exact ground truth.
+//!
+//! Workload: day 1 is an aggregated Zipf[1.1] stream; day 2 re-weights
+//! a ~30 % subset of keys (drift). Instance `a` is created normally;
+//! instance `b` is created with `coordinate = a`, so the engine resolves
+//! and shares `a`'s randomization seed — the paper's coordinated-sketch
+//! regime, where bottom-k samples become comparable across streams.
+//!
+//! Gates:
+//! - the weighted-Jaccard estimate off the two coordinated samples must
+//!   land within a declared distance of the exact value;
+//! - coordinated samples of drifted streams must overlap heavily in
+//!   *keys* (that overlap is the whole point of coordination);
+//! - on placements with a seed registry (local / served), querying
+//!   similarity across *uncoordinated* instances must be refused with a
+//!   typed error rather than silently returning near-zero overlap.
+//!
+//! This scenario's sampler (`exact` ppswor) is parallel-safe, so all
+//! three placements — local, served, and the 3-node cluster — run it.
+
+use super::{base_spec, Gate, Host, ScenarioOpts, ScenarioReport};
+use crate::data::zipf::zipf_frequencies;
+use crate::data::Element;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+const KEYS: usize = 4_000;
+const ALPHA: f64 = 1.1;
+const DEFAULT_K: usize = 256;
+const JACCARD_TOL: f64 = 0.12;
+
+/// Day-2 frequencies: drift ~30 % of keys by a random factor in
+/// `[0.25, 1.75]`, leave the rest untouched.
+fn drifted(day1: &[f64], seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xD21F_7ED0);
+    day1.iter()
+        .map(|&f| {
+            if rng.uniform() < 0.3 {
+                f * rng.range_f64(0.25, 1.75)
+            } else {
+                f
+            }
+        })
+        .collect()
+}
+
+fn aggregated(freqs: &[f64]) -> Vec<Element> {
+    freqs.iter().enumerate().map(|(i, &f)| Element::new(i as u64, f)).collect()
+}
+
+/// Run the coordinated-similarity workload; see the module docs.
+pub fn run(opts: &ScenarioOpts) -> Result<ScenarioReport> {
+    let k = opts.k_or(DEFAULT_K);
+    let day1 = zipf_frequencies(KEYS, ALPHA, 1_000.0);
+    let day2 = drifted(&day1, opts.seed);
+    let exact_j = {
+        let (mut mins, mut maxs) = (0.0f64, 0.0f64);
+        for (a, b) in day1.iter().zip(&day2) {
+            mins += a.min(*b);
+            maxs += a.max(*b);
+        }
+        mins / maxs
+    };
+
+    let mut host = Host::start(opts.mode)?;
+    let a = "scenario/day1";
+    let b = "scenario/day2";
+    host.create(a, &base_spec("exact", 1.0, k, opts.seed, KEYS))?;
+    // b inherits a's seed through the coordinate reference — the spec's
+    // own seed is deliberately different so the test proves resolution
+    let mut spec_b = base_spec("exact", 1.0, k, opts.seed.wrapping_add(999), KEYS);
+    spec_b.coordinate = a.to_string();
+    host.create(b, &spec_b)?;
+    host.ingest(a, &aggregated(&day1))?;
+    host.ingest(b, &aggregated(&day2))?;
+    host.flush(a)?;
+    host.flush(b)?;
+
+    let rep = host.similarity(a, b)?;
+    let mut report = ScenarioReport::new("coordinated", opts.mode);
+    report.push(Gate::below(
+        format!("|estimated − exact| weighted Jaccard at k={k}"),
+        (rep.jaccard - exact_j).abs(),
+        JACCARD_TOL,
+    ));
+    report.push(Gate::at_least(
+        "coordinated samples share most keys (overlap)".to_string(),
+        rep.overlap,
+        0.5,
+    ));
+    report.push(Gate::at_least(
+        "min/max sums are ordered and positive".to_string(),
+        if rep.min_sum > 0.0 && rep.max_sum >= rep.min_sum { 1.0 } else { 0.0 },
+        1.0,
+    ));
+
+    if host.tracks_seeds() {
+        // an uncoordinated instance must be refused, not quietly compared
+        let c = "scenario/uncoordinated";
+        host.create(c, &base_spec("exact", 1.0, k, opts.seed.wrapping_add(31_337), KEYS))?;
+        host.ingest(c, &aggregated(&day2))?;
+        host.flush(c)?;
+        let refused = match host.similarity(a, c) {
+            Err(Error::Incompatible(_)) => 1.0,
+            Err(_) | Ok(_) => 0.0,
+        };
+        report.push(Gate::at_least(
+            "similarity across different seeds is refused".to_string(),
+            refused,
+            1.0,
+        ));
+        host.drop_instance(c)?;
+    }
+
+    host.drop_instance(a)?;
+    host.drop_instance(b)?;
+    host.shutdown();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Mode;
+
+    #[test]
+    fn local_run_passes_every_gate() {
+        let report = run(&ScenarioOpts::default()).unwrap();
+        report.check().unwrap();
+        assert_eq!(report.gates.len(), 4, "local mode includes the refusal gate");
+    }
+
+    #[test]
+    fn drift_changes_some_keys_and_spares_others() {
+        let day1 = zipf_frequencies(500, 1.1, 100.0);
+        let day2 = drifted(&day1, 7);
+        let changed = day1.iter().zip(&day2).filter(|(a, b)| a != b).count();
+        assert!(changed > 50 && changed < 450, "drifted {changed}/500");
+    }
+}

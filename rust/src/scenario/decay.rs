@@ -1,0 +1,167 @@
+//! `decay` — served time-decayed sampling over an era-shifted stream.
+//!
+//! Workload: three eras of equal length; each era hammers its own ten
+//! hot keys (`era·100 .. era·100+10`), one unit per element. Under
+//! exponential decay with a rate that damps a whole era to below the
+//! sampler's zero-frequency floor, the final sample must consist of the
+//! last era's keys only.
+//!
+//! Gates:
+//! - **served ≡ offline**: the engine-served sample (batched ingest,
+//!   arbitrary chunk boundaries) is *bit-identical* to an offline
+//!   scalar replay through [`DecayedWorp`] — the run-chunked tick
+//!   contract, end to end;
+//! - **closed form**: a hot key's served frequency matches the direct
+//!   sum `Σ e^{−λ(T−t)}` over its update ticks to ~1e−9 relative — the
+//!   lazy carry accumulates no real error;
+//! - **recency**: every sampled key belongs to the final era.
+
+use super::{base_spec, require_single_node, Gate, Host, ScenarioOpts, ScenarioReport};
+use crate::api::StreamSummary;
+use crate::data::Element;
+use crate::error::Result;
+use crate::sampler::decayed::DecayedWorp;
+use crate::transform::decay::DecaySpec;
+
+const ERAS: u64 = 3;
+const ERA_LEN: u64 = 2_000;
+const HOT: u64 = 10;
+const RATE: f64 = 0.02;
+const DEFAULT_K: usize = 10;
+
+/// The era stream: element `i` of era `e` updates key
+/// `e·100 + (i mod HOT)` by `1.0`.
+fn era_stream() -> Vec<Element> {
+    let mut elems = Vec::with_capacity((ERAS * ERA_LEN) as usize);
+    for era in 0..ERAS {
+        for i in 0..ERA_LEN {
+            elems.push(Element::new(era * 100 + (i % HOT), 1.0));
+        }
+    }
+    elems
+}
+
+/// Direct closed-form decayed frequency of `key` at the end of the
+/// stream (tick `T = |stream|`), from first principles.
+fn closed_form(elems: &[Element], key: u64, rate: f64) -> f64 {
+    let t_final = elems.len() as u64;
+    let mut sum = 0.0;
+    for (i, e) in elems.iter().enumerate() {
+        if e.key == key {
+            let t = i as u64 + 1; // the implicit clock stamps now+1
+            sum += e.val * (-rate * (t_final - t) as f64).exp();
+        }
+    }
+    sum
+}
+
+/// Run the decay workload; see the module docs for the gates.
+pub fn run(opts: &ScenarioOpts) -> Result<ScenarioReport> {
+    require_single_node("decay", opts.mode)?;
+    let k = opts.k_or(DEFAULT_K);
+    let elems = era_stream();
+
+    let mut spec = base_spec("decayed", 1.0, k, opts.seed, (ERAS * 100) as usize);
+    spec.decay = "exp".to_string();
+    spec.decay_rate = RATE;
+
+    let mut host = Host::start(opts.mode)?;
+    let name = "scenario/decay";
+    host.create(name, &spec)?;
+    host.ingest(name, &elems)?;
+    host.flush(name)?;
+    let served = host.sample(name)?;
+    host.drop_instance(name)?;
+    host.shutdown();
+
+    // offline replay: same config through the same builder path, scalar
+    // process loop — the reference the served answer must equal bit-wise
+    let cfg = spec.to_worp()?.sampler_config()?;
+    let mut offline = DecayedWorp::new(cfg, DecaySpec::exponential(RATE)?);
+    for e in &elems {
+        StreamSummary::process(&mut offline, e);
+    }
+    let reference = offline.sample();
+
+    let identical = served.len() == reference.len()
+        && served.tau.to_bits() == reference.tau.to_bits()
+        && served
+            .entries
+            .iter()
+            .zip(&reference.entries)
+            .all(|(a, b)| {
+                a.key == b.key
+                    && a.freq.to_bits() == b.freq.to_bits()
+                    && a.transformed.to_bits() == b.transformed.to_bits()
+            });
+
+    let mut report = ScenarioReport::new("decay", opts.mode);
+    report.push(Gate::at_least(
+        "served sample ≡ offline replay (bit-identical)".to_string(),
+        if identical { 1.0 } else { 0.0 },
+        1.0,
+    ));
+
+    // closed form for one final-era hot key, against the served answer
+    let probe = (ERAS - 1) * 100;
+    let want = closed_form(&elems, probe, RATE);
+    let got = served
+        .entries
+        .iter()
+        .find(|e| e.key == probe)
+        .map(|e| e.freq)
+        .unwrap_or(0.0);
+    report.push(Gate::below(
+        format!("closed-form decayed frequency of key {probe} (rel err)"),
+        (got - want).abs() / want.max(1e-300),
+        1e-9,
+    ));
+
+    // a whole era of decay is below the sampler's zero floor, so only the
+    // final era's keys can appear at all
+    let last_era = (ERAS - 1) * 100..(ERAS - 1) * 100 + HOT;
+    let recent =
+        served.entries.iter().filter(|e| last_era.contains(&e.key)).count() as f64;
+    report.push(Gate::at_least(
+        "fraction of sampled keys from the final era".to_string(),
+        recent / (served.len().max(1) as f64),
+        0.8,
+    ));
+    report.push(Gate::at_least(
+        "sample is non-empty".to_string(),
+        served.len() as f64,
+        1.0,
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_run_passes_every_gate() {
+        let report = run(&ScenarioOpts::default()).unwrap();
+        report.check().unwrap();
+    }
+
+    #[test]
+    fn closed_form_matches_the_sampler_primitive() {
+        let elems = era_stream();
+        let probe = (ERAS - 1) * 100 + 3;
+        let direct = closed_form(&elems, probe, RATE);
+        let spec = DecaySpec::exponential(RATE).unwrap();
+        let mut s = DecayedWorp::new(
+            crate::sampler::SamplerConfig::new(1.0, 4).with_seed(1),
+            spec,
+        );
+        for e in &elems {
+            StreamSummary::process(&mut s, e);
+        }
+        let lazy = s.decayed_freq(probe);
+        assert!(
+            (lazy - direct).abs() < 1e-9 * direct,
+            "lazy {lazy} vs direct {direct}"
+        );
+    }
+}

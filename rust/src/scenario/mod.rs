@@ -1,0 +1,528 @@
+//! Scenario engine: end-to-end workloads with hard accuracy gates.
+//!
+//! A *scenario* drives a realistic workload through a live [`Engine`] —
+//! in-process, over a served TCP session, or across a 3-node cluster —
+//! computes exact ground truth with an independent pass, and checks the
+//! served answers against declared thresholds. Every check is a
+//! [`Gate`]; a failing gate makes [`ScenarioReport::check`] (and hence
+//! `worp scenario <name>`) fail loudly, so CI treats accuracy
+//! regressions exactly like compile errors.
+//!
+//! The four scenarios map onto the paper's headline claims:
+//!
+//! - **`wr-vs-wor`** — the motivating comparison: ℓ2 sampling of a
+//!   Zipf[2] stream, estimating `‖ν‖₂²`. The WOR bottom-k estimator must
+//!   beat the WR reservoir estimator on NRMSE (Cohen–Pagh–Woodruff §1,
+//!   Fig. 1), at the same sample size `k`.
+//! - **`coordinated`** — two drifted daily streams sampled with a shared
+//!   seed; the weighted-Jaccard estimate off the coordinated samples
+//!   must land within a declared distance of the exact value, and
+//!   comparing *uncoordinated* instances must be refused.
+//! - **`decay`** — a served time-decayed sampler over an era-shifted
+//!   stream: served answers must be bit-identical to an offline
+//!   replay, match the closed-form decayed frequency, and the sample
+//!   must concentrate on the recent era.
+//! - **`sliding-window`** — windowed WORp vs plain 1-pass on the same
+//!   era-shifted stream: the windowed sample must surface strictly more
+//!   of the final era's hot keys.
+//!
+//! Scenarios whose samplers are clock- or RNG-coupled
+//! (`parallel_safe() == false`: decayed, WR reservoir, windowed) refuse
+//! `--cluster` with a typed config error — a sharded clock would skew
+//! their answers, which is exactly the property the engine enforces.
+
+pub mod coordinated;
+pub mod decay;
+pub mod sliding_window;
+pub mod wr_vs_wor;
+
+use crate::cluster::{ClusterClient, ClusterSpec, Member, RetryPolicy};
+use crate::data::{Element, ElementBlock};
+use crate::engine::client::Client;
+use crate::engine::proto::InstanceSpec;
+use crate::engine::server::{ServeOpts, Server};
+use crate::engine::{Engine, EngineOpts};
+use crate::error::{Error, Result};
+use crate::estimate::similarity::SimilarityReport;
+use crate::sampler::Sample;
+use std::fmt;
+use std::sync::Arc;
+
+/// Every scenario name [`run`] accepts (canonical spellings).
+pub const SCENARIOS: &[&str] = &["decay", "coordinated", "wr-vs-wor", "sliding-window"];
+
+/// Where the scenario's engine lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// In-process [`Engine`] (no sockets).
+    Local,
+    /// One engine behind a loopback [`Server`], driven through [`Client`].
+    Served,
+    /// Three engines behind loopback servers, driven through
+    /// [`ClusterClient`] on the merge law.
+    Cluster,
+}
+
+impl Mode {
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "local" => Ok(Mode::Local),
+            "serve" | "served" => Ok(Mode::Served),
+            "cluster" => Ok(Mode::Cluster),
+            other => Err(Error::Config(format!(
+                "unknown scenario mode {other:?} (expected local|serve|cluster)"
+            ))),
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Local => "local",
+            Mode::Served => "serve",
+            Mode::Cluster => "cluster",
+        }
+    }
+}
+
+/// Knobs every scenario accepts; `0` means "the scenario's default".
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioOpts {
+    /// Engine placement.
+    pub mode: Mode,
+    /// Sample size override (0 = scenario default).
+    pub k: usize,
+    /// Base randomization seed.
+    pub seed: u64,
+    /// Repetition count for NRMSE-style gates (0 = scenario default).
+    pub runs: usize,
+}
+
+impl Default for ScenarioOpts {
+    fn default() -> Self {
+        ScenarioOpts { mode: Mode::Local, k: 0, seed: 0x5EED_5CE0, runs: 0 }
+    }
+}
+
+impl ScenarioOpts {
+    fn k_or(&self, default: usize) -> usize {
+        if self.k == 0 {
+            default
+        } else {
+            self.k
+        }
+    }
+
+    fn runs_or(&self, default: usize) -> usize {
+        if self.runs == 0 {
+            default
+        } else {
+            self.runs
+        }
+    }
+}
+
+/// One pass/fail accuracy check with its evidence.
+#[derive(Clone, Debug)]
+pub struct Gate {
+    /// What was checked.
+    pub what: String,
+    /// The measured value.
+    pub observed: f64,
+    /// The declared bound it was held against.
+    pub threshold: f64,
+    /// Whether the check passed.
+    pub pass: bool,
+}
+
+impl Gate {
+    /// Passes when `observed < threshold`.
+    pub fn below(what: impl Into<String>, observed: f64, threshold: f64) -> Gate {
+        Gate { what: what.into(), observed, threshold, pass: observed < threshold }
+    }
+
+    /// Passes when `observed >= threshold`.
+    pub fn at_least(what: impl Into<String>, observed: f64, threshold: f64) -> Gate {
+        Gate { what: what.into(), observed, threshold, pass: observed >= threshold }
+    }
+}
+
+/// The outcome of one scenario run: every gate, pass or fail.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Mode it ran under.
+    pub mode: Mode,
+    /// All accuracy gates, in evaluation order.
+    pub gates: Vec<Gate>,
+}
+
+impl ScenarioReport {
+    fn new(scenario: &str, mode: Mode) -> ScenarioReport {
+        ScenarioReport { scenario: scenario.to_string(), mode, gates: Vec::new() }
+    }
+
+    fn push(&mut self, gate: Gate) {
+        self.gates.push(gate);
+    }
+
+    /// True when every gate passed.
+    pub fn passed(&self) -> bool {
+        !self.gates.is_empty() && self.gates.iter().all(|g| g.pass)
+    }
+
+    /// `Err` naming every failed gate (what `worp scenario` propagates
+    /// so the process exits non-zero on an accuracy regression).
+    pub fn check(&self) -> Result<()> {
+        if self.gates.is_empty() {
+            return Err(Error::Runtime(format!(
+                "scenario {:?} evaluated no gates",
+                self.scenario
+            )));
+        }
+        let failed: Vec<String> = self
+            .gates
+            .iter()
+            .filter(|g| !g.pass)
+            .map(|g| {
+                format!("{} (observed {:.4e}, threshold {:.4e})", g.what, g.observed, g.threshold)
+            })
+            .collect();
+        if failed.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Runtime(format!(
+                "scenario {:?} failed {} gate(s): {}",
+                self.scenario,
+                failed.len(),
+                failed.join("; ")
+            )))
+        }
+    }
+}
+
+impl fmt::Display for ScenarioReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "scenario {} [{}]", self.scenario, self.mode.name())?;
+        for g in &self.gates {
+            writeln!(
+                f,
+                "  [{}] {:<58} observed {:>12.4e}  threshold {:>12.4e}",
+                if g.pass { "PASS" } else { "FAIL" },
+                g.what,
+                g.observed,
+                g.threshold,
+            )?;
+        }
+        write!(f, "  => {}", if self.passed() { "PASS" } else { "FAIL" })
+    }
+}
+
+/// Reject cluster placement for single-clock scenarios.
+fn require_single_node(scenario: &str, mode: Mode) -> Result<()> {
+    if mode == Mode::Cluster {
+        return Err(Error::Config(format!(
+            "scenario {scenario:?} drives a clock-coupled sampler (parallel_safe = false) \
+             and cannot run sharded across a cluster — use --serve or local mode"
+        )));
+    }
+    Ok(())
+}
+
+/// A fully-defaulted instance spec (paper-default sketch shape, ppswor
+/// randomization) — scenarios override only what they exercise.
+fn base_spec(method: &str, p: f64, k: usize, seed: u64, n: usize) -> InstanceSpec {
+    InstanceSpec {
+        method: method.to_string(),
+        dist: "ppswor".to_string(),
+        p,
+        k,
+        q: 2.0,
+        seed,
+        n,
+        delta: 0.01,
+        eps: 1.0 / 3.0,
+        rows: 0,
+        width: 0,
+        window: 0,
+        buckets: 0,
+        decay: String::new(),
+        decay_rate: 0.0,
+        coordinate: String::new(),
+    }
+}
+
+/// Ingest chunk size: small enough to exercise the batch paths, large
+/// enough to stay off the syscall floor in served modes.
+const CHUNK: usize = 4096;
+
+/// The live engine a scenario drives, behind one placement-agnostic
+/// surface: the same workload code runs in-process, served, or
+/// clustered.
+pub struct Host {
+    mode: Mode,
+    inner: HostInner,
+}
+
+enum HostInner {
+    Local(Arc<Engine>),
+    Served {
+        server: Server,
+        client: Client,
+    },
+    Cluster {
+        servers: Vec<Server>,
+        client: ClusterClient,
+    },
+}
+
+impl Host {
+    /// Spin up the requested placement on loopback (served / cluster
+    /// modes bind OS-assigned ports, so parallel CI runs never collide).
+    pub fn start(mode: Mode) -> Result<Host> {
+        let inner = match mode {
+            Mode::Local => HostInner::Local(Arc::new(Engine::new(EngineOpts::new(2, 1024)?))),
+            Mode::Served => {
+                let engine = Arc::new(Engine::new(EngineOpts::new(2, 1024)?));
+                let server = Server::start(engine, "127.0.0.1:0", ServeOpts::default())?;
+                let client = Client::connect(&server.local_addr().to_string())?;
+                HostInner::Served { server, client }
+            }
+            Mode::Cluster => {
+                // Placement depends only on member *names*, so bind each
+                // server first and fill the real addresses in afterwards —
+                // the stamp covers name + slices and survives the fixup.
+                const SLICES: usize = 16;
+                let names = ["alpha", "beta", "gamma"];
+                let skeleton = ClusterSpec {
+                    name: "scenario".to_string(),
+                    slices: SLICES,
+                    members: names
+                        .iter()
+                        .map(|n| Member { name: n.to_string(), addr: "0.0.0.0:0".to_string() })
+                        .collect(),
+                };
+                let mut servers = Vec::with_capacity(names.len());
+                let mut members = Vec::with_capacity(names.len());
+                for n in names {
+                    let owned = skeleton.owned_slices(n)?;
+                    let engine = Arc::new(Engine::with_ownership(
+                        EngineOpts::new(1, 1024)?,
+                        SLICES,
+                        &owned,
+                        skeleton.stamp(),
+                    )?);
+                    let server = Server::start(engine, "127.0.0.1:0", ServeOpts::default())?;
+                    members.push(Member {
+                        name: n.to_string(),
+                        addr: server.local_addr().to_string(),
+                    });
+                    servers.push(server);
+                }
+                let spec =
+                    ClusterSpec { name: "scenario".to_string(), slices: SLICES, members };
+                let client = ClusterClient::connect_with(spec, RetryPolicy::default())?;
+                HostInner::Cluster { servers, client }
+            }
+        };
+        Ok(Host { mode, inner })
+    }
+
+    /// The placement this host runs.
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Whether the placement tracks creation seeds and can *refuse*
+    /// uncoordinated similarity queries (the cluster computes similarity
+    /// client-side from merged samples and has no seed registry).
+    pub fn tracks_seeds(&self) -> bool {
+        !matches!(self.inner, HostInner::Cluster { .. })
+    }
+
+    /// Create a named instance. In local mode the coordinate reference
+    /// is resolved here, mirroring what the server's `CREATE` handler
+    /// does for the wire modes.
+    pub fn create(&mut self, name: &str, spec: &InstanceSpec) -> Result<()> {
+        match &mut self.inner {
+            HostInner::Local(engine) => {
+                let mut spec = spec.clone();
+                if !spec.coordinate.is_empty() {
+                    spec.seed = engine.seed_of(&spec.coordinate)?;
+                    spec.coordinate.clear();
+                }
+                engine.create(name, &spec.to_worp()?)
+            }
+            HostInner::Served { client, .. } => client.create(name, spec),
+            HostInner::Cluster { client, .. } => client.create(name, spec),
+        }
+    }
+
+    /// Stream elements in, in [`CHUNK`]-sized blocks.
+    pub fn ingest(&mut self, name: &str, elems: &[Element]) -> Result<()> {
+        for chunk in elems.chunks(CHUNK) {
+            let block = ElementBlock::from_elements(chunk);
+            match &mut self.inner {
+                HostInner::Local(engine) => engine.ingest(name, &block).map(|_| ())?,
+                HostInner::Served { client, .. } => client.ingest(name, &block).map(|_| ())?,
+                HostInner::Cluster { client, .. } => client.ingest(name, &block).map(|_| ())?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush pending partial blocks.
+    pub fn flush(&mut self, name: &str) -> Result<()> {
+        match &mut self.inner {
+            HostInner::Local(engine) => engine.flush(name).map(|_| ()),
+            HostInner::Served { client, .. } => client.flush(name).map(|_| ()),
+            HostInner::Cluster { client, .. } => client.flush(name).map(|_| ()),
+        }
+    }
+
+    /// The instance's current WOR sample.
+    pub fn sample(&mut self, name: &str) -> Result<Sample> {
+        match &mut self.inner {
+            HostInner::Local(engine) => engine.sample(name),
+            HostInner::Served { client, .. } => client.sample(name),
+            HostInner::Cluster { client, .. } => client.sample(name),
+        }
+    }
+
+    /// Moment estimate `‖ν‖_{p'}^{p'}` off the current sample.
+    pub fn moment(&mut self, name: &str, p_prime: f64) -> Result<f64> {
+        match &mut self.inner {
+            HostInner::Local(engine) => engine.moment(name, p_prime),
+            HostInner::Served { client, .. } => client.moment(name, p_prime),
+            HostInner::Cluster { client, .. } => client.moment(name, p_prime),
+        }
+    }
+
+    /// Similarity report over two instances' samples. Local / served
+    /// placements enforce seed compatibility server-side; the cluster
+    /// estimates client-side from the two merged samples.
+    pub fn similarity(&mut self, a: &str, b: &str) -> Result<SimilarityReport> {
+        match &mut self.inner {
+            HostInner::Local(engine) => engine.similarity(a, b),
+            HostInner::Served { client, .. } => client.similarity(a, b),
+            HostInner::Cluster { client, .. } => {
+                let sa = client.sample(a)?;
+                let sb = client.sample(b)?;
+                crate::estimate::similarity::report(&sa, &sb)
+            }
+        }
+    }
+
+    /// Drop an instance (scenarios clean up so repeated runs against a
+    /// long-lived server never collide on names).
+    pub fn drop_instance(&mut self, name: &str) -> Result<()> {
+        match &mut self.inner {
+            HostInner::Local(engine) => engine.drop_instance(name),
+            HostInner::Served { client, .. } => client.drop_instance(name),
+            HostInner::Cluster { client, .. } => client.drop_instance(name),
+        }
+    }
+
+    /// Stop every loopback server this host started.
+    pub fn shutdown(self) {
+        match self.inner {
+            HostInner::Local(_) => {}
+            HostInner::Served { mut server, client } => {
+                drop(client);
+                server.stop();
+            }
+            HostInner::Cluster { mut servers, client } => {
+                drop(client);
+                for s in &mut servers {
+                    s.stop();
+                }
+            }
+        }
+    }
+}
+
+/// Run one scenario by name. The report carries every gate; callers
+/// decide whether to print, assert, or both (the CLI does both).
+pub fn run(name: &str, opts: &ScenarioOpts) -> Result<ScenarioReport> {
+    match name {
+        "decay" => decay::run(opts),
+        "coordinated" => coordinated::run(opts),
+        "wr-vs-wor" | "wr_vs_wor" | "wr" => wr_vs_wor::run(opts),
+        "sliding-window" | "sliding_window" | "window" => sliding_window::run(opts),
+        other => Err(Error::Config(format!(
+            "unknown scenario {other:?} (expected one of {})",
+            SCENARIOS.join("|")
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_canonical_spellings() {
+        assert_eq!(Mode::parse("local").unwrap(), Mode::Local);
+        assert_eq!(Mode::parse("serve").unwrap(), Mode::Served);
+        assert_eq!(Mode::parse("served").unwrap(), Mode::Served);
+        assert_eq!(Mode::parse("cluster").unwrap(), Mode::Cluster);
+        assert!(Mode::parse("remote").is_err());
+        for m in [Mode::Local, Mode::Served, Mode::Cluster] {
+            assert_eq!(Mode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn gates_compare_on_the_declared_side() {
+        assert!(Gate::below("x", 1.0, 2.0).pass);
+        assert!(!Gate::below("x", 2.0, 2.0).pass);
+        assert!(Gate::at_least("x", 2.0, 2.0).pass);
+        assert!(!Gate::at_least("x", 1.0, 2.0).pass);
+    }
+
+    #[test]
+    fn report_check_names_the_failures() {
+        let mut r = ScenarioReport::new("t", Mode::Local);
+        assert!(r.check().is_err(), "no gates evaluated is a failure");
+        r.push(Gate::below("good", 1.0, 2.0));
+        assert!(r.check().is_ok());
+        assert!(r.passed());
+        r.push(Gate::below("nrmse ordering", 3.0, 2.0));
+        let err = r.check().unwrap_err().to_string();
+        assert!(err.contains("nrmse ordering"), "{err}");
+        assert!(!r.passed());
+        let shown = r.to_string();
+        assert!(shown.contains("PASS") && shown.contains("FAIL"), "{shown}");
+    }
+
+    #[test]
+    fn unknown_scenario_is_a_config_error() {
+        let opts = ScenarioOpts::default();
+        assert!(matches!(run("nope", &opts), Err(Error::Config(_))));
+        // single-clock scenarios refuse cluster placement up front
+        let cl = ScenarioOpts { mode: Mode::Cluster, ..ScenarioOpts::default() };
+        for s in ["decay", "wr-vs-wor", "sliding-window"] {
+            assert!(matches!(run(s, &cl), Err(Error::Config(_))), "{s} accepted --cluster");
+        }
+    }
+
+    #[test]
+    fn cluster_host_round_trips_a_parallel_safe_instance() {
+        let mut host = Host::start(Mode::Cluster).unwrap();
+        assert!(!host.tracks_seeds());
+        let spec = base_spec("exact", 1.0, 8, 7, 100);
+        host.create("scn/ct", &spec).unwrap();
+        let elems: Vec<Element> =
+            (0..500u64).map(|i| Element::new(i % 40, 1.0)).collect();
+        host.ingest("scn/ct", &elems).unwrap();
+        host.flush("scn/ct").unwrap();
+        let s = host.sample("scn/ct").unwrap();
+        assert_eq!(s.len(), 8);
+        let m = host.moment("scn/ct", 1.0).unwrap();
+        assert!((m - 500.0).abs() < 1e-6, "exact first moment, got {m}");
+        host.drop_instance("scn/ct").unwrap();
+        host.shutdown();
+    }
+}

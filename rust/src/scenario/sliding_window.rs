@@ -1,0 +1,108 @@
+//! `sliding-window` — windowed WORp vs plain 1-pass WORp on an
+//! era-shifted stream, served end to end.
+//!
+//! Workload: four eras; era `e` sends 60 % of its elements to its own
+//! fifty hot keys (`e·100 .. e·100+50`) and the rest uniformly over the
+//! whole domain. A window covering only the tail of the final era must
+//! surface that era's hot set, while the unwindowed 1-pass sampler —
+//! which weighs all history equally — splits its sample across every
+//! era's hot keys.
+//!
+//! Gate: the windowed sample contains strictly more final-era hot keys
+//! than the 1-pass sample, plus an absolute floor on the windowed hot
+//! fraction so the ordering cannot pass with both samplers degenerate.
+
+use super::{base_spec, require_single_node, Gate, Host, ScenarioOpts, ScenarioReport};
+use crate::data::Element;
+use crate::error::Result;
+use crate::util::rng::Rng;
+
+const ERAS: u64 = 4;
+const ERA_LEN: u64 = 20_000;
+const HOT: u64 = 50;
+const DOMAIN: usize = 10_000;
+const WINDOW: u64 = 10_000;
+const BUCKETS: usize = 10;
+const DEFAULT_K: usize = 50;
+
+fn era_stream(seed: u64) -> Vec<Element> {
+    let mut rng = Rng::new(seed ^ 0x57AB_1E57);
+    let mut elems = Vec::with_capacity((ERAS * ERA_LEN) as usize);
+    for era in 0..ERAS {
+        for _ in 0..ERA_LEN {
+            let key = if rng.uniform() < 0.6 {
+                era * 100 + rng.below(HOT)
+            } else {
+                rng.below(DOMAIN as u64)
+            };
+            elems.push(Element::new(key, 1.0));
+        }
+    }
+    elems
+}
+
+fn hot_hits(keys: &[u64]) -> usize {
+    let last = (ERAS - 1) * 100..(ERAS - 1) * 100 + HOT;
+    keys.iter().filter(|k| last.contains(k)).count()
+}
+
+/// Run the windowed-vs-1-pass comparison; see the module docs.
+pub fn run(opts: &ScenarioOpts) -> Result<ScenarioReport> {
+    require_single_node("sliding-window", opts.mode)?;
+    let k = opts.k_or(DEFAULT_K);
+    let elems = era_stream(opts.seed);
+
+    let mut host = Host::start(opts.mode)?;
+    let windowed = "scenario/windowed";
+    let unwindowed = "scenario/unwindowed";
+    let mut w_spec = base_spec("windowed", 1.0, k, opts.seed, DOMAIN);
+    w_spec.window = WINDOW;
+    w_spec.buckets = BUCKETS;
+    host.create(windowed, &w_spec)?;
+    host.create(unwindowed, &base_spec("1pass", 1.0, k, opts.seed, DOMAIN))?;
+    host.ingest(windowed, &elems)?;
+    host.ingest(unwindowed, &elems)?;
+    host.flush(windowed)?;
+    host.flush(unwindowed)?;
+    let w_sample = host.sample(windowed)?;
+    let u_sample = host.sample(unwindowed)?;
+    host.drop_instance(windowed)?;
+    host.drop_instance(unwindowed)?;
+    host.shutdown();
+
+    let w_hot = hot_hits(&w_sample.keys());
+    let u_hot = hot_hits(&u_sample.keys());
+    let mut report = ScenarioReport::new("sliding-window", opts.mode);
+    report.push(Gate::at_least(
+        format!("windowed minus 1-pass final-era hot keys at k={k}"),
+        w_hot as f64 - u_hot as f64,
+        1.0,
+    ));
+    report.push(Gate::at_least(
+        "windowed sample's final-era hot fraction".to_string(),
+        w_hot as f64 / (w_sample.len().max(1) as f64),
+        0.4,
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_run_prefers_the_recent_era() {
+        let report = run(&ScenarioOpts::default()).unwrap();
+        report.check().unwrap();
+    }
+
+    #[test]
+    fn era_stream_is_deterministic_in_the_seed() {
+        let a = era_stream(9);
+        let b = era_stream(9);
+        let c = era_stream(10);
+        assert_eq!(a.len(), (ERAS * ERA_LEN) as usize);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.key == y.key));
+        assert!(a.iter().zip(&c).any(|(x, y)| x.key != y.key));
+    }
+}

@@ -1,0 +1,198 @@
+//! Time-decay weighting for served sampling — the transform-layer piece
+//! of the scenario subsystem (`crate::scenario`).
+//!
+//! A decayed sampler weights an element that arrived at tick `t`, when
+//! queried at tick `T ≥ t`, by `val · decay(t, T)`. Two families are
+//! supported:
+//!
+//! - **Exponential** (`rate = λ`): `decay(t, T) = exp(-λ·(T - t))` — the
+//!   classic backward exponential decay. Memoryless, so the decayed
+//!   aggregate of a key can be carried forward lazily.
+//! - **Polynomial** (`rate = β`): *forward decay* in the sense of
+//!   Cormode–Shkapenyuk–Srivastava–Xu: `decay(t, T) =
+//!   ((1 + t) / (1 + T))^β`. Polynomial backward decay
+//!   (`(1 + age)^-β`) is not multiplicative in elapsed time and cannot
+//!   be maintained in bounded per-key state; the forward form decays
+//!   polynomially in the *ratio* of arrival times and factors as
+//!   `decay(a, b) · decay(b, c) = decay(a, c)`, which is exactly what
+//!   the lazy carry below needs.
+//!
+//! Both forms satisfy the *carry law*
+//! `carry(a, b) · carry(b, c) = carry(a, c)` (up to f64 rounding), so a
+//! sampler can store one `(last_tick, accumulated)` pair per key, where
+//! `accumulated` is the decayed sum *as of* `last_tick`, and bring it to
+//! any later tick with a single multiply — every stored factor is in
+//! `[0, 1]`, so nothing ever overflows regardless of stream length.
+//!
+//! Ticks advance one per element (the same implicit run-chunked clock as
+//! [`crate::sampler::windowed`]); `process_at` exposes the explicit
+//! surface.
+
+use crate::error::{Error, Result};
+
+/// The decay family (see module docs for the exact weight functions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecayKind {
+    /// `exp(-rate · elapsed)` — backward exponential decay.
+    Exponential,
+    /// `((1 + t) / (1 + T))^rate` — polynomial forward decay.
+    Polynomial,
+}
+
+impl DecayKind {
+    /// Canonical config spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecayKind::Exponential => "exp",
+            DecayKind::Polynomial => "poly",
+        }
+    }
+
+    /// Stable wire byte (append-only, like codec type tags).
+    pub fn to_byte(self) -> u8 {
+        match self {
+            DecayKind::Exponential => 1,
+            DecayKind::Polynomial => 2,
+        }
+    }
+
+    /// Parse a wire byte written by [`DecayKind::to_byte`].
+    pub fn from_byte(b: u8) -> Result<DecayKind> {
+        match b {
+            1 => Ok(DecayKind::Exponential),
+            2 => Ok(DecayKind::Polynomial),
+            other => Err(Error::Codec(format!("unknown decay kind byte {other}"))),
+        }
+    }
+}
+
+/// A validated decay specification: family + rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecaySpec {
+    kind: DecayKind,
+    rate: f64,
+}
+
+impl DecaySpec {
+    /// Exponential decay with `rate = λ > 0` (per tick).
+    pub fn exponential(rate: f64) -> Result<DecaySpec> {
+        DecaySpec { kind: DecayKind::Exponential, rate }.validated()
+    }
+
+    /// Polynomial forward decay with exponent `rate = β > 0`.
+    pub fn polynomial(rate: f64) -> Result<DecaySpec> {
+        DecaySpec { kind: DecayKind::Polynomial, rate }.validated()
+    }
+
+    /// Parse the CLI / config spelling of a decay family.
+    pub fn parse(kind: &str, rate: f64) -> Result<DecaySpec> {
+        let kind = match kind {
+            "exp" | "exponential" => DecayKind::Exponential,
+            "poly" | "polynomial" => DecayKind::Polynomial,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown decay kind {other:?} (expected exp|poly)"
+                )))
+            }
+        };
+        DecaySpec { kind, rate }.validated()
+    }
+
+    fn validated(self) -> Result<DecaySpec> {
+        if !(self.rate.is_finite() && self.rate > 0.0) {
+            return Err(Error::Config(format!(
+                "decay rate must be a positive finite number, got {}",
+                self.rate
+            )));
+        }
+        Ok(self)
+    }
+
+    /// The decay family.
+    pub fn kind(&self) -> DecayKind {
+        self.kind
+    }
+
+    /// The decay rate (λ for exponential, β for polynomial).
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Multiplier that brings a value last updated at tick `from` to tick
+    /// `to ≥ from`. Always in `[0, 1]`; exactly `1.0` when `from == to`,
+    /// so an untouched value is bit-stable.
+    #[inline]
+    pub fn carry(&self, from: u64, to: u64) -> f64 {
+        debug_assert!(from <= to, "carry runs forward in time");
+        if from == to {
+            return 1.0;
+        }
+        match self.kind {
+            DecayKind::Exponential => (-self.rate * (to - from) as f64).exp(),
+            DecayKind::Polynomial => {
+                ((1.0 + from as f64) / (1.0 + to as f64)).powf(self.rate)
+            }
+        }
+    }
+
+    /// Relative weight at query tick `now` of an element that arrived at
+    /// tick `t ≤ now` (the module-doc `decay(t, T)`).
+    #[inline]
+    pub fn weight(&self, t: u64, now: u64) -> f64 {
+        self.carry(t, now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_both_spellings_and_validates_rate() {
+        assert_eq!(
+            DecaySpec::parse("exp", 0.5).unwrap().kind(),
+            DecayKind::Exponential
+        );
+        assert_eq!(
+            DecaySpec::parse("polynomial", 2.0).unwrap().kind(),
+            DecayKind::Polynomial
+        );
+        assert!(DecaySpec::parse("linear", 1.0).is_err());
+        assert!(DecaySpec::parse("exp", 0.0).is_err());
+        assert!(DecaySpec::parse("exp", -1.0).is_err());
+        assert!(DecaySpec::parse("exp", f64::NAN).is_err());
+    }
+
+    #[test]
+    fn carry_is_multiplicative_and_bounded() {
+        for spec in [
+            DecaySpec::exponential(0.01).unwrap(),
+            DecaySpec::polynomial(1.5).unwrap(),
+        ] {
+            assert_eq!(spec.carry(7, 7), 1.0);
+            let (a, b, c) = (10u64, 250u64, 4000u64);
+            let two_step = spec.carry(a, b) * spec.carry(b, c);
+            let one_step = spec.carry(a, c);
+            assert!((two_step - one_step).abs() < 1e-12 * one_step.max(1e-300));
+            assert!(one_step > 0.0 && one_step < 1.0);
+            // monotone: older contributions weigh less
+            assert!(spec.carry(0, 100) < spec.carry(50, 100));
+        }
+    }
+
+    #[test]
+    fn exponential_matches_closed_form() {
+        let spec = DecaySpec::exponential(0.25).unwrap();
+        let want = (-0.25f64 * 8.0).exp();
+        assert!((spec.weight(2, 10) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn kind_byte_roundtrips() {
+        for k in [DecayKind::Exponential, DecayKind::Polynomial] {
+            assert_eq!(DecayKind::from_byte(k.to_byte()).unwrap(), k);
+        }
+        assert!(DecayKind::from_byte(0).is_err());
+        assert!(DecayKind::from_byte(9).is_err());
+    }
+}

@@ -6,6 +6,10 @@
 //! frequency vector `ν* = ν · r^{-1/p}` are a bottom-k sample by `ν^p`
 //! under `D` — ppswor for `D = Exp[1]`, priority for `D = U[0,1]`.
 
+pub mod decay;
+
+pub use decay::{DecayKind, DecaySpec};
+
 use crate::data::Element;
 use crate::util::hashing::{BottomKDist, KeyRandomizer};
 

@@ -154,6 +154,8 @@ TAG = {
     "windowed": 13,
     "oracle": 14,
     "precision": 15,
+    "wr": 20,
+    "decayed": 21,
 }
 
 
@@ -405,6 +407,43 @@ def windowed_env(cfg, window, buckets):
     return envelope(TAG["windowed"], fp, payload)
 
 
+def wr_env(cfg):
+    """WrReservoir::new(cfg), empty. The reservoir RNG is seeded with
+    cfg.seed ^ "wRES" and consumes nothing before the first element; the
+    frequency sketch is a CountSketch at the config's explicit shape with
+    seed cfg.seed ^ "WRSk" (the 0x5EED_0057_5253_6B01 salt). Every slot
+    is (exponent=+inf, key=0, next_jump=0.0)."""
+    rows, width = cfg["rows"], cfg["width"]
+    sk = countsketch_env(rows, width, cfg["seed"] ^ 0x5EED00575253_6B01)
+    payload = sampler_config_bytes(cfg) + f64(0.0) + u64(0)
+    for s in rng_state(cfg["seed"] ^ 0x77524553):
+        payload += u64(s)
+    payload += u64(cfg["k"])
+    for _ in range(cfg["k"]):
+        payload += f64(math.inf) + u64(0) + f64(0.0)
+    payload += nested(sk)
+    return envelope(TAG["wr"], config_fp("wr", cfg), payload)
+
+
+def decayed_env(cfg, kind, rate, now, processed, entries):
+    """DecayedWorp after *single-touch* updates only: each key's stored
+    sum is `0.0 * carry + val == val` exactly, so no transcendental
+    enters the payload. `entries` maps key -> (last_tick, acc)."""
+    payload = (
+        sampler_config_bytes(cfg)
+        + u8(kind)
+        + f64(rate)
+        + u64(now)
+        + u64(processed)
+        + u64(len(entries))
+    )
+    for key in sorted(entries):
+        last, acc = entries[key]
+        payload += u64(key) + u64(last) + f64(acc)
+    fp = fp_with_f64(fp_with(config_fp("decayed", cfg), kind), rate)
+    return envelope(TAG["decayed"], fp, payload)
+
+
 # --- fixtures -------------------------------------------------------------
 
 
@@ -432,6 +471,16 @@ def main():
         "tv.worp": tv_env(1.0, 2, 16, 42, 3),
         "windowed.worp": windowed_env(cfg8, 50, 5),
         "precision.worp": precision_env(1.0, 42, 3, 8),
+        "wr.worp": wr_env(cfg8),
+        # three scalar process() calls on distinct keys: ticks 1, 2, 3
+        "decayed.worp": decayed_env(
+            make_cfg(1.0, 8, 42, 100),
+            1,  # DecayKind::Exponential
+            0.5,
+            3,
+            3,
+            {1: (1, 2.0), 5: (2, -3.0), 9: (3, 4.0)},
+        ),
     }
     for name, data in fixtures.items():
         path = os.path.join(here, name)

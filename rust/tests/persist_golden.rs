@@ -11,12 +11,14 @@
 
 use worp::api::Persist;
 use worp::data::Element;
+use worp::sampler::decayed::DecayedWorp;
 use worp::sampler::exact::ExactWor;
 use worp::sampler::perfect_lp::{OracleSampler, PrecisionSampler, SingleLpSampler};
 use worp::sampler::tv1pass::{SamplerKind, TvSampler, TvSamplerConfig};
 use worp::sampler::windowed::WindowedWorp;
 use worp::sampler::worp1::OnePassWorp;
 use worp::sampler::worp2::{TwoPassWorp, TwoPassWorpPass1};
+use worp::sampler::wr_reservoir::WrReservoir;
 use worp::sampler::SamplerConfig;
 use worp::sketch::countmin::CountMin;
 use worp::sketch::countsketch::CountSketch;
@@ -24,6 +26,7 @@ use worp::sketch::spacesaving::SpaceSaving;
 use worp::sketch::topk::TopK;
 use worp::sketch::window::WindowedCountSketch;
 use worp::sketch::{AnyRhh, RhhSketch, SketchParams};
+use worp::transform::DecaySpec;
 
 fn golden_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
@@ -156,6 +159,24 @@ fn golden_windowed() {
 }
 
 #[test]
+fn golden_wr() {
+    check_golden("wr.worp", &WrReservoir::new(cfg8()));
+}
+
+#[test]
+fn golden_decayed() {
+    use worp::api::StreamSummary;
+    let cfg = SamplerConfig::new(1.0, 8).with_seed(42).with_domain(100);
+    let mut s = DecayedWorp::new(cfg, DecaySpec::exponential(0.5).unwrap());
+    // three scalar ticks on distinct keys: every stored sum is the raw
+    // value itself (0.0 * carry + val), so the payload is integer-exact
+    for (k, v) in [(1u64, 2.0), (5, -3.0), (9, 4.0)] {
+        s.process(&Element::new(k, v));
+    }
+    check_golden("decayed.worp", &s);
+}
+
+#[test]
 fn golden_oracle() {
     let mut s = OracleSampler::new(1.0, 42);
     SingleLpSampler::process(&mut s, &Element::new(1, 2.0));
@@ -178,6 +199,8 @@ fn golden_fixtures_decode_through_the_dynamic_path() {
         ("tv.worp", "tv"),
         ("windowed.worp", "windowed"),
         ("exact.worp", "exact"),
+        ("wr.worp", "wr"),
+        ("decayed.worp", "decayed"),
     ] {
         let bytes = std::fs::read(golden_dir().join(file)).unwrap();
         let s: Box<dyn WorSampler> = worp::codec::decode_sampler(&bytes)

@@ -1,0 +1,293 @@
+//! Scenario-engine contract suite (the release gate CI runs before the
+//! `worp scenario` smoke commands).
+//!
+//! Three layers, matching what the scenario engine promises:
+//!
+//! 1. **WR reservoir primitives** — ingest-mode bit-identity, persist
+//!    round-trip that resumes identically, slot-wise merge winners, and
+//!    a frequency check of the draws against the closed-form WR
+//!    probabilities the `wr-vs-wor` estimator divides by.
+//! 2. **Served ≡ offline** — a decayed instance driven over the wire in
+//!    engine-chosen chunks must sample bit-identically to a scalar
+//!    offline replay, and two engines created with a shared seed must
+//!    produce identical coordinated key sets.
+//! 3. **The `scenario::run` surface itself** — the same entry point the
+//!    CLI calls must pass its own gates in local and served modes.
+
+use std::collections::HashSet;
+
+use worp::api::{Mergeable, Persist, StreamSummary};
+use worp::data::{Element, ElementBlock};
+use worp::engine::proto::InstanceSpec;
+use worp::engine::{Engine, EngineOpts};
+use worp::estimate::wr_inclusion_prob;
+use worp::sampler::decayed::DecayedWorp;
+use worp::sampler::wr_reservoir::WrReservoir;
+use worp::sampler::{Sample, SamplerConfig};
+use worp::scenario::{self, Host, Mode, ScenarioOpts};
+use worp::transform::DecaySpec;
+
+fn wr_cfg(k: usize, seed: u64) -> SamplerConfig {
+    SamplerConfig::new(1.0, k)
+        .with_seed(seed)
+        .with_domain(1_000)
+        .with_sketch_shape(3, 64)
+}
+
+/// An unaggregated stream with repeated keys and mixed weights.
+fn stream(n: u64) -> Vec<Element> {
+    (0..n)
+        .map(|i| Element::new(i % 97, 1.0 + (i % 5) as f64))
+        .collect()
+}
+
+fn spec(method: &str, p: f64, k: usize, seed: u64, n: usize) -> InstanceSpec {
+    InstanceSpec {
+        method: method.to_string(),
+        dist: "ppswor".to_string(),
+        p,
+        k,
+        q: 2.0,
+        seed,
+        n,
+        delta: 0.01,
+        eps: 1.0 / 3.0,
+        rows: 0,
+        width: 0,
+        window: 0,
+        buckets: 0,
+        decay: String::new(),
+        decay_rate: 0.0,
+        coordinate: String::new(),
+    }
+}
+
+fn assert_samples_bit_identical(a: &Sample, b: &Sample, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: sample sizes differ");
+    assert_eq!(a.tau.to_bits(), b.tau.to_bits(), "{what}: tau differs");
+    for (x, y) in a.entries.iter().zip(&b.entries) {
+        assert_eq!(x.key, y.key, "{what}: keys differ");
+        assert_eq!(x.freq.to_bits(), y.freq.to_bits(), "{what}: freqs differ");
+        assert_eq!(
+            x.transformed.to_bits(),
+            y.transformed.to_bits(),
+            "{what}: transformed values differ"
+        );
+    }
+}
+
+// --- 1. WR reservoir primitives ------------------------------------------
+
+#[test]
+fn wr_ingest_modes_are_bit_identical() {
+    let elems = stream(5_000);
+    let mut scalar = WrReservoir::new(wr_cfg(16, 42));
+    let mut batched = WrReservoir::new(wr_cfg(16, 42));
+    let mut blocked = WrReservoir::new(wr_cfg(16, 42));
+    for e in &elems {
+        StreamSummary::process(&mut scalar, e);
+    }
+    // uneven chunk boundaries, so batch/block state can't luck into
+    // agreement by mirroring the scalar loop's cadence
+    for chunk in elems.chunks(613) {
+        batched.process_batch(chunk);
+        blocked.process_block(&ElementBlock::from_elements(chunk));
+    }
+    let want = scalar.encode();
+    assert_eq!(batched.encode(), want, "batch drifted from scalar");
+    assert_eq!(blocked.encode(), want, "block drifted from scalar");
+}
+
+#[test]
+fn wr_persist_roundtrip_resumes_identically() {
+    let elems = stream(4_000);
+    let (head, tail) = elems.split_at(2_500);
+    let mut live = WrReservoir::new(wr_cfg(12, 7));
+    for e in head {
+        StreamSummary::process(&mut live, e);
+    }
+    let snapshot = live.encode();
+    let mut resumed = WrReservoir::decode(&snapshot).expect("decode own snapshot");
+    assert_eq!(resumed.encode(), snapshot, "canonical re-encode");
+    // the decoded reservoir re-arms its jump points from the persisted
+    // RNG, exactly as the live one will from its identical state
+    for e in tail {
+        StreamSummary::process(&mut live, e);
+        StreamSummary::process(&mut resumed, e);
+    }
+    assert_eq!(
+        resumed.encode(),
+        live.encode(),
+        "resumed run diverged from the uninterrupted one"
+    );
+}
+
+#[test]
+fn wr_merge_takes_slotwise_winners() {
+    let elems = stream(6_000);
+    let (left, right) = elems.split_at(3_000);
+    let mut a = WrReservoir::new(wr_cfg(16, 9));
+    let mut b = WrReservoir::new(wr_cfg(16, 9));
+    for e in left {
+        StreamSummary::process(&mut a, e);
+    }
+    for e in right {
+        StreamSummary::process(&mut b, e);
+    }
+    let (sa, sb) = (a.sample(), b.sample());
+    let mut merged = a.clone();
+    Mergeable::merge(&mut merged, &b).unwrap();
+    let sm = merged.sample();
+    assert_eq!(sm.len(), 16, "every slot stays occupied through a merge");
+    // a sample entry's `transformed` carries the slot's E–S exponent:
+    // slot-wise the smaller exponent must win, key riding along
+    for (i, ((ea, eb), em)) in
+        sa.entries.iter().zip(&sb.entries).zip(&sm.entries).enumerate()
+    {
+        let want = if ea.transformed <= eb.transformed { ea } else { eb };
+        assert_eq!(em.key, want.key, "slot {i}: wrong winner");
+        assert_eq!(
+            em.transformed.to_bits(),
+            want.transformed.to_bits(),
+            "slot {i}: winner exponent not preserved"
+        );
+    }
+    assert!(
+        (merged.total_weight() - (a.total_weight() + b.total_weight())).abs() < 1e-9,
+        "merged weight must be the sum of the parts"
+    );
+}
+
+#[test]
+fn wr_draws_track_the_closed_form_probabilities() {
+    // 6 keys with geometric weights; each slot draws its winner with
+    // probability w_x / W, independently across slots — so over many
+    // seeds the draw counts are multinomial(S·k, q) and the distinct-key
+    // inclusion rate is exactly the 1 − (1 − q)^k the scenario's WR
+    // estimator divides by.
+    let weights = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+    let total: f64 = weights.iter().sum();
+    let k = 8usize;
+    let runs = 600u64;
+    let mut draw_counts = [0u64; 6];
+    let mut incl_counts = [0u64; 6];
+    for s in 0..runs {
+        let mut r = WrReservoir::new(wr_cfg(k, 0x5EED ^ (s * 0x9E37)));
+        for (i, &w) in weights.iter().enumerate() {
+            StreamSummary::process(&mut r, &Element::new(i as u64, w));
+        }
+        let draws = r.draws();
+        assert_eq!(draws.len(), k);
+        let mut seen = HashSet::new();
+        for d in draws {
+            draw_counts[d as usize] += 1;
+            if seen.insert(d) {
+                incl_counts[d as usize] += 1;
+            }
+        }
+    }
+    // chi-square of the draw counts against multinomial expectations
+    // (5 dof, E[χ²] = 5): 50 is a far-out bound, and the run is
+    // deterministic, so this cannot flake
+    let n = (runs as usize * k) as f64;
+    let chi2: f64 = weights
+        .iter()
+        .zip(&draw_counts)
+        .map(|(&w, &c)| {
+            let expect = n * w / total;
+            (c as f64 - expect).powi(2) / expect
+        })
+        .sum();
+    assert!(chi2 < 50.0, "draw counts off the WR law: chi2 = {chi2:.1}");
+    // per-key inclusion rate within 6σ of the closed form
+    for (i, &w) in weights.iter().enumerate() {
+        let pi = wr_inclusion_prob(w / total, k);
+        let expect = runs as f64 * pi;
+        let sigma = (runs as f64 * pi * (1.0 - pi)).sqrt().max(1.0);
+        let obs = incl_counts[i] as f64;
+        assert!(
+            (obs - expect).abs() < 6.0 * sigma,
+            "key {i}: inclusion {obs} vs expected {expect:.1} (σ = {sigma:.1})"
+        );
+    }
+}
+
+// --- 2. served ≡ offline --------------------------------------------------
+
+#[test]
+fn served_decayed_sample_is_bit_identical_to_offline_replay() {
+    const RATE: f64 = 0.05;
+    let elems: Vec<Element> =
+        (0..3_000u64).map(|i| Element::new(i % 37, 1.0)).collect();
+    let mut dspec = spec("decayed", 1.0, 12, 77, 37);
+    dspec.decay = "exp".to_string();
+    dspec.decay_rate = RATE;
+
+    // over the wire, in server-chosen chunks
+    let mut host = Host::start(Mode::Served).unwrap();
+    host.create("contract/decay", &dspec).unwrap();
+    host.ingest("contract/decay", &elems).unwrap();
+    host.flush("contract/decay").unwrap();
+    let served = host.sample("contract/decay").unwrap();
+    host.shutdown();
+
+    // offline scalar replay through the same builder path
+    let cfg = dspec.to_worp().unwrap().sampler_config().unwrap();
+    let mut offline = DecayedWorp::new(cfg, DecaySpec::exponential(RATE).unwrap());
+    for e in &elems {
+        StreamSummary::process(&mut offline, e);
+    }
+    assert_samples_bit_identical(&served, &offline.sample(), "decayed served vs offline");
+}
+
+#[test]
+fn shared_seed_engines_sample_identical_key_sets() {
+    let elems: Vec<Element> =
+        (0..2_000u64).map(|i| Element::new(i % 211, 1.0 + (i % 3) as f64)).collect();
+    let keys_of = |seed: u64| -> Vec<u64> {
+        let engine = Engine::new(EngineOpts::new(2, 1024).unwrap());
+        engine
+            .create("contract/coord", &spec("1pass", 1.0, 32, seed, 211).to_worp().unwrap())
+            .unwrap();
+        for chunk in elems.chunks(512) {
+            engine
+                .ingest("contract/coord", &ElementBlock::from_elements(chunk))
+                .unwrap();
+        }
+        engine.flush("contract/coord").unwrap();
+        let mut keys: Vec<u64> =
+            engine.sample("contract/coord").unwrap().entries.iter().map(|e| e.key).collect();
+        keys.sort_unstable();
+        keys
+    };
+    // the randomization is a pure function of the creation seed: two
+    // independent engines with a shared seed agree key-for-key (the
+    // coordination contract behind the SIMILARITY op) …
+    assert_eq!(keys_of(0xC0DE), keys_of(0xC0DE), "shared seed must coordinate");
+    // … and an uncoordinated seed does not
+    assert_ne!(keys_of(0xC0DE), keys_of(0xBEEF), "distinct seeds must decorrelate");
+}
+
+// --- 3. the scenario surface the CLI calls --------------------------------
+
+#[test]
+fn wr_vs_wor_scenario_passes_locally() {
+    let opts = ScenarioOpts { runs: 12, ..ScenarioOpts::default() };
+    let report = scenario::run("wr-vs-wor", &opts).unwrap();
+    report.check().unwrap_or_else(|e| panic!("{report}\n{e}"));
+}
+
+#[test]
+fn coordinated_scenario_passes_over_the_wire() {
+    let opts = ScenarioOpts { mode: Mode::Served, ..ScenarioOpts::default() };
+    let report = scenario::run("coordinated", &opts).unwrap();
+    report.check().unwrap_or_else(|e| panic!("{report}\n{e}"));
+    assert_eq!(report.mode, Mode::Served);
+}
+
+#[test]
+fn decay_scenario_passes_over_the_wire() {
+    let opts = ScenarioOpts { mode: Mode::Served, ..ScenarioOpts::default() };
+    let report = scenario::run("decay", &opts).unwrap();
+    report.check().unwrap_or_else(|e| panic!("{report}\n{e}"));
+}
